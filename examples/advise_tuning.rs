@@ -1,0 +1,34 @@
+//! Advise-placement tuning (the paper's §VI future work): sweep every
+//! advise combination on CG per platform and report the best placement.
+//!
+//! Run: `cargo run --release --example advise_tuning`
+
+use umbra::apps::cg::{AdviseCombo, ConjugateGradient};
+use umbra::apps::Regime;
+use umbra::platform::PlatformId;
+use umbra::util::table::TextTable;
+
+fn main() {
+    for platform in PlatformId::ALL {
+        let plat = platform.spec();
+        let app = ConjugateGradient::for_footprint(Regime::InMemory.footprint(&plat));
+        let mut table = TextTable::new(vec!["combo", "kernel", "speedup vs none"])
+            .title(format!("CG advise placement sweep — {} (in-memory)", platform.name()))
+            .left(0);
+        let mut best = (AdviseCombo::None, f64::INFINITY);
+        let base = app.run_with_advise_combo(&plat, AdviseCombo::None, false).kernel_time;
+        for combo in AdviseCombo::ALL {
+            let r = app.run_with_advise_combo(&plat, combo, false);
+            let t = r.kernel_time;
+            let speedup = base.0 as f64 / t.0 as f64;
+            if (t.0 as f64) < best.1 {
+                best = (combo, t.0 as f64);
+            }
+            table.row(vec![combo.name().to_string(), format!("{t}"), format!("{speedup:.2}x")]);
+        }
+        println!("{}", table.render());
+        println!("best placement on {}: {}\n", platform.name(), best.0.name());
+    }
+    println!("Expected: remote-capable P9 rewards preferred-location+accessed-by;");
+    println!("PCIe platforms gain mostly from the fault-service discount.");
+}

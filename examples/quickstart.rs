@@ -1,0 +1,69 @@
+//! Quickstart: allocate managed arrays, price options under basic UM
+//! vs. UM+Prefetch on the Intel-Pascal platform model, and inspect the
+//! trace — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::gpu::{Access, KernelExec, KernelSpec, Phase};
+use umbra::platform::{intel_pascal, PlatformId};
+use umbra::trace::Breakdown;
+use umbra::um::{Loc, UmRuntime};
+use umbra::util::units::{Ns, MIB};
+
+fn main() {
+    // ---- Low-level API: drive the UM runtime directly. -------------
+    let plat = intel_pascal();
+    let mut um = UmRuntime::new(&plat);
+    um.enable_trace();
+
+    let prices = um.malloc_managed("prices", 512 * MIB);
+    let out = um.malloc_managed("out", 512 * MIB);
+    let full_p = um.space.get(prices).full();
+    let full_o = um.space.get(out).full();
+
+    // Host initializes the inputs (first touch populates host pages).
+    let h = um.host_access(prices, full_p, true, Ns::ZERO);
+    println!("host init finished at {}", h.done);
+
+    // A one-phase kernel streaming prices -> out.
+    let spec = KernelSpec {
+        name: "demo",
+        phases: vec![Phase {
+            name: "stream",
+            accesses: vec![Access::read(prices, full_p), Access::write(out, full_o)],
+            flops: 1e9,
+        }],
+    };
+    let (end, _) = KernelExec::run(&mut um, &spec, h.done);
+    println!("basic UM kernel: {} (faults: {} groups)", end - h.done, um.metrics.gpu_fault_groups);
+    let b = Breakdown::from_trace(&um.trace);
+    println!("  breakdown: stall {}, HtoD {} ({} B)", b.fault_stall, b.h2d, b.h2d_bytes);
+
+    // Same kernel with a prefetch first: no faults, bulk bandwidth.
+    let mut um2 = UmRuntime::new(&plat);
+    let prices2 = um2.malloc_managed("prices", 512 * MIB);
+    let out2 = um2.malloc_managed("out", 512 * MIB);
+    let fp = um2.space.get(prices2).full();
+    let fo = um2.space.get(out2).full();
+    let h2 = um2.host_access(prices2, fp, true, Ns::ZERO);
+    let ready = um2.prefetch_async(prices2, fp, Loc::Gpu, h2.done);
+    let spec2 = KernelSpec {
+        name: "demo",
+        phases: vec![Phase {
+            name: "stream",
+            accesses: vec![Access::read(prices2, fp), Access::write(out2, fo)],
+            flops: 1e9,
+        }],
+    };
+    let (end2, _) = KernelExec::run(&mut um2, &spec2, ready);
+    println!("prefetched kernel: {} (faults: {} groups)", end2 - ready, um2.metrics.gpu_fault_groups);
+
+    // ---- High-level API: run a full paper benchmark cell. ----------
+    println!("\nBlack-Scholes (paper Table I sizing), Intel-Pascal, in-memory:");
+    let app = AppId::Bs.build_for(PlatformId::IntelPascal, Regime::InMemory);
+    for variant in Variant::ALL {
+        let r = app.run(&plat, variant, false);
+        println!("  {:<12} kernel time {}", variant.name(), r.kernel_time);
+    }
+}

@@ -1,0 +1,66 @@
+"""AOT bridge: lower every Layer-2 model to HLO **text** artifacts.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Also writes ``manifest.txt``: one line per artifact,
+``name|arg0_dtype:shape,arg1_dtype:shape,...|n_outputs`` — the Rust
+loader uses it to build typed input literals.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_spec(spec) -> str:
+    shape = "x".join(str(d) for d in spec.shape) if spec.shape else "scalar"
+    return f"{spec.dtype}:{shape}"
+
+
+def lower_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, arg_specs) in sorted(MODELS.items()):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(jax.eval_shape(fn, *arg_specs))
+        args = ",".join(_fmt_spec(s) for s in arg_specs)
+        manifest_lines.append(f"{name}|{args}|{n_out}")
+        print(f"  {name}: {len(text)} chars, {len(arg_specs)} args, {n_out} outputs")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    print(f"lowering {len(MODELS)} models to {args.out_dir}")
+    lower_all(args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

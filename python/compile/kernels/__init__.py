@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the six benchmark applications.
+
+Every kernel is written with `pl.pallas_call` + `BlockSpec` tiling and
+lowered with ``interpret=True`` — real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation). Correctness oracles live in :mod:`ref`.
+"""
+
+from .black_scholes import black_scholes_pallas
+from .matmul import matmul_pallas
+from .fdtd3d import fdtd_step_pallas
+from .cg import spmv_ell_pallas
+from .conv_fft import modulate_pallas
+from .graph_bfs import bfs_matvec_pallas
+
+__all__ = [
+    "black_scholes_pallas",
+    "matmul_pallas",
+    "fdtd_step_pallas",
+    "spmv_ell_pallas",
+    "modulate_pallas",
+    "bfs_matvec_pallas",
+]

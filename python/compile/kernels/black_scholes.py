@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: Black-Scholes option pricing (elementwise).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA sample maps
+one option per thread; here a 1-D grid of VPU-friendly blocks streams
+the five arrays through VMEM. Block size is a multiple of 128 lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _erf(x):
+    """Abramowitz-Stegun 7.1.26 rational erf approximation.
+
+    |error| < 1.5e-7. Used instead of ``jax.lax.erf`` because the `erf`
+    HLO opcode postdates the xla_extension 0.5.1 text parser on the
+    Rust side (everything here lowers to exp/mul/add, which parse).
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _cnd(x):
+    return 0.5 * (1.0 + _erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def _bs_kernel(s_ref, x_ref, t_ref, call_ref, put_ref, *, r, v):
+    s = s_ref[...]
+    x = x_ref[...]
+    t = t_ref[...]
+    dtype = s.dtype
+    rr = jnp.asarray(r, dtype)
+    vv = jnp.asarray(v, dtype)
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (rr + 0.5 * vv * vv) * t) / (vv * sqrt_t)
+    d2 = d1 - vv * sqrt_t
+    expiry = jnp.exp(-rr * t)
+    call_ref[...] = s * _cnd(d1) - x * expiry * _cnd(d2)
+    put_ref[...] = x * expiry * _cnd(-d2) - s * _cnd(-d1)
+
+
+def black_scholes_pallas(s, x, t, r=0.02, v=0.30, block=DEFAULT_BLOCK):
+    """Price European calls/puts. Arrays must share a 1-D shape whose
+    length is a multiple of ``block`` (pad externally otherwise)."""
+    (n,) = s.shape
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    call, put = pl.pallas_call(
+        functools.partial(_bs_kernel, r=r, v=v),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), s.dtype),
+            jax.ShapeDtypeStruct((n,), s.dtype),
+        ],
+        interpret=True,
+    )(s, x, t)
+    return call, put

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: ELL-format SpMV (the CG hot-spot).
+
+TPU adaptation: CSR with per-thread row gathers does not map to the
+VPU; ELL (fixed K nonzeros per row, padded) gives rectangular tiles.
+Each grid step owns a block of rows; the x vector rides along as a
+full-block input (it is the reused operand — the analogue of binding
+it to texture/L2 in the CUDA version).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 256
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    vals = vals_ref[...]          # (rows, k)
+    cols = cols_ref[...]          # (rows, k) int32
+    x = x_ref[...]                # (n,)
+    gathered = x[cols]            # (rows, k)
+    y_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+def spmv_ell_pallas(vals, cols, x, rows_per_block=DEFAULT_ROWS):
+    """y = A @ x with A in ELL format.
+
+    vals: (n, k) f32, cols: (n, k) int32 (padded entries must carry
+    val 0 so any column index is safe), x: (n,).
+    """
+    n, k = vals.shape
+    assert cols.shape == (n, k)
+    assert x.shape == (n,)
+    assert n % rows_per_block == 0, f"n={n} not multiple of {rows_per_block}"
+    grid = (n // rows_per_block,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: planar complex pointwise multiply + scale — the
+modulate stage of FFT convolution (conv0/conv1/conv2).
+
+TPU adaptation: cuFFT's callback-fused modulate becomes an explicit
+elementwise kernel over planar (separate real/imag) f32 arrays, tiled
+in VPU-lane-aligned 2-D blocks. The FFTs themselves stay at Layer 2
+(XLA's native FFT op) — transposing butterflies by hand buys nothing
+on the MXU/VPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128)
+
+
+def _modulate_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref, *, scale):
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    br = br_ref[...]
+    bi = bi_ref[...]
+    s = jnp.asarray(scale, ar.dtype)
+    cr_ref[...] = (ar * br - ai * bi) * s
+    ci_ref[...] = (ar * bi + ai * br) * s
+
+
+def modulate_pallas(ar, ai, br, bi, scale=1.0, block=DEFAULT_BLOCK):
+    """(ar+i*ai) * (br+i*bi) * scale, planar layout, 2-D blocking."""
+    h, w = ar.shape
+    bh, bw = block
+    assert h % bh == 0 and w % bw == 0, f"{(h, w)} not multiple of {block}"
+    grid = (h // bh, w // bw)
+    spec = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    cr, ci = pl.pallas_call(
+        functools.partial(_modulate_kernel, scale=scale),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), ar.dtype),
+            jax.ShapeDtypeStruct((h, w), ar.dtype),
+        ],
+        interpret=True,
+    )(ar, ai, br, bi)
+    return cr, ci

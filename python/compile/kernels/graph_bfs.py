@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: BFS level expansion as a boolean-semiring matvec.
+
+TPU adaptation: Graph500's scatter-gather frontier expansion is
+hostile to wide SIMD; at validation scale the adjacency is dense and a
+level becomes `next = (A @ frontier > 0) & !visited` — an MXU matvec
+with a masked epilogue, tiled over row blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 128
+
+
+def _bfs_kernel(adj_ref, frontier_ref, visited_ref, out_ref):
+    adj = adj_ref[...]            # (rows, n)
+    frontier = frontier_ref[...]  # (n,)
+    visited = visited_ref[...]    # (rows,)
+    reached = jnp.dot(adj, frontier, preferred_element_type=jnp.float32)
+    nxt = jnp.where((reached > 0) & (visited == 0), 1.0, 0.0)
+    out_ref[...] = nxt.astype(jnp.float32)
+
+
+def bfs_matvec_pallas(adj, frontier, visited, rows_per_block=DEFAULT_ROWS):
+    """One BFS level: 0/1 next-frontier vector.
+
+    adj: (n, n) 0/1 f32; frontier, visited: (n,) 0/1 f32.
+    """
+    n, n2 = adj.shape
+    assert n == n2
+    assert frontier.shape == (n,) and visited.shape == (n,)
+    assert n % rows_per_block == 0
+    grid = (n // rows_per_block,)
+    return pl.pallas_call(
+        _bfs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(adj, frontier, visited)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these to float tolerance, and the
+AOT-compiled HLO executed from Rust reproduces the same numbers.
+"""
+
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+
+def _cnd(x):
+    """Standard normal CDF via erf."""
+    return 0.5 * (1.0 + erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def black_scholes_ref(s, x, t, r=0.02, v=0.30):
+    """Black-Scholes European call/put prices.
+
+    Args:
+      s: spot prices.  x: strikes.  t: years to expiry.
+      r: riskless rate. v: volatility.
+    Returns:
+      (call, put)
+    """
+    dtype = s.dtype
+    r = jnp.asarray(r, dtype)
+    v = jnp.asarray(v, dtype)
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    expiry = jnp.exp(-r * t)
+    call = s * _cnd(d1) - x * expiry * _cnd(d2)
+    put = x * expiry * _cnd(-d2) - s * _cnd(-d1)
+    return call, put
+
+
+def matmul_ref(a, b):
+    """Plain f32 GEMM."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def fdtd_step_ref(grid, c0, c1):
+    """One 7-point (radius-1) stencil step with edge-clamped boundary.
+
+    out = c0*grid + c1 * sum(6 axis neighbors), neighbors clamped at
+    the boundary (same convention as the Pallas kernel).
+    """
+    padded = jnp.pad(grid, 1, mode="edge")
+    out = c0 * grid
+    out = out + c1 * padded[:-2, 1:-1, 1:-1]
+    out = out + c1 * padded[2:, 1:-1, 1:-1]
+    out = out + c1 * padded[1:-1, :-2, 1:-1]
+    out = out + c1 * padded[1:-1, 2:, 1:-1]
+    out = out + c1 * padded[1:-1, 1:-1, :-2]
+    out = out + c1 * padded[1:-1, 1:-1, 2:]
+    return out
+
+
+def spmv_ell_ref(vals, cols, x):
+    """SpMV in ELL format: y[i] = sum_k vals[i,k] * x[cols[i,k]]."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def modulate_ref(ar, ai, br, bi, scale):
+    """Planar complex pointwise multiply + scale (FFT convolution)."""
+    cr = (ar * br - ai * bi) * scale
+    ci = (ar * bi + ai * br) * scale
+    return cr, ci
+
+
+def bfs_matvec_ref(adj, frontier, visited):
+    """One BFS level over a dense adjacency: reachable & unvisited.
+
+    adj: (n, n) 0/1 f32; frontier, visited: (n,) 0/1 f32.
+    Returns next frontier as 0/1 f32.
+    """
+    reached = jnp.matmul(adj, frontier, preferred_element_type=jnp.float32)
+    nxt = jnp.where((reached > 0) & (visited == 0), 1.0, 0.0)
+    return nxt.astype(jnp.float32)
+
+
+def cg_step_ref(vals, cols, x, r, p):
+    """One CG iteration (ELL SpMV + BLAS-1 tail).
+
+    Returns (x', r', p', rr') with rr' = <r', r'>.
+    """
+    ap = spmv_ell_ref(vals, cols, p)
+    rr = jnp.dot(r, r)
+    denom = jnp.dot(p, ap)
+    alpha = rr / jnp.where(denom == 0, 1.0, denom)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rr2 = jnp.dot(r2, r2)
+    beta = rr2 / jnp.where(rr == 0, 1.0, rr)
+    p2 = r2 + beta * p
+    return x2, r2, p2, rr2
+
+
+def conv_fft_ref(img, ker):
+    """FFT-based circular convolution of two equal-size 2-D images."""
+    f = jnp.fft.fft2(img)
+    g = jnp.fft.fft2(ker)
+    return jnp.real(jnp.fft.ifft2(f * g)).astype(img.dtype)

@@ -1,0 +1,135 @@
+"""Layer-2 JAX compute graphs for the six applications.
+
+Each function composes the Layer-1 Pallas kernels (plus native XLA ops
+where they are the right tool — FFT stays an XLA op) into the per-app
+computation the Rust coordinator executes through PJRT for numerics
+validation. `aot.py` lowers every entry in :data:`MODELS` to HLO text.
+
+Python never runs at request time: these graphs are lowered once by
+``make artifacts``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    bfs_matvec_pallas,
+    black_scholes_pallas,
+    fdtd_step_pallas,
+    matmul_pallas,
+    modulate_pallas,
+    spmv_ell_pallas,
+)
+
+# ---------------------------------------------------------------------------
+# Validation shapes (small on purpose: numerics run on CPU-PJRT; the
+# paper-scale footprints live in the Rust memory simulator).
+# ---------------------------------------------------------------------------
+BS_N = 4096
+MM_N = 256
+CG_N = 1024
+CG_K = 3
+FDTD_N = 32
+CONV_N = 128
+BFS_N = 256
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def bs_price(s, x, t):
+    """Black-Scholes: returns (call, put)."""
+    return black_scholes_pallas(s, x, t)
+
+
+def matmul(a, b):
+    """SGEMM via the tiled Pallas kernel."""
+    return (matmul_pallas(a, b, tile_m=128, tile_n=128, tile_k=128),)
+
+
+def cg_step(vals, cols, x, r, p):
+    """One CG iteration; BLAS-1 tail in jnp, SpMV in Pallas."""
+    ap = spmv_ell_pallas(vals, cols, p)
+    rr = jnp.dot(r, r)
+    denom = jnp.dot(p, ap)
+    alpha = rr / jnp.where(denom == 0, 1.0, denom)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rr2 = jnp.dot(r2, r2)
+    beta = rr2 / jnp.where(rr == 0, 1.0, rr)
+    p2 = r2 + beta * p
+    return x2, r2, p2, rr2.reshape(1)
+
+
+def fdtd_step(grid):
+    """One radius-1 stencil step with the sample's coefficients."""
+    return (fdtd_step_pallas(grid, c0=0.5, c1=1.0 / 12.0),)
+
+
+def conv_fft(img, ker):
+    """FFT circular convolution: XLA FFTs + Pallas modulate."""
+    f = jnp.fft.fft2(img)
+    g = jnp.fft.fft2(ker)
+    cr, ci = modulate_pallas(
+        jnp.real(f).astype(F32),
+        jnp.imag(f).astype(F32),
+        jnp.real(g).astype(F32),
+        jnp.imag(g).astype(F32),
+        scale=1.0,
+    )
+    spectrum = cr.astype(jnp.complex64) + 1j * ci.astype(jnp.complex64)
+    out = jnp.real(jnp.fft.ifft2(spectrum)).astype(F32)
+    return (out,)
+
+
+def bfs_level(adj, frontier, visited, levels, depth):
+    """One BFS level: next frontier + updated visited/levels."""
+    nxt = bfs_matvec_pallas(adj, frontier, visited)
+    new_levels = jnp.where(nxt > 0, depth, levels)
+    new_visited = jnp.where(nxt > 0, 1.0, visited).astype(F32)
+    return nxt, new_visited, new_levels
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+#: name -> (callable, example argument specs)
+MODELS = {
+    "black_scholes": (
+        bs_price,
+        [_spec((BS_N,)), _spec((BS_N,)), _spec((BS_N,))],
+    ),
+    "matmul": (
+        matmul,
+        [_spec((MM_N, MM_N)), _spec((MM_N, MM_N))],
+    ),
+    "cg_step": (
+        cg_step,
+        [
+            _spec((CG_N, CG_K)),
+            _spec((CG_N, CG_K), I32),
+            _spec((CG_N,)),
+            _spec((CG_N,)),
+            _spec((CG_N,)),
+        ],
+    ),
+    "fdtd_step": (
+        fdtd_step,
+        [_spec((FDTD_N, FDTD_N, FDTD_N))],
+    ),
+    "conv_fft": (
+        conv_fft,
+        [_spec((CONV_N, CONV_N)), _spec((CONV_N, CONV_N))],
+    ),
+    "bfs_level": (
+        bfs_level,
+        [
+            _spec((BFS_N, BFS_N)),
+            _spec((BFS_N,)),
+            _spec((BFS_N,)),
+            _spec((BFS_N,)),
+            _spec((), F32),
+        ],
+    ),
+}

@@ -1,0 +1,15 @@
+"""Shared fixtures/strategies for the kernel test suite."""
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Interpret-mode Pallas is slow; keep hypothesis example counts modest
+# but meaningful.
+settings.register_profile("umbra", max_examples=12, deadline=None)
+settings.load_profile("umbra")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

@@ -1,0 +1,83 @@
+"""L1 BFS matvec kernel + the L2 level graph vs a Python BFS."""
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import bfs_matvec_pallas
+from compile.kernels.ref import bfs_matvec_ref
+from compile.model import bfs_level
+
+
+def _random_graph(n, p, rng):
+    adj = (rng.uniform(size=(n, n)) < p).astype(np.float32)
+    adj = np.maximum(adj, adj.T)  # undirected
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def _python_bfs(adj, root):
+    n = adj.shape[0]
+    levels = np.full(n, -1.0, np.float32)
+    levels[root] = 0
+    q = collections.deque([root])
+    while q:
+        u = q.popleft()
+        for v in np.nonzero(adj[u])[0]:
+            if levels[v] < 0:
+                levels[v] = levels[u] + 1
+                q.append(v)
+    return levels
+
+
+def test_matvec_matches_ref(rng):
+    adj = jnp.asarray(_random_graph(256, 0.02, rng))
+    frontier = jnp.zeros(256, jnp.float32).at[3].set(1.0)
+    visited = frontier
+    np.testing.assert_array_equal(
+        bfs_matvec_pallas(adj, frontier, visited), bfs_matvec_ref(adj, frontier, visited)
+    )
+
+
+def test_full_bfs_levels_match_python(rng):
+    n, root = 256, 5
+    adj_np = _random_graph(n, 0.015, rng)
+    adj = jnp.asarray(adj_np)
+    frontier = jnp.zeros(n, jnp.float32).at[root].set(1.0)
+    visited = frontier
+    levels = jnp.full(n, -1.0, jnp.float32).at[root].set(0.0)
+    for depth in range(1, n):
+        frontier, visited, levels = bfs_level(
+            adj, frontier, visited, levels, jnp.float32(depth)
+        )
+        if float(frontier.sum()) == 0:
+            break
+    np.testing.assert_array_equal(np.asarray(levels), _python_bfs(adj_np, root))
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    p=st.floats(min_value=0.005, max_value=0.05),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_sweep(blocks, p, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * 128
+    adj = jnp.asarray(_random_graph(n, p, rng))
+    root = int(rng.integers(n))
+    frontier = jnp.zeros(n, jnp.float32).at[root].set(1.0)
+    visited = frontier
+    np.testing.assert_array_equal(
+        bfs_matvec_pallas(adj, frontier, visited, rows_per_block=128),
+        bfs_matvec_ref(adj, frontier, visited),
+    )
+
+
+def test_frontier_never_revisits(rng):
+    adj = jnp.asarray(_random_graph(256, 0.05, rng))
+    frontier = jnp.zeros(256, jnp.float32).at[0].set(1.0)
+    visited = frontier
+    nxt = bfs_matvec_pallas(adj, frontier, visited)
+    assert float((np.asarray(nxt) * np.asarray(visited)).sum()) == 0.0

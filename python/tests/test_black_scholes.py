@@ -1,0 +1,66 @@
+"""L1 Black-Scholes Pallas kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import black_scholes_pallas
+from compile.kernels.ref import black_scholes_ref
+
+
+def _inputs(rng, n):
+    s = jnp.asarray(rng.uniform(5.0, 30.0, n), jnp.float32)
+    x = jnp.asarray(rng.uniform(1.0, 100.0, n), jnp.float32)
+    t = jnp.asarray(rng.uniform(0.25, 10.0, n), jnp.float32)
+    return s, x, t
+
+
+def test_matches_ref(rng):
+    s, x, t = _inputs(rng, 4096)
+    call, put = black_scholes_pallas(s, x, t)
+    call_ref, put_ref = black_scholes_ref(s, x, t)
+    np.testing.assert_allclose(call, call_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(put, put_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_put_call_parity(rng):
+    """C - P = S - X*exp(-rT), independent of the oracle."""
+    s, x, t = _inputs(rng, 2048)
+    r = 0.02
+    call, put = black_scholes_pallas(s, x, t, r=r)
+    parity = np.asarray(s) - np.asarray(x) * np.exp(-r * np.asarray(t))
+    np.testing.assert_allclose(np.asarray(call) - np.asarray(put), parity, rtol=1e-3, atol=1e-3)
+
+
+def test_prices_nonnegative(rng):
+    s, x, t = _inputs(rng, 1024)
+    call, put = black_scholes_pallas(s, x, t)
+    assert (np.asarray(call) >= -1e-4).all()
+    assert (np.asarray(put) >= -1e-4).all()
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    block=st.sampled_from([128, 256, 512]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_shape_sweep(blocks, block, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * block
+    s = jnp.asarray(rng.uniform(5.0, 30.0, n), jnp.float32)
+    x = jnp.asarray(rng.uniform(1.0, 100.0, n), jnp.float32)
+    t = jnp.asarray(rng.uniform(0.25, 10.0, n), jnp.float32)
+    call, put = black_scholes_pallas(s, x, t, block=block)
+    call_ref, put_ref = black_scholes_ref(s, x, t)
+    np.testing.assert_allclose(call, call_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(put, put_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_deep_itm_call_approaches_intrinsic(rng):
+    """Deep in-the-money, short expiry: C ~ S - X."""
+    n = 128
+    s = jnp.full((n,), 100.0, jnp.float32)
+    x = jnp.full((n,), 1.0, jnp.float32)
+    t = jnp.full((n,), 0.25, jnp.float32)
+    call, _ = black_scholes_pallas(s, x, t, block=128)
+    np.testing.assert_allclose(np.asarray(call), 99.0, rtol=0.02)

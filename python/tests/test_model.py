@@ -1,0 +1,93 @@
+"""L2 model-level tests: composed graphs behave like the applications
+they stand in for (beyond per-kernel allclose)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.model import (
+    MODELS,
+    bs_price,
+    conv_fft,
+    fdtd_step,
+    matmul,
+)
+
+
+def test_models_registry_complete():
+    assert set(MODELS) == {
+        "black_scholes",
+        "matmul",
+        "cg_step",
+        "fdtd_step",
+        "conv_fft",
+        "bfs_level",
+    }
+    for name, (fn, specs) in MODELS.items():
+        assert callable(fn), name
+        assert len(specs) >= 1, name
+
+
+def test_all_models_jit_and_execute(rng):
+    """Every registered model compiles under jit and runs on its
+    example shapes with finite outputs."""
+    for name, (fn, specs) in MODELS.items():
+        args = []
+        for s in specs:
+            if s.dtype == jnp.int32:
+                args.append(jnp.asarray(rng.integers(0, max(s.shape[0] - 1, 1), s.shape), jnp.int32))
+            elif s.shape == ():
+                args.append(jnp.float32(1.0))
+            else:
+                args.append(jnp.asarray(rng.uniform(0.5, 2.0, s.shape), jnp.float32))
+        out = jax.jit(fn)(*args)
+        for i, o in enumerate(out):
+            assert np.isfinite(np.asarray(o)).all(), f"{name} output {i} not finite"
+
+
+def test_bs_monotone_in_spot(rng):
+    """Call price increases with the spot (financial sanity, not a
+    kernel-vs-oracle identity)."""
+    n = 4096
+    s = jnp.linspace(5.0, 30.0, n, dtype=jnp.float32)
+    x = jnp.full((n,), 15.0, jnp.float32)
+    t = jnp.full((n,), 2.0, jnp.float32)
+    call, put = bs_price(s, x, t)
+    assert (np.diff(np.asarray(call)) >= -1e-4).all(), "call not monotone in S"
+    assert (np.diff(np.asarray(put)) <= 1e-4).all(), "put not anti-monotone in S"
+
+
+def test_fdtd_multi_step_stability(rng):
+    """The stencil's coefficients are mass-preserving (c0 + 6*c1 = 1):
+    repeated steps must not blow up."""
+    g = jnp.asarray(rng.standard_normal((32, 32, 32)), jnp.float32)
+    norm0 = float(jnp.abs(g).max())
+    for _ in range(10):
+        (g,) = fdtd_step(g)
+    assert float(jnp.abs(g).max()) <= norm0 * 1.01
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_matmul_associativity_with_identity_blocks(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    (aa,) = matmul(a, jnp.eye(256, dtype=jnp.float32))
+    np.testing.assert_allclose(aa, a, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_commutes(rng):
+    """Circular convolution is commutative."""
+    img = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    ker = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    (ab,) = conv_fft(img, ker)
+    (ba,) = conv_fft(ker, img)
+    np.testing.assert_allclose(ab, ba, rtol=1e-3, atol=1e-2)
+
+
+def test_lowering_is_shape_polymorphic_free():
+    """Lowered modules have static shapes only (the Rust loader feeds
+    fixed-size literals)."""
+    for name, (fn, specs) in MODELS.items():
+        text = jax.jit(fn).lower(*specs).as_text()
+        assert "?x" not in text, f"{name} has dynamic dims"

@@ -1,0 +1,11 @@
+//! `cargo bench --bench ablations` — pre-eviction, fault-group size,
+//! prefetch chunk, and advise-placement sweeps (DESIGN.md §4).
+use umbra::bench_harness::ablate;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let report = ablate::ablate_all();
+    println!("{}", report.text);
+    println!("ablations regenerated in {:?}", t0.elapsed());
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

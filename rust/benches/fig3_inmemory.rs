@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig3_inmemory` — Fig. 3: in-memory GPU kernel
+//! execution time, all apps x 5 variants x 3 platforms (5 reps each,
+//! as in the paper). Prints the tables and writes results/fig3.*.
+use umbra::bench_harness::figures;
+
+fn main() {
+    let reps = std::env::var("UMBRA_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let t0 = std::time::Instant::now();
+    let report = figures::fig3(reps);
+    println!("{}", report.text);
+    println!("fig3 regenerated in {:?} ({} reps/cell)", t0.elapsed(), reps);
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

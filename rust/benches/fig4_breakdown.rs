@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig4_breakdown` — Fig. 4: in-memory fault/
+//! transfer time breakdown for BS and CG on Intel-Pascal + P9-Volta.
+use umbra::bench_harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let report = figures::fig4();
+    println!("{}", report.text);
+    println!("fig4 regenerated in {:?}", t0.elapsed());
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig5_traces` — Fig. 5: in-memory UM transfer
+//! time series (BS, CG x Intel-Pascal, P9-Volta), one CSV per panel.
+use umbra::bench_harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let report = figures::fig5();
+    println!("{}", report.text);
+    println!("fig5 regenerated in {:?}", t0.elapsed());
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

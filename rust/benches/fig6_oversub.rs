@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig6_oversub` — Fig. 6: oversubscribed GPU
+//! kernel execution time (UM variants; no explicit baseline exists).
+use umbra::bench_harness::figures;
+
+fn main() {
+    let reps = std::env::var("UMBRA_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let t0 = std::time::Instant::now();
+    let report = figures::fig6(reps);
+    println!("{}", report.text);
+    println!("fig6 regenerated in {:?} ({} reps/cell)", t0.elapsed(), reps);
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

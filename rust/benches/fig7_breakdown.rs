@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig7_breakdown` — Fig. 7: oversubscription
+//! breakdown — BS + CG on Intel-Pascal, BS + FDTD3d on P9-Volta.
+use umbra::bench_harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let report = figures::fig7();
+    println!("{}", report.text);
+    println!("fig7 regenerated in {:?}", t0.elapsed());
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

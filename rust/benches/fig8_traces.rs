@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig8_traces` — Fig. 8: oversubscription UM
+//! transfer time series (the paper's four panels).
+use umbra::bench_harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let report = figures::fig8();
+    println!("{}", report.text);
+    println!("fig8 regenerated in {:?}", t0.elapsed());
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

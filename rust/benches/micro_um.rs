@@ -1,0 +1,67 @@
+//! `cargo bench --bench micro_um` — microbenchmarks of the UM
+//! simulator's hot paths (the L3 profiling targets of the §Perf pass):
+//! fault-group assembly, migration, prefetch, eviction churn, and
+//! end-to-end app simulation throughput.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::bench_harness::BenchTimer;
+use umbra::platform::{intel_pascal, PlatformId};
+use umbra::um::{Loc, UmRuntime};
+use umbra::util::units::{Ns, GIB, MIB};
+
+fn main() {
+    let mut t = BenchTimer::default();
+
+    // Fault-driven migration of 1 GiB (16384 pages).
+    t.bench("um/migrate_1GiB_faulted", || {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", GIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.gpu_access(id, full, false, Ns::ZERO)
+    });
+
+    // Bulk prefetch of 1 GiB.
+    t.bench("um/prefetch_1GiB_bulk", || {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", GIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO)
+    });
+
+    // Eviction churn: cycle 2x capacity through a small device.
+    t.bench("um/evict_churn_2x", || {
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 256 * MIB;
+        plat.gpu.reserved = 0;
+        let mut r = UmRuntime::new(&plat);
+        let a = r.malloc_managed("a", 256 * MIB);
+        let b = r.malloc_managed("b", 256 * MIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        let fb = r.space.get(b).full();
+        let mut now = Ns::ZERO;
+        for _ in 0..4 {
+            now = r.gpu_access(a, fa, false, now).done;
+            now = r.gpu_access(b, fb, false, now).done;
+        }
+        r.dev.evictions
+    });
+
+    // End-to-end app simulations (paper-scale footprints).
+    for (app, plat, regime, variant, label) in [
+        (AppId::Bs, PlatformId::IntelPascal, Regime::InMemory, Variant::Um, "app/bs_pascal_inmem_um"),
+        (AppId::Bs, PlatformId::P9Volta, Regime::Oversubscribed, Variant::UmAdvise, "app/bs_p9_oversub_advise"),
+        (AppId::Fdtd3d, PlatformId::P9Volta, Regime::Oversubscribed, Variant::UmAdvise, "app/fdtd_p9_oversub_advise"),
+        (AppId::Cg, PlatformId::IntelPascal, Regime::Oversubscribed, Variant::Um, "app/cg_pascal_oversub_um"),
+        (AppId::Graph500, PlatformId::IntelPascal, Regime::Oversubscribed, Variant::UmAdvise, "app/g500_pascal_oversub_advise"),
+    ] {
+        let a = app.build_for(plat, regime);
+        let spec = plat.spec();
+        t.bench(label, || a.run(&spec, variant, false).kernel_time);
+    }
+}

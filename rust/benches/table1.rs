@@ -1,0 +1,11 @@
+//! `cargo bench --bench table1` — regenerate Table I and time the
+//! sizing machinery.
+use umbra::bench_harness::{figures, BenchTimer};
+
+fn main() {
+    let mut t = BenchTimer::default();
+    t.bench("table1/regenerate", || figures::table1());
+    let report = figures::table1();
+    println!("\n{}", report.text);
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

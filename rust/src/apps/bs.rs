@@ -1,0 +1,257 @@
+//! Black-Scholes option pricing (§III-A, Table I row 1).
+//!
+//! Five arrays of 8-byte elements (the paper widens types to `long`-
+//! sized to reach large footprints): three inputs (stock price, strike,
+//! years) and two outputs (call, put). The same inputs are priced over
+//! `ITERATIONS` kernel launches — the good-data-reuse app of the suite.
+//!
+//! Variant wiring follows §IV-A exactly: *"the advise
+//! cudaMemAdviseSetReadMostly is applied to the input arrays. No other
+//! advise is applied"*; prefetch moves the three inputs up front and the
+//! two results back afterwards.
+
+use crate::gpu::{Access, KernelSpec, Phase};
+use crate::mem::AllocId;
+use crate::platform::PlatformSpec;
+use crate::um::{Advise, Loc};
+use crate::util::units::Bytes;
+
+use super::common::{AppCtx, RunResult, UmApp, Variant};
+
+/// Bytes per option across the five arrays.
+const BYTES_PER_OPTION: Bytes = 5 * 8;
+/// Pricing iterations over the same inputs (CUDA sample re-prices the
+/// same book; reduced so first-touch migration stays visible, as in the
+/// paper's figures).
+pub const ITERATIONS: usize = 16;
+/// FLOPs per option per iteration (exp/log/sqrt/CND ~ 60 flops, two
+/// options priced per element).
+const FLOPS_PER_OPTION: f64 = 120.0;
+
+pub struct BlackScholes {
+    pub n_options: u64,
+}
+
+impl BlackScholes {
+    pub fn for_footprint(footprint: Bytes) -> BlackScholes {
+        BlackScholes { n_options: (footprint / BYTES_PER_OPTION).max(1) }
+    }
+
+    fn array_bytes(&self) -> Bytes {
+        self.n_options * 8
+    }
+
+    /// One pricing launch over all options.
+    fn kernel(&self, inputs: &[AllocId; 3], outputs: &[AllocId; 2], ctx: &AppCtx) -> KernelSpec {
+        let mut accesses: Vec<Access> = inputs
+            .iter()
+            .map(|&id| Access::read(id, ctx.um.space.get(id).full()))
+            .collect();
+        for &id in outputs {
+            accesses.push(Access::write(id, ctx.um.space.get(id).full()));
+        }
+        KernelSpec {
+            name: "BlackScholesGPU",
+            phases: vec![Phase {
+                name: "price",
+                accesses,
+                flops: self.n_options as f64 * FLOPS_PER_OPTION,
+            }],
+        }
+    }
+}
+
+impl UmApp for BlackScholes {
+    fn name(&self) -> &'static str {
+        "BS"
+    }
+
+    fn footprint(&self) -> Bytes {
+        self.n_options * BYTES_PER_OPTION
+    }
+
+    fn artifact(&self) -> &'static str {
+        "black_scholes"
+    }
+
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
+        let mut ctx = AppCtx::new(plat, variant, trace);
+        let ab = self.array_bytes();
+
+        if variant == Variant::Explicit {
+            // Host staging + device arrays + cudaMemcpy.
+            let h_in: Vec<AllocId> =
+                (0..3).map(|i| ctx.um.malloc_host(["h_S", "h_X", "h_T"][i], ab)).collect();
+            let d_in = [
+                ctx.um.malloc_device("d_S", ab),
+                ctx.um.malloc_device("d_X", ab),
+                ctx.um.malloc_device("d_T", ab),
+            ];
+            let d_out = [ctx.um.malloc_device("d_Call", ab), ctx.um.malloc_device("d_Put", ab)];
+            let h_out: Vec<AllocId> =
+                (0..2).map(|i| ctx.um.malloc_host(["h_Call", "h_Put"][i], ab)).collect();
+            for &h in &h_in {
+                let full = ctx.um.space.get(h).full();
+                ctx.host_write(h, full);
+            }
+            for &d in &d_in {
+                ctx.memcpy_h2d(d);
+            }
+            let spec = self.kernel(&d_in, &d_out, &ctx);
+            for _ in 0..ITERATIONS {
+                ctx.launch(&spec);
+            }
+            for &d in &d_out {
+                ctx.memcpy_d2h(d);
+            }
+            for &h in &h_out {
+                let full = ctx.um.space.get(h).full();
+                ctx.host_read(h, full);
+            }
+            return ctx.finish("BS");
+        }
+
+        // Managed variants.
+        let inputs = [
+            ctx.um.malloc_managed("StockPrice", ab),
+            ctx.um.malloc_managed("OptionStrike", ab),
+            ctx.um.malloc_managed("OptionYears", ab),
+        ];
+        let outputs = [ctx.um.malloc_managed("CallResult", ab), ctx.um.malloc_managed("PutResult", ab)];
+
+        // Host initialization of the inputs.
+        for &id in &inputs {
+            let full = ctx.um.space.get(id).full();
+            ctx.host_write(id, full);
+        }
+        // §IV-A: ReadMostly on inputs after initialization; no other advise.
+        if variant.advises() {
+            for &id in &inputs {
+                ctx.advise(id, Advise::ReadMostly);
+            }
+        }
+        // §III-A3: prefetch the (host-initialized) input arrays on a
+        // background stream; the first kernel launch waits for the
+        // in-flight data inside its measured window. Outputs are
+        // first-touch populated on the device by the kernel itself.
+        if variant.prefetches() {
+            for &id in &inputs {
+                ctx.prefetch_background(id, Loc::Gpu);
+            }
+        }
+
+        let spec = self.kernel(&inputs, &outputs, &ctx);
+        for _ in 0..ITERATIONS {
+            ctx.launch(&spec);
+        }
+
+        // Results consumed by the host (simulated CPU computation).
+        if variant.prefetches() {
+            for &id in &outputs {
+                ctx.prefetch_default(id, Loc::Cpu);
+            }
+        }
+        for &id in &outputs {
+            let full = ctx.um.space.get(id).full();
+            ctx.host_read(id, full);
+        }
+        ctx.finish("BS")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, p9_volta, PlatformId};
+    use crate::apps::common::Regime;
+    use crate::util::units::{GIB, MIB};
+
+    fn small() -> BlackScholes {
+        BlackScholes::for_footprint(256 * MIB)
+    }
+
+    #[test]
+    fn footprint_close_to_target() {
+        let app = BlackScholes::for_footprint(4 * GIB);
+        let f = app.footprint();
+        assert!(f <= 4 * GIB && f > 4 * GIB - 64);
+    }
+
+    #[test]
+    fn explicit_kernel_time_excludes_copies() {
+        let app = small();
+        let r = app.run(&intel_pascal(), Variant::Explicit, true);
+        assert_eq!(r.kernel_times.len(), ITERATIONS);
+        // All iterations identical: no faults ever.
+        assert_eq!(r.kernel_times[0], r.kernel_times[ITERATIONS - 1]);
+        assert_eq!(r.metrics.gpu_fault_groups, 0);
+        // But copies happened (traced as explicit memcpy).
+        assert!(r.metrics.h2d_bytes > 0);
+    }
+
+    #[test]
+    fn um_slower_than_explicit_in_memory() {
+        let app = small();
+        let e = app.run(&intel_pascal(), Variant::Explicit, false);
+        let u = app.run(&intel_pascal(), Variant::Um, false);
+        assert!(
+            u.kernel_time > e.kernel_time,
+            "UM {} should exceed explicit {}",
+            u.kernel_time,
+            e.kernel_time
+        );
+        // First iteration absorbs the migration; later ones are warm.
+        assert!(u.kernel_times[0] > u.kernel_times[1] * 3);
+        assert_eq!(u.kernel_times[1], u.kernel_times[ITERATIONS - 1]);
+    }
+
+    #[test]
+    fn advise_reduces_stall_not_transfer() {
+        let app = small();
+        let u = app.run(&intel_pascal(), Variant::Um, true);
+        let a = app.run(&intel_pascal(), Variant::UmAdvise, true);
+        // §IV-A: similar transfer time, reduced fault stall.
+        assert!(a.breakdown.fault_stall < u.breakdown.fault_stall);
+        let h2d_ratio = a.breakdown.h2d_bytes as f64 / u.breakdown.h2d_bytes as f64;
+        assert!((h2d_ratio - 1.0).abs() < 0.05, "transfer bytes similar, ratio {h2d_ratio}");
+        assert!(a.kernel_time < u.kernel_time);
+    }
+
+    #[test]
+    fn prefetch_eliminates_migration_faults() {
+        let app = small();
+        let p = app.run(&intel_pascal(), Variant::UmPrefetch, true);
+        // Inputs arrive by bulk prefetch; outputs are first-touch
+        // populated (cheap faults, no data movement).
+        assert_eq!(p.metrics.migrated_pages_h2d, 0, "no fault-driven migration");
+        let pages_per_array = app.array_bytes().div_ceil(crate::mem::PAGE_SIZE);
+        assert_eq!(p.metrics.prefetched_pages_h2d, 3 * pages_per_array, "three input arrays prefetched");
+        let e = app.run(&intel_pascal(), Variant::Explicit, false);
+        let u = app.run(&intel_pascal(), Variant::Um, false);
+        // Much closer to explicit than basic UM is (the kernel window
+        // still includes waiting for the concurrent background
+        // prefetch, per §III-A3).
+        let ratio = p.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        let um_ratio = u.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        assert!(ratio < um_ratio, "prefetch {ratio:.2} should beat UM {um_ratio:.2}");
+        assert!(ratio < 2.0, "prefetch {} vs explicit {} (ratio {ratio:.2})", p.kernel_time, e.kernel_time);
+    }
+
+    #[test]
+    fn p9_oversub_advise_pathology() {
+        // The paper's headline asymmetry: ReadMostly helps on Intel when
+        // oversubscribed but *hurts* on P9.
+        let plat_i = intel_pascal();
+        let app_i = BlackScholes::for_footprint(Regime::Oversubscribed.footprint(&plat_i));
+        let u = app_i.run(&plat_i, Variant::Um, false);
+        let a = app_i.run(&plat_i, Variant::UmAdvise, false);
+        assert!(a.kernel_time < u.kernel_time, "Intel oversub: advise helps");
+
+        let plat_p = p9_volta();
+        let app_p = BlackScholes::for_footprint(Regime::Oversubscribed.footprint(&plat_p));
+        let u9 = app_p.run(&plat_p, Variant::Um, false);
+        let a9 = app_p.run(&plat_p, Variant::UmAdvise, false);
+        assert!(a9.kernel_time > u9.kernel_time, "P9 oversub: advise hurts ({} vs {})", a9.kernel_time, u9.kernel_time);
+        let _ = PlatformId::ALL;
+    }
+}

@@ -1,0 +1,405 @@
+//! Shared app machinery: variants, regimes, the app trait, the run
+//! context (streams + kernel-time accounting) and the app registry.
+
+use crate::gpu::{KernelExec, KernelSpec};
+use crate::gpu::stream::{StreamId, StreamSet};
+use crate::mem::AllocId;
+use crate::platform::{calibration, PlatformId, PlatformSpec};
+use crate::trace::{Breakdown, Trace};
+use crate::um::{Loc, UmMetrics, UmRuntime};
+use crate::util::units::{Bytes, Ns};
+
+/// The paper's five benchmark versions (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Explicit,
+    Um,
+    UmAdvise,
+    UmPrefetch,
+    UmBoth,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 5] =
+        [Variant::Explicit, Variant::Um, Variant::UmAdvise, Variant::UmPrefetch, Variant::UmBoth];
+    /// The four UM configurations (oversubscription has no Explicit
+    /// baseline — §IV-B: "the case does not exist with original
+    /// versions with explicit allocation").
+    pub const UM_ONLY: [Variant; 4] =
+        [Variant::Um, Variant::UmAdvise, Variant::UmPrefetch, Variant::UmBoth];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Explicit => "Explicit",
+            Variant::Um => "UM",
+            Variant::UmAdvise => "UM Advise",
+            Variant::UmPrefetch => "UM Prefetch",
+            Variant::UmBoth => "UM Both",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "explicit" | "orig" | "original" => Some(Variant::Explicit),
+            "um" | "basic" => Some(Variant::Um),
+            "umadvise" | "advise" => Some(Variant::UmAdvise),
+            "umprefetch" | "prefetch" => Some(Variant::UmPrefetch),
+            "umboth" | "both" => Some(Variant::UmBoth),
+            _ => None,
+        }
+    }
+
+    pub fn advises(self) -> bool {
+        matches!(self, Variant::UmAdvise | Variant::UmBoth)
+    }
+    pub fn prefetches(self) -> bool {
+        matches!(self, Variant::UmPrefetch | Variant::UmBoth)
+    }
+    pub fn managed(self) -> bool {
+        self != Variant::Explicit
+    }
+}
+
+/// Problem-size regime (§III-B: ~80% and ~150% of GPU memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Regime {
+    InMemory,
+    Oversubscribed,
+}
+
+impl Regime {
+    pub const ALL: [Regime; 2] = [Regime::InMemory, Regime::Oversubscribed];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Regime::InMemory => "in-memory",
+            Regime::Oversubscribed => "oversubscribed",
+        }
+    }
+
+    pub fn fraction(self) -> f64 {
+        match self {
+            Regime::InMemory => calibration::IN_MEMORY_FRACTION,
+            Regime::Oversubscribed => calibration::OVERSUB_FRACTION,
+        }
+    }
+
+    /// Target managed footprint on `plat`.
+    pub fn footprint(self, plat: &PlatformSpec) -> Bytes {
+        (plat.gpu.usable() as f64 * self.fraction()) as Bytes
+    }
+
+    pub fn parse(s: &str) -> Option<Regime> {
+        match s.to_ascii_lowercase().as_str() {
+            "inmemory" | "in-memory" | "im" | "fit" => Some(Regime::InMemory),
+            "oversub" | "oversubscribed" | "os" => Some(Regime::Oversubscribed),
+            _ => None,
+        }
+    }
+}
+
+/// Result of one application run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub app: &'static str,
+    pub variant: Variant,
+    /// The paper's figure of merit: total GPU kernel execution time.
+    pub kernel_time: Ns,
+    /// Per-launch kernel windows (Graph500 reports per-BFS stats).
+    pub kernel_times: Vec<Ns>,
+    /// End-to-end wall time of the simulated program.
+    pub wall_time: Ns,
+    pub metrics: UmMetrics,
+    /// Fig-4/7-style breakdown (zeroed when tracing is off).
+    pub breakdown: Breakdown,
+    /// The full event log when tracing was enabled.
+    pub trace: Option<Trace>,
+}
+
+/// Run context: owns the UM runtime, the stream clocks and the
+/// kernel-time accumulator, and exposes the CUDA-ish verbs the app
+/// programs are written in.
+pub struct AppCtx {
+    pub um: UmRuntime,
+    pub streams: StreamSet,
+    pub variant: Variant,
+    kernel_time: Ns,
+    kernel_times: Vec<Ns>,
+    /// Background-prefetch completion the *next* kernel launch must
+    /// wait for. The paper launches kernels concurrently with the
+    /// background prefetch (§III-A3), so the wait for in-flight data is
+    /// part of the measured kernel execution time.
+    pending_gate: Option<Ns>,
+}
+
+impl AppCtx {
+    pub fn new(plat: &PlatformSpec, variant: Variant, trace: bool) -> AppCtx {
+        let mut um = UmRuntime::new(plat);
+        if trace {
+            um.enable_trace();
+        }
+        AppCtx {
+            um,
+            streams: StreamSet::new(),
+            variant,
+            kernel_time: Ns::ZERO,
+            kernel_times: Vec::new(),
+            pending_gate: None,
+        }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.streams.now(StreamId::Default)
+    }
+
+    /// Host-side op on the default stream timeline.
+    pub fn host_write(&mut self, id: AllocId, range: crate::mem::PageRange) {
+        let t = self.streams.now(StreamId::Default);
+        let out = self.um.host_access(id, range, true, t);
+        self.streams.advance_to(StreamId::Default, out.done);
+    }
+
+    pub fn host_read(&mut self, id: AllocId, range: crate::mem::PageRange) {
+        let t = self.streams.now(StreamId::Default);
+        let out = self.um.host_access(id, range, false, t);
+        self.streams.advance_to(StreamId::Default, out.done);
+    }
+
+    pub fn advise(&mut self, id: AllocId, advise: crate::um::Advise) {
+        let range = self.um.space.get(id).full();
+        let t = self.streams.now(StreamId::Default);
+        let done = self.um.mem_advise(id, range, advise, t);
+        self.streams.advance_to(StreamId::Default, done);
+    }
+
+    /// Prefetch on the background stream (paper §III-A3: inputs are
+    /// prefetched in a background stream while the kernel is launched
+    /// in the default stream). The next [`AppCtx::launch`] waits for
+    /// these transfers *inside* its measured window.
+    pub fn prefetch_background(&mut self, id: AllocId, dst: Loc) {
+        let range = self.um.space.get(id).full();
+        let t = self.streams.now(StreamId::Background);
+        let done = self.um.prefetch_async(id, range, dst, t);
+        self.streams.advance_to(StreamId::Background, done);
+        self.pending_gate = Some(self.pending_gate.map_or(done, |g| g.max(done)));
+    }
+
+    /// Prefetch on the default stream (results back to the host).
+    pub fn prefetch_default(&mut self, id: AllocId, dst: Loc) {
+        let range = self.um.space.get(id).full();
+        let t = self.streams.now(StreamId::Default);
+        let done = self.um.prefetch_async(id, range, dst, t);
+        self.streams.advance_to(StreamId::Default, done);
+    }
+
+    /// Explicit `cudaMemcpy`s (Explicit variant only).
+    pub fn memcpy_h2d(&mut self, dst: AllocId) {
+        let bytes = self.um.space.get(dst).size;
+        let t = self.streams.now(StreamId::Default);
+        let done = self.um.memcpy_h2d(dst, bytes, t);
+        self.streams.advance_to(StreamId::Default, done);
+    }
+
+    pub fn memcpy_d2h(&mut self, src: AllocId) {
+        let bytes = self.um.space.get(src).size;
+        let t = self.streams.now(StreamId::Default);
+        let done = self.um.memcpy_d2h(src, bytes, t);
+        self.streams.advance_to(StreamId::Default, done);
+    }
+
+    /// Launch a kernel on the default stream. If a background prefetch
+    /// is in flight, the kernel is *launched* now (the measured window
+    /// opens) but executes only once its data has arrived — exactly the
+    /// concurrent-launch pattern of §III-A3, where the wait shows up in
+    /// the GPU kernel execution time.
+    pub fn launch(&mut self, spec: &KernelSpec) -> Ns {
+        let start = self.streams.now(StreamId::Default);
+        let exec_start = match self.pending_gate.take() {
+            Some(gate) => start.max(gate),
+            None => start,
+        };
+        let (end, _phases) = KernelExec::run(&mut self.um, spec, exec_start);
+        self.streams.advance_to(StreamId::Default, end);
+        let dur = end - start;
+        self.kernel_time += dur;
+        self.kernel_times.push(dur);
+        dur
+    }
+
+    /// `cudaDeviceSynchronize`.
+    pub fn device_sync(&mut self) -> Ns {
+        self.streams.device_sync()
+    }
+
+    /// Finalize into a [`RunResult`].
+    pub fn finish(mut self, app: &'static str) -> RunResult {
+        let wall = self.streams.device_sync();
+        let breakdown = Breakdown::from_trace(&self.um.trace);
+        let trace = if self.um.trace.is_enabled() {
+            Some(std::mem::replace(&mut self.um.trace, Trace::disabled()))
+        } else {
+            None
+        };
+        RunResult {
+            app,
+            variant: self.variant,
+            kernel_time: self.kernel_time,
+            kernel_times: self.kernel_times,
+            wall_time: wall,
+            metrics: self.um.metrics,
+            breakdown,
+            trace,
+        }
+    }
+}
+
+/// Application identifiers (Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppId {
+    Bs,
+    Matmul,
+    Cg,
+    Graph500,
+    Conv0,
+    Conv1,
+    Conv2,
+    Fdtd3d,
+}
+
+impl AppId {
+    pub const ALL: [AppId; 8] = [
+        AppId::Bs,
+        AppId::Matmul,
+        AppId::Cg,
+        AppId::Graph500,
+        AppId::Conv0,
+        AppId::Conv1,
+        AppId::Conv2,
+        AppId::Fdtd3d,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppId::Bs => "BS",
+            AppId::Matmul => "cuBLAS",
+            AppId::Cg => "CG",
+            AppId::Graph500 => "Graph500",
+            AppId::Conv0 => "conv0",
+            AppId::Conv1 => "conv1",
+            AppId::Conv2 => "conv2",
+            AppId::Fdtd3d => "FDTD3d",
+        }
+    }
+
+    pub fn description(self) -> &'static str {
+        match self {
+            AppId::Bs => "Financial application that performs option pricing",
+            AppId::Matmul => "SGEMM (cuBLAS stand-in)",
+            AppId::Cg => "Conjugate gradient sparse linear solver (cuSPARSE stand-in)",
+            AppId::Graph500 => "Breadth-first search kernel of Graph500",
+            AppId::Conv0 => "FFT convolution, R2C/C2R plans (cuFFT stand-in)",
+            AppId::Conv1 => "FFT convolution, C2C plan (cuFFT stand-in)",
+            AppId::Conv2 => "FFT convolution, C2C plan, alt layout (cuFFT stand-in)",
+            AppId::Fdtd3d => "Finite-difference time-domain solver in 3D",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppId> {
+        match s.to_ascii_lowercase().as_str() {
+            "bs" | "black-scholes" | "blackscholes" => Some(AppId::Bs),
+            "cublas" | "matmul" | "gemm" | "mm" => Some(AppId::Matmul),
+            "cg" => Some(AppId::Cg),
+            "graph500" | "bfs" | "g500" => Some(AppId::Graph500),
+            "conv0" => Some(AppId::Conv0),
+            "conv1" => Some(AppId::Conv1),
+            "conv2" => Some(AppId::Conv2),
+            "fdtd3d" | "fdtd" => Some(AppId::Fdtd3d),
+        _ => None,
+        }
+    }
+
+    /// Instantiate the app sized to `footprint` managed bytes.
+    pub fn build(self, footprint: Bytes) -> Box<dyn UmApp> {
+        match self {
+            AppId::Bs => Box::new(super::bs::BlackScholes::for_footprint(footprint)),
+            AppId::Matmul => Box::new(super::matmul::MatMul::for_footprint(footprint)),
+            AppId::Cg => Box::new(super::cg::ConjugateGradient::for_footprint(footprint)),
+            AppId::Graph500 => Box::new(super::graph500::Graph500::for_footprint(footprint)),
+            AppId::Conv0 => Box::new(super::conv::FftConv::for_footprint(super::conv::ConvPlan::R2C, footprint)),
+            AppId::Conv1 => Box::new(super::conv::FftConv::for_footprint(super::conv::ConvPlan::C2C, footprint)),
+            AppId::Conv2 => Box::new(super::conv::FftConv::for_footprint(super::conv::ConvPlan::C2CAlt, footprint)),
+            AppId::Fdtd3d => Box::new(super::fdtd::Fdtd3d::for_footprint(footprint)),
+        }
+    }
+
+    /// Build for a platform + regime (the §III-B sizing rule).
+    pub fn build_for(self, plat: PlatformId, regime: Regime) -> Box<dyn UmApp> {
+        self.build(regime.footprint(&plat.spec()))
+    }
+
+    /// Whether the paper evaluates this app in this configuration
+    /// (Graph500 oversubscription exists only on Intel-Pascal, Table I).
+    pub fn in_paper_matrix(self, plat: PlatformId, regime: Regime) -> bool {
+        !(self == AppId::Graph500
+            && regime == Regime::Oversubscribed
+            && plat != PlatformId::IntelPascal)
+    }
+}
+
+/// One benchmark application.
+pub trait UmApp: Send {
+    fn name(&self) -> &'static str;
+    /// Actual managed footprint in bytes (≈ the requested target).
+    fn footprint(&self) -> Bytes;
+    /// PJRT artifact validating this app's numerics (see `runtime`).
+    fn artifact(&self) -> &'static str;
+    /// Execute one full benchmark run.
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::intel_pascal;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()), Some(v), "{}", v.name());
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert!(Variant::UmBoth.advises() && Variant::UmBoth.prefetches());
+        assert!(Variant::UmAdvise.advises() && !Variant::UmAdvise.prefetches());
+        assert!(!Variant::Um.advises() && !Variant::Um.prefetches());
+        assert!(!Variant::Explicit.managed());
+    }
+
+    #[test]
+    fn regime_footprints() {
+        let plat = intel_pascal();
+        let im = Regime::InMemory.footprint(&plat);
+        let os = Regime::Oversubscribed.footprint(&plat);
+        assert!(im < plat.gpu.usable());
+        assert!(os > plat.gpu.usable());
+        assert!((os as f64 / im as f64 - 1.5 / 0.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn app_parse_all() {
+        for a in AppId::ALL {
+            assert!(AppId::parse(a.name()).is_some(), "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn graph500_matrix_restriction() {
+        assert!(AppId::Graph500.in_paper_matrix(PlatformId::IntelPascal, Regime::Oversubscribed));
+        assert!(!AppId::Graph500.in_paper_matrix(PlatformId::P9Volta, Regime::Oversubscribed));
+        assert!(AppId::Graph500.in_paper_matrix(PlatformId::P9Volta, Regime::InMemory));
+        assert!(AppId::Bs.in_paper_matrix(PlatformId::P9Volta, Regime::Oversubscribed));
+    }
+}

@@ -1,0 +1,274 @@
+//! FFT-based image convolution — the conv0/conv1/conv2 rows of Table I
+//! (cuFFT stand-ins).
+//!
+//! * `conv0`: Real-to-Complex / Complex-to-Real plans — the spectrum is
+//!   half-size, so the workspace split differs.
+//! * `conv1` / `conv2`: Complex-to-Complex plans with different padding
+//!   layouts (the paper's two C2C variants land at slightly different
+//!   footprints; compare Table I's 3.5 vs 3.0 GB on Intel-Pascal).
+//!
+//! Pipeline (one shot — this is the suite's streaming, low-reuse app):
+//! pad → forward FFT(data) → forward FFT(kernel) → pointwise complex
+//! multiply-and-scale → inverse FFT → host consumes the result. Each
+//! FFT makes `FFT_PASSES` sweeps over its workspace (multi-stage
+//! Stockham), which is what makes basic UM catastrophic here: the
+//! paper's headline "conv2 is 14x slower under UM on P9-Volta".
+
+use crate::gpu::{Access, KernelSpec, Phase};
+use crate::mem::AllocId;
+use crate::platform::PlatformSpec;
+use crate::um::{Advise, Loc};
+use crate::util::units::Bytes;
+
+use super::common::{AppCtx, RunResult, UmApp, Variant};
+
+/// DRAM sweeps per FFT execution (cuFFT uses large radices; ~2-3
+/// Stockham passes for these sizes).
+const FFT_PASSES: f64 = 2.5;
+
+/// Which cuFFT plan the variant models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvPlan {
+    /// conv0: R2C forward + C2R inverse.
+    R2C,
+    /// conv1: C2C.
+    C2C,
+    /// conv2: C2C with alternative padding.
+    C2CAlt,
+}
+
+impl ConvPlan {
+    /// (input, kernel, workspace-data, workspace-kernel) footprint split.
+    fn split(self) -> [f64; 4] {
+        match self {
+            // R2C spectra are ~half-size: smaller workspaces.
+            ConvPlan::R2C => [0.36, 0.06, 0.30, 0.28],
+            ConvPlan::C2C => [0.28, 0.06, 0.33, 0.33],
+            ConvPlan::C2CAlt => [0.32, 0.06, 0.31, 0.31],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvPlan::R2C => "conv0",
+            ConvPlan::C2C => "conv1",
+            ConvPlan::C2CAlt => "conv2",
+        }
+    }
+}
+
+pub struct FftConv {
+    pub plan: ConvPlan,
+    sizes: [Bytes; 4],
+}
+
+impl FftConv {
+    pub fn for_footprint(plan: ConvPlan, footprint: Bytes) -> FftConv {
+        let split = plan.split();
+        let mut sizes = [0u64; 4];
+        for i in 0..4 {
+            sizes[i] = ((footprint as f64 * split[i]) as Bytes).max(crate::mem::PAGE_SIZE);
+        }
+        FftConv { plan, sizes }
+    }
+
+    /// Complex points in the data workspace (8 B per point, f32 pairs).
+    fn points(&self) -> f64 {
+        self.sizes[2] as f64 / 8.0
+    }
+
+    fn fft_flops(&self, n: f64) -> f64 {
+        5.0 * n * (n.max(2.0)).log2()
+    }
+
+    fn pipeline(&self, input: AllocId, kernel: AllocId, ws_d: AllocId, ws_k: AllocId, ctx: &AppCtx) -> KernelSpec {
+        let full = |id: AllocId| ctx.um.space.get(id).full();
+        let n = self.points();
+        KernelSpec {
+            name: self.plan.name(),
+            phases: vec![
+                Phase {
+                    name: "pad",
+                    accesses: vec![
+                        Access::read(input, full(input)),
+                        Access::read(kernel, full(kernel)),
+                        Access::write(ws_d, full(ws_d)),
+                        Access::write(ws_k, full(ws_k)),
+                    ],
+                    flops: n,
+                },
+                Phase {
+                    name: "fft_fwd_data",
+                    accesses: vec![Access::rw(ws_d, full(ws_d)).with_passes(FFT_PASSES)],
+                    flops: self.fft_flops(n),
+                },
+                Phase {
+                    name: "fft_fwd_kernel",
+                    accesses: vec![Access::rw(ws_k, full(ws_k)).with_passes(FFT_PASSES)],
+                    flops: self.fft_flops(self.sizes[3] as f64 / 8.0),
+                },
+                Phase {
+                    name: "modulate",
+                    accesses: vec![
+                        Access::read(ws_k, full(ws_k)),
+                        Access::rw(ws_d, full(ws_d)),
+                    ],
+                    flops: 6.0 * n,
+                },
+                Phase {
+                    name: "fft_inv",
+                    accesses: vec![Access::rw(ws_d, full(ws_d)).with_passes(FFT_PASSES)],
+                    flops: self.fft_flops(n),
+                },
+            ],
+        }
+    }
+}
+
+impl UmApp for FftConv {
+    fn name(&self) -> &'static str {
+        self.plan.name()
+    }
+
+    fn footprint(&self) -> Bytes {
+        self.sizes.iter().sum()
+    }
+
+    fn artifact(&self) -> &'static str {
+        "conv_fft"
+    }
+
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
+        let mut ctx = AppCtx::new(plat, variant, trace);
+        let name: &'static str = self.plan.name();
+
+        if variant == Variant::Explicit {
+            let h_in = ctx.um.malloc_host("h_input", self.sizes[0]);
+            let h_k = ctx.um.malloc_host("h_kernel", self.sizes[1]);
+            let d_in = ctx.um.malloc_device("d_input", self.sizes[0]);
+            let d_k = ctx.um.malloc_device("d_kernel", self.sizes[1]);
+            let d_wd = ctx.um.malloc_device("d_ws_data", self.sizes[2]);
+            let d_wk = ctx.um.malloc_device("d_ws_kernel", self.sizes[3]);
+            let h_out = ctx.um.malloc_host("h_out", self.sizes[2]);
+            for h in [h_in, h_k] {
+                let full = ctx.um.space.get(h).full();
+                ctx.host_write(h, full);
+            }
+            ctx.memcpy_h2d(d_in);
+            ctx.memcpy_h2d(d_k);
+            let spec = self.pipeline(d_in, d_k, d_wd, d_wk, &ctx);
+            ctx.launch(&spec);
+            ctx.memcpy_d2h(d_wd);
+            let full = ctx.um.space.get(h_out).full();
+            ctx.host_read(h_out, full);
+            return ctx.finish(name);
+        }
+
+        let input = ctx.um.malloc_managed("input", self.sizes[0]);
+        let kernel = ctx.um.malloc_managed("kernel", self.sizes[1]);
+        let ws_d = ctx.um.malloc_managed("ws_data", self.sizes[2]);
+        let ws_k = ctx.um.malloc_managed("ws_kernel", self.sizes[3]);
+
+        if variant.advises() {
+            // CPU-initialized inputs wanted on the GPU.
+            for id in [input, kernel] {
+                ctx.advise(id, Advise::PreferredLocation(Loc::Gpu));
+                ctx.advise(id, Advise::AccessedBy(Loc::Cpu));
+            }
+            // Workspaces are GPU-only scratch.
+            for id in [ws_d, ws_k] {
+                ctx.advise(id, Advise::PreferredLocation(Loc::Gpu));
+            }
+        }
+        for id in [input, kernel] {
+            let full = ctx.um.space.get(id).full();
+            ctx.host_write(id, full);
+        }
+        if variant.advises() {
+            // The filter kernel is constant across the pipeline.
+            ctx.advise(kernel, Advise::ReadMostly);
+        }
+        if variant.prefetches() {
+            for id in [input, kernel] {
+                ctx.prefetch_background(id, Loc::Gpu);
+            }
+        }
+
+        let spec = self.pipeline(input, kernel, ws_d, ws_k, &ctx);
+        ctx.launch(&spec);
+
+        if variant.prefetches() {
+            ctx.prefetch_default(ws_d, Loc::Cpu);
+        }
+        let full = ctx.um.space.get(ws_d).full();
+        ctx.host_read(ws_d, full);
+        ctx.finish(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::Regime;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn three_plans_three_footprint_shapes() {
+        let f = 512 * MIB;
+        let c0 = FftConv::for_footprint(ConvPlan::R2C, f);
+        let c1 = FftConv::for_footprint(ConvPlan::C2C, f);
+        let c2 = FftConv::for_footprint(ConvPlan::C2CAlt, f);
+        assert_ne!(c0.sizes, c1.sizes);
+        assert_ne!(c1.sizes, c2.sizes);
+        for c in [&c0, &c1, &c2] {
+            assert!(c.footprint() <= f && c.footprint() > f * 9 / 10);
+        }
+    }
+
+    #[test]
+    fn um_catastrophic_on_volta_in_memory() {
+        // The paper's headline: conv under basic UM is ~an order of
+        // magnitude slower on Volta platforms (14x for conv2 on P9).
+        let plat = p9_volta();
+        let c2 = FftConv::for_footprint(ConvPlan::C2CAlt, Regime::InMemory.footprint(&plat));
+        let e = c2.run(&plat, Variant::Explicit, false);
+        let u = c2.run(&plat, Variant::Um, false);
+        let ratio = u.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        assert!(ratio > 5.0, "conv2 UM/explicit on P9 should be order-of-magnitude (paper: 14x), got {ratio:.1}x");
+    }
+
+    #[test]
+    fn um_penalty_smaller_on_pascal() {
+        let plat = intel_pascal();
+        let c2 = FftConv::for_footprint(ConvPlan::C2CAlt, Regime::InMemory.footprint(&plat));
+        let e = c2.run(&plat, Variant::Explicit, false);
+        let u = c2.run(&plat, Variant::Um, false);
+        let ratio = u.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        assert!(ratio > 1.5 && ratio < 8.0, "Pascal conv2 ratio 2-3x-ish, got {ratio:.1}x");
+    }
+
+    #[test]
+    fn advise_strong_on_p9_weak_on_intel() {
+        let small = 256 * MIB;
+        let c = FftConv::for_footprint(ConvPlan::C2C, small);
+        let u9 = c.run(&p9_volta(), Variant::Um, false);
+        let a9 = c.run(&p9_volta(), Variant::UmAdvise, false);
+        let gain_p9 = 1.0 - a9.kernel_time.0 as f64 / u9.kernel_time.0 as f64;
+        let ui = c.run(&intel_pascal(), Variant::Um, false);
+        let ai = c.run(&intel_pascal(), Variant::UmAdvise, false);
+        let gain_intel = 1.0 - ai.kernel_time.0 as f64 / ui.kernel_time.0 as f64;
+        assert!(gain_p9 > 0.3, "P9 advise gain should be large, got {gain_p9:.2}");
+        assert!(gain_intel < gain_p9, "Intel gain ({gain_intel:.2}) below P9 ({gain_p9:.2})");
+        assert!(gain_intel > 0.0, "Intel advise still helps a little");
+    }
+
+    #[test]
+    fn prefetch_strong_on_intel() {
+        let c = FftConv::for_footprint(ConvPlan::C2C, 256 * MIB);
+        let u = c.run(&intel_pascal(), Variant::Um, false);
+        let p = c.run(&intel_pascal(), Variant::UmPrefetch, false);
+        let gain = 1.0 - p.kernel_time.0 as f64 / u.kernel_time.0 as f64;
+        assert!(gain > 0.3, "Intel prefetch gain should be large, got {gain:.2}");
+    }
+}

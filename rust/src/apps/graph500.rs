@@ -1,0 +1,226 @@
+//! Graph500 BFS kernel (Table I row 4).
+//!
+//! A Kronecker-ish CSR graph (edgefactor 16) traversed level-
+//! synchronously from several roots. Per level the kernel expands the
+//! frontier: it gathers the adjacency lists of frontier vertices — an
+//! *irregular* slice of the edge array modeled as `SCATTER_RUNS` random
+//! sub-ranges covering the level's frontier fraction — and updates the
+//! visited/levels arrays. The paper reports per-BFS-iteration means,
+//! and only evaluates oversubscription on Intel-Pascal (Table I: "N/A").
+
+use crate::gpu::{Access, KernelSpec, Phase};
+use crate::mem::{AllocId, PageRange};
+use crate::platform::PlatformSpec;
+use crate::um::{Advise, Loc};
+use crate::util::rng::Rng;
+use crate::util::units::Bytes;
+
+use super::common::{AppCtx, RunResult, UmApp, Variant};
+
+/// Edges per vertex (Graph500 edgefactor).
+const EDGE_FACTOR: u64 = 16;
+/// BFS roots per run (the paper's per-iteration statistics).
+pub const ROOTS: usize = 4;
+/// Frontier fraction per BFS level (typical small-world expansion).
+const LEVEL_PROFILE: [f64; 6] = [0.002, 0.05, 0.35, 0.45, 0.12, 0.01];
+/// Scattered sub-ranges per level modeling irregular gathers.
+const SCATTER_RUNS: usize = 8;
+
+pub struct Graph500 {
+    pub vertices: u64,
+    seed: u64,
+}
+
+impl Graph500 {
+    pub fn for_footprint(footprint: Bytes) -> Graph500 {
+        // rowptr 8(N+1) + cols 8*16N + levels 8N + frontier 2*8N ≈ 160N
+        Graph500 { vertices: (footprint / 160).max(4096), seed: 0x6500 }
+    }
+
+    fn rowptr_bytes(&self) -> Bytes {
+        (self.vertices + 1) * 8
+    }
+    fn cols_bytes(&self) -> Bytes {
+        self.vertices * EDGE_FACTOR * 8
+    }
+    fn vec_bytes(&self) -> Bytes {
+        self.vertices * 8
+    }
+
+    /// Scale (log2 N) for reporting.
+    pub fn scale(&self) -> u32 {
+        63 - self.vertices.leading_zeros()
+    }
+
+    /// The irregular level-expansion kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn level_kernel(
+        &self,
+        rowptr: AllocId,
+        cols: AllocId,
+        levels: AllocId,
+        front: AllocId,
+        next: AllocId,
+        fraction: f64,
+        rng: &mut Rng,
+        ctx: &AppCtx,
+    ) -> KernelSpec {
+        let full = |id: AllocId| ctx.um.space.get(id).full();
+        let cols_pages = ctx.um.space.get(cols).n_pages();
+        // Scattered gathers over the edge array: SCATTER_RUNS random
+        // sub-ranges whose total length ≈ fraction of the edges.
+        let mut accesses = vec![
+            Access::read(rowptr, full(rowptr)),
+            Access::read(front, full(front)),
+            Access::rw(levels, full(levels)),
+            Access::write(next, full(next)),
+        ];
+        let frac_pages = ((cols_pages as f64 * fraction) as u32).max(1);
+        let per_run = (frac_pages / SCATTER_RUNS as u32).max(1);
+        for _ in 0..SCATTER_RUNS {
+            let max_start = cols_pages.saturating_sub(per_run).max(1);
+            let start = (rng.below(max_start as u64)) as u32;
+            accesses.push(Access::read(cols, PageRange::new(start, (start + per_run).min(cols_pages))));
+        }
+        let touched_edges = frac_pages as f64 * crate::mem::PAGE_SIZE as f64 / 8.0;
+        KernelSpec {
+            name: "bfs_level",
+            phases: vec![Phase {
+                name: "expand",
+                accesses,
+                // ~10 ops per touched edge (atomics, comparisons).
+                flops: touched_edges * 10.0,
+            }],
+        }
+    }
+
+    fn run_bfs(&self, ctx: &mut AppCtx, arrays: [AllocId; 5], rng: &mut Rng) {
+        let [rowptr, cols, levels, front, next] = arrays;
+        for &fraction in &LEVEL_PROFILE {
+            let spec = self.level_kernel(rowptr, cols, levels, front, next, fraction, rng, ctx);
+            ctx.launch(&spec);
+        }
+    }
+}
+
+impl UmApp for Graph500 {
+    fn name(&self) -> &'static str {
+        "Graph500"
+    }
+
+    fn footprint(&self) -> Bytes {
+        self.rowptr_bytes() + self.cols_bytes() + 3 * self.vec_bytes()
+    }
+
+    fn artifact(&self) -> &'static str {
+        "bfs_level"
+    }
+
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
+        let mut ctx = AppCtx::new(plat, variant, trace);
+        let mut rng = Rng::new(self.seed);
+
+        if variant == Variant::Explicit {
+            let h_graph = ctx.um.malloc_host("h_graph", self.rowptr_bytes() + self.cols_bytes());
+            let rowptr = ctx.um.malloc_device("d_rowptr", self.rowptr_bytes());
+            let cols = ctx.um.malloc_device("d_cols", self.cols_bytes());
+            let levels = ctx.um.malloc_device("d_levels", self.vec_bytes());
+            let front = ctx.um.malloc_device("d_front", self.vec_bytes());
+            let next = ctx.um.malloc_device("d_next", self.vec_bytes());
+            let h_levels = ctx.um.malloc_host("h_levels", self.vec_bytes());
+            let full_h = ctx.um.space.get(h_graph).full();
+            ctx.host_write(h_graph, full_h);
+            ctx.memcpy_h2d(rowptr);
+            ctx.memcpy_h2d(cols);
+            for _ in 0..ROOTS {
+                self.run_bfs(&mut ctx, [rowptr, cols, levels, front, next], &mut rng);
+                ctx.memcpy_d2h(levels);
+            }
+            let full = ctx.um.space.get(h_levels).full();
+            ctx.host_read(h_levels, full);
+            return ctx.finish("Graph500");
+        }
+
+        let rowptr = ctx.um.malloc_managed("rowptr", self.rowptr_bytes());
+        let cols = ctx.um.malloc_managed("cols", self.cols_bytes());
+        let levels = ctx.um.malloc_managed("levels", self.vec_bytes());
+        let front = ctx.um.malloc_managed("front", self.vec_bytes());
+        let next = ctx.um.malloc_managed("next", self.vec_bytes());
+
+        if variant.advises() {
+            // The graph structure is constant and GPU-resident.
+            for id in [rowptr, cols] {
+                ctx.advise(id, Advise::PreferredLocation(Loc::Gpu));
+                ctx.advise(id, Advise::AccessedBy(Loc::Cpu));
+            }
+        }
+        for id in [rowptr, cols] {
+            let full = ctx.um.space.get(id).full();
+            ctx.host_write(id, full);
+        }
+        if variant.advises() {
+            for id in [rowptr, cols] {
+                ctx.advise(id, Advise::ReadMostly);
+            }
+        }
+        if variant.prefetches() {
+            for id in [rowptr, cols] {
+                ctx.prefetch_background(id, Loc::Gpu);
+            }
+        }
+
+        for _ in 0..ROOTS {
+            self.run_bfs(&mut ctx, [rowptr, cols, levels, front, next], &mut rng);
+            // Host validates levels between roots (Graph500 validation).
+            let full = ctx.um.space.get(levels).full();
+            ctx.host_read(levels, full);
+        }
+        ctx.finish("Graph500")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::intel_pascal;
+    use crate::util::units::{MIB, Ns};
+
+    #[test]
+    fn sizing_and_scale() {
+        let g = Graph500::for_footprint(512 * MIB);
+        assert!(g.footprint() <= 512 * MIB);
+        assert!(g.footprint() > 480 * MIB);
+        assert!(g.scale() >= 20);
+    }
+
+    #[test]
+    fn per_iteration_stats_available() {
+        let g = Graph500::for_footprint(64 * MIB);
+        let r = g.run(&intel_pascal(), Variant::Um, false);
+        assert_eq!(r.kernel_times.len(), ROOTS * LEVEL_PROFILE.len());
+        assert!(r.kernel_time > Ns::ZERO);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = Graph500::for_footprint(64 * MIB);
+        let a = g.run(&intel_pascal(), Variant::Um, false);
+        let b = g.run(&intel_pascal(), Variant::Um, false);
+        assert_eq!(a.kernel_time, b.kernel_time, "seeded irregularity is reproducible");
+    }
+
+    #[test]
+    fn advise_helps_irregular_access() {
+        let g = Graph500::for_footprint(128 * MIB);
+        let u = g.run(&intel_pascal(), Variant::Um, false);
+        let a = g.run(&intel_pascal(), Variant::UmAdvise, false);
+        assert!(a.kernel_time < u.kernel_time);
+    }
+
+    #[test]
+    fn explicit_never_faults() {
+        let g = Graph500::for_footprint(64 * MIB);
+        let r = g.run(&intel_pascal(), Variant::Explicit, false);
+        assert_eq!(r.metrics.gpu_fault_groups, 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Dense matrix-matrix multiplication in single precision — the
+//! cuBLAS SGEMM row of Table I.
+//!
+//! Three `n x n` f32 matrices (A, B inputs; C output), one GEMM launch.
+//! A tiled GEMM re-reads the A/B panels once per tile column/row; with
+//! a 128-wide tile the DRAM sees each input `n/128` times — that is the
+//! `dram_passes` below, which puts the kernel firmly compute-bound on
+//! every platform (as SGEMM is).
+//!
+//! Advise wiring (§III-A2 general rule): inputs are CPU-initialized and
+//! GPU-consumed → `PreferredLocation(Gpu)` + `AccessedBy(Cpu)`, then
+//! `ReadMostly` after initialization; the output gets
+//! `PreferredLocation(Gpu)` + `AccessedBy(Cpu)` (host reads the result).
+
+use crate::gpu::{Access, KernelSpec, Phase};
+use crate::mem::AllocId;
+use crate::platform::PlatformSpec;
+use crate::um::{Advise, Loc};
+use crate::util::units::Bytes;
+
+use super::common::{AppCtx, RunResult, UmApp, Variant};
+
+/// GEMM tile width assumed by the pass model.
+const TILE: f64 = 128.0;
+
+pub struct MatMul {
+    pub n: u64,
+}
+
+impl MatMul {
+    pub fn for_footprint(footprint: Bytes) -> MatMul {
+        // 3 * n^2 * 4 bytes = footprint
+        let n = ((footprint as f64 / 12.0).sqrt()).floor() as u64;
+        MatMul { n: n.max(128) }
+    }
+
+    fn mat_bytes(&self) -> Bytes {
+        self.n * self.n * 4
+    }
+
+    fn kernel(&self, a: AllocId, b: AllocId, c: AllocId, ctx: &AppCtx) -> KernelSpec {
+        let passes = (self.n as f64 / TILE).max(1.0);
+        KernelSpec {
+            name: "sgemm",
+            phases: vec![Phase {
+                name: "gemm",
+                accesses: vec![
+                    Access::read(a, ctx.um.space.get(a).full()).with_passes(passes),
+                    Access::read(b, ctx.um.space.get(b).full()).with_passes(passes),
+                    Access::write(c, ctx.um.space.get(c).full()),
+                ],
+                flops: 2.0 * (self.n as f64).powi(3),
+            }],
+        }
+    }
+}
+
+impl UmApp for MatMul {
+    fn name(&self) -> &'static str {
+        "cuBLAS"
+    }
+
+    fn footprint(&self) -> Bytes {
+        3 * self.mat_bytes()
+    }
+
+    fn artifact(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
+        let mut ctx = AppCtx::new(plat, variant, trace);
+        let mb = self.mat_bytes();
+
+        if variant == Variant::Explicit {
+            let h_a = ctx.um.malloc_host("h_A", mb);
+            let h_b = ctx.um.malloc_host("h_B", mb);
+            let h_c = ctx.um.malloc_host("h_C", mb);
+            let d_a = ctx.um.malloc_device("d_A", mb);
+            let d_b = ctx.um.malloc_device("d_B", mb);
+            let d_c = ctx.um.malloc_device("d_C", mb);
+            for h in [h_a, h_b] {
+                let full = ctx.um.space.get(h).full();
+                ctx.host_write(h, full);
+            }
+            ctx.memcpy_h2d(d_a);
+            ctx.memcpy_h2d(d_b);
+            let spec = self.kernel(d_a, d_b, d_c, &ctx);
+            ctx.launch(&spec);
+            ctx.memcpy_d2h(d_c);
+            let full = ctx.um.space.get(h_c).full();
+            ctx.host_read(h_c, full);
+            return ctx.finish("cuBLAS");
+        }
+
+        let a = ctx.um.malloc_managed("A", mb);
+        let b = ctx.um.malloc_managed("B", mb);
+        let c = ctx.um.malloc_managed("C", mb);
+
+        if variant.advises() {
+            // Placement advises go in *before* initialization so the P9
+            // init path can stream straight into GPU memory.
+            for id in [a, b, c] {
+                ctx.advise(id, Advise::PreferredLocation(Loc::Gpu));
+                ctx.advise(id, Advise::AccessedBy(Loc::Cpu));
+            }
+        }
+        for id in [a, b] {
+            let full = ctx.um.space.get(id).full();
+            ctx.host_write(id, full);
+        }
+        if variant.advises() {
+            for id in [a, b] {
+                ctx.advise(id, Advise::ReadMostly);
+            }
+        }
+        if variant.prefetches() {
+            for id in [a, b] {
+                ctx.prefetch_background(id, Loc::Gpu);
+            }
+        }
+
+        let spec = self.kernel(a, b, c, &ctx);
+        ctx.launch(&spec);
+
+        if variant.prefetches() {
+            ctx.prefetch_default(c, Loc::Cpu);
+        }
+        let full = ctx.um.space.get(c).full();
+        ctx.host_read(c, full);
+        ctx.finish("cuBLAS")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_volta, p9_volta};
+    use crate::util::units::{GIB, MIB};
+
+    #[test]
+    fn sizing_matches_footprint() {
+        let m = MatMul::for_footprint(GIB);
+        assert!(m.footprint() <= GIB);
+        assert!(m.footprint() > GIB * 9 / 10);
+    }
+
+    #[test]
+    fn gemm_is_compute_bound() {
+        let m = MatMul::for_footprint(512 * MIB);
+        let r = m.run(&intel_volta(), Variant::Explicit, false);
+        let flops = 2.0 * (m.n as f64).powi(3);
+        let ideal = flops / intel_volta().gpu.flops_f32;
+        let actual = r.kernel_time.as_secs();
+        assert!(actual >= ideal * 0.99, "kernel {actual}s below roofline {ideal}s");
+        assert!(actual < ideal * 1.6, "kernel {actual}s far above roofline {ideal}s");
+    }
+
+    #[test]
+    fn um_penalty_small_relative_to_compute() {
+        // SGEMM is compute-dominated: the UM penalty exists but is a
+        // modest fraction (paper Fig. 3: cuBLAS suffers least).
+        let m = MatMul::for_footprint(512 * MIB);
+        let e = m.run(&intel_volta(), Variant::Explicit, false);
+        let u = m.run(&intel_volta(), Variant::Um, false);
+        assert!(u.kernel_time > e.kernel_time);
+        let ratio = u.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        assert!(ratio < 3.0, "cuBLAS UM/explicit ratio should be modest, got {ratio}");
+    }
+
+    #[test]
+    fn p9_advise_near_explicit() {
+        // §IV-A: "Applications, such as CG and cuBLAS, result in similar
+        // execution time to the original version" on P9 with advises.
+        let m = MatMul::for_footprint(512 * MIB);
+        let e = m.run(&p9_volta(), Variant::Explicit, false);
+        let a = m.run(&p9_volta(), Variant::UmAdvise, false);
+        let ratio = a.kernel_time.0 as f64 / e.kernel_time.0 as f64;
+        assert!(ratio < 1.15, "P9 advise {} vs explicit {} (ratio {ratio})", a.kernel_time, e.kernel_time);
+        assert_eq!(a.metrics.migrated_pages_h2d, 0, "remote init leaves nothing to migrate");
+    }
+
+    #[test]
+    fn intel_advise_helps_but_less() {
+        let m = MatMul::for_footprint(512 * MIB);
+        let u = m.run(&intel_volta(), Variant::Um, false);
+        let a = m.run(&intel_volta(), Variant::UmAdvise, false);
+        assert!(a.kernel_time < u.kernel_time, "advise helps on Intel too");
+        assert!(a.metrics.gpu_fault_groups > 0, "but data still faults over");
+    }
+}

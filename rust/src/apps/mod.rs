@@ -1,0 +1,32 @@
+//! The six benchmark applications of the paper (§III-A, Table I), each
+//! in the five memory-management variants:
+//!
+//! | Variant | Allocation | Data movement |
+//! |---|---|---|
+//! | `Explicit` | `cudaMalloc` + host staging | `cudaMemcpy` |
+//! | `Um` | `cudaMallocManaged` | on-demand paging |
+//! | `UmAdvise` | managed | + `cudaMemAdvise` per §III-A2 |
+//! | `UmPrefetch` | managed | + `cudaMemPrefetchAsync` per §III-A3 |
+//! | `UmBoth` | managed | advises + prefetch |
+//!
+//! Applications: Black-Scholes ([`bs`]), dense MatMul ([`matmul`],
+//! cuBLAS stand-in), Conjugate Gradient ([`cg`], cuSPARSE stand-in),
+//! Graph500 BFS ([`graph500`]), three FFT convolutions ([`conv`], cuFFT
+//! stand-ins) and FDTD3d ([`fdtd`]).
+//!
+//! Each app turns a target footprint (80% / 150% of usable GPU memory,
+//! §III-B) into concrete array sizes, then *runs* as a straight-line
+//! program against the [`crate::um::UmRuntime`]: allocate → advise →
+//! host-init → prefetch → kernel launches → consume results. The GPU
+//! kernel execution time (the paper's figure of merit) is the sum of
+//! kernel windows, which under UM include fault/migration stalls.
+
+pub mod common;
+pub mod bs;
+pub mod matmul;
+pub mod cg;
+pub mod graph500;
+pub mod conv;
+pub mod fdtd;
+
+pub use common::{AppCtx, AppId, Regime, RunResult, UmApp, Variant};

@@ -1,0 +1,233 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//!
+//! 1. **Pre-eviction** (related work [3], Ganguly et al. ISCA'19):
+//!    eager background eviction vs. demand eviction.
+//! 2. **Fault-group batch size**: how many 64 KiB pages the driver
+//!    migrates per fault group.
+//! 3. **Prefetch chunk size**: `cudaMemPrefetchAsync` internal split.
+//! 4. **Advise placement** (the paper's §VI future work): sweep advise
+//!    combinations on CG per platform and report the best.
+
+use crate::apps::cg::{AdviseCombo, ConjugateGradient};
+use crate::apps::{AppId, Regime, Variant};
+use crate::platform::PlatformId;
+use crate::um::UmPolicy;
+use crate::util::csvout::Csv;
+use crate::util::table::TextTable;
+use crate::util::units::{Bytes, MIB};
+
+use super::report::Report;
+
+/// 1. Pre-eviction watermark sweep (FDTD3d oversubscribed, Intel-Pascal).
+pub fn ablate_preeviction() -> (TextTable, Csv) {
+    let plat_id = PlatformId::IntelPascal;
+    let mut table = TextTable::new(vec!["watermark", "kernel (ms)", "vs none"])
+        .title("Ablation: pre-eviction watermark (FDTD3d, oversubscribed, Intel-Pascal)")
+        .left(0);
+    let mut csv = Csv::new(vec!["watermark_bytes", "kernel_ms"]);
+    let watermarks: [Bytes; 4] = [0, 64 * MIB, 256 * MIB, 1024 * MIB];
+    let mut base = None;
+    for wm in watermarks {
+        let mut plat = plat_id.spec();
+        plat.um.preevict_watermark = wm;
+        let app = AppId::Fdtd3d.build_for(plat_id, Regime::Oversubscribed);
+        let r = app.run(&plat, Variant::Um, false);
+        let t = r.kernel_time;
+        if base.is_none() {
+            base = Some(t);
+        }
+        let rel = t.0 as f64 / base.unwrap().0 as f64;
+        table.row(vec![
+            crate::util::units::fmt_bytes(wm),
+            format!("{:.1}", t.as_ms()),
+            format!("{rel:.3}x"),
+        ]);
+        csv.row(vec![wm.to_string(), format!("{:.3}", t.as_ms())]);
+    }
+    (table, csv)
+}
+
+/// 2. Fault-group batch-size sweep (BS in-memory, Intel-Pascal).
+pub fn ablate_fault_group() -> (TextTable, Csv) {
+    let plat_id = PlatformId::IntelPascal;
+    let mut table = TextTable::new(vec!["group pages", "kernel (ms)"])
+        .title("Ablation: fault-group batch size (BS, in-memory, Intel-Pascal)")
+        .left(0);
+    let mut csv = Csv::new(vec!["group_pages", "kernel_ms"]);
+    for pages in [2u32, 4, 8, 16, 32] {
+        let mut plat = plat_id.spec();
+        plat.um = UmPolicy { fault_group_pages: pages, ..plat.um };
+        let app = AppId::Bs.build_for(plat_id, Regime::InMemory);
+        let r = app.run(&plat, Variant::Um, false);
+        table.row(vec![pages.to_string(), format!("{:.1}", r.kernel_time.as_ms())]);
+        csv.row(vec![pages.to_string(), format!("{:.3}", r.kernel_time.as_ms())]);
+    }
+    (table, csv)
+}
+
+/// 3. Prefetch chunk-size sweep (BS prefetch, in-memory, Intel-Pascal).
+pub fn ablate_prefetch_chunk() -> (TextTable, Csv) {
+    let plat_id = PlatformId::IntelPascal;
+    let mut table = TextTable::new(vec!["chunk", "wall (ms)"])
+        .title("Ablation: prefetch chunk size (BS, UM Prefetch, in-memory, Intel-Pascal)")
+        .left(0);
+    let mut csv = Csv::new(vec!["chunk_bytes", "wall_ms"]);
+    for chunk in [1u64, 2, 4, 8, 16, 64] {
+        let mut plat = plat_id.spec();
+        plat.um = UmPolicy { prefetch_chunk: chunk * MIB, ..plat.um };
+        let app = AppId::Bs.build_for(plat_id, Regime::InMemory);
+        let r = app.run(&plat, Variant::UmPrefetch, false);
+        // Wall time includes the prefetch; kernel time is downstream.
+        table.row(vec![format!("{chunk} MiB"), format!("{:.1}", r.wall_time.as_ms())]);
+        csv.row(vec![(chunk * MIB).to_string(), format!("{:.3}", r.wall_time.as_ms())]);
+    }
+    (table, csv)
+}
+
+/// 4. Advise-placement sweep on CG (the paper's §VI future work).
+pub fn ablate_advise_placement() -> (TextTable, Csv) {
+    let mut table = TextTable::new(vec!["platform", "combo", "kernel (ms)", "vs none"])
+        .title("Ablation: advise placement on CG, in-memory (paper §VI future work)")
+        .left(0)
+        .left(1);
+    let mut csv = Csv::new(vec!["platform", "combo", "kernel_ms"]);
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let plat = plat_id.spec();
+        let app = ConjugateGradient::for_footprint(Regime::InMemory.footprint(&plat));
+        let mut base = None;
+        for combo in AdviseCombo::ALL {
+            let r = app.run_with_advise_combo(&plat, combo, false);
+            if base.is_none() {
+                base = Some(r.kernel_time);
+            }
+            let rel = r.kernel_time.0 as f64 / base.unwrap().0 as f64;
+            table.row(vec![
+                plat_id.name().to_string(),
+                combo.name().to_string(),
+                format!("{:.1}", r.kernel_time.as_ms()),
+                format!("{rel:.3}x"),
+            ]);
+            csv.row(vec![
+                plat_id.name().to_string(),
+                combo.name().to_string(),
+                format!("{:.3}", r.kernel_time.as_ms()),
+            ]);
+        }
+    }
+    (table, csv)
+}
+
+/// 5. Density-escalation (the [3]-style tree prefetcher ramp) vs the
+///    calibrated fixed batch, across apps on Intel-Pascal in-memory.
+pub fn ablate_density() -> (TextTable, Csv) {
+    let plat_id = PlatformId::IntelPascal;
+    let mut table = TextTable::new(vec!["app", "fixed batch (ms)", "density ramp (ms)", "ramp/fixed"])
+        .title("Ablation: density-escalated migration granule (in-memory, Intel-Pascal, basic UM)")
+        .left(0);
+    let mut csv = Csv::new(vec!["app", "fixed_ms", "ramp_ms"]);
+    for app in [AppId::Bs, AppId::Cg, AppId::Fdtd3d, AppId::Conv1] {
+        let run = |escalate: bool| {
+            let mut plat = plat_id.spec();
+            plat.um.density_escalation = escalate;
+            let a = app.build_for(plat_id, Regime::InMemory);
+            a.run(&plat, Variant::Um, false).kernel_time
+        };
+        let fixed = run(false);
+        let ramp = run(true);
+        table.row(vec![
+            app.name().to_string(),
+            format!("{:.1}", fixed.as_ms()),
+            format!("{:.1}", ramp.as_ms()),
+            format!("{:.3}x", ramp.0 as f64 / fixed.0 as f64),
+        ]);
+        csv.row(vec![
+            app.name().to_string(),
+            format!("{:.3}", fixed.as_ms()),
+            format!("{:.3}", ramp.as_ms()),
+        ]);
+    }
+    (table, csv)
+}
+
+/// 6. ETC-style thrash throttling ([10]) on the paper's P9
+///    oversubscription pathology cells.
+pub fn ablate_etc_throttle() -> (TextTable, Csv) {
+    let plat_id = PlatformId::P9Volta;
+    let mut table = TextTable::new(vec!["app", "advise (ms)", "advise+ETC (ms)", "basic UM (ms)"])
+        .title("Ablation: ETC thrash throttling under P9 oversubscription (UM Advise)")
+        .left(0);
+    let mut csv = Csv::new(vec!["app", "advise_ms", "advise_etc_ms", "um_ms"]);
+    for app in [AppId::Bs, AppId::Fdtd3d] {
+        let run = |variant: Variant, etc: bool| {
+            let mut plat = plat_id.spec();
+            plat.um.etc_throttle = etc;
+            let a = app.build_for(plat_id, Regime::Oversubscribed);
+            a.run(&plat, variant, false).kernel_time
+        };
+        let advise = run(Variant::UmAdvise, false);
+        let advise_etc = run(Variant::UmAdvise, true);
+        let um = run(Variant::Um, false);
+        table.row(vec![
+            app.name().to_string(),
+            format!("{:.1}", advise.as_ms()),
+            format!("{:.1}", advise_etc.as_ms()),
+            format!("{:.1}", um.as_ms()),
+        ]);
+        csv.row(vec![
+            app.name().to_string(),
+            format!("{:.3}", advise.as_ms()),
+            format!("{:.3}", advise_etc.as_ms()),
+            format!("{:.3}", um.as_ms()),
+        ]);
+    }
+    (table, csv)
+}
+
+/// All ablations as one report.
+pub fn ablate_all() -> Report {
+    let mut text = String::new();
+    let mut report = Report::new("ablations", String::new());
+    for (name, (table, csv)) in [
+        ("ablate_preeviction", ablate_preeviction()),
+        ("ablate_fault_group", ablate_fault_group()),
+        ("ablate_prefetch_chunk", ablate_prefetch_chunk()),
+        ("ablate_advise_placement", ablate_advise_placement()),
+        ("ablate_density", ablate_density()),
+        ("ablate_etc_throttle", ablate_etc_throttle()),
+    ] {
+        text.push_str(&table.render());
+        text.push('\n');
+        report = report.with_csv(name, csv);
+    }
+    report.text = text;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preeviction_monotone_not_worse() {
+        let (_, csv) = ablate_preeviction();
+        assert_eq!(csv.n_rows(), 4);
+    }
+
+    #[test]
+    fn fault_group_bigger_batches_help() {
+        let (_, csv) = ablate_fault_group();
+        let text = csv.to_string();
+        let times: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(1).unwrap().parse().unwrap())
+            .collect();
+        assert!(times.first().unwrap() > times.last().unwrap(), "2-page groups slower than 32: {times:?}");
+    }
+
+    #[test]
+    fn advise_sweep_covers_all_combos() {
+        let (_, csv) = ablate_advise_placement();
+        assert_eq!(csv.n_rows(), 2 * AdviseCombo::ALL.len());
+    }
+}

@@ -1,0 +1,348 @@
+//! Table I and Figures 3-8 regeneration (see DESIGN.md §4 for the
+//! experiment index).
+
+use crate::apps::{AppId, Regime, Variant};
+use crate::coordinator::{run_cell, Cell, CellResult, Suite, SuiteConfig};
+use crate::platform::PlatformId;
+use crate::trace::TimeSeries;
+use crate::util::csvout::Csv;
+use crate::util::table::TextTable;
+use crate::util::units::{fmt_bytes, Ns};
+
+use super::report::Report;
+
+fn ms(t: Ns) -> String {
+    format!("{:.1}", t.as_ms())
+}
+
+// ---------------------------------------------------------------------
+// Table I
+// ---------------------------------------------------------------------
+
+/// The paper's published input sizes (GB), for side-by-side comparison.
+/// Rows follow [`AppId::ALL`]; columns: Intel-Pascal in-mem/oversub,
+/// Volta in-mem/oversub ("N/A" = not evaluated).
+const PAPER_SIZES_GB: [(&str, f64, f64, f64, f64); 8] = [
+    ("BS", 4.0, 6.4, 15.2, 26.0),
+    ("cuBLAS", 3.9, 6.3, 15.2, 25.4),
+    ("CG", 3.8, 6.4, 15.4, 25.4),
+    ("Graph500", 3.63, 7.62, 8.52, f64::NAN),
+    ("conv0", 2.8, 6.4, 11.6, 25.6),
+    ("conv1", 3.5, 6.7, 13.6, 25.5),
+    ("conv2", 3.0, 6.4, 11.6, 25.5),
+    ("FDTD3d", 3.8, 6.4, 15.2, 25.3),
+];
+
+/// Table I: applications and input sizes. Ours are derived from the
+/// §III-B 80%/150% rule on *usable* device memory; the paper's column
+/// is reproduced for comparison.
+pub fn table1() -> Report {
+    let mut table = TextTable::new(vec![
+        "App",
+        "Pascal in-mem (ours)",
+        "(paper)",
+        "Pascal oversub (ours)",
+        "(paper)",
+        "Volta in-mem (ours)",
+        "(paper)",
+        "Volta oversub (ours)",
+        "(paper)",
+    ])
+    .title("Table I: applications and input sizes")
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "app",
+        "pascal_inmem_bytes",
+        "pascal_oversub_bytes",
+        "volta_inmem_bytes",
+        "volta_oversub_bytes",
+    ]);
+    for (i, app) in AppId::ALL.iter().enumerate() {
+        let size = |plat: PlatformId, regime: Regime| {
+            app.build_for(plat, regime).footprint()
+        };
+        let p_im = size(PlatformId::IntelPascal, Regime::InMemory);
+        let p_os = size(PlatformId::IntelPascal, Regime::Oversubscribed);
+        let v_im = size(PlatformId::IntelVolta, Regime::InMemory);
+        let v_os = size(PlatformId::IntelVolta, Regime::Oversubscribed);
+        let paper = PAPER_SIZES_GB[i];
+        let gb = |x: f64| if x.is_nan() { "N/A".to_string() } else { format!("{x:.2} GB") };
+        table.row(vec![
+            app.name().to_string(),
+            fmt_bytes(p_im),
+            gb(paper.1),
+            fmt_bytes(p_os),
+            gb(paper.2),
+            fmt_bytes(v_im),
+            gb(paper.3),
+            if app.in_paper_matrix(PlatformId::IntelVolta, Regime::Oversubscribed) {
+                fmt_bytes(v_os)
+            } else {
+                "N/A".to_string()
+            },
+            gb(paper.4),
+        ]);
+        csv.row(vec![
+            app.name().to_string(),
+            p_im.to_string(),
+            p_os.to_string(),
+            v_im.to_string(),
+            v_os.to_string(),
+        ]);
+    }
+    Report::new("table1", table.render()).with_csv("table1", csv)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 / Fig. 6: kernel execution time matrices
+// ---------------------------------------------------------------------
+
+fn exec_time_figure(name: &'static str, regime: Regime, reps: usize) -> Report {
+    let variants: Vec<Variant> = match regime {
+        Regime::InMemory => Variant::ALL.to_vec(),
+        Regime::Oversubscribed => Variant::UM_ONLY.to_vec(),
+    };
+    let config = SuiteConfig {
+        regimes: vec![regime],
+        variants: variants.clone(),
+        reps,
+        ..Default::default()
+    };
+    let suite = Suite::run(&config);
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec!["platform", "app", "variant", "kernel_ms_mean", "kernel_ms_std"]);
+    for platform in PlatformId::ALL {
+        let mut header: Vec<String> = vec!["App".into()];
+        header.extend(variants.iter().map(|v| format!("{} (ms)", v.name())));
+        header.extend(variants.iter().filter(|v| **v != Variant::Um).map(|v| format!("{}/UM", v.name())));
+        let mut table = TextTable::new(header)
+            .title(format!("{name}: GPU kernel execution time, {} — {}", regime.name(), platform.name()))
+            .left(0);
+        for app in AppId::ALL {
+            if !app.in_paper_matrix(platform, regime) {
+                continue;
+            }
+            let mut row = vec![app.name().to_string()];
+            let um_mean = suite
+                .get4(app, platform, Variant::Um, regime)
+                .map(|c| c.kernel_time.mean)
+                .unwrap_or(Ns::ZERO);
+            for &v in &variants {
+                match suite.get4(app, platform, v, regime) {
+                    Some(c) => {
+                        row.push(format!("{} ±{}", ms(c.kernel_time.mean), ms(c.kernel_time.std)));
+                        csv.row(vec![
+                            platform.name().to_string(),
+                            app.name().to_string(),
+                            v.name().to_string(),
+                            format!("{:.3}", c.kernel_time.mean.as_ms()),
+                            format!("{:.3}", c.kernel_time.std.as_ms()),
+                        ]);
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+            for &v in variants.iter().filter(|v| **v != Variant::Um) {
+                match suite.get4(app, platform, v, regime) {
+                    Some(c) if um_mean > Ns::ZERO => {
+                        row.push(format!("{:.2}x", c.kernel_time.mean.0 as f64 / um_mean.0 as f64));
+                    }
+                    _ => row.push("-".into()),
+                }
+            }
+            table.row(row);
+        }
+        text.push_str(&table.render());
+        text.push('\n');
+    }
+    Report::new(name, text).with_csv(name, csv)
+}
+
+/// Fig. 3: in-memory kernel execution times (all apps × 5 variants × 3
+/// platforms).
+pub fn fig3(reps: usize) -> Report {
+    exec_time_figure("fig3", Regime::InMemory, reps)
+}
+
+/// Fig. 6: oversubscription kernel execution times (UM variants only).
+pub fn fig6(reps: usize) -> Report {
+    exec_time_figure("fig6", Regime::Oversubscribed, reps)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4 / Fig. 7: fault + transfer time breakdowns
+// ---------------------------------------------------------------------
+
+fn traced_cell(app: AppId, platform: PlatformId, variant: Variant, regime: Regime) -> CellResult {
+    run_cell(Cell { app, platform, variant, regime }, 1, true)
+}
+
+fn breakdown_figure(
+    name: &'static str,
+    regime: Regime,
+    cases: &[(AppId, PlatformId)],
+) -> Report {
+    let mut table = TextTable::new(vec![
+        "Platform", "App", "Variant", "fault stall (ms)", "HtoD (ms)", "DtoH (ms)", "HtoD (GB)", "DtoH (GB)",
+    ])
+    .title(format!(
+        "{name}: total time handling page faults and data movement ({})",
+        regime.name()
+    ))
+    .left(0)
+    .left(1)
+    .left(2);
+    let mut csv = Csv::new(vec![
+        "platform", "app", "variant", "fault_stall_ms", "h2d_ms", "d2h_ms", "h2d_bytes", "d2h_bytes",
+    ]);
+    for &(app, platform) in cases {
+        for variant in Variant::UM_ONLY {
+            let r = traced_cell(app, platform, variant, regime);
+            let b = r.breakdown;
+            table.row(vec![
+                platform.name().to_string(),
+                app.name().to_string(),
+                variant.name().to_string(),
+                ms(b.fault_stall),
+                ms(b.h2d),
+                ms(b.d2h),
+                format!("{:.2}", b.h2d_bytes as f64 / 1e9),
+                format!("{:.2}", b.d2h_bytes as f64 / 1e9),
+            ]);
+            csv.row(vec![
+                platform.name().to_string(),
+                app.name().to_string(),
+                variant.name().to_string(),
+                format!("{:.3}", b.fault_stall.as_ms()),
+                format!("{:.3}", b.h2d.as_ms()),
+                format!("{:.3}", b.d2h.as_ms()),
+                b.h2d_bytes.to_string(),
+                b.d2h_bytes.to_string(),
+            ]);
+        }
+    }
+    Report::new(name, table.render()).with_csv(name, csv)
+}
+
+/// Fig. 4: in-memory breakdown for BS and CG on Intel-Pascal + P9-Volta.
+pub fn fig4() -> Report {
+    breakdown_figure(
+        "fig4",
+        Regime::InMemory,
+        &[
+            (AppId::Bs, PlatformId::IntelPascal),
+            (AppId::Cg, PlatformId::IntelPascal),
+            (AppId::Bs, PlatformId::P9Volta),
+            (AppId::Cg, PlatformId::P9Volta),
+        ],
+    )
+}
+
+/// Fig. 7: oversubscription breakdown — BS + CG on Intel-Pascal,
+/// BS + FDTD3d on P9-Volta (exactly the paper's four panels).
+pub fn fig7() -> Report {
+    breakdown_figure(
+        "fig7",
+        Regime::Oversubscribed,
+        &[
+            (AppId::Bs, PlatformId::IntelPascal),
+            (AppId::Cg, PlatformId::IntelPascal),
+            (AppId::Bs, PlatformId::P9Volta),
+            (AppId::Fdtd3d, PlatformId::P9Volta),
+        ],
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5 / Fig. 8: UM transfer time series
+// ---------------------------------------------------------------------
+
+fn series_figure(name: &'static str, regime: Regime, cases: &[(AppId, PlatformId)]) -> Report {
+    let mut report_text = String::new();
+    let mut report = Report::new(name, String::new());
+    for &(app, platform) in cases {
+        for variant in Variant::UM_ONLY {
+            let r = traced_cell(app, platform, variant, regime);
+            let trace = r.last.trace.as_ref().expect("traced");
+            let horizon = r.last.wall_time;
+            let bin = Ns((horizon.0 / 100).max(1));
+            let series = TimeSeries::from_trace(trace, bin);
+            let tag = format!(
+                "{name}_{}_{}_{}",
+                platform.name().to_lowercase().replace('-', "_"),
+                app.name().to_lowercase(),
+                variant.name().to_lowercase().replace(' ', "_"),
+            );
+            report_text.push_str(&format!(
+                "{tag}: {} bins of {}, total HtoD {:.2} GB, DtoH {:.2} GB, peak HtoD rate {:.1} GB/s\n",
+                series.n_bins(),
+                bin,
+                series.total_h2d() as f64 / 1e9,
+                series.total_d2h() as f64 / 1e9,
+                series.peak_h2d_rate() / 1e9,
+            ));
+            report = report.with_csv(&tag, series.to_csv());
+        }
+    }
+    report.text = report_text;
+    report
+}
+
+/// Fig. 5: in-memory transfer traces (BS, CG × Intel-Pascal, P9-Volta).
+pub fn fig5() -> Report {
+    series_figure(
+        "fig5",
+        Regime::InMemory,
+        &[
+            (AppId::Bs, PlatformId::IntelPascal),
+            (AppId::Cg, PlatformId::IntelPascal),
+            (AppId::Bs, PlatformId::P9Volta),
+            (AppId::Cg, PlatformId::P9Volta),
+        ],
+    )
+}
+
+/// Fig. 8: oversubscription transfer traces (the paper's four panels).
+pub fn fig8() -> Report {
+    series_figure(
+        "fig8",
+        Regime::Oversubscribed,
+        &[
+            (AppId::Bs, PlatformId::IntelPascal),
+            (AppId::Cg, PlatformId::IntelPascal),
+            (AppId::Bs, PlatformId::P9Volta),
+            (AppId::Fdtd3d, PlatformId::P9Volta),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_apps() {
+        let r = table1();
+        for app in AppId::ALL {
+            assert!(r.text.contains(app.name()), "{}", app.name());
+        }
+        assert_eq!(r.csvs.len(), 1);
+        assert_eq!(r.csvs[0].1.n_rows(), 8);
+    }
+
+    #[test]
+    fn fig4_breakdown_rows() {
+        let r = fig4();
+        assert!(r.text.contains("Intel-Pascal"));
+        assert!(r.text.contains("P9-Volta"));
+        assert_eq!(r.csvs[0].1.n_rows(), 4 * 4); // 4 cases x 4 UM variants
+    }
+
+    #[test]
+    fn fig5_series_csvs() {
+        let r = fig5();
+        assert_eq!(r.csvs.len(), 16); // 4 cases x 4 variants
+        assert!(r.text.contains("total HtoD"));
+    }
+}

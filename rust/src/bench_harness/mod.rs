@@ -1,0 +1,14 @@
+//! Regenerates every table and figure of the paper's evaluation (§IV)
+//! plus the ablations DESIGN.md calls out, as text tables + CSV files.
+//!
+//! Each `figN()` function produces a [`Report`]; `cargo bench` targets
+//! (`rust/benches/*.rs`, `harness = false`) and the `umbra` CLI both
+//! call into these, so the figures are regenerable either way.
+
+pub mod timer;
+pub mod figures;
+pub mod ablate;
+pub mod report;
+
+pub use report::{write_all, Report};
+pub use timer::BenchTimer;

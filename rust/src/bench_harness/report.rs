@@ -1,0 +1,75 @@
+//! Report container + writers (`results/<name>.txt`, `results/csv/*`).
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::csvout::Csv;
+
+/// One regenerated table/figure: human text + named CSV series.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: &'static str,
+    pub text: String,
+    pub csvs: Vec<(String, Csv)>,
+}
+
+impl Report {
+    pub fn new(name: &'static str, text: String) -> Report {
+        Report { name, text, csvs: Vec::new() }
+    }
+
+    pub fn with_csv(mut self, name: &str, csv: Csv) -> Report {
+        self.csvs.push((name.to_string(), csv));
+        self
+    }
+
+    /// Write `<out>/<name>.txt` and `<out>/csv/<csvname>.csv`.
+    pub fn write(&self, out: &Path) -> std::io::Result<()> {
+        fs::create_dir_all(out)?;
+        fs::write(out.join(format!("{}.txt", self.name)), &self.text)?;
+        for (name, csv) in &self.csvs {
+            csv.write(&out.join("csv").join(format!("{name}.csv")))?;
+        }
+        Ok(())
+    }
+}
+
+/// Regenerate everything (Table I + Figs. 3-8 + ablations) into `out`.
+/// `reps` follows the paper's 5-repetition methodology.
+pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
+    use super::{ablate, figures};
+    let mut written = Vec::new();
+    let reports = vec![
+        figures::table1(),
+        figures::fig3(reps),
+        figures::fig4(),
+        figures::fig5(),
+        figures::fig6(reps),
+        figures::fig7(),
+        figures::fig8(),
+        ablate::ablate_all(),
+    ];
+    for r in reports {
+        r.write(out)?;
+        written.push(r.name);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_text_and_csv() {
+        let dir = std::env::temp_dir().join("umbra_report_test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut csv = Csv::new(vec!["a"]);
+        csv.row(vec!["1"]);
+        let r = Report::new("t", "hello\n".into()).with_csv("t_series", csv);
+        r.write(&dir).unwrap();
+        assert_eq!(fs::read_to_string(dir.join("t.txt")).unwrap(), "hello\n");
+        assert!(dir.join("csv/t_series.csv").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal bench timing (criterion is unavailable offline): warmup +
+//! measured iterations, mean/σ/min wall time, criterion-like output.
+
+use std::time::Instant;
+
+use crate::util::stats::Welford;
+
+/// Timing result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchMeasurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchMeasurement {
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<48} {:>14.0} ns/iter (+/- {:.0}) min {:.0} [{} iters]",
+            self.name, self.mean_ns, self.std_ns, self.min_ns, self.iters
+        )
+    }
+}
+
+/// Wall-clock bench driver.
+pub struct BenchTimer {
+    warmup: u32,
+    iters: u32,
+    pub results: Vec<BenchMeasurement>,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        // UMBRA_BENCH_ITERS overrides for quick smoke runs.
+        let iters = std::env::var("UMBRA_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        BenchTimer { warmup: 1, iters, results: Vec::new() }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: u32, iters: u32) -> BenchTimer {
+        assert!(iters >= 1);
+        BenchTimer { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns the mean ns.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut w = Welford::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            w.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = BenchMeasurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: w.mean(),
+            std_ns: w.std(),
+            min_ns: w.min(),
+        };
+        println!("{}", m.line());
+        let mean = m.mean_ns;
+        self.results.push(m);
+        mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut t = BenchTimer::new(0, 3);
+        let mean = t.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(mean > 0.0);
+        assert_eq!(t.results.len(), 1);
+        assert_eq!(t.results[0].iters, 3);
+    }
+
+    #[test]
+    fn line_format_contains_name() {
+        let mut t = BenchTimer::new(0, 1);
+        t.bench("my-bench", || 1 + 1);
+        assert!(t.results[0].line().contains("my-bench"));
+    }
+}

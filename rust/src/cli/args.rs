@@ -1,0 +1,110 @@
+//! Tiny argv parser: `command [positional...] [--flag [value]]...`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().ok_or("missing command")?;
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag".into());
+                }
+                // Value = next token unless it is another flag (then
+                // this is a boolean flag).
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                if args.flags.insert(name.to_string(), value).is_some() {
+                    return Err(format!("duplicate flag --{name}"));
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    /// Required flag, parsed by `f` with a helpful error.
+    pub fn required<T>(&self, name: &str, f: impl Fn(&str) -> Option<T>) -> Result<T, String> {
+        let v = self.flag(name).ok_or(format!("missing required --{name}"))?;
+        f(v).ok_or(format!("--{name}: invalid value '{v}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let a = parse("fig 3 --reps 7 --trace --out results");
+        assert_eq!(a.command, "fig");
+        assert_eq!(a.positional, vec!["3"]);
+        assert_eq!(a.flag_usize("reps", 5).unwrap(), 7);
+        assert!(a.flag_bool("trace"));
+        assert_eq!(a.flag_str("out", "x"), "results");
+        assert_eq!(a.flag_str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse("run --trace --reps 3");
+        assert!(a.flag_bool("trace"));
+        assert_eq!(a.flag_usize("reps", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(
+            "x --a 1 --a 2".split_whitespace().map(String::from).collect()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn missing_command_rejected() {
+        assert!(Args::parse(vec![]).is_err());
+    }
+
+    #[test]
+    fn required_flag() {
+        let a = parse("run --app bs");
+        assert_eq!(a.required("app", |s| Some(s.to_string())).unwrap(), "bs");
+        assert!(a.required("platform", |s| Some(s.to_string())).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Command implementations for the `umbra` binary.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::apps::{AppId, Regime, Variant};
+use crate::bench_harness::{ablate, figures, report::write_all};
+use crate::coordinator::{run_cell, Cell, Suite, SuiteConfig};
+use crate::platform::PlatformId;
+use crate::trace::TimeSeries;
+use crate::util::table::TextTable;
+use crate::util::units::Ns;
+
+use super::args::Args;
+
+pub const USAGE: &str = "\
+umbra — Unified-Memory Behavior Reproduction & Analysis
+
+USAGE:
+  umbra list
+  umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
+  umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N]
+  umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
+  umbra table 1 [--out DIR]
+  umbra ablate [--out DIR]
+  umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
+  umbra validate [--artifacts DIR]
+  umbra report [--reps N] [--out DIR]
+  umbra sweep --param P --values a,b,c --app APP --platform PLAT --variant VAR --regime REG
+       P = fault-group-pages | prefetch-chunk | preevict-watermark |
+           fault-base-us | dup-factor | advised-discount
+
+  APP  = bs|cublas|cg|graph500|conv0|conv1|conv2|fdtd3d
+  PLAT = intel-pascal|intel-volta|p9-volta
+  VAR  = explicit|um|advise|prefetch|both
+  REG  = in-memory|oversub
+";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(args),
+        "suite" => cmd_suite(args),
+        "fig" => cmd_fig(args),
+        "table" => cmd_table(args),
+        "ablate" => cmd_ablate(args),
+        "trace" => cmd_trace(args),
+        "validate" => cmd_validate(args),
+        "report" => cmd_report(args),
+        "sweep" => cmd_sweep(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn parse_cell(args: &Args) -> Result<Cell> {
+    Ok(Cell {
+        app: args.required("app", AppId::parse).map_err(|e| anyhow!(e))?,
+        platform: args.required("platform", PlatformId::parse).map_err(|e| anyhow!(e))?,
+        variant: args.required("variant", Variant::parse).map_err(|e| anyhow!(e))?,
+        regime: args.required("regime", Regime::parse).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn cmd_list() -> Result<()> {
+    let mut t = TextTable::new(vec!["app", "description"]).left(0).left(1);
+    for a in AppId::ALL {
+        t.row(vec![a.name(), a.description()]);
+    }
+    println!("{}", t.render());
+    println!("platforms: {}", PlatformId::ALL.map(|p| p.name()).join(", "));
+    println!("variants:  {}", Variant::ALL.map(|v| v.name()).join(", "));
+    println!("regimes:   in-memory (~80% of GPU mem), oversubscribed (~150%)");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cell = parse_cell(args)?;
+    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let trace = args.flag_bool("trace");
+    let r = run_cell(cell, reps, trace);
+    println!("{}", cell.label());
+    println!(
+        "  kernel time: {} ± {} (n={}, min {}, max {})",
+        r.kernel_time.mean, r.kernel_time.std, r.kernel_time.n, r.kernel_time.min, r.kernel_time.max
+    );
+    println!("  wall time:   {}", r.last.wall_time);
+    let m = &r.last.metrics;
+    println!(
+        "  faults: {} groups / {} pages; migrated h2d {} pages, d2h {} pages",
+        m.gpu_fault_groups, m.gpu_faulted_pages, m.migrated_pages_h2d, m.migrated_pages_d2h
+    );
+    println!(
+        "  evictions: {} chunks ({} B written back, {} B dropped free)",
+        m.evicted_chunks, m.writeback_bytes, m.dropped_bytes
+    );
+    println!(
+        "  remote: gpu->host {} B, cpu->dev {} B; invalidations {} pages",
+        m.remote_bytes_gpu_to_host, m.remote_bytes_cpu_to_dev, m.invalidated_pages
+    );
+    if trace {
+        let b = r.breakdown;
+        println!(
+            "  breakdown: fault stall {}, HtoD {} ({} B), DtoH {} ({} B)",
+            b.fault_stall, b.h2d, b.h2d_bytes, b.d2h, b.d2h_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let config = SuiteConfig {
+        reps,
+        threads: args.flag_usize("threads", 0).map_err(|e| anyhow!(e))?,
+        paper_matrix: !args.flag_bool("full-matrix"),
+        ..Default::default()
+    };
+    let n = config.cells().len();
+    eprintln!("running {n} cells x {reps} reps ...");
+    let suite = Suite::run(&config);
+    for regime in Regime::ALL {
+        for platform in PlatformId::ALL {
+            let mut t = TextTable::new(vec!["app", "variant", "kernel mean", "σ"])
+                .title(format!("{} — {}", platform.name(), regime.name()))
+                .left(0)
+                .left(1);
+            let mut any = false;
+            for app in AppId::ALL {
+                for variant in Variant::ALL {
+                    if let Some(c) = suite.get4(app, platform, variant, regime) {
+                        t.row(vec![
+                            app.name().to_string(),
+                            variant.name().to_string(),
+                            format!("{}", c.kernel_time.mean),
+                            format!("{}", c.kernel_time.std),
+                        ]);
+                        any = true;
+                    }
+                }
+            }
+            if any {
+                println!("{}", t.render());
+            }
+        }
+    }
+    if let Some(out) = args.flag("out") {
+        std::fs::create_dir_all(out)?;
+        let mut csv = crate::util::csvout::Csv::new(vec![
+            "platform", "regime", "app", "variant", "kernel_ms_mean", "kernel_ms_std",
+        ]);
+        let mut cells: Vec<_> = suite.results.iter().collect();
+        cells.sort_by_key(|(c, _)| (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name()));
+        for (cell, r) in cells {
+            csv.row(vec![
+                cell.platform.name().to_string(),
+                cell.regime.name().to_string(),
+                cell.app.name().to_string(),
+                cell.variant.name().to_string(),
+                format!("{:.3}", r.kernel_time.mean.as_ms()),
+                format!("{:.3}", r.kernel_time.std.as_ms()),
+            ]);
+        }
+        csv.write(&Path::new(out).join("csv/suite.csv"))?;
+        eprintln!("wrote {out}/csv/suite.csv");
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("fig: which figure? (3-8)"))?
+        .as_str();
+    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let report = match which {
+        "3" => figures::fig3(reps),
+        "4" => figures::fig4(),
+        "5" => figures::fig5(),
+        "6" => figures::fig6(reps),
+        "7" => figures::fig7(),
+        "8" => figures::fig8(),
+        other => bail!("no figure '{other}' in the paper (3-8)"),
+    };
+    println!("{}", report.text);
+    if let Some(out) = args.flag("out") {
+        report.write(Path::new(out))?;
+        eprintln!("wrote {out}/{}.txt (+{} csv)", report.name, report.csvs.len());
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("1") | None => {
+            let report = figures::table1();
+            println!("{}", report.text);
+            if let Some(out) = args.flag("out") {
+                report.write(Path::new(out))?;
+            }
+            Ok(())
+        }
+        Some(other) => bail!("no table '{other}' in the paper (only 1)"),
+    }
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let report = ablate::ablate_all();
+    println!("{}", report.text);
+    if let Some(out) = args.flag("out") {
+        report.write(Path::new(out))?;
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cell = parse_cell(args)?;
+    let r = run_cell(cell, 1, true);
+    let trace = r.last.trace.as_ref().expect("trace enabled");
+    let bin = Ns((r.last.wall_time.0 / 100).max(1));
+    let series = TimeSeries::from_trace(trace, bin);
+    println!("{} — {} events", cell.label(), trace.len());
+    println!(
+        "HtoD {:.3} GB, DtoH {:.3} GB, peak rate {:.1} GB/s, fault stall {}",
+        series.total_h2d() as f64 / 1e9,
+        series.total_d2h() as f64 / 1e9,
+        series.peak_h2d_rate() / 1e9,
+        r.breakdown.fault_stall,
+    );
+    if let Some(out) = args.flag("out") {
+        let name = cell.label().replace('/', "_").replace(' ', "_");
+        let path = Path::new(out).join("csv").join(format!("trace_{name}.csv"));
+        series.to_csv().write(&path)?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args.flag_str("artifacts", "artifacts");
+    let rt = crate::runtime::PjrtRuntime::open(Path::new(dir))?;
+    println!("PJRT platform: {}", rt.platform());
+    let reports = crate::runtime::validate_all(&rt)?;
+    let mut t = TextTable::new(vec!["artifact", "max |err|", "checks"]).left(0).left(2);
+    for r in &reports {
+        t.row(vec![r.model.to_string(), format!("{:.2e}", r.max_abs_err), r.checks.join("; ")]);
+    }
+    println!("{}", t.render());
+    println!("all {} artifacts validated against Rust references", reports.len());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let out = args.flag_str("out", "results");
+    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    eprintln!("regenerating all tables/figures into {out}/ (reps={reps}) ...");
+    let written = write_all(Path::new(out), reps)?;
+    println!("wrote: {}", written.join(", "));
+    Ok(())
+}
+
+/// Sweep one UM policy parameter over explicit values for one
+/// benchmark cell — the generic version of the built-in ablations.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cell = parse_cell(args)?;
+    let param = args.required("param", |s| Some(s.to_string())).map_err(|e| anyhow!(e))?;
+    let values: Vec<f64> = args
+        .required("values", |s| {
+            s.split(',').map(|v| v.trim().parse::<f64>().ok()).collect::<Option<Vec<_>>>()
+        })
+        .map_err(|e| anyhow!(e))?;
+    if values.is_empty() {
+        bail!("--values: need at least one value");
+    }
+    let mut t = TextTable::new(vec![param.as_str(), "kernel (ms)", "vs first"]).left(0);
+    let mut csv = crate::util::csvout::Csv::new(vec![param.as_str(), "kernel_ms"]);
+    let mut base: Option<f64> = None;
+    for &v in &values {
+        let mut plat = cell.platform.spec();
+        apply_param(&mut plat.um, &param, v)?;
+        let app = cell.app.build_for(cell.platform, cell.regime);
+        let r = app.run(&plat, cell.variant, false);
+        let ms = r.kernel_time.as_ms();
+        let b = *base.get_or_insert(ms);
+        t.row(vec![format!("{v}"), format!("{ms:.2}"), format!("{:.3}x", ms / b)]);
+        csv.row(vec![format!("{v}"), format!("{ms:.3}")]);
+    }
+    println!("{}", t.render());
+    if let Some(out) = args.flag("out") {
+        let name = format!("sweep_{}_{}", param, cell.label().replace('/', "_").replace(' ', "_"));
+        csv.write(&Path::new(out).join("csv").join(format!("{name}.csv")))?;
+    }
+    Ok(())
+}
+
+fn apply_param(um: &mut crate::um::UmPolicy, param: &str, v: f64) -> Result<()> {
+    use crate::util::units::MIB;
+    match param {
+        "fault-group-pages" => um.fault_group_pages = v as u32,
+        "prefetch-chunk" => um.prefetch_chunk = (v as u64) * MIB,
+        "preevict-watermark" => um.preevict_watermark = (v as u64) * MIB,
+        "fault-base-us" => um.fault_group_base = Ns::from_us(v),
+        "dup-factor" => um.dup_fault_factor = v,
+        "advised-discount" => um.advised_fault_discount = v,
+        other => bail!("unknown sweep parameter '{other}'"),
+    }
+    um.validate().map_err(|e| anyhow!("invalid policy after sweep: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn list_runs() {
+        dispatch(&args("list")).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(dispatch(&args("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn run_requires_cell_flags() {
+        assert!(dispatch(&args("run --app bs")).is_err());
+    }
+
+    #[test]
+    fn bad_figure_number() {
+        assert!(dispatch(&args("fig 9")).is_err());
+        assert!(dispatch(&args("table 2")).is_err());
+    }
+
+    #[test]
+    fn sweep_runs_small() {
+        dispatch(&args(
+            "sweep --param fault-group-pages --values 8,32 --app conv0 --platform pascal --variant um --regime in-memory",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_param() {
+        assert!(dispatch(&args(
+            "sweep --param bogus --values 1 --app bs --platform pascal --variant um --regime in-memory",
+        ))
+        .is_err());
+        assert!(dispatch(&args(
+            "sweep --param dup-factor --values 0.5 --app bs --platform pascal --variant um --regime in-memory",
+        ))
+        .is_err(), "policy validation catches dup_factor < 1");
+    }
+
+    #[test]
+    fn parse_cell_happy_path() {
+        let c = parse_cell(&args(
+            "run --app fdtd3d --platform p9 --variant both --regime oversub",
+        ))
+        .unwrap();
+        assert_eq!(c.app, AppId::Fdtd3d);
+        assert_eq!(c.platform, PlatformId::P9Volta);
+        assert_eq!(c.variant, Variant::UmBoth);
+        assert_eq!(c.regime, Regime::Oversubscribed);
+    }
+}

@@ -1,0 +1,37 @@
+//! Hand-rolled CLI (clap is unavailable offline; see DESIGN.md §2).
+//!
+//! ```text
+//! umbra list
+//! umbra run --app bs --platform p9 --variant advise --regime oversub [--reps 5] [--trace]
+//! umbra suite [--reps N] [--out DIR] [--full-matrix]
+//! umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
+//! umbra table 1 [--out DIR]
+//! umbra ablate [--out DIR]
+//! umbra trace --app bs --platform p9 --variant um --regime oversub [--out DIR]
+//! umbra validate [--artifacts DIR]
+//! umbra report [--reps N] [--out DIR]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! One benchmark cell: (app, platform, variant, regime) × repetitions.
+
+use crate::apps::{AppId, Regime, RunResult, Variant};
+use crate::platform::PlatformId;
+use crate::trace::Breakdown;
+use crate::util::stats::Summary;
+use crate::util::units::Ns;
+
+/// A point in the benchmark matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Cell {
+    pub app: AppId,
+    pub platform: PlatformId,
+    pub variant: Variant,
+    pub regime: Regime,
+}
+
+impl Cell {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.platform.name(),
+            self.app.name(),
+            self.variant.name(),
+            self.regime.name()
+        )
+    }
+}
+
+/// Aggregated result of one cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: Cell,
+    /// Mean/σ of total GPU kernel execution time across repetitions.
+    pub kernel_time: Summary,
+    /// Mean/σ of per-launch kernel time (Graph500's figure of merit).
+    pub per_launch: Summary,
+    pub breakdown: Breakdown,
+    /// The last repetition's full result (trace lives here if enabled).
+    pub last: RunResult,
+}
+
+/// Run one cell `reps` times (simulation is deterministic, but the
+/// repetition machinery mirrors the paper's methodology and exercises
+/// run-state reset; seeded apps may vary per rep in future ablations).
+pub fn run_cell(cell: Cell, reps: usize, trace: bool) -> CellResult {
+    assert!(reps >= 1);
+    let plat = cell.platform.spec();
+    let app = cell.app.build_for(cell.platform, cell.regime);
+    let mut totals = Vec::with_capacity(reps);
+    let mut launches: Vec<Ns> = Vec::new();
+    let mut last: Option<RunResult> = None;
+    for rep in 0..reps {
+        // Trace only the final repetition (traces are large).
+        let want_trace = trace && rep == reps - 1;
+        let r = app.run(&plat, cell.variant, want_trace);
+        totals.push(r.kernel_time);
+        launches.extend(r.kernel_times.iter().copied());
+        last = Some(r);
+    }
+    let last = last.expect("reps >= 1");
+    CellResult {
+        cell,
+        kernel_time: Summary::of(&totals),
+        per_launch: Summary::of(&launches),
+        breakdown: last.breakdown,
+        last,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> Cell {
+        Cell {
+            app: AppId::Bs,
+            platform: PlatformId::IntelPascal,
+            variant: Variant::Um,
+            regime: Regime::InMemory,
+        }
+    }
+
+    #[test]
+    fn runs_and_aggregates() {
+        let r = run_cell(cell(), 3, false);
+        assert_eq!(r.kernel_time.n, 3);
+        assert!(r.kernel_time.mean > Ns::ZERO);
+        // Deterministic simulation: zero variance across reps.
+        assert_eq!(r.kernel_time.std, Ns::ZERO);
+        assert!(r.last.trace.is_none());
+    }
+
+    #[test]
+    fn trace_only_on_last_rep() {
+        let r = run_cell(cell(), 2, true);
+        let trace = r.last.trace.as_ref().expect("trace enabled");
+        assert!(!trace.is_empty());
+        assert!(r.breakdown.h2d > Ns::ZERO);
+    }
+
+    #[test]
+    fn label_format() {
+        assert_eq!(cell().label(), "Intel-Pascal/BS/UM/in-memory");
+    }
+}

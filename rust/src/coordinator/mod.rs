@@ -1,0 +1,11 @@
+//! Suite coordinator: runs the (app x variant x platform x regime)
+//! benchmark matrix with repetitions, aggregates mean/stddev (the
+//! paper's §III-B methodology: up to five runs, mean + stddev of GPU
+//! kernel execution time), and parallelizes independent cells over a
+//! thread pool.
+
+pub mod driver;
+pub mod suite;
+
+pub use driver::{run_cell, Cell, CellResult};
+pub use suite::{Suite, SuiteConfig};

@@ -1,0 +1,167 @@
+//! The full benchmark matrix, run in parallel over a thread pool.
+
+use std::collections::HashMap;
+
+use crate::apps::{AppId, Regime, Variant};
+use crate::platform::PlatformId;
+use crate::util::pool::Pool;
+
+use super::driver::{run_cell, Cell, CellResult};
+
+/// What to run.
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    pub apps: Vec<AppId>,
+    pub platforms: Vec<PlatformId>,
+    pub variants: Vec<Variant>,
+    pub regimes: Vec<Regime>,
+    /// Repetitions per cell (the paper uses up to 5).
+    pub reps: usize,
+    /// Record traces (memory-heavy; needed for Figs. 4/5/7/8).
+    pub trace: bool,
+    /// Worker threads (0 = one per core, capped).
+    pub threads: usize,
+    /// Restrict to the paper's evaluation matrix (drops Graph500
+    /// oversubscription off Intel-Pascal, Explicit under oversub).
+    pub paper_matrix: bool,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            apps: AppId::ALL.to_vec(),
+            platforms: PlatformId::ALL.to_vec(),
+            variants: Variant::ALL.to_vec(),
+            regimes: Regime::ALL.to_vec(),
+            reps: 5,
+            trace: false,
+            threads: 0,
+            paper_matrix: true,
+        }
+    }
+}
+
+impl SuiteConfig {
+    /// Materialize the cell list.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut cells = Vec::new();
+        for &platform in &self.platforms {
+            for &regime in &self.regimes {
+                for &app in &self.apps {
+                    for &variant in &self.variants {
+                        if self.paper_matrix {
+                            if !app.in_paper_matrix(platform, regime) {
+                                continue;
+                            }
+                            // §IV-B: no explicit baseline when the data
+                            // cannot fit in device memory.
+                            if regime == Regime::Oversubscribed && variant == Variant::Explicit {
+                                continue;
+                            }
+                        }
+                        cells.push(Cell { app, platform, variant, regime });
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// Results store.
+#[derive(Debug, Default)]
+pub struct Suite {
+    pub results: HashMap<Cell, CellResult>,
+}
+
+impl Suite {
+    /// Run the configured matrix; independent cells execute in parallel.
+    pub fn run(config: &SuiteConfig) -> Suite {
+        let cells = config.cells();
+        let reps = config.reps;
+        let trace = config.trace;
+        let pool = if config.threads == 0 {
+            Pool::with_default_size(16)
+        } else {
+            Pool::new(config.threads)
+        };
+        let results = pool.map(cells, move |cell| (cell, run_cell(cell, reps, trace)));
+        Suite { results: results.into_iter().collect() }
+    }
+
+    pub fn get(&self, cell: &Cell) -> Option<&CellResult> {
+        self.results.get(cell)
+    }
+
+    pub fn get4(
+        &self,
+        app: AppId,
+        platform: PlatformId,
+        variant: Variant,
+        regime: Regime,
+    ) -> Option<&CellResult> {
+        self.get(&Cell { app, platform, variant, regime })
+    }
+
+    /// Speedup of `variant` relative to basic UM (>1 = faster).
+    pub fn speedup_vs_um(
+        &self,
+        app: AppId,
+        platform: PlatformId,
+        variant: Variant,
+        regime: Regime,
+    ) -> Option<f64> {
+        let um = self.get4(app, platform, Variant::Um, regime)?;
+        let v = self.get4(app, platform, variant, regime)?;
+        Some(um.kernel_time.mean.0 as f64 / v.kernel_time.mean.0 as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_matrix_excludes_invalid_cells() {
+        let config = SuiteConfig::default();
+        let cells = config.cells();
+        assert!(!cells.iter().any(|c| {
+            c.app == AppId::Graph500
+                && c.regime == Regime::Oversubscribed
+                && c.platform != PlatformId::IntelPascal
+        }));
+        assert!(!cells
+            .iter()
+            .any(|c| c.regime == Regime::Oversubscribed && c.variant == Variant::Explicit));
+        // in-memory keeps all five variants
+        assert!(cells
+            .iter()
+            .any(|c| c.regime == Regime::InMemory && c.variant == Variant::Explicit));
+    }
+
+    #[test]
+    fn full_matrix_size() {
+        let config = SuiteConfig { paper_matrix: false, ..Default::default() };
+        assert_eq!(config.cells().len(), 8 * 3 * 5 * 2);
+    }
+
+    #[test]
+    fn small_suite_runs_in_parallel() {
+        let config = SuiteConfig {
+            apps: vec![AppId::Bs, AppId::Cg],
+            platforms: vec![PlatformId::IntelPascal],
+            variants: vec![Variant::Um, Variant::UmPrefetch],
+            regimes: vec![Regime::InMemory],
+            reps: 2,
+            trace: false,
+            threads: 2,
+            paper_matrix: true,
+        };
+        let suite = Suite::run(&config);
+        assert_eq!(suite.results.len(), 4);
+        let s = suite
+            .speedup_vs_um(AppId::Bs, PlatformId::IntelPascal, Variant::UmPrefetch, Regime::InMemory)
+            .unwrap();
+        assert!(s > 1.0, "prefetch speedup {s}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Phased kernel model and its execution against the UM runtime.
+
+use crate::mem::{AllocId, PageRange};
+use crate::trace::TraceKind;
+use crate::um::{AccessOutcome, UmRuntime};
+use crate::util::units::{transfer_ns, Bytes, Ns};
+
+/// How a phase touches a range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+    ReadWrite,
+}
+
+impl AccessKind {
+    pub fn writes(self) -> bool {
+        matches!(self, AccessKind::Write | AccessKind::ReadWrite)
+    }
+}
+
+/// One range touched by a phase.
+#[derive(Clone, Debug)]
+pub struct Access {
+    pub alloc: AllocId,
+    pub range: PageRange,
+    pub kind: AccessKind,
+    /// How many times the phase streams over the range from DRAM's
+    /// point of view (tiled reuse < 1.0 means cache-resident re-use;
+    /// > 1.0 means the range is re-read, e.g. matmul panels).
+    pub dram_passes: f64,
+}
+
+impl Access {
+    pub fn read(alloc: AllocId, range: PageRange) -> Access {
+        Access { alloc, range, kind: AccessKind::Read, dram_passes: 1.0 }
+    }
+    pub fn write(alloc: AllocId, range: PageRange) -> Access {
+        Access { alloc, range, kind: AccessKind::Write, dram_passes: 1.0 }
+    }
+    pub fn rw(alloc: AllocId, range: PageRange) -> Access {
+        Access { alloc, range, kind: AccessKind::ReadWrite, dram_passes: 1.0 }
+    }
+    pub fn with_passes(mut self, passes: f64) -> Access {
+        self.dram_passes = passes;
+        self
+    }
+}
+
+/// One phase of a kernel: a set of touched ranges plus arithmetic work.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub name: &'static str,
+    pub accesses: Vec<Access>,
+    /// Floating-point operations performed by the phase.
+    pub flops: f64,
+}
+
+/// A kernel: named sequence of phases.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub name: &'static str,
+    pub phases: Vec<Phase>,
+}
+
+/// Outcome of executing one phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseResult {
+    pub compute: Ns,
+    pub stall: Ns,
+    pub remote_tax: Ns,
+    pub end: Ns,
+}
+
+/// Kernel executor bound to a UM runtime.
+pub struct KernelExec;
+
+impl KernelExec {
+    /// Execute `spec` starting at `now`; returns (end-time, per-phase
+    /// results). The paper's "GPU kernel execution time" is
+    /// `end - now`.
+    pub fn run(um: &mut UmRuntime, spec: &KernelSpec, now: Ns) -> (Ns, Vec<PhaseResult>) {
+        let start = now;
+        let mut t = now;
+        let mut results = Vec::with_capacity(spec.phases.len());
+        for phase in &spec.phases {
+            let r = Self::run_phase(um, phase, t);
+            t = r.end;
+            results.push(r);
+        }
+        um.trace.record(TraceKind::Kernel, start, t, 0, None, spec.name);
+        (t, results)
+    }
+
+    fn run_phase(um: &mut UmRuntime, phase: &Phase, now: Ns) -> PhaseResult {
+        // 1. Resolve data: faults, migrations, remote mappings. The
+        //    phase cannot do useful work until its data is available
+        //    (massively-parallel kernels stall globally on fault storms;
+        //    paper §II-A).
+        let mut data_ready = now;
+        let mut stall = Ns::ZERO;
+        let mut remote_bytes: Bytes = 0;
+        let mut local_bytes: f64 = 0.0;
+        for a in &phase.accesses {
+            let out: AccessOutcome = um.gpu_access(a.alloc, a.range, a.kind.writes(), data_ready);
+            data_ready = data_ready.max(out.done);
+            stall += out.fault_stall + out.transfer_wait;
+            remote_bytes += (out.remote_bytes as f64 * a.dram_passes) as Bytes;
+            let bytes = a.range.bytes() as f64 * a.dram_passes;
+            let rw_factor = if a.kind == AccessKind::ReadWrite { 2.0 } else { 1.0 };
+            local_bytes += bytes * rw_factor;
+        }
+
+        // 2. Compute: roofline of FLOPs vs local DRAM traffic.
+        let gpu = um.plat.gpu;
+        let flop_time = transfer_ns(phase.flops as u64, gpu.flops_f32);
+        let mem_time = transfer_ns(local_bytes as u64, gpu.mem_bw);
+        let compute = flop_time.max(mem_time);
+
+        // 3. Remote tax: bytes served over the link *during* execution
+        //    (zero-copy / ATS) at remote bandwidth, not overlappable
+        //    with itself but partially with compute; we charge the
+        //    non-overlapped remainder.
+        let remote_time = transfer_ns(remote_bytes, um.plat.link.remote_bw);
+        let remote_tax = remote_time.saturating_sub(compute.scale(0.3));
+
+        let end = data_ready + compute + remote_tax;
+        PhaseResult { compute, stall, remote_tax, end }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, intel_volta};
+    use crate::um::{Loc, UmRuntime};
+    use crate::util::units::{Ns, MIB};
+
+    fn setup(size: u64) -> (UmRuntime, AllocId, PageRange) {
+        let mut um = UmRuntime::new(&intel_pascal());
+        let id = um.malloc_managed("x", size);
+        let full = um.space.get(id).full();
+        um.host_access(id, full, true, Ns::ZERO);
+        (um, id, full)
+    }
+
+    fn simple_kernel(id: AllocId, full: PageRange, flops: f64) -> KernelSpec {
+        KernelSpec {
+            name: "k",
+            phases: vec![Phase { name: "p", accesses: vec![Access::read(id, full)], flops }],
+        }
+    }
+
+    #[test]
+    fn um_kernel_slower_than_resident_kernel() {
+        let (mut um, id, full) = setup(64 * MIB);
+        let spec = simple_kernel(id, full, 1e9);
+        let (end_cold, _) = KernelExec::run(&mut um, &spec, Ns::ZERO);
+        // Second run: data resident, no faults.
+        let (end_warm, r) = KernelExec::run(&mut um, &spec, end_cold);
+        let warm = end_warm - end_cold;
+        assert!(end_cold.0 > 3 * warm.0, "cold {end_cold} vs warm {warm}");
+        assert_eq!(r[0].stall, Ns::ZERO);
+    }
+
+    #[test]
+    fn prefetched_kernel_matches_warm_kernel() {
+        let (mut um, id, full) = setup(64 * MIB);
+        let t = um.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let spec = simple_kernel(id, full, 1e9);
+        let (end, r) = KernelExec::run(&mut um, &spec, t);
+        assert_eq!(r[0].stall, Ns::ZERO, "no faults after prefetch");
+        let (end2, _) = KernelExec::run(&mut um, &spec, end);
+        let warm = end2 - end;
+        assert_eq!(end - t, warm, "prefetched == warm");
+    }
+
+    #[test]
+    fn compute_bound_phase_ignores_memory() {
+        let (mut um, id, full) = setup(MIB);
+        um.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        // Enormous FLOPs on tiny data: compute dominates.
+        let spec = simple_kernel(id, full, 1e12);
+        let (_, r) = KernelExec::run(&mut um, &spec, Ns::from_secs(1.0));
+        let expected = Ns::from_secs(1e12 / intel_pascal().gpu.flops_f32);
+        let got = r[0].compute;
+        assert!((got.0 as f64 / expected.0 as f64 - 1.0).abs() < 0.01, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn memory_bound_phase_uses_bandwidth() {
+        let (mut um, id, full) = setup(256 * MIB);
+        um.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let spec = simple_kernel(id, full, 1.0); // negligible flops
+        let (_, r) = KernelExec::run(&mut um, &spec, Ns::from_secs(1.0));
+        let expected = Ns::from_secs(256.0 * MIB as f64 / intel_pascal().gpu.mem_bw);
+        let got = r[0].compute;
+        assert!((got.0 as f64 / expected.0 as f64 - 1.0).abs() < 0.01, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn dram_passes_scale_memory_time() {
+        let (mut um, id, full) = setup(64 * MIB);
+        um.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let mk = |passes| KernelSpec {
+            name: "k",
+            phases: vec![Phase {
+                name: "p",
+                accesses: vec![Access::read(id, full).with_passes(passes)],
+                flops: 1.0,
+            }],
+        };
+        let (_, r1) = KernelExec::run(&mut um, &mk(1.0), Ns::from_secs(1.0));
+        let (_, r4) = KernelExec::run(&mut um, &mk(4.0), Ns::from_secs(2.0));
+        let ratio = r4[0].compute.0 as f64 / r1[0].compute.0 as f64;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn faster_gpu_smaller_compute_time() {
+        let mut um_p = UmRuntime::new(&intel_pascal());
+        let mut um_v = UmRuntime::new(&intel_volta());
+        let mut times = Vec::new();
+        for um in [&mut um_p, &mut um_v] {
+            let id = um.malloc_managed("x", MIB);
+            let full = um.space.get(id).full();
+            um.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+            let spec = KernelSpec {
+                name: "k",
+                phases: vec![Phase { name: "p", accesses: vec![Access::read(id, full)], flops: 1e12 }],
+            };
+            let (_, r) = KernelExec::run(um, &spec, Ns::from_secs(1.0));
+            times.push(r[0].compute);
+        }
+        assert!(times[0] > times[1] * 5, "Pascal {} vs Volta {}", times[0], times[1]);
+    }
+
+    #[test]
+    fn kernel_trace_recorded() {
+        let (mut um, id, full) = setup(MIB);
+        um.enable_trace();
+        let spec = simple_kernel(id, full, 1e6);
+        KernelExec::run(&mut um, &spec, Ns::ZERO);
+        assert_eq!(um.trace.of_kind(TraceKind::Kernel).count(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! GPU kernel execution model.
+//!
+//! A kernel is a sequence of [`Phase`]s; each phase declares the ranges
+//! it touches (read/write) and its arithmetic work. Execution resolves
+//! every touched range through the UM runtime (faults, migrations,
+//! remote mappings — or nothing, for the explicit-copy variant), then
+//! charges compute time from a roofline model plus a remote-access
+//! bandwidth tax. The resulting *GPU kernel execution time* is the
+//! paper's figure of merit.
+
+pub mod kernel;
+pub mod stream;
+
+pub use kernel::{Access, AccessKind, KernelExec, KernelSpec, Phase, PhaseResult};
+pub use stream::StreamSet;

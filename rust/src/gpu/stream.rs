@@ -1,0 +1,98 @@
+//! CUDA streams: per-stream clocks with synchronization primitives.
+//!
+//! The benchmark variants use two streams the way the paper does
+//! (§III-A3): prefetches of inputs run on a *background* stream while
+//! the kernel launches on the *default* stream; result prefetches run on
+//! the default stream (ordered after the kernel).
+
+use crate::sim::Clock;
+use crate::util::units::Ns;
+
+/// Stream identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamId {
+    Default,
+    Background,
+}
+
+/// A pair of stream clocks plus device-wide synchronization.
+#[derive(Clone, Debug, Default)]
+pub struct StreamSet {
+    default: Clock,
+    background: Clock,
+}
+
+impl StreamSet {
+    pub fn new() -> StreamSet {
+        StreamSet::default()
+    }
+
+    pub fn now(&self, s: StreamId) -> Ns {
+        match s {
+            StreamId::Default => self.default.now(),
+            StreamId::Background => self.background.now(),
+        }
+    }
+
+    pub fn advance_to(&mut self, s: StreamId, t: Ns) {
+        match s {
+            StreamId::Default => self.default.advance_to(t),
+            StreamId::Background => self.background.advance_to(t),
+        };
+    }
+
+    /// `cudaStreamSynchronize`: host waits for the stream; returns its
+    /// current completion time.
+    pub fn sync(&self, s: StreamId) -> Ns {
+        self.now(s)
+    }
+
+    /// `cudaDeviceSynchronize`: all streams drain.
+    pub fn device_sync(&mut self) -> Ns {
+        let t = self.default.now().max(self.background.now());
+        self.default.advance_to(t);
+        self.background.advance_to(t);
+        t
+    }
+
+    /// Make `dst` wait for `src` (cudaStreamWaitEvent).
+    pub fn wait(&mut self, dst: StreamId, src: StreamId) {
+        let t = self.now(src);
+        self.advance_to(dst, t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_advance_independently() {
+        let mut s = StreamSet::new();
+        s.advance_to(StreamId::Background, Ns(100));
+        assert_eq!(s.now(StreamId::Default), Ns(0));
+        assert_eq!(s.now(StreamId::Background), Ns(100));
+    }
+
+    #[test]
+    fn device_sync_joins() {
+        let mut s = StreamSet::new();
+        s.advance_to(StreamId::Background, Ns(100));
+        s.advance_to(StreamId::Default, Ns(40));
+        let t = s.device_sync();
+        assert_eq!(t, Ns(100));
+        assert_eq!(s.now(StreamId::Default), Ns(100));
+    }
+
+    #[test]
+    fn wait_event_ordering() {
+        let mut s = StreamSet::new();
+        s.advance_to(StreamId::Background, Ns(70));
+        s.wait(StreamId::Default, StreamId::Background);
+        assert_eq!(s.now(StreamId::Default), Ns(70));
+        // waiting on an earlier stream is a no-op
+        s.advance_to(StreamId::Default, Ns(90));
+        s.wait(StreamId::Default, StreamId::Background);
+        assert_eq!(s.now(StreamId::Default), Ns(90));
+    }
+}

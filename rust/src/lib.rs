@@ -1,0 +1,50 @@
+//! # umbra — Unified-Memory Behavior Reproduction & Analysis
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Performance Evaluation of Advanced Features in CUDA Unified Memory"*
+//! (Chien, Peng, Markidis — MCHPC 2019).
+//!
+//! The paper evaluates CUDA Unified Memory's *memory advises*,
+//! *asynchronous prefetch* and *GPU memory oversubscription* with a suite
+//! of six applications on three platforms. Since no NVIDIA hardware is
+//! available, this crate implements the entire substrate:
+//!
+//! * [`mem`] — pages, page table, managed allocator, device residency,
+//!   interconnect models (PCIe 3.0 x16, NVLink 2.0).
+//! * [`um`] — the Unified Memory runtime simulator: page faults and fault
+//!   groups, on-demand migration with density-based chunk escalation, the
+//!   three `cudaMemAdvise` hints, `cudaMemPrefetchAsync`, LRU eviction
+//!   under oversubscription, and ATS/NVLink remote mapping.
+//! * [`gpu`] — a phased GPU kernel execution model (compute vs. memory
+//!   stalls) and CUDA-stream ordering.
+//! * [`platform`] — calibrated parameter sets for the paper's three
+//!   testbeds (Intel-Pascal, Intel-Volta, P9-Volta).
+//! * [`apps`] — the six benchmark applications (Black-Scholes, MatMul,
+//!   CG, Graph500 BFS, three FFT convolutions, FDTD3d), each in the five
+//!   memory-management variants of the paper.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX+Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); real numerics at reduced shape.
+//! * [`trace`] — nvprof-like Unified Memory event tracing (the data
+//!   behind the paper's Figs. 4, 5, 7, 8).
+//! * [`coordinator`] — suite runner: repetition, statistics, thread-pooled
+//!   execution over the app × variant × platform matrix.
+//! * [`bench_harness`] — regenerates every table and figure of the paper.
+//!
+//! See `DESIGN.md` for the full inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod sim;
+pub mod mem;
+pub mod um;
+pub mod gpu;
+pub mod platform;
+pub mod apps;
+pub mod trace;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

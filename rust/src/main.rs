@@ -1,0 +1,9 @@
+//! `umbra` — CLI of the Unified-Memory reproduction (leader entrypoint).
+//!
+//! See `umbra help` or README.md for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() { vec!["help".to_string()] } else { argv };
+    std::process::exit(umbra::cli::run(argv));
+}

@@ -1,0 +1,171 @@
+//! Managed virtual-address space: `cudaMallocManaged` /
+//! `cudaMalloc` / host allocations, each backed by a [`PageTable`].
+//!
+//! UM uses 49-bit virtual addressing to cover both host and device
+//! memory (§II-A of the paper); we reserve VA ranges from a 49-bit
+//! cursor so allocation addresses are realistic and non-overlapping.
+
+use super::page::{PAGE_SIZE};
+use super::table::{PageRange, PageTable};
+use crate::util::units::Bytes;
+
+/// Identifies one allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocId(pub u32);
+
+/// How the allocation was made — determines which mechanisms apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    /// `cudaMallocManaged`: migratable, advisable, prefetchable.
+    Managed,
+    /// `cudaMalloc`: device-only (explicit-copy app variant).
+    Device,
+    /// `malloc`/pageable host memory (explicit-copy app variant).
+    Host,
+}
+
+/// One allocation.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub id: AllocId,
+    pub name: String,
+    pub kind: AllocKind,
+    /// Virtual base address (49-bit space).
+    pub va_base: u64,
+    /// Requested size in bytes.
+    pub size: Bytes,
+    /// Page table (page-granular state); present for Managed only.
+    pub pages: PageTable,
+}
+
+impl Allocation {
+    pub fn n_pages(&self) -> u32 {
+        self.pages.len()
+    }
+    /// Page range covering `offset..offset+len` clamped to the allocation.
+    pub fn range(&self, offset: Bytes, len: Bytes) -> PageRange {
+        self.pages.clamp(PageRange::covering(offset, len))
+    }
+    pub fn full(&self) -> PageRange {
+        self.pages.full()
+    }
+}
+
+/// The process's managed VA space: allocation registry.
+#[derive(Clone, Debug, Default)]
+pub struct ManagedSpace {
+    allocs: Vec<Allocation>,
+    va_cursor: u64,
+}
+
+/// 49-bit VA space as in UM (§II-A).
+const VA_BITS: u32 = 49;
+const VA_BASE: u64 = 0x1000_0000; // skip low addresses, cosmetic
+
+impl ManagedSpace {
+    pub fn new() -> ManagedSpace {
+        ManagedSpace { allocs: Vec::new(), va_cursor: VA_BASE }
+    }
+
+    /// Allocate `size` bytes of `kind` memory named `name`.
+    pub fn alloc(&mut self, name: &str, size: Bytes, kind: AllocKind) -> AllocId {
+        assert!(size > 0, "zero-size allocation '{name}'");
+        let n_pages = size.div_ceil(PAGE_SIZE);
+        assert!(n_pages <= u32::MAX as u64, "allocation '{name}' too large");
+        let id = AllocId(self.allocs.len() as u32);
+        let va_base = self.va_cursor;
+        let reserved = n_pages * PAGE_SIZE;
+        self.va_cursor += reserved;
+        assert!(self.va_cursor < 1u64 << VA_BITS, "49-bit VA space exhausted");
+        self.allocs.push(Allocation {
+            id,
+            name: name.to_string(),
+            kind,
+            va_base,
+            size,
+            pages: PageTable::new(n_pages as u32),
+        });
+        id
+    }
+
+    pub fn get(&self, id: AllocId) -> &Allocation {
+        &self.allocs[id.0 as usize]
+    }
+    pub fn get_mut(&mut self, id: AllocId) -> &mut Allocation {
+        &mut self.allocs[id.0 as usize]
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &Allocation> {
+        self.allocs.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.allocs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.allocs.is_empty()
+    }
+
+    /// Total managed bytes (the app's UM footprint).
+    pub fn managed_bytes(&self) -> Bytes {
+        self.allocs.iter().filter(|a| a.kind == AllocKind::Managed).map(|a| a.size).sum()
+    }
+
+    /// Look an allocation up by name (used by tests and trace rendering).
+    pub fn by_name(&self, name: &str) -> Option<&Allocation> {
+        self.allocs.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GIB, MIB};
+
+    #[test]
+    fn alloc_assigns_disjoint_va() {
+        let mut s = ManagedSpace::new();
+        let a = s.alloc("a", 3 * MIB, AllocKind::Managed);
+        let b = s.alloc("b", 5 * MIB, AllocKind::Managed);
+        let (aa, bb) = (s.get(a), s.get(b));
+        assert!(aa.va_base + aa.size <= bb.va_base);
+        assert_eq!(aa.n_pages(), 48); // 3 MiB / 64 KiB
+        assert_eq!(bb.n_pages(), 80);
+    }
+
+    #[test]
+    fn partial_page_rounds_up() {
+        let mut s = ManagedSpace::new();
+        let a = s.alloc("odd", PAGE_SIZE + 1, AllocKind::Managed);
+        assert_eq!(s.get(a).n_pages(), 2);
+    }
+
+    #[test]
+    fn managed_bytes_excludes_device_allocs() {
+        let mut s = ManagedSpace::new();
+        s.alloc("m", 2 * GIB, AllocKind::Managed);
+        s.alloc("d", GIB, AllocKind::Device);
+        s.alloc("h", GIB, AllocKind::Host);
+        assert_eq!(s.managed_bytes(), 2 * GIB);
+    }
+
+    #[test]
+    fn by_name_finds() {
+        let mut s = ManagedSpace::new();
+        s.alloc("input", MIB, AllocKind::Managed);
+        assert!(s.by_name("input").is_some());
+        assert!(s.by_name("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-size")]
+    fn zero_size_rejected() {
+        ManagedSpace::new().alloc("z", 0, AllocKind::Managed);
+    }
+
+    #[test]
+    fn range_clamped_to_alloc() {
+        let mut s = ManagedSpace::new();
+        let a = s.alloc("a", MIB, AllocKind::Managed); // 16 pages
+        let r = s.get(a).range(0, 100 * MIB);
+        assert_eq!(r.len(), 16);
+    }
+}

@@ -1,0 +1,436 @@
+//! Device-memory accounting and the LRU structures eviction uses.
+//!
+//! The CUDA driver evicts at 2 MiB granularity with an LRU policy
+//! (Sakharnykh, GTC'17; paper §II-D). We track residency *bytes*
+//! page-accurately in `um::runtime`, and keep an LRU index over
+//! (allocation, 2 MiB chunk) pairs here.
+//!
+//! ## Data-structure notes (§Perf)
+//!
+//! Two lazy min-heaps — one for evictable chunks, one for pinned
+//! (`PreferredLocation(Gpu)`) chunks — plus per-chunk stamps. Touching
+//! pushes a fresh stamped entry; stale entries are discarded at pop
+//! time. Keeping pinned chunks out of the evictable heap is essential:
+//! the first implementation used a single heap and skipped pinned
+//! entries on every pop, which made pinned-heavy oversubscription
+//! workloads (the paper's P9 pathology cases!) quadratic — see
+//! EXPERIMENTS.md §Perf for the before/after.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::alloc::AllocId;
+use crate::util::units::{Bytes, Ns};
+
+/// One 2 MiB eviction granule of an allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkRef {
+    pub alloc: AllocId,
+    pub chunk: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ChunkMeta {
+    last_touch: Ns,
+    /// Monotone sequence number to break timestamp ties FIFO.
+    seq: u64,
+    resident_bytes: Bytes,
+    pinned: bool,
+    /// `cudaMalloc` backing: never evictable, even forced.
+    locked: bool,
+}
+
+type HeapEntry = Reverse<(Ns, u64, ChunkRef)>;
+
+/// Device memory: capacity, used bytes, and the chunk LRU.
+#[derive(Clone, Debug)]
+pub struct DeviceMemory {
+    capacity: Bytes,
+    used: Bytes,
+    chunks: FxHashMap<ChunkRef, ChunkMeta>,
+    /// LRU heap over evictable (non-pinned, non-locked) chunks.
+    lru: BinaryHeap<HeapEntry>,
+    /// LRU heap over pinned chunks (used only for forced eviction).
+    lru_pinned: BinaryHeap<HeapEntry>,
+    seq: u64,
+    /// Resident chunks that are evictable without force.
+    evictable: usize,
+    /// Resident pinned (not locked) chunks.
+    pinned_chunks: usize,
+    /// Eviction statistics.
+    pub evictions: u64,
+    pub forced_pinned_evictions: u64,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: Bytes) -> DeviceMemory {
+        DeviceMemory {
+            capacity,
+            used: 0,
+            chunks: FxHashMap::default(),
+            lru: BinaryHeap::new(),
+            lru_pinned: BinaryHeap::new(),
+            seq: 0,
+            evictable: 0,
+            pinned_chunks: 0,
+            evictions: 0,
+            forced_pinned_evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> Bytes {
+        self.capacity
+    }
+    pub fn used(&self) -> Bytes {
+        self.used
+    }
+    pub fn free(&self) -> Bytes {
+        self.capacity - self.used
+    }
+    pub fn resident_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    fn push_entry(&mut self, chunk: ChunkRef, t: Ns, seq: u64, pinned: bool) {
+        let entry = Reverse((t, seq, chunk));
+        if pinned {
+            self.lru_pinned.push(entry);
+        } else {
+            self.lru.push(entry);
+        }
+    }
+
+    /// Record `bytes` of a chunk becoming resident (touch it too).
+    pub fn add_resident(&mut self, chunk: ChunkRef, bytes: Bytes, now: Ns) {
+        assert!(bytes > 0);
+        assert!(
+            self.used + bytes <= self.capacity,
+            "device overcommit: used={} + {} > cap={}",
+            self.used,
+            bytes,
+            self.capacity
+        );
+        self.used += bytes;
+        self.seq += 1;
+        let seq = self.seq;
+        let mut fresh = false;
+        let meta = self.chunks.entry(chunk).or_insert_with(|| {
+            fresh = true;
+            ChunkMeta { last_touch: now, seq, resident_bytes: 0, pinned: false, locked: false }
+        });
+        meta.resident_bytes += bytes;
+        meta.last_touch = now;
+        meta.seq = seq;
+        let pinned = meta.pinned;
+        let locked = meta.locked;
+        if fresh {
+            if pinned {
+                self.pinned_chunks += 1;
+            } else if !locked {
+                self.evictable += 1;
+            }
+        }
+        if !locked {
+            self.push_entry(chunk, now, seq, pinned);
+        }
+    }
+
+    /// Record `bytes` of a chunk leaving the device.
+    pub fn remove_resident(&mut self, chunk: ChunkRef, bytes: Bytes) {
+        let meta = self.chunks.get_mut(&chunk).expect("chunk resident");
+        assert!(meta.resident_bytes >= bytes, "removing more than resident");
+        meta.resident_bytes -= bytes;
+        self.used -= bytes;
+        if meta.resident_bytes == 0 {
+            let (pinned, locked) = (meta.pinned, meta.locked);
+            self.chunks.remove(&chunk);
+            if pinned {
+                self.pinned_chunks -= 1;
+            } else if !locked {
+                self.evictable -= 1;
+            }
+        }
+    }
+
+    /// Refresh a chunk's LRU position (on GPU access).
+    pub fn touch(&mut self, chunk: ChunkRef, now: Ns) {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(meta) = self.chunks.get_mut(&chunk) {
+            meta.last_touch = now;
+            meta.seq = seq;
+            let (pinned, locked) = (meta.pinned, meta.locked);
+            if !locked {
+                self.push_entry(chunk, now, seq, pinned);
+            }
+        }
+    }
+
+    /// Mark/unmark a chunk as pinned (PreferredLocation=GPU). Pinned
+    /// chunks are skipped by [`DeviceMemory::pop_lru`] unless `forced`.
+    pub fn set_pinned(&mut self, chunk: ChunkRef, pinned: bool) {
+        if let Some(meta) = self.chunks.get_mut(&chunk) {
+            if meta.pinned == pinned || meta.locked {
+                return;
+            }
+            meta.pinned = pinned;
+            let (t, seq) = (meta.last_touch, meta.seq);
+            if pinned {
+                self.evictable -= 1;
+                self.pinned_chunks += 1;
+            } else {
+                self.pinned_chunks -= 1;
+                self.evictable += 1;
+            }
+            // The entry in the old heap is now in the wrong heap; pops
+            // cross-check `meta.pinned` and discard it. Provide a valid
+            // entry in the right heap.
+            self.push_entry(chunk, t, seq, pinned);
+        }
+    }
+
+    /// Mark a chunk as `cudaMalloc` backing: excluded from eviction
+    /// entirely (forced or not).
+    pub fn set_locked(&mut self, chunk: ChunkRef, locked: bool) {
+        if let Some(meta) = self.chunks.get_mut(&chunk) {
+            if meta.locked == locked {
+                return;
+            }
+            debug_assert!(!meta.pinned, "locked chunks are not advise-pinned");
+            meta.locked = locked;
+            let (t, seq) = (meta.last_touch, meta.seq);
+            if locked {
+                self.evictable -= 1;
+            } else {
+                self.evictable += 1;
+                self.push_entry(chunk, t, seq, false);
+            }
+        }
+    }
+
+    pub fn is_resident(&self, chunk: ChunkRef) -> bool {
+        self.chunks.contains_key(&chunk)
+    }
+
+    pub fn resident_bytes_of(&self, chunk: ChunkRef) -> Bytes {
+        self.chunks.get(&chunk).map(|m| m.resident_bytes).unwrap_or(0)
+    }
+
+    /// Pop the least-recently-used chunk from one heap, discarding
+    /// stale entries. `want_pinned` selects the heap and the
+    /// cross-check.
+    fn pop_heap(&mut self, want_pinned: bool) -> Option<(ChunkRef, Bytes)> {
+        loop {
+            let entry = if want_pinned { self.lru_pinned.pop() } else { self.lru.pop() };
+            let Reverse((t, seq, chunk)) = entry?;
+            let Some(meta) = self.chunks.get(&chunk) else {
+                continue; // fully evicted already
+            };
+            if meta.seq != seq || meta.last_touch != t {
+                continue; // superseded by a later touch
+            }
+            if meta.pinned != want_pinned || meta.locked {
+                continue; // migrated to the other heap / locked
+            }
+            return Some((chunk, meta.resident_bytes));
+        }
+    }
+
+    /// Pop the least-recently-used resident chunk. With `forced ==
+    /// false` only evictable (unpinned) chunks are candidates; with
+    /// `forced == true` pinned chunks become eligible once no evictable
+    /// chunk remains — the driver's last-resort behaviour that produces
+    /// thrashing on P9 (§IV-B). Returns the chunk and its resident byte
+    /// count; the caller performs the page-state transitions and calls
+    /// `remove_resident`.
+    pub fn pop_lru(&mut self, forced: bool) -> Option<(ChunkRef, Bytes)> {
+        if let Some(hit) = self.pop_heap(false) {
+            self.evictions += 1;
+            return Some(hit);
+        }
+        if forced {
+            if let Some(hit) = self.pop_heap(true) {
+                self.evictions += 1;
+                self.forced_pinned_evictions += 1;
+                return Some(hit);
+            }
+        }
+        None
+    }
+
+    /// Whether every *evictable* (non-locked) resident chunk is pinned —
+    /// then eviction must force pinned chunks out (thrash). O(1).
+    pub fn only_pinned_left(&self) -> bool {
+        self.evictable == 0 && self.pinned_chunks > 0
+    }
+
+    pub fn reset(&mut self) {
+        self.used = 0;
+        self.chunks.clear();
+        self.lru.clear();
+        self.lru_pinned.clear();
+        self.seq = 0;
+        self.evictable = 0;
+        self.pinned_chunks = 0;
+        self.evictions = 0;
+        self.forced_pinned_evictions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    fn cr(a: u32, c: u32) -> ChunkRef {
+        ChunkRef { alloc: AllocId(a), chunk: c }
+    }
+
+    #[test]
+    fn accounting_add_remove() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+        d.add_resident(cr(0, 1), 2 * MIB, Ns(2));
+        assert_eq!(d.used(), 4 * MIB);
+        assert_eq!(d.free(), 4 * MIB);
+        d.remove_resident(cr(0, 0), 2 * MIB);
+        assert_eq!(d.used(), 2 * MIB);
+        assert!(!d.is_resident(cr(0, 0)));
+        assert!(d.is_resident(cr(0, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "device overcommit")]
+    fn overcommit_panics() {
+        let mut d = DeviceMemory::new(MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+    }
+
+    #[test]
+    fn lru_pops_oldest_first() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.add_resident(cr(0, 1), 2 * MIB, Ns(20));
+        d.add_resident(cr(0, 2), 2 * MIB, Ns(30));
+        let (c, b) = d.pop_lru(false).unwrap();
+        assert_eq!(c, cr(0, 0));
+        assert_eq!(b, 2 * MIB);
+    }
+
+    #[test]
+    fn touch_refreshes_lru_position() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.add_resident(cr(0, 1), 2 * MIB, Ns(20));
+        d.touch(cr(0, 0), Ns(99)); // now chunk 1 is the LRU
+        let (c, _) = d.pop_lru(false).unwrap();
+        assert_eq!(c, cr(0, 1));
+    }
+
+    #[test]
+    fn pinned_skipped_unless_forced() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.add_resident(cr(0, 1), 2 * MIB, Ns(20));
+        d.set_pinned(cr(0, 0), true);
+        let (c, _) = d.pop_lru(false).unwrap();
+        assert_eq!(c, cr(0, 1), "pinned chunk skipped");
+        // Only the pinned chunk remains.
+        d.remove_resident(cr(0, 1), 2 * MIB);
+        assert!(d.only_pinned_left());
+        assert!(d.pop_lru(false).is_none(), "non-forced pop finds nothing");
+        let (c, _) = d.pop_lru(true).unwrap();
+        assert_eq!(c, cr(0, 0));
+        assert_eq!(d.forced_pinned_evictions, 1);
+    }
+
+    #[test]
+    fn unpin_returns_to_evictable_heap() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.set_pinned(cr(0, 0), true);
+        assert!(d.pop_lru(false).is_none());
+        d.set_pinned(cr(0, 0), false);
+        assert!(!d.only_pinned_left());
+        let (c, _) = d.pop_lru(false).unwrap();
+        assert_eq!(c, cr(0, 0));
+    }
+
+    #[test]
+    fn locked_never_evicted() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.set_locked(cr(0, 0), true);
+        assert!(d.pop_lru(false).is_none());
+        assert!(d.pop_lru(true).is_none(), "forced eviction spares cudaMalloc memory");
+        assert!(!d.only_pinned_left(), "locked chunks don't count as pinned");
+    }
+
+    #[test]
+    fn stale_heap_entries_skipped() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.touch(cr(0, 0), Ns(20));
+        d.touch(cr(0, 0), Ns(30));
+        // Heap has 3 entries; only the newest is valid.
+        let (c, _) = d.pop_lru(false).unwrap();
+        assert_eq!(c, cr(0, 0));
+        d.remove_resident(cr(0, 0), 2 * MIB);
+        assert!(d.pop_lru(false).is_none());
+    }
+
+    #[test]
+    fn partial_chunk_residency() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), MIB / 2, Ns(1)); // 8 pages of 64K
+        d.add_resident(cr(0, 0), MIB / 2, Ns(2));
+        assert_eq!(d.resident_bytes_of(cr(0, 0)), MIB);
+        d.remove_resident(cr(0, 0), MIB / 4);
+        assert_eq!(d.resident_bytes_of(cr(0, 0)), 3 * MIB / 4);
+        assert!(d.is_resident(cr(0, 0)));
+    }
+
+    #[test]
+    fn pinned_count_tracks_partial_eviction() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+        d.set_pinned(cr(0, 0), true);
+        d.remove_resident(cr(0, 0), MIB);
+        assert!(d.only_pinned_left(), "still partially resident and pinned");
+        d.remove_resident(cr(0, 0), MIB);
+        assert!(!d.only_pinned_left(), "fully gone");
+    }
+
+    #[test]
+    fn many_pinned_chunks_pop_stays_fast() {
+        // Regression guard for the quadratic pinned-skip behaviour:
+        // popping with thousands of pinned chunks must not rescan them.
+        let mut d = DeviceMemory::new(1 << 34);
+        for i in 0..4000 {
+            d.add_resident(cr(0, i), 2 * MIB, Ns(i as u64));
+            d.set_pinned(cr(0, i), true);
+        }
+        d.add_resident(cr(1, 0), 2 * MIB, Ns(99999));
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            let (c, _) = d.pop_lru(false).unwrap();
+            assert_eq!(c, cr(1, 0));
+            d.touch(cr(1, 0), Ns(100000)); // keep it poppable
+        }
+        assert!(t0.elapsed().as_millis() < 500, "pop_lru slow: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+        d.pop_lru(false);
+        d.reset();
+        assert_eq!(d.used(), 0);
+        assert_eq!(d.evictions, 0);
+        assert_eq!(d.resident_chunks(), 0);
+        assert!(!d.only_pinned_left());
+    }
+}

@@ -1,0 +1,21 @@
+//! Memory substrate: pages, page tables, the managed-VA allocator,
+//! device-memory residency (with the LRU structures eviction needs), and
+//! interconnect models.
+//!
+//! Granularities follow the CUDA UM driver on Pascal/Volta:
+//! * **Page** — 64 KiB, the basic migration unit ("64K basic block" in
+//!   Sakharnykh's GTC'17 UM talks).
+//! * **Eviction chunk** — 2 MiB (32 pages), the driver's large-page /
+//!   eviction granule and the ceiling of density-prefetch escalation.
+
+pub mod page;
+pub mod table;
+pub mod alloc;
+pub mod device;
+pub mod interconnect;
+
+pub use alloc::{AllocId, AllocKind, Allocation, ManagedSpace};
+pub use device::{ChunkRef, DeviceMemory};
+pub use interconnect::{Link, TransferMode};
+pub use page::{AdviseFlags, PageFlags, PageState, Residency, EVICT_CHUNK_BYTES, PAGES_PER_CHUNK, PAGE_SIZE};
+pub use table::{PageRange, PageTable};

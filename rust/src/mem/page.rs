@@ -1,0 +1,189 @@
+//! Per-page state: residency, dirty/mapping flags and advise bits.
+//!
+//! The state machine mirrors §II of the paper:
+//!
+//! ```text
+//!   Unmapped ──first CPU touch──▶ Host ──GPU fault──▶ Device
+//!      │                            │                    │
+//!      └─first GPU touch───▶ Device │◀──CPU fault────────┘
+//!                                   │
+//!   Host ──GPU read fault, ReadMostly──▶ Both (read-only duplicate)
+//!   Both ──any write──▶ collapses to the writer's side (invalidation)
+//! ```
+
+use crate::util::units::{Bytes, KIB, MIB};
+
+/// UM basic migration granularity (64 KiB).
+pub const PAGE_SIZE: Bytes = 64 * KIB;
+/// Driver eviction / max-escalation granule (2 MiB).
+pub const EVICT_CHUNK_BYTES: Bytes = 2 * MIB;
+/// Pages per eviction chunk.
+pub const PAGES_PER_CHUNK: u32 = (EVICT_CHUNK_BYTES / PAGE_SIZE) as u32;
+
+/// Where the valid copies of a page live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Residency {
+    /// Never touched: no physical backing yet (first touch populates).
+    #[default]
+    Unmapped = 0,
+    /// Single valid copy in host memory.
+    Host = 1,
+    /// Single valid copy in device memory.
+    Device = 2,
+    /// Read-only duplicates on both sides (`cudaMemAdviseSetReadMostly`).
+    Both = 3,
+}
+
+impl Residency {
+    pub fn on_device(self) -> bool {
+        matches!(self, Residency::Device | Residency::Both)
+    }
+    pub fn on_host(self) -> bool {
+        matches!(self, Residency::Host | Residency::Both)
+    }
+}
+
+/// Dynamic page flags.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageFlags(pub u8);
+
+impl PageFlags {
+    /// Device copy differs from any host copy (writeback needed on evict).
+    pub const DIRTY: u8 = 1 << 0;
+    /// A remote mapping from the CPU into this (device-resident) page
+    /// exists (`AccessedBy` on ATS-capable platforms).
+    pub const CPU_MAPPED: u8 = 1 << 1;
+    /// A remote mapping from the GPU into this (host-resident) page
+    /// exists (zero-copy over PCIe / NVLink).
+    pub const GPU_MAPPED: u8 = 1 << 2;
+    /// Page was populated at least once (distinguishes cold first touch).
+    pub const POPULATED: u8 = 1 << 3;
+
+    pub fn get(self, bit: u8) -> bool {
+        self.0 & bit != 0
+    }
+    pub fn set(&mut self, bit: u8, v: bool) {
+        if v {
+            self.0 |= bit;
+        } else {
+            self.0 &= !bit;
+        }
+    }
+}
+
+/// Advise bits (applied per page; `cudaMemAdvise` takes ranges).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdviseFlags(pub u8);
+
+impl AdviseFlags {
+    pub const READ_MOSTLY: u8 = 1 << 0;
+    pub const PREF_GPU: u8 = 1 << 1;
+    pub const PREF_HOST: u8 = 1 << 2;
+    pub const ACCESSED_BY_CPU: u8 = 1 << 3;
+    pub const ACCESSED_BY_GPU: u8 = 1 << 4;
+
+    pub fn get(self, bit: u8) -> bool {
+        self.0 & bit != 0
+    }
+    pub fn set(&mut self, bit: u8, v: bool) {
+        if v {
+            self.0 |= bit;
+        } else {
+            self.0 &= !bit;
+        }
+    }
+    pub fn read_mostly(self) -> bool {
+        self.get(Self::READ_MOSTLY)
+    }
+    pub fn preferred_gpu(self) -> bool {
+        self.get(Self::PREF_GPU)
+    }
+    pub fn preferred_host(self) -> bool {
+        self.get(Self::PREF_HOST)
+    }
+}
+
+/// Complete per-page state (kept small: millions of pages per run).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageState {
+    pub residency: Residency,
+    pub flags: PageFlags,
+    pub advise: AdviseFlags,
+}
+
+impl PageState {
+    /// Would evicting this page's device copy require a writeback?
+    /// Dirty pages obviously do; so do *clean* pages whose only valid
+    /// copy is the device one (residency == Device and never duplicated),
+    /// because dropping them would lose data. `Both` pages can always be
+    /// dropped for free — the host copy stays valid. This asymmetry is
+    /// the mechanism behind the paper's Intel-vs-P9 oversubscription
+    /// result (§IV-B).
+    pub fn evict_needs_writeback(&self) -> bool {
+        match self.residency {
+            Residency::Both => false,
+            Residency::Device => true,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn granularities_consistent() {
+        assert_eq!(PAGE_SIZE, 65_536);
+        assert_eq!(EVICT_CHUNK_BYTES, 2 * 1024 * 1024);
+        assert_eq!(PAGES_PER_CHUNK, 32);
+        assert_eq!(PAGES_PER_CHUNK as u64 * PAGE_SIZE, EVICT_CHUNK_BYTES);
+    }
+
+    #[test]
+    fn residency_predicates() {
+        assert!(Residency::Device.on_device());
+        assert!(Residency::Both.on_device());
+        assert!(Residency::Both.on_host());
+        assert!(!Residency::Host.on_device());
+        assert!(!Residency::Unmapped.on_host());
+    }
+
+    #[test]
+    fn flags_set_get() {
+        let mut f = PageFlags::default();
+        assert!(!f.get(PageFlags::DIRTY));
+        f.set(PageFlags::DIRTY, true);
+        f.set(PageFlags::CPU_MAPPED, true);
+        assert!(f.get(PageFlags::DIRTY));
+        assert!(f.get(PageFlags::CPU_MAPPED));
+        f.set(PageFlags::DIRTY, false);
+        assert!(!f.get(PageFlags::DIRTY));
+        assert!(f.get(PageFlags::CPU_MAPPED)); // untouched
+    }
+
+    #[test]
+    fn advise_set_get() {
+        let mut a = AdviseFlags::default();
+        a.set(AdviseFlags::READ_MOSTLY, true);
+        a.set(AdviseFlags::PREF_GPU, true);
+        assert!(a.read_mostly());
+        assert!(a.preferred_gpu());
+        assert!(!a.preferred_host());
+    }
+
+    #[test]
+    fn writeback_rule_matches_paper_mechanism() {
+        // Duplicated (ReadMostly) page: free drop.
+        let dup = PageState { residency: Residency::Both, ..Default::default() };
+        assert!(!dup.evict_needs_writeback());
+        // Device-only page (e.g., initialized directly on GPU via ATS on
+        // P9): must be written back even if never dirtied by the GPU.
+        let dev = PageState { residency: Residency::Device, ..Default::default() };
+        assert!(dev.evict_needs_writeback());
+        // Host-resident pages are not on the device at all.
+        let host = PageState { residency: Residency::Host, ..Default::default() };
+        assert!(!host.evict_needs_writeback());
+    }
+}

@@ -1,0 +1,190 @@
+//! Per-allocation page table with run iteration.
+//!
+//! Fault batching and migration chunking both operate on *contiguous
+//! runs* of pages in the same state, so the central operation here is
+//! [`PageTable::runs`]: split a page range into maximal runs that share
+//! a classification.
+
+use super::page::{PageState, PAGE_SIZE};
+use crate::util::units::Bytes;
+
+/// A half-open page index range `[start, end)` within one allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageRange {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl PageRange {
+    pub fn new(start: u32, end: u32) -> PageRange {
+        assert!(start <= end, "bad page range {start}..{end}");
+        PageRange { start, end }
+    }
+    pub fn len(&self) -> u32 {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+    pub fn bytes(&self) -> Bytes {
+        self.len() as Bytes * PAGE_SIZE
+    }
+    /// Convert a byte range (offset, len) to the covering page range.
+    pub fn covering(offset: Bytes, len: Bytes) -> PageRange {
+        if len == 0 {
+            let p = (offset / PAGE_SIZE) as u32;
+            return PageRange::new(p, p);
+        }
+        let start = (offset / PAGE_SIZE) as u32;
+        let end = ((offset + len - 1) / PAGE_SIZE + 1) as u32;
+        PageRange::new(start, end)
+    }
+    pub fn iter(&self) -> impl Iterator<Item = u32> {
+        self.start..self.end
+    }
+}
+
+/// Page table of one managed allocation.
+#[derive(Clone, Debug)]
+pub struct PageTable {
+    pages: Vec<PageState>,
+}
+
+impl PageTable {
+    pub fn new(n_pages: u32) -> PageTable {
+        PageTable { pages: vec![PageState::default(); n_pages as usize] }
+    }
+
+    pub fn len(&self) -> u32 {
+        self.pages.len() as u32
+    }
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    pub fn get(&self, idx: u32) -> &PageState {
+        &self.pages[idx as usize]
+    }
+    pub fn get_mut(&mut self, idx: u32) -> &mut PageState {
+        &mut self.pages[idx as usize]
+    }
+
+    /// Clamp a range to the table size.
+    pub fn clamp(&self, r: PageRange) -> PageRange {
+        PageRange::new(r.start.min(self.len()), r.end.min(self.len()))
+    }
+
+    /// The whole allocation as a range.
+    pub fn full(&self) -> PageRange {
+        PageRange::new(0, self.len())
+    }
+
+    /// Split `range` into maximal runs with equal `classify` values,
+    /// yielding `(run, class)` pairs in order.
+    pub fn runs<C: PartialEq + Copy>(
+        &self,
+        range: PageRange,
+        mut classify: impl FnMut(&PageState) -> C,
+    ) -> Vec<(PageRange, C)> {
+        let range = self.clamp(range);
+        let mut out = Vec::new();
+        if range.is_empty() {
+            return out;
+        }
+        let mut run_start = range.start;
+        let mut run_class = classify(self.get(range.start));
+        for i in range.start + 1..range.end {
+            let c = classify(self.get(i));
+            if c != run_class {
+                out.push((PageRange::new(run_start, i), run_class));
+                run_start = i;
+                run_class = c;
+            }
+        }
+        out.push((PageRange::new(run_start, range.end), run_class));
+        out
+    }
+
+    /// Apply `f` to every page in `range`.
+    pub fn update(&mut self, range: PageRange, mut f: impl FnMut(&mut PageState)) {
+        let range = self.clamp(range);
+        for i in range.iter() {
+            f(&mut self.pages[i as usize]);
+        }
+    }
+
+    /// Count pages in `range` matching `pred`.
+    pub fn count(&self, range: PageRange, mut pred: impl FnMut(&PageState) -> bool) -> u32 {
+        let range = self.clamp(range);
+        range.iter().filter(|&i| pred(self.get(i))).count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::page::Residency;
+
+    #[test]
+    fn covering_byte_ranges() {
+        // exactly one page
+        assert_eq!(PageRange::covering(0, PAGE_SIZE), PageRange::new(0, 1));
+        // one byte into the second page
+        assert_eq!(PageRange::covering(PAGE_SIZE, 1), PageRange::new(1, 2));
+        // straddles two pages
+        assert_eq!(PageRange::covering(PAGE_SIZE - 1, 2), PageRange::new(0, 2));
+        // empty
+        assert_eq!(PageRange::covering(128, 0).len(), 0);
+    }
+
+    #[test]
+    fn runs_split_on_class_change() {
+        let mut t = PageTable::new(8);
+        for i in 3..6 {
+            t.get_mut(i).residency = Residency::Device;
+        }
+        let runs = t.runs(t.full(), |p| p.residency);
+        assert_eq!(
+            runs,
+            vec![
+                (PageRange::new(0, 3), Residency::Unmapped),
+                (PageRange::new(3, 6), Residency::Device),
+                (PageRange::new(6, 8), Residency::Unmapped),
+            ]
+        );
+    }
+
+    #[test]
+    fn runs_single_class() {
+        let t = PageTable::new(4);
+        let runs = t.runs(t.full(), |p| p.residency);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].0.len(), 4);
+    }
+
+    #[test]
+    fn runs_empty_range() {
+        let t = PageTable::new(4);
+        assert!(t.runs(PageRange::new(2, 2), |p| p.residency).is_empty());
+    }
+
+    #[test]
+    fn clamp_out_of_bounds() {
+        let t = PageTable::new(4);
+        let r = t.clamp(PageRange::new(2, 100));
+        assert_eq!(r, PageRange::new(2, 4));
+    }
+
+    #[test]
+    fn update_and_count() {
+        let mut t = PageTable::new(10);
+        t.update(PageRange::new(2, 7), |p| p.residency = Residency::Host);
+        assert_eq!(t.count(t.full(), |p| p.residency == Residency::Host), 5);
+        assert_eq!(t.count(PageRange::new(0, 2), |p| p.residency == Residency::Host), 0);
+    }
+
+    #[test]
+    fn range_bytes() {
+        assert_eq!(PageRange::new(0, 32).bytes(), 2 * 1024 * 1024);
+    }
+}

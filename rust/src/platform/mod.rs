@@ -1,0 +1,227 @@
+//! The paper's three test platforms as parameter sets (§III-B).
+//!
+//! | | CPU | GPU | GPU mem | link |
+//! |---|---|---|---|---|
+//! | Intel-Pascal | i7-7820X, 32 GB | GTX 1050 Ti | 4 GB | PCIe 3.0 |
+//! | Intel-Volta | Xeon 6132, 192 GB | Tesla V100 | 16 GB | PCIe 3.0 |
+//! | P9-Volta | Power9, 256 GB | Tesla V100 | 16 GB | NVLink 2.0 |
+//!
+//! Calibration provenance is documented per constant in [`calibration`].
+
+pub mod calibration;
+
+use crate::mem::interconnect::Link;
+use crate::um::policy::UmPolicy;
+use crate::util::units::{Bytes, GIB};
+
+/// GPU compute/memory capability.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Physical device memory.
+    pub mem_capacity: Bytes,
+    /// Device memory reserved by the CUDA context/runtime (not usable
+    /// for UM data). Oversubscription thresholds use usable capacity.
+    pub reserved: Bytes,
+    /// Peak FP32 throughput, FLOP/s.
+    pub flops_f32: f64,
+    /// Device memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Streaming multiprocessors (scales fault parallelism effects).
+    pub sm_count: u32,
+}
+
+impl GpuSpec {
+    pub fn usable(&self) -> Bytes {
+        self.mem_capacity - self.reserved
+    }
+}
+
+/// A complete platform description.
+#[derive(Clone, Copy, Debug)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    pub gpu: GpuSpec,
+    pub link: Link,
+    /// Coherent CPU access to GPU memory (ATS over NVLink on P9). On
+    /// PCIe platforms the CPU cannot touch device memory (§IV-A: "On
+    /// Power9 it is possible for the CPU to access GPU memory while this
+    /// is not possible on Intel platforms").
+    pub cpu_can_access_gpu: bool,
+    /// GPU mapping of host memory (zero-copy) — true on all platforms.
+    pub gpu_can_access_host: bool,
+    /// Effective host memory copy bandwidth (memcpy on the host).
+    pub host_mem_bw: f64,
+    /// UM driver policy (fault costs etc.) for this platform.
+    pub um: UmPolicy,
+}
+
+/// Platform identifiers used across the CLI/bench harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformId {
+    IntelPascal,
+    IntelVolta,
+    P9Volta,
+}
+
+impl PlatformId {
+    pub const ALL: [PlatformId; 3] = [PlatformId::IntelPascal, PlatformId::IntelVolta, PlatformId::P9Volta];
+
+    pub fn spec(self) -> PlatformSpec {
+        match self {
+            PlatformId::IntelPascal => intel_pascal(),
+            PlatformId::IntelVolta => intel_volta(),
+            PlatformId::P9Volta => p9_volta(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlatformId::IntelPascal => "Intel-Pascal",
+            PlatformId::IntelVolta => "Intel-Volta",
+            PlatformId::P9Volta => "P9-Volta",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlatformId> {
+        match s.to_ascii_lowercase().as_str() {
+            "intel-pascal" | "intelpascal" | "pascal" => Some(PlatformId::IntelPascal),
+            "intel-volta" | "intelvolta" | "volta" => Some(PlatformId::IntelVolta),
+            "p9-volta" | "p9volta" | "p9" | "power9" => Some(PlatformId::P9Volta),
+            _ => None,
+        }
+    }
+}
+
+/// Intel Core i7-7820X + GeForce GTX 1050 Ti (4 GB) over PCIe 3.0.
+pub fn intel_pascal() -> PlatformSpec {
+    PlatformSpec {
+        name: "Intel-Pascal",
+        gpu: GpuSpec {
+            name: "GTX 1050 Ti",
+            mem_capacity: 4 * GIB,
+            reserved: calibration::CTX_RESERVED_SMALL,
+            flops_f32: calibration::GTX1050TI_FLOPS,
+            mem_bw: calibration::GTX1050TI_MEM_BW,
+            sm_count: 6,
+        },
+        link: Link::pcie3_x16(),
+        cpu_can_access_gpu: false,
+        gpu_can_access_host: true,
+        host_mem_bw: calibration::HOST_BW_INTEL_DESKTOP,
+        um: UmPolicy {
+            fault_group_base: calibration::FAULT_BASE_INTEL,
+            remote_map_under_pressure: false,
+            ..UmPolicy::default()
+        },
+    }
+}
+
+/// Intel Xeon Gold 6132 + Tesla V100 (16 GB) over PCIe 3.0 (Kebnekaise).
+pub fn intel_volta() -> PlatformSpec {
+    PlatformSpec {
+        name: "Intel-Volta",
+        gpu: GpuSpec {
+            name: "Tesla V100",
+            mem_capacity: 16 * GIB,
+            reserved: calibration::CTX_RESERVED_LARGE,
+            flops_f32: calibration::V100_FLOPS,
+            mem_bw: calibration::V100_MEM_BW,
+            sm_count: 80,
+        },
+        link: Link::pcie3_x16(),
+        cpu_can_access_gpu: false,
+        gpu_can_access_host: true,
+        host_mem_bw: calibration::HOST_BW_XEON,
+        um: UmPolicy {
+            fault_group_base: calibration::FAULT_BASE_INTEL,
+            remote_map_under_pressure: false,
+            ..UmPolicy::default()
+        },
+    }
+}
+
+/// IBM Power9 + Tesla V100 (16 GB) over NVLink 2.0 (Lassen-like).
+pub fn p9_volta() -> PlatformSpec {
+    PlatformSpec {
+        name: "P9-Volta",
+        gpu: GpuSpec {
+            name: "Tesla V100",
+            mem_capacity: 16 * GIB,
+            reserved: calibration::CTX_RESERVED_LARGE,
+            flops_f32: calibration::V100_FLOPS,
+            mem_bw: calibration::V100_MEM_BW,
+            sm_count: 80,
+        },
+        link: Link::nvlink2_p9(),
+        cpu_can_access_gpu: true,
+        gpu_can_access_host: true,
+        host_mem_bw: calibration::HOST_BW_P9,
+        um: UmPolicy {
+            fault_group_base: calibration::FAULT_BASE_P9,
+            remote_map_under_pressure: true,
+            ..UmPolicy::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::interconnect::TransferMode;
+
+    #[test]
+    fn all_platforms_have_valid_policies() {
+        for id in PlatformId::ALL {
+            id.spec().um.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn capability_matrix_matches_paper() {
+        assert!(!intel_pascal().cpu_can_access_gpu);
+        assert!(!intel_volta().cpu_can_access_gpu);
+        assert!(p9_volta().cpu_can_access_gpu);
+        for id in PlatformId::ALL {
+            assert!(id.spec().gpu_can_access_host);
+        }
+        // remote-map-under-pressure tracks ATS coherence
+        assert!(p9_volta().um.remote_map_under_pressure);
+        assert!(!intel_pascal().um.remote_map_under_pressure);
+    }
+
+    #[test]
+    fn memory_capacities() {
+        assert_eq!(intel_pascal().gpu.mem_capacity, 4 * GIB);
+        assert_eq!(intel_volta().gpu.mem_capacity, 16 * GIB);
+        assert_eq!(p9_volta().gpu.mem_capacity, 16 * GIB);
+        for id in PlatformId::ALL {
+            let g = id.spec().gpu;
+            assert!(g.usable() > g.mem_capacity / 2);
+        }
+    }
+
+    #[test]
+    fn p9_link_dominates_pcie() {
+        let p9 = p9_volta();
+        let iv = intel_volta();
+        assert!(p9.link.effective_bw(TransferMode::Bulk) > 4.0 * iv.link.effective_bw(TransferMode::Bulk));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for id in PlatformId::ALL {
+            assert_eq!(PlatformId::parse(id.name()), Some(id));
+        }
+        assert_eq!(PlatformId::parse("p9"), Some(PlatformId::P9Volta));
+        assert_eq!(PlatformId::parse("nope"), None);
+    }
+
+    #[test]
+    fn volta_flops_dwarf_pascal_budget() {
+        // V100 vs 1050Ti compute ratio drives the "UM overhead looks
+        // worse on Volta" effect (migration time stays similar while
+        // compute shrinks).
+        assert!(intel_volta().gpu.flops_f32 / intel_pascal().gpu.flops_f32 > 5.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT loader/executor: HLO text → compiled executable cache → typed
+//! execution. Follows the pattern proven by /opt/xla-example/load_hlo.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArgSpec, Dtype, Manifest, ModelSpec};
+
+/// Typed input buffer.
+#[derive(Clone, Debug)]
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Input {
+    pub fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The runtime: one PJRT CPU client plus a compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory (default `artifacts/`).
+    pub fn open(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Artifacts directory from the conventional location, honoring
+    /// `UMBRA_ARTIFACTS`.
+    pub fn open_default() -> Result<PjrtRuntime> {
+        let dir = std::env::var("UMBRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &ModelSpec> {
+        self.manifest.models.iter()
+    }
+
+    fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+    }
+
+    fn literal_for(spec: &ArgSpec, input: &Input) -> Result<xla::Literal> {
+        if input.len() != spec.n_elements() {
+            bail!("input has {} elements, spec wants {}", input.len(), spec.n_elements());
+        }
+        let lit = match (spec.dtype, input) {
+            (Dtype::F32, Input::F32(v)) => xla::Literal::vec1(v),
+            (Dtype::I32, Input::I32(v)) => xla::Literal::vec1(v),
+            _ => bail!("dtype mismatch between manifest and input"),
+        };
+        if spec.dims.is_empty() {
+            // Scalar: reshape a 1-element vec to rank-0.
+            lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
+        } else if spec.dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&spec.dims).map_err(|e| anyhow!("reshape {:?}: {e:?}", spec.dims))
+        }
+    }
+
+    /// Execute `name` with `inputs`; returns each output flattened to
+    /// f32 (our models only emit f32 outputs).
+    pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != spec.args.len() {
+            bail!("model '{name}' wants {} args, got {}", spec.args.len(), inputs.len());
+        }
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if !cache.contains_key(name) {
+                let exe = self.compile(name)?;
+                cache.insert(name.to_string(), exe);
+            }
+        }
+        let literals: Vec<xla::Literal> = spec
+            .args
+            .iter()
+            .zip(inputs)
+            .enumerate()
+            .map(|(i, (a, inp))| Self::literal_for(a, inp).with_context(|| format!("arg {i}")))
+            .collect::<Result<_>>()?;
+
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("just inserted");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.n_outputs {
+            bail!("model '{name}': manifest says {} outputs, got {}", spec.n_outputs, parts.len());
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                lit.to_vec::<f32>().map_err(|e| anyhow!("output {i} of {name} to f32: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/manifest.txt").exists()
+    }
+
+    fn rt() -> PjrtRuntime {
+        PjrtRuntime::open(Path::new("artifacts")).expect("open artifacts")
+    }
+
+    #[test]
+    fn opens_and_lists_models() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let r = rt();
+        assert!(r.platform().to_lowercase().contains("cpu") || !r.platform().is_empty());
+        let names: Vec<&str> = r.models().map(|m| m.name.as_str()).collect();
+        for expected in ["black_scholes", "matmul", "cg_step", "fdtd_step", "conv_fft", "bfs_level"] {
+            assert!(names.contains(&expected), "{expected} missing from {names:?}");
+        }
+    }
+
+    #[test]
+    fn executes_black_scholes() {
+        if !artifacts_available() {
+            return;
+        }
+        let r = rt();
+        let spec = r.manifest.get("black_scholes").unwrap();
+        let n = spec.args[0].n_elements();
+        let s = vec![100.0f32; n];
+        let x = vec![1.0f32; n];
+        let t = vec![0.25f32; n];
+        let out = r.execute("black_scholes", &[Input::F32(s), Input::F32(x), Input::F32(t)]).unwrap();
+        assert_eq!(out.len(), 2);
+        // Deep ITM call ~ S - X e^{-rT} ~ 99.005
+        assert!((out[0][0] - 99.0).abs() < 0.5, "call={}", out[0][0]);
+        assert!(out[1][0].abs() < 0.01, "put={}", out[1][0]);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        if !artifacts_available() {
+            return;
+        }
+        let r = rt();
+        assert!(r.execute("black_scholes", &[Input::F32(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        if !artifacts_available() {
+            return;
+        }
+        let r = rt();
+        let bad = vec![1.0f32; 7];
+        assert!(r
+            .execute("black_scholes", &[Input::F32(bad.clone()), Input::F32(bad.clone()), Input::F32(bad)])
+            .is_err());
+    }
+}

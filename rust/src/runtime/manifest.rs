@@ -1,0 +1,139 @@
+//! `artifacts/manifest.txt` parsing: the typed interface contract
+//! between `python/compile/aot.py` and the Rust loader.
+//!
+//! Format (one line per model): `name|dtype:shape,dtype:shape,...|n_out`
+//! where shape is `d0xd1x...` or `scalar`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One argument: dtype + dims (empty dims = scalar).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: Dtype,
+    pub dims: Vec<i64>,
+}
+
+impl ArgSpec {
+    pub fn n_elements(&self) -> usize {
+        self.dims.iter().product::<i64>().max(1) as usize
+    }
+}
+
+/// One model artifact.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub n_outputs: usize,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut models = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 3 {
+                bail!("manifest line {}: expected 3 '|' fields, got {}", lineno + 1, parts.len());
+            }
+            let name = parts[0].to_string();
+            let mut args = Vec::new();
+            for spec in parts[1].split(',') {
+                let (dtype, shape) = spec
+                    .split_once(':')
+                    .with_context(|| format!("bad arg spec '{spec}'"))?;
+                let dims = if shape == "scalar" {
+                    Vec::new()
+                } else {
+                    shape
+                        .split('x')
+                        .map(|d| d.parse::<i64>().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?
+                };
+                args.push(ArgSpec { dtype: Dtype::parse(dtype)?, dims });
+            }
+            let n_outputs = parts[2].parse::<usize>().context("bad output count")?;
+            models.push(ModelSpec { name, args, n_outputs });
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+black_scholes|float32:4096,float32:4096,float32:4096|2
+bfs_level|float32:256x256,float32:256,float32:256,float32:256,float32:scalar|3
+cg_step|float32:1024x3,int32:1024x3,float32:1024,float32:1024,float32:1024|4
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 3);
+        let bs = m.get("black_scholes").unwrap();
+        assert_eq!(bs.args.len(), 3);
+        assert_eq!(bs.args[0].dims, vec![4096]);
+        assert_eq!(bs.n_outputs, 2);
+        let bfs = m.get("bfs_level").unwrap();
+        assert_eq!(bfs.args[0].dims, vec![256, 256]);
+        assert!(bfs.args[4].dims.is_empty(), "scalar");
+        assert_eq!(bfs.args[4].n_elements(), 1);
+        let cg = m.get("cg_step").unwrap();
+        assert_eq!(cg.args[1].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("only|two").is_err());
+        assert!(Manifest::parse("a|float64:3|1").is_err());
+        assert!(Manifest::parse("a|float32:3|x").is_err());
+    }
+
+    #[test]
+    fn empty_lines_skipped() {
+        let m = Manifest::parse("\n\n").unwrap();
+        assert!(m.models.is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (produced once by
+//! `make artifacts` from the JAX/Pallas build path) and executes them
+//! from Rust. This is the *numerics* half of the reproduction — the
+//! paper-scale memory behaviour is simulated in [`crate::um`], while the
+//! applications' actual computations run here at validation shapes and
+//! are checked against independent Rust reference implementations.
+//!
+//! Python is never on this path: the Rust binary is self-contained once
+//! `artifacts/*.hlo.txt` exist.
+
+pub mod manifest;
+pub mod loader;
+pub mod validate;
+
+pub use loader::{Input, PjrtRuntime};
+pub use manifest::{ArgSpec, Dtype, Manifest, ModelSpec};
+pub use validate::{validate_all, validate_app, ValidationReport};

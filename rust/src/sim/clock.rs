@@ -1,0 +1,60 @@
+//! Simulated clock: a monotone cursor in nanoseconds.
+
+use crate::util::units::Ns;
+
+/// A stream-local clock. Each CUDA stream owns one; resources return
+/// completion times which streams adopt via [`Clock::advance_to`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Clock {
+    now: Ns,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { now: Ns::ZERO }
+    }
+
+    pub fn at(t: Ns) -> Clock {
+        Clock { now: t }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Move forward by `dt`.
+    pub fn advance(&mut self, dt: Ns) -> Ns {
+        self.now += dt;
+        self.now
+    }
+
+    /// Move to `t` if it is in the future (clocks never go backwards).
+    pub fn advance_to(&mut self, t: Ns) -> Ns {
+        if t > self.now {
+            self.now = t;
+        }
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = Clock::new();
+        c.advance(Ns(100));
+        assert_eq!(c.now(), Ns(100));
+        c.advance_to(Ns(50)); // no-op: already past
+        assert_eq!(c.now(), Ns(100));
+        c.advance_to(Ns(150));
+        assert_eq!(c.now(), Ns(150));
+    }
+
+    #[test]
+    fn starts_at_given_time() {
+        let c = Clock::at(Ns(42));
+        assert_eq!(c.now(), Ns(42));
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-time simulation core.
+//!
+//! The Unified-Memory simulator is driven by *resource timelines* rather
+//! than a general event heap: every shared hardware resource (a DMA
+//! engine per transfer direction, the driver's fault-handling path, the
+//! GPU compute pipe) is a FIFO whose occupancy is tracked as a
+//! "free-at" time plus a service model. Operations are issued in causal
+//! order per CUDA stream; concurrency between streams (e.g., a prefetch
+//! on a background stream overlapping a kernel on the default stream)
+//! emerges from contention on the shared timelines.
+//!
+//! This is exact for the workloads in this crate — each benchmark run is
+//! a straight-line program of host ops, advises, prefetches and kernel
+//! launches — and is far faster than a page-granular event heap, which
+//! matters because `cargo bench` regenerates every paper figure over
+//! hundreds of simulated runs.
+
+pub mod clock;
+pub mod resource;
+
+pub use clock::Clock;
+pub use resource::{BandwidthResource, SerialResource};

@@ -1,0 +1,198 @@
+//! Shared-resource timelines: bandwidth-serialized channels (DMA
+//! engines, interconnect directions) and fixed-service serial resources
+//! (the driver's page-fault handling path).
+
+use crate::util::units::{transfer_ns, Bytes, Ns};
+
+/// Completion record for a scheduled occupancy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Occupancy {
+    /// When the resource actually started serving the request.
+    pub start: Ns,
+    /// When the request completes.
+    pub end: Ns,
+}
+
+impl Occupancy {
+    pub fn duration(&self) -> Ns {
+        self.end - self.start
+    }
+}
+
+/// A FIFO channel that serves requests at a fixed bandwidth with a
+/// per-message latency. Models one direction of an interconnect / one
+/// DMA engine. Requests queue behind each other.
+#[derive(Clone, Debug)]
+pub struct BandwidthResource {
+    name: &'static str,
+    bw_bytes_per_sec: f64,
+    latency: Ns,
+    free_at: Ns,
+    /// Total bytes moved (for metrics / figure breakdowns).
+    pub bytes_moved: Bytes,
+    /// Total busy time (for utilization reports).
+    pub busy: Ns,
+    /// Number of requests served.
+    pub requests: u64,
+}
+
+impl BandwidthResource {
+    pub fn new(name: &'static str, bw_bytes_per_sec: f64, latency: Ns) -> Self {
+        assert!(bw_bytes_per_sec > 0.0, "{name}: bandwidth must be positive");
+        BandwidthResource {
+            name,
+            bw_bytes_per_sec,
+            latency,
+            free_at: Ns::ZERO,
+            bytes_moved: 0,
+            busy: Ns::ZERO,
+            requests: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+    pub fn free_at(&self) -> Ns {
+        self.free_at
+    }
+    pub fn bandwidth(&self) -> f64 {
+        self.bw_bytes_per_sec
+    }
+
+    /// Schedule a transfer of `bytes` with an efficiency factor in (0,1]
+    /// applied to the nominal bandwidth (fault-driven migration runs at
+    /// lower efficiency than bulk prefetch; see `mem::interconnect`).
+    /// `ready` is when the requester is ready; the transfer starts at
+    /// `max(ready, free_at)`.
+    pub fn transfer(&mut self, ready: Ns, bytes: Bytes, efficiency: f64) -> Occupancy {
+        assert!(efficiency > 0.0 && efficiency <= 1.0, "{}: bad efficiency {efficiency}", self.name);
+        let start = ready.max(self.free_at);
+        let dur = self.latency + transfer_ns(bytes, self.bw_bytes_per_sec * efficiency);
+        let end = start + dur;
+        self.free_at = end;
+        self.bytes_moved += bytes;
+        self.busy += dur;
+        self.requests += 1;
+        Occupancy { start, end }
+    }
+
+    /// Reset occupancy/metrics (new simulated run).
+    pub fn reset(&mut self) {
+        self.free_at = Ns::ZERO;
+        self.bytes_moved = 0;
+        self.busy = Ns::ZERO;
+        self.requests = 0;
+    }
+}
+
+/// A serial resource with per-request service time (e.g., the UM driver
+/// fault path: fault groups are handled one at a time).
+#[derive(Clone, Debug)]
+pub struct SerialResource {
+    name: &'static str,
+    free_at: Ns,
+    pub busy: Ns,
+    pub requests: u64,
+}
+
+impl SerialResource {
+    pub fn new(name: &'static str) -> Self {
+        SerialResource { name, free_at: Ns::ZERO, busy: Ns::ZERO, requests: 0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+    pub fn free_at(&self) -> Ns {
+        self.free_at
+    }
+
+    /// Occupy the resource for `service` starting no earlier than `ready`.
+    pub fn serve(&mut self, ready: Ns, service: Ns) -> Occupancy {
+        let start = ready.max(self.free_at);
+        let end = start + service;
+        self.free_at = end;
+        self.busy += service;
+        self.requests += 1;
+        Occupancy { start, end }
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = Ns::ZERO;
+        self.busy = Ns::ZERO;
+        self.requests = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn transfers_queue_fifo() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(0)); // 1 GB/s
+        let a = dma.transfer(Ns(0), 500_000_000, 1.0); // 0.5 s
+        let b = dma.transfer(Ns(0), 500_000_000, 1.0); // queued behind a
+        assert_eq!(a.start, Ns(0));
+        assert_eq!(a.end, Ns::from_secs(0.5));
+        assert_eq!(b.start, a.end);
+        assert_eq!(b.end, Ns::from_secs(1.0));
+        assert_eq!(dma.bytes_moved, 1_000_000_000);
+        assert_eq!(dma.requests, 2);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(0));
+        let a = dma.transfer(Ns::from_secs(2.0), MIB, 1.0);
+        assert_eq!(a.start, Ns::from_secs(2.0)); // idle until requester ready
+    }
+
+    #[test]
+    fn latency_added_per_message() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(1_000));
+        let a = dma.transfer(Ns(0), 0, 1.0);
+        assert_eq!(a.duration(), Ns(1_000));
+    }
+
+    #[test]
+    fn efficiency_slows_transfer() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(0));
+        let full = dma.transfer(Ns(0), 100 * MIB, 1.0).duration();
+        dma.reset();
+        let half = dma.transfer(Ns(0), 100 * MIB, 0.5).duration();
+        // within rounding of exactly 2x
+        assert!((half.0 as f64 / full.0 as f64 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad efficiency")]
+    fn zero_efficiency_rejected() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(0));
+        dma.transfer(Ns(0), MIB, 0.0);
+    }
+
+    #[test]
+    fn serial_resource_serializes() {
+        let mut fh = SerialResource::new("faults");
+        let a = fh.serve(Ns(0), Ns(30_000));
+        let b = fh.serve(Ns(10_000), Ns(30_000));
+        assert_eq!(a.end, Ns(30_000));
+        assert_eq!(b.start, Ns(30_000)); // waits for a even though ready at 10us
+        assert_eq!(b.end, Ns(60_000));
+        assert_eq!(fh.requests, 2);
+        assert_eq!(fh.busy, Ns(60_000));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut dma = BandwidthResource::new("h2d", 1e9, Ns(0));
+        dma.transfer(Ns(0), MIB, 1.0);
+        dma.reset();
+        assert_eq!(dma.free_at(), Ns::ZERO);
+        assert_eq!(dma.bytes_moved, 0);
+        assert_eq!(dma.requests, 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Trace records (the analogue of `nvprof --print-gpu-trace` rows).
+
+use crate::mem::AllocId;
+use crate::util::units::{Bytes, Ns};
+
+/// Record categories. The first two are the rows the paper filters on;
+/// the rest make breakdowns and debugging possible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    /// `Unified Memory Memcpy HtoD` — page migration to the device
+    /// (fault-driven or prefetch).
+    UmMemcpyHtoD,
+    /// `Unified Memory Memcpy DtoH` — migration/eviction to the host.
+    UmMemcpyDtoH,
+    /// GPU page-fault group handling (driver occupancy).
+    GpuFaultGroup,
+    /// CPU page fault (host access to non-resident page).
+    CpuFault,
+    /// Eviction decision (separate from the DtoH writeback transfer).
+    Eviction,
+    /// Remote (zero-copy / ATS) access window.
+    RemoteAccess,
+    /// Read-duplicate invalidation (write to a ReadMostly page).
+    Invalidation,
+    /// Explicit `cudaMemcpy` H2D (non-UM variants).
+    MemcpyHtoD,
+    /// Explicit `cudaMemcpy` D2H (non-UM variants).
+    MemcpyDtoH,
+    /// Kernel execution window.
+    Kernel,
+    /// `cudaMemPrefetchAsync` call window (the transfers it issues are
+    /// recorded as `UmMemcpyHtoD`/`UmMemcpyDtoH`).
+    Prefetch,
+}
+
+impl TraceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::UmMemcpyHtoD => "Unified Memory Memcpy HtoD",
+            TraceKind::UmMemcpyDtoH => "Unified Memory Memcpy DtoH",
+            TraceKind::GpuFaultGroup => "GPU Page Fault Group",
+            TraceKind::CpuFault => "CPU Page Fault",
+            TraceKind::Eviction => "UM Eviction",
+            TraceKind::RemoteAccess => "Remote Access",
+            TraceKind::Invalidation => "ReadMostly Invalidation",
+            TraceKind::MemcpyHtoD => "Memcpy HtoD",
+            TraceKind::MemcpyDtoH => "Memcpy DtoH",
+            TraceKind::Kernel => "Kernel",
+            TraceKind::Prefetch => "Prefetch",
+        }
+    }
+}
+
+/// One trace row.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub start: Ns,
+    pub end: Ns,
+    pub kind: TraceKind,
+    pub bytes: Bytes,
+    pub alloc: Option<AllocId>,
+    /// Free-form tag (kernel name, phase, reason).
+    pub tag: &'static str,
+}
+
+impl TraceEvent {
+    pub fn duration(&self) -> Ns {
+        self.end - self.start
+    }
+}
+
+/// Event log. Tracing costs memory on multi-GB simulations, so it can
+/// be disabled (benchmark timing runs) or enabled (Figs. 4/5/7/8 runs).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn enabled() -> Trace {
+        Trace { enabled: true, events: Vec::new() }
+    }
+    pub fn disabled() -> Trace {
+        Trace { enabled: false, events: Vec::new() }
+    }
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        debug_assert!(ev.end >= ev.start, "event ends before it starts");
+        if self.enabled {
+            self.events.push(ev);
+        }
+    }
+
+    pub fn record(
+        &mut self,
+        kind: TraceKind,
+        start: Ns,
+        end: Ns,
+        bytes: Bytes,
+        alloc: Option<AllocId>,
+        tag: &'static str,
+    ) {
+        self.push(TraceEvent { start, end, kind, bytes, alloc, tag });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Events of one kind, in recorded order.
+    pub fn of_kind(&self, kind: TraceKind) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Total duration of all events of `kind` (the paper's "total time
+    /// spent on" metric — occupancy, not wall-clock union).
+    pub fn total_time(&self, kind: TraceKind) -> Ns {
+        self.of_kind(kind).map(|e| e.duration()).sum()
+    }
+
+    /// Total bytes moved by events of `kind`.
+    pub fn total_bytes(&self, kind: TraceKind) -> Bytes {
+        self.of_kind(kind).map(|e| e.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, s: u64, e: u64, b: Bytes) -> TraceEvent {
+        TraceEvent { start: Ns(s), end: Ns(e), kind, bytes: b, alloc: None, tag: "" }
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.push(ev(TraceKind::Kernel, 0, 10, 0));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn totals_by_kind() {
+        let mut t = Trace::enabled();
+        t.push(ev(TraceKind::UmMemcpyHtoD, 0, 10, 100));
+        t.push(ev(TraceKind::UmMemcpyHtoD, 20, 50, 300));
+        t.push(ev(TraceKind::UmMemcpyDtoH, 5, 10, 50));
+        assert_eq!(t.total_time(TraceKind::UmMemcpyHtoD), Ns(40));
+        assert_eq!(t.total_bytes(TraceKind::UmMemcpyHtoD), 400);
+        assert_eq!(t.total_time(TraceKind::UmMemcpyDtoH), Ns(5));
+        assert_eq!(t.of_kind(TraceKind::UmMemcpyHtoD).count(), 2);
+    }
+
+    #[test]
+    fn labels_match_nvprof() {
+        assert_eq!(TraceKind::UmMemcpyHtoD.label(), "Unified Memory Memcpy HtoD");
+        assert_eq!(TraceKind::UmMemcpyDtoH.label(), "Unified Memory Memcpy DtoH");
+    }
+}

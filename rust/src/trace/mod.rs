@@ -1,0 +1,14 @@
+//! nvprof-like Unified Memory tracing.
+//!
+//! The paper derives Figs. 4/5/7/8 from `nvprof --print-gpu-trace`
+//! output, filtering `Unified Memory Memcpy HtoD` / `DtoH` records and
+//! building a time series of data movement plus total time per event
+//! category. [`Trace`] records the same information from the simulator;
+//! [`series`] bins it into the paper's time-series plots and
+//! [`Breakdown`] reproduces the stacked-bar totals.
+
+pub mod event;
+pub mod series;
+
+pub use event::{Trace, TraceEvent, TraceKind};
+pub use series::{Breakdown, TimeSeries};

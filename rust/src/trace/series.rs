@@ -1,0 +1,173 @@
+//! Time-series binning and stacked-bar breakdowns of a [`Trace`] — the
+//! data behind the paper's Figs. 4/5 (in-memory) and 7/8 (oversub).
+
+use super::event::{Trace, TraceKind};
+use crate::util::csvout::Csv;
+use crate::util::units::{Bytes, Ns};
+
+/// Binned transfer time series: for each bin, bytes moved HtoD and DtoH.
+/// This is the paper's Fig. 5 / Fig. 8 plot data ("a time series of data
+/// movement" built from UM Memcpy trace entries).
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    pub bin: Ns,
+    pub h2d: Vec<Bytes>,
+    pub d2h: Vec<Bytes>,
+}
+
+impl TimeSeries {
+    /// Bin `trace` into windows of `bin` ns, attributing each transfer's
+    /// bytes to the bin of its *end* time (as nvprof rows do).
+    pub fn from_trace(trace: &Trace, bin: Ns) -> TimeSeries {
+        assert!(bin.0 > 0);
+        let horizon = trace
+            .events()
+            .iter()
+            .map(|e| e.end)
+            .max()
+            .unwrap_or(Ns::ZERO);
+        let n_bins = (horizon.0 / bin.0 + 1) as usize;
+        let mut h2d = vec![0u64; n_bins];
+        let mut d2h = vec![0u64; n_bins];
+        for e in trace.events() {
+            let idx = (e.end.0 / bin.0) as usize;
+            match e.kind {
+                TraceKind::UmMemcpyHtoD | TraceKind::MemcpyHtoD => h2d[idx] += e.bytes,
+                TraceKind::UmMemcpyDtoH | TraceKind::MemcpyDtoH => d2h[idx] += e.bytes,
+                _ => {}
+            }
+        }
+        TimeSeries { bin, h2d, d2h }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.h2d.len()
+    }
+
+    pub fn total_h2d(&self) -> Bytes {
+        self.h2d.iter().sum()
+    }
+    pub fn total_d2h(&self) -> Bytes {
+        self.d2h.iter().sum()
+    }
+
+    /// Peak per-bin transfer rate in bytes/second (HtoD).
+    pub fn peak_h2d_rate(&self) -> f64 {
+        let m = self.h2d.iter().copied().max().unwrap_or(0);
+        m as f64 / self.bin.as_secs()
+    }
+
+    /// Export as CSV (`t_ms,h2d_bytes,d2h_bytes`).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(vec!["t_ms", "h2d_bytes", "d2h_bytes"]);
+        for i in 0..self.n_bins() {
+            let t = (self.bin * i as u64).as_ms();
+            csv.row(vec![format!("{t:.3}"), self.h2d[i].to_string(), self.d2h[i].to_string()]);
+        }
+        csv
+    }
+}
+
+/// Stacked-bar totals per category — the paper's Figs. 4/7 ("breakdown
+/// of total time spent handling page faults and data movement").
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    /// Total GPU fault-group handling (stall) time.
+    pub fault_stall: Ns,
+    /// Total UM HtoD transfer occupancy.
+    pub h2d: Ns,
+    /// Total UM DtoH transfer occupancy.
+    pub d2h: Ns,
+    /// Bytes for context.
+    pub h2d_bytes: Bytes,
+    pub d2h_bytes: Bytes,
+}
+
+impl Breakdown {
+    pub fn from_trace(trace: &Trace) -> Breakdown {
+        Breakdown {
+            fault_stall: trace.total_time(TraceKind::GpuFaultGroup),
+            h2d: trace.total_time(TraceKind::UmMemcpyHtoD),
+            d2h: trace.total_time(TraceKind::UmMemcpyDtoH),
+            h2d_bytes: trace.total_bytes(TraceKind::UmMemcpyHtoD),
+            d2h_bytes: trace.total_bytes(TraceKind::UmMemcpyDtoH),
+        }
+    }
+
+    pub fn total(&self) -> Ns {
+        self.fault_stall + self.h2d + self.d2h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::TraceEvent;
+
+    fn trace_with(evs: Vec<(TraceKind, u64, u64, Bytes)>) -> Trace {
+        let mut t = Trace::enabled();
+        for (kind, s, e, b) in evs {
+            t.push(TraceEvent { start: Ns(s), end: Ns(e), kind, bytes: b, alloc: None, tag: "" });
+        }
+        t
+    }
+
+    #[test]
+    fn series_bins_by_end_time() {
+        let t = trace_with(vec![
+            (TraceKind::UmMemcpyHtoD, 0, 500, 64),
+            (TraceKind::UmMemcpyHtoD, 900, 1100, 128), // ends in bin 1
+            (TraceKind::UmMemcpyDtoH, 100, 2100, 32),  // ends in bin 2
+        ]);
+        let s = TimeSeries::from_trace(&t, Ns(1000));
+        assert_eq!(s.n_bins(), 3);
+        assert_eq!(s.h2d, vec![64, 128, 0]);
+        assert_eq!(s.d2h, vec![0, 0, 32]);
+        assert_eq!(s.total_h2d(), 192);
+        assert_eq!(s.total_d2h(), 32);
+    }
+
+    #[test]
+    fn series_ignores_non_transfer_events() {
+        let t = trace_with(vec![
+            (TraceKind::Kernel, 0, 100, 999),
+            (TraceKind::GpuFaultGroup, 0, 100, 999),
+        ]);
+        let s = TimeSeries::from_trace(&t, Ns(1000));
+        assert_eq!(s.total_h2d(), 0);
+        assert_eq!(s.total_d2h(), 0);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let t = trace_with(vec![
+            (TraceKind::GpuFaultGroup, 0, 30, 0),
+            (TraceKind::GpuFaultGroup, 50, 70, 0),
+            (TraceKind::UmMemcpyHtoD, 0, 100, 1000),
+            (TraceKind::UmMemcpyDtoH, 0, 40, 400),
+        ]);
+        let b = Breakdown::from_trace(&t);
+        assert_eq!(b.fault_stall, Ns(50));
+        assert_eq!(b.h2d, Ns(100));
+        assert_eq!(b.d2h, Ns(40));
+        assert_eq!(b.h2d_bytes, 1000);
+        assert_eq!(b.d2h_bytes, 400);
+        assert_eq!(b.total(), Ns(190));
+    }
+
+    #[test]
+    fn empty_trace_series() {
+        let s = TimeSeries::from_trace(&Trace::enabled(), Ns(1000));
+        assert_eq!(s.n_bins(), 1);
+        assert_eq!(s.total_h2d(), 0);
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let t = trace_with(vec![(TraceKind::UmMemcpyHtoD, 0, 500, 64)]);
+        let s = TimeSeries::from_trace(&t, Ns(1000));
+        let csv = s.to_csv();
+        assert_eq!(csv.n_rows(), 1);
+        assert!(csv.to_string().starts_with("t_ms,h2d_bytes,d2h_bytes\n"));
+    }
+}

@@ -1,0 +1,200 @@
+//! `cudaMemAdvise` semantics (paper §II-B).
+//!
+//! * `SetReadMostly` — mark pages duplicate-on-read-fault.
+//! * `SetPreferredLocation` — pin pages to a memory; on platforms with
+//!   the required mapping hardware, remote access replaces migration.
+//! * `SetAccessedBy` — establish a remote mapping from a processor into
+//!   the pages (re-established after migration); does not pin.
+
+use crate::mem::{AllocId, ChunkRef, PageRange, PAGES_PER_CHUNK};
+use crate::mem::page::{AdviseFlags, PageFlags};
+use crate::util::units::Ns;
+
+use super::policy::{Advise, Loc};
+use super::runtime::UmRuntime;
+
+/// Driver-call overhead of one `cudaMemAdvise` (host side).
+const ADVISE_CALL_COST: Ns = Ns(5_000);
+
+impl UmRuntime {
+    /// Apply `advise` to `range` of `id` at `now`; returns when the call
+    /// returns (host time). Advises never move data by themselves.
+    pub fn mem_advise(&mut self, id: AllocId, range: PageRange, advise: Advise, now: Ns) -> Ns {
+        self.metrics.advise_calls += 1;
+        let cpu_can_access_gpu = self.plat.cpu_can_access_gpu;
+        let gpu_can_access_host = self.plat.gpu_can_access_host;
+        let range = self.space.get(id).pages.clamp(range);
+
+        match advise {
+            Advise::ReadMostly => {
+                self.advise_hints_active = true;
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::READ_MOSTLY, true);
+                });
+            }
+            Advise::UnsetReadMostly => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::READ_MOSTLY, false);
+                });
+            }
+            Advise::PreferredLocation(Loc::Gpu) => {
+                self.advise_hints_active = true;
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::PREF_GPU, true);
+                    p.advise.set(AdviseFlags::PREF_HOST, false);
+                });
+                self.set_chunks_pinned(id, range, true);
+            }
+            Advise::PreferredLocation(Loc::Cpu) => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::PREF_HOST, true);
+                    p.advise.set(AdviseFlags::PREF_GPU, false);
+                });
+                self.set_chunks_pinned(id, range, false);
+            }
+            Advise::UnsetPreferredLocation => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::PREF_GPU, false);
+                    p.advise.set(AdviseFlags::PREF_HOST, false);
+                });
+                self.set_chunks_pinned(id, range, false);
+            }
+            Advise::AccessedBy(Loc::Cpu) => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::ACCESSED_BY_CPU, true);
+                    // Mapping is established for pages that already have
+                    // a device copy — if the hardware can.
+                    if cpu_can_access_gpu && p.residency.on_device() {
+                        p.flags.set(PageFlags::CPU_MAPPED, true);
+                    }
+                });
+            }
+            Advise::AccessedBy(Loc::Gpu) => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::ACCESSED_BY_GPU, true);
+                    if gpu_can_access_host && p.residency.on_host() {
+                        p.flags.set(PageFlags::GPU_MAPPED, true);
+                    }
+                });
+            }
+            Advise::UnsetAccessedBy(Loc::Cpu) => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::ACCESSED_BY_CPU, false);
+                    p.flags.set(PageFlags::CPU_MAPPED, false);
+                });
+            }
+            Advise::UnsetAccessedBy(Loc::Gpu) => {
+                self.space.get_mut(id).pages.update(range, |p| {
+                    p.advise.set(AdviseFlags::ACCESSED_BY_GPU, false);
+                    p.flags.set(PageFlags::GPU_MAPPED, false);
+                });
+            }
+        }
+        now + ADVISE_CALL_COST
+    }
+
+    /// Pin/unpin the device-resident chunks covered by `range`.
+    fn set_chunks_pinned(&mut self, id: AllocId, range: PageRange, pinned: bool) {
+        if range.is_empty() {
+            return;
+        }
+        let first = range.start / PAGES_PER_CHUNK;
+        let last = (range.end - 1) / PAGES_PER_CHUNK;
+        for chunk in first..=last {
+            self.dev.set_pinned(ChunkRef { alloc: id, chunk }, pinned);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Residency;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn advise_is_metadata_only() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+        assert_eq!(r.metrics.h2d_bytes + r.metrics.d2h_bytes, 0);
+        assert_eq!(r.metrics.advise_calls, 2);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.read_mostly()), 64);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.preferred_gpu()), 64);
+    }
+
+    #[test]
+    fn preferred_locations_mutually_exclusive() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", MIB);
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Cpu), Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.preferred_gpu()), 0);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.preferred_host()), 16);
+    }
+
+    #[test]
+    fn unset_clears() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", MIB);
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        r.mem_advise(id, full, Advise::UnsetReadMostly, Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.read_mostly()), 0);
+    }
+
+    #[test]
+    fn accessed_by_cpu_maps_only_on_coherent_platform() {
+        for (plat, expect_mapped) in [(intel_pascal(), false), (p9_volta(), true)] {
+            let mut r = UmRuntime::new(&plat);
+            let id = r.malloc_managed("x", MIB);
+            let full = r.space.get(id).full();
+            // Put pages on the device first.
+            r.gpu_access(id, full, true, Ns::ZERO);
+            r.mem_advise(id, full, Advise::AccessedBy(Loc::Cpu), Ns::ZERO);
+            let alloc = r.space.get(id);
+            let mapped = alloc.pages.count(full, |p| p.flags.get(PageFlags::CPU_MAPPED));
+            if expect_mapped {
+                assert_eq!(mapped, 16, "{}", plat.name);
+            } else {
+                assert_eq!(mapped, 0, "{}", plat.name);
+            }
+        }
+    }
+
+    #[test]
+    fn accessed_by_gpu_maps_host_pages() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, Advise::AccessedBy(Loc::Gpu), Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.flags.get(PageFlags::GPU_MAPPED)), 16);
+        // GPU access now goes remote, not migration.
+        let out = r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(out.h2d_bytes, 0);
+        assert_eq!(out.remote_bytes, MIB);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Host), 16);
+    }
+
+    #[test]
+    fn subrange_advise() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB); // 64 pages
+        r.mem_advise(id, PageRange::new(8, 24), Advise::ReadMostly, Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(alloc.full(), |p| p.advise.read_mostly()), 16);
+        assert!(!alloc.pages.get(7).advise.read_mostly());
+        assert!(alloc.pages.get(8).advise.read_mostly());
+        assert!(!alloc.pages.get(24).advise.read_mostly());
+    }
+}

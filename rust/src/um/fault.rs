@@ -1,0 +1,195 @@
+//! GPU page-fault group machinery (paper §II-A).
+//!
+//! When SMs touch non-resident pages they emit faults into the GPU's
+//! fault buffer; the driver drains it, deduplicates (multiple warps
+//! fault the same page — "duplicated faults", [18]), groups nearby
+//! pages, updates page tables and triggers migrations. We model this as
+//! *fault groups* serviced serially on the driver path: each group
+//! covers up to `group_pages` pages and costs
+//! `fault_group_base + pages * fault_per_page`, discounted when the
+//! range carries a placement advise (the driver skips its placement
+//! heuristics — observed in the paper as "page fault handling becomes
+//! more efficient when the advises are applied").
+
+use crate::mem::{AllocId, PageRange, Residency};
+use crate::mem::page::PageFlags;
+use crate::trace::TraceKind;
+use crate::util::units::Ns;
+
+use super::runtime::{AccessOutcome, UmRuntime};
+
+impl UmRuntime {
+    /// Schedule the fault groups covering `pages` pages of allocation
+    /// `id`. Returns `(time the last group finishes, total service)`.
+    ///
+    /// `advised`: the range has `PreferredLocation(Gpu)` → bigger groups
+    /// (full 2 MiB escalation) at discounted service.
+    /// `dup`: apply the duplicated-fault multiplier (massively-parallel
+    /// first touch; prefetch and host paths don't).
+    /// `cost_scale`: extra scale on the service time (population uses
+    /// `populate_discount`).
+    pub(super) fn service_faults(
+        &mut self,
+        id: AllocId,
+        pages: u32,
+        advised: bool,
+        dup: bool,
+        cost_scale: f64,
+        ready: Ns,
+        tag: &'static str,
+    ) -> (Ns, Ns) {
+        if pages == 0 {
+            return (ready, Ns::ZERO);
+        }
+        let group_pages = self.policy.group_pages(advised);
+        let mut groups = pages.div_ceil(group_pages) as u64;
+        if dup {
+            groups = ((groups as f64) * self.policy.dup_fault_factor).ceil() as u64;
+        }
+        let mut t_last = ready;
+        let mut total = Ns::ZERO;
+        let mut remaining = pages;
+        for g in 0..groups {
+            // Real groups carry pages; duplicate-fault groups carry 0
+            // payload but still occupy the driver.
+            let pages_here = if g < pages.div_ceil(group_pages) as u64 {
+                let p = remaining.min(group_pages);
+                remaining -= p;
+                p
+            } else {
+                0
+            };
+            let service = self
+                .policy
+                .fault_service(pages_here.max(1), advised)
+                .scale(cost_scale);
+            let occ = self.fault_path.serve(ready, service);
+            self.trace.record(TraceKind::GpuFaultGroup, occ.start, occ.end, pages_here as u64 * crate::mem::PAGE_SIZE, Some(id), tag);
+            t_last = t_last.max(occ.end);
+            total += service;
+        }
+        self.metrics.gpu_fault_groups += groups;
+        self.metrics.gpu_faulted_pages += pages as u64;
+        self.metrics.fault_stall += total;
+        (t_last, total)
+    }
+
+    /// First GPU touch of unmapped pages: physical backing is created
+    /// directly on the device — no data movement, only (cheap) fault
+    /// handling and page-table setup.
+    pub(super) fn populate_on_device(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        let advised = self.space.get(id).pages.get(run.start).advise.preferred_gpu();
+        // Populate in 2 MiB waves with per-wave space reservation, so a
+        // run larger than the free (or total) capacity self-evicts
+        // progressively instead of demanding impossible space at once.
+        let wave_pages = crate::mem::PAGES_PER_CHUNK;
+        let mut done = now;
+        let mut stall = Ns::ZERO;
+        let mut ready = now;
+        let mut page = run.start;
+        while page < run.end {
+            let wave = PageRange::new(page, (page + wave_pages).min(run.end));
+            page = wave.end;
+            let t_space = self.ensure_device_space(wave.bytes(), ready);
+            let (t_done, t_stall) = self.service_faults(
+                id,
+                wave.len(),
+                advised,
+                true,
+                self.policy.populate_discount,
+                t_space,
+                "populate",
+            );
+            self.space.get_mut(id).pages.update(wave, |p| {
+                p.residency = Residency::Device;
+                p.flags.set(PageFlags::POPULATED, true);
+                if write {
+                    p.flags.set(PageFlags::DIRTY, true);
+                }
+            });
+            self.add_device_residency(id, wave, advised, t_done);
+            self.metrics.populated_dev_pages += wave.len() as u64;
+            stall += t_stall;
+            ready = t_done;
+            done = done.max(t_done);
+        }
+        AccessOutcome {
+            done,
+            fault_stall: stall,
+            transfer_wait: (done - now).saturating_sub(stall),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::intel_pascal;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn fault_groups_counted_and_serialized() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB); // 64 pages
+        let (done, total) = r.service_faults(id, 64, false, false, 1.0, Ns::ZERO, "t");
+        // 64 pages / 8 per group = 8 groups, serialized
+        assert_eq!(r.metrics.gpu_fault_groups, 8);
+        assert_eq!(done, total, "serial from t=0: completion == total service");
+        assert!(total >= Ns::from_us(8.0 * 30.0), "at least 8 group bases");
+    }
+
+    #[test]
+    fn dup_factor_adds_groups() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        r.service_faults(id, 64, false, true, 1.0, Ns::ZERO, "t");
+        // ceil(8 * 1.25) = 10 groups
+        assert_eq!(r.metrics.gpu_fault_groups, 10);
+        assert_eq!(r.metrics.gpu_faulted_pages, 64, "payload pages unchanged");
+    }
+
+    #[test]
+    fn advised_faults_fewer_and_cheaper() {
+        let mut ra = UmRuntime::new(&intel_pascal());
+        let ia = ra.malloc_managed("x", 4 * MIB);
+        let (_, adv) = ra.service_faults(ia, 64, true, false, 1.0, Ns::ZERO, "t");
+        assert_eq!(ra.metrics.gpu_fault_groups, 2); // 64/32
+
+        let mut ru = UmRuntime::new(&intel_pascal());
+        let iu = ru.malloc_managed("x", 4 * MIB);
+        let (_, unadv) = ru.service_faults(iu, 64, false, false, 1.0, Ns::ZERO, "t");
+        assert!(adv < unadv, "advised total {adv} >= unadvised {unadv}");
+    }
+
+    #[test]
+    fn zero_pages_noop() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", MIB);
+        let (done, total) = r.service_faults(id, 0, false, true, 1.0, Ns(77), "t");
+        assert_eq!(done, Ns(77));
+        assert_eq!(total, Ns::ZERO);
+        assert_eq!(r.metrics.gpu_fault_groups, 0);
+    }
+
+    #[test]
+    fn populate_cheaper_than_migration_faults() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        let out = r.populate_on_device(id, full, true, Ns::ZERO);
+        let (_, full_cost) = {
+            let mut r2 = UmRuntime::new(&intel_pascal());
+            let id2 = r2.malloc_managed("x", 4 * MIB);
+            r2.service_faults(id2, 64, false, true, 1.0, Ns::ZERO, "t")
+        };
+        assert!(out.fault_stall < full_cost, "population is discounted");
+        assert_eq!(r.metrics.populated_dev_pages, 64);
+    }
+}

@@ -1,0 +1,288 @@
+//! Host-side access paths: first-touch population, CPU page faults,
+//! local access, and ATS remote access to device memory.
+//!
+//! The platform capability asymmetry lives here: on P9 the CPU can
+//! populate and access pages *directly in GPU memory* (the paper's §IV-A
+//! observation that makes `PreferredLocation(Gpu)` + `AccessedBy(Cpu)`
+//! so effective in-memory); on Intel platforms the same advises leave
+//! the data on the host until the GPU faults it over.
+
+use crate::mem::{AllocId, AllocKind, PageRange, Residency, TransferMode, PAGES_PER_CHUNK, PAGE_SIZE};
+use crate::mem::page::PageFlags;
+use crate::trace::TraceKind;
+use crate::util::units::{transfer_ns, Ns};
+
+use super::runtime::{AccessOutcome, Class, UmRuntime};
+
+impl UmRuntime {
+    /// The host CPU touches `range` of `id` (init loops, verification,
+    /// `memcpy()` consuming GPU results). Returns host-side completion.
+    pub fn host_access(&mut self, id: AllocId, range: PageRange, write: bool, now: Ns) -> AccessOutcome {
+        let alloc = self.space.get(id);
+        if alloc.kind == AllocKind::Device {
+            panic!("host access to cudaMalloc memory '{}' — use memcpy", alloc.name);
+        }
+        if alloc.kind == AllocKind::Host {
+            let dur = transfer_ns(range.bytes(), self.plat.host_mem_bw);
+            return AccessOutcome { done: now + dur, ..Default::default() };
+        }
+        let range = alloc.pages.clamp(range);
+        let mut out = AccessOutcome { done: now, ..Default::default() };
+        let mut t = now;
+        let mut pos = range.start;
+        while pos < range.end {
+            let (run, class) = self.next_run(id, pos, range.end);
+            let o = self.host_access_run(id, run, class, write, t);
+            t = t.max(o.done);
+            out.merge(o);
+            pos = run.end;
+        }
+        out.done = t;
+        out
+    }
+
+    fn host_access_run(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        let host_bw = self.plat.host_mem_bw;
+        let host_time = move |bytes| transfer_ns(bytes, host_bw);
+        match class.res {
+            Residency::Unmapped => {
+                if class.pref_gpu && self.plat.cpu_can_access_gpu {
+                    // P9 path: populate directly in GPU memory; CPU
+                    // writes stream over NVLink/ATS. The device copy is
+                    // the ONLY copy — that matters at eviction time.
+                    // If the preferred range exceeds what the device
+                    // can hold, the driver places the overflow on the
+                    // host (preferred location is a hint, not a
+                    // guarantee) rather than evicting endlessly.
+                    let free_pages = (self.dev.free() / PAGE_SIZE) as u32;
+                    let dev_run = PageRange::new(run.start, run.start + run.len().min(free_pages));
+                    let host_run = PageRange::new(dev_run.end, run.end);
+                    let mut done = now;
+                    let mut remote = 0;
+                    if !dev_run.is_empty() {
+                        let t_space = self.ensure_device_space(dev_run.bytes(), now);
+                        self.space.get_mut(id).pages.update(dev_run, |p| {
+                            p.residency = Residency::Device;
+                            p.flags.set(PageFlags::POPULATED, true);
+                            p.flags.set(PageFlags::CPU_MAPPED, true);
+                        });
+                        self.add_device_residency(id, dev_run, true, t_space);
+                        let dur = self.remote_time(dev_run.bytes());
+                        self.trace.record(TraceKind::RemoteAccess, t_space, t_space + dur, dev_run.bytes(), Some(id), "cpu-init-remote");
+                        self.metrics.remote_bytes_cpu_to_dev += dev_run.bytes();
+                        self.metrics.populated_dev_pages += dev_run.len() as u64;
+                        done = t_space + dur;
+                        remote = dev_run.bytes();
+                    }
+                    if !host_run.is_empty() {
+                        self.space.get_mut(id).pages.update(host_run, |p| {
+                            p.residency = Residency::Host;
+                            p.flags.set(PageFlags::POPULATED, true);
+                        });
+                        self.metrics.populated_host_pages += host_run.len() as u64;
+                        done += host_time(host_run.bytes());
+                    }
+                    AccessOutcome { done, remote_bytes: remote, ..Default::default() }
+                } else {
+                    // Normal first touch on the host.
+                    self.space.get_mut(id).pages.update(run, |p| {
+                        p.residency = Residency::Host;
+                        p.flags.set(PageFlags::POPULATED, true);
+                    });
+                    self.metrics.populated_host_pages += run.len() as u64;
+                    // OS minor-fault cost, amortized per 2 MiB region.
+                    let regions = run.len().div_ceil(PAGES_PER_CHUNK) as u64;
+                    let dur = host_time(run.bytes()) + Ns(self.policy.cpu_fault_cost.0 * regions / 4);
+                    AccessOutcome { done: now + dur, ..Default::default() }
+                }
+            }
+            Residency::Host => {
+                AccessOutcome { done: now + host_time(run.bytes()), ..Default::default() }
+            }
+            Residency::Both => {
+                if write {
+                    // Invalidate the device duplicates; host copy is
+                    // already current, so dropping them is free of DMA.
+                    let occ = self.fault_path.serve(now, self.policy.invalidation_cost);
+                    self.trace.record(TraceKind::Invalidation, occ.start, occ.end, run.bytes(), Some(id), "host-write-collapse");
+                    self.drop_device_residency(id, run);
+                    self.space.get_mut(id).pages.update(run, |p| {
+                        p.residency = Residency::Host;
+                    });
+                    self.metrics.invalidated_pages += run.len() as u64;
+                    AccessOutcome { done: occ.end + host_time(run.bytes()), ..Default::default() }
+                } else {
+                    AccessOutcome { done: now + host_time(run.bytes()), ..Default::default() }
+                }
+            }
+            Residency::Device => {
+                let can_remote = self.plat.cpu_can_access_gpu
+                    && (class.cpu_mapped || class.accessed_by_cpu || class.pref_gpu);
+                if can_remote {
+                    let dur = self.remote_time(run.bytes());
+                    self.trace.record(TraceKind::RemoteAccess, now, now + dur, run.bytes(), Some(id), "cpu-remote");
+                    self.metrics.remote_bytes_cpu_to_dev += run.bytes();
+                    if write {
+                        self.mark_dirty(id, run);
+                    }
+                    AccessOutcome { done: now + dur, remote_bytes: run.bytes(), ..Default::default() }
+                } else {
+                    // CPU page faults migrate the data home, chunk by
+                    // chunk (fig. 1 of the paper).
+                    let mut t = now;
+                    let mut page = run.start;
+                    while page < run.end {
+                        let piece_end = ((page / PAGES_PER_CHUNK + 1) * PAGES_PER_CHUNK).min(run.end);
+                        let piece = PageRange::new(page, piece_end);
+                        let fault = self.policy.cpu_fault_cost * piece.len() as u64;
+                        let occ = self.dma_d2h.transfer(t + fault, piece.bytes(), self.eff(TransferMode::Faulted));
+                        self.trace.record(TraceKind::CpuFault, t, t + fault, piece.bytes(), Some(id), "cpu-fault");
+                        self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, piece.bytes(), Some(id), "cpu-fault-migrate");
+                        self.metrics.cpu_faults += piece.len() as u64;
+                        self.metrics.migrated_pages_d2h += piece.len() as u64;
+                        self.metrics.d2h_bytes += piece.bytes();
+                        self.metrics.d2h_time += occ.duration();
+                        t = occ.end;
+                        page = piece_end;
+                    }
+                    self.drop_device_residency(id, run);
+                    self.space.get_mut(id).pages.update(run, |p| {
+                        p.residency = Residency::Host;
+                        p.flags.set(PageFlags::DIRTY, false);
+                        p.flags.set(PageFlags::CPU_MAPPED, false);
+                    });
+                    AccessOutcome {
+                        done: t + host_time(run.bytes()),
+                        d2h_bytes: run.bytes(),
+                        ..Default::default()
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::um::{Advise, Loc};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn first_touch_populates_host() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        let out = r.host_access(id, full, true, Ns::ZERO);
+        assert!(out.done > Ns::ZERO);
+        assert_eq!(r.metrics.populated_host_pages, 64);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Host), 64);
+        assert_eq!(r.dev.used(), 0);
+    }
+
+    #[test]
+    fn p9_pref_gpu_init_goes_straight_to_device() {
+        let mut r = UmRuntime::new(&p9_volta());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+        r.mem_advise(id, full, Advise::AccessedBy(Loc::Cpu), Ns::ZERO);
+        let out = r.host_access(id, full, true, Ns::ZERO);
+        assert_eq!(out.remote_bytes, 4 * MIB, "init streamed over ATS");
+        assert_eq!(r.dev.used(), 4 * MIB, "data lives on the GPU already");
+        // Subsequent GPU access: zero faults, zero migration.
+        let g = r.gpu_access(id, full, false, out.done);
+        assert_eq!(g.fault_stall, Ns::ZERO);
+        assert_eq!(g.h2d_bytes, 0);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn intel_pref_gpu_init_stays_on_host() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+        r.mem_advise(id, full, Advise::AccessedBy(Loc::Cpu), Ns::ZERO);
+        let out = r.host_access(id, full, true, Ns::ZERO);
+        assert_eq!(out.remote_bytes, 0, "no ATS on Intel");
+        assert_eq!(r.dev.used(), 0, "data stays on host until GPU faults");
+        // GPU access must still migrate (but with advised big groups).
+        let g = r.gpu_access(id, full, false, out.done);
+        assert_eq!(g.h2d_bytes, 4 * MIB);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn host_read_of_gpu_results_migrates_on_intel() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("out", 4 * MIB);
+        let full = r.space.get(id).full();
+        let g = r.gpu_access(id, full, true, Ns::ZERO); // GPU produces results
+        let h = r.host_access(id, full, false, g.done);
+        assert_eq!(h.d2h_bytes, 4 * MIB, "results migrate home");
+        assert!(r.metrics.cpu_faults > 0);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Host), 64);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn host_read_of_gpu_results_remote_on_p9_with_advise() {
+        let mut r = UmRuntime::new(&p9_volta());
+        let id = r.malloc_managed("out", 4 * MIB);
+        let full = r.space.get(id).full();
+        let g = r.gpu_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, Advise::AccessedBy(Loc::Cpu), g.done);
+        let h = r.host_access(id, full, false, g.done);
+        assert_eq!(h.d2h_bytes, 0, "no migration — read over ATS");
+        assert_eq!(h.remote_bytes, 4 * MIB);
+        assert_eq!(r.dev.used(), 4 * MIB, "stays on device");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn host_write_collapses_duplicates_free_of_dma() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        r.gpu_access(id, full, false, Ns::ZERO); // duplicate to GPU
+        let d2h_before = r.metrics.d2h_bytes;
+        let h = r.host_access(id, full, true, Ns::ZERO); // host write
+        assert_eq!(r.metrics.d2h_bytes, d2h_before, "collapse moves no data");
+        assert!(h.done > Ns::ZERO);
+        assert_eq!(r.dev.used(), 0, "duplicates dropped");
+        assert_eq!(r.metrics.invalidated_pages, 64);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn pageable_host_alloc_simple_cost() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_host("staging", 4 * MIB);
+        let full = r.space.get(id).full();
+        let out = r.host_access(id, full, true, Ns::ZERO);
+        assert!(out.done > Ns::ZERO);
+        assert_eq!(r.metrics.cpu_faults, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "use memcpy")]
+    fn host_access_to_device_alloc_panics() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_device("d", MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+    }
+}

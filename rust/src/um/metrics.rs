@@ -1,0 +1,112 @@
+//! Counters the UM runtime accumulates per simulated run. Figures 4/7
+//! use the trace's time totals; these counters power assertions, the
+//! `umbra trace` summary and the ablation benches.
+
+use crate::util::units::{Bytes, Ns};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct UmMetrics {
+    /// GPU fault groups serviced.
+    pub gpu_fault_groups: u64,
+    /// Pages covered by those groups (after dedup).
+    pub gpu_faulted_pages: u64,
+    /// Pages populated on device by first touch (no data movement).
+    pub populated_dev_pages: u64,
+    /// Pages populated on host by first touch.
+    pub populated_host_pages: u64,
+    /// Pages migrated host→device on demand (fault-driven).
+    pub migrated_pages_h2d: u64,
+    /// Pages migrated device→host on demand (CPU faults).
+    pub migrated_pages_d2h: u64,
+    /// Pages duplicated by ReadMostly (host copy retained).
+    pub duplicated_pages: u64,
+    /// Pages moved by prefetch, either direction.
+    pub prefetched_pages_h2d: u64,
+    pub prefetched_pages_d2h: u64,
+    /// Eviction chunks selected.
+    pub evicted_chunks: u64,
+    /// Eviction bytes written back (had to be transferred).
+    pub writeback_bytes: Bytes,
+    /// Eviction bytes dropped for free (valid host copy existed).
+    pub dropped_bytes: Bytes,
+    /// Bytes served by GPU remote access to host memory (zero-copy).
+    pub remote_bytes_gpu_to_host: Bytes,
+    /// Bytes served by CPU remote access to device memory (ATS).
+    pub remote_bytes_cpu_to_dev: Bytes,
+    /// ReadMostly duplicate invalidations (pages).
+    pub invalidated_pages: u64,
+    /// CPU page faults serviced.
+    pub cpu_faults: u64,
+    /// `cudaMemAdvise` calls.
+    pub advise_calls: u64,
+    /// `cudaMemPrefetchAsync` calls.
+    pub prefetch_calls: u64,
+    /// Aggregate fault-stall occupancy (driver time GPU accesses waited).
+    pub fault_stall: Ns,
+    /// Aggregate H2D / D2H transfer occupancy.
+    pub h2d_time: Ns,
+    pub d2h_time: Ns,
+    pub h2d_bytes: Bytes,
+    pub d2h_bytes: Bytes,
+}
+
+impl UmMetrics {
+    pub fn reset(&mut self) {
+        *self = UmMetrics::default();
+    }
+
+    /// Total bytes that crossed the link in either direction.
+    pub fn link_bytes(&self) -> Bytes {
+        self.h2d_bytes + self.d2h_bytes
+            + self.remote_bytes_gpu_to_host
+            + self.remote_bytes_cpu_to_dev
+    }
+
+    /// The paper's "thrashing" indicator: eviction traffic comparable to
+    /// (or exceeding) the forward migration traffic.
+    pub fn thrash_ratio(&self) -> f64 {
+        if self.h2d_bytes == 0 {
+            0.0
+        } else {
+            self.d2h_bytes as f64 / self.h2d_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_zero() {
+        let m = UmMetrics::default();
+        assert_eq!(m.gpu_fault_groups, 0);
+        assert_eq!(m.link_bytes(), 0);
+        assert_eq!(m.thrash_ratio(), 0.0);
+    }
+
+    #[test]
+    fn link_bytes_sums_all_paths() {
+        let m = UmMetrics {
+            h2d_bytes: 100,
+            d2h_bytes: 50,
+            remote_bytes_gpu_to_host: 25,
+            remote_bytes_cpu_to_dev: 10,
+            ..Default::default()
+        };
+        assert_eq!(m.link_bytes(), 185);
+    }
+
+    #[test]
+    fn thrash_ratio_balanced() {
+        let m = UmMetrics { h2d_bytes: 100, d2h_bytes: 100, ..Default::default() };
+        assert!((m.thrash_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = UmMetrics { gpu_fault_groups: 5, ..Default::default() };
+        m.reset();
+        assert_eq!(m, UmMetrics::default());
+    }
+}

@@ -1,0 +1,390 @@
+//! On-demand H2D migration, ATS remote mapping under pressure, and
+//! ReadMostly duplicate handling (paper §II-A/§II-B).
+
+use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGE_SIZE};
+use crate::mem::page::PageFlags;
+use crate::trace::TraceKind;
+use crate::util::units::Ns;
+
+use super::runtime::{AccessOutcome, Class, UmRuntime};
+
+impl UmRuntime {
+    /// GPU touched host-resident pages: migrate them on demand — or, on
+    /// coherent platforms under memory pressure, map them remotely
+    /// instead of migrating (the NVLink/ATS driver avoids eviction
+    /// storms this way; PCIe platforms cannot, see DESIGN.md §1).
+    /// Advised ranges (`ReadMostly` / `PreferredLocation(Gpu)`) force
+    /// local placement — the documented cause of the paper's P9
+    /// oversubscription pathology.
+    pub(super) fn migrate_or_map_h2d(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        let forces_local = class.read_mostly || class.pref_gpu;
+        let mut migrate_run = run;
+        let mut remote_run = PageRange::new(run.end, run.end);
+
+        // Placement hints override the heuristic remote-overflow path
+        // process-wide (DESIGN.md §1): with hints active the driver
+        // strictly migrates + evicts.
+        let heuristics_enabled =
+            self.policy.remote_map_under_pressure && !self.advise_hints_active;
+        if heuristics_enabled && !forces_local {
+            // Migrate what fits without evicting; remote-map the rest.
+            let free_pages = (self.dev.free() / PAGE_SIZE) as u32;
+            if free_pages < run.len() {
+                migrate_run = PageRange::new(run.start, run.start + free_pages);
+                remote_run = PageRange::new(run.start + free_pages, run.end);
+            }
+        }
+
+        let mut out = AccessOutcome { done: now, ..Default::default() };
+        if !migrate_run.is_empty() {
+            out.merge(self.migrate_h2d(id, migrate_run, class, write, now));
+        }
+        if !remote_run.is_empty() {
+            out.merge(self.remote_access_host(id, remote_run, now));
+        }
+        out
+    }
+
+    /// Fault-driven migration of one homogeneous host-resident run.
+    fn migrate_h2d(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        // PreferredLocation(Gpu) buys the full 2 MiB fault escalation;
+        // any advise (incl. ReadMostly) buys the cheaper fault service.
+        let placed = class.pref_gpu;
+        let advised = class.pref_gpu || class.read_mostly;
+
+        // Fault groups (driver) then the migration DMA per group; the
+        // DMA of group i overlaps the fault service of group i+1.
+        // Space is reserved *per group*: runs larger than the remaining
+        // (or even total) device capacity progressively evict — the
+        // self-eviction cyclic-thrash behaviour of §IV-B.
+        //
+        // With `density_escalation` the granule ramps as streaming
+        // density accumulates (the driver's tree prefetcher, [3]):
+        // base, base, 2*base, 2*base, 4*base ... capped at the 2 MiB
+        // advised granule.
+        let base_group = self.policy.group_pages(placed);
+        let cap_group = self.policy.advised_group_pages.max(base_group);
+        let duplicate = class.read_mostly && !write;
+        let mut ready = now;
+        let mut done = now;
+        let mut stall_total = Ns::ZERO;
+        let mut page = run.start;
+        let mut n_groups: u32 = 0;
+        while page < run.end {
+            // ETC-style thrash throttling ([10], ablation): once this
+            // access's eviction churn exceeds the threshold, stop
+            // honoring locality and map the remainder remotely
+            // (coherent platforms only).
+            if self.policy.etc_throttle
+                && self.plat.cpu_can_access_gpu
+                && self.access_evicted_bytes > self.policy.etc_threshold
+            {
+                break;
+            }
+            let group_pages = if self.policy.density_escalation && !placed {
+                (base_group << (n_groups / 2).min(8)).min(cap_group)
+            } else {
+                base_group
+            };
+            n_groups += 1;
+            let group = crate::mem::PageRange::new(page, (page + group_pages).min(run.end));
+            page = group.end;
+            let bytes = group.bytes();
+            let t_space = self.ensure_device_space(bytes, ready);
+            let service = self.policy.fault_service(group.len(), advised);
+            let focc = self.fault_path.serve(t_space, service);
+            self.trace.record(
+                TraceKind::GpuFaultGroup,
+                focc.start,
+                focc.end,
+                bytes,
+                Some(id),
+                "migrate",
+            );
+            stall_total += service;
+            let docc = self.dma_h2d.transfer(focc.end, bytes, self.eff(TransferMode::Faulted));
+            self.trace.record(TraceKind::UmMemcpyHtoD, docc.start, docc.end, bytes, Some(id), "migrate");
+            self.metrics.h2d_time += docc.duration();
+            // Page state + residency accounting as the group arrives.
+            self.space.get_mut(id).pages.update(group, |p| {
+                p.residency = if duplicate { Residency::Both } else { Residency::Device };
+                p.flags.set(PageFlags::POPULATED, true);
+                p.flags.set(PageFlags::DIRTY, write);
+                p.flags.set(PageFlags::GPU_MAPPED, false);
+            });
+            self.add_device_residency(id, group, placed, docc.end);
+            ready = focc.end; // driver proceeds to the next group
+            done = done.max(docc.end);
+        }
+        // Duplicated faults from warp parallelism: extra driver-only
+        // groups (no payload), still counted as stall.
+        let dup_extra = ((n_groups as f64) * (self.policy.dup_fault_factor - 1.0)).ceil() as u64;
+        for _ in 0..dup_extra {
+            let service = self.policy.fault_service(1, advised);
+            let focc = self.fault_path.serve(ready, service);
+            self.trace.record(TraceKind::GpuFaultGroup, focc.start, focc.end, 0, Some(id), "dup-fault");
+            stall_total += service;
+            ready = focc.end;
+            done = done.max(focc.end);
+        }
+        // `page` is where migration stopped (== run.end unless the ETC
+        // throttle broke out early).
+        let migrated = crate::mem::PageRange::new(run.start, page);
+        self.metrics.gpu_fault_groups += n_groups as u64 + dup_extra;
+        self.metrics.gpu_faulted_pages += migrated.len() as u64;
+        self.metrics.fault_stall += stall_total;
+        self.metrics.migrated_pages_h2d += migrated.len() as u64;
+        self.metrics.h2d_bytes += migrated.bytes();
+        if duplicate {
+            self.metrics.duplicated_pages += migrated.len() as u64;
+        }
+
+        let mut out = AccessOutcome {
+            done,
+            fault_stall: stall_total,
+            transfer_wait: (done - now).saturating_sub(stall_total),
+            h2d_bytes: migrated.bytes(),
+            ..Default::default()
+        };
+        if page < run.end {
+            // Throttled remainder: serve remotely.
+            out.merge(self.remote_access_host(
+                id,
+                crate::mem::PageRange::new(page, run.end),
+                done,
+            ));
+        }
+        out
+    }
+
+    /// GPU accesses host memory in place (zero-copy over PCIe,
+    /// ATS-coherent over NVLink). No migration; the accessor pays the
+    /// remote bandwidth *every* access — callers fold `remote_bytes`
+    /// into the kernel's execution-time model.
+    pub(super) fn remote_access_host(&mut self, id: AllocId, run: PageRange, now: Ns) -> AccessOutcome {
+        self.space.get_mut(id).pages.update(run, |p| {
+            p.flags.set(PageFlags::GPU_MAPPED, true);
+            p.flags.set(PageFlags::POPULATED, true);
+            if p.residency == Residency::Unmapped {
+                p.residency = Residency::Host;
+            }
+        });
+        let bytes = run.bytes();
+        let dur = self.remote_time(bytes);
+        self.trace.record(TraceKind::RemoteAccess, now, now + dur, bytes, Some(id), "gpu-remote");
+        self.metrics.remote_bytes_gpu_to_host += bytes;
+        AccessOutcome { done: now, remote_bytes: bytes, ..Default::default() }
+    }
+
+    /// GPU write to ReadMostly-duplicated pages: all duplicates are
+    /// invalidated to preserve consistency (paper §II-B) — the host copy
+    /// is dropped and the device copy becomes the only (dirty) one.
+    pub(super) fn invalidate_duplicates(&mut self, id: AllocId, run: PageRange, now: Ns) -> AccessOutcome {
+        let occ = self.fault_path.serve(now, self.policy.invalidation_cost);
+        self.trace.record(TraceKind::Invalidation, occ.start, occ.end, run.bytes(), Some(id), "collapse");
+        self.space.get_mut(id).pages.update(run, |p| {
+            debug_assert_eq!(p.residency, Residency::Both);
+            p.residency = Residency::Device;
+            p.flags.set(PageFlags::DIRTY, true);
+        });
+        self.metrics.invalidated_pages += run.len() as u64;
+        AccessOutcome {
+            done: occ.end,
+            fault_stall: occ.duration(),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::util::units::{GIB, MIB};
+
+    /// Host-initialize then GPU-read: the basic UM first-touch pattern.
+    fn host_then_gpu(r: &mut UmRuntime, size: u64, write: bool) -> (AllocId, AccessOutcome) {
+        let id = r.malloc_managed("x", size);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let out = r.gpu_access(id, full, write, Ns::ZERO);
+        (id, out)
+    }
+
+    #[test]
+    fn migration_moves_bytes_and_faults() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let (_, out) = host_then_gpu(&mut r, 16 * MIB, false);
+        assert_eq!(out.h2d_bytes, 16 * MIB);
+        assert!(out.fault_stall > Ns::ZERO);
+        assert!(out.done > Ns::ZERO);
+        assert_eq!(r.metrics.migrated_pages_h2d, 256);
+        assert_eq!(r.dev.used(), 16 * MIB);
+    }
+
+    #[test]
+    fn read_mostly_read_duplicates() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, crate::um::Advise::ReadMostly, Ns::ZERO);
+        let out = r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(out.h2d_bytes, 4 * MIB, "duplicate copies data");
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Both), 64);
+        assert_eq!(r.metrics.duplicated_pages, 64);
+        // Host copy still valid: host read is local and free of faults.
+        let before = r.metrics.cpu_faults;
+        r.host_access(id, full, false, out.done);
+        assert_eq!(r.metrics.cpu_faults, before);
+    }
+
+    #[test]
+    fn gpu_write_collapses_duplicates() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, crate::um::Advise::ReadMostly, Ns::ZERO);
+        let o1 = r.gpu_access(id, full, false, Ns::ZERO); // duplicate
+        let o2 = r.gpu_access(id, full, true, o1.done); // write -> collapse
+        assert!(o2.fault_stall > Ns::ZERO, "invalidation costs driver time");
+        assert_eq!(r.metrics.invalidated_pages, 64);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Device), 64);
+    }
+
+    #[test]
+    fn pref_host_zero_copy_instead_of_migration() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, crate::um::Advise::PreferredLocation(crate::um::Loc::Cpu), Ns::ZERO);
+        let out = r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(out.h2d_bytes, 0, "no migration");
+        assert_eq!(out.remote_bytes, 4 * MIB, "paid remotely instead");
+        assert_eq!(r.dev.used(), 0);
+    }
+
+    #[test]
+    fn p9_remote_maps_under_pressure_instead_of_evicting() {
+        let mut r = UmRuntime::new(&p9_volta());
+        let cap = r.dev.capacity();
+        let a = r.malloc_managed("a", cap - 64 * MIB);
+        let b = r.malloc_managed("b", GIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        r.gpu_access(a, fa, false, Ns::ZERO); // fills almost all memory
+        let evictions_before = r.dev.evictions;
+        let fb = r.space.get(b).full();
+        let out = r.gpu_access(b, fb, false, Ns::ZERO);
+        assert_eq!(r.dev.evictions, evictions_before, "no eviction storm on P9");
+        assert!(out.remote_bytes > 0, "overflow served remotely");
+        assert!(out.h2d_bytes < GIB, "only the fitting prefix migrated");
+    }
+
+    #[test]
+    fn intel_evicts_under_pressure_no_remote_option() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let cap = r.dev.capacity();
+        let a = r.malloc_managed("a", cap - 64 * MIB);
+        let b = r.malloc_managed("b", 512 * MIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        let fb = r.space.get(b).full();
+        let out = r.gpu_access(b, fb, false, Ns::ZERO);
+        assert!(r.dev.evictions > 0, "PCIe platform must evict");
+        assert_eq!(out.remote_bytes, 0);
+        assert_eq!(out.h2d_bytes, 512 * MIB, "everything migrates");
+    }
+
+    #[test]
+    fn density_escalation_reduces_fault_groups() {
+        let mk = |escalate: bool| {
+            let mut plat = intel_pascal();
+            plat.um.density_escalation = escalate;
+            let mut r = UmRuntime::new(&plat);
+            let id = r.malloc_managed("x", 64 * MIB); // 1024 pages
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+            let out = r.gpu_access(id, full, false, Ns::ZERO);
+            (r.metrics.gpu_fault_groups, out.fault_stall, out.h2d_bytes)
+        };
+        let (groups_fixed, stall_fixed, bytes_fixed) = mk(false);
+        let (groups_ramp, stall_ramp, bytes_ramp) = mk(true);
+        assert!(groups_ramp < groups_fixed / 2, "ramp {groups_ramp} vs fixed {groups_fixed}");
+        assert!(stall_ramp < stall_fixed, "fewer groups, less stall");
+        assert_eq!(bytes_fixed, bytes_ramp, "same data moved either way");
+    }
+
+    #[test]
+    fn etc_throttle_caps_eviction_churn_on_p9() {
+        // Advised (forced-local) accesses beyond the ETC threshold fall
+        // back to remote mapping: churn stops.
+        let run_with = |throttle: bool| {
+            let mut plat = p9_volta();
+            plat.um.etc_throttle = throttle;
+            plat.um.etc_threshold = 256 * MIB;
+            let mut r = UmRuntime::new(&plat);
+            let cap = r.dev.capacity();
+            let a = r.malloc_managed("a", cap - 64 * MIB);
+            let b = r.malloc_managed("b", 2 * crate::util::units::GIB);
+            for id in [a, b] {
+                let full = r.space.get(id).full();
+                r.host_access(id, full, true, Ns::ZERO);
+            }
+            let fb0 = r.space.get(b).full();
+            r.mem_advise(b, fb0, crate::um::Advise::ReadMostly, Ns::ZERO);
+            let fa = r.space.get(a).full();
+            r.gpu_access(a, fa, false, Ns::ZERO);
+            let out = r.gpu_access(b, fb0, false, Ns::ZERO);
+            (r.metrics.evicted_chunks, out.remote_bytes)
+        };
+        let (evictions_plain, remote_plain) = run_with(false);
+        let (evictions_etc, remote_etc) = run_with(true);
+        assert!(evictions_etc < evictions_plain, "throttle cuts churn: {evictions_etc} vs {evictions_plain}");
+        assert!(remote_etc > remote_plain, "remainder served remotely");
+    }
+
+    #[test]
+    fn read_mostly_forces_local_even_under_pressure_on_p9() {
+        let mut r = UmRuntime::new(&p9_volta());
+        let cap = r.dev.capacity();
+        let a = r.malloc_managed("a", cap - 64 * MIB);
+        let b = r.malloc_managed("b", GIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fb0 = r.space.get(b).full();
+        r.mem_advise(b, fb0, crate::um::Advise::ReadMostly, Ns::ZERO);
+        let fa = r.space.get(a).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        let out = r.gpu_access(b, fb0, false, Ns::ZERO);
+        assert!(r.dev.evictions > 0, "advise forces duplication -> eviction");
+        assert_eq!(out.h2d_bytes, GIB, "whole advised range migrated");
+    }
+}

@@ -1,0 +1,33 @@
+//! The Unified Memory runtime simulator — the substrate the paper
+//! evaluates.
+//!
+//! [`runtime::UmRuntime`] is the facade; its mechanisms are split across
+//! `impl` blocks by concern:
+//!
+//! * [`fault`] — GPU fault groups: batching, service cost, replay.
+//! * [`migrate`] — on-demand migration, density-prefetch escalation.
+//! * [`advise`] — `cudaMemAdvise{SetReadMostly, SetPreferredLocation,
+//!   SetAccessedBy}` semantics and their interplay with prefetch.
+//! * [`prefetch`] — `cudaMemPrefetchAsync` bulk transfers.
+//! * [`evict`] — LRU eviction under oversubscription, writeback-vs-drop,
+//!   and the pre-eviction ablation.
+//! * [`host`] — host-side access paths (first-touch population, CPU
+//!   faults, ATS remote access).
+//!
+//! The state model lives in [`crate::mem`]; timing comes from
+//! [`crate::sim`] resource timelines; every data movement is recorded in
+//! a [`crate::trace::Trace`].
+
+pub mod policy;
+pub mod metrics;
+pub mod runtime;
+pub mod fault;
+pub mod migrate;
+pub mod advise;
+pub mod prefetch;
+pub mod evict;
+pub mod host;
+
+pub use metrics::UmMetrics;
+pub use policy::{Advise, Loc, UmPolicy};
+pub use runtime::{AccessOutcome, UmRuntime};

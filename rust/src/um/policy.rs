@@ -1,0 +1,192 @@
+//! UM driver policy knobs and the public advise/location enums.
+//!
+//! Defaults model the CUDA 10.1 driver on Pascal/Volta as characterized
+//! by Sakharnykh (GTC'17, "Unified Memory on Pascal and Volta") and the
+//! paper's §II. Per-platform overrides (fault latencies) live in
+//! `platform::calibration`.
+
+use crate::util::units::{Bytes, Ns, KIB, MIB};
+
+/// `cudaMemAdvise` advice values (paper §II-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advise {
+    /// `cudaMemAdviseSetReadMostly`: duplicate on read fault.
+    ReadMostly,
+    /// `cudaMemAdviseSetPreferredLocation(loc)`: pin pages to `loc`.
+    PreferredLocation(Loc),
+    /// `cudaMemAdviseSetAccessedBy(loc)`: map remotely into `loc`.
+    AccessedBy(Loc),
+    /// The paired `Unset` calls.
+    UnsetReadMostly,
+    UnsetPreferredLocation,
+    UnsetAccessedBy(Loc),
+}
+
+/// A processor / memory location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loc {
+    Cpu,
+    Gpu,
+}
+
+/// Driver policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct UmPolicy {
+    /// Service time for one GPU fault group (driver occupancy):
+    /// interrupt, fault buffer read, dedup, page-table updates.
+    pub fault_group_base: Ns,
+    /// Additional service time per 64 KiB page in the group.
+    pub fault_per_page: Ns,
+    /// Pages the driver migrates per fault group for *unadvised* memory.
+    /// The density prefetcher starts at one 64 KiB block and escalates;
+    /// 8 pages (512 KiB) is the observed average batch mid-stream.
+    pub fault_group_pages: u32,
+    /// Pages per group once `PreferredLocation(Gpu)` told the driver the
+    /// range is wanted on-device: full 2 MiB escalation immediately.
+    pub advised_group_pages: u32,
+    /// Fault-service discount for advised ranges (the driver skips its
+    /// placement heuristics; paper §IV-A observes "page fault handling
+    /// becomes more efficient when the advises are applied").
+    pub advised_fault_discount: f64,
+    /// Multiplier on fault-group count for massively-parallel first
+    /// touch (duplicated faults from many warps, §II-A / [18]).
+    pub dup_fault_factor: f64,
+    /// First-touch population (no data movement) relative service cost.
+    pub populate_discount: f64,
+    /// Cost of collapsing a ReadMostly duplicate on write (invalidation
+    /// broadcast + page-table updates), per invalidated range.
+    pub invalidation_cost: Ns,
+    /// CPU-side page-fault service time (OS + driver round trip).
+    pub cpu_fault_cost: Ns,
+    /// Chunk size for `cudaMemPrefetchAsync` internal splitting.
+    pub prefetch_chunk: Bytes,
+    /// Enable pre-eviction (related-work [3] ablation): keep this many
+    /// bytes free by evicting ahead of demand. 0 disables.
+    pub preevict_watermark: Bytes,
+    /// On coherent (ATS) platforms the driver services faults on
+    /// host-resident pages by *remote mapping* instead of migration once
+    /// the device is under memory pressure, avoiding eviction storms.
+    /// (NVLink/P9 behaviour; PCIe platforms cannot.)
+    pub remote_map_under_pressure: bool,
+    /// Density-based escalation (the driver's tree prefetcher,
+    /// Sakharnykh GTC'17 / Ganguly et al. [3]): during a streaming
+    /// fault sequence the migration granule ramps from
+    /// `fault_group_pages` up to `advised_group_pages` as density
+    /// accumulates, instead of staying fixed. Default off: the fixed
+    /// batch is calibrated as the ramp's average; this flag exposes the
+    /// mechanism for the `ablate_density` study.
+    pub density_escalation: bool,
+    /// ETC-style thrash throttling (Li et al., ASPLOS'19 [10]): once an
+    /// access has evicted more than `etc_threshold` bytes, the driver
+    /// stops forcing locality and serves the remainder by remote
+    /// mapping (coherent platforms). Default off — the paper's testbed
+    /// driver has no such mitigation; the `ablate_etc` study shows it
+    /// rescuing the P9 oversubscription pathology.
+    pub etc_throttle: bool,
+    /// Eviction-bytes-per-access threshold for the ETC throttle.
+    pub etc_threshold: Bytes,
+}
+
+impl Default for UmPolicy {
+    fn default() -> Self {
+        UmPolicy {
+            fault_group_base: Ns::from_us(30.0),
+            fault_per_page: Ns::from_us(1.5),
+            fault_group_pages: 8,
+            advised_group_pages: 32,
+            advised_fault_discount: 0.55,
+            dup_fault_factor: 1.25,
+            populate_discount: 0.30,
+            invalidation_cost: Ns::from_us(15.0),
+            cpu_fault_cost: Ns::from_us(12.0),
+            prefetch_chunk: 4 * MIB,
+            preevict_watermark: 0,
+            remote_map_under_pressure: false,
+            density_escalation: false,
+            etc_throttle: false,
+            etc_threshold: 512 * MIB,
+        }
+    }
+}
+
+impl UmPolicy {
+    /// Effective pages-per-group. Only `PreferredLocation(Gpu)` buys the
+    /// full 2 MiB escalation (`placed == true`): the driver knows the
+    /// whole range belongs on the device. `ReadMostly` duplication
+    /// faults migrate at the default batch — the driver only duplicates
+    /// what is actually read.
+    pub fn group_pages(&self, placed: bool) -> u32 {
+        if placed {
+            self.advised_group_pages
+        } else {
+            self.fault_group_pages
+        }
+    }
+
+    /// Service time of one fault group covering `pages` pages.
+    /// `advised` (any placement/duplication advise) skips the driver's
+    /// placement heuristics — cheaper service.
+    pub fn fault_service(&self, pages: u32, advised: bool) -> Ns {
+        let raw = self.fault_group_base + self.fault_per_page * pages as u64;
+        if advised {
+            raw.scale(self.advised_fault_discount)
+        } else {
+            raw
+        }
+    }
+
+    /// Sanity-check invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fault_group_pages == 0 || self.advised_group_pages == 0 {
+            return Err("group pages must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.advised_fault_discount) {
+            return Err("advised_fault_discount out of [0,1]".into());
+        }
+        if self.dup_fault_factor < 1.0 {
+            return Err("dup_fault_factor < 1".into());
+        }
+        if self.prefetch_chunk < 64 * KIB {
+            return Err("prefetch chunk below page size".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_valid() {
+        UmPolicy::default().validate().unwrap();
+    }
+
+    #[test]
+    fn advised_faults_cheaper_and_bigger() {
+        let p = UmPolicy::default();
+        assert!(p.group_pages(true) > p.group_pages(false));
+        let unadv = p.fault_service(8, false);
+        let adv = p.fault_service(8, true);
+        assert!(adv < unadv, "advised {adv} >= unadvised {unadv}");
+    }
+
+    #[test]
+    fn fault_service_scales_with_pages() {
+        let p = UmPolicy::default();
+        assert!(p.fault_service(32, false) > p.fault_service(1, false));
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut p = UmPolicy::default();
+        p.fault_group_pages = 0;
+        assert!(p.validate().is_err());
+        let mut p = UmPolicy::default();
+        p.dup_fault_factor = 0.5;
+        assert!(p.validate().is_err());
+        let mut p = UmPolicy::default();
+        p.prefetch_chunk = 1024;
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! `cudaMemPrefetchAsync` (paper §II-C): proactive bulk migration in a
+//! stream, avoiding page faults entirely and running near link peak.
+//!
+//! Interplay with advises (modeled exactly as §II-C describes):
+//! * prefetching a `ReadMostly` range *creates the read-only duplicate
+//!   immediately* (host copy stays valid);
+//! * prefetching a range whose `PreferredLocation` is the *other*
+//!   memory un-pins it ("the pages will no longer be pinned").
+
+use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGE_SIZE};
+use crate::mem::page::{AdviseFlags, PageFlags};
+use crate::trace::TraceKind;
+use crate::util::units::Ns;
+
+use super::policy::Loc;
+use super::runtime::UmRuntime;
+
+impl UmRuntime {
+    /// Prefetch `range` of `id` to `dst`; returns the completion time on
+    /// the prefetching stream. The caller decides whether the kernel
+    /// stream waits (background-stream prefetch) or not.
+    pub fn prefetch_async(&mut self, id: AllocId, range: PageRange, dst: Loc, now: Ns) -> Ns {
+        self.metrics.prefetch_calls += 1;
+        let alloc = self.space.get(id);
+        if alloc.kind != crate::mem::AllocKind::Managed {
+            return now; // prefetch of non-managed memory is a no-op
+        }
+        let range = alloc.pages.clamp(range);
+        let mut t = now;
+        let mut pos = range.start;
+        while pos < range.end {
+            let (run, class) = self.next_run(id, pos, range.end);
+            t = match dst {
+                Loc::Gpu => self.prefetch_run_to_gpu(id, run, class.res, t),
+                Loc::Cpu => self.prefetch_run_to_cpu(id, run, class.res, t),
+            };
+            pos = run.end;
+        }
+        self.trace.record(TraceKind::Prefetch, now, t, range.bytes(), Some(id), "cudaMemPrefetchAsync");
+        t
+    }
+
+    fn prefetch_run_to_gpu(&mut self, id: AllocId, run: PageRange, res: Residency, now: Ns) -> Ns {
+        // §II-C: prefetching to GPU a range preferred on the host unpins.
+        self.space.get_mut(id).pages.update(run, |p| {
+            p.advise.set(AdviseFlags::PREF_HOST, false);
+        });
+        match res {
+            Residency::Device | Residency::Both => {
+                self.touch_chunks(id, run, now);
+                now
+            }
+            Residency::Unmapped => {
+                // Populate on device in chunked waves (bulk page-table
+                // setup, no faults); per-wave space reservation handles
+                // runs larger than the free capacity.
+                let pinned = self.space.get(id).pages.get(run.start).advise.preferred_gpu();
+                let wave_pages = (self.policy.prefetch_chunk / PAGE_SIZE) as u32;
+                let mut t = now;
+                let mut page = run.start;
+                while page < run.end {
+                    let wave = PageRange::new(page, (page + wave_pages).min(run.end));
+                    page = wave.end;
+                    let t_space = self.ensure_device_space(wave.bytes(), t);
+                    let occ = self.fault_path.serve(
+                        t_space,
+                        self.policy.fault_service(wave.len(), true).scale(self.policy.populate_discount),
+                    );
+                    self.space.get_mut(id).pages.update(wave, |p| {
+                        p.residency = Residency::Device;
+                        p.flags.set(PageFlags::POPULATED, true);
+                    });
+                    self.add_device_residency(id, wave, pinned, occ.end);
+                    self.metrics.populated_dev_pages += wave.len() as u64;
+                    t = occ.end;
+                }
+                t
+            }
+            Residency::Host => {
+                // Bulk transfer in prefetch_chunk pieces at bulk
+                // efficiency — "prefetching pages in bulk improves
+                // transfer efficiency" (§III-A3).
+                let read_mostly = self.space.get(id).pages.get(run.start).advise.read_mostly();
+                let pinned = self.space.get(id).pages.get(run.start).advise.preferred_gpu();
+                let chunk_pages = (self.policy.prefetch_chunk / PAGE_SIZE) as u32;
+                let mut t = now;
+                let mut page = run.start;
+                while page < run.end {
+                    let piece = PageRange::new(page, (page + chunk_pages).min(run.end));
+                    let t_space = self.ensure_device_space(piece.bytes(), t);
+                    let occ = self.dma_h2d.transfer(t_space, piece.bytes(), self.eff(TransferMode::Bulk));
+                    self.trace.record(TraceKind::UmMemcpyHtoD, occ.start, occ.end, piece.bytes(), Some(id), "prefetch");
+                    self.metrics.h2d_bytes += piece.bytes();
+                    self.metrics.h2d_time += occ.duration();
+                    self.metrics.prefetched_pages_h2d += piece.len() as u64;
+                    self.space.get_mut(id).pages.update(piece, |p| {
+                        // ReadMostly: the duplicate is created
+                        // immediately; otherwise the page migrates.
+                        p.residency = if read_mostly { Residency::Both } else { Residency::Device };
+                        p.flags.set(PageFlags::POPULATED, true);
+                        p.flags.set(PageFlags::GPU_MAPPED, false);
+                    });
+                    if read_mostly {
+                        self.metrics.duplicated_pages += piece.len() as u64;
+                    }
+                    self.add_device_residency(id, piece, pinned, occ.end);
+                    t = occ.end;
+                    page = piece.end;
+                }
+                t
+            }
+        }
+    }
+
+    fn prefetch_run_to_cpu(&mut self, id: AllocId, run: PageRange, res: Residency, now: Ns) -> Ns {
+        // Prefetch to CPU of a GPU-preferred range unpins it.
+        self.space.get_mut(id).pages.update(run, |p| {
+            p.advise.set(AdviseFlags::PREF_GPU, false);
+        });
+        match res {
+            Residency::Host => now,
+            Residency::Unmapped => {
+                // Populate host (cheap, no transfer).
+                self.space.get_mut(id).pages.update(run, |p| {
+                    p.residency = Residency::Host;
+                    p.flags.set(PageFlags::POPULATED, true);
+                });
+                self.metrics.populated_host_pages += run.len() as u64;
+                now
+            }
+            Residency::Both => {
+                // Host copy already valid: drop the device duplicate.
+                self.drop_device_residency(id, run);
+                self.space.get_mut(id).pages.update(run, |p| {
+                    p.residency = Residency::Host;
+                });
+                now
+            }
+            Residency::Device => {
+                let occ = self.dma_d2h.transfer(now, run.bytes(), self.eff(TransferMode::Bulk));
+                self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, run.bytes(), Some(id), "prefetch");
+                self.metrics.d2h_bytes += run.bytes();
+                self.metrics.d2h_time += occ.duration();
+                self.metrics.prefetched_pages_d2h += run.len() as u64;
+                self.drop_device_residency(id, run);
+                self.space.get_mut(id).pages.update(run, |p| {
+                    p.residency = Residency::Host;
+                    p.flags.set(PageFlags::DIRTY, false);
+                    p.flags.set(PageFlags::CPU_MAPPED, false);
+                });
+                occ.end
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::intel_pascal;
+    use crate::um::Advise;
+    use crate::util::units::MIB;
+
+    fn prepped(size: u64) -> (UmRuntime, AllocId, PageRange) {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", size);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        (r, id, full)
+    }
+
+    #[test]
+    fn prefetch_avoids_faults_entirely() {
+        let (mut r, id, full) = prepped(16 * MIB);
+        let t = r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        assert!(t > Ns::ZERO);
+        assert_eq!(r.metrics.gpu_fault_groups, 0, "no faults from prefetch");
+        let out = r.gpu_access(id, full, false, t);
+        assert_eq!(out.fault_stall, Ns::ZERO, "kernel finds everything resident");
+        assert_eq!(out.done, t);
+    }
+
+    #[test]
+    fn prefetch_faster_than_fault_migration() {
+        // Same bytes: prefetch bulk vs fault-driven migration.
+        let (mut r1, id1, full1) = prepped(64 * MIB);
+        let t_prefetch = r1.prefetch_async(id1, full1, Loc::Gpu, Ns::ZERO);
+
+        let (mut r2, id2, full2) = prepped(64 * MIB);
+        let out = r2.gpu_access(id2, full2, false, Ns::ZERO);
+
+        assert!(
+            t_prefetch.0 * 2 < out.done.0,
+            "bulk prefetch ({t_prefetch}) should beat faulted migration ({}) by >2x",
+            out.done
+        );
+    }
+
+    #[test]
+    fn prefetch_read_mostly_creates_duplicate() {
+        let (mut r, id, full) = prepped(4 * MIB);
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Both), 64);
+        assert_eq!(r.metrics.duplicated_pages, 64);
+    }
+
+    #[test]
+    fn prefetch_to_gpu_unpins_host_preference() {
+        let (mut r, id, full) = prepped(4 * MIB);
+        r.mem_advise(id, full, Advise::PreferredLocation(crate::um::Loc::Cpu), Ns::ZERO);
+        r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.preferred_host()), 0, "unpinned by prefetch");
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Device), 64);
+    }
+
+    #[test]
+    fn prefetch_back_to_cpu_moves_dirty_data() {
+        let (mut r, id, full) = prepped(4 * MIB);
+        let t = r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let out = r.gpu_access(id, full, true, t); // dirty it
+        let t2 = r.prefetch_async(id, full, Loc::Cpu, out.done);
+        assert!(t2 > out.done);
+        assert_eq!(r.metrics.prefetched_pages_d2h, 64);
+        assert_eq!(r.dev.used(), 0);
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Host), 64);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn prefetch_duplicates_back_to_cpu_is_free() {
+        let (mut r, id, full) = prepped(4 * MIB);
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        let t = r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        let t2 = r.prefetch_async(id, full, Loc::Cpu, t);
+        assert_eq!(t2, t, "dropping duplicates costs nothing");
+        assert_eq!(r.metrics.prefetched_pages_d2h, 0);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn prefetch_unmapped_populates_without_transfer() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        let before = r.metrics.h2d_bytes;
+        r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        assert_eq!(r.metrics.h2d_bytes, before, "no data for unmapped pages");
+        assert_eq!(r.dev.used(), 4 * MIB);
+    }
+
+    #[test]
+    fn oversized_prefetch_cycles_through_eviction() {
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 32 * MIB;
+        plat.gpu.reserved = 0;
+        let mut r = UmRuntime::new(&plat);
+        let id = r.malloc_managed("big", 64 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        assert!(r.dev.evictions > 0, "prefetch beyond capacity evicts");
+        assert!(r.dev.used() <= 32 * MIB);
+        r.check_residency_invariant().unwrap();
+    }
+}

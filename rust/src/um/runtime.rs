@@ -1,0 +1,486 @@
+//! The `UmRuntime` facade: state, constructor, allocation API, and the
+//! GPU-side access entry point. Mechanism-specific methods live in the
+//! sibling files (`fault`, `migrate`, `advise`, `prefetch`, `evict`,
+//! `host`), all as `impl UmRuntime` blocks.
+
+use crate::mem::{
+    AllocId, AllocKind, ChunkRef, DeviceMemory, ManagedSpace, PageRange, Residency,
+    TransferMode, PAGES_PER_CHUNK, PAGE_SIZE,
+};
+use crate::mem::page::{AdviseFlags, PageFlags};
+use crate::platform::PlatformSpec;
+use crate::sim::{BandwidthResource, SerialResource};
+use crate::trace::{Trace, TraceKind};
+use crate::util::units::{transfer_ns, Bytes, Ns};
+
+use super::metrics::UmMetrics;
+use super::policy::UmPolicy;
+
+/// Result of one (host or GPU) access through the UM runtime.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccessOutcome {
+    /// Simulated time at which the access's data is fully available.
+    pub done: Ns,
+    /// Fault-handling time the accessor stalled on.
+    pub fault_stall: Ns,
+    /// Migration wait beyond the fault service (transfer tail).
+    pub transfer_wait: Ns,
+    /// Bytes this access must pull over the link *during execution*
+    /// (remote/zero-copy reads or writes; a recurring per-access cost).
+    pub remote_bytes: Bytes,
+    /// Bytes migrated H2D / D2H by this access.
+    pub h2d_bytes: Bytes,
+    pub d2h_bytes: Bytes,
+}
+
+impl AccessOutcome {
+    pub fn merge(&mut self, other: AccessOutcome) {
+        self.done = self.done.max(other.done);
+        self.fault_stall += other.fault_stall;
+        self.transfer_wait += other.transfer_wait;
+        self.remote_bytes += other.remote_bytes;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+    }
+}
+
+/// Classification of a page for run-splitting (all fields participate in
+/// equality so runs are homogeneous in every dimension that matters).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(super) struct Class {
+    pub res: Residency,
+    pub read_mostly: bool,
+    pub pref_gpu: bool,
+    pub pref_host: bool,
+    pub accessed_by_cpu: bool,
+    pub gpu_mapped: bool,
+    pub cpu_mapped: bool,
+}
+
+pub(super) fn classify(p: &crate::mem::PageState) -> Class {
+    Class {
+        res: p.residency,
+        read_mostly: p.advise.read_mostly(),
+        pref_gpu: p.advise.preferred_gpu(),
+        pref_host: p.advise.preferred_host(),
+        accessed_by_cpu: p.advise.get(AdviseFlags::ACCESSED_BY_CPU),
+        gpu_mapped: p.flags.get(PageFlags::GPU_MAPPED),
+        cpu_mapped: p.flags.get(PageFlags::CPU_MAPPED),
+    }
+}
+
+/// The Unified Memory runtime simulator.
+pub struct UmRuntime {
+    pub plat: PlatformSpec,
+    pub policy: UmPolicy,
+    pub space: ManagedSpace,
+    pub dev: DeviceMemory,
+    /// DMA engines, one per direction (CUDA UM uses dedicated copy
+    /// engines; transfers in opposite directions overlap).
+    pub dma_h2d: BandwidthResource,
+    pub dma_d2h: BandwidthResource,
+    /// The driver's serialized fault-handling path.
+    pub fault_path: SerialResource,
+    pub metrics: UmMetrics,
+    pub trace: Trace,
+    /// Set once any locality advise (`ReadMostly` /
+    /// `PreferredLocation(Gpu)`) is applied. Placement hints override
+    /// the driver's heuristic remote-overflow behaviour on coherent
+    /// platforms: the driver then strictly honors locality by
+    /// migrate+evict, which under oversubscription produces the P9
+    /// pathology the paper reports (§IV-B; DESIGN.md §1).
+    pub advise_hints_active: bool,
+    /// Eviction bytes charged to the GPU access currently being
+    /// serviced (reset at each `gpu_access`); drives the ETC-throttle
+    /// ablation ([10]).
+    pub(super) access_evicted_bytes: Bytes,
+}
+
+impl UmRuntime {
+    pub fn new(plat: &PlatformSpec) -> UmRuntime {
+        Self::with_policy(plat, plat.um)
+    }
+
+    /// Override the platform's default driver policy (ablations).
+    pub fn with_policy(plat: &PlatformSpec, policy: UmPolicy) -> UmRuntime {
+        policy.validate().expect("invalid UM policy");
+        let link = plat.link;
+        UmRuntime {
+            plat: *plat,
+            policy,
+            space: ManagedSpace::new(),
+            dev: DeviceMemory::new(plat.gpu.usable()),
+            dma_h2d: BandwidthResource::new("dma_h2d", link.peak_bw, link.latency),
+            dma_d2h: BandwidthResource::new("dma_d2h", link.peak_bw, link.latency),
+            fault_path: SerialResource::new("fault_path"),
+            metrics: UmMetrics::default(),
+            trace: Trace::disabled(),
+            advise_hints_active: false,
+            access_evicted_bytes: 0,
+        }
+    }
+
+    pub fn enable_trace(&mut self) {
+        self.trace = Trace::enabled();
+    }
+
+    // ---------------------------------------------------------------
+    // Allocation API
+    // ---------------------------------------------------------------
+
+    /// `cudaMallocManaged`.
+    pub fn malloc_managed(&mut self, name: &str, size: Bytes) -> AllocId {
+        self.space.alloc(name, size, AllocKind::Managed)
+    }
+
+    /// `cudaMalloc` (explicit variant; always device-resident, counted
+    /// against device capacity immediately).
+    pub fn malloc_device(&mut self, name: &str, size: Bytes) -> AllocId {
+        let id = self.space.alloc(name, size, AllocKind::Device);
+        // Device allocations are physically backed at once.
+        let alloc = self.space.get(id);
+        let n_pages = alloc.n_pages();
+        for chunk in 0..n_pages.div_ceil(PAGES_PER_CHUNK) {
+            let pages_in_chunk =
+                (n_pages - chunk * PAGES_PER_CHUNK).min(PAGES_PER_CHUNK);
+            self.dev.add_resident(
+                ChunkRef { alloc: id, chunk },
+                pages_in_chunk as u64 * PAGE_SIZE,
+                Ns::ZERO,
+            );
+            // cudaMalloc memory never migrates nor evicts: lock it.
+            self.dev.set_locked(ChunkRef { alloc: id, chunk }, true);
+        }
+        self.space.get_mut(id).pages.update(
+            PageRange::new(0, n_pages),
+            |p| {
+                p.residency = Residency::Device;
+                p.flags.set(PageFlags::POPULATED, true);
+            },
+        );
+        id
+    }
+
+    /// Pageable host allocation (explicit variant source/destination).
+    pub fn malloc_host(&mut self, name: &str, size: Bytes) -> AllocId {
+        let id = self.space.alloc(name, size, AllocKind::Host);
+        let n = self.space.get(id).n_pages();
+        self.space.get_mut(id).pages.update(PageRange::new(0, n), |p| {
+            p.residency = Residency::Host;
+            p.flags.set(PageFlags::POPULATED, true);
+        });
+        id
+    }
+
+    // ---------------------------------------------------------------
+    // Explicit copies (non-UM variant)
+    // ---------------------------------------------------------------
+
+    /// `cudaMemcpy(dst_device, src_host)`: bulk transfer; returns
+    /// completion time. Not part of kernel execution time (the paper's
+    /// figure of merit), but traced.
+    pub fn memcpy_h2d(&mut self, dst: AllocId, bytes: Bytes, now: Ns) -> Ns {
+        debug_assert_eq!(self.space.get(dst).kind, AllocKind::Device);
+        let occ = self.dma_h2d.transfer(now, bytes, self.plat.link.eff_bulk);
+        self.metrics.h2d_bytes += bytes;
+        self.metrics.h2d_time += occ.duration();
+        self.trace.record(TraceKind::MemcpyHtoD, occ.start, occ.end, bytes, Some(dst), "cudaMemcpy");
+        occ.end
+    }
+
+    /// `cudaMemcpy(dst_host, src_device)`.
+    pub fn memcpy_d2h(&mut self, src: AllocId, bytes: Bytes, now: Ns) -> Ns {
+        debug_assert_eq!(self.space.get(src).kind, AllocKind::Device);
+        let occ = self.dma_d2h.transfer(now, bytes, self.plat.link.eff_bulk);
+        self.metrics.d2h_bytes += bytes;
+        self.metrics.d2h_time += occ.duration();
+        self.trace.record(TraceKind::MemcpyDtoH, occ.start, occ.end, bytes, Some(src), "cudaMemcpy");
+        occ.end
+    }
+
+    // ---------------------------------------------------------------
+    // GPU-side access (the kernel hot path)
+    // ---------------------------------------------------------------
+
+    /// A GPU kernel touches `range` of `id` at time `now`. Resolves
+    /// faults/migrations/remote mappings and returns when the data is
+    /// available plus the stall breakdown. `write` marks pages dirty and
+    /// collapses ReadMostly duplicates.
+    pub fn gpu_access(&mut self, id: AllocId, range: PageRange, write: bool, now: Ns) -> AccessOutcome {
+        let alloc = self.space.get(id);
+        if alloc.kind != AllocKind::Managed {
+            // cudaMalloc memory: always resident, no UM involvement.
+            return AccessOutcome { done: now, ..Default::default() };
+        }
+        let range = alloc.pages.clamp(range);
+        self.access_evicted_bytes = 0;
+
+        // Incremental run-splitting: classification happens *as the
+        // access proceeds*, because servicing an earlier run can evict
+        // pages of a later run of the same access (cyclic thrashing
+        // under oversubscription does exactly this).
+        let mut out = AccessOutcome { done: now, ..Default::default() };
+        let mut ready = now;
+        let mut pos = range.start;
+        while pos < range.end {
+            let (run, class) = self.next_run(id, pos, range.end);
+            let o = self.gpu_access_run(id, run, class, write, ready);
+            // The driver handles this access's fault groups in order;
+            // later runs queue behind earlier ones.
+            ready = ready.max(o.done);
+            out.merge(o);
+            pos = run.end;
+        }
+        out.done = ready;
+        out
+    }
+
+    /// The maximal homogeneous run starting at `pos` (fresh state).
+    ///
+    /// Hot path (§Perf): the scan compares a packed per-page key (one
+    /// u32 of residency + advise bits + mapping flags) instead of
+    /// building the full [`Class`] per page; the `Class` is
+    /// materialized once per run.
+    pub(super) fn next_run(&self, id: AllocId, pos: u32, limit: u32) -> (PageRange, Class) {
+        #[inline(always)]
+        fn key(p: &crate::mem::PageState) -> u32 {
+            // Residency, all advise bits, and the two mapping flags —
+            // exactly the fields `classify` reads.
+            let mapping = p.flags.0 & (PageFlags::GPU_MAPPED | PageFlags::CPU_MAPPED);
+            (p.residency as u32) | ((p.advise.0 as u32) << 8) | ((mapping as u32) << 16)
+        }
+        let pages = &self.space.get(id).pages;
+        let first = pages.get(pos);
+        let k = key(first);
+        let class = classify(first);
+        let mut end = pos + 1;
+        while end < limit && key(pages.get(end)) == k {
+            end += 1;
+        }
+        (PageRange::new(pos, end), class)
+    }
+
+    /// Handle one homogeneous run. Dispatches to the mechanism modules.
+    fn gpu_access_run(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        match class.res {
+            Residency::Device => {
+                self.touch_chunks(id, run, now);
+                if write {
+                    self.mark_dirty(id, run);
+                }
+                AccessOutcome { done: now, ..Default::default() }
+            }
+            Residency::Both => {
+                self.touch_chunks(id, run, now);
+                if write {
+                    // Collapse ReadMostly duplicates (invalidation).
+                    self.invalidate_duplicates(id, run, now)
+                } else {
+                    AccessOutcome { done: now, ..Default::default() }
+                }
+            }
+            Residency::Unmapped => self.populate_on_device(id, run, write, now),
+            Residency::Host => {
+                if class.gpu_mapped || (class.pref_host && self.plat.gpu_can_access_host) {
+                    // Established (or establishable) remote mapping:
+                    // access host memory in place, no migration.
+                    self.remote_access_host(id, run, now)
+                } else {
+                    self.migrate_or_map_h2d(id, run, class, write, now)
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Shared helpers used by the mechanism modules
+    // ---------------------------------------------------------------
+
+    pub(super) fn chunk_of(page: u32) -> u32 {
+        page / PAGES_PER_CHUNK
+    }
+
+    /// Refresh the LRU position of every chunk overlapping `run`.
+    pub(super) fn touch_chunks(&mut self, id: AllocId, run: PageRange, now: Ns) {
+        let first = Self::chunk_of(run.start);
+        let last = Self::chunk_of(run.end.saturating_sub(1).max(run.start));
+        for chunk in first..=last {
+            self.dev.touch(ChunkRef { alloc: id, chunk }, now);
+        }
+    }
+
+    pub(super) fn mark_dirty(&mut self, id: AllocId, run: PageRange) {
+        self.space.get_mut(id).pages.update(run, |p| p.flags.set(PageFlags::DIRTY, true));
+    }
+
+    /// Register `run`'s pages as device-resident (LRU + accounting).
+    /// `pinned` pins the covered chunks (PreferredLocation=GPU).
+    pub(super) fn add_device_residency(&mut self, id: AllocId, run: PageRange, pinned: bool, now: Ns) {
+        let mut page = run.start;
+        while page < run.end {
+            let chunk = Self::chunk_of(page);
+            let chunk_end = ((chunk + 1) * PAGES_PER_CHUNK).min(run.end);
+            let pages_here = chunk_end - page;
+            let cref = ChunkRef { alloc: id, chunk };
+            self.dev.add_resident(cref, pages_here as u64 * PAGE_SIZE, now);
+            if pinned {
+                self.dev.set_pinned(cref, true);
+            }
+            page = chunk_end;
+        }
+    }
+
+    /// Time for the GPU to pull `bytes` over the link by remote access.
+    pub(super) fn remote_time(&self, bytes: Bytes) -> Ns {
+        transfer_ns(bytes, self.plat.link.remote_bw)
+    }
+
+    /// Transfer-mode shortcut.
+    pub(super) fn eff(&self, mode: TransferMode) -> f64 {
+        self.plat.link.efficiency(mode)
+    }
+
+    /// Reset all run state (new repetition) keeping allocations' *sizes*
+    /// but clearing page state, residency, clocks, metrics, trace.
+    pub fn reset_run_state(&mut self) {
+        for i in 0..self.space.len() {
+            let id = AllocId(i as u32);
+            let kind = self.space.get(id).kind;
+            let n = self.space.get(id).n_pages();
+            self.space.get_mut(id).pages.update(PageRange::new(0, n), |p| {
+                *p = Default::default();
+                if kind != AllocKind::Managed {
+                    p.residency = if kind == AllocKind::Device { Residency::Device } else { Residency::Host };
+                    p.flags.set(PageFlags::POPULATED, true);
+                }
+            });
+        }
+        let was_enabled = self.trace.is_enabled();
+        self.advise_hints_active = false;
+        self.dev.reset();
+        self.dma_h2d.reset();
+        self.dma_d2h.reset();
+        self.fault_path.reset();
+        self.metrics.reset();
+        self.trace = if was_enabled { Trace::enabled() } else { Trace::disabled() };
+        // Re-pin cudaMalloc allocations.
+        for i in 0..self.space.len() {
+            let id = AllocId(i as u32);
+            if self.space.get(id).kind == AllocKind::Device {
+                let n_pages = self.space.get(id).n_pages();
+                for chunk in 0..n_pages.div_ceil(PAGES_PER_CHUNK) {
+                    let pages_in_chunk = (n_pages - chunk * PAGES_PER_CHUNK).min(PAGES_PER_CHUNK);
+                    let cref = ChunkRef { alloc: id, chunk };
+                    self.dev.add_resident(cref, pages_in_chunk as u64 * PAGE_SIZE, Ns::ZERO);
+                    self.dev.set_locked(cref, true);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::util::units::{GIB, MIB};
+
+    fn rt() -> UmRuntime {
+        UmRuntime::new(&intel_pascal())
+    }
+
+    #[test]
+    fn managed_alloc_starts_unmapped() {
+        let mut r = rt();
+        let a = r.malloc_managed("x", 64 * MIB);
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(alloc.full(), |p| p.residency == Residency::Unmapped), alloc.n_pages());
+        assert_eq!(r.dev.used(), 0);
+    }
+
+    #[test]
+    fn device_alloc_is_resident_and_pinned() {
+        let mut r = rt();
+        let a = r.malloc_device("d", 8 * MIB);
+        assert_eq!(r.dev.used(), 8 * MIB);
+        // pinned: non-forced LRU pop can't evict it
+        assert!(r.dev.pop_lru(false).is_none());
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(alloc.full(), |p| p.residency == Residency::Device), alloc.n_pages());
+    }
+
+    #[test]
+    fn explicit_memcpy_not_fault_path() {
+        let mut r = rt();
+        let d = r.malloc_device("d", 8 * MIB);
+        let end = r.memcpy_h2d(d, 8 * MIB, Ns::ZERO);
+        assert!(end > Ns::ZERO);
+        assert_eq!(r.metrics.gpu_fault_groups, 0);
+        assert_eq!(r.metrics.h2d_bytes, 8 * MIB);
+    }
+
+    #[test]
+    fn gpu_access_to_device_alloc_is_free() {
+        let mut r = rt();
+        let d = r.malloc_device("d", 8 * MIB);
+        let full = r.space.get(d).full();
+        let out = r.gpu_access(d, full, false, Ns(5));
+        assert_eq!(out.done, Ns(5));
+        assert_eq!(out.fault_stall, Ns::ZERO);
+    }
+
+    #[test]
+    fn first_gpu_touch_populates_without_transfer() {
+        let mut r = rt();
+        let a = r.malloc_managed("x", 16 * MIB);
+        let full = r.space.get(a).full();
+        let out = r.gpu_access(a, full, true, Ns::ZERO);
+        assert!(out.done > Ns::ZERO, "population costs fault handling");
+        assert_eq!(out.h2d_bytes, 0, "no data moves for first-touch populate");
+        assert_eq!(r.dev.used(), 16 * MIB);
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(alloc.full(), |p| p.residency == Residency::Device), alloc.n_pages());
+    }
+
+    #[test]
+    fn second_access_is_free() {
+        let mut r = rt();
+        let a = r.malloc_managed("x", 16 * MIB);
+        let full = r.space.get(a).full();
+        let first = r.gpu_access(a, full, false, Ns::ZERO);
+        let second = r.gpu_access(a, full, false, first.done);
+        assert_eq!(second.done, first.done, "resident access has no cost");
+        assert_eq!(second.fault_stall, Ns::ZERO);
+    }
+
+    #[test]
+    fn reset_run_state_clears_everything() {
+        let mut r = rt();
+        let a = r.malloc_managed("x", 16 * MIB);
+        let d = r.malloc_device("d", 4 * MIB);
+        let full = r.space.get(a).full();
+        r.gpu_access(a, full, true, Ns::ZERO);
+        r.reset_run_state();
+        assert_eq!(r.metrics, UmMetrics::default());
+        assert_eq!(r.dev.used(), 4 * MIB, "device alloc re-pinned, managed cleared");
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(alloc.full(), |p| p.residency == Residency::Unmapped), alloc.n_pages());
+        let _ = d;
+    }
+
+    #[test]
+    fn oversubscribed_footprint_allocatable() {
+        // Allocating more managed memory than the device holds is legal;
+        // faults + eviction deal with it at access time.
+        let mut r = UmRuntime::new(&p9_volta());
+        let a = r.malloc_managed("big", 24 * GIB);
+        assert!(r.space.get(a).size > r.dev.capacity());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CSV writer (RFC-4180 quoting) for figure/table data dumps.
+//!
+//! Every bench harness writes its series both as an aligned text table
+//! (human) and as CSV under `results/` (plotting); this is the CSV half.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A CSV document being accumulated in memory.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Csv {
+        Csv { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, fields: Vec<S>) -> &mut Self {
+        let fields: Vec<String> = fields.into_iter().map(Into::into).collect();
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(self.to_string().as_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_roundtrip() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]).row(vec!["3", "4"]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n3,4\n");
+        assert_eq!(c.n_rows(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut c = Csv::new(vec!["x"]);
+        c.row(vec!["has,comma"]);
+        c.row(vec!["has\"quote"]);
+        c.row(vec!["has\nnewline"]);
+        let s = c.to_string();
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"has\"\"quote\""));
+        assert!(s.contains("\"has\nnewline\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("umbra_csv_test");
+        let path = dir.join("sub/t.csv");
+        let mut c = Csv::new(vec!["a"]);
+        c.row(vec!["1"]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal iterative radix-2 complex FFT (used by the conv validation
+//! reference; sizes are powers of two at validation scale).
+
+/// Complex number as (re, im) f64 pair.
+pub type C = (f64, f64);
+
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+/// In-place iterative Cooley-Tukey. `inverse` applies conjugate
+/// twiddles and the 1/n scale.
+pub fn fft(data: &mut [C], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = c_mul(data[i + k + len / 2], w);
+                data[i + k] = c_add(u, v);
+                data[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        for x in data.iter_mut() {
+            x.0 /= n as f64;
+            x.1 /= n as f64;
+        }
+    }
+}
+
+/// 2-D FFT over a row-major `h x w` grid (both powers of two).
+pub fn fft2(data: &mut Vec<C>, h: usize, w: usize, inverse: bool) {
+    assert_eq!(data.len(), h * w);
+    // Rows.
+    for r in 0..h {
+        fft(&mut data[r * w..(r + 1) * w], inverse);
+    }
+    // Columns.
+    let mut col = vec![(0.0, 0.0); h];
+    for c in 0..w {
+        for r in 0..h {
+            col[r] = data[r * w + c];
+        }
+        fft(&mut col, inverse);
+        for r in 0..h {
+            data[r * w + c] = col[r];
+        }
+    }
+}
+
+/// Circular 2-D convolution of two real images via the FFT theorem.
+pub fn circular_conv2(img: &[f32], ker: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let mut a: Vec<C> = img.iter().map(|&x| (x as f64, 0.0)).collect();
+    let mut b: Vec<C> = ker.iter().map(|&x| (x as f64, 0.0)).collect();
+    fft2(&mut a, h, w, false);
+    fft2(&mut b, h, w, false);
+    for i in 0..a.len() {
+        a[i] = c_mul(a[i], b[i]);
+    }
+    fft2(&mut a, h, w, true);
+    a.iter().map(|&(re, _)| re as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip() {
+        let orig: Vec<C> = (0..64).map(|i| (i as f64, (i * 3 % 7) as f64)).collect();
+        let mut data = orig.clone();
+        fft(&mut data, false);
+        fft(&mut data, true);
+        for (a, b) in data.iter().zip(&orig) {
+            assert!((a.0 - b.0).abs() < 1e-9 && (a.1 - b.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut data = vec![(0.0, 0.0); 16];
+        data[0] = (1.0, 0.0);
+        fft(&mut data, false);
+        for x in data {
+            assert!((x.0 - 1.0).abs() < 1e-12 && x.1.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let orig: Vec<C> = (0..32).map(|i| ((i as f64).sin(), 0.0)).collect();
+        let t: f64 = orig.iter().map(|x| x.0 * x.0 + x.1 * x.1).sum();
+        let mut data = orig.clone();
+        fft(&mut data, false);
+        let f: f64 = data.iter().map(|x| x.0 * x.0 + x.1 * x.1).sum();
+        assert!((f / 32.0 - t).abs() < 1e-9, "{f} vs {t}");
+    }
+
+    #[test]
+    fn conv_with_delta_is_identity() {
+        let img: Vec<f32> = (0..64).map(|i| i as f32 * 0.1).collect();
+        let mut ker = vec![0.0f32; 64];
+        ker[0] = 1.0;
+        let out = circular_conv2(&img, &ker, 8, 8);
+        for (a, b) in out.iter().zip(&img) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn conv_shift() {
+        let img: Vec<f32> = (0..64).map(|i| (i as f32).cos()).collect();
+        let mut ker = vec![0.0f32; 64];
+        ker[1] = 1.0; // shift by one column
+        let out = circular_conv2(&img, &ker, 8, 8);
+        for r in 0..8 {
+            for c in 0..8 {
+                let src = r * 8 + (c + 8 - 1) % 8;
+                assert!((out[r * 8 + c] - img[src]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_rejected() {
+        let mut d = vec![(0.0, 0.0); 12];
+        fft(&mut d, false);
+    }
+}

@@ -1,0 +1,21 @@
+//! Small self-contained utilities: units, RNG, statistics, CSV/table
+//! output, a thread pool and a property-testing driver.
+//!
+//! These stand in for crates that are unavailable in the offline build
+//! environment (`rand`, `criterion`, `proptest`, `rayon`); see
+//! DESIGN.md §2 *Substitutions*.
+
+pub mod units;
+pub mod rng;
+pub mod fft;
+pub mod fxhash;
+pub mod stats;
+pub mod csvout;
+pub mod table;
+pub mod pool;
+pub mod quick;
+pub mod logging;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use units::{Bytes, Ns, GIB, KIB, MIB};

@@ -1,0 +1,134 @@
+//! A small fixed-size thread pool (std-only; rayon/tokio are unavailable
+//! in the offline crate set). The coordinator uses it to run independent
+//! (app × variant × platform) benchmark cells in parallel.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are `FnOnce` closures; results travel
+/// back through caller-owned channels (see [`Pool::map`]).
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Pool {
+        assert!(n >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("umbra-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    /// Pool sized to the machine (`min(cores, cap)`).
+    pub fn with_default_size(cap: usize) -> Pool {
+        let cores = thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        Pool::new(cores.min(cap).max(1))
+    }
+
+    /// Submit a raw job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("workers alive");
+    }
+
+    /// Run one closure per input, preserving input order in the output.
+    pub fn map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(input);
+                // Receiver may be gone if the caller panicked; ignore.
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(4);
+        let out = pool.map((0..64u64).collect(), |x| x * x);
+        assert_eq!(out, (0..64u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = Pool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let _ = pool.map((0..100).collect::<Vec<i32>>(), move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pool = Pool::new(2);
+        let out: Vec<u8> = pool.map(Vec::<u8>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(2);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn default_size_at_least_one() {
+        let pool = Pool::with_default_size(2);
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,161 @@
+//! `quick` — a small seeded property-testing driver (proptest is not in
+//! the offline crate set; see DESIGN.md §2 Substitutions).
+//!
+//! Usage (`no_run`: rustdoc test binaries don't get the crate's rpath
+//! to the xla_extension-bundled libstdc++; the same code runs in unit
+//! tests below):
+//! ```no_run
+//! use umbra::quick_assert;
+//! use umbra::util::quick::{forall, Gen};
+//! forall("add-commutes", 200, |g: &mut Gen| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     quick_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the driver re-runs the failing case with a fresh `Gen`
+//! seeded identically and panics with the case seed, so any failure is
+//! reproducible with `forall_seeded(name, seed, ..)`.
+
+use super::rng::Rng;
+
+/// Value generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        self.rng.range(lo, hi_inclusive + 1)
+    }
+    pub fn usize(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.u64(lo as u64, hi_inclusive as u64) as usize
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+    /// One of the provided items (cloned).
+    pub fn pick<T: Clone>(&mut self, items: &[T]) -> T {
+        self.rng.choose(items).clone()
+    }
+    /// A vector of `len` values produced by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property outcome: `Err(msg)` fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property body, producing `PropResult` context.
+#[macro_export]
+macro_rules! quick_assert {
+    ($cond:expr, $($msg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($msg)+));
+        }
+    };
+}
+
+/// Run `cases` cases of the property with derived seeds. Panics with the
+/// failing seed + message on the first failure.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    // Base seed is fixed: property runs are reproducible across machines.
+    // Override with UMBRA_QUICK_SEED for exploratory fuzzing.
+    let base = std::env::var("UMBRA_QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000_u64);
+    let mut seeder = Rng::new(base ^ hash_name(name));
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}):\n  {msg}\n\
+                 reproduce with forall_seeded(\"{name}\", {seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn forall_seeded(name: &str, seed: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, enough to decorrelate property streams by name.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("u64-in-bounds", 100, |g| {
+            let v = g.u64(3, 9);
+            quick_assert!((3..=9).contains(&v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn vec_and_pick() {
+        forall("vec-pick", 50, |g| {
+            let n = g.usize(1, 16);
+            let v = g.vec(n, |g| g.u64(0, 5));
+            quick_assert!(v.len() == n, "len");
+            let x = g.pick(&v);
+            quick_assert!(v.contains(&x), "pick member");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut trace1 = Vec::new();
+        forall("det", 5, |g| {
+            trace1.push(g.u64(0, 1000));
+            Ok(())
+        });
+        let mut trace2 = Vec::new();
+        forall("det", 5, |g| {
+            trace2.push(g.u64(0, 1000));
+            Ok(())
+        });
+        assert_eq!(trace1, trace2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Streaming statistics (Welford) and summaries for benchmark repetitions.
+//!
+//! The paper reports "average GPU kernel execution time and standard
+//! deviation" over up to five runs; [`Summary`] is the exact analogue.
+
+use super::units::Ns;
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Sample standard deviation (n-1); 0 for fewer than two samples.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+}
+
+/// Summary of repeated timing measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: Ns,
+    pub std: Ns,
+    pub min: Ns,
+    pub max: Ns,
+}
+
+impl Summary {
+    pub fn of(samples: &[Ns]) -> Summary {
+        let mut w = Welford::new();
+        for s in samples {
+            w.push(s.0 as f64);
+        }
+        Summary {
+            n: w.count(),
+            mean: Ns(w.mean().round() as u64),
+            std: Ns(w.std().round() as u64),
+            min: Ns(if w.count() == 0 { 0 } else { w.min() as u64 }),
+            max: Ns(if w.count() == 0 { 0 } else { w.max() as u64 }),
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation).
+    pub fn rsd(&self) -> f64 {
+        if self.mean.0 == 0 {
+            0.0
+        } else {
+            self.std.0 as f64 / self.mean.0 as f64
+        }
+    }
+}
+
+/// Percentile of a sample set (nearest-rank; `p` in [0,100]).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (samples.len() as f64 - 1.0)).round() as usize;
+    samples[rank]
+}
+
+/// Geometric mean of positive values (used for cross-app speedup roll-ups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample std of this classic set is sqrt(32/7)
+        assert!((w.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_of_ns() {
+        let s = Summary::of(&[Ns(100), Ns(200), Ns(300)]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, Ns(200));
+        assert_eq!(s.min, Ns(100));
+        assert_eq!(s.max, Ns(300));
+        assert_eq!(s.std, Ns(100));
+    }
+
+    #[test]
+    fn summary_empty_and_single() {
+        let e = Summary::of(&[]);
+        assert_eq!(e.n, 0);
+        assert_eq!(e.mean, Ns(0));
+        let s = Summary::of(&[Ns(42)]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, Ns(42));
+        assert_eq!(s.std, Ns(0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 50.0), 3.0);
+        assert_eq!(percentile(&mut xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rsd_zero_mean() {
+        let s = Summary::of(&[Ns(0), Ns(0)]);
+        assert_eq!(s.rsd(), 0.0);
+    }
+}

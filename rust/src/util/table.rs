@@ -1,0 +1,113 @@
+//! Aligned plain-text tables for terminal reports (the human-readable
+//! rendering of every regenerated paper table/figure).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A text table under construction.
+#[derive(Debug, Clone)]
+pub struct TextTable {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> TextTable {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let align = vec![Align::Right; header.len()];
+        TextTable { header, align, rows: Vec::new(), title: None }
+    }
+
+    pub fn title<S: Into<String>>(mut self, t: S) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// Mark column `i` as left-aligned (labels); default is right (numbers).
+    pub fn left(mut self, i: usize) -> Self {
+        self.align[i] = Align::Left;
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, fields: Vec<S>) -> &mut Self {
+        let fields: Vec<String> = fields.into_iter().map(Into::into).collect();
+        assert_eq!(fields.len(), self.header.len(), "row width mismatch");
+        self.rows.push(fields);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                width[i] = width[i].max(f.chars().count());
+            }
+        }
+        let fmt_row = |fields: &[String], width: &[usize], align: &[Align]| -> String {
+            let cells: Vec<String> = fields
+                .iter()
+                .enumerate()
+                .map(|(i, f)| match align[i] {
+                    Align::Left => format!("{:<w$}", f, w = width[i]),
+                    Align::Right => format!("{:>w$}", f, w = width[i]),
+                })
+                .collect();
+            cells.join("  ").trim_end().to_string()
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&fmt_row(&self.header, &width, &self.align));
+        out.push('\n');
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width, &self.align));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligns_columns() {
+        let mut t = TextTable::new(vec!["name", "val"]).left(0);
+        t.row(vec!["a", "1"]);
+        t.row(vec!["long-name", "1234"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "name        val");
+        assert_eq!(lines[2], "a             1");
+        assert_eq!(lines[3], "long-name  1234");
+    }
+
+    #[test]
+    fn title_rendered_first() {
+        let t = TextTable::new(vec!["x"]).title("Table I");
+        assert!(t.render().starts_with("Table I\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn bad_width_panics() {
+        let mut t = TextTable::new(vec!["a", "b"]);
+        t.row(vec!["1"]);
+    }
+}

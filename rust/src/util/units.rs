@@ -1,0 +1,216 @@
+//! Byte-size and simulated-time units.
+//!
+//! Simulated time is kept in integer **nanoseconds** (`Ns`) for exact,
+//! platform-independent reproducibility of every figure. Bandwidths are
+//! `f64` bytes/second; conversions round half-up to the nearest ns.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// Bytes, as a plain alias (sizes in this crate easily exceed 4 GiB).
+pub type Bytes = u64;
+
+pub const KIB: Bytes = 1 << 10;
+pub const MIB: Bytes = 1 << 20;
+pub const GIB: Bytes = 1 << 30;
+
+/// Simulated time in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct Ns(pub u64);
+
+impl Ns {
+    pub const ZERO: Ns = Ns(0);
+    pub const MAX: Ns = Ns(u64::MAX);
+
+    pub fn from_us(us: f64) -> Ns {
+        Ns((us * 1_000.0).round() as u64)
+    }
+    pub fn from_ms(ms: f64) -> Ns {
+        Ns((ms * 1_000_000.0).round() as u64)
+    }
+    pub fn from_secs(s: f64) -> Ns {
+        Ns((s * 1e9).round() as u64)
+    }
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn saturating_sub(self, other: Ns) -> Ns {
+        Ns(self.0.saturating_sub(other.0))
+    }
+    pub fn max(self, other: Ns) -> Ns {
+        Ns(self.0.max(other.0))
+    }
+    pub fn min(self, other: Ns) -> Ns {
+        Ns(self.0.min(other.0))
+    }
+    /// Scale by a dimensionless factor (used by stall/overlap models).
+    pub fn scale(self, f: f64) -> Ns {
+        Ns((self.0 as f64 * f).round() as u64)
+    }
+}
+
+impl Add for Ns {
+    type Output = Ns;
+    fn add(self, rhs: Ns) -> Ns {
+        Ns(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Ns {
+    fn add_assign(&mut self, rhs: Ns) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for Ns {
+    type Output = Ns;
+    fn sub(self, rhs: Ns) -> Ns {
+        Ns(self.0 - rhs.0)
+    }
+}
+impl SubAssign for Ns {
+    fn sub_assign(&mut self, rhs: Ns) {
+        self.0 -= rhs.0;
+    }
+}
+impl Mul<u64> for Ns {
+    type Output = Ns;
+    fn mul(self, rhs: u64) -> Ns {
+        Ns(self.0 * rhs)
+    }
+}
+impl Div<u64> for Ns {
+    type Output = Ns;
+    fn div(self, rhs: u64) -> Ns {
+        Ns(self.0 / rhs)
+    }
+}
+impl Sum for Ns {
+    fn sum<I: Iterator<Item = Ns>>(iter: I) -> Ns {
+        iter.fold(Ns::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Ns {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 1_000_000_000 {
+            write!(f, "{:.3} s", self.as_secs())
+        } else if ns >= 1_000_000 {
+            write!(f, "{:.3} ms", self.as_ms())
+        } else if ns >= 1_000 {
+            write!(f, "{:.3} us", self.as_us())
+        } else {
+            write!(f, "{ns} ns")
+        }
+    }
+}
+
+/// Time to transfer `bytes` at `bw` bytes/second (plus nothing else;
+/// latency is added by callers that model per-message setup cost).
+pub fn transfer_ns(bytes: Bytes, bw_bytes_per_sec: f64) -> Ns {
+    debug_assert!(bw_bytes_per_sec > 0.0);
+    Ns(((bytes as f64 / bw_bytes_per_sec) * 1e9).round() as u64)
+}
+
+/// Pretty-print a byte count ("4.00 GiB").
+pub fn fmt_bytes(b: Bytes) -> String {
+    if b >= GIB {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.2} KiB", b as f64 / KIB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Parse "4g", "512m", "64k", "123" into bytes (CLI helper).
+pub fn parse_bytes(s: &str) -> Option<Bytes> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = s.strip_suffix("gib").or(s.strip_suffix("gb")).or(s.strip_suffix("g")) {
+        (p, GIB)
+    } else if let Some(p) = s.strip_suffix("mib").or(s.strip_suffix("mb")).or(s.strip_suffix("m")) {
+        (p, MIB)
+    } else if let Some(p) = s.strip_suffix("kib").or(s.strip_suffix("kb")).or(s.strip_suffix("k")) {
+        (p, KIB)
+    } else {
+        (s.as_str(), 1)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64).round() as Bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_arithmetic() {
+        let a = Ns::from_us(2.0);
+        let b = Ns::from_us(3.0);
+        assert_eq!((a + b).0, 5_000);
+        assert_eq!((b - a).0, 1_000);
+        assert_eq!((a * 3).0, 6_000);
+        assert_eq!((b / 3).0, 1_000);
+    }
+
+    #[test]
+    fn ns_conversions_roundtrip() {
+        assert_eq!(Ns::from_ms(1.5).0, 1_500_000);
+        assert_eq!(Ns::from_secs(2.0).0, 2_000_000_000);
+        assert!((Ns(1_500_000).as_ms() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ns_display_scales() {
+        assert_eq!(format!("{}", Ns(12)), "12 ns");
+        assert_eq!(format!("{}", Ns(12_000)), "12.000 us");
+        assert_eq!(format!("{}", Ns(12_000_000)), "12.000 ms");
+        assert_eq!(format!("{}", Ns(12_000_000_000)), "12.000 s");
+    }
+
+    #[test]
+    fn transfer_time_simple() {
+        // 12 GB/s moving 12 GiB -> slightly over one second (GiB vs GB).
+        let t = transfer_ns(12 * GIB, 12e9);
+        assert!(t > Ns::from_secs(1.0) && t < Ns::from_secs(1.1), "{t}");
+        // zero bytes takes zero time
+        assert_eq!(transfer_ns(0, 12e9), Ns::ZERO);
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * MIB), "3.00 MiB");
+        assert_eq!(fmt_bytes(4 * GIB), "4.00 GiB");
+    }
+
+    #[test]
+    fn bytes_parse() {
+        assert_eq!(parse_bytes("4g"), Some(4 * GIB));
+        assert_eq!(parse_bytes("512M"), Some(512 * MIB));
+        assert_eq!(parse_bytes("64kib"), Some(64 * KIB));
+        assert_eq!(parse_bytes("1.5g"), Some((1.5 * GIB as f64) as u64));
+        assert_eq!(parse_bytes("123"), Some(123));
+        assert_eq!(parse_bytes("nope"), None);
+        assert_eq!(parse_bytes("-1g"), None);
+    }
+
+    #[test]
+    fn saturating_and_scale() {
+        assert_eq!(Ns(5).saturating_sub(Ns(9)), Ns::ZERO);
+        assert_eq!(Ns(1000).scale(0.5), Ns(500));
+        assert_eq!(Ns(1000).scale(2.0), Ns(2000));
+    }
+}

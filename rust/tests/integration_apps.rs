@@ -1,0 +1,162 @@
+//! Integration tests over the application layer: the paper's findings
+//! as executable assertions, at reduced footprints for speed (the
+//! full-scale versions run in `examples/end_to_end.rs` and the benches).
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::coordinator::{run_cell, Cell, Suite, SuiteConfig};
+use umbra::platform::PlatformId;
+use umbra::util::units::Ns;
+
+#[test]
+fn every_app_runs_every_variant_on_every_platform_small() {
+    // Smoke the full matrix at 64 MiB footprints.
+    for app in AppId::ALL {
+        let a = app.build(64 * 1024 * 1024);
+        for plat in PlatformId::ALL {
+            let spec = plat.spec();
+            for variant in Variant::ALL {
+                let r = a.run(&spec, variant, false);
+                assert!(
+                    r.kernel_time > Ns::ZERO,
+                    "{}/{}/{} produced zero kernel time",
+                    app.name(),
+                    plat.name(),
+                    variant.name()
+                );
+                assert!(r.wall_time >= r.kernel_time);
+            }
+        }
+    }
+}
+
+#[test]
+fn explicit_baseline_is_fastest_kernel_in_memory() {
+    // In-memory, the explicit version's *kernel time* lower-bounds all
+    // UM variants (its copies are outside the measured window).
+    for app in [AppId::Bs, AppId::Conv1, AppId::Fdtd3d] {
+        let a = app.build(128 * 1024 * 1024);
+        let spec = PlatformId::IntelVolta.spec();
+        let explicit = a.run(&spec, Variant::Explicit, false).kernel_time;
+        for variant in Variant::UM_ONLY {
+            let t = a.run(&spec, variant, false).kernel_time;
+            assert!(
+                t >= explicit,
+                "{}: {} ({t}) beat explicit ({explicit})",
+                app.name(),
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn um_both_combines_advise_and_prefetch_benefits_in_memory() {
+    // §IV-A: "when both advises and prefetch are used together, it
+    // generally outperforms the performance of applications using only
+    // advises or prefetch."
+    let suite = Suite::run(&SuiteConfig {
+        apps: vec![AppId::Matmul, AppId::Conv0],
+        platforms: vec![PlatformId::P9Volta],
+        variants: Variant::ALL.to_vec(),
+        regimes: vec![Regime::InMemory],
+        reps: 1,
+        trace: false,
+        threads: 2,
+        paper_matrix: true,
+    });
+    for app in [AppId::Matmul, AppId::Conv0] {
+        let t = |v| {
+            suite
+                .get4(app, PlatformId::P9Volta, v, Regime::InMemory)
+                .unwrap()
+                .kernel_time
+                .mean
+        };
+        let both = t(Variant::UmBoth);
+        assert!(
+            both <= t(Variant::Um),
+            "{}: Both should beat basic UM",
+            app.name()
+        );
+        // "generally outperforms" — allow small slack vs the best single
+        // technique, but it must not be grossly worse.
+        let best_single = t(Variant::UmAdvise).min(t(Variant::UmPrefetch));
+        assert!(
+            both.0 as f64 <= best_single.0 as f64 * 1.15,
+            "{}: Both ({both}) much worse than best single ({best_single})",
+            app.name()
+        );
+    }
+}
+
+#[test]
+fn graph500_reports_per_iteration_statistics() {
+    // §III-B: "An exception is Graph500, where we report the average
+    // and standard deviation of BFS iterations."
+    let cell = Cell {
+        app: AppId::Graph500,
+        platform: PlatformId::IntelPascal,
+        variant: Variant::Um,
+        regime: Regime::InMemory,
+    };
+    let r = run_cell(cell, 2, false);
+    assert!(r.per_launch.n >= 24, "per-BFS-level samples (got {})", r.per_launch.n);
+    assert!(r.per_launch.mean > Ns::ZERO);
+    assert!(r.per_launch.std > Ns::ZERO, "levels have different frontier sizes");
+}
+
+#[test]
+fn oversubscription_all_apps_complete_correctly() {
+    // §IV-B: "all applications execute correctly, even when running out
+    // of GPU memory."
+    for app in AppId::ALL {
+        if !app.in_paper_matrix(PlatformId::IntelPascal, Regime::Oversubscribed) {
+            continue;
+        }
+        // Tiny platform so 150% oversubscription is cheap to simulate.
+        let mut plat = PlatformId::IntelPascal.spec();
+        plat.gpu.mem_capacity = 128 * 1024 * 1024;
+        plat.gpu.reserved = 0;
+        let a = app.build((plat.gpu.usable() as f64 * 1.5) as u64);
+        for variant in Variant::UM_ONLY {
+            let r = a.run(&plat, variant, false);
+            assert!(r.kernel_time > Ns::ZERO, "{}/{}", app.name(), variant.name());
+        }
+    }
+}
+
+#[test]
+fn breakdown_sums_are_consistent_with_metrics() {
+    let cell = Cell {
+        app: AppId::Cg,
+        platform: PlatformId::IntelPascal,
+        variant: Variant::Um,
+        regime: Regime::InMemory,
+    };
+    let r = run_cell(cell, 1, true);
+    let m = &r.last.metrics;
+    let b = &r.breakdown;
+    assert_eq!(b.h2d_bytes, m.h2d_bytes, "trace and metrics agree on H2D bytes");
+    assert_eq!(b.d2h_bytes, m.d2h_bytes, "trace and metrics agree on D2H bytes");
+    assert_eq!(b.fault_stall, m.fault_stall, "trace and metrics agree on stalls");
+}
+
+#[test]
+fn suite_parallel_equals_serial() {
+    let config = SuiteConfig {
+        apps: vec![AppId::Bs, AppId::Fdtd3d],
+        platforms: vec![PlatformId::IntelPascal],
+        variants: vec![Variant::Um, Variant::UmAdvise],
+        regimes: vec![Regime::InMemory],
+        reps: 1,
+        trace: false,
+        threads: 4,
+        paper_matrix: true,
+    };
+    let parallel = Suite::run(&config);
+    let serial = Suite::run(&SuiteConfig { threads: 1, ..config.clone() });
+    for (cell, r) in &serial.results {
+        let p = parallel.get(cell).expect("cell present");
+        assert_eq!(p.kernel_time.mean, r.kernel_time.mean, "{}", cell.label());
+    }
+}

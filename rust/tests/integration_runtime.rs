@@ -1,0 +1,93 @@
+//! Integration tests for the PJRT runtime: artifacts load, execute,
+//! and validate against Rust references. These need `make artifacts`;
+//! they skip (with a note) if the artifacts are missing so `cargo test`
+//! stays usable before the first build.
+
+use std::path::Path;
+
+use umbra::apps::AppId;
+use umbra::runtime::{validate_all, validate_app, Input, PjrtRuntime};
+
+fn runtime() -> Option<PjrtRuntime> {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping PJRT tests: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtRuntime::open(Path::new("artifacts")).expect("open artifacts"))
+}
+
+#[test]
+fn all_artifacts_validate_against_rust_references() {
+    let Some(rt) = runtime() else { return };
+    let reports = validate_all(&rt).expect("validation");
+    assert_eq!(reports.len(), 6);
+    for r in &reports {
+        assert!(r.passed, "{} failed", r.model);
+    }
+}
+
+#[test]
+fn every_app_has_a_validating_artifact() {
+    let Some(rt) = runtime() else { return };
+    for app in AppId::ALL {
+        let artifact = app.build(1024 * 1024).artifact();
+        assert!(rt.manifest.get(artifact).is_some(), "{}: artifact '{artifact}' missing", app.name());
+        let rep = validate_app(&rt, artifact).expect(artifact);
+        assert!(rep.passed);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("fdtd_step").unwrap();
+    let n = spec.args[0].n_elements();
+    let grid = vec![1.0f32; n];
+    // First call compiles; subsequent calls hit the cache and must be
+    // significantly faster.
+    let t0 = std::time::Instant::now();
+    let first = rt.execute("fdtd_step", &[Input::F32(grid.clone())]).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let second = rt.execute("fdtd_step", &[Input::F32(grid)]).unwrap();
+    let warm = t1.elapsed();
+    assert_eq!(first[0], second[0], "deterministic execution");
+    assert!(warm < cold, "cache not effective: warm {warm:?} vs cold {cold:?}");
+}
+
+#[test]
+fn fdtd_uniform_field_fixed_point_through_pjrt() {
+    // Independent physical invariant executed through the whole
+    // AOT+PJRT stack: a uniform field stays uniform under the stencil.
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("fdtd_step").unwrap();
+    let n = spec.args[0].n_elements();
+    let out = rt.execute("fdtd_step", &[Input::F32(vec![2.0; n])]).unwrap();
+    let expected = 2.0 * (0.5 + 6.0 / 12.0);
+    for (i, v) in out[0].iter().enumerate() {
+        assert!((v - expected).abs() < 1e-5, "point {i}: {v} != {expected}");
+    }
+}
+
+#[test]
+fn matmul_identity_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let dims = &rt.manifest.get("matmul").unwrap().args[0].dims;
+    let n = dims[0] as usize;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+    let out = rt.execute("matmul", &[Input::F32(a.clone()), Input::F32(eye)]).unwrap();
+    for (g, w) in out[0].iter().zip(&a) {
+        assert!((g - w).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn unknown_model_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.execute("nope", &[]).is_err());
+    assert!(validate_app(&rt, "nope").is_err());
+}

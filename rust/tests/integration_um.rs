@@ -1,0 +1,158 @@
+//! Integration tests: UM runtime mechanisms composed across modules,
+//! checking the paper's §II semantics end-to-end.
+
+use umbra::mem::{PageRange, Residency};
+use umbra::platform::{intel_pascal, intel_volta, p9_volta};
+use umbra::um::{Advise, Loc, UmRuntime};
+use umbra::util::units::{Ns, GIB, MIB};
+
+fn host_init(r: &mut UmRuntime, id: umbra::mem::AllocId) -> Ns {
+    let full = r.space.get(id).full();
+    r.host_access(id, full, true, Ns::ZERO).done
+}
+
+#[test]
+fn full_lifecycle_malloc_advise_prefetch_kernel_readback() {
+    let mut r = UmRuntime::new(&intel_pascal());
+    r.enable_trace();
+    let a = r.malloc_managed("input", 64 * MIB);
+    let b = r.malloc_managed("output", 64 * MIB);
+    let t0 = host_init(&mut r, a);
+    let fa = r.space.get(a).full();
+    let fb = r.space.get(b).full();
+    r.mem_advise(a, fa, Advise::ReadMostly, t0);
+    let t1 = r.prefetch_async(a, fa, Loc::Gpu, t0);
+    let g1 = r.gpu_access(a, fa, false, t1);
+    let g2 = r.gpu_access(b, fb, true, g1.done);
+    let h = r.host_access(b, fb, false, g2.done);
+    assert!(h.done > t1);
+    // Read-mostly prefetch duplicated; kernel read had zero stall.
+    assert_eq!(g1.fault_stall, Ns::ZERO);
+    // Output migrated home for the host read.
+    assert_eq!(h.d2h_bytes, 64 * MIB);
+    r.check_residency_invariant().unwrap();
+    // Trace saw both directions.
+    use umbra::trace::TraceKind;
+    assert!(r.trace.total_bytes(TraceKind::UmMemcpyHtoD) >= 64 * MIB);
+    assert!(r.trace.total_bytes(TraceKind::UmMemcpyDtoH) >= 64 * MIB);
+}
+
+#[test]
+fn paper_fig1_cpu_write_migrates_page_home() {
+    // Fig. 1 of the paper: CPU writes to a GPU-resident page; the page
+    // is unmapped from the GPU and migrated to the CPU.
+    let mut r = UmRuntime::new(&intel_volta());
+    let a = r.malloc_managed("x", 4 * MIB);
+    let fa = r.space.get(a).full();
+    let g = r.gpu_access(a, fa, true, Ns::ZERO); // GPU populates + dirties
+    assert_eq!(r.dev.used(), 4 * MIB);
+    let h = r.host_access(a, fa, true, g.done);
+    assert!(h.done > g.done);
+    assert_eq!(r.dev.used(), 0, "page no longer on the device");
+    let alloc = r.space.get(a);
+    assert_eq!(alloc.pages.count(fa, |p| p.residency == Residency::Host), alloc.n_pages());
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn advise_interplay_prefetch_unpins_other_location() {
+    // §II-C: prefetching to GPU a host-preferred range unpins it; the
+    // next GPU access therefore migrates nothing (already there) and
+    // later CPU access migrates it back without remote mapping.
+    let mut r = UmRuntime::new(&intel_pascal());
+    let a = r.malloc_managed("x", 8 * MIB);
+    let fa = r.space.get(a).full();
+    host_init(&mut r, a);
+    r.mem_advise(a, fa, Advise::PreferredLocation(Loc::Cpu), Ns::ZERO);
+    // Without prefetch, GPU would zero-copy (remote) due to PREF_HOST.
+    let t = r.prefetch_async(a, fa, Loc::Gpu, Ns::ZERO);
+    let g = r.gpu_access(a, fa, false, t);
+    assert_eq!(g.remote_bytes, 0, "prefetch unpinned; data is local now");
+    assert_eq!(g.fault_stall, Ns::ZERO);
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn p9_ats_full_pipeline_no_migration_at_all() {
+    // P9 advise pipeline: placement advises + host init via ATS = the
+    // kernel never faults and no UM memcpy ever happens.
+    let mut r = UmRuntime::new(&p9_volta());
+    r.enable_trace();
+    let a = r.malloc_managed("x", 32 * MIB);
+    let fa = r.space.get(a).full();
+    r.mem_advise(a, fa, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+    r.mem_advise(a, fa, Advise::AccessedBy(Loc::Cpu), Ns::ZERO);
+    let t = host_init(&mut r, a);
+    let g = r.gpu_access(a, fa, true, t);
+    assert_eq!(g.fault_stall, Ns::ZERO);
+    let h = r.host_access(a, fa, false, g.done);
+    assert_eq!(h.d2h_bytes, 0, "CPU reads results over ATS");
+    use umbra::trace::TraceKind;
+    assert_eq!(r.trace.total_bytes(TraceKind::UmMemcpyHtoD), 0);
+    assert_eq!(r.trace.total_bytes(TraceKind::UmMemcpyDtoH), 0);
+    assert!(r.metrics.remote_bytes_cpu_to_dev > 0);
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn mixed_allocations_do_not_interfere() {
+    let mut r = UmRuntime::new(&intel_pascal());
+    let managed = r.malloc_managed("m", 16 * MIB);
+    let device = r.malloc_device("d", 16 * MIB);
+    let host = r.malloc_host("h", 16 * MIB);
+    host_init(&mut r, managed);
+    let fh = r.space.get(host).full();
+    r.host_access(host, fh, true, Ns::ZERO);
+    r.memcpy_h2d(device, 16 * MIB, Ns::ZERO);
+    let fm = r.space.get(managed).full();
+    let fd = r.space.get(device).full();
+    let g1 = r.gpu_access(managed, fm, false, Ns::ZERO);
+    let g2 = r.gpu_access(device, fd, false, g1.done);
+    assert!(g1.h2d_bytes > 0, "managed migrates");
+    assert_eq!(g2.h2d_bytes, 0, "cudaMalloc never migrates");
+    assert_eq!(r.dev.used(), 32 * MIB);
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn repeated_reset_reproduces_exactly() {
+    let mut r = UmRuntime::new(&p9_volta());
+    let a = r.malloc_managed("x", 64 * MIB);
+    let mut outcomes = Vec::new();
+    for _ in 0..3 {
+        r.reset_run_state();
+        let fa = r.space.get(a).full();
+        let t = r.host_access(a, fa, true, Ns::ZERO).done;
+        let g = r.gpu_access(a, fa, false, t);
+        outcomes.push((t, g.done, g.fault_stall, r.metrics.gpu_fault_groups));
+        r.check_residency_invariant().unwrap();
+    }
+    assert_eq!(outcomes[0], outcomes[1]);
+    assert_eq!(outcomes[1], outcomes[2]);
+}
+
+#[test]
+fn oversized_single_allocation_handled_via_remote_on_p9() {
+    // One allocation larger than the whole GPU: P9's driver serves the
+    // overflow remotely instead of thrashing.
+    let mut r = UmRuntime::new(&p9_volta());
+    let a = r.malloc_managed("huge", 20 * GIB);
+    let fa = r.space.get(a).full();
+    r.host_access(a, fa, true, Ns::ZERO);
+    let g = r.gpu_access(a, fa, false, Ns::ZERO);
+    assert!(g.remote_bytes > 0);
+    assert_eq!(r.dev.evictions, 0);
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn oversized_single_allocation_thrashes_on_intel() {
+    let mut r = UmRuntime::new(&intel_pascal());
+    let a = r.malloc_managed("huge", 6 * GIB);
+    let fa = r.space.get(a).full();
+    r.host_access(a, fa, true, Ns::ZERO);
+    let g = r.gpu_access(a, fa, false, Ns::ZERO);
+    assert_eq!(g.remote_bytes, 0);
+    assert!(r.dev.evictions > 0, "PCIe must evict (self-eviction of the same array)");
+    r.check_residency_invariant().unwrap();
+}

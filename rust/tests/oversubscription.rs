@@ -1,0 +1,197 @@
+//! Oversubscription-focused integration tests: eviction mechanics,
+//! thrash detection, failure injection, and the paper's §IV-B findings
+//! at controlled scale.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::mem::Residency;
+use umbra::platform::{intel_pascal, p9_volta, PlatformId, PlatformSpec};
+use umbra::um::{Advise, Loc, UmRuntime};
+use umbra::util::units::{Ns, MIB};
+
+fn shrunk(mut plat: PlatformSpec, cap_mib: u64) -> PlatformSpec {
+    plat.gpu.mem_capacity = cap_mib * MIB;
+    plat.gpu.reserved = 0;
+    plat
+}
+
+#[test]
+fn lru_eviction_order_is_oldest_first() {
+    let mut r = UmRuntime::new(&shrunk(intel_pascal(), 64));
+    let a = r.malloc_managed("a", 30 * MIB);
+    let b = r.malloc_managed("b", 30 * MIB);
+    let c = r.malloc_managed("c", 30 * MIB);
+    for id in [a, b, c] {
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+    }
+    let (fa, fb, fc) = (r.space.get(a).full(), r.space.get(b).full(), r.space.get(c).full());
+    let t1 = r.gpu_access(a, fa, false, Ns(0)).done;
+    let t2 = r.gpu_access(b, fb, false, t1).done;
+    r.gpu_access(c, fc, false, t2); // must evict a (the oldest)
+    let alloc_a = r.space.get(a);
+    let a_on_dev = alloc_a.pages.count(fa, |p| p.residency.on_device());
+    let alloc_b = r.space.get(b);
+    let b_on_dev = alloc_b.pages.count(fb, |p| p.residency.on_device());
+    assert!(a_on_dev < alloc_a.n_pages(), "oldest allocation partially evicted");
+    assert_eq!(b_on_dev, alloc_b.n_pages(), "recently used allocation survives");
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn writeback_vs_drop_decision_follows_host_copy_validity() {
+    let mut r = UmRuntime::new(&shrunk(intel_pascal(), 64));
+    // d: duplicated read-mostly data (host copy valid -> free drop).
+    let d = r.malloc_managed("dup", 30 * MIB);
+    // m: migrated data (host copy stale -> writeback).
+    let m = r.malloc_managed("mig", 30 * MIB);
+    let n = r.malloc_managed("new", 50 * MIB);
+    for id in [d, m, n] {
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+    }
+    let fd = r.space.get(d).full();
+    r.mem_advise(d, fd, Advise::ReadMostly, Ns::ZERO);
+    let t1 = r.gpu_access(d, fd, false, Ns(0)).done; // duplicates
+    let fm = r.space.get(m).full();
+    let t2 = r.gpu_access(m, fm, false, t1).done; // migrates
+    let before_wb = r.metrics.writeback_bytes;
+    let before_drop = r.metrics.dropped_bytes;
+    let fnn = r.space.get(n).full();
+    r.gpu_access(n, fnn, false, t2); // evicts both d and m content
+    assert!(r.metrics.dropped_bytes > before_drop, "duplicates dropped free");
+    assert!(r.metrics.writeback_bytes > before_wb, "migrated pages written back");
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn thrash_ratio_detects_p9_advise_pathology() {
+    // The paper's Fig. 8c/8d observation — "intense data movement in
+    // both directions" — as a metric: D2H/H2D ratio under advise on P9
+    // far exceeds basic UM's.
+    let plat = PlatformId::P9Volta;
+    let app = AppId::Bs.build_for(plat, Regime::Oversubscribed);
+    let spec = plat.spec();
+    let um = app.run(&spec, Variant::Um, false);
+    let adv = app.run(&spec, Variant::UmAdvise, false);
+    assert!(
+        adv.metrics.link_bytes() > 2 * um.metrics.link_bytes(),
+        "advise moves far more data: {} vs {}",
+        adv.metrics.link_bytes(),
+        um.metrics.link_bytes()
+    );
+    assert!(adv.metrics.fault_stall > um.metrics.fault_stall * 2);
+}
+
+#[test]
+fn unpinned_neighbor_self_evicts_around_pinned_region() {
+    // A large pinned region constrains the unpinned allocation to a
+    // tiny window: it thrashes against *itself*, never touching the
+    // pinned pages (the LRU honours the pin).
+    let mut r = UmRuntime::new(&shrunk(p9_volta(), 64));
+    let a = r.malloc_managed("pinned", 60 * MIB);
+    let fa = r.space.get(a).full();
+    r.mem_advise(a, fa, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+    r.host_access(a, fa, true, Ns::ZERO); // ATS init -> on device, pinned
+    let b = r.malloc_managed("other", 32 * MIB);
+    let fb = r.space.get(b).full();
+    r.host_access(b, fb, true, Ns::ZERO);
+    r.gpu_access(b, fb, true, Ns(0)); // write => must go local
+    assert!(r.dev.evictions > 0, "b churns through the 4 MiB window");
+    assert_eq!(r.dev.forced_pinned_evictions, 0, "pin respected");
+    let alloc_a = r.space.get(a);
+    assert_eq!(
+        alloc_a.pages.count(fa, |p| p.residency.on_device()),
+        alloc_a.n_pages(),
+        "pinned region untouched"
+    );
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn forced_pinned_eviction_when_everything_is_pinned() {
+    let mut r = UmRuntime::new(&shrunk(p9_volta(), 64));
+    let a = r.malloc_managed("p1", 60 * MIB);
+    let b = r.malloc_managed("p2", 32 * MIB);
+    for id in [a, b] {
+        let full = r.space.get(id).full();
+        r.mem_advise(id, full, Advise::PreferredLocation(Loc::Gpu), Ns::ZERO);
+    }
+    r.host_access(a, r.space.get(a).full(), true, Ns::ZERO); // fills device, pinned
+    let fb = r.space.get(b).full();
+    r.host_access(b, fb, true, Ns::ZERO); // overflows to host
+    r.gpu_access(b, fb, true, Ns(0)); // pinned-vs-pinned: must force
+    assert!(r.dev.forced_pinned_evictions > 0);
+    r.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn graph500_oversubscription_on_intel_pascal_only() {
+    // Matches Table I: the only Graph500 oversubscription config.
+    let cellcfg = AppId::Graph500.build_for(PlatformId::IntelPascal, Regime::Oversubscribed);
+    let spec = PlatformId::IntelPascal.spec();
+    let r = cellcfg.run(&spec, Variant::Um, false);
+    assert!(r.kernel_time > Ns::ZERO);
+    assert!(r.metrics.evicted_chunks > 0, "BFS at 150% must evict");
+}
+
+#[test]
+fn eviction_never_leaves_dangling_residency() {
+    // Failure-injection-flavored churn: interleave conflicting advises
+    // with accesses under heavy pressure; the accounting must hold.
+    let mut r = UmRuntime::new(&shrunk(intel_pascal(), 48));
+    let a = r.malloc_managed("a", 40 * MIB);
+    let b = r.malloc_managed("b", 40 * MIB);
+    for id in [a, b] {
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+    }
+    let (fa, fb) = (r.space.get(a).full(), r.space.get(b).full());
+    let mut now = Ns::ZERO;
+    for i in 0..6 {
+        now = r.gpu_access(a, fa, i % 2 == 0, now).done;
+        r.mem_advise(b, fb, if i % 2 == 0 { Advise::ReadMostly } else { Advise::UnsetReadMostly }, now);
+        now = r.gpu_access(b, fb, false, now).done;
+        r.mem_advise(a, fa, Advise::PreferredLocation(if i % 2 == 0 { Loc::Gpu } else { Loc::Cpu }), now);
+        r.check_residency_invariant().unwrap();
+    }
+    // Nothing is resident twice, nothing leaked.
+    let total_resident: u64 = r
+        .space
+        .iter()
+        .map(|al| al.pages.count(al.full(), |p| p.residency.on_device()) as u64 * umbra::mem::PAGE_SIZE)
+        .sum();
+    assert_eq!(total_resident, r.dev.used());
+}
+
+#[test]
+fn oversub_kernel_time_exceeds_in_memory() {
+    for plat in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let spec = plat.spec();
+        let app_im = AppId::Fdtd3d.build_for(plat, Regime::InMemory);
+        let app_os = AppId::Fdtd3d.build_for(plat, Regime::Oversubscribed);
+        let im = app_im.run(&spec, Variant::Um, false).kernel_time;
+        let os = app_os.run(&spec, Variant::Um, false).kernel_time;
+        assert!(os > im, "{}: oversub {os} <= in-memory {im}", plat.name());
+    }
+}
+
+#[test]
+fn evicted_then_reaccessed_data_returns_intact_state() {
+    let mut r = UmRuntime::new(&shrunk(intel_pascal(), 64));
+    let a = r.malloc_managed("a", 40 * MIB);
+    let b = r.malloc_managed("b", 40 * MIB);
+    for id in [a, b] {
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+    }
+    let (fa, fb) = (r.space.get(a).full(), r.space.get(b).full());
+    let t1 = r.gpu_access(a, fa, true, Ns(0)).done; // dirty a
+    let t2 = r.gpu_access(b, fb, false, t1).done; // evicts chunks of a (writeback)
+    let out = r.gpu_access(a, fa, false, t2); // bring a back
+    assert!(out.h2d_bytes > 0, "a re-migrates");
+    let alloc = r.space.get(a);
+    // After writeback + re-migration the pages are device-resident and
+    // clean (host copy was refreshed by the writeback).
+    assert!(alloc.pages.count(fa, |p| p.residency == Residency::Device) > 0);
+    r.check_residency_invariant().unwrap();
+}

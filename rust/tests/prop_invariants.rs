@@ -1,0 +1,213 @@
+//! Property-based tests (util::quick, DESIGN.md §2 substitutions):
+//! random operation sequences against the UM runtime must preserve the
+//! core invariants regardless of platform, sizes, advises or order.
+
+use umbra::mem::{AllocId, PageRange, Residency, PAGE_SIZE};
+use umbra::platform::{PlatformId};
+use umbra::quick_assert;
+use umbra::um::{Advise, Loc, UmRuntime};
+use umbra::util::quick::{forall, Gen};
+use umbra::util::units::{Ns, MIB};
+
+/// One random operation.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    HostAccess { write: bool },
+    GpuAccess { write: bool },
+    Advise(u8),
+    PrefetchGpu,
+    PrefetchCpu,
+}
+
+fn random_op(g: &mut Gen) -> Op {
+    match g.u64(0, 5) {
+        0 => Op::HostAccess { write: g.bool() },
+        1 | 2 => Op::GpuAccess { write: g.bool() }, // GPU-heavy mix
+        3 => Op::Advise(g.u64(0, 5) as u8),
+        4 => Op::PrefetchGpu,
+        _ => Op::PrefetchCpu,
+    }
+}
+
+fn advise_of(code: u8) -> Advise {
+    match code {
+        0 => Advise::ReadMostly,
+        1 => Advise::PreferredLocation(Loc::Gpu),
+        2 => Advise::PreferredLocation(Loc::Cpu),
+        3 => Advise::AccessedBy(Loc::Cpu),
+        4 => Advise::AccessedBy(Loc::Gpu),
+        _ => Advise::UnsetPreferredLocation,
+    }
+}
+
+/// Build a runtime with a shrunken device so oversubscription paths
+/// fire often, plus 1-3 allocations of random sizes.
+fn random_runtime(g: &mut Gen) -> (UmRuntime, Vec<AllocId>) {
+    let plat_id = g.pick(&[PlatformId::IntelPascal, PlatformId::IntelVolta, PlatformId::P9Volta]);
+    let mut plat = plat_id.spec();
+    plat.gpu.mem_capacity = g.u64(32, 128) * MIB;
+    plat.gpu.reserved = 0;
+    let mut r = UmRuntime::new(&plat);
+    let n_allocs = g.usize(1, 3);
+    let ids = (0..n_allocs)
+        .map(|i| {
+            let size = g.u64(1, 96) * MIB;
+            r.malloc_managed(&format!("a{i}"), size)
+        })
+        .collect();
+    (r, ids)
+}
+
+fn random_range(g: &mut Gen, r: &UmRuntime, id: AllocId) -> PageRange {
+    let n = r.space.get(id).n_pages();
+    let start = g.u64(0, n as u64 - 1) as u32;
+    let len = g.u64(1, (n - start) as u64) as u32;
+    PageRange::new(start, start + len)
+}
+
+#[test]
+fn residency_invariant_under_random_ops() {
+    forall("residency-invariant", 60, |g| {
+        let (mut r, ids) = random_runtime(g);
+        let mut now = Ns::ZERO;
+        for _ in 0..g.usize(5, 30) {
+            let id = g.pick(&ids);
+            let range = random_range(g, &r, id);
+            now = match random_op(g) {
+                Op::HostAccess { write } => r.host_access(id, range, write, now).done,
+                Op::GpuAccess { write } => r.gpu_access(id, range, write, now).done,
+                Op::Advise(code) => r.mem_advise(id, range, advise_of(code), now),
+                Op::PrefetchGpu => r.prefetch_async(id, range, Loc::Gpu, now),
+                Op::PrefetchCpu => r.prefetch_async(id, range, Loc::Cpu, now),
+            }
+            .max(now);
+            if let Err(e) = r.check_residency_invariant() {
+                return Err(format!("after op: {e}"));
+            }
+            quick_assert!(r.dev.used() <= r.dev.capacity(), "over capacity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn time_never_goes_backwards() {
+    forall("monotone-time", 40, |g| {
+        let (mut r, ids) = random_runtime(g);
+        let mut now = Ns::ZERO;
+        for _ in 0..g.usize(5, 25) {
+            let id = g.pick(&ids);
+            let range = random_range(g, &r, id);
+            let done = match random_op(g) {
+                Op::HostAccess { write } => r.host_access(id, range, write, now).done,
+                Op::GpuAccess { write } => r.gpu_access(id, range, write, now).done,
+                Op::Advise(code) => r.mem_advise(id, range, advise_of(code), now),
+                Op::PrefetchGpu => r.prefetch_async(id, range, Loc::Gpu, now),
+                Op::PrefetchCpu => r.prefetch_async(id, range, Loc::Cpu, now),
+            };
+            quick_assert!(done >= now, "op completed before it started: {done:?} < {now:?}");
+            now = done;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn byte_conservation_migrations_match_metrics() {
+    // Every migrated/prefetched page is PAGE_SIZE bytes in the h2d/d2h
+    // byte counters (no bytes invented or lost).
+    forall("byte-conservation", 40, |g| {
+        let (mut r, ids) = random_runtime(g);
+        let mut now = Ns::ZERO;
+        for _ in 0..g.usize(5, 25) {
+            let id = g.pick(&ids);
+            let range = random_range(g, &r, id);
+            now = match random_op(g) {
+                Op::HostAccess { write } => r.host_access(id, range, write, now).done,
+                Op::GpuAccess { write } => r.gpu_access(id, range, write, now).done,
+                Op::Advise(code) => r.mem_advise(id, range, advise_of(code), now),
+                Op::PrefetchGpu => r.prefetch_async(id, range, Loc::Gpu, now),
+                Op::PrefetchCpu => r.prefetch_async(id, range, Loc::Cpu, now),
+            }
+            .max(now);
+        }
+        let m = &r.metrics;
+        let h2d_pages = m.migrated_pages_h2d + m.prefetched_pages_h2d;
+        quick_assert!(
+            m.h2d_bytes == h2d_pages * PAGE_SIZE,
+            "h2d bytes {} != pages {} * {}",
+            m.h2d_bytes,
+            h2d_pages,
+            PAGE_SIZE
+        );
+        let d2h_pages = m.migrated_pages_d2h + m.prefetched_pages_d2h;
+        quick_assert!(
+            m.d2h_bytes == d2h_pages * PAGE_SIZE + m.writeback_bytes,
+            "d2h bytes {} != pages {} * {} + writeback {}",
+            m.d2h_bytes,
+            d2h_pages,
+            PAGE_SIZE,
+            m.writeback_bytes
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn no_page_is_both_dirty_and_duplicated() {
+    // A ReadMostly duplicate (residency Both) is by construction clean:
+    // any write collapses it first.
+    forall("dirty-xor-duplicated", 40, |g| {
+        let (mut r, ids) = random_runtime(g);
+        let mut now = Ns::ZERO;
+        for _ in 0..g.usize(5, 30) {
+            let id = g.pick(&ids);
+            let range = random_range(g, &r, id);
+            now = match random_op(g) {
+                Op::HostAccess { write } => r.host_access(id, range, write, now).done,
+                Op::GpuAccess { write } => r.gpu_access(id, range, write, now).done,
+                Op::Advise(code) => r.mem_advise(id, range, advise_of(code), now),
+                Op::PrefetchGpu => r.prefetch_async(id, range, Loc::Gpu, now),
+                Op::PrefetchCpu => r.prefetch_async(id, range, Loc::Cpu, now),
+            }
+            .max(now);
+            for alloc in r.space.iter() {
+                let bad = alloc.pages.count(alloc.full(), |p| {
+                    p.residency == Residency::Both
+                        && p.flags.get(umbra::mem::PageFlags::DIRTY)
+                });
+                quick_assert!(bad == 0, "alloc {} has {bad} dirty duplicates", alloc.name);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn determinism_same_seed_same_simulation() {
+    forall("determinism", 15, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let run = |seed: u64| {
+            let mut g2 = Gen::new(seed);
+            let (mut r, ids) = random_runtime(&mut g2);
+            let mut now = Ns::ZERO;
+            for _ in 0..20 {
+                let id = g2.pick(&ids);
+                let range = random_range(&mut g2, &r, id);
+                now = match random_op(&mut g2) {
+                    Op::HostAccess { write } => r.host_access(id, range, write, now).done,
+                    Op::GpuAccess { write } => r.gpu_access(id, range, write, now).done,
+                    Op::Advise(code) => r.mem_advise(id, range, advise_of(code), now),
+                    Op::PrefetchGpu => r.prefetch_async(id, range, Loc::Gpu, now),
+                    Op::PrefetchCpu => r.prefetch_async(id, range, Loc::Cpu, now),
+                }
+                .max(now);
+            }
+            (now, r.metrics)
+        };
+        let (t1, m1) = run(seed);
+        let (t2, m2) = run(seed);
+        quick_assert!(t1 == t2 && m1 == m2, "simulation not deterministic for seed {seed}");
+        Ok(())
+    });
+}

@@ -1,0 +1,98 @@
+//! Trace-layer integration: nvprof-style records, time series, and the
+//! figure harness outputs are internally consistent.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::bench_harness::figures;
+use umbra::coordinator::{run_cell, Cell};
+use umbra::platform::PlatformId;
+use umbra::trace::{Breakdown, TimeSeries, TraceKind};
+use umbra::util::units::Ns;
+
+fn traced(app: AppId, platform: PlatformId, variant: Variant, regime: Regime) -> umbra::coordinator::CellResult {
+    run_cell(Cell { app, platform, variant, regime }, 1, true)
+}
+
+#[test]
+fn trace_bytes_conserved_into_series() {
+    let r = traced(AppId::Bs, PlatformId::IntelPascal, Variant::Um, Regime::InMemory);
+    let trace = r.last.trace.as_ref().unwrap();
+    let series = TimeSeries::from_trace(trace, Ns(1_000_000));
+    assert_eq!(series.total_h2d(), trace.total_bytes(TraceKind::UmMemcpyHtoD));
+    assert_eq!(series.total_d2h(), trace.total_bytes(TraceKind::UmMemcpyDtoH));
+}
+
+#[test]
+fn prefetch_trace_shows_bulk_block_shape() {
+    // Fig. 5 observation: "When prefetch is applied, data is transferred
+    // as a block at a much higher rate" — peak bin rate under prefetch
+    // must exceed the fault-driven peak.
+    let um = traced(AppId::Bs, PlatformId::IntelPascal, Variant::Um, Regime::InMemory);
+    let pf = traced(AppId::Bs, PlatformId::IntelPascal, Variant::UmPrefetch, Regime::InMemory);
+    let bin = Ns(10_000_000); // 10 ms bins
+    let um_series = TimeSeries::from_trace(um.last.trace.as_ref().unwrap(), bin);
+    let pf_series = TimeSeries::from_trace(pf.last.trace.as_ref().unwrap(), bin);
+    assert!(
+        pf_series.peak_h2d_rate() > um_series.peak_h2d_rate() * 1.5,
+        "prefetch peak {:.1} GB/s vs faulted peak {:.1} GB/s",
+        pf_series.peak_h2d_rate() / 1e9,
+        um_series.peak_h2d_rate() / 1e9
+    );
+}
+
+#[test]
+fn kernel_windows_present_and_ordered() {
+    let r = traced(AppId::Cg, PlatformId::P9Volta, Variant::Um, Regime::InMemory);
+    let trace = r.last.trace.as_ref().unwrap();
+    let kernels: Vec<_> = trace.of_kind(TraceKind::Kernel).collect();
+    assert_eq!(kernels.len(), umbra::apps::cg::ITERATIONS);
+    for w in kernels.windows(2) {
+        assert!(w[1].start >= w[0].end, "kernel windows overlap");
+    }
+}
+
+#[test]
+fn breakdown_matches_trace_totals() {
+    let r = traced(AppId::Fdtd3d, PlatformId::IntelPascal, Variant::Um, Regime::Oversubscribed);
+    let trace = r.last.trace.as_ref().unwrap();
+    let b = Breakdown::from_trace(trace);
+    assert_eq!(b.h2d, trace.total_time(TraceKind::UmMemcpyHtoD));
+    assert_eq!(b.d2h, trace.total_time(TraceKind::UmMemcpyDtoH));
+    assert_eq!(b.fault_stall, trace.total_time(TraceKind::GpuFaultGroup));
+    assert!(b.total() > Ns::ZERO);
+}
+
+#[test]
+fn explicit_variant_has_no_um_memcpys() {
+    let r = traced(AppId::Matmul, PlatformId::IntelVolta, Variant::Explicit, Regime::InMemory);
+    let trace = r.last.trace.as_ref().unwrap();
+    assert_eq!(trace.total_bytes(TraceKind::UmMemcpyHtoD), 0);
+    assert_eq!(trace.total_bytes(TraceKind::UmMemcpyDtoH), 0);
+    assert!(trace.total_bytes(TraceKind::MemcpyHtoD) > 0, "explicit cudaMemcpy instead");
+}
+
+#[test]
+fn figure_reports_write_to_disk() {
+    let dir = std::env::temp_dir().join("umbra_traces_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = figures::table1();
+    report.write(&dir).unwrap();
+    assert!(dir.join("table1.txt").exists());
+    assert!(dir.join("csv/table1.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig7_shows_p9_advise_stall_dominance() {
+    // The quantitative content of Fig. 7c/7d: under oversubscription on
+    // P9, the advise variant's stall time dwarfs basic UM's.
+    let um = traced(AppId::Fdtd3d, PlatformId::P9Volta, Variant::Um, Regime::Oversubscribed);
+    let adv = traced(AppId::Fdtd3d, PlatformId::P9Volta, Variant::UmAdvise, Regime::Oversubscribed);
+    assert!(
+        adv.breakdown.fault_stall > um.breakdown.fault_stall * 2,
+        "advise stall {} vs UM stall {}",
+        adv.breakdown.fault_stall,
+        um.breakdown.fault_stall
+    );
+    // And bidirectional traffic appears (Fig. 8d).
+    assert!(adv.breakdown.d2h_bytes > 0);
+}
