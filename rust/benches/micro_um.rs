@@ -5,8 +5,8 @@
 
 use umbra::apps::{AppId, Regime, Variant};
 use umbra::bench_harness::BenchTimer;
-use umbra::platform::{intel_pascal, PlatformId};
-use umbra::um::{Loc, UmRuntime};
+use umbra::platform::{intel_pascal, p9_volta, PlatformId};
+use umbra::um::{Advise, Loc, UmRuntime};
 use umbra::util::units::{Ns, GIB, MIB};
 
 fn main() {
@@ -46,6 +46,46 @@ fn main() {
         let fb = r.space.get(b).full();
         let mut now = Ns::ZERO;
         for _ in 0..4 {
+            now = r.gpu_access(a, fa, false, now).done;
+            now = r.gpu_access(b, fb, false, now).done;
+        }
+        r.dev.evictions
+    });
+
+    // Paper-scale (§IV) footprint: a 24 GiB managed allocation — 150%
+    // of a 16 GiB device, 393216 pages of 64 KiB — through a full
+    // advise + prefetch + reset repetition cycle. With the flat O(pages)
+    // table every one of these steps walked ~393k PageState structs;
+    // the interval table does O(runs) work per step.
+    t.bench("um/advise_prefetch_reset_24GiB", || {
+        let mut r = UmRuntime::new(&p9_volta());
+        let id = r.malloc_managed("big", 24 * GIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, Advise::ReadMostly, Ns::ZERO);
+        let done = r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO);
+        r.reset_run_state();
+        done
+    });
+
+    // Oversubscribed cyclic thrash at paper scale: two 12 GiB
+    // allocations alternately streamed through a 16 GiB device (PCIe
+    // platform: every round migrates + evicts, the §IV-B pathology).
+    t.bench("um/oversub_thrash_cyclic_24GiB", || {
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 16 * GIB;
+        plat.gpu.reserved = 0;
+        let mut r = UmRuntime::new(&plat);
+        let a = r.malloc_managed("a", 12 * GIB);
+        let b = r.malloc_managed("b", 12 * GIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        let fb = r.space.get(b).full();
+        let mut now = Ns::ZERO;
+        for _ in 0..2 {
             now = r.gpu_access(a, fa, false, now).done;
             now = r.gpu_access(b, fb, false, now).done;
         }

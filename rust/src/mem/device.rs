@@ -15,11 +15,18 @@
 //! entries on every pop, which made pinned-heavy oversubscription
 //! workloads (the paper's P9 pathology cases!) quadratic — see
 //! EXPERIMENTS.md §Perf for the before/after.
+//!
+//! Lazy heaps trade pop-time filtering for push-time simplicity, but a
+//! churn workload that touches far more often than it pops (an
+//! in-memory kernel re-reading a resident working set) never drains its
+//! stale entries. Each push therefore checks the stale backlog and
+//! compacts the heap in place once stale entries outnumber live chunks
+//! ~2:1 — amortized O(1) per push, worst-case memory O(live chunks).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::util::fxhash::FxHashMap;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 
 use super::alloc::AllocId;
 use crate::util::units::{Bytes, Ns};
@@ -95,11 +102,49 @@ impl DeviceMemory {
 
     fn push_entry(&mut self, chunk: ChunkRef, t: Ns, seq: u64, pinned: bool) {
         let entry = Reverse((t, seq, chunk));
-        if pinned {
-            self.lru_pinned.push(entry);
+        let (heap, live) = if pinned {
+            (&mut self.lru_pinned, self.pinned_chunks)
         } else {
-            self.lru.push(entry);
+            (&mut self.lru, self.evictable)
+        };
+        heap.push(entry);
+        Self::maybe_compact(heap, &self.chunks, live, pinned);
+    }
+
+    /// Compact once stale entries dominate (see module docs): a heap
+    /// holds at most one live entry per chunk, so anything beyond
+    /// `live` is stale. The +64 floor keeps tiny heaps cheap. The
+    /// single home of the threshold for every push path.
+    fn maybe_compact(
+        heap: &mut BinaryHeap<HeapEntry>,
+        chunks: &FxHashMap<ChunkRef, ChunkMeta>,
+        live: usize,
+        want_pinned: bool,
+    ) {
+        if heap.len() > 2 * live + 64 {
+            Self::compact_heap(heap, chunks, want_pinned);
         }
+    }
+
+    /// Rebuild one lazy heap, dropping every stale entry (superseded
+    /// stamp, migrated to the other heap, locked, or fully evicted).
+    /// Pin/lock toggles re-push a chunk's *current* stamp, so a chunk
+    /// can own several identical valid entries; keep only one.
+    fn compact_heap(
+        heap: &mut BinaryHeap<HeapEntry>,
+        chunks: &FxHashMap<ChunkRef, ChunkMeta>,
+        want_pinned: bool,
+    ) {
+        let entries = std::mem::take(heap);
+        let mut seen = FxHashSet::default();
+        *heap = entries
+            .into_iter()
+            .filter(|&Reverse((t, seq, chunk))| {
+                chunks.get(&chunk).is_some_and(|m| {
+                    m.seq == seq && m.last_touch == t && m.pinned == want_pinned && !m.locked
+                }) && seen.insert(chunk)
+            })
+            .collect();
     }
 
     /// Record `bytes` of a chunk becoming resident (touch it too).
@@ -165,6 +210,44 @@ impl DeviceMemory {
             if !locked {
                 self.push_entry(chunk, now, seq, pinned);
             }
+        }
+    }
+
+    /// Refresh the LRU position of chunks `first..=last` of `alloc` in
+    /// one call — the batched entry point run-granular callers use
+    /// instead of looping over [`DeviceMemory::touch`] themselves.
+    /// Defers the stale-backlog check to one [`Self::maybe_compact`]
+    /// per heap at the end of the batch; entries, seq assignment, and
+    /// therefore pop order are identical to per-chunk touches.
+    pub fn touch_range(&mut self, alloc: AllocId, first: u32, last: u32, now: Ns) {
+        let mut touched_evictable = false;
+        let mut touched_pinned = false;
+        for chunk in first..=last {
+            let cref = ChunkRef { alloc, chunk };
+            self.seq += 1;
+            let seq = self.seq;
+            if let Some(meta) = self.chunks.get_mut(&cref) {
+                meta.last_touch = now;
+                meta.seq = seq;
+                if !meta.locked {
+                    let entry = Reverse((now, seq, cref));
+                    // `meta` borrows `chunks`, the heaps are disjoint
+                    // fields: push directly, no temporary buffer.
+                    if meta.pinned {
+                        self.lru_pinned.push(entry);
+                        touched_pinned = true;
+                    } else {
+                        self.lru.push(entry);
+                        touched_evictable = true;
+                    }
+                }
+            }
+        }
+        if touched_evictable {
+            Self::maybe_compact(&mut self.lru, &self.chunks, self.evictable, false);
+        }
+        if touched_pinned {
+            Self::maybe_compact(&mut self.lru_pinned, &self.chunks, self.pinned_chunks, true);
         }
     }
 
@@ -420,6 +503,91 @@ mod tests {
             d.touch(cr(1, 0), Ns(100000)); // keep it poppable
         }
         assert!(t0.elapsed().as_millis() < 500, "pop_lru slow: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn touch_churn_keeps_heap_bounded() {
+        // Regression guard for stale-entry growth: a workload that
+        // touches a resident working set far more often than it pops
+        // must not grow the lazy heap without bound.
+        let mut d = DeviceMemory::new(1 << 34);
+        const CHUNKS: usize = 64;
+        for i in 0..CHUNKS as u32 {
+            d.add_resident(cr(0, i), 2 * MIB, Ns(i as u64));
+        }
+        for round in 0..5_000u64 {
+            // Per-chunk and batched paths alternate; both must stay
+            // bounded through their respective compaction hooks.
+            if round % 2 == 0 {
+                for i in 0..CHUNKS as u32 {
+                    d.touch(cr(0, i), Ns(1_000 + round));
+                }
+            } else {
+                d.touch_range(AllocId(0), 0, CHUNKS as u32 - 1, Ns(1_000 + round));
+            }
+        }
+        assert!(
+            d.lru.len() <= 2 * CHUNKS + 64,
+            "lazy heap grew unbounded under churn: {} entries for {CHUNKS} chunks",
+            d.lru.len()
+        );
+        // Compaction must not lose the live entries: every chunk is
+        // still poppable exactly once.
+        let mut popped = 0;
+        while let Some((c, bytes)) = d.pop_lru(false) {
+            assert_eq!(bytes, 2 * MIB);
+            d.remove_resident(c, bytes);
+            popped += 1;
+        }
+        assert_eq!(popped, CHUNKS);
+    }
+
+    #[test]
+    fn pin_toggle_churn_keeps_both_heaps_bounded() {
+        // set_pinned pushes into the destination heap and strands the
+        // old entry in the source heap; heavy toggling exercises the
+        // compaction path on both heaps.
+        let mut d = DeviceMemory::new(1 << 34);
+        const CHUNKS: usize = 32;
+        for i in 0..CHUNKS as u32 {
+            d.add_resident(cr(0, i), 2 * MIB, Ns(i as u64));
+        }
+        for round in 0..5_000u64 {
+            let pin = round % 2 == 0;
+            for i in 0..CHUNKS as u32 {
+                d.set_pinned(cr(0, i), pin);
+            }
+        }
+        assert!(d.lru.len() <= 2 * CHUNKS + 64, "evictable heap: {}", d.lru.len());
+        assert!(d.lru_pinned.len() <= 2 * CHUNKS + 64, "pinned heap: {}", d.lru_pinned.len());
+        // Ended on an unpinned round (last round index 4999 is odd):
+        // everything pops from the evictable heap, nothing was lost.
+        let mut popped = 0;
+        while let Some((c, bytes)) = d.pop_lru(false) {
+            d.remove_resident(c, bytes);
+            popped += 1;
+        }
+        assert_eq!(popped, CHUNKS);
+    }
+
+    #[test]
+    fn touch_range_matches_per_chunk_touch() {
+        let mut a = DeviceMemory::new(1 << 30);
+        let mut b = DeviceMemory::new(1 << 30);
+        for d in [&mut a, &mut b] {
+            for i in 0..8 {
+                d.add_resident(cr(0, i), 2 * MIB, Ns(i as u64));
+            }
+        }
+        a.touch_range(AllocId(0), 2, 5, Ns(100));
+        for i in 2..=5 {
+            b.touch(cr(0, i), Ns(100));
+        }
+        // Identical pop order afterwards.
+        for _ in 0..8 {
+            assert_eq!(a.pop_lru(false).unwrap(), b.pop_lru(false).unwrap());
+        }
+        assert!(a.pop_lru(false).is_none() && b.pop_lru(false).is_none());
     }
 
     #[test]

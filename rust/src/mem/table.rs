@@ -1,9 +1,41 @@
 //! Per-allocation page table with run iteration.
 //!
 //! Fault batching and migration chunking both operate on *contiguous
-//! runs* of pages in the same state, so the central operation here is
-//! [`PageTable::runs`]: split a page range into maximal runs that share
-//! a classification.
+//! runs* of pages in the same state, so the central operations here are
+//! [`PageTable::runs`] / [`PageTable::runs_in`]: split a page range into
+//! maximal runs that share a classification.
+//!
+//! ## Page-table design (§Perf)
+//!
+//! The table is an **interval (run-length-encoded) segment list**, not a
+//! flat `Vec<PageState>`. Oversubscription-scale allocations (the
+//! paper's §IV footprints reach 150% of a 16 GiB device) hold hundreds
+//! of thousands of 64 KiB pages, yet driver-level state is naturally
+//! run-shaped: a 24 GiB allocation that was host-initialized, advised
+//! and prefetched collapses into a handful of homogeneous runs. Storing
+//! one `(start, PageState)` segment per run makes every state operation
+//! O(existing runs + changed runs) instead of O(pages):
+//!
+//! * `segs` is ordered by `start`; segment `i` covers
+//!   `segs[i].start .. segs[i+1].start` (the last one runs to
+//!   `n_pages`). `segs[0].start == 0` whenever the table is non-empty.
+//! * Bulk writes ([`PageTable::update`], [`PageTable::set_range`])
+//!   split the two boundary segments, apply the change once per covered
+//!   segment, and re-coalesce — a uniform-state allocation stays at one
+//!   segment no matter how many pages it spans, so `reset_run_state`
+//!   and `malloc_*` cost O(1) per allocation instead of a full
+//!   per-page walk per benchmark repetition.
+//! * Reads ([`PageTable::get`], [`PageTable::count`],
+//!   [`PageTable::runs`], [`PageTable::run_at`]) binary-search the
+//!   segment list and then walk segments, never pages.
+//! * [`PageTable::get_mut`] isolates one page into its own segment and
+//!   hands out the reference; neighbours are *not* re-coalesced (the
+//!   borrow is still live), so equal-adjacent segments may transiently
+//!   exist. All read paths tolerate that: they merge by state/class
+//!   while iterating. The next bulk update re-coalesces.
+//!
+//! The sibling data-structure notes in `mem/device.rs` cover the LRU
+//! heaps this table feeds at eviction time.
 
 use super::page::{PageState, PAGE_SIZE};
 use crate::util::units::Bytes;
@@ -44,29 +76,88 @@ impl PageRange {
     }
 }
 
-/// Page table of one managed allocation.
+/// One maximal (best-effort, see module docs) run of pages in the same
+/// state: covers `start` up to the next segment's `start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Segment {
+    start: u32,
+    state: PageState,
+}
+
+/// Page table of one managed allocation (interval representation).
 #[derive(Clone, Debug)]
 pub struct PageTable {
-    pages: Vec<PageState>,
+    n_pages: u32,
+    segs: Vec<Segment>,
 }
 
 impl PageTable {
     pub fn new(n_pages: u32) -> PageTable {
-        PageTable { pages: vec![PageState::default(); n_pages as usize] }
+        let segs = if n_pages > 0 {
+            vec![Segment { start: 0, state: PageState::default() }]
+        } else {
+            Vec::new()
+        };
+        PageTable { n_pages, segs }
     }
 
     pub fn len(&self) -> u32 {
-        self.pages.len() as u32
+        self.n_pages
     }
     pub fn is_empty(&self) -> bool {
-        self.pages.is_empty()
+        self.n_pages == 0
+    }
+
+    /// Number of stored segments (≤ pages; 1 for a uniform table).
+    /// Exposed for tests and perf diagnostics.
+    pub fn segment_count(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// End page (exclusive) of segment `i`.
+    fn seg_end(&self, i: usize) -> u32 {
+        self.segs.get(i + 1).map_or(self.n_pages, |s| s.start)
+    }
+
+    /// Index of the segment containing `page`.
+    fn seg_idx(&self, page: u32) -> usize {
+        debug_assert!(page < self.n_pages, "page {page} out of bounds");
+        self.segs.partition_point(|s| s.start <= page) - 1
+    }
+
+    /// Ensure a segment boundary exists at `page`; returns the index of
+    /// the segment starting at `page` (`segs.len()` for `page ==
+    /// n_pages`).
+    fn split_at(&mut self, page: u32) -> usize {
+        if page == self.n_pages {
+            return self.segs.len();
+        }
+        let i = self.seg_idx(page);
+        if self.segs[i].start == page {
+            return i;
+        }
+        let state = self.segs[i].state;
+        self.segs.insert(i + 1, Segment { start: page, state });
+        i + 1
+    }
+
+    /// Merge equal-adjacent segments (keeps the earlier start).
+    fn coalesce(&mut self) {
+        self.segs.dedup_by(|later, earlier| earlier.state == later.state);
     }
 
     pub fn get(&self, idx: u32) -> &PageState {
-        &self.pages[idx as usize]
+        assert!(idx < self.n_pages, "page {idx} out of bounds ({} pages)", self.n_pages);
+        &self.segs[self.seg_idx(idx)].state
     }
+
+    /// Mutable access to a single page's state. Splits the page into its
+    /// own segment; neighbours re-coalesce on the next bulk update.
     pub fn get_mut(&mut self, idx: u32) -> &mut PageState {
-        &mut self.pages[idx as usize]
+        assert!(idx < self.n_pages, "page {idx} out of bounds ({} pages)", self.n_pages);
+        let i = self.split_at(idx);
+        self.split_at(idx + 1);
+        &mut self.segs[i].state
     }
 
     /// Clamp a range to the table size.
@@ -79,51 +170,132 @@ impl PageTable {
         PageRange::new(0, self.len())
     }
 
-    /// Split `range` into maximal runs with equal `classify` values,
-    /// yielding `(run, class)` pairs in order.
-    pub fn runs<C: PartialEq + Copy>(
-        &self,
-        range: PageRange,
-        mut classify: impl FnMut(&PageState) -> C,
-    ) -> Vec<(PageRange, C)> {
+    /// Iterate the maximal runs of *identical state* overlapping
+    /// `range`, clipped to it. Equal-adjacent segments (possible after
+    /// [`PageTable::get_mut`]) are merged on the fly. O(segments), lazy.
+    pub fn runs_in(&self, range: PageRange) -> impl Iterator<Item = (PageRange, &PageState)> + '_ {
         let range = self.clamp(range);
-        let mut out = Vec::new();
-        if range.is_empty() {
-            return out;
-        }
-        let mut run_start = range.start;
-        let mut run_class = classify(self.get(range.start));
-        for i in range.start + 1..range.end {
-            let c = classify(self.get(i));
-            if c != run_class {
-                out.push((PageRange::new(run_start, i), run_class));
-                run_start = i;
-                run_class = c;
+        let mut i = if range.is_empty() { 0 } else { self.seg_idx(range.start) };
+        let mut pos = range.start;
+        std::iter::from_fn(move || {
+            if pos >= range.end {
+                return None;
             }
-        }
-        out.push((PageRange::new(run_start, range.end), run_class));
-        out
+            let start = pos;
+            let state = &self.segs[i].state;
+            loop {
+                pos = self.seg_end(i).min(range.end);
+                if pos >= range.end {
+                    break;
+                }
+                if self.segs[i + 1].state != *state {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            Some((PageRange::new(start, pos), state))
+        })
     }
 
-    /// Apply `f` to every page in `range`.
+    /// Split `range` into maximal runs with equal `classify` values,
+    /// yielding `(run, class)` pairs in order. Lazy: O(segments) total,
+    /// no allocation.
+    pub fn runs<'a, C, F>(
+        &'a self,
+        range: PageRange,
+        mut classify: F,
+    ) -> impl Iterator<Item = (PageRange, C)> + 'a
+    where
+        C: PartialEq,
+        F: FnMut(&PageState) -> C + 'a,
+    {
+        let mut inner = self.runs_in(range).peekable();
+        std::iter::from_fn(move || {
+            let (first, state) = inner.next()?;
+            let class = classify(state);
+            let mut end = first.end;
+            while let Some(&(r, next_state)) = inner.peek() {
+                if classify(next_state) != class {
+                    break;
+                }
+                end = r.end;
+                let _ = inner.next();
+            }
+            Some((PageRange::new(first.start, end), class))
+        })
+    }
+
+    /// The maximal run starting at `pos` (clipped to `limit`) over which
+    /// `key` is constant, plus the state at `pos`. Requires `pos <
+    /// min(limit, len)`. O(segments in the run).
+    pub fn run_at<K: PartialEq>(
+        &self,
+        pos: u32,
+        limit: u32,
+        mut key: impl FnMut(&PageState) -> K,
+    ) -> (PageRange, &PageState) {
+        let limit = limit.min(self.n_pages);
+        assert!(pos < limit, "run_at: empty window {pos}..{limit}");
+        let mut i = self.seg_idx(pos);
+        let state = &self.segs[i].state;
+        let k = key(state);
+        let mut end = self.seg_end(i).min(limit);
+        while end < limit && key(&self.segs[i + 1].state) == k {
+            i += 1;
+            end = self.seg_end(i).min(limit);
+        }
+        (PageRange::new(pos, end), state)
+    }
+
+    /// Apply `f` to the state of every page in `range`.
+    ///
+    /// `f` runs **once per covered segment**, not once per page — all
+    /// pages of a segment share one state, so a pure state transform is
+    /// equivalent and O(segments). Affected neighbours re-coalesce.
     pub fn update(&mut self, range: PageRange, mut f: impl FnMut(&mut PageState)) {
         let range = self.clamp(range);
-        for i in range.iter() {
-            f(&mut self.pages[i as usize]);
+        if range.is_empty() {
+            return;
         }
+        let i0 = self.split_at(range.start);
+        let i1 = self.split_at(range.end);
+        for seg in &mut self.segs[i0..i1] {
+            f(&mut seg.state);
+        }
+        self.coalesce();
     }
 
-    /// Count pages in `range` matching `pred`.
-    pub fn count(&self, range: PageRange, mut pred: impl FnMut(&PageState) -> bool) -> u32 {
+    /// Overwrite every page in `range` with `state` — the segment-native
+    /// bulk write: O(covered segments), collapses them to one.
+    pub fn set_range(&mut self, range: PageRange, state: PageState) {
         let range = self.clamp(range);
-        range.iter().filter(|&i| pred(self.get(i))).count() as u32
+        if range.is_empty() {
+            return;
+        }
+        let i0 = self.split_at(range.start);
+        let i1 = self.split_at(range.end);
+        self.segs.splice(i0..i1, [Segment { start: range.start, state }]);
+        self.coalesce();
+    }
+
+    /// Count pages in `range` matching `pred` (`pred` runs once per
+    /// run of identical state).
+    pub fn count(&self, range: PageRange, mut pred: impl FnMut(&PageState) -> bool) -> u32 {
+        let mut n = 0;
+        for (r, s) in self.runs_in(range) {
+            if pred(s) {
+                n += r.len();
+            }
+        }
+        n
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::page::Residency;
+    use crate::mem::page::{PageFlags, Residency};
 
     #[test]
     fn covering_byte_ranges() {
@@ -143,7 +315,7 @@ mod tests {
         for i in 3..6 {
             t.get_mut(i).residency = Residency::Device;
         }
-        let runs = t.runs(t.full(), |p| p.residency);
+        let runs: Vec<_> = t.runs(t.full(), |p| p.residency).collect();
         assert_eq!(
             runs,
             vec![
@@ -157,7 +329,7 @@ mod tests {
     #[test]
     fn runs_single_class() {
         let t = PageTable::new(4);
-        let runs = t.runs(t.full(), |p| p.residency);
+        let runs: Vec<_> = t.runs(t.full(), |p| p.residency).collect();
         assert_eq!(runs.len(), 1);
         assert_eq!(runs[0].0.len(), 4);
     }
@@ -165,7 +337,7 @@ mod tests {
     #[test]
     fn runs_empty_range() {
         let t = PageTable::new(4);
-        assert!(t.runs(PageRange::new(2, 2), |p| p.residency).is_empty());
+        assert!(t.runs(PageRange::new(2, 2), |p| p.residency).next().is_none());
     }
 
     #[test]
@@ -186,5 +358,149 @@ mod tests {
     #[test]
     fn range_bytes() {
         assert_eq!(PageRange::new(0, 32).bytes(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn uniform_table_is_one_segment() {
+        // A paper-scale allocation (24 GiB = 393216 pages of 64 KiB)
+        // with uniform state costs one segment, and full-range bulk ops
+        // never fan out per page.
+        let mut t = PageTable::new(393_216);
+        assert_eq!(t.segment_count(), 1);
+        t.update(t.full(), |p| {
+            p.residency = Residency::Device;
+            p.flags.set(PageFlags::POPULATED, true);
+        });
+        assert_eq!(t.segment_count(), 1);
+        assert_eq!(t.count(t.full(), |p| p.residency == Residency::Device), 393_216);
+        assert_eq!(t.runs(t.full(), |p| p.residency).count(), 1);
+    }
+
+    fn dev_state() -> PageState {
+        PageState { residency: Residency::Device, ..Default::default() }
+    }
+
+    #[test]
+    fn set_range_overwrites_and_coalesces() {
+        let mut t = PageTable::new(64);
+        let dev = dev_state();
+        // Two abutting writes of the same state merge back to one
+        // segment; a hole keeps three.
+        t.set_range(PageRange::new(0, 16), dev);
+        t.set_range(PageRange::new(16, 32), dev);
+        assert_eq!(t.segment_count(), 2, "[0,32) Device + [32,64) default");
+        t.set_range(PageRange::new(48, 64), dev);
+        assert_eq!(t.segment_count(), 3);
+        assert_eq!(t.count(t.full(), |p| p.residency == Residency::Device), 48);
+        // Filling the hole collapses everything to a single segment.
+        t.set_range(PageRange::new(32, 48), dev);
+        assert_eq!(t.segment_count(), 1);
+    }
+
+    #[test]
+    fn set_range_mid_segment_splits_boundaries() {
+        let mut t = PageTable::new(32);
+        let host = PageState { residency: Residency::Host, ..Default::default() };
+        t.set_range(PageRange::new(5, 9), host);
+        assert_eq!(t.segment_count(), 3);
+        assert_eq!(*t.get(4), PageState::default());
+        assert_eq!(t.get(5).residency, Residency::Host);
+        assert_eq!(t.get(8).residency, Residency::Host);
+        assert_eq!(*t.get(9), PageState::default());
+    }
+
+    #[test]
+    fn get_mut_isolates_one_page() {
+        let mut t = PageTable::new(16);
+        t.get_mut(7).residency = Residency::Both;
+        assert_eq!(t.get(6).residency, Residency::Unmapped);
+        assert_eq!(t.get(7).residency, Residency::Both);
+        assert_eq!(t.get(8).residency, Residency::Unmapped);
+        // A no-op get_mut may leave equal-adjacent segments; reads must
+        // still merge them.
+        let _ = t.get_mut(3);
+        let runs: Vec<_> = t.runs(t.full(), |p| p.residency).collect();
+        assert_eq!(
+            runs,
+            vec![
+                (PageRange::new(0, 7), Residency::Unmapped),
+                (PageRange::new(7, 8), Residency::Both),
+                (PageRange::new(8, 16), Residency::Unmapped),
+            ]
+        );
+        assert_eq!(t.count(t.full(), |p| p.residency == Residency::Unmapped), 15);
+    }
+
+    #[test]
+    fn update_recoalesces_fragments() {
+        let mut t = PageTable::new(16);
+        for i in 0..16 {
+            t.get_mut(i).flags.set(PageFlags::DIRTY, i % 2 == 0);
+        }
+        assert!(t.segment_count() > 1);
+        t.update(t.full(), |p| p.flags.set(PageFlags::DIRTY, false));
+        assert_eq!(t.segment_count(), 1);
+    }
+
+    #[test]
+    fn runs_in_clips_to_range() {
+        let mut t = PageTable::new(16);
+        t.set_range(PageRange::new(4, 12), dev_state());
+        let spans: Vec<_> =
+            t.runs_in(PageRange::new(6, 14)).map(|(r, s)| (r, s.residency)).collect();
+        assert_eq!(
+            spans,
+            vec![
+                (PageRange::new(6, 12), Residency::Device),
+                (PageRange::new(12, 14), Residency::Unmapped),
+            ]
+        );
+    }
+
+    #[test]
+    fn run_at_extends_across_equal_key_segments() {
+        let mut t = PageTable::new(32);
+        let dev = dev_state();
+        let mut dev_dirty = dev;
+        dev_dirty.flags.set(PageFlags::DIRTY, true);
+        // [0,8) Device clean, [8,16) Device dirty, [16,32) default.
+        t.set_range(PageRange::new(0, 8), dev);
+        t.set_range(PageRange::new(8, 16), dev_dirty);
+        // Keyed on residency only, the run spans both Device segments.
+        let (run, state) = t.run_at(2, 32, |p| p.residency);
+        assert_eq!(run, PageRange::new(2, 16));
+        assert_eq!(state.residency, Residency::Device);
+        // Keyed on the full state, it stops at the dirty boundary.
+        let (run, _) = t.run_at(2, 32, |p| *p);
+        assert_eq!(run, PageRange::new(2, 8));
+        // `limit` clips the run.
+        let (run, _) = t.run_at(2, 5, |p| p.residency);
+        assert_eq!(run, PageRange::new(2, 5));
+    }
+
+    #[test]
+    fn update_applies_once_per_segment_semantics() {
+        // The closure sees segment states, and conditional transforms
+        // produce the same result as a per-page walk would.
+        let mut t = PageTable::new(12);
+        t.set_range(PageRange::new(3, 6), dev_state());
+        t.update(t.full(), |p| {
+            if p.residency == Residency::Device {
+                p.flags.set(PageFlags::DIRTY, true);
+            }
+        });
+        assert_eq!(t.count(t.full(), |p| p.flags.get(PageFlags::DIRTY)), 3);
+        assert_eq!(t.count(t.full(), |p| p.residency == Residency::Device), 3);
+    }
+
+    #[test]
+    fn empty_table_ops_are_noops() {
+        let mut t = PageTable::new(0);
+        assert!(t.is_empty());
+        assert_eq!(t.segment_count(), 0);
+        t.update(t.full(), |p| p.residency = Residency::Host);
+        t.set_range(PageRange::new(0, 0), PageState::default());
+        assert_eq!(t.count(t.full(), |_| true), 0);
+        assert!(t.runs(t.full(), |p| p.residency).next().is_none());
     }
 }

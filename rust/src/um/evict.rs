@@ -77,16 +77,16 @@ impl UmRuntime {
             chunk * PAGES_PER_CHUNK,
             (chunk + 1) * PAGES_PER_CHUNK,
         ));
-        // Classify the on-device pages.
+        // Classify the on-device pages, run by run (O(segments in the
+        // chunk), not O(pages)).
         let mut wb_pages = 0u64;
         let mut drop_pages = 0u64;
-        for i in run.iter() {
-            let p = alloc.pages.get(i);
+        for (r, p) in alloc.pages.runs_in(run) {
             if p.residency.on_device() {
                 if p.evict_needs_writeback() {
-                    wb_pages += 1;
+                    wb_pages += r.len() as u64;
                 } else {
-                    drop_pages += 1;
+                    drop_pages += r.len() as u64;
                 }
             }
         }
@@ -127,22 +127,20 @@ impl UmRuntime {
 
     /// Drop device residency for `run` without any transfer (used when
     /// the host copy is valid: ReadMostly collapse from the host side,
-    /// prefetch-to-CPU of duplicated pages).
+    /// prefetch-to-CPU of duplicated pages). One page-table lookup for
+    /// the whole run; per-chunk byte counts come from segment counting.
     pub(super) fn drop_device_residency(&mut self, id: AllocId, run: PageRange) {
+        let alloc = self.space.get(id);
         let mut page = run.start;
         while page < run.end {
             let chunk = Self::chunk_of(page);
             let chunk_end = ((chunk + 1) * PAGES_PER_CHUNK).min(run.end);
-            let mut bytes_here = 0;
-            {
-                let alloc = self.space.get(id);
-                for i in page..chunk_end {
-                    if alloc.pages.get(i).residency.on_device() {
-                        bytes_here += PAGE_SIZE;
-                    }
-                }
-            }
+            let piece = PageRange::new(page, chunk_end);
+            let bytes_here =
+                alloc.pages.count(piece, |p| p.residency.on_device()) as Bytes * PAGE_SIZE;
             if bytes_here > 0 {
+                // `alloc` borrows `self.space`, `remove_resident` only
+                // `self.dev` — disjoint fields.
                 self.dev.remove_resident(crate::mem::ChunkRef { alloc: id, chunk }, bytes_here);
             }
             page = chunk_end;

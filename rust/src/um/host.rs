@@ -135,14 +135,17 @@ impl UmRuntime {
                     AccessOutcome { done: now + dur, remote_bytes: run.bytes(), ..Default::default() }
                 } else {
                     // CPU page faults migrate the data home, chunk by
-                    // chunk (fig. 1 of the paper).
+                    // chunk (fig. 1 of the paper). Per-piece constants
+                    // hoisted out of the loop.
+                    let fault_cost = self.policy.cpu_fault_cost;
+                    let eff = self.eff(TransferMode::Faulted);
                     let mut t = now;
                     let mut page = run.start;
                     while page < run.end {
                         let piece_end = ((page / PAGES_PER_CHUNK + 1) * PAGES_PER_CHUNK).min(run.end);
                         let piece = PageRange::new(page, piece_end);
-                        let fault = self.policy.cpu_fault_cost * piece.len() as u64;
-                        let occ = self.dma_d2h.transfer(t + fault, piece.bytes(), self.eff(TransferMode::Faulted));
+                        let fault = fault_cost * piece.len() as u64;
+                        let occ = self.dma_d2h.transfer(t + fault, piece.bytes(), eff);
                         self.trace.record(TraceKind::CpuFault, t, t + fault, piece.bytes(), Some(id), "cpu-fault");
                         self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, piece.bytes(), Some(id), "cpu-fault-migrate");
                         self.metrics.cpu_faults += piece.len() as u64;

@@ -79,9 +79,12 @@ impl UmRuntime {
             Residency::Host => {
                 // Bulk transfer in prefetch_chunk pieces at bulk
                 // efficiency — "prefetching pages in bulk improves
-                // transfer efficiency" (§III-A3).
-                let read_mostly = self.space.get(id).pages.get(run.start).advise.read_mostly();
-                let pinned = self.space.get(id).pages.get(run.start).advise.preferred_gpu();
+                // transfer efficiency" (§III-A3). One allocation lookup
+                // for the whole run, hoisted out of the piece loop.
+                let (read_mostly, pinned) = {
+                    let first = self.space.get(id).pages.get(run.start);
+                    (first.advise.read_mostly(), first.advise.preferred_gpu())
+                };
                 let chunk_pages = (self.policy.prefetch_chunk / PAGE_SIZE) as u32;
                 let mut t = now;
                 let mut page = run.start;

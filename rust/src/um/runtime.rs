@@ -4,8 +4,8 @@
 //! `host`), all as `impl UmRuntime` blocks.
 
 use crate::mem::{
-    AllocId, AllocKind, ChunkRef, DeviceMemory, ManagedSpace, PageRange, Residency,
-    TransferMode, PAGES_PER_CHUNK, PAGE_SIZE,
+    AllocId, AllocKind, ChunkRef, DeviceMemory, ManagedSpace, PageRange, PageState,
+    Residency, TransferMode, PAGES_PER_CHUNK, PAGE_SIZE,
 };
 use crate::mem::page::{AdviseFlags, PageFlags};
 use crate::platform::PlatformSpec;
@@ -151,13 +151,12 @@ impl UmRuntime {
             // cudaMalloc memory never migrates nor evicts: lock it.
             self.dev.set_locked(ChunkRef { alloc: id, chunk }, true);
         }
-        self.space.get_mut(id).pages.update(
-            PageRange::new(0, n_pages),
-            |p| {
-                p.residency = Residency::Device;
-                p.flags.set(PageFlags::POPULATED, true);
-            },
-        );
+        let st = PageState {
+            residency: Residency::Device,
+            flags: PageFlags(PageFlags::POPULATED),
+            ..Default::default()
+        };
+        self.space.get_mut(id).pages.set_range(PageRange::new(0, n_pages), st);
         id
     }
 
@@ -165,10 +164,12 @@ impl UmRuntime {
     pub fn malloc_host(&mut self, name: &str, size: Bytes) -> AllocId {
         let id = self.space.alloc(name, size, AllocKind::Host);
         let n = self.space.get(id).n_pages();
-        self.space.get_mut(id).pages.update(PageRange::new(0, n), |p| {
-            p.residency = Residency::Host;
-            p.flags.set(PageFlags::POPULATED, true);
-        });
+        let st = PageState {
+            residency: Residency::Host,
+            flags: PageFlags(PageFlags::POPULATED),
+            ..Default::default()
+        };
+        self.space.get_mut(id).pages.set_range(PageRange::new(0, n), st);
         id
     }
 
@@ -237,27 +238,21 @@ impl UmRuntime {
 
     /// The maximal homogeneous run starting at `pos` (fresh state).
     ///
-    /// Hot path (§Perf): the scan compares a packed per-page key (one
-    /// u32 of residency + advise bits + mapping flags) instead of
-    /// building the full [`Class`] per page; the `Class` is
-    /// materialized once per run.
+    /// Hot path (§Perf): the interval table extends the run segment by
+    /// segment — O(segments in the run), never per page — comparing a
+    /// packed key (one u32 of residency + advise bits + mapping flags);
+    /// the full [`Class`] is materialized once per run.
     pub(super) fn next_run(&self, id: AllocId, pos: u32, limit: u32) -> (PageRange, Class) {
         #[inline(always)]
-        fn key(p: &crate::mem::PageState) -> u32 {
+        fn key(p: &PageState) -> u32 {
             // Residency, all advise bits, and the two mapping flags —
             // exactly the fields `classify` reads.
             let mapping = p.flags.0 & (PageFlags::GPU_MAPPED | PageFlags::CPU_MAPPED);
             (p.residency as u32) | ((p.advise.0 as u32) << 8) | ((mapping as u32) << 16)
         }
         let pages = &self.space.get(id).pages;
-        let first = pages.get(pos);
-        let k = key(first);
-        let class = classify(first);
-        let mut end = pos + 1;
-        while end < limit && key(pages.get(end)) == k {
-            end += 1;
-        }
-        (PageRange::new(pos, end), class)
+        let (run, state) = pages.run_at(pos, limit, key);
+        (run, classify(state))
     }
 
     /// Handle one homogeneous run. Dispatches to the mechanism modules.
@@ -307,13 +302,12 @@ impl UmRuntime {
         page / PAGES_PER_CHUNK
     }
 
-    /// Refresh the LRU position of every chunk overlapping `run`.
+    /// Refresh the LRU position of every chunk overlapping `run`
+    /// (batched: one [`DeviceMemory::touch_range`] call per run).
     pub(super) fn touch_chunks(&mut self, id: AllocId, run: PageRange, now: Ns) {
         let first = Self::chunk_of(run.start);
         let last = Self::chunk_of(run.end.saturating_sub(1).max(run.start));
-        for chunk in first..=last {
-            self.dev.touch(ChunkRef { alloc: id, chunk }, now);
-        }
+        self.dev.touch_range(id, first, last, now);
     }
 
     pub(super) fn mark_dirty(&mut self, id: AllocId, run: PageRange) {
@@ -354,13 +348,23 @@ impl UmRuntime {
             let id = AllocId(i as u32);
             let kind = self.space.get(id).kind;
             let n = self.space.get(id).n_pages();
-            self.space.get_mut(id).pages.update(PageRange::new(0, n), |p| {
-                *p = Default::default();
-                if kind != AllocKind::Managed {
-                    p.residency = if kind == AllocKind::Device { Residency::Device } else { Residency::Host };
-                    p.flags.set(PageFlags::POPULATED, true);
+            // Segment-native reset: one `set_range` collapses the whole
+            // allocation to a single uniform segment — O(1) per alloc
+            // per benchmark repetition instead of a per-page walk.
+            let st = if kind == AllocKind::Managed {
+                PageState::default()
+            } else {
+                PageState {
+                    residency: if kind == AllocKind::Device {
+                        Residency::Device
+                    } else {
+                        Residency::Host
+                    },
+                    flags: PageFlags(PageFlags::POPULATED),
+                    ..Default::default()
                 }
-            });
+            };
+            self.space.get_mut(id).pages.set_range(PageRange::new(0, n), st);
         }
         let was_enabled = self.trace.is_enabled();
         self.advise_hints_active = false;

@@ -2,7 +2,9 @@
 //! random operation sequences against the UM runtime must preserve the
 //! core invariants regardless of platform, sizes, advises or order.
 
-use umbra::mem::{AllocId, PageRange, Residency, PAGE_SIZE};
+use umbra::mem::{
+    AdviseFlags, AllocId, PageFlags, PageRange, PageState, PageTable, Residency, PAGE_SIZE,
+};
 use umbra::platform::{PlatformId};
 use umbra::quick_assert;
 use umbra::um::{Advise, Loc, UmRuntime};
@@ -179,6 +181,150 @@ fn no_page_is_both_dirty_and_duplicated() {
                 quick_assert!(bad == 0, "alloc {} has {bad} dirty duplicates", alloc.name);
             }
         }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Differential test: interval page table vs. naive flat-vec reference.
+// ---------------------------------------------------------------------
+
+/// Naive O(pages) reference model with the semantics the flat
+/// `Vec<PageState>` table had before the interval refactor.
+struct FlatTable {
+    pages: Vec<PageState>,
+}
+
+impl FlatTable {
+    fn new(n: u32) -> FlatTable {
+        FlatTable { pages: vec![PageState::default(); n as usize] }
+    }
+    fn clamp(&self, r: PageRange) -> PageRange {
+        let n = self.pages.len() as u32;
+        PageRange::new(r.start.min(n), r.end.min(n))
+    }
+    fn update(&mut self, r: PageRange, mut f: impl FnMut(&mut PageState)) {
+        let r = self.clamp(r);
+        for i in r.start..r.end {
+            f(&mut self.pages[i as usize]);
+        }
+    }
+    fn set_range(&mut self, r: PageRange, s: PageState) {
+        self.update(r, |p| *p = s);
+    }
+    fn count(&self, r: PageRange, mut pred: impl FnMut(&PageState) -> bool) -> u32 {
+        let r = self.clamp(r);
+        (r.start..r.end).filter(|&i| pred(&self.pages[i as usize])).count() as u32
+    }
+    /// The old per-page run-splitting algorithm, keyed on residency.
+    fn runs_residency(&self, r: PageRange) -> Vec<(PageRange, Residency)> {
+        let r = self.clamp(r);
+        let mut out = Vec::new();
+        if r.is_empty() {
+            return out;
+        }
+        let mut start = r.start;
+        let mut class = self.pages[r.start as usize].residency;
+        for i in r.start + 1..r.end {
+            let c = self.pages[i as usize].residency;
+            if c != class {
+                out.push((PageRange::new(start, i), class));
+                start = i;
+                class = c;
+            }
+        }
+        out.push((PageRange::new(start, r.end), class));
+        out
+    }
+}
+
+fn random_state(g: &mut Gen) -> PageState {
+    PageState {
+        residency: match g.u64(0, 3) {
+            0 => Residency::Unmapped,
+            1 => Residency::Host,
+            2 => Residency::Device,
+            _ => Residency::Both,
+        },
+        flags: PageFlags(g.u64(0, 15) as u8),
+        advise: AdviseFlags(g.u64(0, 31) as u8),
+    }
+}
+
+fn random_prange(g: &mut Gen, n: u32) -> PageRange {
+    let start = g.u64(0, n as u64) as u32;
+    let end = g.u64(start as u64, n as u64) as u32;
+    PageRange::new(start, end)
+}
+
+#[test]
+fn interval_table_matches_flat_reference_model() {
+    // Acceptance gate: ≥ 1000 random operation sequences, each mixing
+    // the op shapes the UM layer issues (bulk overwrite = migrate /
+    // reset, masked flag transform = advise, conditional transform =
+    // fault / invalidation, single-page write = get_mut).
+    forall("interval-vs-flat", 1000, |g| {
+        let n = g.u64(1, 384) as u32;
+        let mut it = PageTable::new(n);
+        let mut ft = FlatTable::new(n);
+        for _ in 0..g.usize(1, 24) {
+            let r = random_prange(g, n);
+            match g.u64(0, 3) {
+                0 => {
+                    let s = random_state(g);
+                    it.set_range(r, s);
+                    ft.set_range(r, s);
+                }
+                1 => {
+                    let bit = [
+                        PageFlags::DIRTY,
+                        PageFlags::CPU_MAPPED,
+                        PageFlags::GPU_MAPPED,
+                        PageFlags::POPULATED,
+                    ][g.usize(0, 3)];
+                    let on = g.bool();
+                    it.update(r, |p| p.flags.set(bit, on));
+                    ft.update(r, |p| p.flags.set(bit, on));
+                }
+                2 => {
+                    let from = random_state(g).residency;
+                    let to = random_state(g).residency;
+                    let xform = move |p: &mut PageState| {
+                        if p.residency == from {
+                            p.residency = to;
+                            p.flags.set(PageFlags::DIRTY, to == Residency::Device);
+                        }
+                    };
+                    it.update(r, xform);
+                    ft.update(r, xform);
+                }
+                _ => {
+                    let idx = g.u64(0, n as u64 - 1) as u32;
+                    let s = random_state(g);
+                    *it.get_mut(idx) = s;
+                    ft.pages[idx as usize] = s;
+                }
+            }
+            // Observable state must agree after every op.
+            let probe = random_prange(g, n);
+            let res = random_state(g).residency;
+            quick_assert!(
+                it.count(probe, |p| p.residency == res)
+                    == ft.count(probe, |p| p.residency == res),
+                "count diverged on {probe:?}"
+            );
+            let ir: Vec<_> = it.runs(probe, |p| p.residency).collect();
+            let fr = ft.runs_residency(probe);
+            quick_assert!(ir == fr, "runs diverged on {probe:?}: {ir:?} vs {fr:?}");
+        }
+        for i in 0..n {
+            quick_assert!(*it.get(i) == ft.pages[i as usize], "page {i} state diverged");
+        }
+        quick_assert!(
+            it.segment_count() <= n as usize,
+            "more segments than pages: {} > {n}",
+            it.segment_count()
+        );
         Ok(())
     });
 }
