@@ -1,0 +1,14 @@
+//! `cargo bench --bench auto_vs_tuned` — the um::auto policy-engine
+//! study: `UM Auto` against basic UM and the best hand-tuned variant
+//! per (platform, regime, app) cell, with the engine's decision
+//! counters in the CSV.
+use umbra::bench_harness::figures;
+
+fn main() {
+    let reps = std::env::var("UMBRA_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let t0 = std::time::Instant::now();
+    let report = figures::fig_auto(reps);
+    println!("{}", report.text);
+    println!("auto_vs_tuned regenerated in {:?} ({} reps/cell)", t0.elapsed(), reps);
+    report.write(std::path::Path::new("results")).expect("write results/");
+}

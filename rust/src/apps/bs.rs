@@ -238,6 +238,25 @@ mod tests {
     }
 
     #[test]
+    fn auto_beats_basic_um_on_intel_and_discovers_read_mostly() {
+        // The policy engine should recover the §IV-A hand tuning on its
+        // own: bulk-escalate the input migration (the prefetch win on
+        // PCIe) and mark the re-read inputs ReadMostly (the advise win).
+        let app = small();
+        let u = app.run(&intel_pascal(), Variant::Um, false);
+        let a = app.run(&intel_pascal(), Variant::UmAuto, false);
+        assert!(
+            a.kernel_time < u.kernel_time,
+            "auto {} should beat basic UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+        assert!(a.metrics.auto_prefetched_bytes > 0, "stream escalation fired");
+        assert!(a.metrics.auto_advises >= 3, "ReadMostly discovered on the three inputs");
+        assert!(a.metrics.auto_decisions > 0);
+    }
+
+    #[test]
     fn p9_oversub_advise_pathology() {
         // The paper's headline asymmetry: ReadMostly helps on Intel when
         // oversubscribed but *hurts* on P9.

@@ -349,6 +349,24 @@ mod tests {
     }
 
     #[test]
+    fn auto_beats_basic_um_and_advises_the_matrix() {
+        // CG re-streams the sparse matrix every iteration: the engine
+        // escalates the first-touch migration and then discovers the
+        // §IV-A read-mostly tuning for vals/cols/rowptr by itself.
+        let cg = ConjugateGradient::for_footprint(128 * MIB);
+        let u = cg.run(&intel_pascal(), Variant::Um, false);
+        let a = cg.run(&intel_pascal(), Variant::UmAuto, false);
+        assert!(
+            a.kernel_time < u.kernel_time,
+            "auto {} should beat basic UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+        assert!(a.metrics.auto_prefetched_bytes > 0);
+        assert!(a.metrics.auto_advises >= 1, "matrix arrays marked read-mostly");
+    }
+
+    #[test]
     fn host_reads_x_at_end() {
         let cg = ConjugateGradient::for_footprint(128 * MIB);
         let r = cg.run(&intel_pascal(), Variant::Um, true);

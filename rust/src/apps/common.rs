@@ -9,7 +9,10 @@ use crate::trace::{Breakdown, Trace};
 use crate::um::{Loc, UmMetrics, UmRuntime};
 use crate::util::units::{Bytes, Ns};
 
-/// The paper's five benchmark versions (§III-A).
+/// The paper's five benchmark versions (§III-A), plus `UmAuto` — the
+/// closed-loop sixth variant where the runtime's `um::auto` policy
+/// engine chooses advises/prefetch/eviction hints online instead of the
+/// app hand-tuning them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     Explicit,
@@ -17,16 +20,37 @@ pub enum Variant {
     UmAdvise,
     UmPrefetch,
     UmBoth,
+    UmAuto,
 }
 
 impl Variant {
+    /// The paper's five variants — the reproduction figures (3-8) keep
+    /// exactly this set so they stay comparable to the published data.
     pub const ALL: [Variant; 5] =
         [Variant::Explicit, Variant::Um, Variant::UmAdvise, Variant::UmPrefetch, Variant::UmBoth];
+    /// Everything, including the policy-engine variant.
+    pub const ALL_WITH_AUTO: [Variant; 6] = [
+        Variant::Explicit,
+        Variant::Um,
+        Variant::UmAdvise,
+        Variant::UmPrefetch,
+        Variant::UmBoth,
+        Variant::UmAuto,
+    ];
     /// The four UM configurations (oversubscription has no Explicit
     /// baseline — §IV-B: "the case does not exist with original
     /// versions with explicit allocation").
     pub const UM_ONLY: [Variant; 4] =
         [Variant::Um, Variant::UmAdvise, Variant::UmPrefetch, Variant::UmBoth];
+    /// The "auto vs. hand-tuned" study set (`umbra auto`): basic UM as
+    /// the baseline, the three hand-tuned variants, and the engine.
+    pub const AUTO_STUDY: [Variant; 5] = [
+        Variant::Um,
+        Variant::UmAdvise,
+        Variant::UmPrefetch,
+        Variant::UmBoth,
+        Variant::UmAuto,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -35,6 +59,7 @@ impl Variant {
             Variant::UmAdvise => "UM Advise",
             Variant::UmPrefetch => "UM Prefetch",
             Variant::UmBoth => "UM Both",
+            Variant::UmAuto => "UM Auto",
         }
     }
 
@@ -45,18 +70,27 @@ impl Variant {
             "umadvise" | "advise" => Some(Variant::UmAdvise),
             "umprefetch" | "prefetch" => Some(Variant::UmPrefetch),
             "umboth" | "both" => Some(Variant::UmBoth),
+            "umauto" | "auto" => Some(Variant::UmAuto),
             _ => None,
         }
     }
 
+    /// Whether the *app* applies hand-tuned advises (§IV-A wiring).
+    /// `UmAuto` deliberately reports `false`: the engine, not the app,
+    /// decides.
     pub fn advises(self) -> bool {
         matches!(self, Variant::UmAdvise | Variant::UmBoth)
     }
+    /// Whether the *app* issues hand-placed prefetches (§III-A3 wiring).
     pub fn prefetches(self) -> bool {
         matches!(self, Variant::UmPrefetch | Variant::UmBoth)
     }
     pub fn managed(self) -> bool {
         self != Variant::Explicit
+    }
+    /// Whether the runtime's online policy engine is attached.
+    pub fn auto(self) -> bool {
+        self == Variant::UmAuto
     }
 }
 
@@ -137,6 +171,9 @@ impl AppCtx {
         let mut um = UmRuntime::new(plat);
         if trace {
             um.enable_trace();
+        }
+        if variant.auto() {
+            um.enable_auto();
         }
         AppCtx {
             um,
@@ -364,9 +401,10 @@ mod tests {
 
     #[test]
     fn variant_parse_roundtrip() {
-        for v in Variant::ALL {
+        for v in Variant::ALL_WITH_AUTO {
             assert_eq!(Variant::parse(v.name()), Some(v), "{}", v.name());
         }
+        assert_eq!(Variant::parse("auto"), Some(Variant::UmAuto));
         assert_eq!(Variant::parse("nope"), None);
     }
 
@@ -376,6 +414,19 @@ mod tests {
         assert!(Variant::UmAdvise.advises() && !Variant::UmAdvise.prefetches());
         assert!(!Variant::Um.advises() && !Variant::Um.prefetches());
         assert!(!Variant::Explicit.managed());
+        // The auto variant is managed but hand-tunes nothing: the
+        // runtime policy engine decides instead.
+        assert!(Variant::UmAuto.managed() && Variant::UmAuto.auto());
+        assert!(!Variant::UmAuto.advises() && !Variant::UmAuto.prefetches());
+        assert!(!Variant::Um.auto());
+    }
+
+    #[test]
+    fn auto_variant_attaches_engine() {
+        let ctx = AppCtx::new(&intel_pascal(), Variant::UmAuto, false);
+        assert!(ctx.um.auto_engine().is_some());
+        let ctx = AppCtx::new(&intel_pascal(), Variant::Um, false);
+        assert!(ctx.um.auto_engine().is_none());
     }
 
     #[test]

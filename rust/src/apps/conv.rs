@@ -271,4 +271,21 @@ mod tests {
         let gain = 1.0 - p.kernel_time.0 as f64 / u.kernel_time.0 as f64;
         assert!(gain > 0.3, "Intel prefetch gain should be large, got {gain:.2}");
     }
+
+    #[test]
+    fn auto_beats_basic_um_on_streaming_pipeline() {
+        // conv is the suite's streaming, low-reuse app: the engine's win
+        // comes from escalating the input/kernel first-touch migration;
+        // the workspace first-touch population is identical in both.
+        let c = FftConv::for_footprint(ConvPlan::C2C, 128 * MIB);
+        let u = c.run(&intel_pascal(), Variant::Um, false);
+        let a = c.run(&intel_pascal(), Variant::UmAuto, false);
+        assert!(
+            a.kernel_time < u.kernel_time,
+            "auto {} should beat basic UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+        assert!(a.metrics.auto_prefetched_bytes > 0, "input migration escalated");
+    }
 }

@@ -201,6 +201,43 @@ mod tests {
     }
 
     #[test]
+    fn auto_beats_basic_um_in_memory_on_intel() {
+        // Both big arrays are host-initialized and demand-migrate under
+        // basic UM; the engine escalates both first touches.
+        let f = Fdtd3d::for_footprint(64 * MIB);
+        let u = f.run(&intel_pascal(), Variant::Um, false);
+        let a = f.run(&intel_pascal(), Variant::UmAuto, false);
+        assert!(
+            a.kernel_time < u.kernel_time,
+            "auto {} should beat basic UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+        assert!(a.metrics.auto_prefetched_bytes > 0);
+    }
+
+    #[test]
+    fn auto_avoids_the_p9_oversubscription_pathology() {
+        // §IV-B: hand advises are ~3x worse here. The engine's advise
+        // guard must keep it from recreating that: no auto advises on a
+        // coherent oversubscribed platform, and performance within a
+        // small tolerance of basic UM.
+        let mut plat = p9_volta();
+        plat.gpu.mem_capacity = 128 * MIB;
+        plat.gpu.reserved = 0;
+        let f = Fdtd3d::for_footprint((plat.gpu.usable() as f64 * 1.5) as u64);
+        let u = f.run(&plat, Variant::Um, false);
+        let a = f.run(&plat, Variant::UmAuto, false);
+        assert_eq!(a.metrics.auto_advises, 0, "advise guard holds on oversubscribed P9");
+        assert!(
+            a.kernel_time.0 as f64 <= u.kernel_time.0 as f64 * 1.05,
+            "auto {} must stay near basic UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+    }
+
+    #[test]
     fn ping_pong_dirties_both_arrays() {
         let f = Fdtd3d::for_footprint(64 * MIB);
         let r = f.run(&intel_pascal(), Variant::Um, false);

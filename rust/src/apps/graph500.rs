@@ -218,6 +218,24 @@ mod tests {
     }
 
     #[test]
+    fn auto_harmless_on_irregular_access() {
+        // BFS gathers are random: the engine must recognize that and
+        // stay out of the way (no predictive prefetch storms).
+        let g = Graph500::for_footprint(64 * MIB);
+        let u = g.run(&intel_pascal(), Variant::Um, false);
+        let a = g.run(&intel_pascal(), Variant::UmAuto, false);
+        assert!(
+            a.kernel_time.0 as f64 <= u.kernel_time.0 as f64 * 1.05,
+            "auto {} must not regress vs UM {} on irregular access",
+            a.kernel_time,
+            u.kernel_time
+        );
+        // Deterministic like every other variant.
+        let b = g.run(&intel_pascal(), Variant::UmAuto, false);
+        assert_eq!(a.kernel_time, b.kernel_time);
+    }
+
+    #[test]
     fn explicit_never_faults() {
         let g = Graph500::for_footprint(64 * MIB);
         let r = g.run(&intel_pascal(), Variant::Explicit, false);

@@ -181,6 +181,27 @@ mod tests {
     }
 
     #[test]
+    fn auto_cuts_fault_groups_without_regressing() {
+        let m = MatMul::for_footprint(512 * MIB);
+        let u = m.run(&intel_volta(), Variant::Um, false);
+        let a = m.run(&intel_volta(), Variant::UmAuto, false);
+        // Input migration collapses to probe faults; the output's
+        // first-touch population (identical in both variants) remains.
+        assert!(
+            a.metrics.gpu_fault_groups < u.metrics.gpu_fault_groups / 2,
+            "escalation leaves only probe + populate faults: {} vs {}",
+            a.metrics.gpu_fault_groups,
+            u.metrics.gpu_fault_groups
+        );
+        assert!(
+            a.kernel_time <= u.kernel_time,
+            "auto {} must not regress vs UM {}",
+            a.kernel_time,
+            u.kernel_time
+        );
+    }
+
+    #[test]
     fn intel_advise_helps_but_less() {
         let m = MatMul::for_footprint(512 * MIB);
         let u = m.run(&intel_volta(), Variant::Um, false);

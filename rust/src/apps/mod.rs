@@ -1,5 +1,6 @@
 //! The six benchmark applications of the paper (§III-A, Table I), each
-//! in the five memory-management variants:
+//! in the paper's five memory-management variants plus the policy-engine
+//! variant:
 //!
 //! | Variant | Allocation | Data movement |
 //! |---|---|---|
@@ -8,6 +9,7 @@
 //! | `UmAdvise` | managed | + `cudaMemAdvise` per §III-A2 |
 //! | `UmPrefetch` | managed | + `cudaMemPrefetchAsync` per §III-A3 |
 //! | `UmBoth` | managed | advises + prefetch |
+//! | `UmAuto` | managed | [`crate::um::auto`] engine decides at runtime |
 //!
 //! Applications: Black-Scholes ([`bs`]), dense MatMul ([`matmul`],
 //! cuBLAS stand-in), Conjugate Gradient ([`cg`], cuSPARSE stand-in),

@@ -317,6 +317,108 @@ pub fn fig8() -> Report {
     )
 }
 
+// ---------------------------------------------------------------------
+// Auto vs. hand-tuned (the um::auto policy-engine study)
+// ---------------------------------------------------------------------
+
+/// "Auto vs. hand-tuned": evaluate `UM Auto` (the online policy engine)
+/// against basic UM and the *best* hand-tuned variant per cell, on the
+/// paper's two headline platforms in both regimes. This is the report
+/// the tentpole claim rests on: no static variant wins everywhere, so
+/// the engine is judged per cell against whichever hand tuning happens
+/// to win there. CSV rows carry the engine's decision counters so the
+/// bench trajectory tracks decision quality across PRs.
+pub fn fig_auto(reps: usize) -> Report {
+    let platforms = vec![PlatformId::IntelPascal, PlatformId::P9Volta];
+    let config = SuiteConfig {
+        platforms: platforms.clone(),
+        variants: Variant::AUTO_STUDY.to_vec(),
+        reps,
+        ..Default::default()
+    };
+    let suite = Suite::run(&config);
+
+    const HAND: [Variant; 3] = [Variant::UmAdvise, Variant::UmPrefetch, Variant::UmBoth];
+    let mut text = String::new();
+    let mut header: Vec<String> = [
+        "platform",
+        "regime",
+        "app",
+        "um_ms",
+        "best_handtuned",
+        "best_ms",
+        "auto_ms",
+        "auto_vs_um",
+        "auto_vs_best",
+    ]
+    .map(String::from)
+    .to_vec();
+    header.extend(crate::um::UmMetrics::AUTO_CSV_HEADER.map(String::from));
+    let mut csv = Csv::new(header);
+
+    for regime in Regime::ALL {
+        for &platform in &platforms {
+            let mut table = TextTable::new(vec![
+                "App",
+                "UM (ms)",
+                "best hand-tuned",
+                "best (ms)",
+                "UM Auto (ms)",
+                "auto/UM",
+                "auto/best",
+            ])
+            .title(format!(
+                "auto vs. hand-tuned: {} — {}",
+                platform.name(),
+                regime.name()
+            ))
+            .left(0)
+            .left(2);
+            for app in AppId::ALL {
+                let (Some(um), Some(auto)) = (
+                    suite.get4(app, platform, Variant::Um, regime),
+                    suite.get4(app, platform, Variant::UmAuto, regime),
+                ) else {
+                    continue;
+                };
+                let (best_v, best) = HAND
+                    .iter()
+                    .filter_map(|&v| suite.get4(app, platform, v, regime).map(|c| (v, c)))
+                    .min_by_key(|(_, c)| c.kernel_time.mean)
+                    .expect("hand-tuned variants present wherever UM is");
+                let um_ms = um.kernel_time.mean.as_ms();
+                let best_ms = best.kernel_time.mean.as_ms();
+                let auto_ms = auto.kernel_time.mean.as_ms();
+                table.row(vec![
+                    app.name().to_string(),
+                    format!("{um_ms:.1}"),
+                    best_v.name().to_string(),
+                    format!("{best_ms:.1}"),
+                    format!("{auto_ms:.1}"),
+                    format!("{:.2}x", auto_ms / um_ms),
+                    format!("{:.2}x", auto_ms / best_ms),
+                ]);
+                let mut row = vec![
+                    platform.name().to_string(),
+                    regime.name().to_string(),
+                    app.name().to_string(),
+                    format!("{um_ms:.3}"),
+                    best_v.name().to_string(),
+                    format!("{best_ms:.3}"),
+                    format!("{auto_ms:.3}"),
+                    format!("{:.4}", auto_ms / um_ms),
+                    format!("{:.4}", auto_ms / best_ms),
+                ];
+                row.extend(auto.last.metrics.auto_csv_row());
+                csv.row(row);
+            }
+            text.push_str(&table.render());
+            text.push('\n');
+        }
+    }
+    Report::new("auto_vs_tuned", text).with_csv("auto_vs_tuned", csv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

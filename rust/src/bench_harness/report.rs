@@ -34,8 +34,9 @@ impl Report {
     }
 }
 
-/// Regenerate everything (Table I + Figs. 3-8 + ablations) into `out`.
-/// `reps` follows the paper's 5-repetition methodology.
+/// Regenerate everything (Table I + Figs. 3-8 + the auto-vs-hand-tuned
+/// study + ablations) into `out`. `reps` follows the paper's
+/// 5-repetition methodology.
 pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
     use super::{ablate, figures};
     let mut written = Vec::new();
@@ -47,6 +48,7 @@ pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
         figures::fig6(reps),
         figures::fig7(),
         figures::fig8(),
+        figures::fig_auto(reps),
         ablate::ablate_all(),
     ];
     for r in reports {

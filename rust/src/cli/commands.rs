@@ -23,6 +23,7 @@ USAGE:
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N]
   umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
   umbra table 1 [--out DIR]
+  umbra auto [--reps N] [--out DIR]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
   umbra validate [--artifacts DIR]
@@ -33,8 +34,11 @@ USAGE:
 
   APP  = bs|cublas|cg|graph500|conv0|conv1|conv2|fdtd3d
   PLAT = intel-pascal|intel-volta|p9-volta
-  VAR  = explicit|um|advise|prefetch|both
+  VAR  = explicit|um|advise|prefetch|both|auto
   REG  = in-memory|oversub
+
+  `auto` runs the um::auto online policy engine (UM Auto variant); the
+  `umbra auto` subcommand regenerates the auto-vs-hand-tuned study.
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
@@ -44,6 +48,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "suite" => cmd_suite(args),
         "fig" => cmd_fig(args),
         "table" => cmd_table(args),
+        "auto" => cmd_auto(args),
         "ablate" => cmd_ablate(args),
         "trace" => cmd_trace(args),
         "validate" => cmd_validate(args),
@@ -73,7 +78,7 @@ fn cmd_list() -> Result<()> {
     }
     println!("{}", t.render());
     println!("platforms: {}", PlatformId::ALL.map(|p| p.name()).join(", "));
-    println!("variants:  {}", Variant::ALL.map(|v| v.name()).join(", "));
+    println!("variants:  {}", Variant::ALL_WITH_AUTO.map(|v| v.name()).join(", "));
     println!("regimes:   in-memory (~80% of GPU mem), oversubscribed (~150%)");
     Ok(())
 }
@@ -102,6 +107,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         "  remote: gpu->host {} B, cpu->dev {} B; invalidations {} pages",
         m.remote_bytes_gpu_to_host, m.remote_bytes_cpu_to_dev, m.invalidated_pages
     );
+    if cell.variant == Variant::UmAuto {
+        println!(
+            "  auto: {} decisions, {} pattern flips, {} B prefetched ({} B hit, {} B mispredicted), {} advises, {} B early-dropped",
+            m.auto_decisions,
+            m.auto_pattern_flips,
+            m.auto_prefetched_bytes,
+            m.auto_prefetch_hit_bytes,
+            m.auto_mispredicted_prefetch_bytes,
+            m.auto_advises,
+            m.auto_early_dropped_bytes
+        );
+    }
     if trace {
         let b = r.breakdown;
         println!(
@@ -150,20 +167,27 @@ fn cmd_suite(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.flag("out") {
         std::fs::create_dir_all(out)?;
-        let mut csv = crate::util::csvout::Csv::new(vec![
-            "platform", "regime", "app", "variant", "kernel_ms_mean", "kernel_ms_std",
-        ]);
+        let mut header: Vec<String> =
+            ["platform", "regime", "app", "variant", "kernel_ms_mean", "kernel_ms_std"]
+                .map(String::from)
+                .to_vec();
+        // Auto-policy counters ride along (zeros for non-auto variants)
+        // so the bench trajectory can track decision quality.
+        header.extend(crate::um::UmMetrics::AUTO_CSV_HEADER.map(String::from));
+        let mut csv = crate::util::csvout::Csv::new(header);
         let mut cells: Vec<_> = suite.results.iter().collect();
         cells.sort_by_key(|(c, _)| (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name()));
         for (cell, r) in cells {
-            csv.row(vec![
+            let mut row = vec![
                 cell.platform.name().to_string(),
                 cell.regime.name().to_string(),
                 cell.app.name().to_string(),
                 cell.variant.name().to_string(),
                 format!("{:.3}", r.kernel_time.mean.as_ms()),
                 format!("{:.3}", r.kernel_time.std.as_ms()),
-            ]);
+            ];
+            row.extend(r.last.metrics.auto_csv_row());
+            csv.row(row);
         }
         csv.write(&Path::new(out).join("csv/suite.csv"))?;
         eprintln!("wrote {out}/csv/suite.csv");
@@ -207,6 +231,18 @@ fn cmd_table(args: &Args) -> Result<()> {
         }
         Some(other) => bail!("no table '{other}' in the paper (only 1)"),
     }
+}
+
+/// The auto-vs-hand-tuned study (`um::auto` policy engine).
+fn cmd_auto(args: &Args) -> Result<()> {
+    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let report = figures::fig_auto(reps);
+    println!("{}", report.text);
+    if let Some(out) = args.flag("out") {
+        report.write(Path::new(out))?;
+        eprintln!("wrote {out}/{}.txt (+{} csv)", report.name, report.csvs.len());
+    }
+    Ok(())
 }
 
 fn cmd_ablate(args: &Args) -> Result<()> {
@@ -359,6 +395,16 @@ mod tests {
             "sweep --param dup-factor --values 0.5 --app bs --platform pascal --variant um --regime in-memory",
         ))
         .is_err(), "policy validation catches dup_factor < 1");
+    }
+
+    #[test]
+    fn parse_cell_auto_variant() {
+        let c = parse_cell(&args(
+            "run --app bs --platform pascal --variant auto --regime in-memory",
+        ))
+        .unwrap();
+        assert_eq!(c.variant, Variant::UmAuto);
+        assert!(USAGE.contains("umbra auto"), "usage documents the subcommand");
     }
 
     #[test]

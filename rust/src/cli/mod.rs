@@ -6,6 +6,7 @@
 //! umbra suite [--reps N] [--out DIR] [--full-matrix]
 //! umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
 //! umbra table 1 [--out DIR]
+//! umbra auto [--reps N] [--out DIR]
 //! umbra ablate [--out DIR]
 //! umbra trace --app bs --platform p9 --variant um --regime oversub [--out DIR]
 //! umbra validate [--artifacts DIR]

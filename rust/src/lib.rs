@@ -14,14 +14,16 @@
 //! * [`um`] — the Unified Memory runtime simulator: page faults and fault
 //!   groups, on-demand migration with density-based chunk escalation, the
 //!   three `cudaMemAdvise` hints, `cudaMemPrefetchAsync`, LRU eviction
-//!   under oversubscription, and ATS/NVLink remote mapping.
+//!   under oversubscription, and ATS/NVLink remote mapping — plus
+//!   [`um::auto`], an online policy engine that tunes advises, prefetch
+//!   and eviction at runtime (the sixth benchmark variant, `UM Auto`).
 //! * [`gpu`] — a phased GPU kernel execution model (compute vs. memory
 //!   stalls) and CUDA-stream ordering.
 //! * [`platform`] — calibrated parameter sets for the paper's three
 //!   testbeds (Intel-Pascal, Intel-Volta, P9-Volta).
 //! * [`apps`] — the six benchmark applications (Black-Scholes, MatMul,
-//!   CG, Graph500 BFS, three FFT convolutions, FDTD3d), each in the five
-//!   memory-management variants of the paper.
+//!   CG, Graph500 BFS, three FFT convolutions, FDTD3d), each in the
+//!   paper's five memory-management variants plus `UM Auto`.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX+Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); real numerics at reduced shape.
 //! * [`trace`] — nvprof-like Unified Memory event tracing (the data

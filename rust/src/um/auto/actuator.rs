@@ -1,0 +1,461 @@
+//! Actuation: turn classified patterns into prefetch / advise /
+//! eviction-hint calls on the runtime.
+//!
+//! Two hooks exist (see the module table in `um::auto` for the rule ↔
+//! paper-finding mapping):
+//!
+//! * **In-access stream escalation** (`auto_migrate_h2d`): invoked from
+//!   the GPU access path in place of plain demand migration when the
+//!   engine is attached. A short probe prefix is demand-migrated (the
+//!   driver watching fault density), then the remainder that fits free
+//!   device memory is moved as one bulk prefetch — no further faults,
+//!   near-peak link efficiency. Anything that does not fit falls back to
+//!   the default path (which remote-maps under pressure on coherent
+//!   platforms), so oversubscribed behaviour is never degraded.
+//! * **Post-access policy step** (`auto_post_access`): observes the
+//!   completed access, reclassifies the allocation, and actuates
+//!   cross-access decisions — auto ReadMostly set/unset, ahead-of-access
+//!   predictive prefetch, and eviction hints.
+
+use crate::mem::{AllocId, PageRange, Residency, PAGE_SIZE};
+use crate::trace::TraceKind;
+use crate::um::policy::Advise;
+use crate::util::units::{Bytes, Ns};
+
+use super::super::runtime::{AccessOutcome, Class, UmRuntime};
+use super::pattern::{classify, Pattern};
+
+impl UmRuntime {
+    /// Auto advises are safe unless a coherent platform is
+    /// oversubscribed: there, hints force local placement and recreate
+    /// the paper's P9 eviction-storm pathology (§IV-B), so the engine
+    /// leaves the driver's remote-map heuristics in charge.
+    fn auto_advise_safe(&self) -> bool {
+        !self.plat.cpu_can_access_gpu || self.space.managed_bytes() <= self.dev.capacity()
+    }
+
+    /// Stream escalation for one homogeneous host-resident run (called
+    /// from the GPU access path when the engine is attached). Falls back
+    /// to plain `migrate_or_map_h2d` for short runs and hand-advised
+    /// state.
+    pub(in crate::um) fn auto_migrate_h2d(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        let cfg = match &self.auto {
+            Some(e) => e.cfg,
+            None => return self.migrate_or_map_h2d(id, run, class, write, now),
+        };
+        if !cfg.escalate
+            || class.read_mostly
+            || class.pref_gpu
+            || run.len() < cfg.min_escalate_pages.max(cfg.probe_pages + 1)
+        {
+            return self.migrate_or_map_h2d(id, run, class, write, now);
+        }
+
+        // Probe prefix: ordinary demand migration (fault groups).
+        let probe = PageRange::new(run.start, run.start + cfg.probe_pages);
+        let mut out = self.migrate_or_map_h2d(id, probe, class, write, now);
+
+        // Escalate the remainder that fits *without evicting*: bulk
+        // transfer at prefetch efficiency, no further fault groups.
+        let rest = PageRange::new(probe.end, run.end);
+        let free_pages = (self.dev.free() / PAGE_SIZE) as u32;
+        let bulk = PageRange::new(rest.start, rest.start + rest.len().min(free_pages));
+        if !bulk.is_empty() {
+            let t0 = out.done;
+            let t = self.prefetch_run_to_gpu(id, bulk, Residency::Host, t0);
+            self.trace.record(TraceKind::Prefetch, t0, t, bulk.bytes(), Some(id), "auto-escalate");
+            if write {
+                self.mark_dirty(id, bulk);
+            }
+            self.metrics.auto_prefetched_bytes += bulk.bytes();
+            self.metrics.auto_decisions += 1;
+            out.h2d_bytes += bulk.bytes();
+            out.transfer_wait += t.saturating_sub(t0);
+            out.done = t;
+        }
+
+        // Whatever did not fit takes the default path: faulted migration
+        // with eviction on PCIe, remote mapping under pressure on P9.
+        let leftover = PageRange::new(bulk.end, run.end);
+        if !leftover.is_empty() {
+            let o = self.migrate_or_map_h2d(id, leftover, class, write, out.done);
+            out.merge(o);
+        }
+        out
+    }
+
+    /// The post-access policy step: observe, classify, actuate. Called
+    /// at the tail of every managed `gpu_access` when the engine is
+    /// attached. The engine is detached during actuation so runtime
+    /// calls it issues can never re-enter it.
+    pub(in crate::um) fn auto_post_access(
+        &mut self,
+        id: AllocId,
+        range: PageRange,
+        write: bool,
+        out: &AccessOutcome,
+    ) {
+        let Some(mut eng) = self.auto.take() else { return };
+        let cfg = eng.cfg;
+        let now = out.done;
+
+        // ---- observe + classify ------------------------------------
+        let st = eng.allocs.entry(id).or_default();
+        let obs = st.history.observe(range, write, out.h2d_bytes, cfg.window, cfg.pending_ttl);
+        self.metrics.auto_prefetch_hit_bytes += obs.prefetch_hit_bytes;
+        self.metrics.auto_mispredicted_prefetch_bytes += obs.mispredicted_bytes;
+        let flipped = st.tracker.update(classify(st.history.window()), cfg.hysteresis);
+        if flipped {
+            self.metrics.auto_pattern_flips += 1;
+        }
+        let pat = st.tracker.current();
+
+        // ---- decide -------------------------------------------------
+        // ReadMostly pays off for data that is re-read and never
+        // written: straight repeats (in-memory) or a read-only stream
+        // cycling through an oversubscribed device, where duplicates
+        // later evict for free (§II-D / the Intel §IV-B win).
+        let advise_ready = match pat {
+            Pattern::ReadMostly => st.history.read_repeats + 1 >= cfg.advise_after_repeats,
+            Pattern::StreamingOversub => {
+                st.history.window().len() >= cfg.advise_after_repeats as usize
+            }
+            _ => false,
+        };
+        let mut set_read_mostly = false;
+        let mut unset_read_mostly = false;
+        if st.advised_read_mostly && write {
+            // The workload started writing a range we duplicated:
+            // back off before invalidation churn accumulates.
+            unset_read_mostly = true;
+            st.advised_read_mostly = false;
+        } else if !st.advised_read_mostly
+            && !st.history.writes_ever
+            && advise_ready
+            && self.auto_advise_safe()
+        {
+            set_read_mostly = true;
+            st.advised_read_mostly = true;
+        }
+
+        let predicted = if cfg.predict {
+            match pat {
+                Pattern::Sequential => Some(range.end),
+                Pattern::Strided(stride) => Some(range.start.saturating_add(stride)),
+                _ => None,
+            }
+            .map(|start| {
+                let len = range.len().min(cfg.max_predict_pages);
+                PageRange::new(start, start.saturating_add(len))
+            })
+        } else {
+            None
+        };
+
+        let streaming = pat == Pattern::StreamingOversub;
+
+        // ---- actuate ------------------------------------------------
+        let full = self.space.get(id).full();
+        if set_read_mostly {
+            self.mem_advise(id, full, Advise::ReadMostly, now);
+            self.metrics.auto_advises += 1;
+            self.metrics.auto_decisions += 1;
+        }
+        if unset_read_mostly {
+            self.mem_advise(id, full, Advise::UnsetReadMostly, now);
+            self.metrics.auto_advises += 1;
+            self.metrics.auto_decisions += 1;
+            // The engine is the only advise source in the UmAuto variant
+            // (apps hand-advise only in UmAdvise/UmBoth, which never
+            // attach it): once the last auto advise is withdrawn, hand
+            // the driver's remote-map-under-pressure heuristics back —
+            // `mem_advise` latches `advise_hints_active` and would
+            // otherwise disable them for the rest of the run.
+            if eng.allocs.values().all(|s| !s.advised_read_mostly) {
+                self.advise_hints_active = false;
+            }
+        }
+        if let Some(want) = predicted {
+            let (pieces, ready) = self.auto_prefetch_ahead(id, want, now);
+            if !pieces.is_empty() {
+                let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
+                self.metrics.auto_prefetched_bytes += issued;
+                self.metrics.auto_decisions += 1;
+                let history = &mut eng.allocs.get_mut(&id).expect("entry created above").history;
+                for piece in pieces {
+                    history.push_pending(piece, ready);
+                }
+            }
+        }
+        if streaming {
+            // Eviction hints. Early-drop streamed-past duplicates …
+            if range.start > 0 {
+                let dropped = self.auto_early_drop_duplicates(id, PageRange::new(0, range.start));
+                if dropped > 0 {
+                    self.metrics.auto_early_dropped_bytes += dropped;
+                    self.metrics.auto_decisions += 1;
+                }
+            }
+            // … and protect hot (read-mostly) allocations from the
+            // stream's LRU churn by refreshing their recency. Gated on
+            // the pattern flip, not every access: re-touching a large
+            // hot allocation's full chunk range per streaming access
+            // would cost O(chunks) LRU pushes on the oversubscription
+            // hot path.
+            if flipped {
+                let hot: Vec<AllocId> = eng
+                    .allocs
+                    .iter()
+                    .filter(|(a, s)| **a != id && s.tracker.current() == Pattern::ReadMostly)
+                    .map(|(a, _)| *a)
+                    .collect();
+                for a in hot {
+                    let fa = self.space.get(a).full();
+                    if !fa.is_empty() {
+                        self.touch_chunks(a, fa, now);
+                    }
+                }
+            }
+        }
+
+        self.auto = Some(eng);
+    }
+
+    /// Issue an ahead-of-access prefetch for the host-resident parts of
+    /// `want`, clamped so it never evicts. Returns the prefetched pieces
+    /// and their completion time (the gate later consumers wait on).
+    fn auto_prefetch_ahead(
+        &mut self,
+        id: AllocId,
+        want: PageRange,
+        now: Ns,
+    ) -> (Vec<PageRange>, Ns) {
+        let alloc = self.space.get(id);
+        let want = alloc.pages.clamp(want);
+        if want.is_empty() {
+            return (Vec::new(), now);
+        }
+        let mut budget = (self.dev.free() / PAGE_SIZE) as u32;
+        let host_runs: Vec<PageRange> = alloc
+            .pages
+            .runs_in(want)
+            .filter(|(_, p)| p.residency == Residency::Host)
+            .map(|(r, _)| r)
+            .collect();
+        let mut pieces = Vec::new();
+        let mut issued: Bytes = 0;
+        let mut t = now;
+        for r in host_runs {
+            if budget == 0 {
+                break;
+            }
+            let piece = PageRange::new(r.start, r.start + r.len().min(budget));
+            t = self.prefetch_run_to_gpu(id, piece, Residency::Host, t);
+            budget -= piece.len();
+            issued += piece.bytes();
+            pieces.push(piece);
+        }
+        if issued > 0 {
+            self.trace.record(TraceKind::Prefetch, now, t, issued, Some(id), "auto-predict");
+        }
+        (pieces, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{intel_pascal, p9_volta};
+    use crate::um::auto::AutoConfig;
+    use crate::util::units::MIB;
+
+    /// Host-initialize one managed allocation on an auto-enabled runtime.
+    fn prepped(plat: &crate::platform::PlatformSpec, size: u64) -> (UmRuntime, AllocId) {
+        let mut r = UmRuntime::new(plat);
+        r.enable_auto();
+        let id = r.malloc_managed("x", size);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        (r, id)
+    }
+
+    #[test]
+    fn escalation_beats_plain_demand_migration() {
+        let size = 64 * MIB;
+        let (mut auto_rt, a) = prepped(&intel_pascal(), size);
+        let full = auto_rt.space.get(a).full();
+        let out_auto = auto_rt.gpu_access(a, full, false, Ns::ZERO);
+
+        let mut um = UmRuntime::new(&intel_pascal());
+        let b = um.malloc_managed("x", size);
+        let fb = um.space.get(b).full();
+        um.host_access(b, fb, true, Ns::ZERO);
+        let out_um = um.gpu_access(b, fb, false, Ns::ZERO);
+
+        assert!(
+            out_auto.done < out_um.done,
+            "escalated first touch ({}) should beat faulted ({})",
+            out_auto.done,
+            out_um.done
+        );
+        assert_eq!(out_auto.h2d_bytes, size, "same bytes moved");
+        assert!(auto_rt.metrics.auto_prefetched_bytes > 0);
+        assert!(
+            auto_rt.metrics.gpu_fault_groups < um.metrics.gpu_fault_groups,
+            "probe faults only"
+        );
+        auto_rt.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn escalation_skips_small_runs() {
+        let (mut r, a) = prepped(&intel_pascal(), MIB); // 16 pages < min_escalate
+        let full = r.space.get(a).full();
+        r.gpu_access(a, full, false, Ns::ZERO);
+        assert_eq!(r.metrics.auto_prefetched_bytes, 0, "small run: default path");
+    }
+
+    #[test]
+    fn repeated_reads_auto_apply_read_mostly() {
+        let (mut r, a) = prepped(&intel_pascal(), 4 * MIB);
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for _ in 0..5 {
+            t = r.gpu_access(a, full, false, t).done;
+        }
+        assert!(r.metrics.auto_advises >= 1, "ReadMostly auto-applied");
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.read_mostly()), 64);
+        assert_eq!(r.auto_engine().unwrap().pattern_of(a), Pattern::ReadMostly);
+    }
+
+    #[test]
+    fn write_unsets_auto_read_mostly() {
+        let (mut r, a) = prepped(&intel_pascal(), 4 * MIB);
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for _ in 0..5 {
+            t = r.gpu_access(a, full, false, t).done;
+        }
+        let advises_before = r.metrics.auto_advises;
+        assert!(advises_before >= 1);
+        r.gpu_access(a, full, true, t);
+        let alloc = r.space.get(a);
+        assert_eq!(
+            alloc.pages.count(full, |p| p.advise.read_mostly()),
+            0,
+            "write backs the advise off"
+        );
+        assert!(r.metrics.auto_advises > advises_before);
+    }
+
+    #[test]
+    fn advise_guard_blocks_on_oversubscribed_coherent_platform() {
+        let mut plat = p9_volta();
+        plat.gpu.mem_capacity = 64 * MIB;
+        plat.gpu.reserved = 0;
+        let (mut r, a) = prepped(&plat, 96 * MIB); // footprint > capacity
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for _ in 0..5 {
+            t = r.gpu_access(a, full, false, t).done;
+        }
+        assert_eq!(r.metrics.auto_advises, 0, "P9 oversubscribed: no auto advises");
+        assert!(!r.advise_hints_active, "remote-map heuristics stay in charge");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn sequential_windows_trigger_predictive_prefetch() {
+        let cfg = AutoConfig {
+            // isolate the predictor: no in-access escalation
+            escalate: false,
+            ..AutoConfig::default()
+        };
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_auto_with(cfg);
+        let id = r.malloc_managed("x", 16 * MIB); // 256 pages
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let mut t = Ns::ZERO;
+        // Stream 32-page windows; after the pattern stabilizes the
+        // engine prefetches ahead and later windows find data resident.
+        let mut stalls = Vec::new();
+        for i in 0..8u32 {
+            let w = PageRange::new(i * 32, (i + 1) * 32);
+            let out = r.gpu_access(id, w, false, t);
+            stalls.push(out.fault_stall);
+            t = out.done;
+        }
+        assert!(r.metrics.auto_prefetched_bytes > 0, "predictive prefetch fired");
+        assert_eq!(r.auto_engine().unwrap().pattern_of(id), Pattern::Sequential);
+        assert_eq!(
+            *stalls.last().unwrap(),
+            Ns::ZERO,
+            "late windows arrive before the access: {stalls:?}"
+        );
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn abandoned_prediction_counts_as_mispredicted() {
+        let cfg = AutoConfig { escalate: false, pending_ttl: 2, ..AutoConfig::default() };
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_auto_with(cfg);
+        let id = r.malloc_managed("x", 16 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let mut t = Ns::ZERO;
+        // Establish a sequential pattern, then jump to a far corner and
+        // stay there: the queued prediction ages out unused.
+        for i in 0..4u32 {
+            t = r.gpu_access(id, PageRange::new(i * 16, (i + 1) * 16), false, t).done;
+        }
+        assert!(r.metrics.auto_prefetched_bytes > 0);
+        for _ in 0..4 {
+            t = r.gpu_access(id, PageRange::new(240, 250), false, t).done;
+        }
+        assert!(r.metrics.auto_mispredicted_prefetch_bytes > 0, "abandoned prediction charged");
+    }
+
+    #[test]
+    fn streaming_oversub_early_drops_streamed_duplicates() {
+        // PCIe platform, footprint ~1.5x capacity, read-only cyclic
+        // stream: the engine applies ReadMostly (safe on Intel) and then
+        // early-drops streamed-past duplicates.
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 64 * MIB;
+        plat.gpu.reserved = 0;
+        let (mut r, a) = prepped(&plat, 96 * MIB);
+        let full = r.space.get(a).full();
+        let half = PageRange::new(0, full.end / 2);
+        let rest = PageRange::new(full.end / 2, full.end);
+        let mut t = Ns::ZERO;
+        for _ in 0..6 {
+            t = r.gpu_access(a, half, false, t).done;
+            t = r.gpu_access(a, rest, false, t).done;
+        }
+        assert_eq!(r.auto_engine().unwrap().pattern_of(a), Pattern::StreamingOversub);
+        assert!(r.metrics.auto_advises >= 1, "Intel oversubscription: advise applied");
+        assert!(r.metrics.auto_early_dropped_bytes > 0, "streamed-past duplicates dropped");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn auto_decisions_counted_and_reset() {
+        let (mut r, a) = prepped(&intel_pascal(), 64 * MIB);
+        let full = r.space.get(a).full();
+        r.gpu_access(a, full, false, Ns::ZERO);
+        assert!(r.metrics.auto_decisions > 0);
+        r.reset_run_state();
+        assert_eq!(r.metrics.auto_decisions, 0);
+        assert_eq!(r.auto_engine().unwrap().pattern_of(a), Pattern::Unknown, "engine re-learns");
+    }
+}

@@ -1,0 +1,139 @@
+//! `um::auto` — an online, access-pattern-driven UM policy engine.
+//!
+//! The paper's headline result is that the *best* UM configuration is
+//! platform- and regime-dependent: advises win on P9-NVLink in-memory
+//! but hurt under oversubscription, prefetch wins on Intel-PCIe and does
+//! little on NVLink. No static hand-tuned variant is right everywhere —
+//! so this module closes the loop at runtime. It taps the fault/
+//! migration path ([`crate::um::fault`] / `UmRuntime::gpu_access`),
+//! maintains per-allocation sliding-window access histories
+//! ([`observer`]), classifies each allocation's pattern online
+//! ([`pattern`]) and actuates prefetch / advise / eviction hints
+//! ([`actuator`]). Enabled per run via `UmRuntime::enable_auto` — the
+//! `UM Auto` benchmark variant; all other variants are untouched.
+//!
+//! ## Decision rules and the paper finding each encodes
+//!
+//! | rule | trigger | action | paper finding |
+//! |---|---|---|---|
+//! | stream escalation | large host-resident run demand-faulting | migrate a short probe by faults, bulk-prefetch the remainder that fits free device memory | §IV-A: prefetch turns faulted migration into near-peak bulk transfer (the Intel-PCIe win) |
+//! | capacity clamp | device free space short | escalation/prediction never prefetch beyond free bytes (no forced eviction) | §IV-B: forcing locality under oversubscription causes eviction storms (the P9 pathology) — leave the overflow to the driver's remote-map heuristics |
+//! | auto read-mostly | same range re-read ≥ N times, no write ever | `cudaMemAdvise(SetReadMostly)`; unset on the first write | §IV-A advises cut fault cost; §IV-B duplicates are dropped free at eviction (the Intel oversubscription win) |
+//! | advise guard | coherent platform + managed footprint exceeds device capacity | suppress auto advises entirely | §IV-B: advises force local placement and *hurt* oversubscribed P9 (BS 1.7x, FDTD3d 3x worse) |
+//! | ahead-of-access prefetch | stable sequential/strided pattern | prefetch the predicted next range (sized by detected stride, clamped by free memory) on the access tail | §III-A3: background prefetch overlaps kernel execution |
+//! | eviction hints | streaming-oversubscribed pattern | early-drop streamed-past ReadMostly duplicates; on pattern flips, re-touch (protect) read-mostly hot allocations | §II-D: droppable-vs-writeback asymmetry; protect reused data from LRU churn |
+//!
+//! Every actuation is counted in [`crate::um::UmMetrics`]
+//! (`auto_decisions`, `auto_pattern_flips`, `auto_prefetched_bytes`,
+//! `auto_prefetch_hit_bytes`, `auto_mispredicted_prefetch_bytes`,
+//! `auto_advises`, `auto_early_dropped_bytes`), surfaced through the
+//! CSV/report output so decision quality is trackable across PRs.
+
+pub mod actuator;
+pub mod observer;
+pub mod pattern;
+
+use crate::mem::AllocId;
+use crate::util::fxhash::FxHashMap;
+
+use super::runtime::UmRuntime;
+use observer::AllocHistory;
+use pattern::{Pattern, PatternTracker};
+
+/// Tuning knobs of the policy engine. Defaults are deliberately
+/// conservative: the engine must never make a workload much worse than
+/// plain UM (the guardrail integration test enforces this).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoConfig {
+    /// Sliding-window length per allocation (accesses).
+    pub window: usize,
+    /// Consecutive disagreeing classifications before the stable
+    /// pattern flips.
+    pub hysteresis: u32,
+    /// Pages demand-migrated as a probe before stream escalation kicks
+    /// in (models the driver watching fault density build up).
+    pub probe_pages: u32,
+    /// Minimum host-resident run length (pages) eligible for stream
+    /// escalation; smaller runs stay on the default fault path.
+    pub min_escalate_pages: u32,
+    /// Identical read-only repeats before ReadMostly is auto-applied.
+    pub advise_after_repeats: u32,
+    /// Observations a predictive prefetch may stay unused before it is
+    /// charged as mispredicted.
+    pub pending_ttl: u32,
+    /// Cap on one predictive prefetch (pages).
+    pub max_predict_pages: u32,
+    /// Enable in-access stream escalation.
+    pub escalate: bool,
+    /// Enable ahead-of-access predictive prefetch.
+    pub predict: bool,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        AutoConfig {
+            window: 8,
+            hysteresis: 2,
+            probe_pages: 16,
+            min_escalate_pages: 64,
+            advise_after_repeats: 3,
+            pending_ttl: 4,
+            max_predict_pages: 1024, // 64 MiB
+            escalate: true,
+            predict: true,
+        }
+    }
+}
+
+/// Per-allocation engine state: history + hysteresis tracker + what the
+/// engine has already actuated on this allocation.
+#[derive(Clone, Debug, Default)]
+pub(super) struct AllocPolicy {
+    pub history: AllocHistory,
+    pub tracker: PatternTracker,
+    /// ReadMostly currently applied by the engine (not by the app).
+    pub advised_read_mostly: bool,
+}
+
+/// The policy engine attached to a [`UmRuntime`] (one per simulated
+/// process, covering all managed allocations).
+#[derive(Clone, Debug)]
+pub struct AutoEngine {
+    pub cfg: AutoConfig,
+    pub(super) allocs: FxHashMap<AllocId, AllocPolicy>,
+}
+
+impl AutoEngine {
+    pub fn new(cfg: AutoConfig) -> AutoEngine {
+        AutoEngine { cfg, allocs: FxHashMap::default() }
+    }
+
+    /// Drop all learned state (new repetition); keeps the config.
+    pub fn reset(&mut self) {
+        self.allocs.clear();
+    }
+
+    /// The stable pattern currently assigned to `id` (tests/inspection).
+    pub fn pattern_of(&self, id: AllocId) -> Pattern {
+        self.allocs.get(&id).map_or(Pattern::Unknown, |s| s.tracker.current())
+    }
+}
+
+impl UmRuntime {
+    /// Attach the auto policy engine with default tuning (the `UM Auto`
+    /// variant). Idempotent per run; cleared state survives
+    /// `reset_run_state` (the engine re-learns each repetition).
+    pub fn enable_auto(&mut self) {
+        self.enable_auto_with(AutoConfig::default());
+    }
+
+    /// Attach the engine with explicit tuning (tests/ablations).
+    pub fn enable_auto_with(&mut self, cfg: AutoConfig) {
+        self.auto = Some(AutoEngine::new(cfg));
+    }
+
+    /// The attached engine, if any (inspection only).
+    pub fn auto_engine(&self) -> Option<&AutoEngine> {
+        self.auto.as_ref()
+    }
+}

@@ -1,0 +1,249 @@
+//! Per-allocation sliding-window access histories.
+//!
+//! The observer is the engine's tap on the fault/migration path: every
+//! GPU access to a managed allocation is distilled into an
+//! [`AccessRecord`] (range, read/write, migrated bytes, wrap flag) and
+//! appended to that allocation's bounded window. It also tracks the
+//! lifetime facts actuation needs (`writes_ever`, consecutive read
+//! repeats) and audits outstanding predictive prefetches so the engine
+//! can report *mispredicted* bytes honestly.
+
+use crate::mem::PageRange;
+use crate::util::units::{Bytes, Ns};
+
+use super::pattern::AccessRecord;
+
+/// What one `observe` call distilled (input to metric accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Observation {
+    /// Predictively prefetched bytes this access consumed (hits).
+    pub prefetch_hit_bytes: Bytes,
+    /// Predictively prefetched bytes that aged out unused
+    /// (mispredictions).
+    pub mispredicted_bytes: Bytes,
+}
+
+/// One issued predictive prefetch awaiting its access (or expiry).
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    range: PageRange,
+    /// Simulated completion time of the transfer: an access that
+    /// consumes the prediction must wait for it (§III-A3 — the wait
+    /// lands inside the measured kernel window, exactly like the
+    /// hand-tuned background prefetch).
+    ready: Ns,
+    /// Observations survived without being consumed.
+    age: u32,
+}
+
+/// Sliding-window history of one allocation's GPU accesses.
+#[derive(Clone, Debug, Default)]
+pub struct AllocHistory {
+    /// Recent accesses, oldest first (bounded by the engine's window).
+    window: Vec<AccessRecord>,
+    /// Highest page index (exclusive) the GPU has touched so far.
+    seen_end: u32,
+    /// Any GPU write observed on this allocation, ever.
+    pub writes_ever: bool,
+    /// Consecutive identical read-only repeats ending at the last
+    /// record (0 = the last access was not a repeat of its predecessor).
+    pub read_repeats: u32,
+    /// Outstanding predictive prefetches.
+    pending: Vec<Pending>,
+}
+
+fn overlaps(a: PageRange, b: PageRange) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+impl AllocHistory {
+    /// Record one access. `window_cap` bounds the window; pending
+    /// predictions that go unused for `pending_ttl` observations are
+    /// charged as mispredicted.
+    pub fn observe(
+        &mut self,
+        range: PageRange,
+        write: bool,
+        h2d_bytes: Bytes,
+        window_cap: usize,
+        pending_ttl: u32,
+    ) -> Observation {
+        let mut obs = Observation::default();
+        // Audit outstanding predictions. Only the actually-consumed
+        // intersection counts as a hit; the unconsumed remainder stays
+        // pending so it can still expire as mispredicted (a grazed
+        // 64 MiB prediction must not be credited in full).
+        self.pending.retain_mut(|p| {
+            let lo = p.range.start.max(range.start);
+            let hi = p.range.end.min(range.end);
+            if lo < hi {
+                obs.prefetch_hit_bytes += PageRange::new(lo, hi).bytes();
+                // Keep the larger unconsumed side pending (predictions
+                // are contiguous and typically consumed from the
+                // front). A middle hit leaves two sides but only one
+                // slot: charge the discarded smaller side as
+                // mispredicted now rather than letting it silently
+                // vanish from the audit.
+                let left = PageRange::new(p.range.start, lo);
+                let right = PageRange::new(hi, p.range.end);
+                let (rem, dropped) =
+                    if left.len() >= right.len() { (left, right) } else { (right, left) };
+                obs.mispredicted_bytes += dropped.bytes();
+                if rem.is_empty() {
+                    return false;
+                }
+                p.range = rem;
+                true
+            } else {
+                p.age += 1;
+                if p.age >= pending_ttl {
+                    obs.mispredicted_bytes += p.range.bytes();
+                    false
+                } else {
+                    true
+                }
+            }
+        });
+
+        let wrapped = range.start < self.seen_end;
+        if let Some(last) = self.window.last() {
+            if last.range == range && !last.write && !write {
+                self.read_repeats += 1;
+            } else {
+                self.read_repeats = 0;
+            }
+        }
+        self.writes_ever |= write;
+        self.seen_end = self.seen_end.max(range.end);
+        self.window.push(AccessRecord { range, write, h2d_bytes, wrapped });
+        if self.window.len() > window_cap.max(1) {
+            self.window.remove(0);
+        }
+        obs
+    }
+
+    /// The window, oldest first (the classifier's input).
+    pub fn window(&self) -> &[AccessRecord] {
+        &self.window
+    }
+
+    /// The most recent access.
+    pub fn last(&self) -> Option<&AccessRecord> {
+        self.window.last()
+    }
+
+    /// Register an issued predictive prefetch for hit/miss auditing and
+    /// in-flight gating.
+    pub fn push_pending(&mut self, range: PageRange, ready: Ns) {
+        self.pending.push(Pending { range, ready, age: 0 });
+    }
+
+    /// The in-flight gate for an access to `range`: the latest
+    /// completion time among overlapping outstanding prefetches
+    /// (`Ns::ZERO` when none are in flight).
+    pub fn gate_for(&self, range: PageRange) -> Ns {
+        self.pending
+            .iter()
+            .filter(|p| overlaps(p.range, range))
+            .map(|p| p.ready)
+            .max()
+            .unwrap_or(Ns::ZERO)
+    }
+
+    /// Outstanding (unaudited) predictive prefetches.
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(start: u32, end: u32) -> PageRange {
+        PageRange::new(start, end)
+    }
+
+    #[test]
+    fn window_is_bounded_and_ordered() {
+        let mut h = AllocHistory::default();
+        for i in 0..10u32 {
+            h.observe(r(i * 8, i * 8 + 8), false, 0, 4, 4);
+        }
+        assert_eq!(h.window().len(), 4);
+        assert_eq!(h.window()[0].range, r(48, 56), "oldest surviving record");
+        assert_eq!(h.last().unwrap().range, r(72, 80));
+    }
+
+    #[test]
+    fn wrap_detection_against_seen_pages() {
+        let mut h = AllocHistory::default();
+        h.observe(r(0, 32), false, 0, 8, 4);
+        h.observe(r(32, 64), false, 0, 8, 4);
+        assert!(!h.window()[1].wrapped, "forward progress is not a wrap");
+        h.observe(r(0, 32), false, 0, 8, 4);
+        assert!(h.window()[2].wrapped, "revisiting seen pages is");
+    }
+
+    #[test]
+    fn read_repeats_count_and_reset() {
+        let mut h = AllocHistory::default();
+        for _ in 0..3 {
+            h.observe(r(0, 16), false, 0, 8, 4);
+        }
+        assert_eq!(h.read_repeats, 2);
+        assert!(!h.writes_ever);
+        h.observe(r(0, 16), true, 0, 8, 4);
+        assert_eq!(h.read_repeats, 0, "a write breaks the repeat run");
+        assert!(h.writes_ever);
+    }
+
+    #[test]
+    fn pending_prefetch_hit_and_misprediction() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(100, 120), Ns(500));
+        h.push_pending(r(500, 540), Ns(900));
+        // Partial hit on the first: only the consumed intersection is
+        // credited, the remainder stays pending. The second ages.
+        let o = h.observe(r(100, 110), false, 0, 8, 2);
+        assert_eq!(o.prefetch_hit_bytes, r(100, 110).bytes());
+        assert_eq!(o.mispredicted_bytes, 0);
+        assert_eq!(h.pending_count(), 2, "unconsumed remainder kept");
+        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        assert_eq!(o.mispredicted_bytes, r(500, 540).bytes(), "aged out after ttl");
+        assert_eq!(h.pending_count(), 1);
+        // The grazed remainder eventually expires as mispredicted too.
+        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        assert_eq!(o.mispredicted_bytes, r(110, 120).bytes());
+        assert_eq!(h.pending_count(), 0);
+    }
+
+    #[test]
+    fn middle_hit_keeps_one_side_and_charges_the_other() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(0, 100), Ns(1));
+        let o = h.observe(r(40, 60), false, 0, 8, 4);
+        assert_eq!(o.prefetch_hit_bytes, r(40, 60).bytes());
+        // Two unconsumed sides, one pending slot: the discarded side is
+        // charged immediately instead of vanishing from the audit.
+        assert_eq!(o.mispredicted_bytes, r(60, 100).bytes());
+        assert_eq!(h.pending_count(), 1, "left side [0,40) stays pending");
+    }
+
+    #[test]
+    fn fully_consumed_prediction_is_removed() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(100, 120), Ns(500));
+        let o = h.observe(r(90, 130), false, 0, 8, 2);
+        assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
+        assert_eq!(h.pending_count(), 0);
+    }
+
+    #[test]
+    fn gate_applies_only_to_overlapping_accesses() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(100, 120), Ns(7_000));
+        assert_eq!(h.gate_for(r(110, 130)), Ns(7_000), "overlap waits");
+        assert_eq!(h.gate_for(r(0, 50)), Ns::ZERO, "disjoint access does not");
+    }
+}

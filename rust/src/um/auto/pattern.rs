@@ -1,0 +1,292 @@
+//! Online access-pattern classification with hysteresis.
+//!
+//! The classifier is a pure function over a sliding window of
+//! [`AccessRecord`]s (no runtime state), so it is unit-testable with
+//! synthetic fault streams. Robustness against single outliers comes
+//! from two layers:
+//!
+//! * [`classify`] votes over *all* consecutive record pairs in the
+//!   window (majority stride), so one stray access does not change the
+//!   verdict while it sits in the window;
+//! * [`PatternTracker`] adds hysteresis on top: the stable pattern only
+//!   flips after the same new classification is observed on
+//!   `hysteresis` consecutive updates.
+
+use crate::mem::PageRange;
+use crate::util::units::Bytes;
+
+/// One observed GPU access to a managed allocation — the classifier's
+/// input unit, distilled by the observer from the fault/migration path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccessRecord {
+    /// Pages the access touched.
+    pub range: PageRange,
+    /// Whether the access wrote.
+    pub write: bool,
+    /// Bytes migrated H2D to serve the access (0 = everything was
+    /// already resident or served remotely).
+    pub h2d_bytes: Bytes,
+    /// The access re-covered pages the GPU had already touched before
+    /// (the stream cursor wrapped around or repeated).
+    pub wrapped: bool,
+}
+
+/// The per-allocation access pattern the engine steers by.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pattern {
+    /// Not enough history.
+    #[default]
+    Unknown,
+    /// Monotonically advancing, contiguous ranges (streaming).
+    Sequential,
+    /// Monotonically advancing with a constant start-to-start stride
+    /// (in pages).
+    Strided(u32),
+    /// No consistent address relationship (irregular gathers).
+    Random,
+    /// The same range re-read repeatedly with no writes.
+    ReadMostly,
+    /// Re-visited pages still migrate: the working set cycles through a
+    /// device that cannot hold it (oversubscribed streaming).
+    StreamingOversub,
+}
+
+impl Pattern {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::Unknown => "unknown",
+            Pattern::Sequential => "sequential",
+            Pattern::Strided(_) => "strided",
+            Pattern::Random => "random",
+            Pattern::ReadMostly => "read-mostly",
+            Pattern::StreamingOversub => "streaming-oversub",
+        }
+    }
+}
+
+/// Classify a window of access records (oldest first). Pure function;
+/// see module docs for the outlier-robustness rationale.
+pub fn classify(window: &[AccessRecord]) -> Pattern {
+    if window.len() < 2 {
+        return Pattern::Unknown;
+    }
+    // Streaming-oversubscribed: a recent wrapped (re-visiting) access
+    // still had to migrate — the resident set does not hold the stream.
+    let recent = &window[window.len().saturating_sub(4)..];
+    if recent.iter().any(|r| r.wrapped && r.h2d_bytes > 0) {
+        return Pattern::StreamingOversub;
+    }
+    // Read-mostly: the last three accesses re-read the same range.
+    let last = window[window.len() - 1];
+    if window.len() >= 3
+        && window[window.len() - 3..]
+            .iter()
+            .all(|r| r.range == last.range && !r.write)
+    {
+        return Pattern::ReadMostly;
+    }
+    // Majority stride vote over consecutive pairs. At least two pairs
+    // must agree: a single ascending jump is not evidence of a stream
+    // (one data point must never arm the prefetcher).
+    let strides: Vec<i64> = window
+        .windows(2)
+        .map(|w| w[1].range.start as i64 - w[0].range.start as i64)
+        .collect();
+    let (mut modal, mut votes) = (0i64, 0usize);
+    for &s in &strides {
+        let c = strides.iter().filter(|&&x| x == s).count();
+        if c > votes {
+            (modal, votes) = (s, c);
+        }
+    }
+    if modal > 0 && votes >= 2 && 2 * votes >= strides.len() {
+        // Among the modal pairs, contiguity decides sequential vs strided.
+        let contiguous = window
+            .windows(2)
+            .filter(|w| w[1].range.start as i64 - w[0].range.start as i64 == modal)
+            .all(|w| w[1].range.start == w[0].range.end);
+        return if contiguous { Pattern::Sequential } else { Pattern::Strided(modal as u32) };
+    }
+    Pattern::Random
+}
+
+/// Hysteresis filter over raw classifications: the stable pattern flips
+/// only after `hysteresis` consecutive identical disagreeing votes, so
+/// single-outlier classifications never flap the policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PatternTracker {
+    current: Pattern,
+    candidate: Pattern,
+    streak: u32,
+}
+
+impl PatternTracker {
+    /// The stable (actuation-driving) pattern.
+    pub fn current(&self) -> Pattern {
+        self.current
+    }
+
+    /// Feed one raw classification. Returns `true` when the stable
+    /// pattern flipped from one established pattern to another (the
+    /// initial Unknown -> first pattern transition is not a flip).
+    pub fn update(&mut self, observed: Pattern, hysteresis: u32) -> bool {
+        if observed == self.current || observed == Pattern::Unknown {
+            self.streak = 0;
+            return false;
+        }
+        if self.current == Pattern::Unknown {
+            self.current = observed;
+            self.streak = 0;
+            return false;
+        }
+        if observed == self.candidate {
+            self.streak += 1;
+        } else {
+            self.candidate = observed;
+            self.streak = 1;
+        }
+        if self.streak >= hysteresis {
+            self.current = observed;
+            self.streak = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: u32, end: u32, write: bool) -> AccessRecord {
+        AccessRecord { range: PageRange::new(start, end), write, h2d_bytes: 0, wrapped: false }
+    }
+
+    /// Contiguous forward windows: [0,16) [16,32) [32,48) ...
+    fn sequential(n: usize, len: u32) -> Vec<AccessRecord> {
+        (0..n as u32).map(|i| rec(i * len, (i + 1) * len, false)).collect()
+    }
+
+    #[test]
+    fn short_history_unknown() {
+        assert_eq!(classify(&[]), Pattern::Unknown);
+        assert_eq!(classify(&sequential(1, 16)), Pattern::Unknown);
+    }
+
+    #[test]
+    fn one_ascending_jump_is_not_a_stream() {
+        // A single stride pair must never arm the prefetcher: two
+        // coincidentally ascending random accesses stay Random.
+        assert_ne!(classify(&sequential(2, 16)), Pattern::Sequential);
+        let w = vec![rec(500, 510, false), rec(600, 610, false)];
+        assert_eq!(classify(&w), Pattern::Random);
+    }
+
+    #[test]
+    fn pure_sequential_stream() {
+        assert_eq!(classify(&sequential(4, 16)), Pattern::Sequential);
+    }
+
+    #[test]
+    fn strided_stream() {
+        // 8-page windows every 32 pages: stride 32, not contiguous.
+        let w: Vec<_> = (0..4).map(|i| rec(i * 32, i * 32 + 8, false)).collect();
+        assert_eq!(classify(&w), Pattern::Strided(32));
+    }
+
+    #[test]
+    fn random_stream() {
+        let w = vec![rec(500, 510, false), rec(3, 9, false), rec(260, 270, false), rec(90, 99, false)];
+        assert_eq!(classify(&w), Pattern::Random);
+    }
+
+    #[test]
+    fn repeat_reads_are_read_mostly() {
+        let w = vec![rec(0, 64, false); 3];
+        assert_eq!(classify(&w), Pattern::ReadMostly);
+    }
+
+    #[test]
+    fn repeat_with_writes_is_not_read_mostly() {
+        let w = vec![rec(0, 64, false), rec(0, 64, true), rec(0, 64, false)];
+        assert_ne!(classify(&w), Pattern::ReadMostly);
+    }
+
+    #[test]
+    fn wrapped_migrating_access_is_streaming_oversub() {
+        let mut w = sequential(4, 16);
+        w.push(AccessRecord {
+            range: PageRange::new(0, 16),
+            write: false,
+            h2d_bytes: 1 << 20,
+            wrapped: true,
+        });
+        assert_eq!(classify(&w), Pattern::StreamingOversub);
+        // The same wrap with everything already resident is not.
+        let mut w2 = sequential(4, 16);
+        w2.push(AccessRecord {
+            range: PageRange::new(0, 16),
+            write: false,
+            h2d_bytes: 0,
+            wrapped: true,
+        });
+        assert_ne!(classify(&w2), Pattern::StreamingOversub);
+    }
+
+    #[test]
+    fn single_outlier_does_not_change_sequential_verdict() {
+        // window: seq, seq, OUTLIER, seq, seq — majority vote holds.
+        let mut w = sequential(3, 16);
+        w.push(rec(900, 910, false));
+        w.extend([rec(48, 64, false), rec(64, 80, false)]);
+        assert_eq!(classify(&w), Pattern::Sequential);
+    }
+
+    #[test]
+    fn tracker_adopts_first_pattern_without_flip() {
+        let mut t = PatternTracker::default();
+        assert!(!t.update(Pattern::Sequential, 2));
+        assert_eq!(t.current(), Pattern::Sequential);
+    }
+
+    #[test]
+    fn tracker_hysteresis_blocks_single_outlier() {
+        let mut t = PatternTracker::default();
+        t.update(Pattern::Sequential, 2);
+        // One disagreeing vote: no flip.
+        assert!(!t.update(Pattern::Random, 2));
+        assert_eq!(t.current(), Pattern::Sequential);
+        // Agreement again resets the candidate streak.
+        assert!(!t.update(Pattern::Sequential, 2));
+        assert!(!t.update(Pattern::Random, 2));
+        assert_eq!(t.current(), Pattern::Sequential, "streak was reset");
+        // Two consecutive disagreements flip.
+        assert!(t.update(Pattern::Random, 2));
+        assert_eq!(t.current(), Pattern::Random);
+    }
+
+    #[test]
+    fn phase_change_flips_after_hysteresis() {
+        // Sequential phase, then a persistent switch to random.
+        let mut t = PatternTracker::default();
+        for _ in 0..4 {
+            t.update(Pattern::Sequential, 2);
+        }
+        let mut flips = 0;
+        for _ in 0..3 {
+            if t.update(Pattern::Random, 2) {
+                flips += 1;
+            }
+        }
+        assert_eq!(flips, 1, "exactly one flip for a persistent phase change");
+        assert_eq!(t.current(), Pattern::Random);
+    }
+
+    #[test]
+    fn pattern_names() {
+        assert_eq!(Pattern::Sequential.name(), "sequential");
+        assert_eq!(Pattern::Strided(4).name(), "strided");
+        assert_eq!(Pattern::StreamingOversub.name(), "streaming-oversub");
+    }
+}

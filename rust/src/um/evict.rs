@@ -147,6 +147,36 @@ impl UmRuntime {
         }
     }
 
+    /// Eviction hint from the `um::auto` policy engine: early-drop the
+    /// device half of ReadMostly duplicates in `run` (streamed-past data
+    /// that will not be re-read before the stream cycles). Free — the
+    /// host copy stays valid (the §II-D droppable/writeback asymmetry) —
+    /// and it frees space ahead of demand so later faults skip blocking
+    /// eviction. Dirty or sole-copy pages are never touched. Returns the
+    /// dropped bytes.
+    pub(super) fn auto_early_drop_duplicates(&mut self, id: AllocId, run: PageRange) -> Bytes {
+        let alloc = self.space.get(id);
+        let run = alloc.pages.clamp(run);
+        if run.is_empty() {
+            return 0;
+        }
+        let both_runs: Vec<PageRange> = alloc
+            .pages
+            .runs_in(run)
+            .filter(|(_, p)| p.residency == Residency::Both)
+            .map(|(r, _)| r)
+            .collect();
+        let mut dropped: Bytes = 0;
+        for r in both_runs {
+            self.drop_device_residency(id, r);
+            self.space.get_mut(id).pages.update(r, |p| {
+                p.residency = Residency::Host;
+            });
+            dropped += r.bytes();
+        }
+        dropped
+    }
+
     /// Debug invariant: the device's byte accounting matches the page
     /// tables exactly. Used by property tests after random op sequences.
     pub fn check_residency_invariant(&self) -> Result<(), String> {
@@ -284,6 +314,31 @@ mod tests {
         let fb = r.space.get(b).full();
         r.gpu_access(b, fb, false, Ns(1)); // must force-evict pinned chunks
         assert!(r.dev.forced_pinned_evictions > 0, "thrash: pinned evicted");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn early_drop_hint_drops_only_duplicates() {
+        let mut r = UmRuntime::new(&tiny_platform());
+        let a = r.malloc_managed("a", 8 * MIB); // 128 pages
+        let fa = r.space.get(a).full();
+        r.host_access(a, fa, true, Ns::ZERO);
+        // First half duplicated (ReadMostly), second half migrated.
+        let half = PageRange::new(0, 64);
+        r.mem_advise(a, half, Advise::ReadMostly, Ns::ZERO);
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        let used_before = r.dev.used();
+        let dropped = r.auto_early_drop_duplicates(a, fa);
+        assert_eq!(dropped, 4 * MIB, "only the duplicated half drops");
+        assert_eq!(r.dev.used(), used_before - 4 * MIB);
+        assert_eq!(r.metrics.writeback_bytes, 0, "no transfer involved");
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(half, |p| p.residency == Residency::Host), 64);
+        assert_eq!(
+            alloc.pages.count(PageRange::new(64, 128), |p| p.residency == Residency::Device),
+            64,
+            "sole-copy pages untouched"
+        );
         r.check_residency_invariant().unwrap();
     }
 

@@ -48,6 +48,22 @@ pub struct UmMetrics {
     pub d2h_time: Ns,
     pub h2d_bytes: Bytes,
     pub d2h_bytes: Bytes,
+
+    // --- um::auto policy-engine counters (zero unless `UM Auto`) ---
+    /// Actuations committed (escalations, predictions, advises, hints).
+    pub auto_decisions: u64,
+    /// Stable pattern changes that survived hysteresis.
+    pub auto_pattern_flips: u64,
+    /// Bytes moved by engine-issued prefetches (escalation + prediction).
+    pub auto_prefetched_bytes: Bytes,
+    /// Predictively prefetched bytes later consumed by an access (hits).
+    pub auto_prefetch_hit_bytes: Bytes,
+    /// Predictively prefetched bytes that aged out unused.
+    pub auto_mispredicted_prefetch_bytes: Bytes,
+    /// ReadMostly set/unset actuations.
+    pub auto_advises: u64,
+    /// Bytes dropped early by streamed-past eviction hints.
+    pub auto_early_dropped_bytes: Bytes,
 }
 
 impl UmMetrics {
@@ -70,6 +86,35 @@ impl UmMetrics {
         } else {
             self.d2h_bytes as f64 / self.h2d_bytes as f64
         }
+    }
+
+    /// CSV column names for the auto-policy counters (kept in lockstep
+    /// with [`UmMetrics::auto_csv_row`]; suite/report CSVs append these
+    /// so the bench trajectory tracks decision quality across PRs).
+    /// (`'static` is required here: associated constants may not elide
+    /// lifetimes — rustc's `elided_lifetimes_in_associated_constant`.)
+    pub const AUTO_CSV_HEADER: [&'static str; 7] = [
+        "auto_decisions",
+        "auto_pattern_flips",
+        "auto_prefetched_bytes",
+        "auto_prefetch_hit_bytes",
+        "auto_mispredicted_bytes",
+        "auto_advises",
+        "auto_early_dropped_bytes",
+    ];
+
+    /// The auto-policy counters as CSV fields (order matches
+    /// [`UmMetrics::AUTO_CSV_HEADER`]).
+    pub fn auto_csv_row(&self) -> Vec<String> {
+        vec![
+            self.auto_decisions.to_string(),
+            self.auto_pattern_flips.to_string(),
+            self.auto_prefetched_bytes.to_string(),
+            self.auto_prefetch_hit_bytes.to_string(),
+            self.auto_mispredicted_prefetch_bytes.to_string(),
+            self.auto_advises.to_string(),
+            self.auto_early_dropped_bytes.to_string(),
+        ]
     }
 }
 
@@ -105,8 +150,21 @@ mod tests {
 
     #[test]
     fn reset_clears() {
-        let mut m = UmMetrics { gpu_fault_groups: 5, ..Default::default() };
+        let mut m = UmMetrics { gpu_fault_groups: 5, auto_decisions: 3, ..Default::default() };
         m.reset();
         assert_eq!(m, UmMetrics::default());
+    }
+
+    #[test]
+    fn auto_csv_row_matches_header_width() {
+        let m = UmMetrics {
+            auto_decisions: 7,
+            auto_prefetched_bytes: 4096,
+            ..Default::default()
+        };
+        let row = m.auto_csv_row();
+        assert_eq!(row.len(), UmMetrics::AUTO_CSV_HEADER.len());
+        assert_eq!(row[0], "7");
+        assert_eq!(row[2], "4096");
     }
 }

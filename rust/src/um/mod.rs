@@ -17,6 +17,10 @@
 //! The state model lives in [`crate::mem`]; timing comes from
 //! [`crate::sim`] resource timelines; every data movement is recorded in
 //! a [`crate::trace::Trace`].
+//!
+//! [`auto`] sits on top of all of the above: an optional online policy
+//! engine (the `UM Auto` variant) that observes the fault stream and
+//! chooses prefetch/advise/eviction actions at runtime.
 
 pub mod policy;
 pub mod metrics;
@@ -27,7 +31,9 @@ pub mod advise;
 pub mod prefetch;
 pub mod evict;
 pub mod host;
+pub mod auto;
 
+pub use auto::{AutoConfig, AutoEngine};
 pub use metrics::UmMetrics;
 pub use policy::{Advise, Loc, UmPolicy};
 pub use runtime::{AccessOutcome, UmRuntime};

@@ -26,6 +26,11 @@ impl UmRuntime {
             return now; // prefetch of non-managed memory is a no-op
         }
         let range = alloc.pages.clamp(range);
+        if range.is_empty() {
+            // No work: recording a zero-byte `Prefetch` event here would
+            // put pure noise into traces and the Fig. 5/8 time series.
+            return now;
+        }
         let mut t = now;
         let mut pos = range.start;
         while pos < range.end {
@@ -40,7 +45,10 @@ impl UmRuntime {
         t
     }
 
-    fn prefetch_run_to_gpu(&mut self, id: AllocId, run: PageRange, res: Residency, now: Ns) -> Ns {
+    /// `pub(super)` so the `um::auto` actuator can issue engine-driven
+    /// bulk transfers on a single homogeneous run without the
+    /// `prefetch_async` call accounting.
+    pub(super) fn prefetch_run_to_gpu(&mut self, id: AllocId, run: PageRange, res: Residency, now: Ns) -> Ns {
         // §II-C: prefetching to GPU a range preferred on the host unpins.
         self.space.get_mut(id).pages.update(run, |p| {
             p.advise.set(AdviseFlags::PREF_HOST, false);
@@ -242,6 +250,34 @@ mod tests {
         assert_eq!(t2, t, "dropping duplicates costs nothing");
         assert_eq!(r.metrics.prefetched_pages_d2h, 0);
         r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn empty_clamped_range_records_no_trace_event() {
+        // Regression: a range entirely beyond the allocation clamps to
+        // empty; the call must not leave a zero-byte Prefetch event.
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_trace();
+        let id = r.malloc_managed("x", 4 * MIB); // 64 pages
+        let t = r.prefetch_async(id, PageRange::new(64, 64), Loc::Gpu, Ns(5));
+        assert_eq!(t, Ns(5), "no work, no time");
+        let t = r.prefetch_async(id, PageRange::new(1000, 2000), Loc::Gpu, t);
+        assert_eq!(t, Ns(5));
+        assert_eq!(r.metrics.prefetch_calls, 2, "calls still counted");
+        assert_eq!(r.trace.of_kind(crate::trace::TraceKind::Prefetch).count(), 0);
+        assert!(r.trace.is_empty(), "no events of any kind");
+    }
+
+    #[test]
+    fn non_managed_prefetch_records_no_trace_event() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_trace();
+        let d = r.malloc_device("d", 4 * MIB);
+        let full = r.space.get(d).full();
+        let t = r.prefetch_async(d, full, Loc::Gpu, Ns::ZERO);
+        assert_eq!(t, Ns::ZERO, "no-op on cudaMalloc memory");
+        assert!(r.trace.is_empty());
+        assert_eq!(r.metrics.h2d_bytes, 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::sim::{BandwidthResource, SerialResource};
 use crate::trace::{Trace, TraceKind};
 use crate::util::units::{transfer_ns, Bytes, Ns};
 
+use super::auto::AutoEngine;
 use super::metrics::UmMetrics;
 use super::policy::UmPolicy;
 
@@ -94,6 +95,10 @@ pub struct UmRuntime {
     /// serviced (reset at each `gpu_access`); drives the ETC-throttle
     /// ablation ([10]).
     pub(super) access_evicted_bytes: Bytes,
+    /// The online policy engine (`um::auto`), attached only for the
+    /// `UM Auto` variant via [`UmRuntime::enable_auto`]. `None` leaves
+    /// every other variant's behaviour bit-identical to before.
+    pub(super) auto: Option<AutoEngine>,
 }
 
 impl UmRuntime {
@@ -117,6 +122,7 @@ impl UmRuntime {
             trace: Trace::disabled(),
             advise_hints_active: false,
             access_evicted_bytes: 0,
+            auto: None,
         }
     }
 
@@ -216,11 +222,26 @@ impl UmRuntime {
         let range = alloc.pages.clamp(range);
         self.access_evicted_bytes = 0;
 
+        // An in-flight auto-prefetch covering this range gates the
+        // access (§III-A3: the wait for predicted-ahead data lands in
+        // the measured kernel window, like a background prefetch). The
+        // wait is attributed to `transfer_wait` so stall breakdowns
+        // still sum to the measured window.
+        let gate_wait = match &self.auto {
+            Some(eng) => eng
+                .allocs
+                .get(&id)
+                .map_or(Ns::ZERO, |st| st.history.gate_for(range).saturating_sub(now)),
+            None => Ns::ZERO,
+        };
+        let now = now + gate_wait;
+
         // Incremental run-splitting: classification happens *as the
         // access proceeds*, because servicing an earlier run can evict
         // pages of a later run of the same access (cyclic thrashing
         // under oversubscription does exactly this).
-        let mut out = AccessOutcome { done: now, ..Default::default() };
+        let mut out =
+            AccessOutcome { done: now, transfer_wait: gate_wait, ..Default::default() };
         let mut ready = now;
         let mut pos = range.start;
         while pos < range.end {
@@ -233,6 +254,11 @@ impl UmRuntime {
             pos = run.end;
         }
         out.done = ready;
+        // Closed loop: let the policy engine observe the completed
+        // access and actuate (prefetch / advise / eviction hints).
+        if self.auto.is_some() {
+            self.auto_post_access(id, range, write, &out);
+        }
         out
     }
 
@@ -287,6 +313,10 @@ impl UmRuntime {
                     // Established (or establishable) remote mapping:
                     // access host memory in place, no migration.
                     self.remote_access_host(id, run, now)
+                } else if self.auto.is_some() {
+                    // Policy engine attached: probe + bulk-escalate
+                    // large streaming runs (um::auto).
+                    self.auto_migrate_h2d(id, run, class, write, now)
                 } else {
                     self.migrate_or_map_h2d(id, run, class, write, now)
                 }
@@ -368,6 +398,9 @@ impl UmRuntime {
         }
         let was_enabled = self.trace.is_enabled();
         self.advise_hints_active = false;
+        if let Some(eng) = &mut self.auto {
+            eng.reset();
+        }
         self.dev.reset();
         self.dma_h2d.reset();
         self.dma_d2h.reset();

@@ -1,0 +1,91 @@
+//! Guardrail for the `um::auto` policy engine (the `UM Auto` variant):
+//! a closed-loop policy that is sometimes much worse than plain UM is
+//! worse than no policy at all. At small footprints,
+//!
+//! * `UM Auto` must never be more than a small tolerance slower than
+//!   plain `UM` — every app, both headline platforms, both regimes;
+//! * on the sequential-streaming apps on Intel-PCIe it must be strictly
+//!   *faster* (the engine rediscovering the paper's prefetch win).
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::util::units::MIB;
+
+/// Kernel time of one (app, variant) run on `plat` at `footprint`.
+fn kernel_ns(app: AppId, plat: &PlatformSpec, variant: Variant, footprint: u64) -> f64 {
+    app.build(footprint).run(plat, variant, false).kernel_time.0 as f64
+}
+
+/// Auto must stay within `tol` of plain UM.
+fn assert_within(app: AppId, plat: &PlatformSpec, footprint: u64, tol: f64) {
+    let um = kernel_ns(app, plat, Variant::Um, footprint);
+    let auto = kernel_ns(app, plat, Variant::UmAuto, footprint);
+    assert!(
+        auto <= um * tol,
+        "{} on {}: UmAuto {:.3} ms vs Um {:.3} ms exceeds tolerance {tol}",
+        app.name(),
+        plat.name,
+        auto / 1e6,
+        um / 1e6,
+    );
+}
+
+#[test]
+fn auto_never_much_worse_than_um_in_memory() {
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let plat = plat_id.spec();
+        for app in AppId::ALL {
+            assert_within(app, &plat, 64 * MIB, 1.05);
+        }
+    }
+}
+
+#[test]
+fn auto_never_much_worse_than_um_oversubscribed() {
+    // Shrink device memory so ~150% oversubscription is cheap to
+    // simulate (same trick as the oversubscription integration tests).
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let mut plat = plat_id.spec();
+        plat.gpu.mem_capacity = 128 * MIB;
+        plat.gpu.reserved = 0;
+        let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+        for app in AppId::ALL {
+            if !app.in_paper_matrix(plat_id, Regime::Oversubscribed) {
+                continue;
+            }
+            assert_within(app, &plat, footprint, 1.10);
+        }
+    }
+}
+
+#[test]
+fn auto_beats_um_on_sequential_streaming_apps_on_intel_pcie() {
+    // The paper's Intel-PCIe finding: prefetch wins for the apps that
+    // stream large host-initialized inputs. The engine must rediscover
+    // it online.
+    let plat = PlatformId::IntelPascal.spec();
+    for app in [AppId::Bs, AppId::Cg, AppId::Conv1, AppId::Fdtd3d] {
+        let um = kernel_ns(app, &plat, Variant::Um, 64 * MIB);
+        let auto = kernel_ns(app, &plat, Variant::UmAuto, 64 * MIB);
+        assert!(
+            auto < um,
+            "{}: UmAuto {:.3} ms should beat Um {:.3} ms on Intel-PCIe",
+            app.name(),
+            auto / 1e6,
+            um / 1e6,
+        );
+    }
+}
+
+#[test]
+fn auto_engine_reports_activity() {
+    // The counters that feed the CSV trajectory are actually populated.
+    let plat = PlatformId::IntelPascal.spec();
+    let r = AppId::Bs.build(64 * MIB).run(&plat, Variant::UmAuto, false);
+    assert!(r.metrics.auto_decisions > 0, "engine made decisions");
+    assert!(r.metrics.auto_prefetched_bytes > 0, "escalation moved bytes");
+    // And plain UM runs carry no auto noise.
+    let r = AppId::Bs.build(64 * MIB).run(&plat, Variant::Um, false);
+    assert_eq!(r.metrics.auto_decisions, 0);
+    assert_eq!(r.metrics.auto_prefetched_bytes, 0);
+}

@@ -9,12 +9,13 @@ use umbra::util::units::Ns;
 
 #[test]
 fn every_app_runs_every_variant_on_every_platform_small() {
-    // Smoke the full matrix at 64 MiB footprints.
+    // Smoke the full matrix (including the UmAuto policy engine) at
+    // 64 MiB footprints.
     for app in AppId::ALL {
         let a = app.build(64 * 1024 * 1024);
         for plat in PlatformId::ALL {
             let spec = plat.spec();
-            for variant in Variant::ALL {
+            for variant in Variant::ALL_WITH_AUTO {
                 let r = a.run(&spec, variant, false);
                 assert!(
                     r.kernel_time > Ns::ZERO,
