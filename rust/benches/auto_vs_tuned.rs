@@ -1,7 +1,8 @@
 //! `cargo bench --bench auto_vs_tuned` — the um::auto policy-engine
-//! study: `UM Auto` against basic UM and the best hand-tuned variant
-//! per (platform, regime, app) cell, with the engine's decision
-//! counters in the CSV.
+//! studies: `UM Auto` against basic UM and the best hand-tuned variant
+//! per (platform, regime, app) cell, plus the learned-vs-heuristic
+//! predictor comparison, with the engine's decision counters in the
+//! CSVs.
 use umbra::bench_harness::figures;
 
 fn main() {
@@ -9,6 +10,13 @@ fn main() {
     let t0 = std::time::Instant::now();
     let report = figures::fig_auto(reps);
     println!("{}", report.text);
-    println!("auto_vs_tuned regenerated in {:?} ({} reps/cell)", t0.elapsed(), reps);
     report.write(std::path::Path::new("results")).expect("write results/");
+    let cmp = figures::fig_predictor(reps);
+    println!("{}", cmp.text);
+    cmp.write(std::path::Path::new("results")).expect("write results/");
+    println!(
+        "auto_vs_tuned + predictor_vs_heuristic regenerated in {:?} ({} reps/cell)",
+        t0.elapsed(),
+        reps
+    );
 }

@@ -5,6 +5,7 @@ use crate::apps::{AppId, Regime, Variant};
 use crate::coordinator::{run_cell, Cell, CellResult, Suite, SuiteConfig};
 use crate::platform::PlatformId;
 use crate::trace::TimeSeries;
+use crate::um::PredictorKind;
 use crate::util::csvout::Csv;
 use crate::util::table::TextTable;
 use crate::util::units::{fmt_bytes, Ns};
@@ -329,11 +330,18 @@ pub fn fig8() -> Report {
 /// to win there. CSV rows carry the engine's decision counters so the
 /// bench trajectory tracks decision quality across PRs.
 pub fn fig_auto(reps: usize) -> Report {
+    fig_auto_with(reps, PredictorKind::default())
+}
+
+/// [`fig_auto`] with an explicit `um::auto` predictor mode (the
+/// `umbra auto --predictor {heuristic,learned}` entry point).
+pub fn fig_auto_with(reps: usize, predictor: PredictorKind) -> Report {
     let platforms = vec![PlatformId::IntelPascal, PlatformId::P9Volta];
     let config = SuiteConfig {
         platforms: platforms.clone(),
         variants: Variant::AUTO_STUDY.to_vec(),
         reps,
+        predictor,
         ..Default::default()
     };
     let suite = Suite::run(&config);
@@ -368,7 +376,8 @@ pub fn fig_auto(reps: usize) -> Report {
                 "auto/best",
             ])
             .title(format!(
-                "auto vs. hand-tuned: {} — {}",
+                "auto vs. hand-tuned ({} predictor): {} — {}",
+                predictor.name(),
                 platform.name(),
                 regime.name()
             ))
@@ -417,6 +426,111 @@ pub fn fig_auto(reps: usize) -> Report {
         }
     }
     Report::new("auto_vs_tuned", text).with_csv("auto_vs_tuned", csv)
+}
+
+/// "Predictor vs. heuristic": `UM Auto` under the learned delta-history
+/// predictor head-to-head against the same engine with the original
+/// classifier-rule predictor, per (platform, regime, app) cell —
+/// kernel time plus the decision-quality counters (prediction accuracy
+/// = hit / (hit + mispredicted) bytes; coverage = confident learned
+/// consultations / consultations; misprediction ratio = mispredicted /
+/// prefetched bytes). This is the report the learned-predictor
+/// tentpole claim rests on.
+pub fn fig_predictor(reps: usize) -> Report {
+    let platforms = vec![PlatformId::IntelPascal, PlatformId::P9Volta];
+    let run = |predictor: PredictorKind, variants: Vec<Variant>| {
+        Suite::run(&SuiteConfig {
+            platforms: platforms.clone(),
+            variants,
+            reps,
+            predictor,
+            ..Default::default()
+        })
+    };
+    // Um ignores the predictor: run it once (with the heuristic suite),
+    // not once per mode.
+    let heur = run(PredictorKind::Heuristic, vec![Variant::Um, Variant::UmAuto]);
+    let learn = run(PredictorKind::Learned, vec![Variant::UmAuto]);
+    // A cell with no resolved predictions has NaN accuracy: n/a, never
+    // a flattering 100%.
+    let pct = |x: f64| if x.is_finite() { format!("{:.0}%", x * 100.0) } else { "n/a".into() };
+    let frac = |x: f64| if x.is_finite() { format!("{x:.4}") } else { "n/a".into() };
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec![
+        "platform",
+        "regime",
+        "app",
+        "um_ms",
+        "heuristic_ms",
+        "learned_ms",
+        "learned_vs_heuristic",
+        "heuristic_accuracy",
+        "learned_accuracy",
+        "learned_coverage",
+        "heuristic_mispred_ratio",
+        "learned_mispred_ratio",
+    ]);
+    for regime in Regime::ALL {
+        for &platform in &platforms {
+            let mut table = TextTable::new(vec![
+                "App",
+                "UM (ms)",
+                "heuristic (ms)",
+                "learned (ms)",
+                "learn/heur",
+                "heur acc",
+                "learn acc",
+                "learn cov",
+            ])
+            .title(format!(
+                "predictor vs. heuristic: {} — {}",
+                platform.name(),
+                regime.name()
+            ))
+            .left(0);
+            for app in AppId::ALL {
+                let (Some(um), Some(h), Some(l)) = (
+                    heur.get4(app, platform, Variant::Um, regime),
+                    heur.get4(app, platform, Variant::UmAuto, regime),
+                    learn.get4(app, platform, Variant::UmAuto, regime),
+                ) else {
+                    continue;
+                };
+                let um_ms = um.kernel_time.mean.as_ms();
+                let h_ms = h.kernel_time.mean.as_ms();
+                let l_ms = l.kernel_time.mean.as_ms();
+                let (hm, lm) = (&h.last.metrics, &l.last.metrics);
+                table.row(vec![
+                    app.name().to_string(),
+                    format!("{um_ms:.1}"),
+                    format!("{h_ms:.1}"),
+                    format!("{l_ms:.1}"),
+                    format!("{:.2}x", l_ms / h_ms),
+                    pct(hm.prediction_accuracy()),
+                    pct(lm.prediction_accuracy()),
+                    pct(lm.prediction_coverage()),
+                ]);
+                csv.row(vec![
+                    platform.name().to_string(),
+                    regime.name().to_string(),
+                    app.name().to_string(),
+                    format!("{um_ms:.3}"),
+                    format!("{h_ms:.3}"),
+                    format!("{l_ms:.3}"),
+                    format!("{:.4}", l_ms / h_ms),
+                    frac(hm.prediction_accuracy()),
+                    frac(lm.prediction_accuracy()),
+                    frac(lm.prediction_coverage()),
+                    frac(hm.misprediction_ratio()),
+                    frac(lm.misprediction_ratio()),
+                ]);
+            }
+            text.push_str(&table.render());
+            text.push('\n');
+        }
+    }
+    Report::new("predictor_vs_heuristic", text).with_csv("predictor_vs_heuristic", csv)
 }
 
 #[cfg(test)]

@@ -35,8 +35,8 @@ impl Report {
 }
 
 /// Regenerate everything (Table I + Figs. 3-8 + the auto-vs-hand-tuned
-/// study + ablations) into `out`. `reps` follows the paper's
-/// 5-repetition methodology.
+/// study + the predictor-vs-heuristic study + ablations) into `out`.
+/// `reps` follows the paper's 5-repetition methodology.
 pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
     use super::{ablate, figures};
     let mut written = Vec::new();
@@ -49,6 +49,7 @@ pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
         figures::fig7(),
         figures::fig8(),
         figures::fig_auto(reps),
+        figures::fig_predictor(reps),
         ablate::ablate_all(),
     ];
     for r in reports {

@@ -6,9 +6,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::apps::{AppId, Regime, Variant};
 use crate::bench_harness::{ablate, figures, report::write_all};
-use crate::coordinator::{run_cell, Cell, Suite, SuiteConfig};
+use crate::coordinator::{run_cell, run_cell_on, Cell, Suite, SuiteConfig};
 use crate::platform::PlatformId;
 use crate::trace::TimeSeries;
+use crate::um::PredictorKind;
+use crate::util::jsonout::Json;
 use crate::util::table::TextTable;
 use crate::util::units::Ns;
 
@@ -20,10 +22,11 @@ umbra — Unified-Memory Behavior Reproduction & Analysis
 USAGE:
   umbra list
   umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
-  umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N]
+       [--predictor PRED]
+  umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
   umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
   umbra table 1 [--out DIR]
-  umbra auto [--reps N] [--out DIR]
+  umbra auto [--reps N] [--out DIR] [--predictor PRED] [--compare]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
   umbra validate [--artifacts DIR]
@@ -36,9 +39,13 @@ USAGE:
   PLAT = intel-pascal|intel-volta|p9-volta
   VAR  = explicit|um|advise|prefetch|both|auto
   REG  = in-memory|oversub
+  PRED = heuristic|learned (um::auto predictive-prefetch engine; default learned)
 
   `auto` runs the um::auto online policy engine (UM Auto variant); the
-  `umbra auto` subcommand regenerates the auto-vs-hand-tuned study.
+  `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
+  the chosen predictor mode, and `umbra auto --compare` the learned-vs-
+  heuristic predictor study. `umbra suite --out` also writes the
+  decision-quality trajectory to json/suite.json.
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
@@ -71,6 +78,16 @@ fn parse_cell(args: &Args) -> Result<Cell> {
     })
 }
 
+/// Optional `--predictor heuristic|learned` (default: learned).
+fn parse_predictor(args: &Args) -> Result<PredictorKind> {
+    match args.flag("predictor") {
+        None => Ok(PredictorKind::default()),
+        Some(v) => {
+            PredictorKind::parse(v).ok_or_else(|| anyhow!("--predictor: invalid value '{v}'"))
+        }
+    }
+}
+
 fn cmd_list() -> Result<()> {
     let mut t = TextTable::new(vec!["app", "description"]).left(0).left(1);
     for a in AppId::ALL {
@@ -87,7 +104,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cell = parse_cell(args)?;
     let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
     let trace = args.flag_bool("trace");
-    let r = run_cell(cell, reps, trace);
+    let predictor = parse_predictor(args)?;
+    let mut plat = cell.platform.spec();
+    plat.um.auto_predictor = predictor;
+    let r = run_cell_on(cell, reps, trace, &plat);
     println!("{}", cell.label());
     println!(
         "  kernel time: {} ± {} (n={}, min {}, max {})",
@@ -118,6 +138,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.auto_advises,
             m.auto_early_dropped_bytes
         );
+        let acc = m.prediction_accuracy();
+        let acc = if acc.is_finite() { format!("{:.0}%", acc * 100.0) } else { "n/a".into() };
+        println!(
+            "  predictor ({}): accuracy {}, coverage {:.0}%, {} learned / {} fallback predictions",
+            predictor.name(),
+            acc,
+            m.prediction_coverage() * 100.0,
+            m.auto_learned_predictions,
+            m.auto_fallback_predictions
+        );
     }
     if trace {
         let b = r.breakdown;
@@ -135,6 +165,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
         reps,
         threads: args.flag_usize("threads", 0).map_err(|e| anyhow!(e))?,
         paper_matrix: !args.flag_bool("full-matrix"),
+        predictor: parse_predictor(args)?,
         ..Default::default()
     };
     let n = config.cells().len();
@@ -177,6 +208,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
         let mut csv = crate::util::csvout::Csv::new(header);
         let mut cells: Vec<_> = suite.results.iter().collect();
         cells.sort_by_key(|(c, _)| (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name()));
+        let mut json_cells = Vec::new();
         for (cell, r) in cells {
             let mut row = vec![
                 cell.platform.name().to_string(),
@@ -188,9 +220,34 @@ fn cmd_suite(args: &Args) -> Result<()> {
             ];
             row.extend(r.last.metrics.auto_csv_row());
             csv.row(row);
+            let m = &r.last.metrics;
+            json_cells.push(Json::obj(vec![
+                ("platform", Json::str(cell.platform.name())),
+                ("regime", Json::str(cell.regime.name())),
+                ("app", Json::str(cell.app.name())),
+                ("variant", Json::str(cell.variant.name())),
+                ("kernel_ms_mean", Json::Num(r.kernel_time.mean.as_ms())),
+                ("kernel_ms_std", Json::Num(r.kernel_time.std.as_ms())),
+                ("auto_decisions", Json::Int(m.auto_decisions)),
+                ("auto_prefetched_bytes", Json::Int(m.auto_prefetched_bytes)),
+                ("auto_prefetch_hit_bytes", Json::Int(m.auto_prefetch_hit_bytes)),
+                ("auto_mispredicted_bytes", Json::Int(m.auto_mispredicted_prefetch_bytes)),
+                ("auto_misprediction_ratio", Json::Num(m.misprediction_ratio())),
+                ("auto_prediction_accuracy", Json::Num(m.prediction_accuracy())),
+                ("auto_prediction_coverage", Json::Num(m.prediction_coverage())),
+            ]));
         }
         csv.write(&Path::new(out).join("csv/suite.csv"))?;
-        eprintln!("wrote {out}/csv/suite.csv");
+        // The decision-quality trajectory (ROADMAP "suite-scale auto
+        // trajectory"): auto_mispredicted_bytes / auto_prefetched_bytes
+        // per app, machine-readable so PR-over-PR regressions show up.
+        let json = Json::obj(vec![
+            ("predictor", Json::str(config.predictor.name())),
+            ("reps", Json::Int(reps as u64)),
+            ("cells", Json::Arr(json_cells)),
+        ]);
+        json.write(&Path::new(out).join("json/suite.json"))?;
+        eprintln!("wrote {out}/csv/suite.csv and {out}/json/suite.json");
     }
     Ok(())
 }
@@ -233,10 +290,16 @@ fn cmd_table(args: &Args) -> Result<()> {
     }
 }
 
-/// The auto-vs-hand-tuned study (`um::auto` policy engine).
+/// The auto-vs-hand-tuned study (`um::auto` policy engine), in either
+/// predictor mode; `--compare` runs the learned-vs-heuristic predictor
+/// study instead.
 fn cmd_auto(args: &Args) -> Result<()> {
     let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
-    let report = figures::fig_auto(reps);
+    let report = if args.flag_bool("compare") {
+        figures::fig_predictor(reps)
+    } else {
+        figures::fig_auto_with(reps, parse_predictor(args)?)
+    };
     println!("{}", report.text);
     if let Some(out) = args.flag("out") {
         report.write(Path::new(out))?;
@@ -395,6 +458,20 @@ mod tests {
             "sweep --param dup-factor --values 0.5 --app bs --platform pascal --variant um --regime in-memory",
         ))
         .is_err(), "policy validation catches dup_factor < 1");
+    }
+
+    #[test]
+    fn predictor_flag_parses_and_rejects() {
+        let a = args("run --predictor heuristic");
+        assert_eq!(parse_predictor(&a).unwrap(), PredictorKind::Heuristic);
+        let a = args("run --predictor learned");
+        assert_eq!(parse_predictor(&a).unwrap(), PredictorKind::Learned);
+        let a = args("run");
+        assert_eq!(parse_predictor(&a).unwrap(), PredictorKind::Learned, "default");
+        let a = args("run --predictor bogus");
+        assert!(parse_predictor(&a).is_err());
+        assert!(USAGE.contains("--predictor"), "usage documents the flag");
+        assert!(USAGE.contains("--compare"), "usage documents the study");
     }
 
     #[test]

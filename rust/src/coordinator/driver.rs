@@ -1,7 +1,7 @@
 //! One benchmark cell: (app, platform, variant, regime) × repetitions.
 
 use crate::apps::{AppId, Regime, RunResult, Variant};
-use crate::platform::PlatformId;
+use crate::platform::{PlatformId, PlatformSpec};
 use crate::trace::Breakdown;
 use crate::util::stats::Summary;
 use crate::util::units::Ns;
@@ -44,8 +44,14 @@ pub struct CellResult {
 /// repetition machinery mirrors the paper's methodology and exercises
 /// run-state reset; seeded apps may vary per rep in future ablations).
 pub fn run_cell(cell: Cell, reps: usize, trace: bool) -> CellResult {
+    run_cell_on(cell, reps, trace, &cell.platform.spec())
+}
+
+/// [`run_cell`] on an explicit (possibly tweaked) platform spec — how
+/// the suite/CLI select the `um::auto` predictor mode or sweep driver
+/// policy without touching the calibrated platform tables.
+pub fn run_cell_on(cell: Cell, reps: usize, trace: bool, plat: &PlatformSpec) -> CellResult {
     assert!(reps >= 1);
-    let plat = cell.platform.spec();
     let app = cell.app.build_for(cell.platform, cell.regime);
     let mut totals = Vec::with_capacity(reps);
     let mut launches: Vec<Ns> = Vec::new();
@@ -53,7 +59,7 @@ pub fn run_cell(cell: Cell, reps: usize, trace: bool) -> CellResult {
     for rep in 0..reps {
         // Trace only the final repetition (traces are large).
         let want_trace = trace && rep == reps - 1;
-        let r = app.run(&plat, cell.variant, want_trace);
+        let r = app.run(plat, cell.variant, want_trace);
         totals.push(r.kernel_time);
         launches.extend(r.kernel_times.iter().copied());
         last = Some(r);

@@ -4,9 +4,10 @@ use std::collections::HashMap;
 
 use crate::apps::{AppId, Regime, Variant};
 use crate::platform::PlatformId;
+use crate::um::PredictorKind;
 use crate::util::pool::Pool;
 
-use super::driver::{run_cell, Cell, CellResult};
+use super::driver::{run_cell_on, Cell, CellResult};
 
 /// What to run.
 #[derive(Clone, Debug)]
@@ -24,6 +25,9 @@ pub struct SuiteConfig {
     /// Restrict to the paper's evaluation matrix (drops Graph500
     /// oversubscription off Intel-Pascal, Explicit under oversub).
     pub paper_matrix: bool,
+    /// Predictor mode for `UM Auto` cells (ignored by every other
+    /// variant).
+    pub predictor: PredictorKind,
 }
 
 impl Default for SuiteConfig {
@@ -37,6 +41,7 @@ impl Default for SuiteConfig {
             trace: false,
             threads: 0,
             paper_matrix: true,
+            predictor: PredictorKind::default(),
         }
     }
 }
@@ -80,12 +85,17 @@ impl Suite {
         let cells = config.cells();
         let reps = config.reps;
         let trace = config.trace;
+        let predictor = config.predictor;
         let pool = if config.threads == 0 {
             Pool::with_default_size(16)
         } else {
             Pool::new(config.threads)
         };
-        let results = pool.map(cells, move |cell| (cell, run_cell(cell, reps, trace)));
+        let results = pool.map(cells, move |cell| {
+            let mut plat = cell.platform.spec();
+            plat.um.auto_predictor = predictor;
+            (cell, run_cell_on(cell, reps, trace, &plat))
+        });
         Suite { results: results.into_iter().collect() }
     }
 
@@ -153,9 +163,8 @@ mod tests {
             variants: vec![Variant::Um, Variant::UmPrefetch],
             regimes: vec![Regime::InMemory],
             reps: 2,
-            trace: false,
             threads: 2,
-            paper_matrix: true,
+            ..Default::default()
         };
         let suite = Suite::run(&config);
         assert_eq!(suite.results.len(), 4);

@@ -24,6 +24,7 @@ use crate::util::units::{Bytes, Ns};
 
 use super::super::runtime::{AccessOutcome, Class, UmRuntime};
 use super::pattern::{classify, Pattern};
+use super::predictor::{heuristic_prediction, PredictorKind};
 
 impl UmRuntime {
     /// Auto advises are safe unless a coherent platform is
@@ -116,6 +117,11 @@ impl UmRuntime {
             self.metrics.auto_pattern_flips += 1;
         }
         let pat = st.tracker.current();
+        // Learned mode: train the delta-history tables on this access
+        // (online, from the same fault-stream tap the classifier uses).
+        if cfg.predict && cfg.predictor == PredictorKind::Learned {
+            st.predictor.observe(range, &cfg);
+        }
 
         // ---- decide -------------------------------------------------
         // ReadMostly pays off for data that is re-read and never
@@ -145,18 +151,34 @@ impl UmRuntime {
             st.advised_read_mostly = true;
         }
 
-        let predicted = if cfg.predict {
-            match pat {
-                Pattern::Sequential => Some(range.end),
-                Pattern::Strided(stride) => Some(range.start.saturating_add(stride)),
-                _ => None,
-            }
-            .map(|start| {
-                let len = range.len().min(cfg.max_predict_pages);
-                PageRange::new(start, start.saturating_add(len))
-            })
+        // Predictive prefetch: ranked predicted ranges with confidence
+        // (learned mode) or the single classifier-rule range (heuristic
+        // mode; also the learned mode's low-confidence fallback). The
+        // heuristic arm is byte-identical to the original engine.
+        let predictions: Vec<PageRange> = if !cfg.predict {
+            Vec::new()
         } else {
-            None
+            match cfg.predictor {
+                PredictorKind::Heuristic => {
+                    heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect()
+                }
+                PredictorKind::Learned => {
+                    self.metrics.auto_predict_queries += 1;
+                    let ranked = st.predictor.predict(range, &cfg);
+                    if ranked.is_empty() {
+                        let fb: Vec<PageRange> =
+                            heuristic_prediction(pat, range, cfg.max_predict_pages)
+                                .into_iter()
+                                .collect();
+                        self.metrics.auto_fallback_predictions += fb.len() as u64;
+                        fb
+                    } else {
+                        self.metrics.auto_predict_confident += 1;
+                        self.metrics.auto_learned_predictions += ranked.len() as u64;
+                        ranked.into_iter().map(|p| p.range).collect()
+                    }
+                }
+            }
         };
 
         let streaming = pat == Pattern::StreamingOversub;
@@ -182,17 +204,21 @@ impl UmRuntime {
                 self.advise_hints_active = false;
             }
         }
-        if let Some(want) = predicted {
-            let (pieces, ready) = self.auto_prefetch_ahead(id, want, now);
-            if !pieces.is_empty() {
-                let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
-                self.metrics.auto_prefetched_bytes += issued;
-                self.metrics.auto_decisions += 1;
-                let history = &mut eng.allocs.get_mut(&id).expect("entry created above").history;
-                for piece in pieces {
-                    history.push_pending(piece, ready);
-                }
+        let mut t_pred = now;
+        for want in predictions {
+            let (pieces, ready) = self.auto_prefetch_ahead(id, want, t_pred);
+            if pieces.is_empty() {
+                continue;
             }
+            let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
+            self.metrics.auto_prefetched_bytes += issued;
+            self.metrics.auto_decisions += 1;
+            let history = &mut eng.allocs.get_mut(&id).expect("entry created above").history;
+            for piece in pieces {
+                history.push_pending(piece, ready);
+            }
+            // Ranked predictions share the DMA engine: issue in order.
+            t_pred = ready;
         }
         if streaming {
             // Eviction hints. Early-drop streamed-past duplicates …
@@ -228,45 +254,6 @@ impl UmRuntime {
         self.auto = Some(eng);
     }
 
-    /// Issue an ahead-of-access prefetch for the host-resident parts of
-    /// `want`, clamped so it never evicts. Returns the prefetched pieces
-    /// and their completion time (the gate later consumers wait on).
-    fn auto_prefetch_ahead(
-        &mut self,
-        id: AllocId,
-        want: PageRange,
-        now: Ns,
-    ) -> (Vec<PageRange>, Ns) {
-        let alloc = self.space.get(id);
-        let want = alloc.pages.clamp(want);
-        if want.is_empty() {
-            return (Vec::new(), now);
-        }
-        let mut budget = (self.dev.free() / PAGE_SIZE) as u32;
-        let host_runs: Vec<PageRange> = alloc
-            .pages
-            .runs_in(want)
-            .filter(|(_, p)| p.residency == Residency::Host)
-            .map(|(r, _)| r)
-            .collect();
-        let mut pieces = Vec::new();
-        let mut issued: Bytes = 0;
-        let mut t = now;
-        for r in host_runs {
-            if budget == 0 {
-                break;
-            }
-            let piece = PageRange::new(r.start, r.start + r.len().min(budget));
-            t = self.prefetch_run_to_gpu(id, piece, Residency::Host, t);
-            budget -= piece.len();
-            issued += piece.bytes();
-            pieces.push(piece);
-        }
-        if issued > 0 {
-            self.trace.record(TraceKind::Prefetch, now, t, issued, Some(id), "auto-predict");
-        }
-        (pieces, t)
-    }
 }
 
 #[cfg(test)]
@@ -402,6 +389,51 @@ mod tests {
             "late windows arrive before the access: {stalls:?}"
         );
         r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn learned_mode_populates_coverage_counters() {
+        let cfg = AutoConfig { escalate: false, ..AutoConfig::default() };
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_auto_with(cfg);
+        let id = r.malloc_managed("x", 16 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let mut t = Ns::ZERO;
+        for i in 0..8u32 {
+            t = r.gpu_access(id, PageRange::new(i * 32, (i + 1) * 32), false, t).done;
+        }
+        let m = &r.metrics;
+        assert_eq!(m.auto_predict_queries, 8, "one consultation per access");
+        assert!(m.auto_predict_confident > 0, "tables became confident");
+        assert!(m.auto_learned_predictions > 0);
+        assert!(
+            m.auto_fallback_predictions > 0,
+            "warmup accesses fell back to the classifier rule"
+        );
+        assert!(m.prediction_coverage() > 0.0 && m.prediction_coverage() < 1.0);
+    }
+
+    #[test]
+    fn heuristic_mode_never_consults_the_tables() {
+        let cfg = AutoConfig {
+            escalate: false,
+            predictor: crate::um::PredictorKind::Heuristic,
+            ..AutoConfig::default()
+        };
+        let mut r = UmRuntime::new(&intel_pascal());
+        r.enable_auto_with(cfg);
+        let id = r.malloc_managed("x", 16 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let mut t = Ns::ZERO;
+        for i in 0..8u32 {
+            t = r.gpu_access(id, PageRange::new(i * 32, (i + 1) * 32), false, t).done;
+        }
+        assert!(r.metrics.auto_prefetched_bytes > 0, "classifier rule still prefetches");
+        assert_eq!(r.metrics.auto_predict_queries, 0);
+        assert_eq!(r.metrics.auto_learned_predictions, 0);
+        assert_eq!(r.metrics.auto_fallback_predictions, 0);
     }
 
     #[test]

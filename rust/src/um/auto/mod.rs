@@ -23,15 +23,35 @@
 //! | ahead-of-access prefetch | stable sequential/strided pattern | prefetch the predicted next range (sized by detected stride, clamped by free memory) on the access tail | §III-A3: background prefetch overlaps kernel execution |
 //! | eviction hints | streaming-oversubscribed pattern | early-drop streamed-past ReadMostly duplicates; on pattern flips, re-touch (protect) read-mostly hot allocations | §II-D: droppable-vs-writeback asymmetry; protect reused data from LRU churn |
 //!
+//! ## Predictive prefetch: learned vs. heuristic
+//!
+//! Ahead-of-access prefetch is driven by one of two predictors
+//! (selected per run, `umbra ... --predictor {heuristic,learned}`):
+//!
+//! * [`predictor::PredictorKind::Heuristic`] — the original rule:
+//!   predict one range ahead of a stable sequential/strided pattern.
+//! * [`predictor::PredictorKind::Learned`] (default) — per-page-group
+//!   delta-history tables ([`predictor`] + [`model`]) trained online
+//!   from the observer's fault stream; the actuator issues the top-k
+//!   *ranked predicted ranges* gated by confidence, and falls back to
+//!   the heuristic rule while confidence is low. See
+//!   `docs/PREDICTOR.md`.
+//!
 //! Every actuation is counted in [`crate::um::UmMetrics`]
 //! (`auto_decisions`, `auto_pattern_flips`, `auto_prefetched_bytes`,
 //! `auto_prefetch_hit_bytes`, `auto_mispredicted_prefetch_bytes`,
-//! `auto_advises`, `auto_early_dropped_bytes`), surfaced through the
-//! CSV/report output so decision quality is trackable across PRs.
+//! `auto_advises`, `auto_early_dropped_bytes`, plus the prediction
+//! accuracy/coverage counters `auto_predict_queries`,
+//! `auto_predict_confident`, `auto_learned_predictions`,
+//! `auto_fallback_predictions`), surfaced through the CSV/JSON report
+//! output so decision quality is trackable across PRs.
+#![warn(missing_docs)]
 
 pub mod actuator;
+pub mod model;
 pub mod observer;
 pub mod pattern;
+pub mod predictor;
 
 use crate::mem::AllocId;
 use crate::util::fxhash::FxHashMap;
@@ -39,6 +59,7 @@ use crate::util::fxhash::FxHashMap;
 use super::runtime::UmRuntime;
 use observer::AllocHistory;
 use pattern::{Pattern, PatternTracker};
+pub use predictor::{LearnedPredictor, Prediction, PredictorKind};
 
 /// Tuning knobs of the policy engine. Defaults are deliberately
 /// conservative: the engine must never make a workload much worse than
@@ -67,6 +88,20 @@ pub struct AutoConfig {
     pub escalate: bool,
     /// Enable ahead-of-access predictive prefetch.
     pub predict: bool,
+    /// Which engine drives predictive prefetch: the learned
+    /// delta-history tables (default) or the original
+    /// pattern-classifier rule.
+    pub predictor: PredictorKind,
+    /// Ranked predicted ranges issued per access in learned mode.
+    pub predict_top_k: usize,
+    /// Minimum confidence (`[0, 1]`) for a learned prediction to be
+    /// issued; below it the engine falls back to the heuristic rule.
+    pub min_confidence: f64,
+    /// Pages per page group — the first level of the history table
+    /// (sub-streams further apart than this get separate histories).
+    pub group_pages: u32,
+    /// Fault deltas per history signature (second-level depth).
+    pub delta_history: usize,
 }
 
 impl Default for AutoConfig {
@@ -81,16 +116,24 @@ impl Default for AutoConfig {
             max_predict_pages: 1024, // 64 MiB
             escalate: true,
             predict: true,
+            predictor: PredictorKind::Learned,
+            predict_top_k: 2,
+            min_confidence: 0.5,
+            group_pages: 1024, // 64 MiB page groups
+            delta_history: 2,
         }
     }
 }
 
-/// Per-allocation engine state: history + hysteresis tracker + what the
-/// engine has already actuated on this allocation.
+/// Per-allocation engine state: history + hysteresis tracker + learned
+/// predictor + what the engine has already actuated on this allocation.
 #[derive(Clone, Debug, Default)]
 pub(super) struct AllocPolicy {
     pub history: AllocHistory,
     pub tracker: PatternTracker,
+    /// The online delta-history predictor (trained only in
+    /// [`PredictorKind::Learned`] mode).
+    pub predictor: LearnedPredictor,
     /// ReadMostly currently applied by the engine (not by the app).
     pub advised_read_mostly: bool,
 }
@@ -99,11 +142,14 @@ pub(super) struct AllocPolicy {
 /// process, covering all managed allocations).
 #[derive(Clone, Debug)]
 pub struct AutoEngine {
+    /// The engine's tuning (fixed for the engine's lifetime).
     pub cfg: AutoConfig,
     pub(super) allocs: FxHashMap<AllocId, AllocPolicy>,
 }
 
 impl AutoEngine {
+    /// Build an engine with the given tuning (no allocations tracked
+    /// yet; state accrues as accesses are observed).
     pub fn new(cfg: AutoConfig) -> AutoEngine {
         AutoEngine { cfg, allocs: FxHashMap::default() }
     }
@@ -121,10 +167,13 @@ impl AutoEngine {
 
 impl UmRuntime {
     /// Attach the auto policy engine with default tuning (the `UM Auto`
-    /// variant). Idempotent per run; cleared state survives
+    /// variant). The predictor mode comes from the platform's driver
+    /// policy (`UmPolicy::auto_predictor` — the `--predictor` CLI
+    /// plumbing). Idempotent per run; cleared state survives
     /// `reset_run_state` (the engine re-learns each repetition).
     pub fn enable_auto(&mut self) {
-        self.enable_auto_with(AutoConfig::default());
+        let cfg = AutoConfig { predictor: self.policy.auto_predictor, ..AutoConfig::default() };
+        self.enable_auto_with(cfg);
     }
 
     /// Attach the engine with explicit tuning (tests/ablations).

@@ -1,0 +1,204 @@
+//! The learned predictor's storage: a bounded Markov-style delta table.
+//!
+//! [`DeltaModel`] maps a *history signature* (the hash of a page group
+//! and its recent fault-delta history, computed by
+//! [`super::predictor::LearnedPredictor`]) to a small fixed set of
+//! candidate next deltas, each with a saturating confidence counter —
+//! the classic two-level branch-predictor / Markov-prefetcher shape,
+//! sized so one allocation's model is a few hundred kilobytes at most.
+//!
+//! Training is fully online (no offline phase): every observed
+//! transition bumps its candidate's counter and, when the slot set is
+//! full, decays the competitors so a persistent phase change eventually
+//! displaces stale candidates. Lookup returns candidates ranked by
+//! confidence; the caller turns counters into a `[0, 1]` confidence and
+//! gates actuation on it.
+
+use crate::util::fxhash::FxHashMap;
+
+/// Candidate slots per table entry. Four next-deltas per history
+/// signature covers every pattern the simulator produces (a signature
+/// with more than four successors is effectively random — not worth
+/// prefetching).
+pub const MODEL_SLOTS: usize = 4;
+
+/// Confidence saturation ceiling. A candidate at `MAX_CONF` maps to
+/// confidence 1.0; a freshly inserted one starts at `NEW_CONF`
+/// (2/8 = 0.25, below the engine's default issue threshold — one
+/// observation never arms the prefetcher, mirroring the heuristic
+/// classifier's two-vote rule).
+pub const MAX_CONF: u8 = 8;
+
+/// Initial counter value of a newly inserted candidate.
+pub const NEW_CONF: u8 = 2;
+
+/// Counter increment on a confirmed prediction (re-observation).
+const CONF_INC: u8 = 2;
+
+/// Competitor decay applied when a full entry sees a new delta.
+const CONF_DEC: u8 = 1;
+
+/// Entry cap per model. When the table fills (wildly irregular access
+/// or a pathological allocation) it is cleared and re-learned from
+/// scratch — deterministic, O(1) amortized, and strictly bounded
+/// memory. 4096 entries × ≤4 slots is far beyond what any simulated
+/// app produces in practice.
+const TABLE_CAP: usize = 4096;
+
+/// One predicted next delta with its saturating confidence counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Predicted next start-to-start delta, in pages (signed).
+    pub delta: i64,
+    /// Saturating counter in `[0, MAX_CONF]`.
+    pub conf: u8,
+}
+
+impl Candidate {
+    /// The counter as a `[0, 1]` confidence.
+    pub fn confidence(&self) -> f64 {
+        f64::from(self.conf) / f64::from(MAX_CONF)
+    }
+}
+
+/// Second level of the history-table predictor: signature → ranked
+/// candidate next deltas. See the module docs for the update rules.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaModel {
+    table: FxHashMap<u64, Vec<Candidate>>,
+}
+
+impl DeltaModel {
+    /// Record that `delta` followed history `sig`.
+    pub fn train(&mut self, sig: u64, delta: i64) {
+        if self.table.len() >= TABLE_CAP && !self.table.contains_key(&sig) {
+            // Bounded memory: forget and re-learn (see module docs).
+            self.table.clear();
+        }
+        let entry = self.table.entry(sig).or_default();
+        if let Some(c) = entry.iter_mut().find(|c| c.delta == delta) {
+            c.conf = (c.conf + CONF_INC).min(MAX_CONF);
+        } else if entry.len() < MODEL_SLOTS {
+            entry.push(Candidate { delta, conf: NEW_CONF });
+        } else {
+            // Full entry: decay everyone, replace the weakest only once
+            // it has decayed to zero — a single stray delta never
+            // displaces an established candidate.
+            for c in entry.iter_mut() {
+                c.conf = c.conf.saturating_sub(CONF_DEC);
+            }
+            if let Some(w) = entry.iter_mut().min_by_key(|c| c.conf) {
+                if w.conf == 0 {
+                    *w = Candidate { delta, conf: NEW_CONF };
+                }
+            }
+        }
+        // Keep candidates ranked (stable: equal-confidence candidates
+        // keep their insertion order, so training is deterministic).
+        entry.sort_by(|a, b| b.conf.cmp(&a.conf));
+    }
+
+    /// Candidates for history `sig`, strongest first (empty slice when
+    /// the signature has never been observed).
+    pub fn lookup(&self, sig: u64) -> &[Candidate] {
+        self.table.get(&sig).map_or(&[], Vec::as_slice)
+    }
+
+    /// Number of learned history signatures (tests/inspection).
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Whether nothing has been learned yet.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unseen_signature_has_no_candidates() {
+        let m = DeltaModel::default();
+        assert!(m.lookup(42).is_empty());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn training_saturates_confidence() {
+        let mut m = DeltaModel::default();
+        for _ in 0..10 {
+            m.train(1, 16);
+        }
+        let c = m.lookup(1)[0];
+        assert_eq!(c.delta, 16);
+        assert_eq!(c.conf, MAX_CONF, "saturates, never overflows");
+        assert!((c.confidence() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn new_candidate_starts_below_issue_confidence() {
+        let mut m = DeltaModel::default();
+        m.train(1, 16);
+        assert!(m.lookup(1)[0].confidence() < 0.5, "one observation never arms the prefetcher");
+        m.train(1, 16);
+        assert!(m.lookup(1)[0].confidence() >= 0.5, "two agreeing observations do");
+    }
+
+    #[test]
+    fn candidates_ranked_by_confidence() {
+        let mut m = DeltaModel::default();
+        m.train(7, 100);
+        for _ in 0..3 {
+            m.train(7, 8);
+        }
+        let cands = m.lookup(7);
+        assert_eq!(cands[0].delta, 8, "stronger candidate first");
+        assert_eq!(cands[1].delta, 100);
+        assert!(cands[0].conf > cands[1].conf);
+    }
+
+    #[test]
+    fn single_stray_delta_does_not_displace_established_candidates() {
+        let mut m = DeltaModel::default();
+        for d in [1, 2, 3, 4] {
+            for _ in 0..4 {
+                m.train(9, d);
+            }
+        }
+        m.train(9, 99); // slots full: decays everyone, inserts nothing
+        assert!(m.lookup(9).iter().all(|c| c.delta != 99));
+        assert_eq!(m.lookup(9).len(), MODEL_SLOTS);
+    }
+
+    #[test]
+    fn persistent_new_delta_eventually_displaces_the_weakest() {
+        let mut m = DeltaModel::default();
+        for d in [1, 2, 3] {
+            for _ in 0..4 {
+                m.train(9, d);
+            }
+        }
+        m.train(9, 4); // fourth slot, conf = NEW_CONF
+        for _ in 0..4 {
+            m.train(9, 99);
+        }
+        assert!(
+            m.lookup(9).iter().any(|c| c.delta == 99),
+            "persistent phase change displaces the decayed weakest: {:?}",
+            m.lookup(9)
+        );
+    }
+
+    #[test]
+    fn table_cap_clears_and_relearns() {
+        let mut m = DeltaModel::default();
+        for sig in 0..TABLE_CAP as u64 + 10 {
+            m.train(sig, 1);
+        }
+        assert!(m.len() <= TABLE_CAP, "bounded: {} entries", m.len());
+        assert!(!m.is_empty(), "re-learning after the clear");
+    }
+}

@@ -52,6 +52,7 @@ pub enum Pattern {
 }
 
 impl Pattern {
+    /// Human-readable name (CLI/report output).
     pub fn name(self) -> &'static str {
         match self {
             Pattern::Unknown => "unknown",

@@ -1,0 +1,464 @@
+//! Online learned access prediction: per-page-group delta-history
+//! tables (see `docs/PREDICTOR.md` for the full design + worked
+//! example).
+//!
+//! The heuristic majority-stride classifier ([`super::pattern`]) can
+//! only express "the stream advances by a constant stride". This module
+//! learns arbitrary *repeating* fault-delta sequences instead — the
+//! direction of "Deep Learning based Data Prefetching in CPU-GPU
+//! Unified Virtual Memory" (PAPERS.md), realized as a table-based
+//! Markov predictor that trains online from the observer's fault
+//! stream with no offline phase:
+//!
+//! * **Level 1** ([`LearnedPredictor`]): accesses are bucketed into
+//!   *page groups* (`start / group_pages`); each group keeps the start
+//!   page, length and the last few start-to-start deltas of its own
+//!   sub-stream, so interleaved streams over one allocation do not
+//!   pollute each other's history.
+//! * **Level 2** ([`super::model::DeltaModel`]): the hash of
+//!   (group, recent deltas) indexes candidate next deltas with
+//!   saturating confidence counters.
+//!
+//! [`LearnedPredictor::predict`] returns *ranked* [`Prediction`]s —
+//! the confident candidates for the next delta, plus a Markov-chain
+//! walk one step deeper along the strongest candidate (confidences
+//! multiply). The actuator issues the top-k above the confidence
+//! threshold; when the table has nothing confident it falls back to
+//! [`heuristic_prediction`] — the exact PR 2 rule — so the learned
+//! mode can only add coverage, never lose the stride cases.
+
+use crate::mem::PageRange;
+use crate::util::fxhash::FxHasher;
+
+use super::model::DeltaModel;
+use super::pattern::Pattern;
+use super::AutoConfig;
+
+/// Which engine drives ahead-of-access predictive prefetch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// The PR 2 rule: predict one range ahead from the hysteresis
+    /// classifier's stable pattern (sequential/strided only).
+    Heuristic,
+    /// The delta-history table predictor, with [`Heuristic`] as the
+    /// low-confidence fallback.
+    ///
+    /// [`Heuristic`]: PredictorKind::Heuristic
+    #[default]
+    Learned,
+}
+
+impl PredictorKind {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::Heuristic => "heuristic",
+            PredictorKind::Learned => "learned",
+        }
+    }
+
+    /// Parse a CLI value (`heuristic` | `learned`).
+    pub fn parse(s: &str) -> Option<PredictorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "heuristic" | "classifier" | "pr2" => Some(PredictorKind::Heuristic),
+            "learned" | "table" | "markov" => Some(PredictorKind::Learned),
+            _ => None,
+        }
+    }
+}
+
+/// One ranked predicted next access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// The pages predicted to be touched next.
+    pub range: PageRange,
+    /// Confidence in `[0, 1]` (chained predictions multiply their
+    /// steps' confidences).
+    pub confidence: f64,
+}
+
+/// The PR 2 prediction rule, kept verbatim as the `--predictor
+/// heuristic` mode and the learned mode's low-confidence fallback:
+/// a stable sequential pattern predicts the next contiguous window, a
+/// strided one predicts one stride ahead; everything else predicts
+/// nothing. The predicted length mirrors the triggering access, capped
+/// at `max_predict_pages`.
+pub fn heuristic_prediction(
+    pat: Pattern,
+    range: PageRange,
+    max_predict_pages: u32,
+) -> Option<PageRange> {
+    match pat {
+        Pattern::Sequential => Some(range.end),
+        Pattern::Strided(stride) => Some(range.start.saturating_add(stride)),
+        _ => None,
+    }
+    .map(|start| {
+        let len = range.len().min(max_predict_pages);
+        PageRange::new(start, start.saturating_add(len))
+    })
+}
+
+/// Per-page-group sub-stream state (level 1 of the history table).
+#[derive(Clone, Debug)]
+struct GroupHistory {
+    /// Start page of the group's most recent access.
+    last_start: u32,
+    /// Length (pages) of the group's most recent access.
+    last_len: u32,
+    /// Recent start-to-start deltas, oldest first (bounded by the
+    /// engine's `delta_history`).
+    deltas: Vec<i64>,
+}
+
+/// Hash of (page group, recent delta history) — the second-level index.
+fn signature(group: u32, deltas: &[i64]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    h.write_u32(group);
+    h.write_usize(deltas.len());
+    for &d in deltas {
+        h.write_u64(d as u64);
+    }
+    h.finish()
+}
+
+/// Apply a signed page delta to a start page, rejecting out-of-range
+/// results (the allocation clamp handles the upper end later).
+fn offset(start: u32, delta: i64) -> Option<u32> {
+    let s = i64::from(start) + delta;
+    (0..=i64::from(u32::MAX)).contains(&s).then_some(s as u32)
+}
+
+/// The online learned predictor attached to one allocation's engine
+/// state. Trains on every observed access ([`LearnedPredictor::observe`])
+/// and produces ranked predictions ([`LearnedPredictor::predict`]).
+#[derive(Clone, Debug, Default)]
+pub struct LearnedPredictor {
+    groups: crate::util::fxhash::FxHashMap<u32, GroupHistory>,
+    model: DeltaModel,
+}
+
+impl LearnedPredictor {
+    fn group_of(start: u32, cfg: &AutoConfig) -> u32 {
+        start / cfg.group_pages.max(1)
+    }
+
+    /// Train on one observed access (the observer's fault-stream tap).
+    /// The delta against the group's previous access is recorded under
+    /// the history signature *preceding* this access, exactly the
+    /// transition a later [`LearnedPredictor::predict`] will look up.
+    pub fn observe(&mut self, range: PageRange, cfg: &AutoConfig) {
+        let group = Self::group_of(range.start, cfg);
+        let cap = cfg.delta_history.max(1);
+        match self.groups.get_mut(&group) {
+            None => {
+                self.groups.insert(
+                    group,
+                    GroupHistory {
+                        last_start: range.start,
+                        last_len: range.len(),
+                        deltas: Vec::with_capacity(cap),
+                    },
+                );
+            }
+            Some(g) => {
+                let delta = i64::from(range.start) - i64::from(g.last_start);
+                self.model.train(signature(group, &g.deltas), delta);
+                if g.deltas.len() >= cap {
+                    g.deltas.remove(0);
+                }
+                g.deltas.push(delta);
+                g.last_start = range.start;
+                g.last_len = range.len();
+            }
+        }
+    }
+
+    /// Ranked predictions following `range` (which must just have been
+    /// [`observe`](LearnedPredictor::observe)d): every candidate next
+    /// delta at or above `min_confidence`, plus a one-step-deeper
+    /// Markov walk along the strongest candidate. At most
+    /// `predict_top_k` results, strongest first. Zero-delta candidates
+    /// (re-touches of resident data) are never returned.
+    pub fn predict(&self, range: PageRange, cfg: &AutoConfig) -> Vec<Prediction> {
+        let group = Self::group_of(range.start, cfg);
+        let Some(g) = self.groups.get(&group) else { return Vec::new() };
+        let len = g.last_len.min(cfg.max_predict_pages).max(1);
+        let mut out = Vec::new();
+
+        let sig = signature(group, &g.deltas);
+        let cands = self.model.lookup(sig);
+        for c in cands {
+            let conf = c.confidence();
+            if conf < cfg.min_confidence {
+                break; // ranked: everything after is weaker
+            }
+            if c.delta == 0 {
+                continue;
+            }
+            if let Some(start) = offset(g.last_start, c.delta) {
+                out.push(Prediction {
+                    range: PageRange::new(start, start.saturating_add(len)),
+                    confidence: conf,
+                });
+            }
+        }
+
+        // Markov-chain walk: one step deeper along the strongest
+        // confident candidate (deeper prefetch on stable streams).
+        let first = cands
+            .first()
+            .filter(|c| c.confidence() >= cfg.min_confidence && c.delta != 0);
+        if let Some(first) = first {
+            if let Some(step1) = offset(g.last_start, first.delta) {
+                let mut deltas = g.deltas.clone();
+                if deltas.len() >= cfg.delta_history.max(1) {
+                    deltas.remove(0);
+                }
+                deltas.push(first.delta);
+                let sig2 = signature(group, &deltas);
+                let next = self.model.lookup(sig2).iter().find(|c| c.delta != 0);
+                if let Some(next) = next {
+                    let conf = first.confidence() * next.confidence();
+                    if conf >= cfg.min_confidence {
+                        if let Some(start) = offset(step1, next.delta) {
+                            out.push(Prediction {
+                                range: PageRange::new(start, start.saturating_add(len)),
+                                confidence: conf,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        out.sort_by(|a, b| b.confidence.partial_cmp(&a.confidence).unwrap());
+        out.truncate(cfg.predict_top_k.max(1));
+        out
+    }
+
+    /// Learned history signatures (tests/inspection).
+    pub fn model_len(&self) -> usize {
+        self.model.len()
+    }
+
+    /// Page groups with recorded history (tests/inspection).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pattern::{classify, AccessRecord, PatternTracker};
+    use super::*;
+
+    fn cfg() -> AutoConfig {
+        AutoConfig::default()
+    }
+
+    /// The engine's heuristic prediction path, replayed standalone:
+    /// observer-window bookkeeping + hysteresis classifier + the PR 2
+    /// rule. This is the differential oracle the integration test
+    /// (`tests/predictor_modes.rs`) checks the runtime against.
+    struct HeuristicSim {
+        window: Vec<AccessRecord>,
+        tracker: PatternTracker,
+        seen_end: u32,
+    }
+
+    impl HeuristicSim {
+        fn new() -> HeuristicSim {
+            HeuristicSim { window: Vec::new(), tracker: PatternTracker::default(), seen_end: 0 }
+        }
+
+        fn observe_and_predict(&mut self, r: PageRange, cfg: &AutoConfig) -> Option<PageRange> {
+            let wrapped = r.start < self.seen_end;
+            self.seen_end = self.seen_end.max(r.end);
+            self.window.push(AccessRecord { range: r, write: false, h2d_bytes: 0, wrapped });
+            if self.window.len() > cfg.window.max(1) {
+                self.window.remove(0);
+            }
+            self.tracker.update(classify(&self.window), cfg.hysteresis);
+            heuristic_prediction(self.tracker.current(), r, cfg.max_predict_pages)
+        }
+    }
+
+    /// A step scores when any prediction covers the start of one of the
+    /// next `pending_ttl` accesses — the same credit window the
+    /// engine's pending-prefetch audit uses.
+    fn consumed(preds: &[PageRange], stream: &[PageRange], i: usize, ttl: usize) -> bool {
+        stream[i + 1..]
+            .iter()
+            .take(ttl)
+            .any(|n| preds.iter().any(|p| p.start <= n.start && n.start < p.end))
+    }
+
+    /// Hit count of the pure heuristic policy over a stream.
+    fn heuristic_hits(stream: &[PageRange], cfg: &AutoConfig) -> usize {
+        let mut sim = HeuristicSim::new();
+        let mut hits = 0;
+        for (i, &r) in stream.iter().enumerate() {
+            let preds: Vec<PageRange> =
+                sim.observe_and_predict(r, cfg).into_iter().collect();
+            if consumed(&preds, stream, i, cfg.pending_ttl as usize) {
+                hits += 1;
+            }
+        }
+        hits
+    }
+
+    /// Hit count of the learned mode as the engine runs it: table
+    /// predictions when confident, heuristic fallback otherwise.
+    fn learned_hits(stream: &[PageRange], cfg: &AutoConfig) -> usize {
+        let mut sim = HeuristicSim::new();
+        let mut lp = LearnedPredictor::default();
+        let mut hits = 0;
+        for (i, &r) in stream.iter().enumerate() {
+            let fallback = sim.observe_and_predict(r, cfg);
+            lp.observe(r, cfg);
+            let ranked = lp.predict(r, cfg);
+            let preds: Vec<PageRange> = if ranked.is_empty() {
+                fallback.into_iter().collect()
+            } else {
+                ranked.into_iter().map(|p| p.range).collect()
+            };
+            if consumed(&preds, stream, i, cfg.pending_ttl as usize) {
+                hits += 1;
+            }
+        }
+        hits
+    }
+
+    fn sequential(n: u32, len: u32) -> Vec<PageRange> {
+        (0..n).map(|i| PageRange::new(i * len, (i + 1) * len)).collect()
+    }
+
+    fn strided(n: u32, stride: u32, len: u32) -> Vec<PageRange> {
+        (0..n).map(|i| PageRange::new(i * stride, i * stride + len)).collect()
+    }
+
+    #[test]
+    fn heuristic_prediction_is_the_pr2_rule() {
+        let r = PageRange::new(32, 48);
+        assert_eq!(
+            heuristic_prediction(Pattern::Sequential, r, 1024),
+            Some(PageRange::new(48, 64)),
+            "sequential: next contiguous window, same length"
+        );
+        assert_eq!(
+            heuristic_prediction(Pattern::Strided(100), r, 1024),
+            Some(PageRange::new(132, 148)),
+            "strided: one stride ahead of the current start"
+        );
+        assert_eq!(
+            heuristic_prediction(Pattern::Sequential, r, 4),
+            Some(PageRange::new(48, 52)),
+            "length capped at max_predict_pages"
+        );
+        let others =
+            [Pattern::Unknown, Pattern::Random, Pattern::ReadMostly, Pattern::StreamingOversub];
+        for pat in others {
+            assert_eq!(heuristic_prediction(pat, r, 1024), None, "{}", pat.name());
+        }
+    }
+
+    #[test]
+    fn learned_matches_heuristic_on_sequential_stream() {
+        let s = sequential(20, 16);
+        let (h, l) = (heuristic_hits(&s, &cfg()), learned_hits(&s, &cfg()));
+        assert!(l >= h, "learned {l} < heuristic {h}");
+        assert!(h > 12, "sanity: heuristic predicts a pure stream ({h})");
+    }
+
+    #[test]
+    fn learned_matches_heuristic_on_strided_stream() {
+        let s = strided(20, 48, 8);
+        let (h, l) = (heuristic_hits(&s, &cfg()), learned_hits(&s, &cfg()));
+        assert!(l >= h, "learned {l} < heuristic {h}");
+        assert!(h > 12, "sanity: heuristic predicts a strided stream ({h})");
+    }
+
+    #[test]
+    fn learned_beats_heuristic_on_pointer_chase() {
+        // A repeating irregular delta cycle (+7, +13, +3): no majority
+        // stride, so the classifier says Random and predicts nothing —
+        // but the transitions are perfectly learnable.
+        let mut s = Vec::new();
+        let mut start = 0u32;
+        for i in 0..30 {
+            s.push(PageRange::new(start, start + 4));
+            start += [7u32, 13, 3][i % 3];
+        }
+        let (h, l) = (heuristic_hits(&s, &cfg()), learned_hits(&s, &cfg()));
+        assert!(l > h, "learned {l} should beat heuristic {h}");
+        assert!(l >= 15, "learned should predict most of the cycle after warmup ({l})");
+    }
+
+    #[test]
+    fn learned_matches_heuristic_across_phase_change() {
+        let mut s = sequential(12, 16);
+        let base = s.last().unwrap().end;
+        s.extend((0..12).map(|i| PageRange::new(base + i * 64, base + i * 64 + 8)));
+        let (h, l) = (heuristic_hits(&s, &cfg()), learned_hits(&s, &cfg()));
+        assert!(l >= h, "learned {l} < heuristic {h} across the phase change");
+    }
+
+    #[test]
+    fn interleaved_group_streams_learned_wins() {
+        // Two sequential streams in different page groups, interleaved:
+        // the global window sees alternating huge deltas (Random), but
+        // per-group histories keep each stream clean.
+        let c = cfg();
+        let far = 10 * c.group_pages;
+        let mut s = Vec::new();
+        for i in 0..14u32 {
+            s.push(PageRange::new(i * 16, (i + 1) * 16));
+            s.push(PageRange::new(far + i * 16, far + (i + 1) * 16));
+        }
+        let (h, l) = (heuristic_hits(&s, &c), learned_hits(&s, &c));
+        assert!(l > h, "learned {l} should beat heuristic {h} on interleaved streams");
+    }
+
+    #[test]
+    fn stable_stream_chains_a_second_prediction() {
+        let c = cfg();
+        let mut lp = LearnedPredictor::default();
+        let s = sequential(12, 16);
+        for &r in &s {
+            lp.observe(r, &c);
+        }
+        let preds = lp.predict(*s.last().unwrap(), &c);
+        assert_eq!(preds.len(), 2, "top-k chained predictions: {preds:?}");
+        let last = s.last().unwrap();
+        assert_eq!(preds[0].range, PageRange::new(last.end, last.end + 16));
+        assert_eq!(preds[1].range, PageRange::new(last.end + 16, last.end + 32));
+        assert!(preds[0].confidence >= preds[1].confidence);
+    }
+
+    #[test]
+    fn cold_or_low_confidence_predicts_nothing() {
+        let c = cfg();
+        let lp = LearnedPredictor::default();
+        assert!(lp.predict(PageRange::new(0, 16), &c).is_empty(), "cold table");
+        let mut lp = LearnedPredictor::default();
+        let s = sequential(4, 16);
+        for &r in &s {
+            lp.observe(r, &c);
+        }
+        // The steady-state signature has been trained exactly once:
+        // confidence 2/8 stays below the issue gate.
+        assert!(lp.predict(*s.last().unwrap(), &c).is_empty());
+        assert!(lp.model_len() > 0, "transitions were recorded");
+    }
+
+    #[test]
+    fn predictor_kind_parse_roundtrip() {
+        for k in [PredictorKind::Heuristic, PredictorKind::Learned] {
+            assert_eq!(PredictorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PredictorKind::default(), PredictorKind::Learned);
+        assert_eq!(PredictorKind::parse("bogus"), None);
+    }
+}

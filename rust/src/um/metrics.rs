@@ -64,6 +64,17 @@ pub struct UmMetrics {
     pub auto_advises: u64,
     /// Bytes dropped early by streamed-past eviction hints.
     pub auto_early_dropped_bytes: Bytes,
+    /// Learned-predictor consultations (post-access steps in learned
+    /// mode; the denominator of prediction *coverage*).
+    pub auto_predict_queries: u64,
+    /// Consultations that yielded at least one above-threshold learned
+    /// prediction (coverage = confident / queries).
+    pub auto_predict_confident: u64,
+    /// Ranked predictions issued from the learned delta-history tables.
+    pub auto_learned_predictions: u64,
+    /// Predictions issued by the heuristic classifier rule while the
+    /// learned tables were below the confidence gate.
+    pub auto_fallback_predictions: u64,
 }
 
 impl UmMetrics {
@@ -88,12 +99,49 @@ impl UmMetrics {
         }
     }
 
+    /// Share of engine-prefetched bytes that aged out unused
+    /// (`auto_mispredicted_bytes / auto_prefetched_bytes`) — the
+    /// decision-quality figure the suite JSON tracks across PRs.
+    /// 0.0 when nothing was prefetched.
+    pub fn misprediction_ratio(&self) -> f64 {
+        if self.auto_prefetched_bytes == 0 {
+            0.0
+        } else {
+            self.auto_mispredicted_prefetch_bytes as f64 / self.auto_prefetched_bytes as f64
+        }
+    }
+
+    /// Of the predictively prefetched bytes whose fate is known, the
+    /// fraction an access actually consumed
+    /// (`hit / (hit + mispredicted)`). NaN when nothing has resolved —
+    /// a cell where the predictor never predicted must render as "n/a"
+    /// (JSON `null`), not as a flattering 100%.
+    pub fn prediction_accuracy(&self) -> f64 {
+        let resolved = self.auto_prefetch_hit_bytes + self.auto_mispredicted_prefetch_bytes;
+        if resolved == 0 {
+            f64::NAN
+        } else {
+            self.auto_prefetch_hit_bytes as f64 / resolved as f64
+        }
+    }
+
+    /// Fraction of learned-predictor consultations that produced an
+    /// above-threshold prediction (learned mode only; 0.0 before any
+    /// consultation).
+    pub fn prediction_coverage(&self) -> f64 {
+        if self.auto_predict_queries == 0 {
+            0.0
+        } else {
+            self.auto_predict_confident as f64 / self.auto_predict_queries as f64
+        }
+    }
+
     /// CSV column names for the auto-policy counters (kept in lockstep
     /// with [`UmMetrics::auto_csv_row`]; suite/report CSVs append these
     /// so the bench trajectory tracks decision quality across PRs).
     /// (`'static` is required here: associated constants may not elide
     /// lifetimes — rustc's `elided_lifetimes_in_associated_constant`.)
-    pub const AUTO_CSV_HEADER: [&'static str; 7] = [
+    pub const AUTO_CSV_HEADER: [&'static str; 11] = [
         "auto_decisions",
         "auto_pattern_flips",
         "auto_prefetched_bytes",
@@ -101,6 +149,10 @@ impl UmMetrics {
         "auto_mispredicted_bytes",
         "auto_advises",
         "auto_early_dropped_bytes",
+        "auto_predict_queries",
+        "auto_predict_confident",
+        "auto_learned_predictions",
+        "auto_fallback_predictions",
     ];
 
     /// The auto-policy counters as CSV fields (order matches
@@ -114,6 +166,10 @@ impl UmMetrics {
             self.auto_mispredicted_prefetch_bytes.to_string(),
             self.auto_advises.to_string(),
             self.auto_early_dropped_bytes.to_string(),
+            self.auto_predict_queries.to_string(),
+            self.auto_predict_confident.to_string(),
+            self.auto_learned_predictions.to_string(),
+            self.auto_fallback_predictions.to_string(),
         ]
     }
 }
@@ -160,11 +216,32 @@ mod tests {
         let m = UmMetrics {
             auto_decisions: 7,
             auto_prefetched_bytes: 4096,
+            auto_learned_predictions: 3,
             ..Default::default()
         };
         let row = m.auto_csv_row();
         assert_eq!(row.len(), UmMetrics::AUTO_CSV_HEADER.len());
         assert_eq!(row[0], "7");
         assert_eq!(row[2], "4096");
+        assert_eq!(row[9], "3");
+    }
+
+    #[test]
+    fn decision_quality_ratios() {
+        let m = UmMetrics::default();
+        assert_eq!(m.misprediction_ratio(), 0.0);
+        assert!(m.prediction_accuracy().is_nan(), "nothing resolved yet: n/a, not 100%");
+        assert_eq!(m.prediction_coverage(), 0.0);
+        let m = UmMetrics {
+            auto_prefetched_bytes: 1000,
+            auto_prefetch_hit_bytes: 600,
+            auto_mispredicted_prefetch_bytes: 200,
+            auto_predict_queries: 10,
+            auto_predict_confident: 4,
+            ..Default::default()
+        };
+        assert!((m.misprediction_ratio() - 0.2).abs() < 1e-12);
+        assert!((m.prediction_accuracy() - 0.75).abs() < 1e-12);
+        assert!((m.prediction_coverage() - 0.4).abs() < 1e-12);
     }
 }

@@ -33,7 +33,7 @@ pub mod evict;
 pub mod host;
 pub mod auto;
 
-pub use auto::{AutoConfig, AutoEngine};
+pub use auto::{AutoConfig, AutoEngine, LearnedPredictor, Prediction, PredictorKind};
 pub use metrics::UmMetrics;
 pub use policy::{Advise, Loc, UmPolicy};
 pub use runtime::{AccessOutcome, UmRuntime};

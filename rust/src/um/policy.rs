@@ -7,6 +7,8 @@
 
 use crate::util::units::{Bytes, Ns, KIB, MIB};
 
+use super::auto::PredictorKind;
+
 /// `cudaMemAdvise` advice values (paper §II-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Advise {
@@ -85,6 +87,11 @@ pub struct UmPolicy {
     pub etc_throttle: bool,
     /// Eviction-bytes-per-access threshold for the ETC throttle.
     pub etc_threshold: Bytes,
+    /// Which predictive-prefetch engine `UmRuntime::enable_auto`
+    /// attaches for the `UM Auto` variant (the `--predictor` CLI knob):
+    /// the learned delta-history tables (default) or the original
+    /// pattern-classifier rule. Ignored by every other variant.
+    pub auto_predictor: PredictorKind,
 }
 
 impl Default for UmPolicy {
@@ -105,6 +112,7 @@ impl Default for UmPolicy {
             density_escalation: false,
             etc_throttle: false,
             etc_threshold: 512 * MIB,
+            auto_predictor: PredictorKind::Learned,
         }
     }
 }

@@ -10,7 +10,7 @@
 use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGE_SIZE};
 use crate::mem::page::{AdviseFlags, PageFlags};
 use crate::trace::TraceKind;
-use crate::util::units::Ns;
+use crate::util::units::{Bytes, Ns};
 
 use super::policy::Loc;
 use super::runtime::UmRuntime;
@@ -121,6 +121,49 @@ impl UmRuntime {
                 t
             }
         }
+    }
+
+    /// Engine-driven ahead-of-access prefetch (the `um::auto`
+    /// predictive path, heuristic and learned modes alike): move the
+    /// host-resident parts of `want` to the device, clamped to the free
+    /// capacity so it never forces an eviction. Returns the prefetched
+    /// pieces and their completion time — the gate a later consuming
+    /// access waits on ([`crate::um::auto::observer::AllocHistory`]).
+    pub(super) fn auto_prefetch_ahead(
+        &mut self,
+        id: AllocId,
+        want: PageRange,
+        now: Ns,
+    ) -> (Vec<PageRange>, Ns) {
+        let alloc = self.space.get(id);
+        let want = alloc.pages.clamp(want);
+        if want.is_empty() {
+            return (Vec::new(), now);
+        }
+        let mut budget = (self.dev.free() / PAGE_SIZE) as u32;
+        let host_runs: Vec<PageRange> = alloc
+            .pages
+            .runs_in(want)
+            .filter(|(_, p)| p.residency == Residency::Host)
+            .map(|(r, _)| r)
+            .collect();
+        let mut pieces = Vec::new();
+        let mut issued: Bytes = 0;
+        let mut t = now;
+        for r in host_runs {
+            if budget == 0 {
+                break;
+            }
+            let piece = PageRange::new(r.start, r.start + r.len().min(budget));
+            t = self.prefetch_run_to_gpu(id, piece, Residency::Host, t);
+            budget -= piece.len();
+            issued += piece.bytes();
+            pieces.push(piece);
+        }
+        if issued > 0 {
+            self.trace.record(TraceKind::Prefetch, now, t, issued, Some(id), "auto-predict");
+        }
+        (pieces, t)
     }
 
     fn prefetch_run_to_cpu(&mut self, id: AllocId, run: PageRange, res: Residency, now: Ns) -> Ns {

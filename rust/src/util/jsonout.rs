@@ -1,0 +1,173 @@
+//! Minimal JSON writer for the suite's bench-trajectory output
+//! (`json/suite.json`). `serde` is unavailable in the offline build
+//! environment (DESIGN.md §2 *Substitutions*), and the suite only
+//! needs flat records: strings, numbers, arrays, objects.
+
+use std::fs;
+use std::path::Path;
+
+/// One JSON value. Numbers are split into integer/float variants so
+/// byte counters render exactly (no `1.8446744e19` surprises).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// An exact unsigned integer (counters, byte totals).
+    Int(u64),
+    /// A float, rendered with six decimals (`null` when non-finite —
+    /// JSON has no NaN/Infinity).
+    Num(f64),
+    /// A string (escaped on render).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object with insertion-ordered keys.
+    Obj(Vec<(String, Json)>),
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Json {
+    /// Object from `(key, value)` pairs (ergonomic literal form).
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// String value from anything string-like.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Render as pretty-printed JSON (2-space indent, trailing newline
+    /// left to the writer).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_to(&mut out, 0);
+        out
+    }
+
+    fn write_to(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(n) => out.push_str(&n.to_string()),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x:.6}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    out.push_str(&pad);
+                    out.push_str("  ");
+                    item.write_to(out, indent + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    out.push_str(&pad);
+                    out.push_str("  ");
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\": ");
+                    v.write_to(out, indent + 1);
+                    if i + 1 < fields.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Write to `path`, creating parent directories (mirrors
+    /// [`crate::util::csvout::Csv::write`]).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.render() + "\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Int(u64::MAX).render(), "18446744073709551615");
+        assert_eq!(Json::Num(0.25).render(), "0.250000");
+        assert_eq!(Json::Num(f64::NAN).render(), "null", "JSON has no NaN");
+        assert_eq!(Json::str("a\"b\\c\nd").render(), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn nested_structure_renders() {
+        let j = Json::Arr(vec![
+            Json::obj(vec![("app", Json::str("BS")), ("bytes", Json::Int(4096))]),
+            Json::obj(vec![]),
+        ]);
+        let s = j.render();
+        assert!(s.starts_with("[\n"));
+        assert!(s.contains("\"app\": \"BS\""));
+        assert!(s.contains("\"bytes\": 4096"));
+        assert!(s.ends_with(']'));
+        assert!(s.contains("{}"), "empty object compact form");
+    }
+
+    #[test]
+    fn write_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("umbra_json_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("json/out.json");
+        Json::obj(vec![("k", Json::Int(1))]).write(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.ends_with("}\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

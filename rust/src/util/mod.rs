@@ -11,6 +11,7 @@ pub mod fft;
 pub mod fxhash;
 pub mod stats;
 pub mod csvout;
+pub mod jsonout;
 pub mod table;
 pub mod pool;
 pub mod quick;

@@ -9,6 +9,7 @@
 
 use umbra::apps::{AppId, Regime, Variant};
 use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::um::PredictorKind;
 use umbra::util::units::MIB;
 
 /// Kernel time of one (app, variant) run on `plat` at `footprint`.
@@ -75,6 +76,40 @@ fn auto_beats_um_on_sequential_streaming_apps_on_intel_pcie() {
             um / 1e6,
         );
     }
+}
+
+#[test]
+fn guardrail_holds_for_the_heuristic_predictor_too() {
+    // The default platform spec runs the learned predictor (every test
+    // above exercises it); the `--predictor heuristic` compatibility
+    // mode must satisfy the same contract.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let mut plat = plat_id.spec();
+        plat.um.auto_predictor = PredictorKind::Heuristic;
+        for app in [AppId::Bs, AppId::Cg, AppId::Fdtd3d] {
+            assert_within(app, &plat, 64 * MIB, 1.05);
+        }
+    }
+    let mut plat = PlatformId::IntelPascal.spec();
+    plat.um.auto_predictor = PredictorKind::Heuristic;
+    let um = kernel_ns(AppId::Bs, &plat, Variant::Um, 64 * MIB);
+    let auto = kernel_ns(AppId::Bs, &plat, Variant::UmAuto, 64 * MIB);
+    assert!(auto < um, "heuristic mode keeps the Intel-PCIe streaming win");
+}
+
+#[test]
+fn learned_predictor_decision_quality_reported() {
+    // The learned mode's accuracy/coverage counters feed the suite
+    // JSON trajectory; make sure real apps populate them and that
+    // prediction quality is sane on the streaming apps.
+    let plat = PlatformId::IntelPascal.spec();
+    let r = AppId::Bs.build(64 * MIB).run(&plat, Variant::UmAuto, false);
+    assert!(r.metrics.auto_predict_queries > 0, "learned mode consulted");
+    let acc = r.metrics.prediction_accuracy();
+    assert!(
+        acc.is_nan() || acc >= 0.5,
+        "when predictions resolved, most bytes were consumed: {acc:.2}"
+    );
 }
 
 #[test]

@@ -1,0 +1,154 @@
+//! Documentation link check (run by the CI docs job): every relative
+//! markdown link in `README.md` and `docs/*.md` must point at an
+//! existing file, and every `#anchor` must match a heading in the
+//! target document (GitHub slugification: lowercase, punctuation
+//! stripped, spaces to hyphens).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf()
+}
+
+/// The documents under check: README.md plus everything in docs/.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md")];
+    let docs = root.join("docs");
+    if docs.is_dir() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&docs)
+            .expect("read docs/")
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "md"))
+            .collect();
+        entries.sort();
+        files.extend(entries);
+    }
+    files
+}
+
+/// Extract `](target)` link targets. Fenced code blocks are skipped;
+/// inline code spans are NOT — don't quote literal markdown link
+/// syntax in backticks in the checked documents.
+fn link_targets(markdown: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in markdown.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(i) = rest.find("](") {
+            let tail = &rest[i + 2..];
+            let Some(end) = tail.find(')') else { break };
+            out.push(tail[..end].trim().to_string());
+            rest = &tail[end + 1..];
+        }
+    }
+    out
+}
+
+/// GitHub-style heading slug: lowercase; keep alphanumerics, hyphens,
+/// underscores; spaces become hyphens; everything else is dropped.
+fn slugify(heading: &str) -> String {
+    let mut slug = String::new();
+    for c in heading.trim().chars() {
+        match c {
+            c if c.is_alphanumeric() => slug.extend(c.to_lowercase()),
+            ' ' => slug.push('-'),
+            '-' | '_' => slug.push(c),
+            _ => {}
+        }
+    }
+    slug
+}
+
+/// All heading anchors of a markdown document.
+fn anchors(markdown: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in markdown.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if !in_fence && line.starts_with('#') {
+            out.push(slugify(line.trim_start_matches('#')));
+        }
+    }
+    out
+}
+
+#[test]
+fn relative_links_and_anchors_resolve() {
+    let mut errors = Vec::new();
+    for file in doc_files() {
+        let text = fs::read_to_string(&file)
+            .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+        let dir = file.parent().expect("doc has a parent dir");
+        for target in link_targets(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.is_empty()
+            {
+                continue;
+            }
+            let (path_part, anchor) = match target.split_once('#') {
+                Some((p, a)) => (p, Some(a.to_string())),
+                None => (target.as_str(), None),
+            };
+            // Resolve the file part (empty = same document).
+            let resolved =
+                if path_part.is_empty() { file.clone() } else { dir.join(path_part) };
+            if !resolved.exists() {
+                errors.push(format!(
+                    "{}: broken link '{target}' ({} does not exist)",
+                    file.display(),
+                    resolved.display()
+                ));
+                continue;
+            }
+            if let Some(anchor) = anchor {
+                if resolved.extension().is_some_and(|x| x == "md") {
+                    let target_text = fs::read_to_string(&resolved)
+                        .unwrap_or_else(|e| panic!("read {}: {e}", resolved.display()));
+                    if !anchors(&target_text).contains(&anchor) {
+                        errors.push(format!(
+                            "{}: anchor '#{anchor}' not found in {}",
+                            file.display(),
+                            resolved.display()
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    assert!(errors.is_empty(), "documentation link check failed:\n{}", errors.join("\n"));
+}
+
+#[test]
+fn required_documents_exist_and_are_linked() {
+    let root = repo_root();
+    for doc in ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md"] {
+        assert!(root.join(doc).exists(), "{doc} missing");
+    }
+    let readme = fs::read_to_string(root.join("README.md")).unwrap();
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md") && readme.contains("docs/PREDICTOR.md"),
+        "README must link the architecture and predictor docs"
+    );
+}
+
+#[test]
+fn slugify_matches_github_rules() {
+    assert_eq!(slugify(" The `um::auto` Engine"), "the-umauto-engine");
+    assert_eq!(slugify("Worked example"), "worked-example");
+    assert_eq!(slugify("Two-level delta_history"), "two-level-delta_history");
+}

@@ -61,9 +61,8 @@ fn um_both_combines_advise_and_prefetch_benefits_in_memory() {
         variants: Variant::ALL.to_vec(),
         regimes: vec![Regime::InMemory],
         reps: 1,
-        trace: false,
         threads: 2,
-        paper_matrix: true,
+        ..Default::default()
     });
     for app in [AppId::Matmul, AppId::Conv0] {
         let t = |v| {
@@ -150,9 +149,8 @@ fn suite_parallel_equals_serial() {
         variants: vec![Variant::Um, Variant::UmAdvise],
         regimes: vec![Regime::InMemory],
         reps: 1,
-        trace: false,
         threads: 4,
-        paper_matrix: true,
+        ..Default::default()
     };
     let parallel = Suite::run(&config);
     let serial = Suite::run(&SuiteConfig { threads: 1, ..config.clone() });

@@ -1,0 +1,204 @@
+//! The `um::auto` predictor-mode contracts:
+//!
+//! * `--predictor heuristic` reproduces the original (pre-predictor)
+//!   engine behaviour bit-identically: a step-by-step differential
+//!   oracle replays the classifier rule outside the engine and checks
+//!   the engine's issued prefetch bytes against it after every access;
+//! * the learned mode covers access patterns the classifier cannot
+//!   (and never consults the tables in heuristic mode);
+//! * both modes run end-to-end for every app through the same
+//!   plumbing the CLI `--predictor` flag uses.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::coordinator::{run_cell, run_cell_on, Cell};
+use umbra::mem::{PageRange, PAGE_SIZE};
+use umbra::platform::{intel_pascal, PlatformId};
+use umbra::um::auto::pattern::{classify, AccessRecord, PatternTracker};
+use umbra::um::auto::predictor::heuristic_prediction;
+use umbra::um::{AutoConfig, PredictorKind, UmRuntime};
+use umbra::util::units::{Bytes, Ns, MIB};
+
+/// A runtime with the engine attached in the given mode, one
+/// host-initialized 64 MiB managed allocation, escalation disabled so
+/// `auto_prefetched_bytes` counts *predictive* prefetch only.
+fn prepped(kind: PredictorKind) -> (UmRuntime, umbra::mem::AllocId, u32) {
+    let cfg = AutoConfig { escalate: false, predictor: kind, ..AutoConfig::default() };
+    let mut r = UmRuntime::new(&intel_pascal());
+    r.enable_auto_with(cfg);
+    let id = r.malloc_managed("x", 64 * MIB); // 1024 pages
+    let full = r.space.get(id).full();
+    r.host_access(id, full, true, Ns::ZERO);
+    let n_pages = full.end;
+    (r, id, n_pages)
+}
+
+/// A mixed stream (within the 1024-page allocation): a sequential
+/// phase, a forward outlier, a strided phase — exercising
+/// Unknown/Random/Sequential/Strided transitions.
+fn mixed_stream() -> Vec<PageRange> {
+    let mut s: Vec<PageRange> = (0..6).map(|i| PageRange::new(i * 32, (i + 1) * 32)).collect();
+    s.push(PageRange::new(700, 710));
+    s.extend((0..5).map(|i| PageRange::new(780 + i * 48, 780 + i * 48 + 16)));
+    s
+}
+
+#[test]
+fn heuristic_mode_matches_the_classifier_rule_oracle() {
+    let (mut rt, id, n_pages) = prepped(PredictorKind::Heuristic);
+    let cfg = AutoConfig::default();
+
+    // The oracle replays the engine's exact observation pipeline
+    // (bounded window -> majority-stride classify -> hysteresis
+    // tracker) and the PR 2 prediction rule, plus a page-granular
+    // residency model to turn each predicted range into the bytes the
+    // engine must move (only host-resident pages transfer; nothing in
+    // this in-memory setup evicts).
+    let mut window: Vec<AccessRecord> = Vec::new();
+    let mut tracker = PatternTracker::default();
+    let mut seen_end = 0u32;
+    let mut resident = vec![false; n_pages as usize];
+    let mut expected_total: Bytes = 0;
+
+    let mut t = Ns::ZERO;
+    for r in mixed_stream() {
+        let out = rt.gpu_access(id, r, false, t);
+        t = out.done;
+
+        // -- oracle: observe exactly as um::auto::observer does -------
+        let wrapped = r.start < seen_end;
+        seen_end = seen_end.max(r.end);
+        window.push(AccessRecord { range: r, write: false, h2d_bytes: out.h2d_bytes, wrapped });
+        if window.len() > cfg.window {
+            window.remove(0);
+        }
+        tracker.update(classify(&window), cfg.hysteresis);
+        resident[r.start as usize..r.end as usize].fill(true);
+        // -- oracle: the PR 2 rule + residency-aware byte count -------
+        if let Some(want) = heuristic_prediction(tracker.current(), r, cfg.max_predict_pages) {
+            let want = PageRange::new(want.start.min(n_pages), want.end.min(n_pages));
+            for slot in resident[want.start as usize..want.end as usize].iter_mut() {
+                if !*slot {
+                    *slot = true;
+                    expected_total += PAGE_SIZE;
+                }
+            }
+        }
+
+        assert_eq!(
+            rt.metrics.auto_prefetched_bytes, expected_total,
+            "engine diverged from the classifier-rule oracle at access {r:?}"
+        );
+    }
+    assert!(expected_total > 0, "oracle sanity: the stream must trigger predictions");
+    // Heuristic mode never touches the learned-predictor machinery.
+    assert_eq!(rt.metrics.auto_predict_queries, 0);
+    assert_eq!(rt.metrics.auto_predict_confident, 0);
+    assert_eq!(rt.metrics.auto_learned_predictions, 0);
+    assert_eq!(rt.metrics.auto_fallback_predictions, 0);
+    rt.check_residency_invariant().unwrap();
+}
+
+#[test]
+fn heuristic_mode_is_deterministic() {
+    let run = || {
+        let (mut rt, id, _) = prepped(PredictorKind::Heuristic);
+        let mut t = Ns::ZERO;
+        for r in mixed_stream() {
+            t = rt.gpu_access(id, r, false, t).done;
+        }
+        (t, rt.metrics)
+    };
+    let (t1, m1) = run();
+    let (t2, m2) = run();
+    assert_eq!(t1, t2);
+    assert_eq!(m1, m2, "bit-identical across runs");
+}
+
+#[test]
+fn learned_covers_an_irregular_cycle_the_classifier_cannot() {
+    // Pointer-chase: repeating irregular deltas (+7, +13, +12 pages,
+    // 4-page accesses). No majority stride -> the classifier says
+    // Random and the heuristic engine never predicts; the delta tables
+    // learn the cycle and the engine starts hitting.
+    let stream: Vec<PageRange> = {
+        let mut s = Vec::new();
+        let mut start = 0u32;
+        for i in 0..30 {
+            s.push(PageRange::new(start, start + 4));
+            start += [7u32, 13, 12][i % 3];
+        }
+        s
+    };
+    let run = |kind: PredictorKind| {
+        let (mut rt, id, _) = prepped(kind);
+        let mut t = Ns::ZERO;
+        for &r in &stream {
+            t = rt.gpu_access(id, r, false, t).done;
+        }
+        rt.metrics
+    };
+    let heur = run(PredictorKind::Heuristic);
+    let learn = run(PredictorKind::Learned);
+    assert_eq!(heur.auto_prefetched_bytes, 0, "classifier: Random, no predictions");
+    assert!(learn.auto_prefetched_bytes > 0, "tables learned the cycle");
+    assert!(
+        learn.auto_prefetch_hit_bytes > 0,
+        "learned predictions were consumed: {learn:?}"
+    );
+    assert!(learn.prediction_coverage() > 0.3, "coverage {}", learn.prediction_coverage());
+}
+
+#[test]
+fn learned_hit_rate_not_worse_on_regular_streams() {
+    // On the patterns the classifier already handles, the learned mode
+    // (with its heuristic fallback) must not lose prefetch coverage.
+    for (stride, len) in [(32u32, 32u32), (64, 16)] {
+        let stream: Vec<PageRange> =
+            (0..12).map(|i| PageRange::new(i * stride, i * stride + len)).collect();
+        let run = |kind: PredictorKind| {
+            let (mut rt, id, _) = prepped(kind);
+            let mut t = Ns::ZERO;
+            for &r in &stream {
+                t = rt.gpu_access(id, r, false, t).done;
+            }
+            rt.metrics
+        };
+        let heur = run(PredictorKind::Heuristic);
+        let learn = run(PredictorKind::Learned);
+        assert!(
+            learn.auto_prefetch_hit_bytes >= heur.auto_prefetch_hit_bytes,
+            "stride {stride}: learned hit {} < heuristic hit {}",
+            learn.auto_prefetch_hit_bytes,
+            heur.auto_prefetch_hit_bytes,
+        );
+    }
+}
+
+#[test]
+fn run_cell_plumbing_selects_the_predictor() {
+    let cell = Cell {
+        app: AppId::Bs,
+        platform: PlatformId::IntelPascal,
+        variant: Variant::UmAuto,
+        regime: Regime::InMemory,
+    };
+    let mut plat = cell.platform.spec();
+    plat.um.auto_predictor = PredictorKind::Heuristic;
+    let r = run_cell_on(cell, 1, false, &plat);
+    assert_eq!(r.last.metrics.auto_predict_queries, 0, "heuristic cell: tables untouched");
+    let r = run_cell(cell, 1, false);
+    assert!(r.last.metrics.auto_predict_queries > 0, "default (learned) cell consults them");
+}
+
+#[test]
+fn both_predictor_modes_run_every_app() {
+    for kind in [PredictorKind::Heuristic, PredictorKind::Learned] {
+        let mut plat = PlatformId::IntelPascal.spec();
+        plat.um.auto_predictor = kind;
+        for app in AppId::ALL {
+            let r = app.build(64 * MIB).run(&plat, Variant::UmAuto, false);
+            assert!(r.kernel_time > Ns::ZERO, "{} ({})", app.name(), kind.name());
+            assert!(r.metrics.auto_decisions > 0, "{} ({})", app.name(), kind.name());
+        }
+    }
+}
