@@ -30,6 +30,20 @@ fn main() {
         r.prefetch_async(id, full, Loc::Gpu, Ns::ZERO)
     });
 
+    // Observer sliding window over a long fault stream (PR 4: the
+    // window and the predictor's delta histories are rings — O(1)
+    // pops, no Vec::remove(0) memmove per access on the fault path).
+    t.bench("um/auto_observe_window_100k", || {
+        use umbra::mem::PageRange;
+        use umbra::um::auto::observer::AllocHistory;
+        let mut h = AllocHistory::default();
+        for i in 0..100_000u32 {
+            let start = (i % 4096) * 16;
+            h.observe(PageRange::new(start, start + 16), false, 0, 8, 4);
+        }
+        h.window().len()
+    });
+
     // Eviction churn: cycle 2x capacity through a small device.
     t.bench("um/evict_churn_2x", || {
         let mut plat = intel_pascal();

@@ -16,7 +16,7 @@ use crate::platform::PlatformSpec;
 use crate::um::{Advise, Loc};
 use crate::util::units::Bytes;
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// Bytes per option across the five arrays.
 const BYTES_PER_OPTION: Bytes = 5 * 8;
@@ -74,8 +74,8 @@ impl UmApp for BlackScholes {
         "black_scholes"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
         let ab = self.array_bytes();
 
         if variant == Variant::Explicit {

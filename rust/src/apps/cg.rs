@@ -19,7 +19,7 @@ use crate::platform::PlatformSpec;
 use crate::um::{Advise, Loc};
 use crate::util::units::Bytes;
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// Non-zeros per row (tridiagonal system like the CUDA sample's
 /// `genTridiag`).
@@ -227,8 +227,8 @@ impl UmApp for ConjugateGradient {
         "cg_step"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
 
         if variant == Variant::Explicit {
             let h_mat = ctx.um.malloc_host("h_A", self.vals_bytes() + self.cols_bytes() + self.rowptr_bytes());

@@ -132,6 +132,33 @@ impl Regime {
     }
 }
 
+/// Execution options for one app run (beyond the variant itself).
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    /// Record a full event trace (memory-heavy; Figs. 4/5/7/8).
+    pub trace: bool,
+    /// Compute streams kernel launches rotate across. `1` is the
+    /// paper's wiring (every launch on the default stream, prefetches
+    /// on the background stream) and is bit-identical to the
+    /// pre-`RunOpts` behaviour; `>1` is the opt-in concurrency mode
+    /// (`--streams`) that exercises the `(stream, allocation)`-keyed
+    /// `um::auto` engine.
+    pub streams: u32,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts { trace: false, streams: 1 }
+    }
+}
+
+impl RunOpts {
+    /// The legacy `(trace)` entry point's options.
+    pub fn traced(trace: bool) -> RunOpts {
+        RunOpts { trace, ..Default::default() }
+    }
+}
+
 /// Result of one application run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -157,6 +184,11 @@ pub struct AppCtx {
     pub um: UmRuntime,
     pub streams: StreamSet,
     pub variant: Variant,
+    /// Compute streams `launch` rotates across; index 0 is the default
+    /// stream, extras are created per [`RunOpts::streams`].
+    compute: Vec<StreamId>,
+    /// Next launch's index into `compute` (round-robin).
+    next_launch: usize,
     kernel_time: Ns,
     kernel_times: Vec<Ns>,
     /// Background-prefetch completion the *next* kernel launch must
@@ -168,17 +200,34 @@ pub struct AppCtx {
 
 impl AppCtx {
     pub fn new(plat: &PlatformSpec, variant: Variant, trace: bool) -> AppCtx {
+        Self::with_opts(plat, variant, &RunOpts::traced(trace))
+    }
+
+    /// Build a run context with explicit [`RunOpts`]. With
+    /// `opts.streams > 1`, kernel launches round-robin across that many
+    /// compute streams (stream 0 plus `streams - 1` created ones), so
+    /// concurrent kernels hit the UM runtime from different
+    /// [`StreamId`]s — the configuration the `(stream, allocation)`
+    /// engine keying exists for.
+    pub fn with_opts(plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> AppCtx {
         let mut um = UmRuntime::new(plat);
-        if trace {
+        if opts.trace {
             um.enable_trace();
         }
         if variant.auto() {
             um.enable_auto();
         }
+        let mut streams = StreamSet::new();
+        let mut compute = vec![StreamId::DEFAULT];
+        for _ in 1..opts.streams.max(1) {
+            compute.push(streams.create());
+        }
         AppCtx {
             um,
-            streams: StreamSet::new(),
+            streams,
             variant,
+            compute,
+            next_launch: 0,
             kernel_time: Ns::ZERO,
             kernel_times: Vec::new(),
             pending_gate: None,
@@ -186,27 +235,27 @@ impl AppCtx {
     }
 
     pub fn now(&self) -> Ns {
-        self.streams.now(StreamId::Default)
+        self.streams.now(StreamId::DEFAULT)
     }
 
     /// Host-side op on the default stream timeline.
     pub fn host_write(&mut self, id: AllocId, range: crate::mem::PageRange) {
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let out = self.um.host_access(id, range, true, t);
-        self.streams.advance_to(StreamId::Default, out.done);
+        self.streams.advance_to(StreamId::DEFAULT, out.done);
     }
 
     pub fn host_read(&mut self, id: AllocId, range: crate::mem::PageRange) {
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let out = self.um.host_access(id, range, false, t);
-        self.streams.advance_to(StreamId::Default, out.done);
+        self.streams.advance_to(StreamId::DEFAULT, out.done);
     }
 
     pub fn advise(&mut self, id: AllocId, advise: crate::um::Advise) {
         let range = self.um.space.get(id).full();
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.mem_advise(id, range, advise, t);
-        self.streams.advance_to(StreamId::Default, done);
+        self.streams.advance_to(StreamId::DEFAULT, done);
     }
 
     /// Prefetch on the background stream (paper §III-A3: inputs are
@@ -215,52 +264,60 @@ impl AppCtx {
     /// these transfers *inside* its measured window.
     pub fn prefetch_background(&mut self, id: AllocId, dst: Loc) {
         let range = self.um.space.get(id).full();
-        let t = self.streams.now(StreamId::Background);
+        let t = self.streams.now(StreamId::BACKGROUND);
         let done = self.um.prefetch_async(id, range, dst, t);
-        self.streams.advance_to(StreamId::Background, done);
+        self.streams.advance_to(StreamId::BACKGROUND, done);
         self.pending_gate = Some(self.pending_gate.map_or(done, |g| g.max(done)));
     }
 
     /// Prefetch on the default stream (results back to the host).
     pub fn prefetch_default(&mut self, id: AllocId, dst: Loc) {
         let range = self.um.space.get(id).full();
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.prefetch_async(id, range, dst, t);
-        self.streams.advance_to(StreamId::Default, done);
+        self.streams.advance_to(StreamId::DEFAULT, done);
     }
 
     /// Explicit `cudaMemcpy`s (Explicit variant only).
     pub fn memcpy_h2d(&mut self, dst: AllocId) {
         let bytes = self.um.space.get(dst).size;
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.memcpy_h2d(dst, bytes, t);
-        self.streams.advance_to(StreamId::Default, done);
+        self.streams.advance_to(StreamId::DEFAULT, done);
     }
 
     pub fn memcpy_d2h(&mut self, src: AllocId) {
         let bytes = self.um.space.get(src).size;
-        let t = self.streams.now(StreamId::Default);
+        let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.memcpy_d2h(src, bytes, t);
-        self.streams.advance_to(StreamId::Default, done);
+        self.streams.advance_to(StreamId::DEFAULT, done);
     }
 
-    /// Launch a kernel on the default stream. If a background prefetch
-    /// is in flight, the kernel is *launched* now (the measured window
-    /// opens) but executes only once its data has arrived — exactly the
-    /// concurrent-launch pattern of §III-A3, where the wait shows up in
-    /// the GPU kernel execution time.
+    /// Launch a kernel on the next compute stream (round-robin; always
+    /// the default stream when `RunOpts::streams == 1`). If a
+    /// background prefetch is in flight, the kernel is *launched* now
+    /// (the measured window opens) but executes only once its data has
+    /// arrived — exactly the concurrent-launch pattern of §III-A3,
+    /// where the wait shows up in the GPU kernel execution time.
     pub fn launch(&mut self, spec: &KernelSpec) -> Ns {
-        let start = self.streams.now(StreamId::Default);
+        let stream = self.compute[self.next_launch % self.compute.len()];
+        self.next_launch += 1;
+        let start = self.streams.now(stream);
         let exec_start = match self.pending_gate.take() {
             Some(gate) => start.max(gate),
             None => start,
         };
-        let (end, _phases) = KernelExec::run(&mut self.um, spec, exec_start);
-        self.streams.advance_to(StreamId::Default, end);
+        let (end, _phases) = KernelExec::run_on(&mut self.um, spec, stream, exec_start);
+        self.streams.advance_to(stream, end);
         let dur = end - start;
         self.kernel_time += dur;
         self.kernel_times.push(dur);
         dur
+    }
+
+    /// The compute streams `launch` rotates across (tests/inspection).
+    pub fn compute_streams(&self) -> &[StreamId] {
+        &self.compute
     }
 
     /// `cudaDeviceSynchronize`.
@@ -390,8 +447,15 @@ pub trait UmApp: Send {
     fn footprint(&self) -> Bytes;
     /// PJRT artifact validating this app's numerics (see `runtime`).
     fn artifact(&self) -> &'static str;
-    /// Execute one full benchmark run.
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult;
+    /// Execute one full benchmark run with explicit [`RunOpts`].
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult;
+    /// Execute one run on the default single-stream wiring (the
+    /// paper's configuration). Provided wrapper over
+    /// [`UmApp::run_with`]; the differential oracle test pins the two
+    /// entry points bit-identical at `streams == 1`.
+    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
+        self.run_with(plat, variant, &RunOpts::traced(trace))
+    }
 }
 
 #[cfg(test)]
@@ -427,6 +491,53 @@ mod tests {
         assert!(ctx.um.auto_engine().is_some());
         let ctx = AppCtx::new(&intel_pascal(), Variant::Um, false);
         assert!(ctx.um.auto_engine().is_none());
+    }
+
+    #[test]
+    fn run_opts_default_is_single_stream() {
+        let o = RunOpts::default();
+        assert_eq!(o.streams, 1);
+        assert!(!o.trace);
+        assert!(RunOpts::traced(true).trace);
+    }
+
+    #[test]
+    fn launch_rotates_across_compute_streams() {
+        use crate::gpu::stream::StreamId;
+        let ctx = AppCtx::with_opts(
+            &intel_pascal(),
+            Variant::Um,
+            &RunOpts { trace: false, streams: 3 },
+        );
+        // Stream 1 is the background prefetch stream; compute streams
+        // are 0 plus freshly created ones.
+        assert_eq!(ctx.compute_streams(), &[StreamId(0), StreamId(2), StreamId(3)]);
+        let single = AppCtx::new(&intel_pascal(), Variant::Um, false);
+        assert_eq!(single.compute_streams(), &[StreamId::DEFAULT]);
+    }
+
+    #[test]
+    fn multi_stream_launches_hit_distinct_streams() {
+        use crate::gpu::{Access, KernelSpec, Phase};
+        let mut ctx = AppCtx::with_opts(
+            &intel_pascal(),
+            Variant::Um,
+            &RunOpts { trace: false, streams: 2 },
+        );
+        let id = ctx.um.malloc_managed("x", 4 * crate::util::units::MIB);
+        let full = ctx.um.space.get(id).full();
+        ctx.host_write(id, full);
+        let spec = KernelSpec {
+            name: "k",
+            phases: vec![Phase { name: "p", accesses: vec![Access::read(id, full)], flops: 1.0 }],
+        };
+        for _ in 0..4 {
+            ctx.launch(&spec);
+        }
+        let m = &ctx.um.metrics;
+        assert_eq!(m.per_stream[0].gpu_accesses, 2, "launches 0 and 2");
+        assert_eq!(m.per_stream[2].gpu_accesses, 2, "launches 1 and 3");
+        assert_eq!(m.per_stream[1].gpu_accesses, 0, "background stream idle");
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::platform::PlatformSpec;
 use crate::um::{Advise, Loc};
 use crate::util::units::Bytes;
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// DRAM sweeps per FFT execution (cuFFT uses large radices; ~2-3
 /// Stockham passes for these sizes).
@@ -138,8 +138,8 @@ impl UmApp for FftConv {
         "conv_fft"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
         let name: &'static str = self.plan.name();
 
         if variant == Variant::Explicit {

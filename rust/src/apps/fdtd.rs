@@ -19,7 +19,7 @@ use crate::platform::PlatformSpec;
 use crate::um::{Advise, Loc};
 use crate::util::units::{Bytes, KIB};
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// Timesteps (CUDA sample default radius-4 solver runs few steps; kept
 /// low so first-touch migration stays visible, as in the paper).
@@ -77,8 +77,8 @@ impl UmApp for Fdtd3d {
         "fdtd_step"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
         let ab = self.array_bytes();
 
         if variant == Variant::Explicit {

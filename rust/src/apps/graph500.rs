@@ -15,7 +15,7 @@ use crate::um::{Advise, Loc};
 use crate::util::rng::Rng;
 use crate::util::units::Bytes;
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// Edges per vertex (Graph500 edgefactor).
 const EDGE_FACTOR: u64 = 16;
@@ -116,8 +116,8 @@ impl UmApp for Graph500 {
         "bfs_level"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
         let mut rng = Rng::new(self.seed);
 
         if variant == Variant::Explicit {

@@ -18,7 +18,7 @@ use crate::platform::PlatformSpec;
 use crate::um::{Advise, Loc};
 use crate::util::units::Bytes;
 
-use super::common::{AppCtx, RunResult, UmApp, Variant};
+use super::common::{AppCtx, RunOpts, RunResult, UmApp, Variant};
 
 /// GEMM tile width assumed by the pass model.
 const TILE: f64 = 128.0;
@@ -68,8 +68,8 @@ impl UmApp for MatMul {
         "matmul"
     }
 
-    fn run(&self, plat: &PlatformSpec, variant: Variant, trace: bool) -> RunResult {
-        let mut ctx = AppCtx::new(plat, variant, trace);
+    fn run_with(&self, plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> RunResult {
+        let mut ctx = AppCtx::with_opts(plat, variant, opts);
         let mb = self.mat_bytes();
 
         if variant == Variant::Explicit {

@@ -31,4 +31,4 @@ pub mod graph500;
 pub mod conv;
 pub mod fdtd;
 
-pub use common::{AppCtx, AppId, Regime, RunResult, UmApp, Variant};
+pub use common::{AppCtx, AppId, Regime, RunOpts, RunResult, UmApp, Variant};

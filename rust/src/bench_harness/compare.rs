@@ -1,0 +1,290 @@
+//! Decision-quality trajectory: build the machine-readable
+//! `json/suite.json` record and diff it against a committed baseline
+//! (`umbra suite --compare <baseline.json>`), failing on regression
+//! beyond a tolerance — the ROADMAP "suite-scale auto trajectory" gate
+//! that CI runs so `um::auto` decision quality cannot silently rot
+//! across PRs.
+//!
+//! Compared fields (per `UM Auto` cell):
+//!
+//! * `auto_prediction_accuracy` — hit / (hit + mispredicted) bytes;
+//!   higher is better; `null` means nothing resolved ("n/a").
+//! * `auto_prediction_coverage` — confident consultations /
+//!   consultations; higher is better.
+//! * `auto_misprediction_ratio` — mispredicted / prefetched bytes
+//!   (the normalized "mispredicted bytes" figure); lower is better.
+
+use crate::apps::Variant;
+use crate::coordinator::Suite;
+use crate::um::PredictorKind;
+use crate::util::jsonout::Json;
+
+/// Build the `json/suite.json` document for a finished suite: one
+/// record per cell with kernel time, the decision-quality ratios, and
+/// the per-stream counter slices (`--streams` runs report pattern /
+/// prediction decisions per stream). Cells are sorted for stable
+/// diffs.
+pub fn suite_json(suite: &Suite, predictor: PredictorKind, reps: usize, streams: u32) -> Json {
+    let mut cells: Vec<_> = suite.results.iter().collect();
+    cells.sort_by_key(|(c, _)| {
+        (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name())
+    });
+    let mut json_cells = Vec::new();
+    for (cell, r) in cells {
+        let m = &r.last.metrics;
+        let stream_rows: Vec<Json> = m
+            .active_streams()
+            .map(|(i, s)| {
+                Json::obj(vec![
+                    ("stream", Json::Int(i as u64)),
+                    ("gpu_accesses", Json::Int(s.gpu_accesses)),
+                    ("host_accesses", Json::Int(s.host_accesses)),
+                    ("fault_groups", Json::Int(s.fault_groups)),
+                    ("auto_decisions", Json::Int(s.auto_decisions)),
+                    ("auto_predictions", Json::Int(s.auto_predictions)),
+                    ("auto_pattern_flips", Json::Int(s.auto_pattern_flips)),
+                    ("auto_prefetched_bytes", Json::Int(s.auto_prefetched_bytes)),
+                ])
+            })
+            .collect();
+        json_cells.push(Json::obj(vec![
+            ("platform", Json::str(cell.platform.name())),
+            ("regime", Json::str(cell.regime.name())),
+            ("app", Json::str(cell.app.name())),
+            ("variant", Json::str(cell.variant.name())),
+            ("kernel_ms_mean", Json::Num(r.kernel_time.mean.as_ms())),
+            ("kernel_ms_std", Json::Num(r.kernel_time.std.as_ms())),
+            ("auto_decisions", Json::Int(m.auto_decisions)),
+            ("auto_prefetched_bytes", Json::Int(m.auto_prefetched_bytes)),
+            ("auto_prefetch_hit_bytes", Json::Int(m.auto_prefetch_hit_bytes)),
+            ("auto_mispredicted_bytes", Json::Int(m.auto_mispredicted_prefetch_bytes)),
+            ("auto_misprediction_ratio", Json::Num(m.misprediction_ratio())),
+            ("auto_prediction_accuracy", Json::Num(m.prediction_accuracy())),
+            ("auto_prediction_coverage", Json::Num(m.prediction_coverage())),
+            ("streams", Json::Arr(stream_rows)),
+        ]));
+    }
+    Json::obj(vec![
+        ("predictor", Json::str(predictor.name())),
+        ("reps", Json::Int(reps as u64)),
+        ("streams", Json::Int(streams as u64)),
+        ("cells", Json::Arr(json_cells)),
+    ])
+}
+
+/// Outcome of a decision-quality comparison.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    /// `UM Auto` cells present in both documents.
+    pub checked: usize,
+    /// `UM Auto` cells the *baseline* contained — when this is
+    /// non-zero but `checked` is zero, the current run dropped all the
+    /// coverage the gate exists for (e.g. ran without `--with-auto`)
+    /// and callers must fail rather than pass vacuously.
+    pub baseline_auto_cells: usize,
+    /// Human-readable regression descriptions (empty = gate passes).
+    pub regressions: Vec<String>,
+}
+
+/// The four-field identity of one suite cell.
+fn cell_key(cell: &Json) -> Option<(String, String, String, String)> {
+    Some((
+        cell.get("platform")?.as_str()?.to_string(),
+        cell.get("regime")?.as_str()?.to_string(),
+        cell.get("app")?.as_str()?.to_string(),
+        cell.get("variant")?.as_str()?.to_string(),
+    ))
+}
+
+/// Diff `current` against `baseline` (both `suite.json` documents);
+/// a quality drop beyond `tol` on any compared field of any `UM Auto`
+/// cell present in both is a regression. `null` ("n/a") baseline
+/// fields are skipped; a cell whose accuracy *became* `null` while the
+/// baseline had a value regresses (the predictor stopped resolving).
+pub fn compare_decision_quality(
+    current: &Json,
+    baseline: &Json,
+    tol: f64,
+) -> Result<CompareOutcome, String> {
+    let auto_name = Variant::UmAuto.name();
+    let cells_of = |doc: &Json, which: &str| -> Result<Vec<Json>, String> {
+        Ok(doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{which}: no \"cells\" array — not a suite.json document"))?
+            .to_vec())
+    };
+    let cur = cells_of(current, "current")?;
+    let base = cells_of(baseline, "baseline")?;
+
+    let mut out = CompareOutcome::default();
+    for b in &base {
+        let Some(key) = cell_key(b) else { continue };
+        if key.3 != auto_name {
+            continue;
+        }
+        out.baseline_auto_cells += 1;
+        let Some(c) = cur.iter().find(|c| cell_key(c).as_ref() == Some(&key)) else {
+            continue; // matrix changed; absence is not a quality signal
+        };
+        out.checked += 1;
+        let label = format!("{}/{}/{}", key.0, key.1, key.2);
+        // Higher-is-better ratios: accuracy, coverage.
+        for field in ["auto_prediction_accuracy", "auto_prediction_coverage"] {
+            let was = b.get(field).and_then(Json::as_f64);
+            let now = c.get(field).and_then(Json::as_f64);
+            match (was, now) {
+                (Some(was), Some(now)) if was - now > tol => {
+                    out.regressions
+                        .push(format!("{label}: {field} fell {was:.4} -> {now:.4} (tol {tol})"));
+                }
+                (Some(was), None) => {
+                    out.regressions
+                        .push(format!("{label}: {field} was {was:.4}, now unresolved (n/a)"));
+                }
+                _ => {}
+            }
+        }
+        // Lower-is-better: normalized mispredicted bytes.
+        let was = b.get("auto_misprediction_ratio").and_then(Json::as_f64);
+        let now = c.get("auto_misprediction_ratio").and_then(Json::as_f64);
+        if let (Some(was), Some(now)) = (was, now) {
+            if now - was > tol {
+                out.regressions.push(format!(
+                    "{label}: auto_misprediction_ratio rose {was:.4} -> {now:.4} (tol {tol})"
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{AppId, Regime};
+    use crate::coordinator::SuiteConfig;
+
+    fn cell(acc: Json, cov: Json, mis: f64) -> Json {
+        Json::obj(vec![
+            ("platform", Json::str("Intel-Pascal")),
+            ("regime", Json::str("in-memory")),
+            ("app", Json::str("BS")),
+            ("variant", Json::str("UM Auto")),
+            ("auto_prediction_accuracy", acc),
+            ("auto_prediction_coverage", cov),
+            ("auto_misprediction_ratio", Json::Num(mis)),
+        ])
+    }
+
+    fn doc(cells: Vec<Json>) -> Json {
+        Json::obj(vec![("cells", Json::Arr(cells))])
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let d = doc(vec![cell(Json::Num(0.8), Json::Num(0.5), 0.1)]);
+        let o = compare_decision_quality(&d, &d, 0.05).unwrap();
+        assert_eq!(o.checked, 1);
+        assert!(o.regressions.is_empty(), "{:?}", o.regressions);
+    }
+
+    #[test]
+    fn accuracy_drop_beyond_tolerance_regresses() {
+        let base = doc(vec![cell(Json::Num(0.8), Json::Num(0.5), 0.1)]);
+        let cur = doc(vec![cell(Json::Num(0.6), Json::Num(0.5), 0.1)]);
+        let o = compare_decision_quality(&cur, &base, 0.05).unwrap();
+        assert_eq!(o.regressions.len(), 1);
+        assert!(o.regressions[0].contains("auto_prediction_accuracy"));
+        // Within tolerance: fine.
+        let near = doc(vec![cell(Json::Num(0.76), Json::Num(0.5), 0.1)]);
+        assert!(compare_decision_quality(&near, &base, 0.05).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn misprediction_rise_regresses_and_improvement_passes() {
+        let base = doc(vec![cell(Json::Num(0.8), Json::Num(0.5), 0.1)]);
+        let worse = doc(vec![cell(Json::Num(0.8), Json::Num(0.5), 0.3)]);
+        let o = compare_decision_quality(&worse, &base, 0.05).unwrap();
+        assert_eq!(o.regressions.len(), 1);
+        assert!(o.regressions[0].contains("auto_misprediction_ratio"));
+        let better = doc(vec![cell(Json::Num(0.95), Json::Num(0.9), 0.0)]);
+        assert!(compare_decision_quality(&better, &base, 0.05).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn null_baseline_skips_but_newly_null_current_regresses() {
+        // Baseline "n/a" (writer renders NaN as null): nothing to hold
+        // the current run to.
+        let base = doc(vec![cell(Json::Null, Json::Num(0.5), 0.1)]);
+        let cur = doc(vec![cell(Json::Num(0.2), Json::Num(0.5), 0.1)]);
+        assert!(compare_decision_quality(&cur, &base, 0.05).unwrap().regressions.is_empty());
+        // The reverse — predictions stopped resolving — is a regression.
+        let base = doc(vec![cell(Json::Num(0.8), Json::Num(0.5), 0.1)]);
+        let cur = doc(vec![cell(Json::Null, Json::Num(0.5), 0.1)]);
+        let o = compare_decision_quality(&cur, &base, 0.05).unwrap();
+        assert_eq!(o.regressions.len(), 1);
+        assert!(o.regressions[0].contains("unresolved"));
+    }
+
+    #[test]
+    fn non_auto_and_unmatched_cells_are_ignored() {
+        let mut um = cell(Json::Num(0.1), Json::Num(0.1), 0.9);
+        if let Json::Obj(fields) = &mut um {
+            for (k, v) in fields.iter_mut() {
+                if k == "variant" {
+                    *v = Json::str("UM");
+                }
+            }
+        }
+        let base = doc(vec![um.clone(), cell(Json::Num(0.8), Json::Num(0.5), 0.1)]);
+        let cur = doc(vec![um]); // auto cell missing from current
+        let o = compare_decision_quality(&cur, &base, 0.05).unwrap();
+        assert_eq!(o.checked, 0);
+        assert!(o.regressions.is_empty());
+        // …but the dropped coverage is reported so the CLI gate can
+        // refuse to pass vacuously.
+        assert_eq!(o.baseline_auto_cells, 1);
+    }
+
+    #[test]
+    fn malformed_documents_error() {
+        assert!(compare_decision_quality(&Json::Null, &Json::Null, 0.05).is_err());
+        let bad = Json::obj(vec![("x", Json::Int(1))]);
+        assert!(compare_decision_quality(&doc(vec![]), &bad, 0.05).is_err());
+    }
+
+    #[test]
+    fn suite_json_carries_decision_quality_and_streams() {
+        // A tiny real suite run through the builder; parse back and
+        // check the schema the compare gate consumes.
+        let config = SuiteConfig {
+            apps: vec![AppId::Bs],
+            platforms: vec![crate::platform::PlatformId::IntelPascal],
+            variants: vec![Variant::UmAuto],
+            regimes: vec![Regime::InMemory],
+            reps: 1,
+            streams: 2,
+            ..Default::default()
+        };
+        let suite = Suite::run(&config);
+        let json = suite_json(&suite, PredictorKind::Learned, 1, 2);
+        let back = Json::parse(&json.render()).unwrap();
+        assert_eq!(back.get("streams").and_then(Json::as_f64), Some(2.0));
+        let cells = back.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.get("variant").and_then(Json::as_str), Some("UM Auto"));
+        assert!(c.get("auto_misprediction_ratio").is_some());
+        let streams = c.get("streams").and_then(Json::as_arr).unwrap();
+        assert!(
+            streams.len() >= 2,
+            "two compute streams must both report counters, got {}",
+            streams.len()
+        );
+        // Self-compare of a real document always passes.
+        let o = compare_decision_quality(&back, &back, 0.01).unwrap();
+        assert_eq!(o.checked, 1);
+        assert!(o.regressions.is_empty());
+    }
+}

@@ -336,12 +336,22 @@ pub fn fig_auto(reps: usize) -> Report {
 /// [`fig_auto`] with an explicit `um::auto` predictor mode (the
 /// `umbra auto --predictor {heuristic,learned}` entry point).
 pub fn fig_auto_with(reps: usize, predictor: PredictorKind) -> Report {
+    fig_auto_opts(reps, predictor, 1)
+}
+
+/// [`fig_auto_with`] plus the `--streams` knob: with `streams > 1`
+/// kernel launches rotate across that many compute streams, and the
+/// attached `json/suite.json` document reports the engine's per-stream
+/// pattern/prediction counters (the `(stream, allocation)` keying made
+/// observable).
+pub fn fig_auto_opts(reps: usize, predictor: PredictorKind, streams: u32) -> Report {
     let platforms = vec![PlatformId::IntelPascal, PlatformId::P9Volta];
     let config = SuiteConfig {
         platforms: platforms.clone(),
         variants: Variant::AUTO_STUDY.to_vec(),
         reps,
         predictor,
+        streams,
         ..Default::default()
     };
     let suite = Suite::run(&config);
@@ -425,7 +435,9 @@ pub fn fig_auto_with(reps: usize, predictor: PredictorKind) -> Report {
             text.push('\n');
         }
     }
-    Report::new("auto_vs_tuned", text).with_csv("auto_vs_tuned", csv)
+    Report::new("auto_vs_tuned", text)
+        .with_csv("auto_vs_tuned", csv)
+        .with_json("suite", super::compare::suite_json(&suite, predictor, reps, streams))
 }
 
 /// "Predictor vs. heuristic": `UM Auto` under the learned delta-history
@@ -451,10 +463,11 @@ pub fn fig_predictor(reps: usize) -> Report {
     // not once per mode.
     let heur = run(PredictorKind::Heuristic, vec![Variant::Um, Variant::UmAuto]);
     let learn = run(PredictorKind::Learned, vec![Variant::UmAuto]);
-    // A cell with no resolved predictions has NaN accuracy: n/a, never
-    // a flattering 100%.
-    let pct = |x: f64| if x.is_finite() { format!("{:.0}%", x * 100.0) } else { "n/a".into() };
-    let frac = |x: f64| if x.is_finite() { format!("{x:.4}") } else { "n/a".into() };
+    // A cell with no resolved predictions has NaN accuracy: n/a in the
+    // report, "-" in the CSV, never a literal NaN or a flattering 100%
+    // (shared NaN-safe helpers; regression-tested in `um::metrics`).
+    let pct = crate::um::metrics::fmt_pct;
+    let frac = crate::um::metrics::fmt_frac;
 
     let mut text = String::new();
     let mut csv = Csv::new(vec![

@@ -8,7 +8,9 @@
 pub mod timer;
 pub mod figures;
 pub mod ablate;
+pub mod compare;
 pub mod report;
 
+pub use compare::{compare_decision_quality, suite_json, CompareOutcome};
 pub use report::{write_all, Report};
 pub use timer::BenchTimer;

@@ -4,18 +4,22 @@ use std::fs;
 use std::path::Path;
 
 use crate::util::csvout::Csv;
+use crate::util::jsonout::Json;
 
-/// One regenerated table/figure: human text + named CSV series.
+/// One regenerated table/figure: human text + named CSV series +
+/// optional machine-readable JSON documents (the decision-quality
+/// trajectory rides here).
 #[derive(Clone, Debug)]
 pub struct Report {
     pub name: &'static str,
     pub text: String,
     pub csvs: Vec<(String, Csv)>,
+    pub jsons: Vec<(String, Json)>,
 }
 
 impl Report {
     pub fn new(name: &'static str, text: String) -> Report {
-        Report { name, text, csvs: Vec::new() }
+        Report { name, text, csvs: Vec::new(), jsons: Vec::new() }
     }
 
     pub fn with_csv(mut self, name: &str, csv: Csv) -> Report {
@@ -23,12 +27,21 @@ impl Report {
         self
     }
 
-    /// Write `<out>/<name>.txt` and `<out>/csv/<csvname>.csv`.
+    pub fn with_json(mut self, name: &str, json: Json) -> Report {
+        self.jsons.push((name.to_string(), json));
+        self
+    }
+
+    /// Write `<out>/<name>.txt`, `<out>/csv/<csvname>.csv` and
+    /// `<out>/json/<jsonname>.json`.
     pub fn write(&self, out: &Path) -> std::io::Result<()> {
         fs::create_dir_all(out)?;
         fs::write(out.join(format!("{}.txt", self.name)), &self.text)?;
         for (name, csv) in &self.csvs {
             csv.write(&out.join("csv").join(format!("{name}.csv")))?;
+        }
+        for (name, json) in &self.jsons {
+            json.write(&out.join("json").join(format!("{name}.json")))?;
         }
         Ok(())
     }
@@ -69,10 +82,13 @@ mod tests {
         let _ = fs::remove_dir_all(&dir);
         let mut csv = Csv::new(vec!["a"]);
         csv.row(vec!["1"]);
-        let r = Report::new("t", "hello\n".into()).with_csv("t_series", csv);
+        let r = Report::new("t", "hello\n".into())
+            .with_csv("t_series", csv)
+            .with_json("t_doc", Json::obj(vec![("k", Json::Int(1))]));
         r.write(&dir).unwrap();
         assert_eq!(fs::read_to_string(dir.join("t.txt")).unwrap(), "hello\n");
         assert!(dir.join("csv/t_series.csv").exists());
+        assert!(dir.join("json/t_doc.json").exists());
         let _ = fs::remove_dir_all(&dir);
     }
 }

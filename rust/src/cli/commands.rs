@@ -4,11 +4,12 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::apps::{AppId, Regime, Variant};
-use crate::bench_harness::{ablate, figures, report::write_all};
-use crate::coordinator::{run_cell, run_cell_on, Cell, Suite, SuiteConfig};
+use crate::apps::{AppId, Regime, RunOpts, Variant};
+use crate::bench_harness::{ablate, compare, figures, report::write_all};
+use crate::coordinator::{run_cell, run_cell_opts, Cell, Suite, SuiteConfig};
 use crate::platform::PlatformId;
 use crate::trace::TimeSeries;
+use crate::um::metrics::fmt_pct;
 use crate::um::PredictorKind;
 use crate::util::jsonout::Json;
 use crate::util::table::TextTable;
@@ -22,11 +23,12 @@ umbra — Unified-Memory Behavior Reproduction & Analysis
 USAGE:
   umbra list
   umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
-       [--predictor PRED]
+       [--predictor PRED] [--streams N]
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
+       [--streams N] [--with-auto] [--compare BASELINE.json] [--tolerance T]
   umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
   umbra table 1 [--out DIR]
-  umbra auto [--reps N] [--out DIR] [--predictor PRED] [--compare]
+  umbra auto [--reps N] [--out DIR] [--predictor PRED] [--streams N] [--compare]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
   umbra validate [--artifacts DIR]
@@ -44,8 +46,14 @@ USAGE:
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
   the chosen predictor mode, and `umbra auto --compare` the learned-vs-
-  heuristic predictor study. `umbra suite --out` also writes the
-  decision-quality trajectory to json/suite.json.
+  heuristic predictor study. `--streams N` rotates kernel launches
+  across N compute streams (engine state is keyed per stream; per-
+  stream counters land in json/suite.json). `umbra suite --out` writes
+  the decision-quality trajectory to json/suite.json; `umbra suite
+  --with-auto` adds the UM Auto cells, and `umbra suite --compare
+  BASELINE.json` diffs accuracy/coverage/mispredicted-bytes against a
+  committed baseline, failing on regression beyond --tolerance
+  (default 0.05).
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
@@ -88,6 +96,16 @@ fn parse_predictor(args: &Args) -> Result<PredictorKind> {
     }
 }
 
+/// Optional `--streams N` (default 1 — the paper's single-stream
+/// wiring; N > 1 rotates kernel launches across N compute streams).
+fn parse_streams(args: &Args) -> Result<u32> {
+    let n = args.flag_usize("streams", 1).map_err(|e| anyhow!(e))?;
+    if n == 0 {
+        bail!("--streams: need at least one stream");
+    }
+    Ok(n as u32)
+}
+
 fn cmd_list() -> Result<()> {
     let mut t = TextTable::new(vec!["app", "description"]).left(0).left(1);
     for a in AppId::ALL {
@@ -105,9 +123,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
     let trace = args.flag_bool("trace");
     let predictor = parse_predictor(args)?;
+    let streams = parse_streams(args)?;
     let mut plat = cell.platform.spec();
     plat.um.auto_predictor = predictor;
-    let r = run_cell_on(cell, reps, trace, &plat);
+    let r = run_cell_opts(cell, reps, &RunOpts { trace, streams }, &plat);
     println!("{}", cell.label());
     println!(
         "  kernel time: {} ± {} (n={}, min {}, max {})",
@@ -138,16 +157,27 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.auto_advises,
             m.auto_early_dropped_bytes
         );
-        let acc = m.prediction_accuracy();
-        let acc = if acc.is_finite() { format!("{:.0}%", acc * 100.0) } else { "n/a".into() };
         println!(
-            "  predictor ({}): accuracy {}, coverage {:.0}%, {} learned / {} fallback predictions",
+            "  predictor ({}): accuracy {}, coverage {}, {} learned / {} fallback predictions",
             predictor.name(),
-            acc,
-            m.prediction_coverage() * 100.0,
+            fmt_pct(m.prediction_accuracy()),
+            fmt_pct(m.prediction_coverage()),
             m.auto_learned_predictions,
             m.auto_fallback_predictions
         );
+    }
+    if streams > 1 {
+        for (i, s) in m.active_streams() {
+            println!(
+                "  stream {i}: {} gpu accesses, {} fault groups, {} auto decisions, {} predictions, {} flips, {} B prefetched",
+                s.gpu_accesses,
+                s.fault_groups,
+                s.auto_decisions,
+                s.auto_predictions,
+                s.auto_pattern_flips,
+                s.auto_prefetched_bytes
+            );
+        }
     }
     if trace {
         let b = r.breakdown;
@@ -166,6 +196,13 @@ fn cmd_suite(args: &Args) -> Result<()> {
         threads: args.flag_usize("threads", 0).map_err(|e| anyhow!(e))?,
         paper_matrix: !args.flag_bool("full-matrix"),
         predictor: parse_predictor(args)?,
+        streams: parse_streams(args)?,
+        // The decision-quality gate needs UM Auto cells in the matrix.
+        variants: if args.flag_bool("with-auto") {
+            Variant::ALL_WITH_AUTO.to_vec()
+        } else {
+            Variant::ALL.to_vec()
+        },
         ..Default::default()
     };
     let n = config.cells().len();
@@ -196,6 +233,11 @@ fn cmd_suite(args: &Args) -> Result<()> {
             }
         }
     }
+    // The decision-quality trajectory (ROADMAP "suite-scale auto
+    // trajectory"): accuracy/coverage/mispredicted bytes per cell plus
+    // per-stream counters, machine-readable so PR-over-PR regressions
+    // show up — written with --out, gated with --compare.
+    let json = compare::suite_json(&suite, config.predictor, reps, config.streams);
     if let Some(out) = args.flag("out") {
         std::fs::create_dir_all(out)?;
         let mut header: Vec<String> =
@@ -208,7 +250,6 @@ fn cmd_suite(args: &Args) -> Result<()> {
         let mut csv = crate::util::csvout::Csv::new(header);
         let mut cells: Vec<_> = suite.results.iter().collect();
         cells.sort_by_key(|(c, _)| (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name()));
-        let mut json_cells = Vec::new();
         for (cell, r) in cells {
             let mut row = vec![
                 cell.platform.name().to_string(),
@@ -220,34 +261,45 @@ fn cmd_suite(args: &Args) -> Result<()> {
             ];
             row.extend(r.last.metrics.auto_csv_row());
             csv.row(row);
-            let m = &r.last.metrics;
-            json_cells.push(Json::obj(vec![
-                ("platform", Json::str(cell.platform.name())),
-                ("regime", Json::str(cell.regime.name())),
-                ("app", Json::str(cell.app.name())),
-                ("variant", Json::str(cell.variant.name())),
-                ("kernel_ms_mean", Json::Num(r.kernel_time.mean.as_ms())),
-                ("kernel_ms_std", Json::Num(r.kernel_time.std.as_ms())),
-                ("auto_decisions", Json::Int(m.auto_decisions)),
-                ("auto_prefetched_bytes", Json::Int(m.auto_prefetched_bytes)),
-                ("auto_prefetch_hit_bytes", Json::Int(m.auto_prefetch_hit_bytes)),
-                ("auto_mispredicted_bytes", Json::Int(m.auto_mispredicted_prefetch_bytes)),
-                ("auto_misprediction_ratio", Json::Num(m.misprediction_ratio())),
-                ("auto_prediction_accuracy", Json::Num(m.prediction_accuracy())),
-                ("auto_prediction_coverage", Json::Num(m.prediction_coverage())),
-            ]));
         }
         csv.write(&Path::new(out).join("csv/suite.csv"))?;
-        // The decision-quality trajectory (ROADMAP "suite-scale auto
-        // trajectory"): auto_mispredicted_bytes / auto_prefetched_bytes
-        // per app, machine-readable so PR-over-PR regressions show up.
-        let json = Json::obj(vec![
-            ("predictor", Json::str(config.predictor.name())),
-            ("reps", Json::Int(reps as u64)),
-            ("cells", Json::Arr(json_cells)),
-        ]);
         json.write(&Path::new(out).join("json/suite.json"))?;
         eprintln!("wrote {out}/csv/suite.csv and {out}/json/suite.json");
+    }
+    if let Some(baseline_path) = args.flag("compare") {
+        let tol: f64 = match args.flag("tolerance") {
+            None => 0.05,
+            Some(v) => v.parse().map_err(|_| anyhow!("--tolerance: bad number '{v}'"))?,
+        };
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow!("--compare: cannot read '{baseline_path}': {e}"))?;
+        let baseline = Json::parse(&text)
+            .map_err(|e| anyhow!("--compare: '{baseline_path}' is not valid JSON: {e}"))?;
+        let outcome = compare::compare_decision_quality(&json, &baseline, tol)
+            .map_err(|e| anyhow!("--compare: {e}"))?;
+        if outcome.checked == 0 && outcome.baseline_auto_cells > 0 {
+            // Never pass vacuously: the baseline has UM Auto coverage
+            // the current run did not reproduce.
+            bail!(
+                "--compare: baseline has {} UM Auto cell(s) but this run matched none \
+                 (did you forget --with-auto, or change the matrix?)",
+                outcome.baseline_auto_cells
+            );
+        }
+        if outcome.regressions.is_empty() {
+            println!(
+                "decision quality: {} UM Auto cell(s) within tolerance {tol} of {baseline_path}",
+                outcome.checked
+            );
+        } else {
+            for r in &outcome.regressions {
+                eprintln!("REGRESSION: {r}");
+            }
+            bail!(
+                "decision quality regressed in {} place(s) vs {baseline_path}",
+                outcome.regressions.len()
+            );
+        }
     }
     Ok(())
 }
@@ -291,19 +343,26 @@ fn cmd_table(args: &Args) -> Result<()> {
 }
 
 /// The auto-vs-hand-tuned study (`um::auto` policy engine), in either
-/// predictor mode; `--compare` runs the learned-vs-heuristic predictor
-/// study instead.
+/// predictor mode; `--streams N` rotates kernel launches across N
+/// compute streams and reports the engine's per-stream counters in
+/// `json/suite.json`; `--compare` runs the learned-vs-heuristic
+/// predictor study instead.
 fn cmd_auto(args: &Args) -> Result<()> {
     let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
     let report = if args.flag_bool("compare") {
         figures::fig_predictor(reps)
     } else {
-        figures::fig_auto_with(reps, parse_predictor(args)?)
+        figures::fig_auto_opts(reps, parse_predictor(args)?, parse_streams(args)?)
     };
     println!("{}", report.text);
     if let Some(out) = args.flag("out") {
         report.write(Path::new(out))?;
-        eprintln!("wrote {out}/{}.txt (+{} csv)", report.name, report.csvs.len());
+        eprintln!(
+            "wrote {out}/{}.txt (+{} csv, {} json)",
+            report.name,
+            report.csvs.len(),
+            report.jsons.len()
+        );
     }
     Ok(())
 }
@@ -472,6 +531,17 @@ mod tests {
         assert!(parse_predictor(&a).is_err());
         assert!(USAGE.contains("--predictor"), "usage documents the flag");
         assert!(USAGE.contains("--compare"), "usage documents the study");
+    }
+
+    #[test]
+    fn streams_flag_parses_and_rejects() {
+        assert_eq!(parse_streams(&args("run")).unwrap(), 1, "default single stream");
+        assert_eq!(parse_streams(&args("run --streams 2")).unwrap(), 2);
+        assert!(parse_streams(&args("run --streams 0")).is_err());
+        assert!(parse_streams(&args("run --streams nope")).is_err());
+        assert!(USAGE.contains("--streams"), "usage documents the knob");
+        assert!(USAGE.contains("--with-auto"), "usage documents the suite flag");
+        assert!(USAGE.contains("--tolerance"), "usage documents the gate knob");
     }
 
     #[test]

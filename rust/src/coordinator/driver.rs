@@ -1,6 +1,6 @@
 //! One benchmark cell: (app, platform, variant, regime) × repetitions.
 
-use crate::apps::{AppId, Regime, RunResult, Variant};
+use crate::apps::{AppId, Regime, RunOpts, RunResult, Variant};
 use crate::platform::{PlatformId, PlatformSpec};
 use crate::trace::Breakdown;
 use crate::util::stats::Summary;
@@ -51,6 +51,12 @@ pub fn run_cell(cell: Cell, reps: usize, trace: bool) -> CellResult {
 /// the suite/CLI select the `um::auto` predictor mode or sweep driver
 /// policy without touching the calibrated platform tables.
 pub fn run_cell_on(cell: Cell, reps: usize, trace: bool, plat: &PlatformSpec) -> CellResult {
+    run_cell_opts(cell, reps, &RunOpts::traced(trace), plat)
+}
+
+/// [`run_cell_on`] with full [`RunOpts`] (the `--streams` knob rides
+/// in here next to tracing).
+pub fn run_cell_opts(cell: Cell, reps: usize, opts: &RunOpts, plat: &PlatformSpec) -> CellResult {
     assert!(reps >= 1);
     let app = cell.app.build_for(cell.platform, cell.regime);
     let mut totals = Vec::with_capacity(reps);
@@ -58,8 +64,8 @@ pub fn run_cell_on(cell: Cell, reps: usize, trace: bool, plat: &PlatformSpec) ->
     let mut last: Option<RunResult> = None;
     for rep in 0..reps {
         // Trace only the final repetition (traces are large).
-        let want_trace = trace && rep == reps - 1;
-        let r = app.run(plat, cell.variant, want_trace);
+        let rep_opts = RunOpts { trace: opts.trace && rep == reps - 1, ..*opts };
+        let r = app.run_with(plat, cell.variant, &rep_opts);
         totals.push(r.kernel_time);
         launches.extend(r.kernel_times.iter().copied());
         last = Some(r);

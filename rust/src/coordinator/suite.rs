@@ -2,12 +2,12 @@
 
 use std::collections::HashMap;
 
-use crate::apps::{AppId, Regime, Variant};
+use crate::apps::{AppId, Regime, RunOpts, Variant};
 use crate::platform::PlatformId;
 use crate::um::PredictorKind;
 use crate::util::pool::Pool;
 
-use super::driver::{run_cell_on, Cell, CellResult};
+use super::driver::{run_cell_opts, Cell, CellResult};
 
 /// What to run.
 #[derive(Clone, Debug)]
@@ -28,6 +28,9 @@ pub struct SuiteConfig {
     /// Predictor mode for `UM Auto` cells (ignored by every other
     /// variant).
     pub predictor: PredictorKind,
+    /// Compute streams kernel launches rotate across (1 = the paper's
+    /// single-stream wiring; the `--streams` knob).
+    pub streams: u32,
 }
 
 impl Default for SuiteConfig {
@@ -42,6 +45,7 @@ impl Default for SuiteConfig {
             threads: 0,
             paper_matrix: true,
             predictor: PredictorKind::default(),
+            streams: 1,
         }
     }
 }
@@ -84,7 +88,7 @@ impl Suite {
     pub fn run(config: &SuiteConfig) -> Suite {
         let cells = config.cells();
         let reps = config.reps;
-        let trace = config.trace;
+        let opts = RunOpts { trace: config.trace, streams: config.streams.max(1) };
         let predictor = config.predictor;
         let pool = if config.threads == 0 {
             Pool::with_default_size(16)
@@ -94,7 +98,7 @@ impl Suite {
         let results = pool.map(cells, move |cell| {
             let mut plat = cell.platform.spec();
             plat.um.auto_predictor = predictor;
-            (cell, run_cell_on(cell, reps, trace, &plat))
+            (cell, run_cell_opts(cell, reps, &opts, &plat))
         });
         Suite { results: results.into_iter().collect() }
     }

@@ -1,5 +1,6 @@
 //! Phased kernel model and its execution against the UM runtime.
 
+use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, PageRange};
 use crate::trace::TraceKind;
 use crate::um::{AccessOutcome, UmRuntime};
@@ -76,15 +77,28 @@ pub struct PhaseResult {
 pub struct KernelExec;
 
 impl KernelExec {
-    /// Execute `spec` starting at `now`; returns (end-time, per-phase
-    /// results). The paper's "GPU kernel execution time" is
-    /// `end - now`.
+    /// Execute `spec` on the default stream starting at `now`. See
+    /// [`KernelExec::run_on`].
     pub fn run(um: &mut UmRuntime, spec: &KernelSpec, now: Ns) -> (Ns, Vec<PhaseResult>) {
+        Self::run_on(um, spec, StreamId::DEFAULT, now)
+    }
+
+    /// Execute `spec` on `stream` starting at `now`; returns (end-time,
+    /// per-phase results). The paper's "GPU kernel execution time" is
+    /// `end - now`. The stream threads through every touched range's
+    /// resolution ([`UmRuntime::gpu_access_on`]) so the `um::auto`
+    /// engine observes which stream drove each access.
+    pub fn run_on(
+        um: &mut UmRuntime,
+        spec: &KernelSpec,
+        stream: StreamId,
+        now: Ns,
+    ) -> (Ns, Vec<PhaseResult>) {
         let start = now;
         let mut t = now;
         let mut results = Vec::with_capacity(spec.phases.len());
         for phase in &spec.phases {
-            let r = Self::run_phase(um, phase, t);
+            let r = Self::run_phase(um, phase, stream, t);
             t = r.end;
             results.push(r);
         }
@@ -92,7 +106,7 @@ impl KernelExec {
         (t, results)
     }
 
-    fn run_phase(um: &mut UmRuntime, phase: &Phase, now: Ns) -> PhaseResult {
+    fn run_phase(um: &mut UmRuntime, phase: &Phase, stream: StreamId, now: Ns) -> PhaseResult {
         // 1. Resolve data: faults, migrations, remote mappings. The
         //    phase cannot do useful work until its data is available
         //    (massively-parallel kernels stall globally on fault storms;
@@ -102,7 +116,8 @@ impl KernelExec {
         let mut remote_bytes: Bytes = 0;
         let mut local_bytes: f64 = 0.0;
         for a in &phase.accesses {
-            let out: AccessOutcome = um.gpu_access(a.alloc, a.range, a.kind.writes(), data_ready);
+            let out: AccessOutcome =
+                um.gpu_access_on(stream, a.alloc, a.range, a.kind.writes(), data_ready);
             data_ready = data_ready.max(out.done);
             stall += out.fault_stall + out.transfer_wait;
             remote_bytes += (out.remote_bytes as f64 * a.dram_passes) as Bytes;

@@ -12,4 +12,4 @@ pub mod kernel;
 pub mod stream;
 
 pub use kernel::{Access, AccessKind, KernelExec, KernelSpec, Phase, PhaseResult};
-pub use stream::StreamSet;
+pub use stream::{StreamId, StreamSet};

@@ -1,44 +1,80 @@
 //! CUDA streams: per-stream clocks with synchronization primitives.
 //!
-//! The benchmark variants use two streams the way the paper does
-//! (§III-A3): prefetches of inputs run on a *background* stream while
-//! the kernel launches on the *default* stream; result prefetches run on
-//! the default stream (ordered after the kernel).
+//! The benchmark variants use streams the way the paper does (§III-A3):
+//! prefetches of inputs run on a *background* stream while the kernel
+//! launches on the *default* stream; result prefetches run on the
+//! default stream (ordered after the kernel). A [`StreamSet`] starts
+//! with exactly those two streams and can grow arbitrarily many more
+//! ([`StreamSet::create`], `cudaStreamCreate`) — the `--streams` knob
+//! rotates kernel launches across extra compute streams, and the
+//! `um::auto` engine keys its observer/predictor state by the
+//! originating [`StreamId`] so concurrent streams never pollute each
+//! other's access histories.
 
 use crate::sim::Clock;
 use crate::util::units::Ns;
 
-/// Stream identifiers.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StreamId {
-    Default,
-    Background,
+/// A stable stream handle: an index into the owning [`StreamSet`].
+/// Cheap to copy, hashable (the `um::auto` engine keys state by
+/// `(StreamId, AllocId)`), ordered (deterministic iteration).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub u32);
+
+impl StreamId {
+    /// The default stream (stream 0): kernel launches, host-side ops.
+    pub const DEFAULT: StreamId = StreamId(0);
+    /// The background prefetch stream of §III-A3 (stream 1).
+    pub const BACKGROUND: StreamId = StreamId(1);
+
+    /// Index into the owning set's clock vector.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
 }
 
-/// A pair of stream clocks plus device-wide synchronization.
-#[derive(Clone, Debug, Default)]
+/// A growable set of stream clocks plus device-wide synchronization.
+#[derive(Clone, Debug)]
 pub struct StreamSet {
-    default: Clock,
-    background: Clock,
+    clocks: Vec<Clock>,
+}
+
+impl Default for StreamSet {
+    fn default() -> Self {
+        StreamSet::new()
+    }
 }
 
 impl StreamSet {
+    /// The paper's two-stream setup: [`StreamId::DEFAULT`] and
+    /// [`StreamId::BACKGROUND`].
     pub fn new() -> StreamSet {
-        StreamSet::default()
+        StreamSet { clocks: vec![Clock::new(), Clock::new()] }
+    }
+
+    /// `cudaStreamCreate`: a fresh stream starting at t=0; its handle
+    /// stays valid for the set's lifetime.
+    pub fn create(&mut self) -> StreamId {
+        let id = StreamId(self.clocks.len() as u32);
+        self.clocks.push(Clock::new());
+        id
+    }
+
+    /// Number of streams (including default + background).
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Never true: the default and background streams always exist.
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
     }
 
     pub fn now(&self, s: StreamId) -> Ns {
-        match s {
-            StreamId::Default => self.default.now(),
-            StreamId::Background => self.background.now(),
-        }
+        self.clocks[s.index()].now()
     }
 
     pub fn advance_to(&mut self, s: StreamId, t: Ns) {
-        match s {
-            StreamId::Default => self.default.advance_to(t),
-            StreamId::Background => self.background.advance_to(t),
-        };
+        self.clocks[s.index()].advance_to(t);
     }
 
     /// `cudaStreamSynchronize`: host waits for the stream; returns its
@@ -49,9 +85,10 @@ impl StreamSet {
 
     /// `cudaDeviceSynchronize`: all streams drain.
     pub fn device_sync(&mut self) -> Ns {
-        let t = self.default.now().max(self.background.now());
-        self.default.advance_to(t);
-        self.background.advance_to(t);
+        let t = self.clocks.iter().map(Clock::now).max().unwrap_or(Ns::ZERO);
+        for c in &mut self.clocks {
+            c.advance_to(t);
+        }
         t
     }
 
@@ -69,30 +106,54 @@ mod tests {
     #[test]
     fn streams_advance_independently() {
         let mut s = StreamSet::new();
-        s.advance_to(StreamId::Background, Ns(100));
-        assert_eq!(s.now(StreamId::Default), Ns(0));
-        assert_eq!(s.now(StreamId::Background), Ns(100));
+        s.advance_to(StreamId::BACKGROUND, Ns(100));
+        assert_eq!(s.now(StreamId::DEFAULT), Ns(0));
+        assert_eq!(s.now(StreamId::BACKGROUND), Ns(100));
     }
 
     #[test]
     fn device_sync_joins() {
         let mut s = StreamSet::new();
-        s.advance_to(StreamId::Background, Ns(100));
-        s.advance_to(StreamId::Default, Ns(40));
+        s.advance_to(StreamId::BACKGROUND, Ns(100));
+        s.advance_to(StreamId::DEFAULT, Ns(40));
         let t = s.device_sync();
         assert_eq!(t, Ns(100));
-        assert_eq!(s.now(StreamId::Default), Ns(100));
+        assert_eq!(s.now(StreamId::DEFAULT), Ns(100));
     }
 
     #[test]
     fn wait_event_ordering() {
         let mut s = StreamSet::new();
-        s.advance_to(StreamId::Background, Ns(70));
-        s.wait(StreamId::Default, StreamId::Background);
-        assert_eq!(s.now(StreamId::Default), Ns(70));
+        s.advance_to(StreamId::BACKGROUND, Ns(70));
+        s.wait(StreamId::DEFAULT, StreamId::BACKGROUND);
+        assert_eq!(s.now(StreamId::DEFAULT), Ns(70));
         // waiting on an earlier stream is a no-op
-        s.advance_to(StreamId::Default, Ns(90));
-        s.wait(StreamId::Default, StreamId::Background);
-        assert_eq!(s.now(StreamId::Default), Ns(90));
+        s.advance_to(StreamId::DEFAULT, Ns(90));
+        s.wait(StreamId::DEFAULT, StreamId::BACKGROUND);
+        assert_eq!(s.now(StreamId::DEFAULT), Ns(90));
+    }
+
+    #[test]
+    fn created_streams_get_stable_fresh_handles() {
+        let mut s = StreamSet::new();
+        let a = s.create();
+        let b = s.create();
+        assert_eq!(a, StreamId(2), "default + background come first");
+        assert_eq!(b, StreamId(3));
+        assert_eq!(s.len(), 4);
+        s.advance_to(a, Ns(55));
+        assert_eq!(s.now(a), Ns(55));
+        assert_eq!(s.now(b), Ns(0), "created streams are independent");
+        assert_eq!(s.now(StreamId::DEFAULT), Ns(0));
+    }
+
+    #[test]
+    fn device_sync_joins_created_streams_too() {
+        let mut s = StreamSet::new();
+        let a = s.create();
+        s.advance_to(a, Ns(500));
+        let t = s.device_sync();
+        assert_eq!(t, Ns(500));
+        assert_eq!(s.now(StreamId::BACKGROUND), Ns(500));
     }
 }

@@ -17,6 +17,7 @@
 //!   cross-access decisions — auto ReadMostly set/unset, ahead-of-access
 //!   predictive prefetch, and eviction hints.
 
+use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, PageRange, Residency, PAGE_SIZE};
 use crate::trace::TraceKind;
 use crate::um::policy::Advise;
@@ -35,12 +36,31 @@ impl UmRuntime {
         !self.plat.cpu_can_access_gpu || self.space.managed_bytes() <= self.dev.capacity()
     }
 
+    /// The engine's `dma_h2d` headroom cap for bulk transfers issued at
+    /// `now`, or `None` when it does not apply. Armed only once the
+    /// engine has observed more than one stream: single-stream runs
+    /// keep the original free-memory-only sizing bit-identical, while
+    /// concurrent prefetch streams stop serializing behind one stream's
+    /// bulk transfers (ROADMAP "escalation sizing from link
+    /// occupancy").
+    fn auto_link_cap(&self, now: Ns) -> Option<u32> {
+        let eng = self.auto.as_ref()?;
+        if !eng.multi_stream() {
+            return None;
+        }
+        Some(self.link_headroom_pages(eng.cfg.max_link_backlog, now))
+    }
+
     /// Stream escalation for one homogeneous host-resident run (called
     /// from the GPU access path when the engine is attached). Falls back
     /// to plain `migrate_or_map_h2d` for short runs and hand-advised
-    /// state.
+    /// state. The bulk size consults free device memory *and* — under
+    /// multi-stream concurrency — `dma_h2d` occupancy, so one stream's
+    /// escalation never queues unbounded transfer time in front of the
+    /// other streams.
     pub(in crate::um) fn auto_migrate_h2d(
         &mut self,
+        stream: StreamId,
         id: AllocId,
         run: PageRange,
         class: Class,
@@ -63,11 +83,15 @@ impl UmRuntime {
         let probe = PageRange::new(run.start, run.start + cfg.probe_pages);
         let mut out = self.migrate_or_map_h2d(id, probe, class, write, now);
 
-        // Escalate the remainder that fits *without evicting*: bulk
-        // transfer at prefetch efficiency, no further fault groups.
+        // Escalate the remainder that fits *without evicting* and
+        // within the link backlog budget: bulk transfer at prefetch
+        // efficiency, no further fault groups.
         let rest = PageRange::new(probe.end, run.end);
-        let free_pages = (self.dev.free() / PAGE_SIZE) as u32;
-        let bulk = PageRange::new(rest.start, rest.start + rest.len().min(free_pages));
+        let mut cap_pages = (self.dev.free() / PAGE_SIZE) as u32;
+        if let Some(link) = self.auto_link_cap(out.done) {
+            cap_pages = cap_pages.min(link);
+        }
+        let bulk = PageRange::new(rest.start, rest.start + rest.len().min(cap_pages));
         if !bulk.is_empty() {
             let t0 = out.done;
             let t = self.prefetch_run_to_gpu(id, bulk, Residency::Host, t0);
@@ -77,6 +101,9 @@ impl UmRuntime {
             }
             self.metrics.auto_prefetched_bytes += bulk.bytes();
             self.metrics.auto_decisions += 1;
+            let sm = self.metrics.stream_mut(stream);
+            sm.auto_decisions += 1;
+            sm.auto_prefetched_bytes += bulk.bytes();
             out.h2d_bytes += bulk.bytes();
             out.transfer_wait += t.saturating_sub(t0);
             out.done = t;
@@ -94,10 +121,13 @@ impl UmRuntime {
 
     /// The post-access policy step: observe, classify, actuate. Called
     /// at the tail of every managed `gpu_access` when the engine is
-    /// attached. The engine is detached during actuation so runtime
-    /// calls it issues can never re-enter it.
+    /// attached; `stream` keys the observer/predictor state so each
+    /// stream's window only ever sees its own accesses. The engine is
+    /// detached during actuation so runtime calls it issues can never
+    /// re-enter it.
     pub(in crate::um) fn auto_post_access(
         &mut self,
+        stream: StreamId,
         id: AllocId,
         range: PageRange,
         write: bool,
@@ -107,48 +137,34 @@ impl UmRuntime {
         let cfg = eng.cfg;
         let now = out.done;
 
-        // ---- observe + classify ------------------------------------
-        let st = eng.allocs.entry(id).or_default();
+        // Cross-stream consumption: this access also consumes any
+        // overlapping prefetch predicted from *another* stream's
+        // history (the entry gate already waited on it). Credit the
+        // hit and retire the entry there, so multi-stream runs never
+        // TTL-expire data that was in fact used. No-op single-stream.
+        for ((s, a), st) in eng.state.iter_mut() {
+            if *a == id && *s != stream {
+                let o = st.history.audit_consumed(range);
+                self.metrics.auto_prefetch_hit_bytes += o.prefetch_hit_bytes;
+                self.metrics.auto_mispredicted_prefetch_bytes += o.mispredicted_bytes;
+            }
+        }
+
+        // ---- observe + classify (per-(stream, allocation) state) ----
+        let st = eng.state.entry((stream, id)).or_default();
         let obs = st.history.observe(range, write, out.h2d_bytes, cfg.window, cfg.pending_ttl);
         self.metrics.auto_prefetch_hit_bytes += obs.prefetch_hit_bytes;
         self.metrics.auto_mispredicted_prefetch_bytes += obs.mispredicted_bytes;
         let flipped = st.tracker.update(classify(st.history.window()), cfg.hysteresis);
         if flipped {
             self.metrics.auto_pattern_flips += 1;
+            self.metrics.stream_mut(stream).auto_pattern_flips += 1;
         }
         let pat = st.tracker.current();
         // Learned mode: train the delta-history tables on this access
         // (online, from the same fault-stream tap the classifier uses).
         if cfg.predict && cfg.predictor == PredictorKind::Learned {
             st.predictor.observe(range, &cfg);
-        }
-
-        // ---- decide -------------------------------------------------
-        // ReadMostly pays off for data that is re-read and never
-        // written: straight repeats (in-memory) or a read-only stream
-        // cycling through an oversubscribed device, where duplicates
-        // later evict for free (§II-D / the Intel §IV-B win).
-        let advise_ready = match pat {
-            Pattern::ReadMostly => st.history.read_repeats + 1 >= cfg.advise_after_repeats,
-            Pattern::StreamingOversub => {
-                st.history.window().len() >= cfg.advise_after_repeats as usize
-            }
-            _ => false,
-        };
-        let mut set_read_mostly = false;
-        let mut unset_read_mostly = false;
-        if st.advised_read_mostly && write {
-            // The workload started writing a range we duplicated:
-            // back off before invalidation churn accumulates.
-            unset_read_mostly = true;
-            st.advised_read_mostly = false;
-        } else if !st.advised_read_mostly
-            && !st.history.writes_ever
-            && advise_ready
-            && self.auto_advise_safe()
-        {
-            set_read_mostly = true;
-            st.advised_read_mostly = true;
         }
 
         // Predictive prefetch: ranked predicted ranges with confidence
@@ -180,6 +196,36 @@ impl UmRuntime {
                 }
             }
         };
+        let read_repeats = st.history.read_repeats;
+        let window_len = st.history.window().len();
+
+        // ---- decide (merge view over all streams + shared state) ----
+        // ReadMostly pays off for data that is re-read and never
+        // written: straight repeats (in-memory) or a read-only stream
+        // cycling through an oversubscribed device, where duplicates
+        // later evict for free (§II-D / the Intel §IV-B win). The
+        // trigger is this stream's pattern; the never-written fact and
+        // the applied advise are allocation-scoped (merge view) — a
+        // writer on any other stream vetoes the duplicate.
+        let advise_ready = match pat {
+            Pattern::ReadMostly => read_repeats + 1 >= cfg.advise_after_repeats,
+            Pattern::StreamingOversub => window_len >= cfg.advise_after_repeats as usize,
+            _ => false,
+        };
+        let writes_any = eng.writes_ever(id);
+        let advise_safe = self.auto_advise_safe();
+        let shared = eng.shared.entry(id).or_default();
+        let mut set_read_mostly = false;
+        let mut unset_read_mostly = false;
+        if shared.advised_read_mostly && write {
+            // The workload started writing a range we duplicated:
+            // back off before invalidation churn accumulates.
+            unset_read_mostly = true;
+            shared.advised_read_mostly = false;
+        } else if !shared.advised_read_mostly && !writes_any && advise_ready && advise_safe {
+            set_read_mostly = true;
+            shared.advised_read_mostly = true;
+        }
 
         let streaming = pat == Pattern::StreamingOversub;
 
@@ -189,31 +235,47 @@ impl UmRuntime {
             self.mem_advise(id, full, Advise::ReadMostly, now);
             self.metrics.auto_advises += 1;
             self.metrics.auto_decisions += 1;
+            self.metrics.stream_mut(stream).auto_decisions += 1;
         }
         if unset_read_mostly {
             self.mem_advise(id, full, Advise::UnsetReadMostly, now);
             self.metrics.auto_advises += 1;
             self.metrics.auto_decisions += 1;
+            self.metrics.stream_mut(stream).auto_decisions += 1;
             // The engine is the only advise source in the UmAuto variant
             // (apps hand-advise only in UmAdvise/UmBoth, which never
             // attach it): once the last auto advise is withdrawn, hand
             // the driver's remote-map-under-pressure heuristics back —
             // `mem_advise` latches `advise_hints_active` and would
             // otherwise disable them for the rest of the run.
-            if eng.allocs.values().all(|s| !s.advised_read_mostly) {
+            if eng.shared.values().all(|s| !s.advised_read_mostly) {
                 self.advise_hints_active = false;
             }
         }
         let mut t_pred = now;
         for want in predictions {
-            let (pieces, ready) = self.auto_prefetch_ahead(id, want, t_pred);
+            // Speculative transfers yield to the link: under
+            // multi-stream concurrency the issue size is capped by the
+            // remaining dma_h2d backlog budget (None = single stream,
+            // original free-memory-only sizing).
+            let link_cap = if eng.multi_stream() {
+                Some(self.link_headroom_pages(cfg.max_link_backlog, t_pred))
+            } else {
+                None
+            };
+            let (pieces, ready) = self.auto_prefetch_ahead(id, want, link_cap, t_pred);
             if pieces.is_empty() {
                 continue;
             }
             let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
             self.metrics.auto_prefetched_bytes += issued;
             self.metrics.auto_decisions += 1;
-            let history = &mut eng.allocs.get_mut(&id).expect("entry created above").history;
+            let sm = self.metrics.stream_mut(stream);
+            sm.auto_decisions += 1;
+            sm.auto_predictions += 1;
+            sm.auto_prefetched_bytes += issued;
+            let history =
+                &mut eng.state.get_mut(&(stream, id)).expect("entry created above").history;
             for piece in pieces {
                 history.push_pending(piece, ready);
             }
@@ -227,22 +289,18 @@ impl UmRuntime {
                 if dropped > 0 {
                     self.metrics.auto_early_dropped_bytes += dropped;
                     self.metrics.auto_decisions += 1;
+                    self.metrics.stream_mut(stream).auto_decisions += 1;
                 }
             }
             // … and protect hot (read-mostly) allocations from the
-            // stream's LRU churn by refreshing their recency. Gated on
-            // the pattern flip, not every access: re-touching a large
-            // hot allocation's full chunk range per streaming access
-            // would cost O(chunks) LRU pushes on the oversubscription
-            // hot path.
+            // stream's LRU churn by refreshing their recency. "Hot" is
+            // the merge view: read-mostly on *any* stream protects the
+            // buffer. Gated on the pattern flip, not every access:
+            // re-touching a large hot allocation's full chunk range per
+            // streaming access would cost O(chunks) LRU pushes on the
+            // oversubscription hot path.
             if flipped {
-                let hot: Vec<AllocId> = eng
-                    .allocs
-                    .iter()
-                    .filter(|(a, s)| **a != id && s.tracker.current() == Pattern::ReadMostly)
-                    .map(|(a, _)| *a)
-                    .collect();
-                for a in hot {
+                for a in eng.read_mostly_hot(id) {
                     let fa = self.space.get(a).full();
                     if !fa.is_empty() {
                         self.touch_chunks(a, fa, now);
@@ -478,6 +536,155 @@ mod tests {
         assert!(r.metrics.auto_advises >= 1, "Intel oversubscription: advise applied");
         assert!(r.metrics.auto_early_dropped_bytes > 0, "streamed-past duplicates dropped");
         r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn consumed_prediction_gates_before_it_retires() {
+        // Satellite audit (gate_for vs. observe ordering): an access
+        // that consumes a pending predictive prefetch must first wait
+        // for the prefetch's completion time — `gpu_access_on` applies
+        // the gate at entry, and only the post-access observe retires
+        // the pending entry. This pins the ordering.
+        let (mut r, a) = prepped(&intel_pascal(), 4 * MIB);
+        let want = PageRange::new(0, 16);
+        let ready = Ns::from_ms(5.0);
+        r.auto
+            .as_mut()
+            .unwrap()
+            .state
+            .entry((StreamId::DEFAULT, a))
+            .or_default()
+            .history
+            .push_pending(want, ready);
+        let out = r.gpu_access(a, want, false, Ns::ZERO);
+        assert!(out.done >= ready, "access waited for the in-flight data: {}", out.done);
+        assert!(out.transfer_wait >= ready, "wait attributed to transfer_wait");
+        assert_eq!(
+            r.metrics.auto_prefetch_hit_bytes,
+            want.bytes(),
+            "the same access consumed the prediction"
+        );
+        let eng = r.auto_engine().unwrap();
+        let st = &eng.state[&(StreamId::DEFAULT, a)];
+        assert_eq!(st.history.pending_count(), 0, "retired only after the gate applied");
+    }
+
+    #[test]
+    fn cross_stream_prediction_gates_and_retires() {
+        // The gate is the per-allocation merge view: stream 2 must wait
+        // for a transfer predicted from stream 0's history — and its
+        // access consumes that prediction (hit credited, entry retired
+        // from stream 0's pending list), so cross-stream consumption
+        // never TTL-expires into the mispredicted counter.
+        let (mut r, a) = prepped(&intel_pascal(), 4 * MIB);
+        let want = PageRange::new(0, 16);
+        let ready = Ns::from_ms(7.0);
+        r.auto
+            .as_mut()
+            .unwrap()
+            .state
+            .entry((StreamId::DEFAULT, a))
+            .or_default()
+            .history
+            .push_pending(want, ready);
+        let out = r.gpu_access_on(StreamId(2), a, want, false, Ns::ZERO);
+        assert!(out.done >= ready, "other stream gated too: {}", out.done);
+        assert_eq!(r.metrics.auto_prefetch_hit_bytes, want.bytes(), "cross-stream hit credited");
+        assert_eq!(r.metrics.auto_mispredicted_prefetch_bytes, 0);
+        let eng = r.auto_engine().unwrap();
+        let st = &eng.state[&(StreamId::DEFAULT, a)];
+        assert_eq!(st.history.pending_count(), 0, "retired from the predicting stream's list");
+    }
+
+    #[test]
+    fn link_headroom_shrinks_with_backlog() {
+        let mut r = UmRuntime::new(&intel_pascal());
+        let budget = Ns::from_ms(2.0);
+        let idle = r.link_headroom_pages(budget, Ns::ZERO);
+        assert!(idle > 0, "idle link has headroom");
+        // Queue ~1 s of transfer time: backlog >> budget, no headroom.
+        let one_second_of_bytes = r.plat.link.peak_bw as u64;
+        r.dma_h2d.transfer(Ns::ZERO, one_second_of_bytes, 1.0);
+        assert_eq!(r.link_headroom_pages(budget, Ns::ZERO), 0);
+        // Once "now" passes the backlog the headroom returns in full.
+        assert_eq!(r.link_headroom_pages(budget, Ns::from_secs(2.0)), idle);
+    }
+
+    #[test]
+    fn multi_stream_arms_link_headroom_cap() {
+        let size = 64 * MIB;
+        // Single-stream reference: the full remainder escalates (the
+        // cap must never bind — bit-identical to the original sizing).
+        let (mut solo, a) = prepped(&intel_pascal(), size);
+        let fa = solo.space.get(a).full();
+        solo.gpu_access(a, fa, false, Ns::ZERO);
+        let solo_bulk = solo.metrics.auto_prefetched_bytes;
+        assert!(!solo.auto_engine().unwrap().multi_stream());
+
+        // Same workload, but the engine has already seen a second
+        // stream: the bulk is sized by dma_h2d headroom as well.
+        let (mut multi, b) = prepped(&intel_pascal(), size);
+        multi.gpu_access_on(StreamId(2), b, PageRange::new(0, 1), false, Ns::ZERO);
+        assert!(multi.auto_engine().unwrap().multi_stream());
+        let fb = multi.space.get(b).full();
+        multi.gpu_access_on(StreamId::DEFAULT, b, fb, false, Ns::ZERO);
+        assert!(multi.metrics.auto_prefetched_bytes > 0, "capped, not disabled");
+        assert!(
+            multi.metrics.auto_prefetched_bytes < solo_bulk,
+            "link budget caps the bulk: {} vs solo {}",
+            multi.metrics.auto_prefetched_bytes,
+            solo_bulk
+        );
+        multi.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn writer_on_another_stream_vetoes_auto_read_mostly() {
+        // Merge view: stream 0's window is pure re-reads (ReadMostly),
+        // but stream 2 writes the same buffer — the allocation-scoped
+        // advise decision must see the writer and never duplicate.
+        let (mut r, a) = prepped(&intel_pascal(), 4 * MIB);
+        let full = r.space.get(a).full();
+        let s2 = StreamId(2);
+        let mut t = Ns::ZERO;
+        for _ in 0..6 {
+            t = r.gpu_access_on(StreamId::DEFAULT, a, full, false, t).done;
+            t = r.gpu_access_on(s2, a, full, true, t).done;
+        }
+        let eng = r.auto_engine().unwrap();
+        assert_eq!(eng.pattern_on(StreamId::DEFAULT, a), Pattern::ReadMostly);
+        assert_eq!(r.metrics.auto_advises, 0, "writer on stream 2 vetoes ReadMostly");
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.read_mostly()), 0);
+    }
+
+    #[test]
+    fn per_stream_counters_populated() {
+        let (mut r, a) = prepped(&intel_pascal(), 64 * MIB);
+        let full = r.space.get(a).full();
+        let half = PageRange::new(0, full.end / 2);
+        let rest = PageRange::new(full.end / 2, full.end);
+        let mut t = Ns::ZERO;
+        for _ in 0..4 {
+            t = r.gpu_access_on(StreamId::DEFAULT, a, half, false, t).done;
+            t = r.gpu_access_on(StreamId(2), a, rest, false, t).done;
+        }
+        let m = &r.metrics;
+        let s0 = &m.per_stream[0];
+        let s2 = &m.per_stream[2];
+        assert_eq!(s0.gpu_accesses, 4);
+        assert_eq!(s2.gpu_accesses, 4);
+        assert!(s0.host_accesses >= 1, "prepped()'s host init rides stream 0");
+        assert!(s0.fault_groups > 0 && s2.fault_groups > 0);
+        assert_eq!(
+            m.auto_decisions,
+            m.per_stream.iter().map(|s| s.auto_decisions).sum::<u64>(),
+            "per-stream decisions sum to the global counter"
+        );
+        assert_eq!(
+            m.auto_prefetched_bytes,
+            m.per_stream.iter().map(|s| s.auto_prefetched_bytes).sum::<u64>(),
+        );
     }
 
     #[test]

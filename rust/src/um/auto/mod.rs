@@ -6,11 +6,15 @@
 //! little on NVLink. No static hand-tuned variant is right everywhere —
 //! so this module closes the loop at runtime. It taps the fault/
 //! migration path ([`crate::um::fault`] / `UmRuntime::gpu_access`),
-//! maintains per-allocation sliding-window access histories
-//! ([`observer`]), classifies each allocation's pattern online
-//! ([`pattern`]) and actuates prefetch / advise / eviction hints
-//! ([`actuator`]). Enabled per run via `UmRuntime::enable_auto` — the
-//! `UM Auto` benchmark variant; all other variants are untouched.
+//! maintains sliding-window access histories keyed by
+//! **(stream, allocation)** ([`observer`]; concurrent streams never
+//! pollute each other's windows), classifies each stream's view of
+//! each allocation online ([`pattern`]) and actuates prefetch /
+//! advise / eviction hints ([`actuator`]) — prediction is per-stream,
+//! while allocation-scoped actuation (ReadMostly, eviction hints)
+//! consults a per-allocation *merge view* over all streams. Enabled
+//! per run via `UmRuntime::enable_auto` — the `UM Auto` benchmark
+//! variant; all other variants are untouched.
 //!
 //! ## Decision rules and the paper finding each encodes
 //!
@@ -53,8 +57,10 @@ pub mod observer;
 pub mod pattern;
 pub mod predictor;
 
-use crate::mem::AllocId;
+use crate::gpu::stream::StreamId;
+use crate::mem::{AllocId, PageRange};
 use crate::util::fxhash::FxHashMap;
+use crate::util::units::Ns;
 
 use super::runtime::UmRuntime;
 use observer::AllocHistory;
@@ -102,6 +108,15 @@ pub struct AutoConfig {
     pub group_pages: u32,
     /// Fault deltas per history signature (second-level depth).
     pub delta_history: usize,
+    /// Maximum `dma_h2d` backlog (queued transfer time beyond "now")
+    /// an engine bulk prefetch may grow the link queue to. Only
+    /// consulted once the engine has seen accesses from more than one
+    /// stream — single-stream runs keep the free-memory-only sizing
+    /// bit-identical to the original engine; under concurrency it
+    /// stops one stream's bulk escalation from serializing every other
+    /// stream's transfers behind it (ROADMAP "escalation sizing from
+    /// link occupancy").
+    pub max_link_backlog: Ns,
 }
 
 impl Default for AutoConfig {
@@ -121,47 +136,144 @@ impl Default for AutoConfig {
             min_confidence: 0.5,
             group_pages: 1024, // 64 MiB page groups
             delta_history: 2,
+            max_link_backlog: Ns::from_ms(2.0),
         }
     }
 }
 
-/// Per-allocation engine state: history + hysteresis tracker + learned
-/// predictor + what the engine has already actuated on this allocation.
+/// Per-(stream, allocation) engine state: the sliding-window history,
+/// the hysteresis tracker and the learned predictor all belong to one
+/// *stream's* view of one allocation — concurrent kernels with
+/// different patterns on the same buffer never pollute each other's
+/// windows or delta histories (the paper's §III-A3 concurrency).
 #[derive(Clone, Debug, Default)]
-pub(super) struct AllocPolicy {
+pub(super) struct StreamAllocPolicy {
     pub history: AllocHistory,
     pub tracker: PatternTracker,
     /// The online delta-history predictor (trained only in
     /// [`PredictorKind::Learned`] mode).
     pub predictor: LearnedPredictor,
+}
+
+/// Allocation-scoped engine state: actuations that apply to the whole
+/// buffer regardless of which stream motivated them (`cudaMemAdvise`
+/// is per-range, not per-stream).
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct AllocShared {
     /// ReadMostly currently applied by the engine (not by the app).
     pub advised_read_mostly: bool,
 }
 
 /// The policy engine attached to a [`UmRuntime`] (one per simulated
-/// process, covering all managed allocations).
+/// process). Prediction state is keyed by `(StreamId, AllocId)`;
+/// allocation-scoped actuation (advises, eviction hints) consults the
+/// per-allocation *merge view* over all streams' state.
 #[derive(Clone, Debug)]
 pub struct AutoEngine {
     /// The engine's tuning (fixed for the engine's lifetime).
     pub cfg: AutoConfig,
-    pub(super) allocs: FxHashMap<AllocId, AllocPolicy>,
+    /// Per-(stream, allocation) observer/predictor state.
+    pub(super) state: FxHashMap<(StreamId, AllocId), StreamAllocPolicy>,
+    /// Per-allocation actuation state (the merge-view target).
+    pub(super) shared: FxHashMap<AllocId, AllocShared>,
+    /// Distinct streams observed this run, ascending. More than one
+    /// arms the link-headroom sizing (`AutoConfig::max_link_backlog`).
+    pub(super) seen_streams: Vec<StreamId>,
 }
 
 impl AutoEngine {
     /// Build an engine with the given tuning (no allocations tracked
     /// yet; state accrues as accesses are observed).
     pub fn new(cfg: AutoConfig) -> AutoEngine {
-        AutoEngine { cfg, allocs: FxHashMap::default() }
+        AutoEngine {
+            cfg,
+            state: FxHashMap::default(),
+            shared: FxHashMap::default(),
+            seen_streams: Vec::new(),
+        }
     }
 
     /// Drop all learned state (new repetition); keeps the config.
     pub fn reset(&mut self) {
-        self.allocs.clear();
+        self.state.clear();
+        self.shared.clear();
+        self.seen_streams.clear();
     }
 
-    /// The stable pattern currently assigned to `id` (tests/inspection).
+    /// Record that `s` drove an observed access.
+    pub(super) fn note_stream(&mut self, s: StreamId) {
+        if let Err(i) = self.seen_streams.binary_search(&s) {
+            self.seen_streams.insert(i, s);
+        }
+    }
+
+    /// Whether more than one stream has driven accesses this run (the
+    /// gate for link-headroom-aware prefetch sizing; single-stream runs
+    /// stay bit-identical to the allocation-keyed engine).
+    pub fn multi_stream(&self) -> bool {
+        self.seen_streams.len() > 1
+    }
+
+    /// The stable pattern `stream` currently assigns to `id`.
+    pub fn pattern_on(&self, stream: StreamId, id: AllocId) -> Pattern {
+        self.state.get(&(stream, id)).map_or(Pattern::Unknown, |s| s.tracker.current())
+    }
+
+    /// The stable pattern of the lowest-numbered stream tracking `id` —
+    /// the single-stream view (tests/inspection; use
+    /// [`AutoEngine::pattern_on`] for a specific stream).
     pub fn pattern_of(&self, id: AllocId) -> Pattern {
-        self.allocs.get(&id).map_or(Pattern::Unknown, |s| s.tracker.current())
+        self.state
+            .iter()
+            .filter(|((_, a), _)| *a == id)
+            .min_by_key(|((s, _), _)| *s)
+            .map_or(Pattern::Unknown, |(_, st)| st.tracker.current())
+    }
+
+    // --- per-allocation merge view --------------------------------
+    //
+    // Allocation-scoped decisions (advises, eviction hints, in-flight
+    // gating) must see *every* stream's view of the buffer, while
+    // prediction stays per-stream. These fold over the whole state map
+    // (not `seen_streams` — state can exist for a stream before/
+    // without it driving a GPU access, e.g. hand-planted test state),
+    // O(streams x allocations), small; max/any folds are iteration-
+    // order independent, so FxHashMap order never leaks into results.
+
+    /// Any GPU write to `id` on any stream, ever (ReadMostly must
+    /// never be applied because one stream's window looks read-only
+    /// while another stream writes).
+    pub(super) fn writes_ever(&self, id: AllocId) -> bool {
+        self.state.iter().any(|((_, a), st)| *a == id && st.history.writes_ever)
+    }
+
+    /// The in-flight gate for an access to `range` of `id`: the latest
+    /// completion time among overlapping outstanding prefetches issued
+    /// from *any* stream's predictions — a transfer in flight gates
+    /// every stream that touches its pages, not just the one whose
+    /// history predicted it.
+    pub(super) fn gate_for(&self, id: AllocId, range: PageRange) -> Ns {
+        self.state
+            .iter()
+            .filter(|((_, a), _)| *a == id)
+            .map(|(_, st)| st.history.gate_for(range))
+            .max()
+            .unwrap_or(Ns::ZERO)
+    }
+
+    /// Allocations (ascending, deterministic) other than `exclude`
+    /// whose merged view is read-mostly hot on at least one stream —
+    /// the LRU-protection targets of the streaming eviction hint.
+    pub(super) fn read_mostly_hot(&self, exclude: AllocId) -> Vec<AllocId> {
+        let mut hot: Vec<AllocId> = self
+            .state
+            .iter()
+            .filter(|((_, a), st)| *a != exclude && st.tracker.current() == Pattern::ReadMostly)
+            .map(|((_, a), _)| *a)
+            .collect();
+        hot.sort_unstable();
+        hot.dedup();
+        hot
     }
 }
 

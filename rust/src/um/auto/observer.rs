@@ -8,6 +8,8 @@
 //! repeats) and audits outstanding predictive prefetches so the engine
 //! can report *mispredicted* bytes honestly.
 
+use std::collections::VecDeque;
+
 use crate::mem::PageRange;
 use crate::util::units::{Bytes, Ns};
 
@@ -36,11 +38,14 @@ struct Pending {
     age: u32,
 }
 
-/// Sliding-window history of one allocation's GPU accesses.
+/// Sliding-window history of one (stream, allocation)'s GPU accesses.
 #[derive(Clone, Debug, Default)]
 pub struct AllocHistory {
     /// Recent accesses, oldest first (bounded by the engine's window).
-    window: Vec<AccessRecord>,
+    /// A ring (`VecDeque`), not a `Vec`: the window pops its oldest
+    /// entry on every post-access step once full, and `Vec::remove(0)`
+    /// would memmove the whole window on the fault path each time.
+    window: VecDeque<AccessRecord>,
     /// Highest page index (exclusive) the GPU has touched so far.
     seen_end: u32,
     /// Any GPU write observed on this allocation, ever.
@@ -106,7 +111,7 @@ impl AllocHistory {
         });
 
         let wrapped = range.start < self.seen_end;
-        if let Some(last) = self.window.last() {
+        if let Some(last) = self.window.back() {
             if last.range == range && !last.write && !write {
                 self.read_repeats += 1;
             } else {
@@ -115,21 +120,53 @@ impl AllocHistory {
         }
         self.writes_ever |= write;
         self.seen_end = self.seen_end.max(range.end);
-        self.window.push(AccessRecord { range, write, h2d_bytes, wrapped });
+        self.window.push_back(AccessRecord { range, write, h2d_bytes, wrapped });
         if self.window.len() > window_cap.max(1) {
-            self.window.remove(0);
+            self.window.pop_front(); // O(1) ring pop, not Vec::remove(0)
         }
         obs
     }
 
+    /// Audit outstanding predictions against an access from *another*
+    /// stream: overlapping intersections are credited/split exactly as
+    /// in [`AllocHistory::observe`] (the foreign access did consume the
+    /// prefetched data, and the gate already waited on it), but
+    /// untouched entries are left un-aged — expiry cadence belongs to
+    /// the owning stream's own observation stream. Deliberately NOT
+    /// shared with `observe`'s audit pass: there, hits and aging happen
+    /// in one `retain_mut` sweep (a hit entry does not age that round),
+    /// and splitting the pass would change single-stream expiry timing.
+    pub fn audit_consumed(&mut self, range: PageRange) -> Observation {
+        let mut obs = Observation::default();
+        self.pending.retain_mut(|p| {
+            let lo = p.range.start.max(range.start);
+            let hi = p.range.end.min(range.end);
+            if lo >= hi {
+                return true; // untouched: keep, do not age
+            }
+            obs.prefetch_hit_bytes += PageRange::new(lo, hi).bytes();
+            let left = PageRange::new(p.range.start, lo);
+            let right = PageRange::new(hi, p.range.end);
+            let (rem, dropped) =
+                if left.len() >= right.len() { (left, right) } else { (right, left) };
+            obs.mispredicted_bytes += dropped.bytes();
+            if rem.is_empty() {
+                return false;
+            }
+            p.range = rem;
+            true
+        });
+        obs
+    }
+
     /// The window, oldest first (the classifier's input).
-    pub fn window(&self) -> &[AccessRecord] {
+    pub fn window(&self) -> &VecDeque<AccessRecord> {
         &self.window
     }
 
     /// The most recent access.
     pub fn last(&self) -> Option<&AccessRecord> {
-        self.window.last()
+        self.window.back()
     }
 
     /// Register an issued predictive prefetch for hit/miss auditing and
@@ -173,6 +210,25 @@ mod tests {
         assert_eq!(h.window().len(), 4);
         assert_eq!(h.window()[0].range, r(48, 56), "oldest surviving record");
         assert_eq!(h.last().unwrap().range, r(72, 80));
+    }
+
+    #[test]
+    fn window_stays_bounded_over_long_streams() {
+        // Regression for the O(n) `Vec::remove(0)` pop: the window is a
+        // ring, so a long fault stream neither grows the buffer nor
+        // reallocates it — `capacity` settles immediately and stays
+        // put for 100k observations.
+        let mut h = AllocHistory::default();
+        for i in 0..16u32 {
+            h.observe(r(i * 8, i * 8 + 8), false, 0, 8, 4);
+        }
+        let settled = h.window().capacity();
+        for i in 16..100_000u32 {
+            h.observe(r(i * 8, i * 8 + 8), false, 0, 8, 4);
+        }
+        assert_eq!(h.window().len(), 8, "len pinned to the configured cap");
+        assert_eq!(h.window().capacity(), settled, "ring never reallocates");
+        assert!(settled <= 16, "capacity stays near the cap, got {settled}");
     }
 
     #[test]
@@ -236,6 +292,29 @@ mod tests {
         h.push_pending(r(100, 120), Ns(500));
         let o = h.observe(r(90, 130), false, 0, 8, 2);
         assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
+        assert_eq!(h.pending_count(), 0);
+    }
+
+    #[test]
+    fn audit_consumed_credits_hits_without_aging() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(100, 120), Ns(500));
+        h.push_pending(r(500, 540), Ns(900));
+        // A foreign stream's access consumes the first prediction; the
+        // second is untouched and — unlike `observe` — does NOT age.
+        let o = h.audit_consumed(r(100, 120));
+        assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
+        assert_eq!(o.mispredicted_bytes, 0);
+        assert_eq!(h.pending_count(), 1, "consumed entry retired");
+        for _ in 0..10 {
+            h.audit_consumed(r(0, 8));
+        }
+        assert_eq!(h.pending_count(), 1, "foreign misses never age entries out");
+        // The owning stream's own observe still expires it on its own
+        // cadence (ttl 2: ages at each non-overlapping observation).
+        h.observe(r(0, 8), false, 0, 8, 2);
+        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        assert_eq!(o.mispredicted_bytes, r(500, 540).bytes());
         assert_eq!(h.pending_count(), 0);
     }
 

@@ -12,6 +12,8 @@
 //!   flips after the same new classification is observed on
 //!   `hysteresis` consecutive updates.
 
+use std::collections::VecDeque;
+
 use crate::mem::PageRange;
 use crate::util::units::Bytes;
 
@@ -65,23 +67,25 @@ impl Pattern {
     }
 }
 
-/// Classify a window of access records (oldest first). Pure function;
-/// see module docs for the outlier-robustness rationale.
-pub fn classify(window: &[AccessRecord]) -> Pattern {
+/// Classify a window of access records (oldest first; the observer's
+/// ring buffer). Pure function; see module docs for the
+/// outlier-robustness rationale.
+pub fn classify(window: &VecDeque<AccessRecord>) -> Pattern {
     if window.len() < 2 {
         return Pattern::Unknown;
     }
     // Streaming-oversubscribed: a recent wrapped (re-visiting) access
     // still had to migrate — the resident set does not hold the stream.
-    let recent = &window[window.len().saturating_sub(4)..];
-    if recent.iter().any(|r| r.wrapped && r.h2d_bytes > 0) {
+    if window.iter().rev().take(4).any(|r| r.wrapped && r.h2d_bytes > 0) {
         return Pattern::StreamingOversub;
     }
     // Read-mostly: the last three accesses re-read the same range.
     let last = window[window.len() - 1];
     if window.len() >= 3
-        && window[window.len() - 3..]
+        && window
             .iter()
+            .rev()
+            .take(3)
             .all(|r| r.range == last.range && !r.write)
     {
         return Pattern::ReadMostly;
@@ -89,10 +93,9 @@ pub fn classify(window: &[AccessRecord]) -> Pattern {
     // Majority stride vote over consecutive pairs. At least two pairs
     // must agree: a single ascending jump is not evidence of a stream
     // (one data point must never arm the prefetcher).
-    let strides: Vec<i64> = window
-        .windows(2)
-        .map(|w| w[1].range.start as i64 - w[0].range.start as i64)
-        .collect();
+    let pairs = || window.iter().zip(window.iter().skip(1));
+    let strides: Vec<i64> =
+        pairs().map(|(a, b)| b.range.start as i64 - a.range.start as i64).collect();
     let (mut modal, mut votes) = (0i64, 0usize);
     for &s in &strides {
         let c = strides.iter().filter(|&&x| x == s).count();
@@ -102,10 +105,9 @@ pub fn classify(window: &[AccessRecord]) -> Pattern {
     }
     if modal > 0 && votes >= 2 && 2 * votes >= strides.len() {
         // Among the modal pairs, contiguity decides sequential vs strided.
-        let contiguous = window
-            .windows(2)
-            .filter(|w| w[1].range.start as i64 - w[0].range.start as i64 == modal)
-            .all(|w| w[1].range.start == w[0].range.end);
+        let contiguous = pairs()
+            .filter(|(a, b)| b.range.start as i64 - a.range.start as i64 == modal)
+            .all(|(a, b)| b.range.start == a.range.end);
         return if contiguous { Pattern::Sequential } else { Pattern::Strided(modal as u32) };
     }
     Pattern::Random
@@ -165,13 +167,17 @@ mod tests {
     }
 
     /// Contiguous forward windows: [0,16) [16,32) [32,48) ...
-    fn sequential(n: usize, len: u32) -> Vec<AccessRecord> {
+    fn sequential(n: usize, len: u32) -> VecDeque<AccessRecord> {
         (0..n as u32).map(|i| rec(i * len, (i + 1) * len, false)).collect()
+    }
+
+    fn window(recs: Vec<AccessRecord>) -> VecDeque<AccessRecord> {
+        VecDeque::from(recs)
     }
 
     #[test]
     fn short_history_unknown() {
-        assert_eq!(classify(&[]), Pattern::Unknown);
+        assert_eq!(classify(&VecDeque::new()), Pattern::Unknown);
         assert_eq!(classify(&sequential(1, 16)), Pattern::Unknown);
     }
 
@@ -180,7 +186,7 @@ mod tests {
         // A single stride pair must never arm the prefetcher: two
         // coincidentally ascending random accesses stay Random.
         assert_ne!(classify(&sequential(2, 16)), Pattern::Sequential);
-        let w = vec![rec(500, 510, false), rec(600, 610, false)];
+        let w = window(vec![rec(500, 510, false), rec(600, 610, false)]);
         assert_eq!(classify(&w), Pattern::Random);
     }
 
@@ -190,34 +196,54 @@ mod tests {
     }
 
     #[test]
+    fn classify_is_layout_independent() {
+        // A ring whose storage has wrapped classifies identically to a
+        // freshly collected window with the same logical order (the
+        // observer's buffer wraps on every step once full).
+        let mut w = sequential(4, 16);
+        for i in 4..12u32 {
+            w.pop_front();
+            w.push_back(rec(i * 16, (i + 1) * 16, false));
+        }
+        let flat: VecDeque<AccessRecord> = w.iter().copied().collect();
+        assert_eq!(classify(&w), classify(&flat));
+        assert_eq!(classify(&w), Pattern::Sequential);
+    }
+
+    #[test]
     fn strided_stream() {
         // 8-page windows every 32 pages: stride 32, not contiguous.
-        let w: Vec<_> = (0..4).map(|i| rec(i * 32, i * 32 + 8, false)).collect();
+        let w: VecDeque<_> = (0..4).map(|i| rec(i * 32, i * 32 + 8, false)).collect();
         assert_eq!(classify(&w), Pattern::Strided(32));
     }
 
     #[test]
     fn random_stream() {
-        let w = vec![rec(500, 510, false), rec(3, 9, false), rec(260, 270, false), rec(90, 99, false)];
+        let w = window(vec![
+            rec(500, 510, false),
+            rec(3, 9, false),
+            rec(260, 270, false),
+            rec(90, 99, false),
+        ]);
         assert_eq!(classify(&w), Pattern::Random);
     }
 
     #[test]
     fn repeat_reads_are_read_mostly() {
-        let w = vec![rec(0, 64, false); 3];
+        let w = window(vec![rec(0, 64, false); 3]);
         assert_eq!(classify(&w), Pattern::ReadMostly);
     }
 
     #[test]
     fn repeat_with_writes_is_not_read_mostly() {
-        let w = vec![rec(0, 64, false), rec(0, 64, true), rec(0, 64, false)];
+        let w = window(vec![rec(0, 64, false), rec(0, 64, true), rec(0, 64, false)]);
         assert_ne!(classify(&w), Pattern::ReadMostly);
     }
 
     #[test]
     fn wrapped_migrating_access_is_streaming_oversub() {
         let mut w = sequential(4, 16);
-        w.push(AccessRecord {
+        w.push_back(AccessRecord {
             range: PageRange::new(0, 16),
             write: false,
             h2d_bytes: 1 << 20,
@@ -226,7 +252,7 @@ mod tests {
         assert_eq!(classify(&w), Pattern::StreamingOversub);
         // The same wrap with everything already resident is not.
         let mut w2 = sequential(4, 16);
-        w2.push(AccessRecord {
+        w2.push_back(AccessRecord {
             range: PageRange::new(0, 16),
             write: false,
             h2d_bytes: 0,
@@ -239,7 +265,7 @@ mod tests {
     fn single_outlier_does_not_change_sequential_verdict() {
         // window: seq, seq, OUTLIER, seq, seq — majority vote holds.
         let mut w = sequential(3, 16);
-        w.push(rec(900, 910, false));
+        w.push_back(rec(900, 910, false));
         w.extend([rec(48, 64, false), rec(64, 80, false)]);
         assert_eq!(classify(&w), Pattern::Sequential);
     }

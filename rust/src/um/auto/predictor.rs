@@ -27,6 +27,8 @@
 //! [`heuristic_prediction`] — the exact PR 2 rule — so the learned
 //! mode can only add coverage, never lose the stride cases.
 
+use std::collections::VecDeque;
+
 use crate::mem::PageRange;
 use crate::util::fxhash::FxHasher;
 
@@ -107,12 +109,16 @@ struct GroupHistory {
     /// Length (pages) of the group's most recent access.
     last_len: u32,
     /// Recent start-to-start deltas, oldest first (bounded by the
-    /// engine's `delta_history`).
-    deltas: Vec<i64>,
+    /// engine's `delta_history`). A ring: once full, every training
+    /// step pops the oldest delta — `Vec::remove(0)` would memmove on
+    /// the fault path each time.
+    deltas: VecDeque<i64>,
 }
 
 /// Hash of (page group, recent delta history) — the second-level index.
-fn signature(group: u32, deltas: &[i64]) -> u64 {
+/// Hashes the deltas in logical (oldest-first) order, so the ring's
+/// internal layout never leaks into the signature.
+fn signature(group: u32, deltas: &VecDeque<i64>) -> u64 {
     use std::hash::Hasher;
     let mut h = FxHasher::default();
     h.write_u32(group);
@@ -158,7 +164,7 @@ impl LearnedPredictor {
                     GroupHistory {
                         last_start: range.start,
                         last_len: range.len(),
-                        deltas: Vec::with_capacity(cap),
+                        deltas: VecDeque::with_capacity(cap),
                     },
                 );
             }
@@ -166,9 +172,9 @@ impl LearnedPredictor {
                 let delta = i64::from(range.start) - i64::from(g.last_start);
                 self.model.train(signature(group, &g.deltas), delta);
                 if g.deltas.len() >= cap {
-                    g.deltas.remove(0);
+                    g.deltas.pop_front(); // O(1) ring pop
                 }
-                g.deltas.push(delta);
+                g.deltas.push_back(delta);
                 g.last_start = range.start;
                 g.last_len = range.len();
             }
@@ -214,9 +220,9 @@ impl LearnedPredictor {
             if let Some(step1) = offset(g.last_start, first.delta) {
                 let mut deltas = g.deltas.clone();
                 if deltas.len() >= cfg.delta_history.max(1) {
-                    deltas.remove(0);
+                    deltas.pop_front();
                 }
-                deltas.push(first.delta);
+                deltas.push_back(first.delta);
                 let sig2 = signature(group, &deltas);
                 let next = self.model.lookup(sig2).iter().find(|c| c.delta != 0);
                 if let Some(next) = next {
@@ -263,22 +269,26 @@ mod tests {
     /// rule. This is the differential oracle the integration test
     /// (`tests/predictor_modes.rs`) checks the runtime against.
     struct HeuristicSim {
-        window: Vec<AccessRecord>,
+        window: VecDeque<AccessRecord>,
         tracker: PatternTracker,
         seen_end: u32,
     }
 
     impl HeuristicSim {
         fn new() -> HeuristicSim {
-            HeuristicSim { window: Vec::new(), tracker: PatternTracker::default(), seen_end: 0 }
+            HeuristicSim {
+                window: VecDeque::new(),
+                tracker: PatternTracker::default(),
+                seen_end: 0,
+            }
         }
 
         fn observe_and_predict(&mut self, r: PageRange, cfg: &AutoConfig) -> Option<PageRange> {
             let wrapped = r.start < self.seen_end;
             self.seen_end = self.seen_end.max(r.end);
-            self.window.push(AccessRecord { range: r, write: false, h2d_bytes: 0, wrapped });
+            self.window.push_back(AccessRecord { range: r, write: false, h2d_bytes: 0, wrapped });
             if self.window.len() > cfg.window.max(1) {
-                self.window.remove(0);
+                self.window.pop_front();
             }
             self.tracker.update(classify(&self.window), cfg.hysteresis);
             heuristic_prediction(self.tracker.current(), r, cfg.max_predict_pages)

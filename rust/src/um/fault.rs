@@ -71,6 +71,11 @@ impl UmRuntime {
         self.metrics.gpu_fault_groups += groups;
         self.metrics.gpu_faulted_pages += pages as u64;
         self.metrics.fault_stall += total;
+        // Attribute the groups to the stream whose access is being
+        // serviced (threaded down from `gpu_access_on` / the host entry
+        // points via `access_stream`).
+        let stream = self.access_stream;
+        self.metrics.stream_mut(stream).fault_groups += groups;
         (t_last, total)
     }
 

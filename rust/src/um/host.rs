@@ -7,6 +7,7 @@
 //! so effective in-memory); on Intel platforms the same advises leave
 //! the data on the host until the GPU faults it over.
 
+use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, AllocKind, PageRange, Residency, TransferMode, PAGES_PER_CHUNK, PAGE_SIZE};
 use crate::mem::page::PageFlags;
 use crate::trace::TraceKind;
@@ -15,9 +16,26 @@ use crate::util::units::{transfer_ns, Ns};
 use super::runtime::{AccessOutcome, Class, UmRuntime};
 
 impl UmRuntime {
-    /// The host CPU touches `range` of `id` (init loops, verification,
-    /// `memcpy()` consuming GPU results). Returns host-side completion.
+    /// The host CPU touches `range` of `id` on the default stream's
+    /// timeline. See [`UmRuntime::host_access_on`].
     pub fn host_access(&mut self, id: AllocId, range: PageRange, write: bool, now: Ns) -> AccessOutcome {
+        self.host_access_on(StreamId::DEFAULT, id, range, write, now)
+    }
+
+    /// The host CPU touches `range` of `id` (init loops, verification,
+    /// `memcpy()` consuming GPU results), attributed to `stream` for
+    /// per-stream accounting (host ops normally ride the default
+    /// stream's timeline). Returns host-side completion.
+    pub fn host_access_on(
+        &mut self,
+        stream: StreamId,
+        id: AllocId,
+        range: PageRange,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        self.access_stream = stream;
+        self.metrics.stream_mut(stream).host_accesses += 1;
         let alloc = self.space.get(id);
         if alloc.kind == AllocKind::Device {
             panic!("host access to cudaMalloc memory '{}' — use memcpy", alloc.name);

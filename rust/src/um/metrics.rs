@@ -2,7 +2,65 @@
 //! use the trace's time totals; these counters power assertions, the
 //! `umbra trace` summary and the ablation benches.
 
+use crate::gpu::stream::StreamId;
 use crate::util::units::{Bytes, Ns};
+
+/// Streams with their own [`StreamMetrics`] slot; accesses on streams
+/// beyond this collapse into the last slot (the `--streams` knob is a
+/// small-N concurrency study, not a stream stress test).
+pub const MAX_STREAM_METRICS: usize = 8;
+
+/// Per-stream slice of the runtime counters: which stream drove the
+/// access, which fault groups it paid for, and what the `um::auto`
+/// engine decided on its behalf (state is keyed by
+/// `(StreamId, AllocId)`, so decision counters are per-stream too).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StreamMetrics {
+    /// GPU accesses that originated on this stream.
+    pub gpu_accesses: u64,
+    /// Host accesses attributed to this stream (host ops run on the
+    /// default stream's timeline).
+    pub host_accesses: u64,
+    /// Fault groups serviced on behalf of this stream's accesses.
+    pub fault_groups: u64,
+    /// `um::auto` actuations committed for this stream's accesses.
+    pub auto_decisions: u64,
+    /// Predictive-prefetch ranges issued from this stream's histories.
+    pub auto_predictions: u64,
+    /// Stable per-(stream, allocation) pattern flips.
+    pub auto_pattern_flips: u64,
+    /// Bytes moved by engine prefetches for this stream (escalation +
+    /// prediction).
+    pub auto_prefetched_bytes: Bytes,
+}
+
+impl StreamMetrics {
+    /// Whether any counter is non-zero (drives report row inclusion).
+    pub fn any(&self) -> bool {
+        *self != StreamMetrics::default()
+    }
+}
+
+/// NaN-safe percentage rendering for the decision-quality ratios: a
+/// cell where nothing resolved must read "n/a", never a literal `NaN`
+/// (and never a flattering 100%).
+pub fn fmt_pct(x: f64) -> String {
+    if x.is_finite() {
+        format!("{:.0}%", x * 100.0)
+    } else {
+        "n/a".into()
+    }
+}
+
+/// NaN-safe fraction rendering for CSV cells ("-" when unresolved, so
+/// downstream tooling never parses a literal `NaN`).
+pub fn fmt_frac(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.4}")
+    } else {
+        "-".into()
+    }
+}
 
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct UmMetrics {
@@ -75,11 +133,27 @@ pub struct UmMetrics {
     /// Predictions issued by the heuristic classifier rule while the
     /// learned tables were below the confidence gate.
     pub auto_fallback_predictions: u64,
+    /// Per-stream counter slices (slot = stream index, clamped to
+    /// [`MAX_STREAM_METRICS`]); all-zero except for streams that
+    /// actually drove accesses.
+    pub per_stream: [StreamMetrics; MAX_STREAM_METRICS],
 }
 
 impl UmMetrics {
     pub fn reset(&mut self) {
         *self = UmMetrics::default();
+    }
+
+    /// The mutable per-stream slot for `s` (streams past the tracked
+    /// range share the last slot).
+    pub fn stream_mut(&mut self, s: StreamId) -> &mut StreamMetrics {
+        &mut self.per_stream[s.index().min(MAX_STREAM_METRICS - 1)]
+    }
+
+    /// Streams that recorded any activity, as `(stream index, slice)`
+    /// pairs in stream order (report/JSON rows).
+    pub fn active_streams(&self) -> impl Iterator<Item = (usize, &StreamMetrics)> {
+        self.per_stream.iter().enumerate().filter(|(_, m)| m.any())
     }
 
     /// Total bytes that crossed the link in either direction.
@@ -224,6 +298,33 @@ mod tests {
         assert_eq!(row[0], "7");
         assert_eq!(row[2], "4096");
         assert_eq!(row[9], "3");
+    }
+
+    #[test]
+    fn per_stream_slots_clamp_and_filter() {
+        let mut m = UmMetrics::default();
+        m.stream_mut(StreamId(0)).gpu_accesses += 1;
+        m.stream_mut(StreamId(2)).auto_decisions += 3;
+        // Streams beyond the tracked range collapse into the last slot.
+        m.stream_mut(StreamId(40)).gpu_accesses += 1;
+        m.stream_mut(StreamId(99)).gpu_accesses += 1;
+        assert_eq!(m.per_stream[MAX_STREAM_METRICS - 1].gpu_accesses, 2);
+        let active: Vec<usize> = m.active_streams().map(|(i, _)| i).collect();
+        assert_eq!(active, vec![0, 2, MAX_STREAM_METRICS - 1]);
+        m.reset();
+        assert!(m.active_streams().next().is_none());
+    }
+
+    #[test]
+    fn nan_safe_formatting_for_zero_resolved_cells() {
+        // Regression: a run where no prediction ever resolved has NaN
+        // accuracy; reports/CSVs must render "n/a"/"-", not "NaN".
+        let m = UmMetrics::default();
+        assert_eq!(fmt_pct(m.prediction_accuracy()), "n/a");
+        assert_eq!(fmt_frac(m.prediction_accuracy()), "-");
+        assert_eq!(fmt_pct(0.25), "25%");
+        assert_eq!(fmt_frac(0.25), "0.2500");
+        assert_eq!(fmt_pct(f64::INFINITY), "n/a");
     }
 
     #[test]

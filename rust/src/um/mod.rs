@@ -34,6 +34,6 @@ pub mod host;
 pub mod auto;
 
 pub use auto::{AutoConfig, AutoEngine, LearnedPredictor, Prediction, PredictorKind};
-pub use metrics::UmMetrics;
+pub use metrics::{StreamMetrics, UmMetrics};
 pub use policy::{Advise, Loc, UmPolicy};
 pub use runtime::{AccessOutcome, UmRuntime};

@@ -123,16 +123,40 @@ impl UmRuntime {
         }
     }
 
+    /// Bulk-transfer pages that still fit under the `dma_h2d` backlog
+    /// budget at `now`: the engine's link-headroom model. The DMA
+    /// engine is FIFO ([`crate::sim::BandwidthResource`]); its
+    /// `free_at` beyond `now` is transfer time already queued by other
+    /// work (concurrent streams' prefetches, §III-A3 background
+    /// transfers). An engine bulk prefetch may only grow that backlog
+    /// up to `budget` — beyond it, piling on more speculative bytes
+    /// just serializes every other stream's demand transfers behind
+    /// this one. Returns the page count that keeps the queue within
+    /// budget (0 = the link is already saturated past it).
+    pub(super) fn link_headroom_pages(&self, budget: Ns, now: Ns) -> u32 {
+        let backlog = self.dma_h2d.free_at().saturating_sub(now);
+        if backlog >= budget {
+            return 0;
+        }
+        let bw = self.plat.link.peak_bw * self.eff(TransferMode::Bulk);
+        let bytes = ((budget - backlog).0 as f64 * bw / 1e9) as u64;
+        (bytes / PAGE_SIZE).min(u32::MAX as u64) as u32
+    }
+
     /// Engine-driven ahead-of-access prefetch (the `um::auto`
     /// predictive path, heuristic and learned modes alike): move the
     /// host-resident parts of `want` to the device, clamped to the free
-    /// capacity so it never forces an eviction. Returns the prefetched
-    /// pieces and their completion time — the gate a later consuming
-    /// access waits on ([`crate::um::auto::observer::AllocHistory`]).
+    /// capacity so it never forces an eviction, and (under multi-stream
+    /// concurrency) to `link_cap` pages of `dma_h2d` headroom so
+    /// speculative transfers never serialize another stream's demand
+    /// traffic behind them. Returns the prefetched pieces and their
+    /// completion time — the gate a later consuming access waits on
+    /// ([`crate::um::auto::observer::AllocHistory`]).
     pub(super) fn auto_prefetch_ahead(
         &mut self,
         id: AllocId,
         want: PageRange,
+        link_cap: Option<u32>,
         now: Ns,
     ) -> (Vec<PageRange>, Ns) {
         let alloc = self.space.get(id);
@@ -141,6 +165,9 @@ impl UmRuntime {
             return (Vec::new(), now);
         }
         let mut budget = (self.dev.free() / PAGE_SIZE) as u32;
+        if let Some(cap) = link_cap {
+            budget = budget.min(cap);
+        }
         let host_runs: Vec<PageRange> = alloc
             .pages
             .runs_in(want)

@@ -3,6 +3,7 @@
 //! sibling files (`fault`, `migrate`, `advise`, `prefetch`, `evict`,
 //! `host`), all as `impl UmRuntime` blocks.
 
+use crate::gpu::stream::StreamId;
 use crate::mem::{
     AllocId, AllocKind, ChunkRef, DeviceMemory, ManagedSpace, PageRange, PageState,
     Residency, TransferMode, PAGES_PER_CHUNK, PAGE_SIZE,
@@ -95,6 +96,12 @@ pub struct UmRuntime {
     /// serviced (reset at each `gpu_access`); drives the ETC-throttle
     /// ablation ([10]).
     pub(super) access_evicted_bytes: Bytes,
+    /// The stream whose access is currently being serviced — set at
+    /// every `gpu_access_on` / `host_access_on` entry and read by the
+    /// down-path mechanisms (fault servicing, engine actuation) so
+    /// per-stream attribution threads through the whole fault/
+    /// migration path without widening every internal signature.
+    pub(super) access_stream: StreamId,
     /// The online policy engine (`um::auto`), attached only for the
     /// `UM Auto` variant via [`UmRuntime::enable_auto`]. `None` leaves
     /// every other variant's behaviour bit-identical to before.
@@ -122,6 +129,7 @@ impl UmRuntime {
             trace: Trace::disabled(),
             advise_hints_active: false,
             access_evicted_bytes: 0,
+            access_stream: StreamId::DEFAULT,
             auto: None,
         }
     }
@@ -209,11 +217,27 @@ impl UmRuntime {
     // GPU-side access (the kernel hot path)
     // ---------------------------------------------------------------
 
-    /// A GPU kernel touches `range` of `id` at time `now`. Resolves
-    /// faults/migrations/remote mappings and returns when the data is
-    /// available plus the stall breakdown. `write` marks pages dirty and
-    /// collapses ReadMostly duplicates.
+    /// A GPU kernel touches `range` of `id` at time `now` on the
+    /// default stream. See [`UmRuntime::gpu_access_on`].
     pub fn gpu_access(&mut self, id: AllocId, range: PageRange, write: bool, now: Ns) -> AccessOutcome {
+        self.gpu_access_on(StreamId::DEFAULT, id, range, write, now)
+    }
+
+    /// A GPU kernel on `stream` touches `range` of `id` at time `now`.
+    /// Resolves faults/migrations/remote mappings and returns when the
+    /// data is available plus the stall breakdown. `write` marks pages
+    /// dirty and collapses ReadMostly duplicates. The originating
+    /// stream keys the `um::auto` engine's observer/predictor state, so
+    /// concurrent streams with different patterns on the same buffer
+    /// never pollute each other's windows.
+    pub fn gpu_access_on(
+        &mut self,
+        stream: StreamId,
+        id: AllocId,
+        range: PageRange,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
         let alloc = self.space.get(id);
         if alloc.kind != AllocKind::Managed {
             // cudaMalloc memory: always resident, no UM involvement.
@@ -221,17 +245,27 @@ impl UmRuntime {
         }
         let range = alloc.pages.clamp(range);
         self.access_evicted_bytes = 0;
+        self.access_stream = stream;
+        self.metrics.stream_mut(stream).gpu_accesses += 1;
+        // Streams are registered at access *entry*, so in-access
+        // actuation (escalation sizing) already knows when a second
+        // stream has entered the picture.
+        if let Some(eng) = &mut self.auto {
+            eng.note_stream(stream);
+        }
 
         // An in-flight auto-prefetch covering this range gates the
         // access (§III-A3: the wait for predicted-ahead data lands in
         // the measured kernel window, like a background prefetch). The
         // wait is attributed to `transfer_wait` so stall breakdowns
-        // still sum to the measured window.
+        // still sum to the measured window. The gate is the merge view
+        // over *all* streams' outstanding predictions — an in-flight
+        // transfer gates whoever touches its pages — and it is applied
+        // *before* `auto_post_access` retires the pending entry, so a
+        // consumed prediction is always waited for (see the pinning
+        // test in `um::auto::actuator`).
         let gate_wait = match &self.auto {
-            Some(eng) => eng
-                .allocs
-                .get(&id)
-                .map_or(Ns::ZERO, |st| st.history.gate_for(range).saturating_sub(now)),
+            Some(eng) => eng.gate_for(id, range).saturating_sub(now),
             None => Ns::ZERO,
         };
         let now = now + gate_wait;
@@ -246,7 +280,7 @@ impl UmRuntime {
         let mut pos = range.start;
         while pos < range.end {
             let (run, class) = self.next_run(id, pos, range.end);
-            let o = self.gpu_access_run(id, run, class, write, ready);
+            let o = self.gpu_access_run(stream, id, run, class, write, ready);
             // The driver handles this access's fault groups in order;
             // later runs queue behind earlier ones.
             ready = ready.max(o.done);
@@ -257,7 +291,7 @@ impl UmRuntime {
         // Closed loop: let the policy engine observe the completed
         // access and actuate (prefetch / advise / eviction hints).
         if self.auto.is_some() {
-            self.auto_post_access(id, range, write, &out);
+            self.auto_post_access(stream, id, range, write, &out);
         }
         out
     }
@@ -284,6 +318,7 @@ impl UmRuntime {
     /// Handle one homogeneous run. Dispatches to the mechanism modules.
     fn gpu_access_run(
         &mut self,
+        stream: StreamId,
         id: AllocId,
         run: PageRange,
         class: Class,
@@ -316,7 +351,7 @@ impl UmRuntime {
                 } else if self.auto.is_some() {
                     // Policy engine attached: probe + bulk-escalate
                     // large streaming runs (um::auto).
-                    self.auto_migrate_h2d(id, run, class, write, now)
+                    self.auto_migrate_h2d(stream, id, run, class, write, now)
                 } else {
                     self.migrate_or_map_h2d(id, run, class, write, now)
                 }

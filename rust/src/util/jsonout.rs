@@ -1,7 +1,9 @@
-//! Minimal JSON writer for the suite's bench-trajectory output
-//! (`json/suite.json`). `serde` is unavailable in the offline build
-//! environment (DESIGN.md §2 *Substitutions*), and the suite only
-//! needs flat records: strings, numbers, arrays, objects.
+//! Minimal JSON writer **and reader** for the suite's bench-trajectory
+//! output (`json/suite.json`). `serde` is unavailable in the offline
+//! build environment (DESIGN.md §2 *Substitutions*), and the suite only
+//! needs flat records: strings, numbers, arrays, objects. The reader
+//! ([`Json::parse`]) exists for `umbra suite --compare`: diffing the
+//! current run's decision-quality fields against a committed baseline.
 
 use std::fs;
 use std::path::Path;
@@ -130,6 +132,229 @@ impl Json {
         }
         fs::write(path, self.render() + "\n")
     }
+
+    // --- reading -----------------------------------------------------
+
+    /// Parse a JSON document (the subset this writer emits plus
+    /// standard escapes and scientific notation). Errors carry the
+    /// byte offset for diagnostics.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing data at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: `Int` and `Num` values (`None` otherwise — note
+    /// the writer renders NaN as `null`, which reads back as `None`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(n) => Some(*n as f64),
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent parser over the input bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // Exact counters stay Int (matching the writer's split); any
+        // '.', exponent or sign forces the float variant.
+        if !text.contains(['.', 'e', 'E', '-', '+']) {
+            if let Ok(n) = text.parse::<u64>() {
+                return Ok(Json::Int(n));
+            }
+        }
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{text}' at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => out.push(self.unicode_escape()?),
+                        _ => return Err(format!("bad escape at byte {}", self.pos)),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Copy one UTF-8 scalar (multi-byte sequences pass
+                    // through untouched).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| "invalid utf-8 in string")?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// `\uXXXX`: the cursor sits on the `u`; consumes the four hex
+    /// digits (the caller advances past the `u` itself).
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hex = self.bytes.get(self.pos + 1..self.pos + 5).ok_or("truncated \\u escape")?;
+        let hex = std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?;
+        let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+        self.pos += 4;
+        Ok(char::from_u32(code).unwrap_or('\u{fffd}'))
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +383,55 @@ mod tests {
         assert!(s.contains("\"bytes\": 4096"));
         assert!(s.ends_with(']'));
         assert!(s.contains("{}"), "empty object compact form");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj(vec![
+            ("predictor", Json::str("learned")),
+            ("reps", Json::Int(5)),
+            ("accuracy", Json::Num(0.75)),
+            ("unresolved", Json::Num(f64::NAN)), // renders as null
+            (
+                "cells",
+                Json::Arr(vec![Json::obj(vec![
+                    ("app", Json::str("BS")),
+                    ("bytes", Json::Int(u64::MAX)),
+                    ("escaped", Json::str("a\"b\\c\nd")),
+                ])]),
+            ),
+        ]);
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("predictor").and_then(Json::as_str), Some("learned"));
+        assert_eq!(back.get("reps").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(back.get("accuracy").and_then(Json::as_f64), Some(0.75));
+        assert_eq!(back.get("unresolved"), Some(&Json::Null));
+        assert_eq!(back.get("unresolved").and_then(Json::as_f64), None, "null reads as n/a");
+        let cells = back.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells[0].get("app").and_then(Json::as_str), Some("BS"));
+        assert_eq!(cells[0].get("bytes"), Some(&Json::Int(u64::MAX)));
+        assert_eq!(cells[0].get("escaped").and_then(Json::as_str), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn parse_handles_standard_json_shapes() {
+        assert_eq!(Json::parse(" null ").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        let arr = Json::Arr(vec![Json::Int(1), Json::Num(-2.5), Json::Num(300.0)]);
+        assert_eq!(Json::parse("[1, -2.5, 3e2]").unwrap(), arr);
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("\"\\u0041\\t\"").unwrap(), Json::Str("A\t".into()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nulL").is_err());
+        assert!(Json::parse("\"open").is_err());
+        assert!(Json::parse("{} extra").is_err());
     }
 
     #[test]

@@ -53,7 +53,7 @@ fn heuristic_mode_matches_the_classifier_rule_oracle() {
     // residency model to turn each predicted range into the bytes the
     // engine must move (only host-resident pages transfer; nothing in
     // this in-memory setup evicts).
-    let mut window: Vec<AccessRecord> = Vec::new();
+    let mut window: std::collections::VecDeque<AccessRecord> = std::collections::VecDeque::new();
     let mut tracker = PatternTracker::default();
     let mut seen_end = 0u32;
     let mut resident = vec![false; n_pages as usize];
@@ -67,9 +67,9 @@ fn heuristic_mode_matches_the_classifier_rule_oracle() {
         // -- oracle: observe exactly as um::auto::observer does -------
         let wrapped = r.start < seen_end;
         seen_end = seen_end.max(r.end);
-        window.push(AccessRecord { range: r, write: false, h2d_bytes: out.h2d_bytes, wrapped });
+        window.push_back(AccessRecord { range: r, write: false, h2d_bytes: out.h2d_bytes, wrapped });
         if window.len() > cfg.window {
-            window.remove(0);
+            window.pop_front();
         }
         tracker.update(classify(&window), cfg.hysteresis);
         resident[r.start as usize..r.end as usize].fill(true);

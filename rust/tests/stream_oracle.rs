@@ -1,0 +1,180 @@
+//! Stream-keying contracts of the `(StreamId, AllocId)` engine
+//! refactor:
+//!
+//! * **Entry-point oracle** — `run(trace)` and
+//!   `run_with(RunOpts { streams: 1 })` stay bit-identical (every `Ns`
+//!   output and the full `UmMetrics`) for all six variants on both
+//!   headline platforms in both regimes, and a single-stream `UM Auto`
+//!   run leaves engine state keyed by stream 0 only. Note `run` is a
+//!   provided wrapper over `run_with`, so this pins the two entry
+//!   points against *future* divergence (plus determinism), not
+//!   pre-refactor behaviour; the step-by-step behavioural oracle that
+//!   replays the pre-refactor engine pipeline access-by-access lives
+//!   in `tests/predictor_modes.rs` and runs through the re-keyed
+//!   engine unchanged — together they pin the single-stream contract.
+//! * **Pollution regression** — two streams interleaving a sequential
+//!   and an irregular access pattern over ONE allocation: the
+//!   per-stream engine classifies each stream correctly, while the
+//!   conflated (allocation-keyed, pre-refactor) window provably loses
+//!   the sequential stream — the bug ROADMAP called "polluting each
+//!   other's windows".
+//! * **Multi-stream determinism** — `streams: 2` runs are
+//!   deterministic and populate per-stream counters.
+
+use std::collections::VecDeque;
+
+use umbra::apps::{AppId, Regime, RunOpts, Variant};
+use umbra::gpu::StreamId;
+use umbra::mem::PageRange;
+use umbra::platform::PlatformId;
+use umbra::um::auto::pattern::{classify, AccessRecord, Pattern};
+use umbra::um::{AutoConfig, UmRuntime};
+use umbra::util::units::{Bytes, Ns, MIB};
+
+#[test]
+fn single_stream_runs_bit_identical_all_variants_both_platforms() {
+    for platform in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for regime in [Regime::InMemory, Regime::Oversubscribed] {
+            for variant in Variant::ALL_WITH_AUTO {
+                // §IV-B: no explicit baseline under oversubscription.
+                if regime == Regime::Oversubscribed && variant == Variant::Explicit {
+                    continue;
+                }
+                let app = AppId::Bs.build_for(platform, regime);
+                let plat = platform.spec();
+                let legacy = app.run(&plat, variant, false);
+                let opts = RunOpts { trace: false, streams: 1 };
+                let threaded = app.run_with(&plat, variant, &opts);
+                let label = format!("{}/{}/{}", platform.name(), variant.name(), regime.name());
+                assert_eq!(legacy.kernel_time, threaded.kernel_time, "{label}: kernel time");
+                assert_eq!(legacy.kernel_times, threaded.kernel_times, "{label}: launches");
+                assert_eq!(legacy.wall_time, threaded.wall_time, "{label}: wall time");
+                assert_eq!(legacy.metrics, threaded.metrics, "{label}: UmMetrics");
+            }
+        }
+    }
+}
+
+#[test]
+fn single_stream_auto_run_keys_state_by_stream_zero_only() {
+    // A single-stream UM Auto run must not leak per-stream machinery
+    // into observable state: every counter lands in stream 0's slot
+    // and the engine's merged view equals the stream-0 view.
+    let mut r = UmRuntime::new(&umbra::platform::intel_pascal());
+    r.enable_auto_with(AutoConfig::default());
+    let id = r.malloc_managed("x", 16 * MIB);
+    let full = r.space.get(id).full();
+    r.host_access(id, full, true, Ns::ZERO);
+    let mut t = Ns::ZERO;
+    for i in 0..6u32 {
+        t = r.gpu_access(id, PageRange::new(i * 32, (i + 1) * 32), false, t).done;
+    }
+    let eng = r.auto_engine().unwrap();
+    assert_eq!(eng.pattern_of(id), eng.pattern_on(StreamId::DEFAULT, id));
+    assert!(!eng.multi_stream());
+    for (i, s) in r.metrics.active_streams() {
+        assert_eq!(i, 0, "only stream 0 recorded activity: {s:?}");
+    }
+}
+
+/// The two access patterns of the pollution scenario, as page ranges.
+/// Stream A: contiguous forward windows. Stream B: an irregular
+/// (+7, +19, +3)-cycle of 2-page accesses in a far page region —
+/// forward-moving with every delta larger than the access length, so
+/// its own per-stream view never revisits a page (no "wrap"), but with
+/// no majority stride either.
+fn seq_window(i: u32) -> PageRange {
+    PageRange::new(i * 16, (i + 1) * 16)
+}
+
+fn irregular_window(i: u32) -> PageRange {
+    let mut start = 300u32;
+    for k in 0..i {
+        start += [7, 19, 3][(k % 3) as usize];
+    }
+    PageRange::new(start, start + 2)
+}
+
+#[test]
+fn two_streams_on_one_allocation_classify_per_stream() {
+    // Escalation/prediction off: pure observer + classifier, so the
+    // test pins classification, not transfer timing.
+    let cfg = AutoConfig { escalate: false, predict: false, ..AutoConfig::default() };
+    let mut r = UmRuntime::new(&umbra::platform::intel_pascal());
+    r.enable_auto_with(cfg);
+    let id = r.malloc_managed("shared", 32 * MIB); // 512 pages
+    let full = r.space.get(id).full();
+    r.host_access(id, full, true, Ns::ZERO);
+
+    let s2 = StreamId(2);
+    // Replay of what a single conflated window would have seen: the
+    // interleaved ranges with h2d/wrap bookkeeping shared across both
+    // streams (exactly the pre-refactor, allocation-keyed observer).
+    let mut conflated: VecDeque<AccessRecord> = VecDeque::new();
+    let mut seen_end = 0u32;
+    let mut t = Ns::ZERO;
+    for i in 0..8u32 {
+        for (stream, range) in [(StreamId::DEFAULT, seq_window(i)), (s2, irregular_window(i))] {
+            let out = r.gpu_access_on(stream, id, range, false, t);
+            t = out.done;
+            let wrapped = range.start < seen_end;
+            seen_end = seen_end.max(range.end);
+            conflated.push_back(AccessRecord {
+                range,
+                write: false,
+                h2d_bytes: out.h2d_bytes,
+                wrapped,
+            });
+            if conflated.len() > cfg.window {
+                conflated.pop_front();
+            }
+        }
+    }
+
+    // Per-stream keying: each stream's view is classified correctly.
+    let eng = r.auto_engine().expect("engine attached");
+    assert_eq!(
+        eng.pattern_on(StreamId::DEFAULT, id),
+        Pattern::Sequential,
+        "stream 0's contiguous windows classify sequential"
+    );
+    assert_eq!(
+        eng.pattern_on(s2, id),
+        Pattern::Random,
+        "stream 2's irregular cycle classifies random"
+    );
+
+    // The pollution bug, demonstrated: the conflated window alternates
+    // between the two streams' cursors, so the classifier can no
+    // longer see the sequential stream at all — on pre-refactor main
+    // (one window per allocation) this misclassification drove the
+    // whole allocation's policy, killing stream 0's prefetch.
+    assert_ne!(
+        classify(&conflated),
+        Pattern::Sequential,
+        "conflated window loses the sequential stream: {conflated:?}"
+    );
+
+    // And the engine's byte counters stay per-stream consistent.
+    let total: Bytes = r.metrics.per_stream.iter().map(|s| s.auto_prefetched_bytes).sum();
+    assert_eq!(r.metrics.auto_prefetched_bytes, total);
+}
+
+#[test]
+fn two_stream_auto_run_is_deterministic_and_counts_per_stream() {
+    let app = AppId::Bs.build_for(PlatformId::IntelPascal, Regime::InMemory);
+    let plat = PlatformId::IntelPascal.spec();
+    let opts = RunOpts { trace: false, streams: 2 };
+    let a = app.run_with(&plat, Variant::UmAuto, &opts);
+    let b = app.run_with(&plat, Variant::UmAuto, &opts);
+    assert_eq!(a.kernel_time, b.kernel_time, "multi-stream runs are deterministic");
+    assert_eq!(a.metrics, b.metrics);
+    // Launches alternate stream 0 and the created compute stream 2
+    // (stream 1 is the background prefetch stream).
+    assert!(a.metrics.per_stream[0].gpu_accesses > 0, "stream 0 drove accesses");
+    assert!(a.metrics.per_stream[2].gpu_accesses > 0, "stream 2 drove accesses");
+    assert!(
+        a.metrics.per_stream[1].gpu_accesses == 0,
+        "background stream launches no kernels"
+    );
+}
