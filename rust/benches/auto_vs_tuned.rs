@@ -14,8 +14,11 @@ fn main() {
     let cmp = figures::fig_predictor(reps);
     println!("{}", cmp.text);
     cmp.write(std::path::Path::new("results")).expect("write results/");
+    let ev = figures::fig_evict(reps);
+    println!("{}", ev.text);
+    ev.write(std::path::Path::new("results")).expect("write results/");
     println!(
-        "auto_vs_tuned + predictor_vs_heuristic regenerated in {:?} ({} reps/cell)",
+        "auto_vs_tuned + predictor_vs_heuristic + evict_study regenerated in {:?} ({} reps/cell)",
         t0.elapsed(),
         reps
     );

@@ -328,6 +328,9 @@ impl AppCtx {
     /// Finalize into a [`RunResult`].
     pub fn finish(mut self, app: &'static str) -> RunResult {
         let wall = self.streams.device_sync();
+        // Resolve the eviction audit: evicted bytes never re-demanded
+        // count as dead hits (the eviction-quality counter pair).
+        self.um.finish_eviction_audit();
         let breakdown = Breakdown::from_trace(&self.um.trace);
         let trace = if self.um.trace.is_enabled() {
             Some(std::mem::replace(&mut self.um.trace, Trace::disabled()))

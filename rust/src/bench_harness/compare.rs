@@ -16,15 +16,22 @@
 
 use crate::apps::Variant;
 use crate::coordinator::Suite;
-use crate::um::PredictorKind;
+use crate::um::{EvictorKind, PredictorKind};
 use crate::util::jsonout::Json;
 
 /// Build the `json/suite.json` document for a finished suite: one
-/// record per cell with kernel time, the decision-quality ratios, and
-/// the per-stream counter slices (`--streams` runs report pattern /
-/// prediction decisions per stream). Cells are sorted for stable
-/// diffs.
-pub fn suite_json(suite: &Suite, predictor: PredictorKind, reps: usize, streams: u32) -> Json {
+/// record per cell with kernel time, the decision-quality ratios
+/// (prediction accuracy/coverage plus the eviction-quality byte
+/// counters), and the per-stream counter slices (`--streams` runs
+/// report pattern / prediction decisions per stream). Cells are sorted
+/// for stable diffs.
+pub fn suite_json(
+    suite: &Suite,
+    predictor: PredictorKind,
+    evictor: EvictorKind,
+    reps: usize,
+    streams: u32,
+) -> Json {
     let mut cells: Vec<_> = suite.results.iter().collect();
     cells.sort_by_key(|(c, _)| {
         (c.platform.name(), c.regime.name(), c.app.name(), c.variant.name())
@@ -61,11 +68,15 @@ pub fn suite_json(suite: &Suite, predictor: PredictorKind, reps: usize, streams:
             ("auto_misprediction_ratio", Json::Num(m.misprediction_ratio())),
             ("auto_prediction_accuracy", Json::Num(m.prediction_accuracy())),
             ("auto_prediction_coverage", Json::Num(m.prediction_coverage())),
+            ("evict_live_evicted_bytes", Json::Int(m.evict_live_evicted_bytes)),
+            ("evict_dead_hit_bytes", Json::Int(m.evict_dead_hit_bytes)),
+            ("eviction_dead_ratio", Json::Num(m.eviction_dead_ratio())),
             ("streams", Json::Arr(stream_rows)),
         ]));
     }
     Json::obj(vec![
         ("predictor", Json::str(predictor.name())),
+        ("evictor", Json::str(evictor.name())),
         ("reps", Json::Int(reps as u64)),
         ("streams", Json::Int(streams as u64)),
         ("cells", Json::Arr(json_cells)),
@@ -268,14 +279,17 @@ mod tests {
             ..Default::default()
         };
         let suite = Suite::run(&config);
-        let json = suite_json(&suite, PredictorKind::Learned, 1, 2);
+        let json = suite_json(&suite, PredictorKind::Learned, EvictorKind::Lru, 1, 2);
         let back = Json::parse(&json.render()).unwrap();
         assert_eq!(back.get("streams").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(back.get("evictor").and_then(Json::as_str), Some("lru"));
         let cells = back.get("cells").and_then(Json::as_arr).unwrap();
         assert_eq!(cells.len(), 1);
         let c = &cells[0];
         assert_eq!(c.get("variant").and_then(Json::as_str), Some("UM Auto"));
         assert!(c.get("auto_misprediction_ratio").is_some());
+        assert!(c.get("evict_live_evicted_bytes").is_some(), "eviction quality in the schema");
+        assert!(c.get("eviction_dead_ratio").is_some());
         let streams = c.get("streams").and_then(Json::as_arr).unwrap();
         assert!(
             streams.len() >= 2,

@@ -1,14 +1,15 @@
 //! Table I and Figures 3-8 regeneration (see DESIGN.md §4 for the
 //! experiment index).
 
-use crate::apps::{AppId, Regime, Variant};
-use crate::coordinator::{run_cell, Cell, CellResult, Suite, SuiteConfig};
+use crate::apps::{AppId, Regime, RunOpts, Variant};
+use crate::coordinator::{run_cell, run_cell_opts, Cell, CellResult, Suite, SuiteConfig};
 use crate::platform::PlatformId;
 use crate::trace::TimeSeries;
-use crate::um::PredictorKind;
+use crate::um::metrics::{fmt_frac, fmt_pct};
+use crate::um::{EvictorKind, PredictorKind};
 use crate::util::csvout::Csv;
 use crate::util::table::TextTable;
-use crate::util::units::{fmt_bytes, Ns};
+use crate::util::units::{fmt_bytes, Ns, MIB};
 
 use super::report::Report;
 
@@ -336,21 +337,28 @@ pub fn fig_auto(reps: usize) -> Report {
 /// [`fig_auto`] with an explicit `um::auto` predictor mode (the
 /// `umbra auto --predictor {heuristic,learned}` entry point).
 pub fn fig_auto_with(reps: usize, predictor: PredictorKind) -> Report {
-    fig_auto_opts(reps, predictor, 1)
+    fig_auto_opts(reps, predictor, 1, EvictorKind::default())
 }
 
-/// [`fig_auto_with`] plus the `--streams` knob: with `streams > 1`
-/// kernel launches rotate across that many compute streams, and the
-/// attached `json/suite.json` document reports the engine's per-stream
-/// pattern/prediction counters (the `(stream, allocation)` keying made
-/// observable).
-pub fn fig_auto_opts(reps: usize, predictor: PredictorKind, streams: u32) -> Report {
+/// [`fig_auto_with`] plus the `--streams` and `--evictor` knobs: with
+/// `streams > 1` kernel launches rotate across that many compute
+/// streams, and the attached `json/suite.json` document reports the
+/// engine's per-stream pattern/prediction counters (the
+/// `(stream, allocation)` keying made observable); `evictor` selects
+/// raw LRU or the learned dead-range ranker for victim selection.
+pub fn fig_auto_opts(
+    reps: usize,
+    predictor: PredictorKind,
+    streams: u32,
+    evictor: EvictorKind,
+) -> Report {
     let platforms = vec![PlatformId::IntelPascal, PlatformId::P9Volta];
     let config = SuiteConfig {
         platforms: platforms.clone(),
         variants: Variant::AUTO_STUDY.to_vec(),
         reps,
         predictor,
+        evictor,
         streams,
         ..Default::default()
     };
@@ -437,7 +445,10 @@ pub fn fig_auto_opts(reps: usize, predictor: PredictorKind, streams: u32) -> Rep
     }
     Report::new("auto_vs_tuned", text)
         .with_csv("auto_vs_tuned", csv)
-        .with_json("suite", super::compare::suite_json(&suite, predictor, reps, streams))
+        .with_json(
+            "suite",
+            super::compare::suite_json(&suite, predictor, evictor, reps, streams),
+        )
 }
 
 /// "Predictor vs. heuristic": `UM Auto` under the learned delta-history
@@ -544,6 +555,122 @@ pub fn fig_predictor(reps: usize) -> Report {
         }
     }
     Report::new("predictor_vs_heuristic", text).with_csv("predictor_vs_heuristic", csv)
+}
+
+// ---------------------------------------------------------------------
+// Eviction-policy study (umbra auto --evict-study)
+// ---------------------------------------------------------------------
+
+/// The eviction-policy study (`umbra auto --evict-study`; ROADMAP
+/// "auto eviction-policy study", `docs/EVICTION.md`): on the paper's
+/// oversubscription pathology cells — BS and FDTD3d on P9-Volta (the
+/// §IV-B advise-pathology panels) plus BS and CG on Intel-Pascal (the
+/// PCIe eviction-churn side) — compare four ways of deciding what
+/// leaves the device:
+///
+/// * **lru+hints** — `UM Auto` over the raw LRU evictor: the PR 2
+///   early-drop + protect hints, today's default;
+/// * **learned** — `UM Auto` with the learned dead-range ranker
+///   (`--evictor learned`);
+/// * **etc** — hand-advised UM with the ETC thrash throttle, the
+///   `ablate_etc` rescue of the P9 pathology;
+/// * **watermark** — basic UM with a 256 MiB pre-eviction watermark
+///   (the related-work [3] ablation).
+///
+/// The two `UM Auto` policies additionally run the `--streams 2`
+/// cross-stream case (one stream's streaming-oversubscribed hints
+/// interacting with the other's protection on the same buffers — the
+/// PR 4 merge-view rules under eviction pressure). Each row reports
+/// kernel time plus the eviction-quality counters: live-evicted bytes
+/// (evicted, then demanded back — lower is better), dead-hit bytes
+/// (evicted and never missed), the dead ratio, and writeback/dropped
+/// traffic.
+pub fn fig_evict(reps: usize) -> Report {
+    let cells: [(AppId, PlatformId); 4] = [
+        (AppId::Bs, PlatformId::P9Volta),
+        (AppId::Fdtd3d, PlatformId::P9Volta),
+        (AppId::Bs, PlatformId::IntelPascal),
+        (AppId::Cg, PlatformId::IntelPascal),
+    ];
+    // (label, variant, streams, platform tweak)
+    type Tweak = fn(&mut crate::platform::PlatformSpec);
+    let policies: [(&str, Variant, u32, Tweak); 6] = [
+        ("lru+hints", Variant::UmAuto, 1, |_| {}),
+        ("lru+hints/2s", Variant::UmAuto, 2, |_| {}),
+        ("learned", Variant::UmAuto, 1, |p| p.um.evictor = EvictorKind::Learned),
+        ("learned/2s", Variant::UmAuto, 2, |p| p.um.evictor = EvictorKind::Learned),
+        ("etc", Variant::UmAdvise, 1, |p| p.um.etc_throttle = true),
+        ("watermark", Variant::Um, 1, |p| p.um.preevict_watermark = 256 * MIB),
+    ];
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec![
+        "platform",
+        "app",
+        "policy",
+        "variant",
+        "streams",
+        "kernel_ms",
+        "evict_live_evicted_bytes",
+        "evict_dead_hit_bytes",
+        "eviction_dead_ratio",
+        "writeback_bytes",
+        "dropped_bytes",
+        "auto_early_dropped_bytes",
+    ]);
+    for (app, platform) in cells {
+        let mut table = TextTable::new(vec![
+            "policy",
+            "streams",
+            "kernel (ms)",
+            "live-evicted (GB)",
+            "dead-hit (GB)",
+            "dead ratio",
+            "writeback (GB)",
+            "dropped (GB)",
+        ])
+        .title(format!(
+            "eviction-policy study: {} — {} (oversubscribed)",
+            platform.name(),
+            app.name()
+        ))
+        .left(0);
+        for (label, variant, streams, tweak) in policies {
+            let mut plat = platform.spec();
+            tweak(&mut plat);
+            let cell = Cell { app, platform, variant, regime: Regime::Oversubscribed };
+            let r = run_cell_opts(cell, reps, &RunOpts { trace: false, streams }, &plat);
+            let m = &r.last.metrics;
+            let gb = |b: u64| format!("{:.2}", b as f64 / 1e9);
+            table.row(vec![
+                label.to_string(),
+                streams.to_string(),
+                format!("{:.1}", r.kernel_time.mean.as_ms()),
+                gb(m.evict_live_evicted_bytes),
+                gb(m.evict_dead_hit_bytes),
+                fmt_pct(m.eviction_dead_ratio()),
+                gb(m.writeback_bytes),
+                gb(m.dropped_bytes),
+            ]);
+            csv.row(vec![
+                platform.name().to_string(),
+                app.name().to_string(),
+                label.to_string(),
+                variant.name().to_string(),
+                streams.to_string(),
+                format!("{:.3}", r.kernel_time.mean.as_ms()),
+                m.evict_live_evicted_bytes.to_string(),
+                m.evict_dead_hit_bytes.to_string(),
+                fmt_frac(m.eviction_dead_ratio()),
+                m.writeback_bytes.to_string(),
+                m.dropped_bytes.to_string(),
+                m.auto_early_dropped_bytes.to_string(),
+            ]);
+        }
+        text.push_str(&table.render());
+        text.push('\n');
+    }
+    Report::new("evict_study", text).with_csv("evict_study", csv)
 }
 
 #[cfg(test)]

@@ -48,8 +48,9 @@ impl Report {
 }
 
 /// Regenerate everything (Table I + Figs. 3-8 + the auto-vs-hand-tuned
-/// study + the predictor-vs-heuristic study + ablations) into `out`.
-/// `reps` follows the paper's 5-repetition methodology.
+/// study + the predictor-vs-heuristic study + the eviction-policy
+/// study + ablations) into `out`. `reps` follows the paper's
+/// 5-repetition methodology.
 pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
     use super::{ablate, figures};
     let mut written = Vec::new();
@@ -63,6 +64,7 @@ pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
         figures::fig8(),
         figures::fig_auto(reps),
         figures::fig_predictor(reps),
+        figures::fig_evict(reps),
         ablate::ablate_all(),
     ];
     for r in reports {

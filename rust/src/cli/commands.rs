@@ -10,7 +10,7 @@ use crate::coordinator::{run_cell, run_cell_opts, Cell, Suite, SuiteConfig};
 use crate::platform::PlatformId;
 use crate::trace::TimeSeries;
 use crate::um::metrics::fmt_pct;
-use crate::um::PredictorKind;
+use crate::um::{EvictorKind, PredictorKind};
 use crate::util::jsonout::Json;
 use crate::util::table::TextTable;
 use crate::util::units::Ns;
@@ -23,12 +23,14 @@ umbra — Unified-Memory Behavior Reproduction & Analysis
 USAGE:
   umbra list
   umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
-       [--predictor PRED] [--streams N]
+       [--predictor PRED] [--evictor EV] [--streams N]
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
-       [--streams N] [--with-auto] [--compare BASELINE.json] [--tolerance T]
+       [--evictor EV] [--streams N] [--with-auto] [--compare BASELINE.json]
+       [--tolerance T]
   umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
   umbra table 1 [--out DIR]
-  umbra auto [--reps N] [--out DIR] [--predictor PRED] [--streams N] [--compare]
+  umbra auto [--reps N] [--out DIR] [--predictor PRED] [--evictor EV] [--streams N]
+       [--compare] [--evict-study]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
   umbra validate [--artifacts DIR]
@@ -42,11 +44,17 @@ USAGE:
   VAR  = explicit|um|advise|prefetch|both|auto
   REG  = in-memory|oversub
   PRED = heuristic|learned (um::auto predictive-prefetch engine; default learned)
+  EV   = lru|learned (eviction victim selection; default lru — the paper's
+         driver LRU. `learned` biases victims by the um::auto dead-range
+         ranker; only UM Auto cells differ. See docs/EVICTION.md)
 
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
-  the chosen predictor mode, and `umbra auto --compare` the learned-vs-
-  heuristic predictor study. `--streams N` rotates kernel launches
+  the chosen predictor mode, `umbra auto --compare` the learned-vs-
+  heuristic predictor study, and `umbra auto --evict-study` the
+  eviction-policy study (learned eviction vs. LRU+hints vs. ETC
+  throttle vs. pre-eviction watermark on the oversubscription
+  pathology cells, including the --streams 2 cross-stream case). `--streams N` rotates kernel launches
   across N compute streams (engine state is keyed per stream; per-
   stream counters land in json/suite.json). `umbra suite --out` writes
   the decision-quality trajectory to json/suite.json; `umbra suite
@@ -96,6 +104,15 @@ fn parse_predictor(args: &Args) -> Result<PredictorKind> {
     }
 }
 
+/// Optional `--evictor lru|learned` (default: lru — the paper's driver
+/// behaviour, byte-identical to the pre-knob runtime).
+fn parse_evictor(args: &Args) -> Result<EvictorKind> {
+    match args.flag("evictor") {
+        None => Ok(EvictorKind::default()),
+        Some(v) => EvictorKind::parse(v).ok_or_else(|| anyhow!("--evictor: invalid value '{v}'")),
+    }
+}
+
 /// Optional `--streams N` (default 1 — the paper's single-stream
 /// wiring; N > 1 rotates kernel launches across N compute streams).
 fn parse_streams(args: &Args) -> Result<u32> {
@@ -126,6 +143,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let streams = parse_streams(args)?;
     let mut plat = cell.platform.spec();
     plat.um.auto_predictor = predictor;
+    plat.um.evictor = parse_evictor(args)?;
     let r = run_cell_opts(cell, reps, &RunOpts { trace, streams }, &plat);
     println!("{}", cell.label());
     println!(
@@ -139,8 +157,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.gpu_fault_groups, m.gpu_faulted_pages, m.migrated_pages_h2d, m.migrated_pages_d2h
     );
     println!(
-        "  evictions: {} chunks ({} B written back, {} B dropped free)",
-        m.evicted_chunks, m.writeback_bytes, m.dropped_bytes
+        "  evictions: {} chunks ({} B written back, {} B dropped free); quality: {} B live-evicted, {} B dead-hit ({} dead)",
+        m.evicted_chunks,
+        m.writeback_bytes,
+        m.dropped_bytes,
+        m.evict_live_evicted_bytes,
+        m.evict_dead_hit_bytes,
+        fmt_pct(m.eviction_dead_ratio())
     );
     println!(
         "  remote: gpu->host {} B, cpu->dev {} B; invalidations {} pages",
@@ -196,6 +219,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
         threads: args.flag_usize("threads", 0).map_err(|e| anyhow!(e))?,
         paper_matrix: !args.flag_bool("full-matrix"),
         predictor: parse_predictor(args)?,
+        evictor: parse_evictor(args)?,
         streams: parse_streams(args)?,
         // The decision-quality gate needs UM Auto cells in the matrix.
         variants: if args.flag_bool("with-auto") {
@@ -237,7 +261,8 @@ fn cmd_suite(args: &Args) -> Result<()> {
     // trajectory"): accuracy/coverage/mispredicted bytes per cell plus
     // per-stream counters, machine-readable so PR-over-PR regressions
     // show up — written with --out, gated with --compare.
-    let json = compare::suite_json(&suite, config.predictor, reps, config.streams);
+    let json =
+        compare::suite_json(&suite, config.predictor, config.evictor, reps, config.streams);
     if let Some(out) = args.flag("out") {
         std::fs::create_dir_all(out)?;
         let mut header: Vec<String> =
@@ -345,14 +370,22 @@ fn cmd_table(args: &Args) -> Result<()> {
 /// The auto-vs-hand-tuned study (`um::auto` policy engine), in either
 /// predictor mode; `--streams N` rotates kernel launches across N
 /// compute streams and reports the engine's per-stream counters in
-/// `json/suite.json`; `--compare` runs the learned-vs-heuristic
-/// predictor study instead.
+/// `json/suite.json`; `--evictor` selects victim-selection policy;
+/// `--compare` runs the learned-vs-heuristic predictor study instead,
+/// and `--evict-study` the eviction-policy study (`docs/EVICTION.md`).
 fn cmd_auto(args: &Args) -> Result<()> {
     let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
-    let report = if args.flag_bool("compare") {
+    let report = if args.flag_bool("evict-study") {
+        figures::fig_evict(reps)
+    } else if args.flag_bool("compare") {
         figures::fig_predictor(reps)
     } else {
-        figures::fig_auto_opts(reps, parse_predictor(args)?, parse_streams(args)?)
+        figures::fig_auto_opts(
+            reps,
+            parse_predictor(args)?,
+            parse_streams(args)?,
+            parse_evictor(args)?,
+        )
     };
     println!("{}", report.text);
     if let Some(out) = args.flag("out") {
@@ -531,6 +564,21 @@ mod tests {
         assert!(parse_predictor(&a).is_err());
         assert!(USAGE.contains("--predictor"), "usage documents the flag");
         assert!(USAGE.contains("--compare"), "usage documents the study");
+    }
+
+    #[test]
+    fn evictor_flag_parses_and_rejects() {
+        let a = args("run --evictor lru");
+        assert_eq!(parse_evictor(&a).unwrap(), EvictorKind::Lru);
+        let a = args("run --evictor learned");
+        assert_eq!(parse_evictor(&a).unwrap(), EvictorKind::Learned);
+        let a = args("run");
+        assert_eq!(parse_evictor(&a).unwrap(), EvictorKind::Lru, "default stays LRU");
+        let a = args("run --evictor bogus");
+        assert!(parse_evictor(&a).is_err());
+        assert!(USAGE.contains("--evictor"), "usage documents the knob");
+        assert!(USAGE.contains("--evict-study"), "usage documents the study");
+        assert!(USAGE.contains("docs/EVICTION.md"), "usage points at the design doc");
     }
 
     #[test]

@@ -4,7 +4,7 @@ use std::collections::HashMap;
 
 use crate::apps::{AppId, Regime, RunOpts, Variant};
 use crate::platform::PlatformId;
-use crate::um::PredictorKind;
+use crate::um::{EvictorKind, PredictorKind};
 use crate::util::pool::Pool;
 
 use super::driver::{run_cell_opts, Cell, CellResult};
@@ -28,6 +28,10 @@ pub struct SuiteConfig {
     /// Predictor mode for `UM Auto` cells (ignored by every other
     /// variant).
     pub predictor: PredictorKind,
+    /// Eviction victim-selection policy (the `--evictor` knob; `Lru`
+    /// is the paper's driver behaviour, `Learned` only differs on
+    /// `UM Auto` cells where the engine supplies hints).
+    pub evictor: EvictorKind,
     /// Compute streams kernel launches rotate across (1 = the paper's
     /// single-stream wiring; the `--streams` knob).
     pub streams: u32,
@@ -45,6 +49,7 @@ impl Default for SuiteConfig {
             threads: 0,
             paper_matrix: true,
             predictor: PredictorKind::default(),
+            evictor: EvictorKind::default(),
             streams: 1,
         }
     }
@@ -90,6 +95,7 @@ impl Suite {
         let reps = config.reps;
         let opts = RunOpts { trace: config.trace, streams: config.streams.max(1) };
         let predictor = config.predictor;
+        let evictor = config.evictor;
         let pool = if config.threads == 0 {
             Pool::with_default_size(16)
         } else {
@@ -98,6 +104,7 @@ impl Suite {
         let results = pool.map(cells, move |cell| {
             let mut plat = cell.platform.spec();
             plat.um.auto_predictor = predictor;
+            plat.um.evictor = evictor;
             (cell, run_cell_opts(cell, reps, &opts, &plat))
         });
         Suite { results: results.into_iter().collect() }

@@ -349,6 +349,55 @@ impl DeviceMemory {
         self.evictable == 0 && self.pinned_chunks > 0
     }
 
+    /// Like [`DeviceMemory::pop_lru`], but *without* bumping the
+    /// eviction statistics: the learned-evictor path pops candidate
+    /// victims it may decide to defer (predicted-live hints) and only
+    /// counts the ones it actually evicts via
+    /// [`DeviceMemory::note_eviction`]. The plain-LRU path keeps using
+    /// `pop_lru`, whose pop/count coupling is pinned by the
+    /// `--evictor lru` differential oracle.
+    pub fn pop_victim(&mut self, forced: bool) -> Option<(ChunkRef, Bytes)> {
+        if let Some(hit) = self.pop_heap(false) {
+            return Some(hit);
+        }
+        if forced {
+            if let Some(hit) = self.pop_heap(true) {
+                return Some(hit);
+            }
+        }
+        None
+    }
+
+    /// Count one committed eviction (pairs with
+    /// [`DeviceMemory::pop_victim`] and with hint-selected victims that
+    /// never went through a heap pop).
+    pub fn note_eviction(&mut self, forced_pinned: bool) {
+        self.evictions += 1;
+        if forced_pinned {
+            self.forced_pinned_evictions += 1;
+        }
+    }
+
+    /// Re-insert a deferred victim: pushes a fresh heap entry carrying
+    /// the chunk's *current* stamp, so its LRU position (relative to
+    /// everything else) is exactly what it was before the pop. No-op if
+    /// the chunk is gone or locked.
+    pub fn repush(&mut self, chunk: ChunkRef) {
+        if let Some(meta) = self.chunks.get(&chunk) {
+            let (t, seq, pinned, locked) = (meta.last_touch, meta.seq, meta.pinned, meta.locked);
+            if !locked {
+                self.push_entry(chunk, t, seq, pinned);
+            }
+        }
+    }
+
+    /// Whether `chunk` is resident and evictable without force (not
+    /// pinned, not `cudaMalloc`-locked) — the validity check for stale
+    /// engine eviction hints.
+    pub fn is_evictable_resident(&self, chunk: ChunkRef) -> bool {
+        self.chunks.get(&chunk).is_some_and(|m| !m.pinned && !m.locked)
+    }
+
     pub fn reset(&mut self) {
         self.used = 0;
         self.chunks.clear();
@@ -588,6 +637,33 @@ mod tests {
             assert_eq!(a.pop_lru(false).unwrap(), b.pop_lru(false).unwrap());
         }
         assert!(a.pop_lru(false).is_none() && b.pop_lru(false).is_none());
+    }
+
+    #[test]
+    fn pop_victim_defer_and_repush_preserve_lru_order() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(10));
+        d.add_resident(cr(0, 1), 2 * MIB, Ns(20));
+        d.add_resident(cr(0, 2), 2 * MIB, Ns(30));
+        // Pop the LRU candidate without committing; defer + repush.
+        let (c, b) = d.pop_victim(false).unwrap();
+        assert_eq!((c, b), (cr(0, 0), 2 * MIB));
+        assert_eq!(d.evictions, 0, "pop_victim never counts");
+        d.repush(cr(0, 0));
+        // Order unchanged: chunk 0 is still the LRU.
+        let (c, _) = d.pop_victim(false).unwrap();
+        assert_eq!(c, cr(0, 0));
+        d.note_eviction(false);
+        d.remove_resident(cr(0, 0), 2 * MIB);
+        assert_eq!(d.evictions, 1);
+        assert_eq!(d.forced_pinned_evictions, 0);
+        let (c, _) = d.pop_victim(false).unwrap();
+        assert_eq!(c, cr(0, 1), "remaining order intact");
+        // Evictability probe.
+        assert!(d.is_evictable_resident(cr(0, 2)));
+        d.set_pinned(cr(0, 2), true);
+        assert!(!d.is_evictable_resident(cr(0, 2)));
+        assert!(!d.is_evictable_resident(cr(0, 0)), "fully evicted chunk");
     }
 
     #[test]

@@ -17,15 +17,19 @@
 //!   cross-access decisions — auto ReadMostly set/unset, ahead-of-access
 //!   predictive prefetch, and eviction hints.
 
+use std::collections::VecDeque;
+
 use crate::gpu::stream::StreamId;
-use crate::mem::{AllocId, PageRange, Residency, PAGE_SIZE};
+use crate::mem::{AllocId, ChunkRef, PageRange, Residency, PAGES_PER_CHUNK, PAGE_SIZE};
 use crate::trace::TraceKind;
-use crate::um::policy::Advise;
+use crate::um::policy::{Advise, EvictorKind};
+use crate::util::fxhash::FxHashSet;
 use crate::util::units::{Bytes, Ns};
 
 use super::super::runtime::{AccessOutcome, Class, UmRuntime};
 use super::pattern::{classify, Pattern};
 use super::predictor::{heuristic_prediction, PredictorKind};
+use super::AutoEngine;
 
 impl UmRuntime {
     /// Auto advises are safe unless a coherent platform is
@@ -282,9 +286,22 @@ impl UmRuntime {
             // Ranked predictions share the DMA engine: issue in order.
             t_pred = ready;
         }
+        // The learned eviction path is active only when eviction can
+        // happen at all (managed footprint exceeds capacity). The gate
+        // must cover the legacy early-drop suppression below too:
+        // whenever the learned path will not run, the engine must
+        // behave exactly like the LRU evictor — including in a
+        // non-oversubscribed run that still classifies as streaming.
+        let learned_eviction_active = self.policy.evictor == EvictorKind::Learned
+            && self.space.managed_bytes() > self.dev.capacity();
         if streaming {
-            // Eviction hints. Early-drop streamed-past duplicates …
-            if range.start > 0 {
+            // Eviction hints. Early-drop streamed-past duplicates — the
+            // original `[0, start)` rule, kept verbatim for the LRU
+            // evictor (`--evictor lru` is pinned byte-identical to it
+            // by `tests/evictor_modes.rs`). The learned ranked-hint
+            // path below subsumes it: its dead ranges also cover the
+            // wrapped-cyclic leftovers this range can never reach.
+            if !learned_eviction_active && range.start > 0 {
                 let dropped = self.auto_early_drop_duplicates(id, PageRange::new(0, range.start));
                 if dropped > 0 {
                     self.metrics.auto_early_dropped_bytes += dropped;
@@ -308,10 +325,131 @@ impl UmRuntime {
                 }
             }
         }
+        // Learned evictor: refresh the hint seam from the merged
+        // dead-range forecast and pre-drop predicted-dead clean
+        // duplicates (the in-memory regime never pays for, or risks,
+        // any of this — see the gate above).
+        if learned_eviction_active {
+            // Whole-allocation sweep: the apps launch kernels over full
+            // buffers, so the delta tables see only zero deltas — but a
+            // streaming classification plus a range spanning most of
+            // the allocation means the next access restarts the sweep
+            // from the bottom, which is exactly the cyclic pattern raw
+            // LRU is pessimal for.
+            let sweep = streaming && range.len().saturating_mul(2) >= full.len();
+            self.auto_actuate_learned_eviction(&eng, stream, id, sweep);
+        }
 
         self.auto = Some(eng);
     }
 
+    /// The `--evictor learned` actuation step (`docs/EVICTION.md`):
+    ///
+    /// 1. translate the engine's merged dead-range forecast
+    ///    ([`AutoEngine::eviction_forecast_for`]) into ranked chunk
+    ///    hints for `um/evict.rs` — fully-contained chunks only, ranked
+    ///    range-by-range (strongest first) and high-side-first within a
+    ///    range (the side furthest from its next re-reference);
+    /// 2. **pre-drop** predicted-dead clean duplicates ahead of the
+    ///    watermark path, free (the host copy stays valid). The dropped
+    ///    extent is scaled by how far the range's confidence clears the
+    ///    issue gate — eviction aggressiveness rides the same
+    ///    saturating counters that scale prefetch depth;
+    /// 3. with `sweep` (a streaming allocation accessed as one
+    ///    whole-buffer pass), protect everything of it that is resident
+    ///    *right now*: the previous sweep's surviving tail is what the
+    ///    next sweep can still hit, and raw LRU always evicts it first
+    ///    (the classic cyclic pathology — §IV-B's churn). Victim
+    ///    pressure then falls on the sweep's own fresh migrations.
+    fn auto_actuate_learned_eviction(
+        &mut self,
+        eng: &AutoEngine,
+        stream: StreamId,
+        id: AllocId,
+        sweep: bool,
+    ) {
+        let cfg = &eng.cfg;
+        let fc = eng.eviction_forecast_for(id);
+
+        let mut dead_chunks: VecDeque<ChunkRef> = VecDeque::new();
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
+        for d in &fc.dead {
+            let first = d.range.start.div_ceil(PAGES_PER_CHUNK);
+            let last = d.range.end / PAGES_PER_CHUNK; // exclusive
+            for chunk in (first..last).rev() {
+                if seen.insert(chunk) {
+                    dead_chunks.push_back(ChunkRef { alloc: id, chunk });
+                }
+            }
+        }
+        let mut live_chunks: FxHashSet<u32> = FxHashSet::default();
+        for l in &fc.live {
+            if l.is_empty() {
+                continue;
+            }
+            let first = l.start / PAGES_PER_CHUNK;
+            let last = (l.end - 1) / PAGES_PER_CHUNK;
+            for chunk in first..=last {
+                live_chunks.insert(chunk);
+            }
+        }
+        if sweep {
+            let alloc = self.space.get(id);
+            let full = alloc.full();
+            for (r, p) in alloc.pages.runs_in(full) {
+                if !p.residency.on_device() || r.is_empty() {
+                    continue;
+                }
+                let first = r.start / PAGES_PER_CHUNK;
+                let last = (r.end - 1) / PAGES_PER_CHUNK;
+                for chunk in first..=last {
+                    live_chunks.insert(chunk);
+                }
+            }
+        }
+
+        let span = (1.0 - cfg.min_confidence).max(f64::EPSILON);
+        let mut dropped_total: Bytes = 0;
+        for d in &fc.dead {
+            let frac = ((d.confidence - cfg.min_confidence) / span).clamp(0.0, 1.0);
+            let take = (f64::from(d.range.len()) * frac) as u32;
+            if take == 0 {
+                continue;
+            }
+            // The high side of a dead range is the furthest from its
+            // next re-reference (just-streamed-past for behind ranges,
+            // last-approached for wrapped leftovers): drop from there.
+            // The live veto applies to pre-drops exactly as it does to
+            // victim hints: a chunk some stream still holds live (incl.
+            // the sweep rule's resident set) must never be dropped —
+            // otherwise the pre-drop would defeat the very protection
+            // the hints establish.
+            let sub = PageRange::new(d.range.end - take, d.range.end);
+            let mut page = sub.start;
+            while page < sub.end {
+                let chunk = page / PAGES_PER_CHUNK;
+                let chunk_end = ((chunk + 1) * PAGES_PER_CHUNK).min(sub.end);
+                if !live_chunks.contains(&chunk) {
+                    dropped_total +=
+                        self.auto_early_drop_duplicates(id, PageRange::new(page, chunk_end));
+                }
+                page = chunk_end;
+            }
+        }
+        if dropped_total > 0 {
+            self.metrics.auto_early_dropped_bytes += dropped_total;
+            self.metrics.auto_decisions += 1;
+            self.metrics.stream_mut(stream).auto_decisions += 1;
+        }
+
+        // Hinted-dead chunks the sweep rule now calls live are not
+        // hints at all.
+        dead_chunks.retain(|c| !live_chunks.contains(&c.chunk));
+        self.evict_hints.set_for(id, dead_chunks, live_chunks);
+        // The parked victims belong to the previous forecast: give
+        // them back to the LRU before the new hints take effect.
+        self.flush_deferred_victims();
+    }
 }
 
 #[cfg(test)]
@@ -535,6 +673,84 @@ mod tests {
         assert_eq!(r.auto_engine().unwrap().pattern_of(a), Pattern::StreamingOversub);
         assert!(r.metrics.auto_advises >= 1, "Intel oversubscription: advise applied");
         assert!(r.metrics.auto_early_dropped_bytes > 0, "streamed-past duplicates dropped");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn learned_evictor_inactive_keeps_legacy_early_drop() {
+        // Regression (review finding): the learned eviction path only
+        // arms when the managed footprint exceeds device capacity —
+        // but streaming classifications can occur below that (here: a
+        // locked cudaMalloc hog forces churn while managed < capacity).
+        // The legacy [0, start) early-drop must then stay active under
+        // --evictor learned, keeping it byte-identical to lru.
+        let run = |evictor: EvictorKind| {
+            let mut plat = intel_pascal();
+            plat.gpu.mem_capacity = 64 * MIB;
+            plat.gpu.reserved = 0;
+            plat.um.evictor = evictor;
+            let mut r = UmRuntime::new(&plat);
+            r.enable_auto();
+            r.malloc_device("hog", 32 * MIB); // locked: shrinks free, not capacity
+            let a = r.malloc_managed("a", 48 * MIB); // managed < capacity
+            let full = r.space.get(a).full();
+            r.host_access(a, full, true, Ns::ZERO);
+            let half = PageRange::new(0, full.end / 2);
+            let rest = PageRange::new(full.end / 2, full.end);
+            let mut t = Ns::ZERO;
+            for _ in 0..6 {
+                t = r.gpu_access(a, half, false, t).done;
+                t = r.gpu_access(a, rest, false, t).done;
+            }
+            r.finish_eviction_audit();
+            r.check_residency_invariant().unwrap();
+            (t, r.metrics)
+        };
+        let lru = run(EvictorKind::Lru);
+        let learned = run(EvictorKind::Learned);
+        assert!(
+            lru.1.auto_early_dropped_bytes > 0,
+            "sanity: the streaming hint fires in this configuration"
+        );
+        assert_eq!(lru, learned, "learned path inactive: byte-identical to lru");
+    }
+
+    #[test]
+    fn learned_evictor_hints_cover_wrapped_cyclic_leftovers() {
+        // Regression for the `[0, range.start)` early-drop blind spot:
+        // after a cyclic wrap, the previous pass's streamed-past
+        // duplicates sit *above* the current position, where the old
+        // rule never looked. The ranked-hint path must cover them.
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 64 * MIB;
+        plat.gpu.reserved = 0;
+        plat.um.evictor = EvictorKind::Learned;
+        let (mut r, a) = prepped(&plat, 96 * MIB); // 1536 pages, 2 page groups
+        let windows: Vec<PageRange> =
+            (0..12u32).map(|w| PageRange::new(w * 128, (w + 1) * 128)).collect();
+        let mut t = Ns::ZERO;
+        for _ in 0..3 {
+            for &w in &windows {
+                t = r.gpu_access(a, w, false, t).done;
+            }
+        }
+        for &w in &windows[..5] {
+            t = r.gpu_access(a, w, false, t).done; // partial 4th pass
+        }
+        let hints = &r.evict_hints;
+        let high_chunk = 1024 / crate::mem::PAGES_PER_CHUNK; // group 1 starts here
+        assert!(
+            hints
+                .dead
+                .get(&a)
+                .is_some_and(|q| q.iter().any(|c| c.chunk >= high_chunk)),
+            "wrapped leftovers above the frontier must rank dead: {:?}",
+            hints.dead.get(&a)
+        );
+        assert!(
+            r.metrics.auto_early_dropped_bytes > 0,
+            "confidence-scaled pre-drop fired on the dead ranges"
+        );
         r.check_residency_invariant().unwrap();
     }
 

@@ -26,6 +26,7 @@
 //! | advise guard | coherent platform + managed footprint exceeds device capacity | suppress auto advises entirely | §IV-B: advises force local placement and *hurt* oversubscribed P9 (BS 1.7x, FDTD3d 3x worse) |
 //! | ahead-of-access prefetch | stable sequential/strided pattern | prefetch the predicted next range (sized by detected stride, clamped by free memory) on the access tail | §III-A3: background prefetch overlaps kernel execution |
 //! | eviction hints | streaming-oversubscribed pattern | early-drop streamed-past ReadMostly duplicates; on pattern flips, re-touch (protect) read-mostly hot allocations | §II-D: droppable-vs-writeback asymmetry; protect reused data from LRU churn |
+//! | learned eviction (`--evictor learned`) | confident dead-range forecast from the delta tables | ranked hints into `um/evict.rs`: pre-drop predicted-dead clean duplicates (extent scaled by confidence), evict hinted-dead chunks first, defer predicted-live chunks | §IV-B: what you evict matters as much as what you prefetch — see `docs/EVICTION.md` |
 //!
 //! ## Predictive prefetch: learned vs. heuristic
 //!
@@ -47,8 +48,10 @@
 //! `auto_advises`, `auto_early_dropped_bytes`, plus the prediction
 //! accuracy/coverage counters `auto_predict_queries`,
 //! `auto_predict_confident`, `auto_learned_predictions`,
-//! `auto_fallback_predictions`), surfaced through the CSV/JSON report
-//! output so decision quality is trackable across PRs.
+//! `auto_fallback_predictions`, and the eviction-quality pair
+//! `evict_live_evicted_bytes` / `evict_dead_hit_bytes`), surfaced
+//! through the CSV/JSON report output so decision quality is
+//! trackable across PRs.
 #![warn(missing_docs)]
 
 pub mod actuator;
@@ -65,7 +68,9 @@ use crate::util::units::Ns;
 use super::runtime::UmRuntime;
 use observer::AllocHistory;
 use pattern::{Pattern, PatternTracker};
-pub use predictor::{LearnedPredictor, Prediction, PredictorKind};
+pub use predictor::{
+    DeadRange, EvictionForecast, LearnedPredictor, Prediction, PredictorKind,
+};
 
 /// Tuning knobs of the policy engine. Defaults are deliberately
 /// conservative: the engine must never make a workload much worse than
@@ -98,8 +103,13 @@ pub struct AutoConfig {
     /// delta-history tables (default) or the original
     /// pattern-classifier rule.
     pub predictor: PredictorKind,
-    /// Ranked predicted ranges issued per access in learned mode.
-    pub predict_top_k: usize,
+    /// Maximum ranked predicted ranges issued per access in learned
+    /// mode — the ceiling of the confidence-scaled Markov chain (the
+    /// chain keeps stepping deeper while the cumulative confidence
+    /// clears `min_confidence`, so a saturated stream reaches this
+    /// depth and a marginal one stops after its first step). The same
+    /// depth bounds the dead-range ranker's predicted live path.
+    pub predict_depth: usize,
     /// Minimum confidence (`[0, 1]`) for a learned prediction to be
     /// issued; below it the engine falls back to the heuristic rule.
     pub min_confidence: f64,
@@ -132,7 +142,7 @@ impl Default for AutoConfig {
             escalate: true,
             predict: true,
             predictor: PredictorKind::Learned,
-            predict_top_k: 2,
+            predict_depth: 4,
             min_confidence: 0.5,
             group_pages: 1024, // 64 MiB page groups
             delta_history: 2,
@@ -261,6 +271,43 @@ impl AutoEngine {
             .unwrap_or(Ns::ZERO)
     }
 
+    /// The merged dead-range forecast for `id` over every stream's
+    /// learned predictor — the eviction-hint seam's input. Dead ranges
+    /// from any stream survive only where *no* stream predicts
+    /// liveness (any-stream liveness vetoes a drop, the same merge-view
+    /// rule the ReadMostly veto uses); the merged live set is the
+    /// union. Folded in ascending stream order, never hash order, so
+    /// hint ranking is deterministic.
+    pub(super) fn eviction_forecast_for(&self, id: AllocId) -> EvictionForecast {
+        let mut entries: Vec<(StreamId, &StreamAllocPolicy)> = self
+            .state
+            .iter()
+            .filter(|((_, a), _)| *a == id)
+            .map(|((s, _), st)| (*s, st))
+            .collect();
+        entries.sort_by_key(|(s, _)| *s);
+        let mut live: Vec<PageRange> = Vec::new();
+        let mut dead: Vec<DeadRange> = Vec::new();
+        for (_, st) in entries {
+            let fc = st.predictor.eviction_forecast(&self.cfg);
+            live.extend(fc.live);
+            dead.extend(fc.dead);
+        }
+        let mut vetoed: Vec<DeadRange> = Vec::new();
+        for d in dead {
+            for piece in subtract_ranges(d.range, &live) {
+                vetoed.push(DeadRange { range: piece, confidence: d.confidence });
+            }
+        }
+        vetoed.sort_by(|a, b| {
+            b.confidence
+                .partial_cmp(&a.confidence)
+                .unwrap()
+                .then(a.range.start.cmp(&b.range.start))
+        });
+        EvictionForecast { dead: vetoed, live }
+    }
+
     /// Allocations (ascending, deterministic) other than `exclude`
     /// whose merged view is read-mostly hot on at least one stream —
     /// the LRU-protection targets of the streaming eviction hint.
@@ -275,6 +322,29 @@ impl AutoEngine {
         hot.dedup();
         hot
     }
+}
+
+/// `range` minus every overlapping piece of `cuts` (the any-stream
+/// liveness veto): the surviving sub-ranges, in position order.
+fn subtract_ranges(range: PageRange, cuts: &[PageRange]) -> Vec<PageRange> {
+    let mut pieces = vec![range];
+    for cut in cuts {
+        let mut next = Vec::with_capacity(pieces.len() + 1);
+        for p in pieces {
+            if cut.end <= p.start || cut.start >= p.end {
+                next.push(p);
+                continue;
+            }
+            if cut.start > p.start {
+                next.push(PageRange::new(p.start, cut.start));
+            }
+            if cut.end < p.end {
+                next.push(PageRange::new(cut.end, p.end));
+            }
+        }
+        pieces = next;
+    }
+    pieces
 }
 
 impl UmRuntime {
@@ -296,5 +366,69 @@ impl UmRuntime {
     /// The attached engine, if any (inspection only).
     pub fn auto_engine(&self) -> Option<&AutoEngine> {
         self.auto.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(start: u32, end: u32) -> PageRange {
+        PageRange::new(start, end)
+    }
+
+    #[test]
+    fn subtract_ranges_cases() {
+        assert_eq!(subtract_ranges(r(0, 100), &[]), vec![r(0, 100)]);
+        assert_eq!(subtract_ranges(r(0, 100), &[r(200, 300)]), vec![r(0, 100)]);
+        assert_eq!(subtract_ranges(r(0, 100), &[r(40, 60)]), vec![r(0, 40), r(60, 100)]);
+        assert_eq!(subtract_ranges(r(0, 100), &[r(0, 100)]), Vec::<PageRange>::new());
+        assert_eq!(
+            subtract_ranges(r(0, 100), &[r(90, 150), r(0, 10)]),
+            vec![r(10, 90)],
+            "overhanging cuts clip both ends"
+        );
+        assert_eq!(
+            subtract_ranges(r(0, 100), &[r(20, 30), r(50, 60)]),
+            vec![r(0, 20), r(30, 50), r(60, 100)]
+        );
+    }
+
+    #[test]
+    fn merged_forecast_vetoes_dead_with_any_streams_live() {
+        // Stream 0 streams forward through the allocation (everything
+        // behind its frontier is dead); stream 2 sits re-reading the
+        // low pages in a tight local-reuse loop. The merge must carve
+        // stream 2's live window out of stream 0's dead range.
+        let mut eng = AutoEngine::new(AutoConfig::default());
+        let id = AllocId(0);
+        let s0 = eng.state.entry((StreamId(0), id)).or_default();
+        for i in 0..12u32 {
+            s0.predictor.observe(PageRange::new(i * 16, (i + 1) * 16), &eng.cfg);
+        }
+        let s2 = eng.state.entry((StreamId(2), id)).or_default();
+        for _ in 0..6 {
+            s2.predictor.observe(PageRange::new(0, 16), &eng.cfg);
+            s2.predictor.observe(PageRange::new(16, 32), &eng.cfg);
+        }
+        let fc = eng.eviction_forecast_for(id);
+        assert!(!fc.dead.is_empty(), "stream 0's streamed-past data still ranks dead");
+        for d in &fc.dead {
+            assert!(
+                d.range.start >= 32,
+                "stream 2's live window [0, 32) vetoes the drop: {:?}",
+                d.range
+            );
+        }
+        // A single-stream engine with only the streamer sees the full
+        // behind-frontier range dead — the veto really came from the
+        // merge.
+        let mut solo = AutoEngine::new(AutoConfig::default());
+        let st = solo.state.entry((StreamId(0), id)).or_default();
+        for i in 0..12u32 {
+            st.predictor.observe(PageRange::new(i * 16, (i + 1) * 16), &eng.cfg);
+        }
+        let fc = solo.eviction_forecast_for(id);
+        assert_eq!(fc.dead[0].range.start, 0);
     }
 }

@@ -104,6 +104,20 @@ impl DeltaModel {
         self.table.get(&sig).map_or(&[], Vec::as_slice)
     }
 
+    /// Candidates for `sig` at or above the `min_confidence` issue gate,
+    /// strongest first, zero deltas (re-touches of resident data)
+    /// excluded. The shared filter of the prefetch ranking
+    /// ([`super::predictor::LearnedPredictor::predict`]) and the
+    /// dead-range ranker
+    /// ([`super::predictor::LearnedPredictor::eviction_forecast`]), so
+    /// both actuation paths gate on exactly the same counters.
+    pub fn confident(&self, sig: u64, min_confidence: f64) -> impl Iterator<Item = &Candidate> {
+        self.lookup(sig)
+            .iter()
+            .take_while(move |c| c.confidence() >= min_confidence)
+            .filter(|c| c.delta != 0)
+    }
+
     /// Number of learned history signatures (tests/inspection).
     pub fn len(&self) -> usize {
         self.table.len()
@@ -190,6 +204,20 @@ mod tests {
             "persistent phase change displaces the decayed weakest: {:?}",
             m.lookup(9)
         );
+    }
+
+    #[test]
+    fn confident_filters_gate_and_zero_deltas() {
+        let mut m = DeltaModel::default();
+        for _ in 0..4 {
+            m.train(3, 16); // 8/8 after two bumps -> saturated
+        }
+        m.train(3, 0); // zero delta: re-touch, never actionable
+        m.train(3, 0);
+        m.train(3, 99); // one observation: 2/8, below the gate
+        let confident: Vec<i64> = m.confident(3, 0.5).map(|c| c.delta).collect();
+        assert_eq!(confident, vec![16], "gate and zero-delta filter applied: {confident:?}");
+        assert!(m.confident(42, 0.5).next().is_none(), "unseen signature");
     }
 
     #[test]

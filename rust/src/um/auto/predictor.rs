@@ -21,18 +21,29 @@
 //!
 //! [`LearnedPredictor::predict`] returns *ranked* [`Prediction`]s —
 //! the confident candidates for the next delta, plus a Markov-chain
-//! walk one step deeper along the strongest candidate (confidences
-//! multiply). The actuator issues the top-k above the confidence
-//! threshold; when the table has nothing confident it falls back to
-//! [`heuristic_prediction`] — the exact PR 2 rule — so the learned
-//! mode can only add coverage, never lose the stride cases.
+//! walk along the strongest candidate (confidences multiply), chained
+//! while the cumulative confidence clears the issue gate, up to
+//! `predict_depth` ranges: **confidence scales prefetch depth**, so a
+//! saturated stream runs several ranges ahead while a marginal one
+//! stops after its first step. When the table has nothing confident
+//! the engine falls back to [`heuristic_prediction`] — the exact PR 2
+//! rule — so the learned mode can only add coverage, never lose the
+//! stride cases.
+//!
+//! The same tables answer the **dead-range query**
+//! ([`LearnedPredictor::eviction_forecast`], `docs/EVICTION.md`): page
+//! ranges whose group signature predicts only forward motion — no
+//! re-reference within the allocation's observed reuse window — are
+//! ranked as eviction candidates, and the predicted live path is
+//! protected. Prefetch depth and eviction aggressiveness are thereby
+//! scaled by one set of saturating confidence counters.
 
 use std::collections::VecDeque;
 
 use crate::mem::PageRange;
 use crate::util::fxhash::FxHasher;
 
-use super::model::DeltaModel;
+use super::model::{Candidate, DeltaModel};
 use super::pattern::Pattern;
 use super::AutoConfig;
 
@@ -101,6 +112,36 @@ pub fn heuristic_prediction(
     })
 }
 
+/// Confidence discount applied to ahead-of-frontier dead candidates
+/// (data a previous cyclic pass left above the live window): with the
+/// default 0.5 issue gate, only signatures at ≥ 2/3 confidence rank
+/// them at all — eviction aggressiveness scales with the same counters
+/// that gate prefetch depth.
+pub const AHEAD_DEAD_DISCOUNT: f64 = 0.75;
+
+/// One page range the dead-range ranker predicts will not be
+/// re-referenced within the allocation's observed reuse window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeadRange {
+    /// The predicted-dead pages.
+    pub range: PageRange,
+    /// Ranker confidence in `[0, 1]`, derived from the same saturating
+    /// counters that gate predictive prefetch.
+    pub confidence: f64,
+}
+
+/// The dead-range ranker's output for one (stream, allocation)
+/// predictor ([`LearnedPredictor::eviction_forecast`]): what can be
+/// evicted early, and what victim selection must steer away from.
+#[derive(Clone, Debug, Default)]
+pub struct EvictionForecast {
+    /// Ranked predicted-dead ranges, most confidently dead first.
+    pub dead: Vec<DeadRange>,
+    /// Predicted-live windows (reuse guard + last access + chained
+    /// predicted path, one per confident page group).
+    pub live: Vec<PageRange>,
+}
+
 /// Per-page-group sub-stream state (level 1 of the history table).
 #[derive(Clone, Debug)]
 struct GroupHistory {
@@ -108,6 +149,12 @@ struct GroupHistory {
     last_start: u32,
     /// Length (pages) of the group's most recent access.
     last_len: u32,
+    /// Lowest page this group's sub-stream has ever started at (the
+    /// touched extent's floor; with `max_end` it bounds the dead-range
+    /// ranker's candidates).
+    min_start: u32,
+    /// Highest page (exclusive) this group's sub-stream has touched.
+    max_end: u32,
     /// Recent start-to-start deltas, oldest first (bounded by the
     /// engine's `delta_history`). A ring: once full, every training
     /// step pops the oldest delta — `Vec::remove(0)` would memmove on
@@ -136,13 +183,31 @@ fn offset(start: u32, delta: i64) -> Option<u32> {
     (0..=i64::from(u32::MAX)).contains(&s).then_some(s as u32)
 }
 
+/// The backjump classification both the trainer and the dead-range
+/// ranker gate on — ONE definition so they can never drift apart: a
+/// jump back over at most half the group's touched extent is *local
+/// reuse* (it widens the reuse guard / live window); anything larger
+/// is a *cycle restart* — the stream starting over — which must not
+/// protect the just-streamed region (under a cyclic pass that data is
+/// re-referenced last, exactly what makes it the right victim).
+fn is_local_reuse(back: u32, extent: u32) -> bool {
+    u64::from(back) * 2 <= u64::from(extent)
+}
+
 /// The online learned predictor attached to one allocation's engine
-/// state. Trains on every observed access ([`LearnedPredictor::observe`])
-/// and produces ranked predictions ([`LearnedPredictor::predict`]).
+/// state. Trains on every observed access ([`LearnedPredictor::observe`]),
+/// produces ranked predictions ([`LearnedPredictor::predict`]) and
+/// ranks eviction candidates ([`LearnedPredictor::eviction_forecast`]).
 #[derive(Clone, Debug, Default)]
 pub struct LearnedPredictor {
     groups: crate::util::fxhash::FxHashMap<u32, GroupHistory>,
     model: DeltaModel,
+    /// The allocation's observed reuse window in pages: the widest
+    /// *local* backjump seen in the fault stream (cycle restarts —
+    /// jumps back over at least half a group's touched extent — are
+    /// excluded; they are the stream starting over, not data reuse).
+    /// Dead ranges never reach closer than this behind a frontier.
+    reuse_pages: u32,
 }
 
 impl LearnedPredictor {
@@ -164,12 +229,25 @@ impl LearnedPredictor {
                     GroupHistory {
                         last_start: range.start,
                         last_len: range.len(),
+                        min_start: range.start,
+                        max_end: range.end,
                         deltas: VecDeque::with_capacity(cap),
                     },
                 );
             }
             Some(g) => {
                 let delta = i64::from(range.start) - i64::from(g.last_start);
+                // Backjump bookkeeping for the dead-range ranker
+                // (see [`is_local_reuse`]): genuine local reuse widens
+                // the observed reuse window that guards dead ranges
+                // behind the frontier; cycle restarts do not.
+                if delta < 0 {
+                    let back = (-delta).min(i64::from(u32::MAX)) as u32;
+                    let extent = g.max_end.saturating_sub(g.min_start);
+                    if is_local_reuse(back, extent) {
+                        self.reuse_pages = self.reuse_pages.max(back.saturating_add(range.len()));
+                    }
+                }
                 self.model.train(signature(group, &g.deltas), delta);
                 if g.deltas.len() >= cap {
                     g.deltas.pop_front(); // O(1) ring pop
@@ -177,71 +255,170 @@ impl LearnedPredictor {
                 g.deltas.push_back(delta);
                 g.last_start = range.start;
                 g.last_len = range.len();
+                g.min_start = g.min_start.min(range.start);
+                g.max_end = g.max_end.max(range.end);
             }
         }
     }
 
     /// Ranked predictions following `range` (which must just have been
     /// [`observe`](LearnedPredictor::observe)d): every candidate next
-    /// delta at or above `min_confidence`, plus a one-step-deeper
-    /// Markov walk along the strongest candidate. At most
-    /// `predict_top_k` results, strongest first. Zero-delta candidates
-    /// (re-touches of resident data) are never returned.
+    /// delta at or above `min_confidence`, plus a Markov-chain walk
+    /// along the strongest candidate that keeps issuing deeper ranges
+    /// while the *cumulative* confidence (step confidences multiply)
+    /// stays at or above the gate, up to `predict_depth` results in
+    /// total. Confidence therefore scales prefetch depth — a saturated
+    /// stream runs the full depth ahead, a marginal one stops after one
+    /// step — replacing the old fixed top-k truncation. Strongest
+    /// first; zero-delta candidates (re-touches of resident data) are
+    /// never returned.
     pub fn predict(&self, range: PageRange, cfg: &AutoConfig) -> Vec<Prediction> {
         let group = Self::group_of(range.start, cfg);
         let Some(g) = self.groups.get(&group) else { return Vec::new() };
         let len = g.last_len.min(cfg.max_predict_pages).max(1);
+        let depth = cfg.predict_depth.max(1);
         let mut out = Vec::new();
 
         let sig = signature(group, &g.deltas);
-        let cands = self.model.lookup(sig);
-        for c in cands {
-            let conf = c.confidence();
-            if conf < cfg.min_confidence {
-                break; // ranked: everything after is weaker
-            }
-            if c.delta == 0 {
-                continue;
-            }
+        for c in self.model.confident(sig, cfg.min_confidence) {
             if let Some(start) = offset(g.last_start, c.delta) {
                 out.push(Prediction {
                     range: PageRange::new(start, start.saturating_add(len)),
-                    confidence: conf,
+                    confidence: c.confidence(),
                 });
             }
         }
 
-        // Markov-chain walk: one step deeper along the strongest
-        // confident candidate (deeper prefetch on stable streams).
-        let first = cands
-            .first()
-            .filter(|c| c.confidence() >= cfg.min_confidence && c.delta != 0);
+        // Markov-chain walk along the strongest confident candidate:
+        // each step re-hashes the hypothetical history and follows that
+        // signature's strongest candidate; the chain stops as soon as
+        // the confidence product dips below the issue gate or the
+        // depth budget is spent.
+        let first = self.model.confident(sig, cfg.min_confidence).next();
         if let Some(first) = first {
-            if let Some(step1) = offset(g.last_start, first.delta) {
-                let mut deltas = g.deltas.clone();
-                if deltas.len() >= cfg.delta_history.max(1) {
+            let cap = cfg.delta_history.max(1);
+            let mut deltas = g.deltas.clone();
+            let mut start = g.last_start;
+            let mut delta = first.delta;
+            let mut cum = first.confidence();
+            for _ in 1..depth {
+                let Some(step) = offset(start, delta) else { break };
+                if deltas.len() >= cap {
                     deltas.pop_front();
                 }
-                deltas.push_back(first.delta);
-                let sig2 = signature(group, &deltas);
-                let next = self.model.lookup(sig2).iter().find(|c| c.delta != 0);
-                if let Some(next) = next {
-                    let conf = first.confidence() * next.confidence();
-                    if conf >= cfg.min_confidence {
-                        if let Some(start) = offset(step1, next.delta) {
-                            out.push(Prediction {
-                                range: PageRange::new(start, start.saturating_add(len)),
-                                confidence: conf,
-                            });
-                        }
-                    }
+                deltas.push_back(delta);
+                let sig = signature(group, &deltas);
+                let Some(next) = self.model.confident(sig, cfg.min_confidence).next() else {
+                    break;
+                };
+                cum *= next.confidence();
+                if cum < cfg.min_confidence {
+                    break;
                 }
+                let Some(pred) = offset(step, next.delta) else { break };
+                out.push(Prediction {
+                    range: PageRange::new(pred, pred.saturating_add(len)),
+                    confidence: cum,
+                });
+                start = step;
+                delta = next.delta;
             }
         }
 
         out.sort_by(|a, b| b.confidence.partial_cmp(&a.confidence).unwrap());
-        out.truncate(cfg.predict_top_k.max(1));
+        out.truncate(depth);
         out
+    }
+
+    /// The dead-range query (`docs/EVICTION.md`): rank page ranges by
+    /// how confidently the delta tables predict they will *not* be
+    /// re-referenced within the allocation's observed reuse window,
+    /// and report the predicted-live path that eviction must steer
+    /// away from. Per page group with a confident signature:
+    ///
+    /// * the **live window** spans the reuse guard behind the frontier
+    ///   (`reuse_pages`, widened by any confident backward candidate),
+    ///   the last access itself, and the chained predicted path ahead
+    ///   (`predict_depth` × the strongest forward stride — the ranker
+    ///   never marks data the prefetcher is about to move as dead);
+    /// * everything *behind* the live window in the group's touched
+    ///   extent is dead at the strongest candidate's confidence
+    ///   (streamed-past data whose signature predicts forward motion);
+    /// * leftovers *ahead* of the live window (a previous cyclic pass
+    ///   wrapped below them — re-referenced last, if ever) are dead at
+    ///   a discounted confidence, so only well-saturated signatures
+    ///   drop data the stream is still approaching.
+    ///
+    /// Cold or unconfident groups contribute nothing: like predictive
+    /// prefetch, one observation never arms the evictor. Results are
+    /// ranked most-confidently-dead first and are deterministic (group
+    /// order is sorted, never hash order).
+    pub fn eviction_forecast(&self, cfg: &AutoConfig) -> EvictionForecast {
+        let mut fc = EvictionForecast::default();
+        let mut gids: Vec<u32> = self.groups.keys().copied().collect();
+        gids.sort_unstable();
+        for gid in gids {
+            let g = &self.groups[&gid];
+            let sig = signature(gid, &g.deltas);
+            let cands: Vec<&Candidate> =
+                self.model.confident(sig, cfg.min_confidence).collect();
+            let Some(best) = cands.first() else {
+                continue; // nothing confident: never evict on a cold table
+            };
+            let conf = best.confidence();
+            let len = g.last_len.max(1);
+            let extent = g.max_end.saturating_sub(g.min_start);
+            let mut back_reach: u32 = 0;
+            let mut fwd_delta: i64 = 0;
+            for c in &cands {
+                if c.delta < 0 {
+                    // Local-reuse backjumps protect their reach; cycle
+                    // restarts deliberately do not (see
+                    // [`is_local_reuse`] — raw LRU picks the opposite
+                    // end of a cyclic pass; §IV-B churn).
+                    let back = (-c.delta).min(i64::from(u32::MAX)) as u32;
+                    if is_local_reuse(back, extent) {
+                        back_reach = back_reach.max(back);
+                    }
+                } else {
+                    fwd_delta = fwd_delta.max(c.delta);
+                }
+            }
+            let guard = self.reuse_pages.max(back_reach);
+            let chain = fwd_delta.saturating_mul(cfg.predict_depth.max(1) as i64);
+            let live_start = g.last_start.saturating_sub(guard);
+            let live_end = offset(g.last_start, chain)
+                .unwrap_or(u32::MAX)
+                .saturating_add(len)
+                .max(g.last_start.saturating_add(len));
+            fc.live.push(PageRange::new(live_start, live_end.max(live_start)));
+            if g.min_start < live_start {
+                fc.dead.push(DeadRange {
+                    range: PageRange::new(g.min_start, live_start),
+                    confidence: conf,
+                });
+            }
+            let ahead_conf = conf * AHEAD_DEAD_DISCOUNT;
+            if g.max_end > live_end && ahead_conf >= cfg.min_confidence {
+                fc.dead.push(DeadRange {
+                    range: PageRange::new(live_end, g.max_end),
+                    confidence: ahead_conf,
+                });
+            }
+        }
+        fc.dead.sort_by(|a, b| {
+            b.confidence
+                .partial_cmp(&a.confidence)
+                .unwrap()
+                .then(a.range.start.cmp(&b.range.start))
+        });
+        fc
+    }
+
+    /// The observed reuse window in pages (tests/inspection): the
+    /// widest local backjump seen so far, excluding cycle restarts.
+    pub fn reuse_window_pages(&self) -> u32 {
+        self.reuse_pages
     }
 
     /// Learned history signatures (tests/inspection).
@@ -432,7 +609,10 @@ mod tests {
     }
 
     #[test]
-    fn stable_stream_chains_a_second_prediction() {
+    fn saturated_stream_chains_to_full_depth() {
+        // Confidence scales depth: a fully saturated sequential stream
+        // issues `predict_depth` chained ranges (the old engine fixed
+        // this at top-k = 2 regardless of confidence).
         let c = cfg();
         let mut lp = LearnedPredictor::default();
         let s = sequential(12, 16);
@@ -440,11 +620,31 @@ mod tests {
             lp.observe(r, &c);
         }
         let preds = lp.predict(*s.last().unwrap(), &c);
-        assert_eq!(preds.len(), 2, "top-k chained predictions: {preds:?}");
+        assert_eq!(preds.len(), c.predict_depth, "full depth at saturation: {preds:?}");
+        let last = s.last().unwrap();
+        for (i, p) in preds.iter().enumerate() {
+            let start = last.end + i as u32 * 16;
+            assert_eq!(p.range, PageRange::new(start, start + 16), "chained range {i}");
+        }
+        assert!(preds.windows(2).all(|w| w[0].confidence >= w[1].confidence));
+    }
+
+    #[test]
+    fn marginal_confidence_stops_the_chain_after_one_step() {
+        // The steady-state signature has been trained exactly twice:
+        // 4/8 = 0.5 sits exactly at the gate, so the first chained
+        // product (0.25) dips below it — depth collapses to one range.
+        let c = cfg();
+        let mut lp = LearnedPredictor::default();
+        let s = sequential(5, 16);
+        for &r in &s {
+            lp.observe(r, &c);
+        }
+        let preds = lp.predict(*s.last().unwrap(), &c);
+        assert_eq!(preds.len(), 1, "marginal confidence must not chain: {preds:?}");
         let last = s.last().unwrap();
         assert_eq!(preds[0].range, PageRange::new(last.end, last.end + 16));
-        assert_eq!(preds[1].range, PageRange::new(last.end + 16, last.end + 32));
-        assert!(preds[0].confidence >= preds[1].confidence);
+        assert!((preds[0].confidence - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -461,6 +661,117 @@ mod tests {
         // confidence 2/8 stays below the issue gate.
         assert!(lp.predict(*s.last().unwrap(), &c).is_empty());
         assert!(lp.model_len() > 0, "transitions were recorded");
+    }
+
+    #[test]
+    fn forecast_streaming_marks_streamed_past_dead() {
+        // Pure forward stream: everything behind the live window is
+        // dead at the signature's confidence; nothing is live behind.
+        let c = cfg();
+        let mut lp = LearnedPredictor::default();
+        let s = sequential(12, 16); // frontier at 192, last_start 176
+        for &r in &s {
+            lp.observe(r, &c);
+        }
+        let fc = lp.eviction_forecast(&c);
+        assert_eq!(fc.dead.len(), 1, "{:?}", fc.dead);
+        assert_eq!(fc.dead[0].range, PageRange::new(0, 176), "behind the frontier");
+        assert!((fc.dead[0].confidence - 1.0).abs() < 1e-12, "saturated counters");
+        // The live window covers the last access and the chained
+        // predicted path (predict_depth x stride) ahead of it.
+        assert_eq!(fc.live.len(), 1);
+        assert_eq!(fc.live[0], PageRange::new(176, 176 + 4 * 16 + 16));
+    }
+
+    #[test]
+    fn forecast_cold_or_random_predicts_no_dead_ranges() {
+        let c = cfg();
+        let lp = LearnedPredictor::default();
+        assert!(lp.eviction_forecast(&c).dead.is_empty(), "cold table");
+        // Non-repeating deltas: nothing confident, nothing dead.
+        let mut lp = LearnedPredictor::default();
+        for &start in &[0u32, 97, 13, 450, 200, 777, 31, 600] {
+            lp.observe(PageRange::new(start, start + 4), &c);
+        }
+        let fc = lp.eviction_forecast(&c);
+        assert!(fc.dead.is_empty(), "one observation never arms the evictor: {:?}", fc.dead);
+    }
+
+    #[test]
+    fn forecast_cyclic_ranks_both_streamed_past_sides_dead() {
+        // Cyclic pass over [0, 240) in 16-page windows, three passes,
+        // stopping shortly after the last wrap. The wrap candidate
+        // (a backjump over the whole extent) is a cycle restart, not
+        // local reuse: it must NOT protect the just-streamed region —
+        // under a cyclic pass that data is re-referenced last. Both
+        // streamed-past sides rank dead: behind the frontier at full
+        // confidence, and the previous pass's leftovers *ahead* of the
+        // live window at discounted confidence (the wrapped-cyclic
+        // case the old `[0, start)` early-drop hint could never reach).
+        let c = cfg();
+        let mut lp = LearnedPredictor::default();
+        let pass: Vec<PageRange> =
+            (0..15u32).map(|i| PageRange::new(i * 16, (i + 1) * 16)).collect();
+        for _ in 0..2 {
+            for &r in &pass {
+                lp.observe(r, &c);
+            }
+        }
+        for &r in &pass[..5] {
+            lp.observe(r, &c); // third pass up to frontier 80
+        }
+        assert_eq!(lp.reuse_window_pages(), 0, "cycle restarts are not local reuse");
+        let fc = lp.eviction_forecast(&c);
+        // last_start 64, chained live path to 64 + 4*16 + 16 = 144.
+        let behind = fc
+            .dead
+            .iter()
+            .find(|d| d.range == PageRange::new(0, 64))
+            .unwrap_or_else(|| panic!("just-streamed region must rank dead: {:?}", fc.dead));
+        assert!((behind.confidence - 1.0).abs() < 1e-12, "full confidence behind");
+        let ahead = fc
+            .dead
+            .iter()
+            .find(|d| d.range == PageRange::new(144, 240))
+            .unwrap_or_else(|| panic!("wrapped leftovers must rank dead: {:?}", fc.dead));
+        assert!(
+            ahead.confidence >= c.min_confidence && ahead.confidence < 1.0,
+            "discounted confidence ahead: {}",
+            ahead.confidence
+        );
+        assert!(
+            !fc.dead.iter().any(|d| d.range.start < d.range.end
+                && d.range.start < 144
+                && d.range.end > 64),
+            "the live window [64, 144) is never dead: {:?}",
+            fc.dead
+        );
+    }
+
+    #[test]
+    fn forecast_local_reuse_widens_the_guard() {
+        // A forward stream with one local backjump (a stencil-style
+        // revisit): the observed reuse window must keep that much data
+        // behind the frontier out of the dead set.
+        let c = cfg();
+        let mut lp = LearnedPredictor::default();
+        for &r in &sequential(7, 16) {
+            lp.observe(r, &c); // frontier 112
+        }
+        lp.observe(PageRange::new(64, 80), &c); // 32-page backjump: local reuse
+        assert_eq!(lp.reuse_window_pages(), 32 + 16, "backjump magnitude + access length");
+        for r in (0..6u32).map(|i| PageRange::new(112 + i * 16, 128 + i * 16)) {
+            lp.observe(r, &c); // resume streaming past the revisit
+        }
+        let fc = lp.eviction_forecast(&c);
+        let guard = lp.reuse_window_pages();
+        for d in &fc.dead {
+            assert!(
+                d.range.end + guard <= 192 + 16,
+                "dead range {:?} reaches inside the reuse guard (frontier 208)",
+                d.range
+            );
+        }
     }
 
     #[test]

@@ -11,13 +11,134 @@
 //!   written back over the link — and if they are pinned
 //!   (`PreferredLocation(Gpu)`) they are evicted only as a last resort
 //!   and immediately fault back in: thrashing, the P9 pathology.
+//!
+//! ## The learned-evictor hint seam (`--evictor learned`)
+//!
+//! Victim selection is raw LRU by default ([`crate::um::EvictorKind::Lru`],
+//! byte-identical to the pre-knob runtime — pinned by
+//! `rust/tests/evictor_modes.rs`). With
+//! [`crate::um::EvictorKind::Learned`] the `um::auto` dead-range
+//! ranker feeds [`AutoEvictHints`] into this module: ranked
+//! predicted-dead chunks are evicted *first*, predicted-live chunks
+//! are deferred behind every unhinted chunk, and predicted-dead clean
+//! duplicates are pre-dropped ahead of the watermark path. With no
+//! hints (every non-`UM Auto` variant) the learned path degenerates to
+//! exact LRU order. Design + worked example: `docs/EVICTION.md`.
+//!
+//! Independently of the evictor, an **eviction audit** tracks every
+//! evicted chunk until the run ends: bytes the GPU *demands* again
+//! (re-migration, remote-mapped re-read, or a demand touch of data a
+//! prefetch brought back) count as `evict_live_evicted_bytes` — the
+//! eviction was wrong — and the rest flushes to
+//! `evict_dead_hit_bytes` at the end of the run. Pure bookkeeping —
+//! it never alters timing or eviction order in any mode.
+#![warn(missing_docs)]
 
-use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGES_PER_CHUNK, PAGE_SIZE};
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::mem::{
+    AllocId, ChunkRef, DeviceMemory, PageRange, Residency, TransferMode, PAGES_PER_CHUNK,
+    PAGE_SIZE,
+};
 use crate::mem::page::PageFlags;
 use crate::trace::TraceKind;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::util::units::{Bytes, Ns};
 
+use super::policy::EvictorKind;
 use super::runtime::UmRuntime;
+
+// The eviction audit stores one bit per page of a 2 MiB chunk in a
+// `u32`; the granularities test in `mem::page` pins the 32-page chunk,
+// and this guards the audit against a drive-by granule change.
+const _: () = assert!(PAGES_PER_CHUNK == 32);
+
+/// Bitmask of pages `[a, b)` within one 32-page chunk (bit = page).
+fn chunk_mask(a: u32, b: u32) -> u32 {
+    debug_assert!(a < b && b <= PAGES_PER_CHUNK, "bad chunk sub-range {a}..{b}");
+    (u32::MAX >> (PAGES_PER_CHUNK - (b - a))) << a
+}
+
+/// Engine-supplied eviction hints — the `--evictor learned` seam
+/// between the `um::auto` dead-range ranker and victim selection.
+/// Refreshed per allocation at each post-access policy step; consumed
+/// by [`UmRuntime::ensure_device_space`]'s learned path. Stale entries
+/// (chunks evicted or re-pinned since the hint was computed) are
+/// skipped at consumption time.
+#[derive(Clone, Debug, Default)]
+pub(super) struct AutoEvictHints {
+    /// Ranked predicted-dead chunks per allocation, most confidently
+    /// dead first; consumed front-to-back. A `BTreeMap` so
+    /// [`AutoEvictHints::take_dead`] walks allocations in ascending id
+    /// order without sorting on the per-victim hot path.
+    pub(super) dead: BTreeMap<AllocId, VecDeque<ChunkRef>>,
+    /// Predicted-live chunk indices per allocation (victim deferral).
+    pub(super) live: FxHashMap<AllocId, FxHashSet<u32>>,
+}
+
+impl AutoEvictHints {
+    /// Replace allocation `id`'s hints with a fresh forecast.
+    pub(super) fn set_for(
+        &mut self,
+        id: AllocId,
+        dead: VecDeque<ChunkRef>,
+        live: FxHashSet<u32>,
+    ) {
+        if dead.is_empty() {
+            self.dead.remove(&id);
+        } else {
+            self.dead.insert(id, dead);
+        }
+        if live.is_empty() {
+            self.live.remove(&id);
+        } else {
+            self.live.insert(id, live);
+        }
+    }
+
+    /// Whether the ranker predicts `chunk` will be re-referenced soon.
+    fn is_live(&self, chunk: ChunkRef) -> bool {
+        self.live.get(&chunk.alloc).is_some_and(|s| s.contains(&chunk.chunk))
+    }
+
+    /// Pop the strongest-ranked dead chunk that is still an eligible
+    /// victim. Allocations are visited in ascending id order (the
+    /// `BTreeMap` gives that for free) so hint consumption is
+    /// deterministic; the common hot case — front hint still valid —
+    /// is one ordered-map descent and a ring pop, no allocation.
+    fn take_dead(&mut self, dev: &DeviceMemory) -> Option<ChunkRef> {
+        let mut found = None;
+        let mut drained: Vec<AllocId> = Vec::new();
+        for (&id, queue) in self.dead.iter_mut() {
+            while let Some(chunk) = queue.pop_front() {
+                let hinted_live = self
+                    .live
+                    .get(&chunk.alloc)
+                    .is_some_and(|s| s.contains(&chunk.chunk));
+                if dev.is_evictable_resident(chunk) && !hinted_live {
+                    found = Some(chunk);
+                    break;
+                }
+            }
+            if queue.is_empty() {
+                drained.push(id);
+            }
+            if found.is_some() {
+                break;
+            }
+        }
+        for id in drained {
+            self.dead.remove(&id);
+        }
+        found
+    }
+
+    /// Drop all hints (run reset).
+    pub(super) fn clear(&mut self) {
+        self.dead.clear();
+        self.live.clear();
+    }
+}
 
 impl UmRuntime {
     /// Make sure at least `bytes` of device memory are free at `now`,
@@ -46,6 +167,9 @@ impl UmRuntime {
     /// Evict until `free() >= goal`. Returns the completion time of the
     /// last *blocking* writeback (`background` evictions return `now`).
     fn evict_until(&mut self, goal: Bytes, now: Ns, background: bool) -> Ns {
+        if self.policy.evictor == EvictorKind::Learned {
+            return self.evict_until_learned(goal, now, background);
+        }
         let mut t = now;
         while self.dev.free() < goal {
             let forced = self.dev.only_pinned_left();
@@ -68,6 +192,104 @@ impl UmRuntime {
         t
     }
 
+    /// [`UmRuntime::evict_until`] under the learned ranker
+    /// (`--evictor learned`, `docs/EVICTION.md`). Victim order:
+    ///
+    /// 1. ranked predicted-dead hint chunks, strongest first;
+    /// 2. LRU — but predicted-live chunks are *parked* (deferred) while
+    ///    any unhinted chunk remains;
+    /// 3. the parked predicted-live chunks, in original LRU order (the
+    ///    prediction lost to capacity pressure);
+    /// 4. forced pinned eviction, exactly as the LRU path (thrash).
+    ///
+    /// With no hints this is exact LRU order — every non-`UM Auto`
+    /// variant behaves identically under either evictor.
+    ///
+    /// Parked victims persist across calls (`evict_deferred`) so each
+    /// live chunk is deferred at most once per hint refresh instead of
+    /// once per fault group — O(live chunks) per access, not per
+    /// 512 KiB eviction. The next hint refresh re-pushes survivors with
+    /// their original stamps ([`UmRuntime::flush_deferred_victims`]),
+    /// so LRU order is preserved; step 3 re-validates parked entries
+    /// because a parked chunk may have been touched, evicted or
+    /// re-parked in the meantime.
+    fn evict_until_learned(&mut self, goal: Bytes, now: Ns, background: bool) -> Ns {
+        let mut t = now;
+        while self.dev.free() < goal {
+            // 1. Ranked dead hints.
+            if let Some(chunk) = self.evict_hints.take_dead(&self.dev) {
+                let resident = self.dev.resident_bytes_of(chunk);
+                self.dev.note_eviction(false);
+                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                if !background {
+                    t = end;
+                }
+                continue;
+            }
+            // 2. LRU with live-parking.
+            if let Some((chunk, resident)) = self.dev.pop_victim(false) {
+                if self.evict_hints.is_live(chunk) {
+                    self.evict_deferred.push_back(chunk);
+                    continue;
+                }
+                self.dev.note_eviction(false);
+                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                if !background {
+                    t = end;
+                }
+                continue;
+            }
+            // 3. Parked predicted-live chunks, oldest first
+            // (re-validated: parking is advisory, not ownership).
+            if let Some(chunk) = self.next_parked_victim() {
+                let resident = self.dev.resident_bytes_of(chunk);
+                self.dev.note_eviction(false);
+                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                if !background {
+                    t = end;
+                }
+                continue;
+            }
+            // 4. Last resort: forced pinned eviction (the P9 thrash).
+            if self.dev.only_pinned_left() {
+                if let Some((chunk, resident)) = self.dev.pop_victim(true) {
+                    self.dev.note_eviction(true);
+                    let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                    if !background {
+                        t = end;
+                    }
+                    continue;
+                }
+            }
+            if background {
+                break; // best-effort top-up: stop quietly
+            }
+            panic!("device OOM: need {goal} free, nothing evictable");
+        }
+        t
+    }
+
+    /// The oldest parked victim that is still evictable. Parked entries
+    /// can go stale (evicted through a fresher heap entry after a
+    /// touch, re-pinned, or parked twice): skip those.
+    fn next_parked_victim(&mut self) -> Option<ChunkRef> {
+        while let Some(chunk) = self.evict_deferred.pop_front() {
+            if self.dev.is_evictable_resident(chunk) {
+                return Some(chunk);
+            }
+        }
+        None
+    }
+
+    /// Return every parked victim to the LRU heap with its original
+    /// stamp. Called when the engine refreshes its eviction hints (the
+    /// parked set belongs to the previous forecast) and on run reset.
+    pub(super) fn flush_deferred_victims(&mut self) {
+        while let Some(chunk) = self.evict_deferred.pop_front() {
+            self.dev.repush(chunk);
+        }
+    }
+
     /// Evict one chunk: transition pages, account writeback vs drop,
     /// schedule the writeback DMA. Returns writeback completion (or
     /// `now` if everything was droppable).
@@ -78,9 +300,12 @@ impl UmRuntime {
             (chunk + 1) * PAGES_PER_CHUNK,
         ));
         // Classify the on-device pages, run by run (O(segments in the
-        // chunk), not O(pages)).
+        // chunk), not O(pages)); the audit mask records exactly which
+        // pages leave the device.
+        let base = chunk * PAGES_PER_CHUNK;
         let mut wb_pages = 0u64;
         let mut drop_pages = 0u64;
+        let mut audit_mask = 0u32;
         for (r, p) in alloc.pages.runs_in(run) {
             if p.residency.on_device() {
                 if p.evict_needs_writeback() {
@@ -88,6 +313,7 @@ impl UmRuntime {
                 } else {
                     drop_pages += r.len() as u64;
                 }
+                audit_mask |= chunk_mask(r.start - base, r.end - base);
             }
         }
         debug_assert_eq!(
@@ -106,7 +332,13 @@ impl UmRuntime {
                 p.flags.set(PageFlags::CPU_MAPPED, false);
             }
         });
-        self.dev.remove_resident(crate::mem::ChunkRef { alloc: id, chunk }, resident);
+        // Eviction audit (all modes, pure bookkeeping — never alters
+        // timing or order): remember exactly which pages left the
+        // device so a later GPU demand can be charged as live-evicted.
+        if audit_mask != 0 {
+            *self.evict_audit.entry(ChunkRef { alloc: id, chunk }).or_default() |= audit_mask;
+        }
+        self.dev.remove_resident(ChunkRef { alloc: id, chunk }, resident);
         self.metrics.evicted_chunks += 1;
         self.access_evicted_bytes += resident;
         self.metrics.dropped_bytes += drop_pages * PAGE_SIZE;
@@ -168,6 +400,7 @@ impl UmRuntime {
             .collect();
         let mut dropped: Bytes = 0;
         for r in both_runs {
+            self.audit_record_run(id, r);
             self.drop_device_residency(id, r);
             self.space.get_mut(id).pages.update(r, |p| {
                 p.residency = Residency::Host;
@@ -175,6 +408,76 @@ impl UmRuntime {
             dropped += r.bytes();
         }
         dropped
+    }
+
+    /// Record `run`'s on-device pages in the eviction audit
+    /// (page-accurate, one bit per page) — called *before* the pages
+    /// leave the device (early-drop paths; full-chunk evictions record
+    /// in `evict_chunk`). Pure bookkeeping in every mode.
+    fn audit_record_run(&mut self, id: AllocId, run: PageRange) {
+        let alloc = self.space.get(id);
+        let mut page = run.start;
+        while page < run.end {
+            let chunk = Self::chunk_of(page);
+            let chunk_end = ((chunk + 1) * PAGES_PER_CHUNK).min(run.end);
+            let piece = PageRange::new(page, chunk_end);
+            let base = chunk * PAGES_PER_CHUNK;
+            let mut mask = 0u32;
+            for (r, p) in alloc.pages.runs_in(piece) {
+                if p.residency.on_device() && !r.is_empty() {
+                    mask |= chunk_mask(r.start - base, r.end - base);
+                }
+            }
+            if mask != 0 {
+                *self.evict_audit.entry(ChunkRef { alloc: id, chunk }).or_default() |= mask;
+            }
+            page = chunk_end;
+        }
+    }
+
+    /// Charge outstanding evicted pages overlapping `run` as
+    /// *live-evicted*: the GPU demanded them again. Called from the
+    /// GPU demand path ([`UmRuntime::gpu_access_on`]'s run dispatch),
+    /// so re-migration, remote-mapped re-reads and demand touches of
+    /// prefetched-back data all count — but a speculative prefetch
+    /// that nothing ever touches does not, and (page-accurate masks)
+    /// neither does touching the still-resident part of a partially
+    /// evicted chunk. O(1) when nothing is outstanding (the in-memory
+    /// common case).
+    pub(super) fn audit_note_demand(&mut self, id: AllocId, run: PageRange) {
+        if self.evict_audit.is_empty() {
+            return;
+        }
+        let mut page = run.start;
+        while page < run.end {
+            let chunk = Self::chunk_of(page);
+            let chunk_end = ((chunk + 1) * PAGES_PER_CHUNK).min(run.end);
+            let cref = ChunkRef { alloc: id, chunk };
+            if let Some(outstanding) = self.evict_audit.get_mut(&cref) {
+                let base = chunk * PAGES_PER_CHUNK;
+                let hit = *outstanding & chunk_mask(page - base, chunk_end - base);
+                if hit != 0 {
+                    self.metrics.evict_live_evicted_bytes +=
+                        u64::from(hit.count_ones()) * PAGE_SIZE;
+                    *outstanding &= !hit;
+                    if *outstanding == 0 {
+                        self.evict_audit.remove(&cref);
+                    }
+                }
+            }
+            page = chunk_end;
+        }
+    }
+
+    /// Flush the eviction audit at the end of a run: evicted pages the
+    /// GPU never demanded again were *dead* — the eviction was right.
+    /// `AppCtx::finish` calls this once per run; callers driving
+    /// [`UmRuntime`] directly (tests) call it before reading
+    /// `evict_dead_hit_bytes`. Idempotent.
+    pub fn finish_eviction_audit(&mut self) {
+        for (_, mask) in self.evict_audit.drain() {
+            self.metrics.evict_dead_hit_bytes += u64::from(mask.count_ones()) * PAGE_SIZE;
+        }
     }
 
     /// Debug invariant: the device's byte accounting matches the page
@@ -339,6 +642,156 @@ mod tests {
             64,
             "sole-copy pages untouched"
         );
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn lru_mode_ignores_stuffed_hints() {
+        // The `--evictor lru` inertness half of the differential
+        // oracle: stuffing the hint seam with garbage must not move a
+        // single byte or nanosecond when the evictor is LRU — the seam
+        // is provably dead code in that mode.
+        let run = |stuff: bool| {
+            let mut r = UmRuntime::new(&tiny_platform()); // evictor: Lru
+            let a = r.malloc_managed("a", 48 * MIB);
+            let b = r.malloc_managed("b", 48 * MIB);
+            for id in [a, b] {
+                let full = r.space.get(id).full();
+                r.host_access(id, full, true, Ns::ZERO);
+            }
+            if stuff {
+                r.evict_hints.set_for(
+                    a,
+                    (0..24u32).map(|c| ChunkRef { alloc: a, chunk: c }).collect(),
+                    (0..24u32).collect(),
+                );
+            }
+            let fa = r.space.get(a).full();
+            let fb = r.space.get(b).full();
+            let o1 = r.gpu_access(a, fa, false, Ns::ZERO);
+            let o2 = r.gpu_access(b, fb, false, o1.done);
+            let o3 = r.gpu_access(a, fa, false, o2.done);
+            r.finish_eviction_audit();
+            r.check_residency_invariant().unwrap();
+            (o3.done, r.metrics, r.dev.evictions, r.dev.forced_pinned_evictions)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn learned_evictor_without_hints_is_exact_lru() {
+        // The learned path with an empty hint table must reproduce raw
+        // LRU bit-for-bit — this is what keeps every non-UM-Auto
+        // variant identical under either evictor.
+        let run = |evictor: EvictorKind| {
+            let mut plat = tiny_platform();
+            plat.um.evictor = evictor;
+            let mut r = UmRuntime::new(&plat);
+            let a = r.malloc_managed("a", 48 * MIB);
+            let b = r.malloc_managed("b", 48 * MIB);
+            for id in [a, b] {
+                let full = r.space.get(id).full();
+                r.host_access(id, full, true, Ns::ZERO);
+            }
+            let fa = r.space.get(a).full();
+            let fb = r.space.get(b).full();
+            let o1 = r.gpu_access(a, fa, false, Ns::ZERO);
+            let o2 = r.gpu_access(b, fb, false, o1.done);
+            let o3 = r.gpu_access(a, fa, false, o2.done); // thrash back
+            r.check_residency_invariant().unwrap();
+            (o3.done, r.metrics, r.dev.evictions)
+        };
+        assert_eq!(run(EvictorKind::Lru), run(EvictorKind::Learned));
+    }
+
+    #[test]
+    fn dead_hints_evict_first_and_live_hints_defer() {
+        let mut plat = tiny_platform();
+        plat.um.evictor = EvictorKind::Learned;
+        let mut r = UmRuntime::new(&plat);
+        let a = r.malloc_managed("a", 48 * MIB); // 24 chunks
+        let b = r.malloc_managed("b", 48 * MIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        // Hints: chunk 10 is ranked dead; chunks 0 and 1 are live.
+        r.evict_hints.set_for(
+            a,
+            VecDeque::from(vec![ChunkRef { alloc: a, chunk: 10 }]),
+            [0u32, 1].into_iter().collect(),
+        );
+        // b's migration must evict 16 of a's chunks.
+        let fb = r.space.get(b).full();
+        r.gpu_access(b, fb, false, Ns(1));
+        let pages = &r.space.get(a).pages;
+        let chunk_on_dev = |c: u32| {
+            pages.count(PageRange::new(c * PAGES_PER_CHUNK, (c + 1) * PAGES_PER_CHUNK), |p| {
+                p.residency.on_device()
+            })
+        };
+        assert_eq!(chunk_on_dev(10), 0, "ranked-dead chunk evicted first");
+        assert_eq!(chunk_on_dev(0), PAGES_PER_CHUNK, "live-hinted chunk deferred");
+        assert_eq!(chunk_on_dev(1), PAGES_PER_CHUNK, "live-hinted chunk deferred");
+        assert_eq!(chunk_on_dev(2), 0, "LRU continues past the deferred chunks");
+        assert_eq!(r.dev.evictions, 16, "same eviction count as pure LRU would need");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn live_hints_lose_when_nothing_else_remains() {
+        // Everything hinted live — both allocations: parking must not
+        // deadlock. The predictions lose to capacity pressure in
+        // original LRU order (a's oldest chunks go first).
+        let mut plat = tiny_platform();
+        plat.um.evictor = EvictorKind::Learned;
+        let mut r = UmRuntime::new(&plat);
+        let a = r.malloc_managed("a", 48 * MIB);
+        let b = r.malloc_managed("b", 48 * MIB);
+        for id in [a, b] {
+            let full = r.space.get(id).full();
+            r.host_access(id, full, true, Ns::ZERO);
+        }
+        let fa = r.space.get(a).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        r.evict_hints.set_for(a, VecDeque::new(), (0u32..24).collect());
+        r.evict_hints.set_for(b, VecDeque::new(), (0u32..24).collect());
+        let fb = r.space.get(b).full();
+        let out = r.gpu_access(b, fb, false, Ns(1));
+        assert_eq!(out.h2d_bytes, 48 * MIB, "b still fits — parking never deadlocks");
+        let pages = &r.space.get(a).pages;
+        let first = pages.count(PageRange::new(0, PAGES_PER_CHUNK), |p| p.residency.on_device());
+        assert_eq!(first, 0, "parked victims fall in original LRU order");
+        let last = pages.count(
+            PageRange::new(23 * PAGES_PER_CHUNK, 24 * PAGES_PER_CHUNK),
+            |p| p.residency.on_device(),
+        );
+        assert_eq!(last, PAGES_PER_CHUNK, "a's newest chunks survive");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn eviction_audit_separates_live_from_dead() {
+        let (mut r, a, b) = setup_oversub(false);
+        let fa = r.space.get(a).full();
+        let fb = r.space.get(b).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        let o = r.gpu_access(b, fb, false, Ns(1)); // evicts most of a
+        assert_eq!(r.metrics.evict_live_evicted_bytes, 0, "nothing re-demanded yet");
+        r.gpu_access(a, fa, false, o.done); // demands a's evicted pages back
+        assert!(r.metrics.evict_live_evicted_bytes > 0, "refaulted bytes were evicted live");
+        r.finish_eviction_audit();
+        assert!(
+            r.metrics.evict_dead_hit_bytes > 0,
+            "b's chunks evicted during a's refault never returned: dead"
+        );
+        assert!(r.metrics.eviction_dead_ratio() > 0.0);
+        r.finish_eviction_audit();
+        let dead = r.metrics.evict_dead_hit_bytes;
+        r.finish_eviction_audit();
+        assert_eq!(r.metrics.evict_dead_hit_bytes, dead, "flush is idempotent");
         r.check_residency_invariant().unwrap();
     }
 

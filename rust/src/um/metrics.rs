@@ -133,6 +133,19 @@ pub struct UmMetrics {
     /// Predictions issued by the heuristic classifier rule while the
     /// learned tables were below the confidence gate.
     pub auto_fallback_predictions: u64,
+    /// Eviction-quality: evicted (or early-dropped) bytes the GPU
+    /// *demanded* again later in the same run — the eviction was
+    /// wrong. Charged at the demand point (re-migration, remote-mapped
+    /// re-read, or a demand touch of data a prefetch brought back), so
+    /// speculative prefetch-back alone never counts. Tracked in every
+    /// mode and for every variant (pure bookkeeping on the eviction
+    /// audit); the `fig_evict` study compares it across policies.
+    pub evict_live_evicted_bytes: Bytes,
+    /// Eviction-quality: evicted bytes the GPU never demanded again by
+    /// the end of the run — the eviction was right. Flushed from the
+    /// audit by `UmRuntime::finish_eviction_audit` (called once per
+    /// run).
+    pub evict_dead_hit_bytes: Bytes,
     /// Per-stream counter slices (slot = stream index, clamped to
     /// [`MAX_STREAM_METRICS`]); all-zero except for streams that
     /// actually drove accesses.
@@ -215,7 +228,7 @@ impl UmMetrics {
     /// so the bench trajectory tracks decision quality across PRs).
     /// (`'static` is required here: associated constants may not elide
     /// lifetimes — rustc's `elided_lifetimes_in_associated_constant`.)
-    pub const AUTO_CSV_HEADER: [&'static str; 11] = [
+    pub const AUTO_CSV_HEADER: [&'static str; 13] = [
         "auto_decisions",
         "auto_pattern_flips",
         "auto_prefetched_bytes",
@@ -227,6 +240,8 @@ impl UmMetrics {
         "auto_predict_confident",
         "auto_learned_predictions",
         "auto_fallback_predictions",
+        "evict_live_evicted_bytes",
+        "evict_dead_hit_bytes",
     ];
 
     /// The auto-policy counters as CSV fields (order matches
@@ -244,7 +259,23 @@ impl UmMetrics {
             self.auto_predict_confident.to_string(),
             self.auto_learned_predictions.to_string(),
             self.auto_fallback_predictions.to_string(),
+            self.evict_live_evicted_bytes.to_string(),
+            self.evict_dead_hit_bytes.to_string(),
         ]
+    }
+
+    /// Of the evicted bytes whose fate is known, the fraction the
+    /// workload never demanded back (`dead / (dead + live)`) — higher
+    /// means victim selection picked genuinely dead data. NaN when
+    /// nothing was evicted (render via [`fmt_pct`]/[`fmt_frac`], never
+    /// as a flattering 100%).
+    pub fn eviction_dead_ratio(&self) -> f64 {
+        let resolved = self.evict_dead_hit_bytes + self.evict_live_evicted_bytes;
+        if resolved == 0 {
+            f64::NAN
+        } else {
+            self.evict_dead_hit_bytes as f64 / resolved as f64
+        }
     }
 }
 
@@ -313,6 +344,21 @@ mod tests {
         assert_eq!(active, vec![0, 2, MAX_STREAM_METRICS - 1]);
         m.reset();
         assert!(m.active_streams().next().is_none());
+    }
+
+    #[test]
+    fn eviction_dead_ratio_nan_until_resolved() {
+        let m = UmMetrics::default();
+        assert!(m.eviction_dead_ratio().is_nan(), "nothing evicted: n/a, not 100%");
+        let m = UmMetrics {
+            evict_dead_hit_bytes: 300,
+            evict_live_evicted_bytes: 100,
+            ..Default::default()
+        };
+        assert!((m.eviction_dead_ratio() - 0.75).abs() < 1e-12);
+        let row = m.auto_csv_row();
+        assert_eq!(row[row.len() - 2], "100", "live-evicted rides in the CSV");
+        assert_eq!(row[row.len() - 1], "300");
     }
 
     #[test]

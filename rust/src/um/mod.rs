@@ -10,7 +10,9 @@
 //!   SetAccessedBy}` semantics and their interplay with prefetch.
 //! * [`prefetch`] — `cudaMemPrefetchAsync` bulk transfers.
 //! * [`evict`] — LRU eviction under oversubscription, writeback-vs-drop,
-//!   and the pre-eviction ablation.
+//!   the pre-eviction ablation, the `um::auto` eviction-hint seam
+//!   (`--evictor learned`, `docs/EVICTION.md`) and the eviction-quality
+//!   audit (live-evicted vs. dead-hit bytes).
 //! * [`host`] — host-side access paths (first-touch population, CPU
 //!   faults, ATS remote access).
 //!
@@ -33,7 +35,10 @@ pub mod evict;
 pub mod host;
 pub mod auto;
 
-pub use auto::{AutoConfig, AutoEngine, LearnedPredictor, Prediction, PredictorKind};
+pub use auto::{
+    AutoConfig, AutoEngine, DeadRange, EvictionForecast, LearnedPredictor, Prediction,
+    PredictorKind,
+};
 pub use metrics::{StreamMetrics, UmMetrics};
-pub use policy::{Advise, Loc, UmPolicy};
+pub use policy::{Advise, EvictorKind, Loc, UmPolicy};
 pub use runtime::{AccessOutcome, UmRuntime};

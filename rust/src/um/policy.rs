@@ -9,6 +9,42 @@ use crate::util::units::{Bytes, Ns, KIB, MIB};
 
 use super::auto::PredictorKind;
 
+/// Which policy drives eviction victim selection under oversubscription
+/// (the `--evictor` CLI knob; see `docs/EVICTION.md`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictorKind {
+    /// The driver's raw LRU over 2 MiB chunks — the paper's §II-D
+    /// behaviour and the default. Byte-identical to the pre-knob
+    /// runtime (pinned by `rust/tests/evictor_modes.rs`).
+    #[default]
+    Lru,
+    /// LRU biased by the `um::auto` learned ranker: ranked
+    /// predicted-dead chunks are evicted first, predicted-live chunks
+    /// are deferred, and predicted-dead clean duplicates are pre-dropped
+    /// ahead of the watermark path. Falls back to plain LRU whenever no
+    /// engine hints exist (every non-`UM Auto` variant).
+    Learned,
+}
+
+impl EvictorKind {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictorKind::Lru => "lru",
+            EvictorKind::Learned => "learned",
+        }
+    }
+
+    /// Parse a CLI value (`lru` | `learned`).
+    pub fn parse(s: &str) -> Option<EvictorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" | "driver" => Some(EvictorKind::Lru),
+            "learned" | "ranked" => Some(EvictorKind::Learned),
+            _ => None,
+        }
+    }
+}
+
 /// `cudaMemAdvise` advice values (paper §II-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Advise {
@@ -92,6 +128,12 @@ pub struct UmPolicy {
     /// the learned delta-history tables (default) or the original
     /// pattern-classifier rule. Ignored by every other variant.
     pub auto_predictor: PredictorKind,
+    /// Eviction victim-selection policy (the `--evictor` CLI knob):
+    /// raw chunk LRU (default, the paper's driver behaviour) or LRU
+    /// biased by the `um::auto` learned dead-range ranker. `Learned`
+    /// only changes behaviour when the engine supplies hints (the
+    /// `UM Auto` variant); see `docs/EVICTION.md`.
+    pub evictor: EvictorKind,
 }
 
 impl Default for UmPolicy {
@@ -113,6 +155,7 @@ impl Default for UmPolicy {
             etc_throttle: false,
             etc_threshold: 512 * MIB,
             auto_predictor: PredictorKind::Learned,
+            evictor: EvictorKind::Lru,
         }
     }
 }
@@ -183,6 +226,16 @@ mod tests {
     fn fault_service_scales_with_pages() {
         let p = UmPolicy::default();
         assert!(p.fault_service(32, false) > p.fault_service(1, false));
+    }
+
+    #[test]
+    fn evictor_kind_parse_roundtrip() {
+        for k in [EvictorKind::Lru, EvictorKind::Learned] {
+            assert_eq!(EvictorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EvictorKind::default(), EvictorKind::Lru, "lru is the pre-knob behaviour");
+        assert_eq!(UmPolicy::default().evictor, EvictorKind::Lru);
+        assert_eq!(EvictorKind::parse("bogus"), None);
     }
 
     #[test]

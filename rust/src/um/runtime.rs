@@ -106,6 +106,24 @@ pub struct UmRuntime {
     /// `UM Auto` variant via [`UmRuntime::enable_auto`]. `None` leaves
     /// every other variant's behaviour bit-identical to before.
     pub(super) auto: Option<AutoEngine>,
+    /// Engine eviction hints (the `--evictor learned` seam into
+    /// `um/evict.rs`). Empty unless the engine's dead-range ranker has
+    /// produced a confident forecast; ignored entirely by the LRU
+    /// evictor.
+    pub(super) evict_hints: super::evict::AutoEvictHints,
+    /// Outstanding eviction audit: pages evicted (or early-dropped)
+    /// this run and not yet re-demanded, one bit per page of the
+    /// 32-page chunk. Page-accurate so touching the still-resident
+    /// part of a partially evicted chunk is never mischarged. Pure
+    /// bookkeeping for the eviction-quality counters — never consulted
+    /// by any policy.
+    pub(super) evict_audit: crate::util::fxhash::FxHashMap<ChunkRef, u32>,
+    /// Predicted-live victims parked by the learned evictor, in their
+    /// original LRU order. Persisted across `ensure_device_space`
+    /// calls so each live chunk is deferred once per hint refresh;
+    /// flushed back into the LRU when hints refresh. Always empty
+    /// under the LRU evictor.
+    pub(super) evict_deferred: std::collections::VecDeque<ChunkRef>,
 }
 
 impl UmRuntime {
@@ -131,6 +149,9 @@ impl UmRuntime {
             access_evicted_bytes: 0,
             access_stream: StreamId::DEFAULT,
             auto: None,
+            evict_hints: super::evict::AutoEvictHints::default(),
+            evict_audit: crate::util::fxhash::FxHashMap::default(),
+            evict_deferred: std::collections::VecDeque::new(),
         }
     }
 
@@ -325,6 +346,14 @@ impl UmRuntime {
         write: bool,
         now: Ns,
     ) -> AccessOutcome {
+        // Eviction audit: the GPU *demanding* pages of a chunk evicted
+        // earlier this run means the eviction was wrong — whether the
+        // demand is served by re-migration, a remote mapping, or data a
+        // prefetch happened to bring back. Charged here (the demand
+        // point) rather than at re-residency so speculative
+        // prefetch-back alone never biases the eviction-quality
+        // comparison. Pure bookkeeping; never alters behaviour.
+        self.audit_note_demand(id, run);
         match class.res {
             Residency::Device => {
                 self.touch_chunks(id, run, now);
@@ -436,6 +465,9 @@ impl UmRuntime {
         if let Some(eng) = &mut self.auto {
             eng.reset();
         }
+        self.evict_hints.clear();
+        self.evict_audit.clear();
+        self.evict_deferred.clear();
         self.dev.reset();
         self.dma_h2d.reset();
         self.dma_d2h.reset();

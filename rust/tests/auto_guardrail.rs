@@ -9,7 +9,7 @@
 
 use umbra::apps::{AppId, Regime, Variant};
 use umbra::platform::{PlatformId, PlatformSpec};
-use umbra::um::PredictorKind;
+use umbra::um::{EvictorKind, PredictorKind};
 use umbra::util::units::MIB;
 
 /// Kernel time of one (app, variant) run on `plat` at `footprint`.
@@ -95,6 +95,42 @@ fn guardrail_holds_for_the_heuristic_predictor_too() {
     let um = kernel_ns(AppId::Bs, &plat, Variant::Um, 64 * MIB);
     let auto = kernel_ns(AppId::Bs, &plat, Variant::UmAuto, 64 * MIB);
     assert!(auto < um, "heuristic mode keeps the Intel-PCIe streaming win");
+}
+
+#[test]
+fn guardrail_holds_with_learned_eviction_oversubscribed() {
+    // `--evictor learned` must stay inside the same oversubscribed
+    // bounds as the default engine on BOTH platforms — in particular
+    // the P9 pathology cells must not regress (mispredicted dead
+    // ranges there would re-create exactly the §IV-B churn the advise
+    // guard exists to avoid).
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let mut plat = plat_id.spec();
+        plat.gpu.mem_capacity = 128 * MIB;
+        plat.gpu.reserved = 0;
+        plat.um.evictor = EvictorKind::Learned;
+        let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+        for app in AppId::ALL {
+            if !app.in_paper_matrix(plat_id, Regime::Oversubscribed) {
+                continue;
+            }
+            assert_within(app, &plat, footprint, 1.10);
+        }
+    }
+}
+
+#[test]
+fn guardrail_holds_with_learned_eviction_in_memory() {
+    // In-memory the learned evictor must be a strict no-op (no
+    // eviction pressure, no hints): the usual bound applies trivially
+    // but is pinned here so a future gating bug cannot slip through.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let mut plat = plat_id.spec();
+        plat.um.evictor = EvictorKind::Learned;
+        for app in [AppId::Bs, AppId::Cg, AppId::Fdtd3d] {
+            assert_within(app, &plat, 64 * MIB, 1.05);
+        }
+    }
 }
 
 #[test]

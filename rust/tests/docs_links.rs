@@ -136,14 +136,30 @@ fn relative_links_and_anchors_resolve() {
 #[test]
 fn required_documents_exist_and_are_linked() {
     let root = repo_root();
-    for doc in ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md"] {
+    for doc in ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md", "docs/EVICTION.md"] {
         assert!(root.join(doc).exists(), "{doc} missing");
     }
     let readme = fs::read_to_string(root.join("README.md")).unwrap();
     assert!(
-        readme.contains("docs/ARCHITECTURE.md") && readme.contains("docs/PREDICTOR.md"),
-        "README must link the architecture and predictor docs"
+        readme.contains("docs/ARCHITECTURE.md")
+            && readme.contains("docs/PREDICTOR.md")
+            && readme.contains("docs/EVICTION.md"),
+        "README must link the architecture, predictor and eviction docs"
     );
+    // The eviction doc's headline sections are link targets from the
+    // README and ARCHITECTURE: pin their anchors.
+    let eviction = fs::read_to_string(root.join("docs/EVICTION.md")).unwrap();
+    let required = [
+        "the-dead-range-ranker",
+        "when-learned-eviction-loses",
+        "the-hint-seam---evictor-learned",
+    ];
+    for anchor in required {
+        assert!(
+            anchors(&eviction).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/EVICTION.md lost the '{anchor}' section"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,186 @@
+//! The `--evictor` mode contracts (`docs/EVICTION.md`):
+//!
+//! * `--evictor lru` is byte-identical to the pre-knob runtime: for
+//!   every variant that has no hint source (all five non-auto
+//!   variants, plus `UM Auto` wherever eviction cannot happen) the two
+//!   evictors produce identical Ns + `UmMetrics`. Together with the
+//!   in-crate half of the oracle (`um::evict::tests::
+//!   lru_mode_ignores_stuffed_hints`, which proves the hint seam is
+//!   dead code in lru mode) this pins today's behaviour byte-for-byte.
+//! * `--evictor learned` is deterministic, and on the oversubscribed
+//!   streaming cells it reduces live-evicted bytes (evicted data the
+//!   workload still needed) against raw LRU — without breaking the
+//!   eviction-count bookkeeping.
+//!
+//! Shrunken device capacities keep the oversubscribed cells fast, the
+//! same trick the oversubscription integration tests use.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::um::EvictorKind;
+use umbra::util::units::MIB;
+
+/// Kernel time + full metrics of one (app, variant) run on `plat`.
+fn run(
+    app: AppId,
+    plat: &PlatformSpec,
+    variant: Variant,
+    footprint: u64,
+) -> (u64, umbra::um::UmMetrics) {
+    let r = app.build(footprint).run(plat, variant, false);
+    (r.kernel_time.0, r.metrics)
+}
+
+fn with_evictor(plat_id: PlatformId, evictor: EvictorKind, capacity: Option<u64>) -> PlatformSpec {
+    let mut plat = plat_id.spec();
+    plat.um.evictor = evictor;
+    if let Some(cap) = capacity {
+        plat.gpu.mem_capacity = cap;
+        plat.gpu.reserved = 0;
+    }
+    plat
+}
+
+#[test]
+fn lru_is_byte_identical_for_all_variants_without_hint_sources() {
+    // All six variants, both headline platforms, both regimes. The
+    // learned evictor differs from lru only through engine hints;
+    // every configuration here has none (non-auto variants never
+    // attach the engine; UM Auto computes hints only under
+    // oversubscription, so its in-memory cells must match too).
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for (regime, capacity, footprint) in [
+            (Regime::InMemory, None, 64 * MIB),
+            (Regime::Oversubscribed, Some(128 * MIB), 192 * MIB),
+        ] {
+            for variant in Variant::ALL_WITH_AUTO {
+                if variant == Variant::UmAuto && regime == Regime::Oversubscribed {
+                    continue; // hints active: covered by the tests below
+                }
+                if regime == Regime::Oversubscribed
+                    && (variant == Variant::Explicit
+                        || !AppId::Bs.in_paper_matrix(plat_id, regime))
+                {
+                    continue; // no oversubscribed Explicit baseline
+                }
+                let lru = run(
+                    AppId::Bs,
+                    &with_evictor(plat_id, EvictorKind::Lru, capacity),
+                    variant,
+                    footprint,
+                );
+                let learned = run(
+                    AppId::Bs,
+                    &with_evictor(plat_id, EvictorKind::Learned, capacity),
+                    variant,
+                    footprint,
+                );
+                assert_eq!(
+                    lru,
+                    learned,
+                    "{}/{}/{}: evictor must be inert without hints",
+                    plat_id.name(),
+                    variant.name(),
+                    regime.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lru_default_matches_explicit_lru_for_auto_oversubscribed() {
+    // The default policy IS the lru evictor: pins that shipping
+    // behaviour is unchanged unless --evictor learned is requested.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let default_plat = {
+            let mut p = plat_id.spec();
+            p.gpu.mem_capacity = 128 * MIB;
+            p.gpu.reserved = 0;
+            p
+        };
+        let explicit = with_evictor(plat_id, EvictorKind::Lru, Some(128 * MIB));
+        assert_eq!(
+            run(AppId::Bs, &default_plat, Variant::UmAuto, 192 * MIB),
+            run(AppId::Bs, &explicit, Variant::UmAuto, 192 * MIB),
+        );
+    }
+}
+
+#[test]
+fn learned_evictor_is_deterministic() {
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let plat = with_evictor(plat_id, EvictorKind::Learned, Some(128 * MIB));
+        let a = run(AppId::Bs, &plat, Variant::UmAuto, 192 * MIB);
+        let b = run(AppId::Bs, &plat, Variant::UmAuto, 192 * MIB);
+        assert_eq!(a, b, "{}: bit-identical across runs", plat_id.name());
+    }
+}
+
+#[test]
+fn learned_reduces_live_evicted_bytes_on_intel_oversubscribed_streaming() {
+    // The PCIe side of the study: no remote-map escape hatch, so
+    // oversubscribed streaming really churns the evictor. The learned
+    // ranker must cut the bytes that were evicted only to be demanded
+    // back (and it must never *increase* them).
+    let mut improved = false;
+    for app in [AppId::Bs, AppId::Fdtd3d] {
+        let lru = run(
+            app,
+            &with_evictor(PlatformId::IntelPascal, EvictorKind::Lru, Some(128 * MIB)),
+            Variant::UmAuto,
+            192 * MIB,
+        )
+        .1;
+        let learned = run(
+            app,
+            &with_evictor(PlatformId::IntelPascal, EvictorKind::Learned, Some(128 * MIB)),
+            Variant::UmAuto,
+            192 * MIB,
+        )
+        .1;
+        assert!(
+            learned.evict_live_evicted_bytes <= lru.evict_live_evicted_bytes,
+            "{}: learned live-evicted {} > lru {}",
+            app.name(),
+            learned.evict_live_evicted_bytes,
+            lru.evict_live_evicted_bytes,
+        );
+        improved |= learned.evict_live_evicted_bytes < lru.evict_live_evicted_bytes;
+    }
+    assert!(improved, "learned eviction must strictly improve at least one streaming cell");
+}
+
+#[test]
+fn learned_never_worse_on_p9_pathology_cells() {
+    // On P9 the engine's advise guard already avoids the §IV-B
+    // eviction storm (overflow is remote-mapped), so there is little
+    // churn for the ranker to fix — but it must not create any:
+    // live-evicted bytes and kernel time both stay no worse.
+    for app in [AppId::Bs, AppId::Fdtd3d] {
+        let (lru_ns, lru) = run(
+            app,
+            &with_evictor(PlatformId::P9Volta, EvictorKind::Lru, Some(128 * MIB)),
+            Variant::UmAuto,
+            192 * MIB,
+        );
+        let (learned_ns, learned) = run(
+            app,
+            &with_evictor(PlatformId::P9Volta, EvictorKind::Learned, Some(128 * MIB)),
+            Variant::UmAuto,
+            192 * MIB,
+        );
+        assert!(
+            learned.evict_live_evicted_bytes <= lru.evict_live_evicted_bytes,
+            "{}: P9 live-evicted regressed {} > {}",
+            app.name(),
+            learned.evict_live_evicted_bytes,
+            lru.evict_live_evicted_bytes,
+        );
+        assert!(
+            learned_ns as f64 <= lru_ns as f64 * 1.02,
+            "{}: P9 kernel time regressed {learned_ns} vs {lru_ns}",
+            app.name(),
+        );
+    }
+}
