@@ -71,6 +71,10 @@ pub fn suite_json(
             ("evict_live_evicted_bytes", Json::Int(m.evict_live_evicted_bytes)),
             ("evict_dead_hit_bytes", Json::Int(m.evict_dead_hit_bytes)),
             ("eviction_dead_ratio", Json::Num(m.eviction_dead_ratio())),
+            ("wd_trips", Json::Int(m.wd_trips)),
+            ("wd_recoveries", Json::Int(m.wd_recoveries)),
+            ("wd_retries", Json::Int(m.wd_retries)),
+            ("wd_degraded_windows", Json::Int(m.wd_degraded_windows)),
             ("streams", Json::Arr(stream_rows)),
         ]));
     }
@@ -290,6 +294,8 @@ mod tests {
         assert!(c.get("auto_misprediction_ratio").is_some());
         assert!(c.get("evict_live_evicted_bytes").is_some(), "eviction quality in the schema");
         assert!(c.get("eviction_dead_ratio").is_some());
+        assert!(c.get("wd_trips").is_some(), "watchdog counters in the schema");
+        assert!(c.get("wd_degraded_windows").is_some());
         let streams = c.get("streams").and_then(Json::as_arr).unwrap();
         assert!(
             streams.len() >= 2,

@@ -4,6 +4,7 @@
 use crate::apps::{AppId, Regime, RunOpts, Variant};
 use crate::coordinator::{run_cell, run_cell_opts, Cell, CellResult, Suite, SuiteConfig};
 use crate::platform::PlatformId;
+use crate::sim::{ChaosScenario, InjectConfig};
 use crate::trace::TimeSeries;
 use crate::um::metrics::{fmt_frac, fmt_pct};
 use crate::um::{EvictorKind, PredictorKind};
@@ -671,6 +672,134 @@ pub fn fig_evict(reps: usize) -> Report {
         text.push('\n');
     }
     Report::new("evict_study", text).with_csv("evict_study", csv)
+}
+
+// ---------------------------------------------------------------------
+// Chaos report (umbra chaos)
+// ---------------------------------------------------------------------
+
+/// The chaos report (`umbra chaos`, `docs/ROBUSTNESS.md`): run plain
+/// `UM` and `UM Auto` side by side under every fault-injection scenario
+/// ([`ChaosScenario`]) on the paper's oversubscription pathology cells,
+/// plus the `off` baseline, and report per row:
+///
+/// * **completion** — whether both runs finished (a panic inside the
+///   simulator is caught and reported, never aborts the sweep);
+/// * **guardrail adherence** — `UM Auto` kernel time vs plain UM under
+///   the *same* injection, held to the oversubscribed guardrail bound
+///   (the watchdog's job: degrade before the engine amplifies a fault
+///   storm into a slowdown plain UM does not suffer);
+/// * **watchdog activity** — trips, recoveries, bounded retries of
+///   failed prefetches, and degraded dwell windows.
+///
+/// `smoke` trims the sweep to the BS cells (the CI `chaos-smoke` step);
+/// injection uses the default pinned seed, so the report is
+/// reproducible byte-for-byte.
+pub fn fig_chaos(reps: usize, smoke: bool) -> Report {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    const GUARDRAIL: f64 = 1.10; // the oversubscribed guardrail bound
+    let all_cells: [(AppId, PlatformId); 4] = [
+        (AppId::Bs, PlatformId::IntelPascal),
+        (AppId::Bs, PlatformId::P9Volta),
+        (AppId::Cg, PlatformId::IntelPascal),
+        (AppId::Fdtd3d, PlatformId::P9Volta),
+    ];
+    let cells: &[(AppId, PlatformId)] = if smoke { &all_cells[..2] } else { &all_cells };
+    let mut scenarios = vec![ChaosScenario::Off];
+    scenarios.extend(ChaosScenario::ALL_ACTIVE);
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec![
+        "scenario",
+        "platform",
+        "app",
+        "um_ms",
+        "auto_ms",
+        "auto_over_um",
+        "guardrail_ok",
+        "wd_trips",
+        "wd_recoveries",
+        "wd_retries",
+        "wd_degraded_windows",
+        "completed",
+    ]);
+    for &(app, platform) in cells {
+        let mut table = TextTable::new(vec![
+            "scenario",
+            "UM (ms)",
+            "Auto (ms)",
+            "ratio",
+            "guardrail",
+            "trips",
+            "recov",
+            "retries",
+            "dwell",
+        ])
+        .title(format!("chaos: {} — {} (oversubscribed)", platform.name(), app.name()))
+        .left(0);
+        for &scenario in &scenarios {
+            let mut plat = platform.spec();
+            plat.um.inject = InjectConfig { scenario, ..InjectConfig::default() };
+            let run = |variant: Variant| -> Option<CellResult> {
+                let cell = Cell { app, platform, variant, regime: Regime::Oversubscribed };
+                catch_unwind(AssertUnwindSafe(|| {
+                    run_cell_opts(cell, reps, &RunOpts { trace: false, streams: 1 }, &plat)
+                }))
+                .ok()
+            };
+            let um = run(Variant::Um);
+            let auto = run(Variant::UmAuto);
+            let completed = um.is_some() && auto.is_some();
+            let (ratio, ok) = match (&um, &auto) {
+                (Some(u), Some(a)) => {
+                    let r = a.kernel_time.mean.as_ms() / u.kernel_time.mean.as_ms();
+                    (Some(r), r <= GUARDRAIL)
+                }
+                _ => (None, false),
+            };
+            let ms_of = |r: &Option<CellResult>| {
+                r.as_ref().map_or("panic".to_string(), |c| {
+                    format!("{:.1}", c.kernel_time.mean.as_ms())
+                })
+            };
+            let wd = auto.as_ref().map(|a| {
+                let m = &a.last.metrics;
+                (m.wd_trips, m.wd_recoveries, m.wd_retries, m.wd_degraded_windows)
+            });
+            let (trips, recov, retries, dwell) = wd.unwrap_or_default();
+            table.row(vec![
+                scenario.name().to_string(),
+                ms_of(&um),
+                ms_of(&auto),
+                ratio.map_or("n/a".to_string(), |r| format!("{r:.3}")),
+                if ok { "ok".to_string() } else { "VIOLATED".to_string() },
+                trips.to_string(),
+                recov.to_string(),
+                retries.to_string(),
+                dwell.to_string(),
+            ]);
+            csv.row(vec![
+                scenario.name().to_string(),
+                platform.name().to_string(),
+                app.name().to_string(),
+                um.as_ref()
+                    .map_or("n/a".to_string(), |c| format!("{:.3}", c.kernel_time.mean.as_ms())),
+                auto.as_ref()
+                    .map_or("n/a".to_string(), |c| format!("{:.3}", c.kernel_time.mean.as_ms())),
+                ratio.map_or("n/a".to_string(), |r| format!("{r:.4}")),
+                ok.to_string(),
+                trips.to_string(),
+                recov.to_string(),
+                retries.to_string(),
+                dwell.to_string(),
+                completed.to_string(),
+            ]);
+        }
+        text.push_str(&table.render());
+        text.push('\n');
+    }
+    Report::new("chaos", text).with_csv("chaos", csv)
 }
 
 #[cfg(test)]

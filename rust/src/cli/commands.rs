@@ -23,7 +23,7 @@ umbra — Unified-Memory Behavior Reproduction & Analysis
 USAGE:
   umbra list
   umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
-       [--predictor PRED] [--evictor EV] [--streams N]
+       [--predictor PRED] [--evictor EV] [--streams N] [--scenario CHAOS]
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
        [--evictor EV] [--streams N] [--with-auto] [--compare BASELINE.json]
        [--tolerance T]
@@ -31,6 +31,7 @@ USAGE:
   umbra table 1 [--out DIR]
   umbra auto [--reps N] [--out DIR] [--predictor PRED] [--evictor EV] [--streams N]
        [--compare] [--evict-study]
+  umbra chaos [--reps N] [--out DIR] [--smoke]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
   umbra validate [--artifacts DIR]
@@ -47,6 +48,14 @@ USAGE:
   EV   = lru|learned (eviction victim selection; default lru — the paper's
          driver LRU. `learned` biases victims by the um::auto dead-range
          ranker; only UM Auto cells differ. See docs/EVICTION.md)
+  CHAOS = off|link-degrade|flaky-prefetch|ecc-retire|fault-noise|storm
+         (deterministic fault injection, default off. See docs/ROBUSTNESS.md)
+
+  `umbra chaos` runs plain UM and UM Auto side by side under every
+  injection scenario on the oversubscription pathology cells and
+  reports completion, guardrail adherence and the um::auto watchdog's
+  trip/recovery/retry counters (docs/ROBUSTNESS.md); `--smoke` trims
+  the sweep for CI.
 
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
@@ -72,6 +81,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "fig" => cmd_fig(args),
         "table" => cmd_table(args),
         "auto" => cmd_auto(args),
+        "chaos" => cmd_chaos(args),
         "ablate" => cmd_ablate(args),
         "trace" => cmd_trace(args),
         "validate" => cmd_validate(args),
@@ -123,6 +133,27 @@ fn parse_streams(args: &Args) -> Result<u32> {
     Ok(n as u32)
 }
 
+/// Optional `--reps N` with a command-specific default. Rejects 0 with
+/// a one-line error instead of letting the aggregation layer panic on
+/// an empty repetition set.
+fn parse_reps(args: &Args, default: usize) -> Result<usize> {
+    let n = args.flag_usize("reps", default).map_err(|e| anyhow!(e))?;
+    if n == 0 {
+        bail!("--reps: need at least one repetition");
+    }
+    Ok(n)
+}
+
+/// Optional `--scenario CHAOS` (default off — injection fully inert,
+/// byte-identical to a build without the chaos layer).
+fn parse_scenario(args: &Args) -> Result<crate::sim::ChaosScenario> {
+    match args.flag("scenario") {
+        None => Ok(crate::sim::ChaosScenario::Off),
+        Some(v) => crate::sim::ChaosScenario::parse(v)
+            .ok_or_else(|| anyhow!("--scenario: invalid value '{v}'")),
+    }
+}
+
 fn cmd_list() -> Result<()> {
     let mut t = TextTable::new(vec!["app", "description"]).left(0).left(1);
     for a in AppId::ALL {
@@ -137,13 +168,15 @@ fn cmd_list() -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cell = parse_cell(args)?;
-    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let reps = parse_reps(args, 5)?;
     let trace = args.flag_bool("trace");
     let predictor = parse_predictor(args)?;
     let streams = parse_streams(args)?;
+    let scenario = parse_scenario(args)?;
     let mut plat = cell.platform.spec();
     plat.um.auto_predictor = predictor;
     plat.um.evictor = parse_evictor(args)?;
+    plat.um.inject = crate::sim::InjectConfig { scenario, ..Default::default() };
     let r = run_cell_opts(cell, reps, &RunOpts { trace, streams }, &plat);
     println!("{}", cell.label());
     println!(
@@ -188,6 +221,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.auto_learned_predictions,
             m.auto_fallback_predictions
         );
+        println!(
+            "  watchdog: {} trips, {} recoveries, {} retries, {} degraded windows",
+            m.wd_trips, m.wd_recoveries, m.wd_retries, m.wd_degraded_windows
+        );
+    }
+    if scenario != crate::sim::ChaosScenario::Off {
+        println!(
+            "  chaos ({}): {} B of prefetches failed (docs/ROBUSTNESS.md)",
+            scenario.name(),
+            m.chaos_failed_prefetch_bytes
+        );
     }
     if streams > 1 {
         for (i, s) in m.active_streams() {
@@ -213,7 +257,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_suite(args: &Args) -> Result<()> {
-    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let reps = parse_reps(args, 5)?;
     let config = SuiteConfig {
         reps,
         threads: args.flag_usize("threads", 0).map_err(|e| anyhow!(e))?,
@@ -335,7 +379,7 @@ fn cmd_fig(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| anyhow!("fig: which figure? (3-8)"))?
         .as_str();
-    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let reps = parse_reps(args, 5)?;
     let report = match which {
         "3" => figures::fig3(reps),
         "4" => figures::fig4(),
@@ -374,7 +418,7 @@ fn cmd_table(args: &Args) -> Result<()> {
 /// `--compare` runs the learned-vs-heuristic predictor study instead,
 /// and `--evict-study` the eviction-policy study (`docs/EVICTION.md`).
 fn cmd_auto(args: &Args) -> Result<()> {
-    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let reps = parse_reps(args, 5)?;
     let report = if args.flag_bool("evict-study") {
         figures::fig_evict(reps)
     } else if args.flag_bool("compare") {
@@ -396,6 +440,24 @@ fn cmd_auto(args: &Args) -> Result<()> {
             report.csvs.len(),
             report.jsons.len()
         );
+    }
+    Ok(())
+}
+
+/// The chaos report (`docs/ROBUSTNESS.md`): plain UM vs `UM Auto`
+/// under every fault-injection scenario on the oversubscription
+/// pathology cells — completion, guardrail adherence under the *same*
+/// injection, and the watchdog's trip/recovery/retry counters.
+/// `--smoke` trims the sweep to the BS cells (the CI `chaos-smoke`
+/// step runs `umbra chaos --smoke --reps 1`).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let reps = parse_reps(args, 3)?;
+    let smoke = args.flag_bool("smoke");
+    let report = figures::fig_chaos(reps, smoke);
+    println!("{}", report.text);
+    if let Some(out) = args.flag("out") {
+        report.write(Path::new(out))?;
+        eprintln!("wrote {out}/{}.txt (+{} csv)", report.name, report.csvs.len());
     }
     Ok(())
 }
@@ -448,7 +510,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_report(args: &Args) -> Result<()> {
     let out = args.flag_str("out", "results");
-    let reps = args.flag_usize("reps", 5).map_err(|e| anyhow!(e))?;
+    let reps = parse_reps(args, 5)?;
     eprintln!("regenerating all tables/figures into {out}/ (reps={reps}) ...");
     let written = write_all(Path::new(out), reps)?;
     println!("wrote: {}", written.join(", "));
@@ -590,6 +652,50 @@ mod tests {
         assert!(USAGE.contains("--streams"), "usage documents the knob");
         assert!(USAGE.contains("--with-auto"), "usage documents the suite flag");
         assert!(USAGE.contains("--tolerance"), "usage documents the gate knob");
+    }
+
+    #[test]
+    fn reps_flag_rejects_zero_and_garbage() {
+        assert_eq!(parse_reps(&args("run"), 5).unwrap(), 5, "default");
+        assert_eq!(parse_reps(&args("run --reps 2"), 5).unwrap(), 2);
+        assert!(parse_reps(&args("run --reps 0"), 5).is_err(), "zero reps is a usage error");
+        assert!(parse_reps(&args("run --reps nope"), 5).is_err());
+        assert!(parse_reps(&args("run --reps -3"), 5).is_err(), "negative is not a count");
+    }
+
+    #[test]
+    fn scenario_flag_parses_and_rejects() {
+        use crate::sim::ChaosScenario;
+        assert_eq!(parse_scenario(&args("run")).unwrap(), ChaosScenario::Off, "default off");
+        assert_eq!(
+            parse_scenario(&args("run --scenario flaky-prefetch")).unwrap(),
+            ChaosScenario::FlakyPrefetch
+        );
+        assert_eq!(parse_scenario(&args("run --scenario storm")).unwrap(), ChaosScenario::Storm);
+        assert!(parse_scenario(&args("run --scenario bogus")).is_err());
+        assert!(USAGE.contains("--scenario"), "usage documents the knob");
+        assert!(USAGE.contains("umbra chaos"), "usage documents the subcommand");
+        assert!(USAGE.contains("--smoke"), "usage documents the CI trim");
+        assert!(USAGE.contains("docs/ROBUSTNESS.md"), "usage points at the design doc");
+    }
+
+    #[test]
+    fn invalid_knobs_fail_with_one_line_errors() {
+        // Satellite (CLI robustness): every malformed knob yields an
+        // error, never a panic deeper in the stack.
+        for bad in [
+            "run --app bs --platform pascal --variant um --regime in-memory --reps 0",
+            "run --app bs --platform pascal --variant um --regime in-memory --streams 0",
+            "run --app bs --platform pascal --variant um --regime in-memory --evictor bogus",
+            "run --app bs --platform pascal --variant um --regime in-memory --predictor bogus",
+            "run --app bs --platform nowhere --variant um --regime in-memory",
+            "run --app bs --platform pascal --variant um --regime in-memory --scenario bogus",
+            "chaos --reps 0",
+            "suite --reps x",
+        ] {
+            let e = dispatch(&args(bad)).expect_err(bad).to_string();
+            assert!(!e.is_empty(), "{bad}: error message present");
+        }
     }
 
     #[test]

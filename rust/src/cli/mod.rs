@@ -32,6 +32,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
+            eprintln!("run 'umbra help' for usage");
             1
         }
     }

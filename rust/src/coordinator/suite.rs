@@ -90,6 +90,11 @@ pub struct Suite {
 
 impl Suite {
     /// Run the configured matrix; independent cells execute in parallel.
+    ///
+    /// A cell whose simulation panics does not abort the suite: the
+    /// failure is reported on stderr (with the cell's label) and its
+    /// entry is simply absent from [`Suite::results`], so downstream
+    /// lookups see `None` rather than a crash.
     pub fn run(config: &SuiteConfig) -> Suite {
         let cells = config.cells();
         let reps = config.reps;
@@ -101,13 +106,25 @@ impl Suite {
         } else {
             Pool::new(config.threads)
         };
-        let results = pool.map(cells, move |cell| {
+        let labels: Vec<String> = cells.iter().map(|c| c.label()).collect();
+        let results = pool.try_map(cells, move |cell| {
             let mut plat = cell.platform.spec();
             plat.um.auto_predictor = predictor;
             plat.um.evictor = evictor;
             (cell, run_cell_opts(cell, reps, &opts, &plat))
         });
-        Suite { results: results.into_iter().collect() }
+        let mut ok = HashMap::new();
+        for (label, res) in labels.into_iter().zip(results) {
+            match res {
+                Ok((cell, result)) => {
+                    ok.insert(cell, result);
+                }
+                Err(msg) => {
+                    eprintln!("suite: cell {label} failed ({msg}); continuing with the rest");
+                }
+            }
+        }
+        Suite { results: ok }
     }
 
     pub fn get(&self, cell: &Cell) -> Option<&CellResult> {

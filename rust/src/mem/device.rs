@@ -55,6 +55,10 @@ type HeapEntry = Reverse<(Ns, u64, ChunkRef)>;
 #[derive(Clone, Debug)]
 pub struct DeviceMemory {
     capacity: Bytes,
+    /// Capacity at construction time — what [`DeviceMemory::reset`]
+    /// restores after ECC-style retirement (`sim/inject.rs`) shrank
+    /// `capacity` mid-run.
+    base_capacity: Bytes,
     used: Bytes,
     chunks: FxHashMap<ChunkRef, ChunkMeta>,
     /// LRU heap over evictable (non-pinned, non-locked) chunks.
@@ -75,6 +79,7 @@ impl DeviceMemory {
     pub fn new(capacity: Bytes) -> DeviceMemory {
         DeviceMemory {
             capacity,
+            base_capacity: capacity,
             used: 0,
             chunks: FxHashMap::default(),
             lru: BinaryHeap::new(),
@@ -95,6 +100,26 @@ impl DeviceMemory {
     }
     pub fn free(&self) -> Bytes {
         self.capacity - self.used
+    }
+    /// Bytes quarantined by [`DeviceMemory::retire`] since the last
+    /// reset.
+    pub fn retired(&self) -> Bytes {
+        self.base_capacity - self.capacity
+    }
+
+    /// ECC-style quarantine: shrink usable capacity by `bytes`
+    /// (`sim/inject.rs` ecc-retire scenario). The caller must have
+    /// freed enough space first — retiring below `used` would make the
+    /// accounting lie. Undone by [`DeviceMemory::reset`].
+    pub fn retire(&mut self, bytes: Bytes) {
+        assert!(
+            self.used + bytes <= self.capacity,
+            "retiring {} with used={} cap={}",
+            bytes,
+            self.used,
+            self.capacity
+        );
+        self.capacity -= bytes;
     }
     pub fn resident_chunks(&self) -> usize {
         self.chunks.len()
@@ -349,6 +374,14 @@ impl DeviceMemory {
         self.evictable == 0 && self.pinned_chunks > 0
     }
 
+    /// Whether *any* resident chunk could be evicted, forced or not —
+    /// the guard the chaos layer's ECC retirement uses before
+    /// demanding space (a fully `cudaMalloc`-locked device has
+    /// nothing to free). O(1).
+    pub fn any_evictable(&self) -> bool {
+        self.evictable > 0 || self.pinned_chunks > 0
+    }
+
     /// Like [`DeviceMemory::pop_lru`], but *without* bumping the
     /// eviction statistics: the learned-evictor path pops candidate
     /// victims it may decide to defer (predicted-live hints) and only
@@ -399,6 +432,7 @@ impl DeviceMemory {
     }
 
     pub fn reset(&mut self) {
+        self.capacity = self.base_capacity;
         self.used = 0;
         self.chunks.clear();
         self.lru.clear();
@@ -664,6 +698,27 @@ mod tests {
         d.set_pinned(cr(0, 2), true);
         assert!(!d.is_evictable_resident(cr(0, 2)));
         assert!(!d.is_evictable_resident(cr(0, 0)), "fully evicted chunk");
+    }
+
+    #[test]
+    fn retire_shrinks_capacity_until_reset() {
+        let mut d = DeviceMemory::new(8 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+        d.retire(2 * MIB);
+        assert_eq!(d.capacity(), 6 * MIB);
+        assert_eq!(d.retired(), 2 * MIB);
+        assert_eq!(d.free(), 4 * MIB);
+        d.reset();
+        assert_eq!(d.capacity(), 8 * MIB);
+        assert_eq!(d.retired(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "retiring")]
+    fn retire_below_used_panics() {
+        let mut d = DeviceMemory::new(4 * MIB);
+        d.add_resident(cr(0, 0), 2 * MIB, Ns(1));
+        d.retire(4 * MIB);
     }
 
     #[test]

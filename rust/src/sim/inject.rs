@@ -1,0 +1,304 @@
+//! Deterministic fault injection — the chaos layer for the UM stack.
+//!
+//! A scenario is a seeded, scripted set of perturbations applied while
+//! a run executes:
+//!
+//! * **link-degrade** — periodic bandwidth-degradation episodes on the
+//!   `dma_h2d`/`dma_d2h` engines (the efficiency passed to
+//!   [`crate::sim::BandwidthResource::transfer`] is scaled down inside
+//!   each episode window);
+//! * **flaky-prefetch** — a budget of early bulk-prefetch pieces fail
+//!   transiently (the pages stay host-resident and demand faults — or
+//!   the watchdog's bounded retry — recover them later);
+//! * **ecc-retire** — ECC-style page retirement: every Nth GPU access
+//!   quarantines one 2 MiB device chunk, shrinking usable capacity
+//!   mid-run (restored by `reset_run_state`);
+//! * **fault-noise** — spurious fault groups injected ahead of the
+//!   `um::auto` observer tap, so the engine trains on a noisy stream;
+//! * **storm** — all four at once, milder parameters.
+//!
+//! Everything is derived from [`InjectConfig::seed`] through the crate
+//! [`Rng`], so the same `(scenario, seed)` always produces the same
+//! perturbation schedule — byte-identical runs, asserted by
+//! `rust/tests/chaos_determinism.rs`. With the default
+//! [`ChaosScenario::Off`] no hook fires and no RNG is consumed: every
+//! existing variant/mode is byte-identical to the un-instrumented
+//! runtime (the disabled-oracle test in the same file).
+
+use crate::util::rng::Rng;
+use crate::util::units::Ns;
+
+/// Which perturbation script to run. `Off` (the default) is pinned
+/// byte-identical to the pre-chaos runtime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ChaosScenario {
+    /// No injection (default; byte-identical to the seed runtime).
+    #[default]
+    Off,
+    /// Periodic link-bandwidth degradation episodes.
+    LinkDegrade,
+    /// Transient failures of early bulk-prefetch pieces.
+    FlakyPrefetch,
+    /// ECC-style chunk retirement shrinking device capacity mid-run.
+    EccRetire,
+    /// Spurious fault groups ahead of the observer tap.
+    FaultNoise,
+    /// All of the above, milder parameters.
+    Storm,
+}
+
+impl ChaosScenario {
+    /// Every scenario that actually injects (i.e. everything but
+    /// `Off`) — the sweep order of `umbra chaos`.
+    pub const ALL_ACTIVE: [ChaosScenario; 5] = [
+        ChaosScenario::LinkDegrade,
+        ChaosScenario::FlakyPrefetch,
+        ChaosScenario::EccRetire,
+        ChaosScenario::FaultNoise,
+        ChaosScenario::Storm,
+    ];
+
+    /// CLI / report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosScenario::Off => "off",
+            ChaosScenario::LinkDegrade => "link-degrade",
+            ChaosScenario::FlakyPrefetch => "flaky-prefetch",
+            ChaosScenario::EccRetire => "ecc-retire",
+            ChaosScenario::FaultNoise => "fault-noise",
+            ChaosScenario::Storm => "storm",
+        }
+    }
+
+    /// Parse a CLI name (the `--scenario` flag).
+    pub fn parse(s: &str) -> Option<ChaosScenario> {
+        match s {
+            "off" | "none" => Some(ChaosScenario::Off),
+            "link-degrade" | "link" => Some(ChaosScenario::LinkDegrade),
+            "flaky-prefetch" | "flaky" => Some(ChaosScenario::FlakyPrefetch),
+            "ecc-retire" | "ecc" => Some(ChaosScenario::EccRetire),
+            "fault-noise" | "noise" => Some(ChaosScenario::FaultNoise),
+            "storm" => Some(ChaosScenario::Storm),
+            _ => None,
+        }
+    }
+}
+
+/// Injection knob carried inside `UmPolicy` (and therefore `Copy`).
+/// `seed` is inert while `scenario == Off`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InjectConfig {
+    /// The perturbation script to run.
+    pub scenario: ChaosScenario,
+    /// Seed for the injection schedule (same seed ⇒ same schedule).
+    pub seed: u64,
+}
+
+impl Default for InjectConfig {
+    fn default() -> Self {
+        InjectConfig { scenario: ChaosScenario::Off, seed: 0xC4A0_5EED }
+    }
+}
+
+/// Scenario parameters resolved from `(scenario, seed)` at
+/// [`Injector::new`] time.
+#[derive(Clone, Debug)]
+struct Script {
+    /// Link degradation: episode period (0 = no degradation).
+    link_period: u64,
+    /// Degraded prefix of each period.
+    link_window: u64,
+    /// Efficiency scale inside a degraded window (in `(0, 1]`).
+    link_factor: f64,
+    /// How many early bulk-prefetch pieces fail (0 = none). Finite by
+    /// design: the fault clears, so a backed-off watchdog can re-arm
+    /// and recover.
+    flaky_budget: u64,
+    /// Retire one chunk every Nth GPU access (0 = never).
+    ecc_every: u64,
+    /// Probability of a spurious fault group per GPU access.
+    noise_p: f64,
+    /// Pages carried by one spurious fault group.
+    noise_pages: u32,
+}
+
+impl Script {
+    fn resolve(cfg: InjectConfig, rng: &mut Rng) -> Script {
+        let mut s = Script {
+            link_period: 0,
+            link_window: 0,
+            link_factor: 1.0,
+            flaky_budget: 0,
+            ecc_every: 0,
+            noise_p: 0.0,
+            noise_pages: 8,
+        };
+        let storm = cfg.scenario == ChaosScenario::Storm;
+        if storm || cfg.scenario == ChaosScenario::LinkDegrade {
+            s.link_period = rng.range(3_000_000, 6_000_000); // 3-6 ms
+            s.link_window = (s.link_period as f64 * 0.4) as u64;
+            s.link_factor = rng.f64_range(0.3, 0.6);
+            if storm {
+                s.link_factor = (s.link_factor + 1.0) / 2.0; // milder
+            }
+        }
+        if storm || cfg.scenario == ChaosScenario::FlakyPrefetch {
+            s.flaky_budget = if storm { 24 } else { rng.range(40, 64) };
+        }
+        if storm || cfg.scenario == ChaosScenario::EccRetire {
+            s.ecc_every = if storm { 12 } else { 6 };
+        }
+        if storm || cfg.scenario == ChaosScenario::FaultNoise {
+            s.noise_p = if storm { 0.08 } else { 0.15 };
+        }
+        s
+    }
+}
+
+/// Per-run injection state, owned by `UmRuntime` (`None` when the
+/// scenario is `Off`). Rebuilt from the policy's [`InjectConfig`] by
+/// `reset_run_state`, so every repetition replays the same schedule.
+#[derive(Clone, Debug)]
+pub struct Injector {
+    script: Script,
+    rng: Rng,
+    /// Bulk-prefetch pieces attempted so far (failures are the first
+    /// `flaky_budget` of them).
+    pieces: u64,
+    /// GPU accesses seen (drives the ECC retirement cadence).
+    accesses: u64,
+}
+
+impl Injector {
+    /// Build the injector for an active scenario; `None` for `Off`.
+    pub fn new(cfg: InjectConfig) -> Option<Injector> {
+        if cfg.scenario == ChaosScenario::Off {
+            return None;
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0x1A9E_C7ED_0F00_D5ED);
+        let script = Script::resolve(cfg, &mut rng);
+        Some(Injector { script, rng, pieces: 0, accesses: 0 })
+    }
+
+    /// Multiplicative link-efficiency scale at simulated time `now`
+    /// (1.0 outside degradation episodes; always in `(0, 1]`).
+    pub fn link_factor(&self, now: Ns) -> f64 {
+        if self.script.link_period == 0 {
+            return 1.0;
+        }
+        if now.0 % self.script.link_period < self.script.link_window {
+            self.script.link_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// One bulk-prefetch piece is about to transfer: does it fail
+    /// transiently? (The first `flaky_budget` attempts do; after the
+    /// budget the fault has cleared and every retry succeeds.)
+    pub fn prefetch_piece_fails(&mut self) -> bool {
+        if self.script.flaky_budget == 0 {
+            return false;
+        }
+        self.pieces += 1;
+        self.pieces <= self.script.flaky_budget
+    }
+
+    /// One GPU access is starting: should the runtime retire a device
+    /// chunk now (ECC-style quarantine)?
+    pub fn should_retire_chunk(&mut self) -> bool {
+        if self.script.ecc_every == 0 {
+            return false;
+        }
+        self.accesses += 1;
+        self.accesses.is_multiple_of(self.script.ecc_every)
+    }
+
+    /// Spurious fault-group noise for this access: `Some(pages)` with
+    /// the scripted probability.
+    pub fn fault_noise(&mut self) -> Option<u32> {
+        if self.script.noise_p == 0.0 {
+            return None;
+        }
+        if self.rng.chance(self.script.noise_p) {
+            Some(self.script.noise_pages)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_builds_no_injector() {
+        assert!(Injector::new(InjectConfig::default()).is_none());
+        assert!(Injector::new(InjectConfig {
+            scenario: ChaosScenario::Off,
+            seed: 999
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = InjectConfig { scenario: ChaosScenario::Storm, seed: 7 };
+        let mut a = Injector::new(cfg).unwrap();
+        let mut b = Injector::new(cfg).unwrap();
+        for i in 0..200u64 {
+            assert_eq!(a.link_factor(Ns(i * 100_000)), b.link_factor(Ns(i * 100_000)));
+            assert_eq!(a.prefetch_piece_fails(), b.prefetch_piece_fails());
+            assert_eq!(a.should_retire_chunk(), b.should_retire_chunk());
+            assert_eq!(a.fault_noise(), b.fault_noise());
+        }
+    }
+
+    #[test]
+    fn link_degrade_scales_inside_episodes_only() {
+        let cfg = InjectConfig { scenario: ChaosScenario::LinkDegrade, seed: 3 };
+        let inj = Injector::new(cfg).unwrap();
+        let factors: Vec<f64> =
+            (0..1000).map(|i| inj.link_factor(Ns(i * 10_000))).collect();
+        assert!(factors.iter().any(|&f| f < 1.0), "episodes degrade");
+        assert!(factors.iter().any(|&f| f == 1.0), "gaps recover");
+        assert!(factors.iter().all(|&f| f > 0.0 && f <= 1.0), "factor stays in (0,1]");
+    }
+
+    #[test]
+    fn flaky_budget_is_finite() {
+        let cfg = InjectConfig { scenario: ChaosScenario::FlakyPrefetch, seed: 11 };
+        let mut inj = Injector::new(cfg).unwrap();
+        let failures = (0..10_000).filter(|_| inj.prefetch_piece_fails()).count();
+        assert!(failures > 0, "some pieces fail");
+        assert!(failures < 100, "the fault clears: {failures}");
+        // Once cleared, it stays cleared.
+        assert!(!(0..100).any(|_| inj.prefetch_piece_fails()));
+    }
+
+    #[test]
+    fn ecc_retires_on_cadence() {
+        let cfg = InjectConfig { scenario: ChaosScenario::EccRetire, seed: 5 };
+        let mut inj = Injector::new(cfg).unwrap();
+        let retires = (0..60).filter(|_| inj.should_retire_chunk()).count();
+        assert_eq!(retires, 10, "every 6th access");
+    }
+
+    #[test]
+    fn noise_fires_sometimes_not_always() {
+        let cfg = InjectConfig { scenario: ChaosScenario::FaultNoise, seed: 13 };
+        let mut inj = Injector::new(cfg).unwrap();
+        let hits = (0..1000).filter(|_| inj.fault_noise().is_some()).count();
+        assert!(hits > 50 && hits < 400, "p≈0.15: {hits}");
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for s in ChaosScenario::ALL_ACTIVE {
+            assert_eq!(ChaosScenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(ChaosScenario::parse("off"), Some(ChaosScenario::Off));
+        assert_eq!(ChaosScenario::parse("bogus"), None);
+    }
+}

@@ -16,7 +16,9 @@
 //! hundreds of simulated runs.
 
 pub mod clock;
+pub mod inject;
 pub mod resource;
 
 pub use clock::Clock;
+pub use inject::{ChaosScenario, InjectConfig, Injector};
 pub use resource::{BandwidthResource, SerialResource};

@@ -72,8 +72,10 @@ impl UmRuntime {
         now: Ns,
     ) -> AccessOutcome {
         let cfg = match &self.auto {
-            Some(e) => e.cfg,
-            None => return self.migrate_or_map_h2d(id, run, class, write, now),
+            // A watchdog-inert engine actuates nothing: the access
+            // takes the exact plain-UM path (`docs/ROBUSTNESS.md`).
+            Some(e) if !e.watchdog.inert() => e.cfg,
+            _ => return self.migrate_or_map_h2d(id, run, class, write, now),
         };
         if !cfg.escalate
             || class.read_mostly
@@ -141,6 +143,16 @@ impl UmRuntime {
         let cfg = eng.cfg;
         let now = out.done;
 
+        // Watchdog snapshot: actuation below is gated on the rung the
+        // breaker held *entering* this access; the ledger tick at the
+        // bottom may move it for the next one.
+        let wd_mode = eng.watchdog.mode();
+        let force_heur = eng.watchdog.force_heuristic();
+        let block_advise = eng.watchdog.block_advise();
+        let inert = eng.watchdog.inert();
+        let mut wd_benefit: Bytes = 0;
+        let mut wd_harm: Bytes = 0;
+
         // Cross-stream consumption: this access also consumes any
         // overlapping prefetch predicted from *another* stream's
         // history (the entry gate already waited on it). Credit the
@@ -151,6 +163,8 @@ impl UmRuntime {
                 let o = st.history.audit_consumed(range);
                 self.metrics.auto_prefetch_hit_bytes += o.prefetch_hit_bytes;
                 self.metrics.auto_mispredicted_prefetch_bytes += o.mispredicted_bytes;
+                wd_benefit += o.prefetch_hit_bytes;
+                wd_harm += o.mispredicted_bytes;
             }
         }
 
@@ -159,6 +173,8 @@ impl UmRuntime {
         let obs = st.history.observe(range, write, out.h2d_bytes, cfg.window, cfg.pending_ttl);
         self.metrics.auto_prefetch_hit_bytes += obs.prefetch_hit_bytes;
         self.metrics.auto_mispredicted_prefetch_bytes += obs.mispredicted_bytes;
+        wd_benefit += obs.prefetch_hit_bytes;
+        wd_harm += obs.mispredicted_bytes;
         let flipped = st.tracker.update(classify(st.history.window()), cfg.hysteresis);
         if flipped {
             self.metrics.auto_pattern_flips += 1;
@@ -167,7 +183,11 @@ impl UmRuntime {
         let pat = st.tracker.current();
         // Learned mode: train the delta-history tables on this access
         // (online, from the same fault-stream tap the classifier uses).
-        if cfg.predict && cfg.predictor == PredictorKind::Learned {
+        // A watchdog-benched predictor is neither trained nor consulted
+        // — when the breaker re-arms it, learning restarts fresh from
+        // post-fault conditions rather than from tables poisoned by
+        // the incident.
+        if cfg.predict && cfg.predictor == PredictorKind::Learned && !force_heur {
             st.predictor.observe(range, &cfg);
         }
 
@@ -175,8 +195,11 @@ impl UmRuntime {
         // (learned mode) or the single classifier-rule range (heuristic
         // mode; also the learned mode's low-confidence fallback). The
         // heuristic arm is byte-identical to the original engine.
-        let predictions: Vec<PageRange> = if !cfg.predict {
+        let predictions: Vec<PageRange> = if !cfg.predict || inert {
             Vec::new()
+        } else if force_heur {
+            // Watchdog rung ≥ Heuristic: the classifier rule alone.
+            heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect()
         } else {
             match cfg.predictor {
                 PredictorKind::Heuristic => {
@@ -224,9 +247,17 @@ impl UmRuntime {
         if shared.advised_read_mostly && write {
             // The workload started writing a range we duplicated:
             // back off before invalidation churn accumulates.
+            // Deliberately NOT watchdog-gated: withdrawing a bad advise
+            // is protective and stays armed on every rung, Inert
+            // included.
             unset_read_mostly = true;
             shared.advised_read_mostly = false;
-        } else if !shared.advised_read_mostly && !writes_any && advise_ready && advise_safe {
+        } else if !shared.advised_read_mostly
+            && !writes_any
+            && advise_ready
+            && advise_safe
+            && !block_advise
+        {
             set_read_mostly = true;
             shared.advised_read_mostly = true;
         }
@@ -292,9 +323,13 @@ impl UmRuntime {
         // whenever the learned path will not run, the engine must
         // behave exactly like the LRU evictor — including in a
         // non-oversubscribed run that still classifies as streaming.
+        // Benched along with the predictor (watchdog rung ≥ Heuristic):
+        // the forecast reads the same delta tables, so a degraded
+        // engine falls back to the legacy early-drop rule + raw LRU.
         let learned_eviction_active = self.policy.evictor == EvictorKind::Learned
+            && !force_heur
             && self.space.managed_bytes() > self.dev.capacity();
-        if streaming {
+        if streaming && !inert {
             // Eviction hints. Early-drop streamed-past duplicates — the
             // original `[0, start)` rule, kept verbatim for the LRU
             // evictor (`--evictor lru` is pinned byte-identical to it
@@ -338,6 +373,53 @@ impl UmRuntime {
             // LRU is pessimal for.
             let sweep = streaming && range.len().saturating_mul(2) >= full.len();
             self.auto_actuate_learned_eviction(&eng, stream, id, sweep);
+        }
+
+        // ---- bounded retry of failed prefetches (fault injection) ---
+        // Pieces whose bulk transfer failed (`ChaosScenario`'s flaky
+        // link) sit in the runtime's intake queue; the watchdog
+        // schedules each for a bounded number of re-issues with
+        // exponential backoff in access epochs. An Inert engine does
+        // not retry — the pages simply demand-fault like plain UM.
+        // Empty the whole run when injection is off, so the disabled
+        // path stays byte-identical.
+        if inert {
+            self.failed_prefetches.clear();
+        } else {
+            eng.watchdog.absorb_failures(&mut self.failed_prefetches);
+            let mut t_retry = t_pred;
+            for (rid, piece) in eng.watchdog.due_retries() {
+                eng.watchdog.note_retry();
+                let (pieces, ready) = self.auto_prefetch_ahead(rid, piece, None, t_retry);
+                if pieces.is_empty() {
+                    continue;
+                }
+                let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
+                self.metrics.auto_prefetched_bytes += issued;
+                self.metrics.stream_mut(stream).auto_prefetched_bytes += issued;
+                let history = &mut eng.state.entry((stream, rid)).or_default().history;
+                for p in pieces {
+                    history.push_pending(p, ready);
+                }
+                t_retry = ready;
+            }
+        }
+
+        // ---- watchdog ledger tick -----------------------------------
+        // Benefit: predictively prefetched bytes this access consumed.
+        // Harm: prefetched bytes that aged out mispredicted, plus bytes
+        // whose prefetch failed outright since the last tick.
+        wd_harm += eng.watchdog.failed_delta(self.metrics.chaos_failed_prefetch_bytes);
+        eng.watchdog.note_access(wd_benefit, wd_harm);
+        self.metrics.wd_trips = eng.watchdog.trips;
+        self.metrics.wd_recoveries = eng.watchdog.recoveries;
+        self.metrics.wd_retries = eng.watchdog.retries;
+        self.metrics.wd_degraded_windows = eng.watchdog.degraded_windows;
+        if eng.watchdog.mode() > wd_mode && self.policy.evictor == EvictorKind::Learned {
+            // Degraded this access: withdraw the learned eviction
+            // hints immediately — raw LRU is back in sole charge.
+            self.evict_hints.clear();
+            self.flush_deferred_victims();
         }
 
         self.auto = Some(eng);

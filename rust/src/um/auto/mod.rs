@@ -52,6 +52,20 @@
 //! `evict_live_evicted_bytes` / `evict_dead_hit_bytes`), surfaced
 //! through the CSV/JSON report output so decision quality is
 //! trackable across PRs.
+//!
+//! ## Self-defense: the watchdog
+//!
+//! The engine carries its own circuit breaker ([`watchdog`]): a shadow
+//! cost ledger comparing what its prefetches delivered (hit bytes)
+//! against what they wasted (mispredicted bytes, plus bytes whose
+//! transfer failed outright under fault injection —
+//! [`crate::sim::ChaosScenario`]). Sustained harm degrades the engine
+//! one rung at a time (learned predictor → heuristic → no new advises
+//! → fully inert) and recovery is probed with exponential backoff, so
+//! a degraded engine converges toward plain UM instead of amplifying a
+//! fault storm. Trips, recoveries, bounded failed-prefetch retries and
+//! degraded dwell ride in [`crate::um::UmMetrics`] (`wd_*`). See
+//! `docs/ROBUSTNESS.md`.
 #![warn(missing_docs)]
 
 pub mod actuator;
@@ -59,6 +73,7 @@ pub mod model;
 pub mod observer;
 pub mod pattern;
 pub mod predictor;
+pub mod watchdog;
 
 use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, PageRange};
@@ -71,6 +86,7 @@ use pattern::{Pattern, PatternTracker};
 pub use predictor::{
     DeadRange, EvictionForecast, LearnedPredictor, Prediction, PredictorKind,
 };
+pub use watchdog::{Watchdog, WatchdogConfig, WatchdogMode};
 
 /// Tuning knobs of the policy engine. Defaults are deliberately
 /// conservative: the engine must never make a workload much worse than
@@ -189,6 +205,12 @@ pub struct AutoEngine {
     /// Distinct streams observed this run, ascending. More than one
     /// arms the link-headroom sizing (`AutoConfig::max_link_backlog`).
     pub(super) seen_streams: Vec<StreamId>,
+    /// The circuit breaker guarding the engine against its own
+    /// actuations going bad (fault injection, pathological workloads):
+    /// degrades Full → Heuristic → NoAdvise → Inert on sustained harm
+    /// and probes back up with exponential backoff. See
+    /// [`watchdog`] and `docs/ROBUSTNESS.md`.
+    pub watchdog: Watchdog,
 }
 
 impl AutoEngine {
@@ -200,14 +222,18 @@ impl AutoEngine {
             state: FxHashMap::default(),
             shared: FxHashMap::default(),
             seen_streams: Vec::new(),
+            watchdog: Watchdog::default(),
         }
     }
 
-    /// Drop all learned state (new repetition); keeps the config.
+    /// Drop all learned state (new repetition); keeps the config. The
+    /// watchdog re-arms healthy (ladder state and counters are per
+    /// repetition, like every other metric).
     pub fn reset(&mut self) {
         self.state.clear();
         self.shared.clear();
         self.seen_streams.clear();
+        self.watchdog = Watchdog::new(self.watchdog.cfg);
     }
 
     /// Record that `s` drove an observed access.

@@ -1,0 +1,456 @@
+//! The engine's circuit breaker: a shadow cost ledger that degrades
+//! `um::auto` toward inertness when its own actuations are hurting the
+//! workload, and probes its way back once conditions clear.
+//!
+//! Every post-access step feeds the ledger two numbers: **benefit**
+//! (predictively prefetched bytes the workload actually consumed) and
+//! **harm** (prefetched bytes that aged out mispredicted, plus bytes
+//! whose prefetch failed outright under fault injection —
+//! [`crate::sim::ChaosScenario`]). Accesses are grouped into fixed-size
+//! windows; a window where harm outweighs benefit *and* clears an
+//! absolute floor is *harmful*. Sustained harmful windows trip the
+//! breaker one rung down the degradation ladder:
+//!
+//! ```text
+//! Full ──trip──▶ Heuristic ──trip──▶ NoAdvise ──trip──▶ Inert
+//!   ◀─recover──            ◀─recover─           ◀─recover─
+//! ```
+//!
+//! * [`WatchdogMode::Full`] — every engine feature armed.
+//! * [`WatchdogMode::Heuristic`] — the learned predictor is benched;
+//!   predictions fall back to the classifier rule (cheap, conservative).
+//! * [`WatchdogMode::NoAdvise`] — no *new* auto advises either
+//!   (protective unsets still fire); prediction stays heuristic.
+//! * [`WatchdogMode::Inert`] — the engine observes but actuates
+//!   nothing: no escalation, no prefetch, no advises, no eviction
+//!   hints. Behaviour converges to plain UM.
+//!
+//! Recovery is hysteretic: after a trip the breaker holds its rung for
+//! an exponentially growing backoff (doubling per trip, capped), and
+//! only steps back up after a streak of consecutive clean windows —
+//! so a flapping fault source cannot make the engine oscillate.
+//! Counters (`trips`, `recoveries`, `retries`, `degraded_windows`)
+//! surface through [`crate::um::UmMetrics`] (`wd_*` columns in the
+//! suite CSV). Thresholds and the paper mapping are documented in
+//! `docs/ROBUSTNESS.md`.
+
+use std::collections::VecDeque;
+
+use crate::mem::{AllocId, PageRange};
+use crate::util::fxhash::FxHashMap;
+use crate::util::units::{Bytes, MIB};
+
+/// Tuning of the circuit breaker. Defaults are deliberately sluggish:
+/// the breaker must never trip on ordinary misprediction noise (the
+/// guardrail tolerances already absorb that) — only on the sustained,
+/// lopsided harm that fault injection or a pathological workload
+/// produces.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// Accesses per ledger window.
+    pub window: u32,
+    /// Consecutive harmful windows before the breaker trips one rung.
+    pub trip_after: u32,
+    /// Consecutive clean windows (once the backoff hold expires)
+    /// before the breaker steps one rung back up.
+    pub recover_after: u32,
+    /// Hold (in windows) after the first trip before a recovery probe
+    /// is allowed; doubles on every subsequent trip.
+    pub backoff_init: u32,
+    /// Ceiling of the doubling backoff (windows).
+    pub backoff_cap: u32,
+    /// Absolute harm floor: a window whose harm stays under this many
+    /// bytes is never harmful, however small its benefit.
+    pub min_harm_bytes: Bytes,
+    /// Retry attempts per failed prefetch piece before it is abandoned
+    /// to the demand-fault path.
+    pub max_retries: u32,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            window: 4,
+            trip_after: 2,
+            recover_after: 2,
+            backoff_init: 2,
+            backoff_cap: 32,
+            min_harm_bytes: MIB,
+            max_retries: 3,
+        }
+    }
+}
+
+/// Rung of the degradation ladder (ordered: degraded modes compare
+/// greater than [`WatchdogMode::Full`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WatchdogMode {
+    /// Everything armed (the healthy state).
+    #[default]
+    Full,
+    /// Learned predictor benched; heuristic rule drives prediction.
+    Heuristic,
+    /// No new auto advises (and prediction stays heuristic).
+    NoAdvise,
+    /// No actuation at all — the engine only observes.
+    Inert,
+}
+
+impl WatchdogMode {
+    fn down(self) -> WatchdogMode {
+        match self {
+            WatchdogMode::Full => WatchdogMode::Heuristic,
+            WatchdogMode::Heuristic => WatchdogMode::NoAdvise,
+            _ => WatchdogMode::Inert,
+        }
+    }
+
+    fn up(self) -> WatchdogMode {
+        match self {
+            WatchdogMode::Inert => WatchdogMode::NoAdvise,
+            WatchdogMode::NoAdvise => WatchdogMode::Heuristic,
+            _ => WatchdogMode::Full,
+        }
+    }
+}
+
+/// A failed predictive prefetch awaiting its retry epoch.
+#[derive(Clone, Copy, Debug)]
+struct Retry {
+    id: AllocId,
+    piece: PageRange,
+    /// First access epoch at which the retry may be issued.
+    due: u64,
+}
+
+/// The breaker itself: ledger accumulators, ladder state, counters and
+/// the bounded retry queue. One per [`super::AutoEngine`]; reset with
+/// it each repetition.
+#[derive(Clone, Debug, Default)]
+pub struct Watchdog {
+    /// The breaker's tuning (fixed for its lifetime).
+    pub cfg: WatchdogConfig,
+    mode: WatchdogMode,
+    /// Accesses accumulated into the open window.
+    accesses: u32,
+    benefit: Bytes,
+    harm: Bytes,
+    harmful_streak: u32,
+    clean_streak: u32,
+    /// Hold length the *next* trip will impose (doubles per trip).
+    backoff: u32,
+    /// Windows left before a recovery probe is allowed.
+    hold: u32,
+    /// Access epochs elapsed (retry scheduling clock).
+    epoch: u64,
+    /// Cumulative failed-prefetch bytes already folded into the ledger.
+    seen_failed: Bytes,
+    /// Failed pieces awaiting retry, due-epoch order.
+    queue: VecDeque<Retry>,
+    /// Attempts so far per failed piece (keyed by start page).
+    attempts: FxHashMap<(AllocId, u32), u32>,
+    /// Rungs descended (the `wd_trips` metric).
+    pub trips: u64,
+    /// Rungs re-ascended (the `wd_recoveries` metric).
+    pub recoveries: u64,
+    /// Failed prefetch pieces re-issued (the `wd_retries` metric).
+    pub retries: u64,
+    /// Windows closed while below [`WatchdogMode::Full`] (the
+    /// `wd_degraded_windows` metric — degraded dwell time).
+    pub degraded_windows: u64,
+}
+
+impl Watchdog {
+    /// A breaker with the given tuning, healthy and empty.
+    pub fn new(cfg: WatchdogConfig) -> Watchdog {
+        Watchdog { cfg, ..Watchdog::default() }
+    }
+
+    /// The current rung.
+    pub fn mode(&self) -> WatchdogMode {
+        self.mode
+    }
+
+    /// Predictions must use the heuristic rule (learned tables benched).
+    pub fn force_heuristic(&self) -> bool {
+        self.mode >= WatchdogMode::Heuristic
+    }
+
+    /// New auto advises are suppressed (protective unsets still fire).
+    pub fn block_advise(&self) -> bool {
+        self.mode >= WatchdogMode::NoAdvise
+    }
+
+    /// The engine must not actuate at all.
+    pub fn inert(&self) -> bool {
+        self.mode == WatchdogMode::Inert
+    }
+
+    /// Fold the runtime's cumulative failed-prefetch byte counter into
+    /// the ledger, returning this access's delta (the counter only ever
+    /// grows within a run).
+    pub fn failed_delta(&mut self, total: Bytes) -> Bytes {
+        let d = total.saturating_sub(self.seen_failed);
+        self.seen_failed = total;
+        d
+    }
+
+    /// Absorb freshly failed prefetch pieces from the runtime's intake
+    /// queue into the retry schedule. Each piece gets
+    /// [`WatchdogConfig::max_retries`] attempts, exponentially backed
+    /// off in access epochs (1, 2, 4, ... after the failure); beyond
+    /// that it is abandoned to the demand-fault path.
+    pub fn absorb_failures(&mut self, raw: &mut VecDeque<(AllocId, PageRange)>) {
+        while let Some((id, piece)) = raw.pop_front() {
+            let n = self.attempts.entry((id, piece.start)).or_insert(0);
+            *n += 1;
+            if *n > self.cfg.max_retries {
+                continue;
+            }
+            let delay = 1u64 << (u64::from(*n) - 1).min(16);
+            self.queue.push_back(Retry { id, piece, due: self.epoch + delay });
+        }
+    }
+
+    /// Pop every retry whose epoch has come (issue order = failure
+    /// order). Call sites count each issued piece into `retries`.
+    pub fn due_retries(&mut self) -> Vec<(AllocId, PageRange)> {
+        let mut due = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.queue.len());
+        while let Some(r) = self.queue.pop_front() {
+            if r.due <= self.epoch {
+                due.push((r.id, r.piece));
+            } else {
+                keep.push_back(r);
+            }
+        }
+        self.queue = keep;
+        due
+    }
+
+    /// Record one re-issued piece.
+    pub fn note_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// Feed one access's ledger entries and advance the epoch clock;
+    /// closes (and evaluates) the window every
+    /// [`WatchdogConfig::window`] accesses.
+    pub fn note_access(&mut self, benefit: Bytes, harm: Bytes) {
+        self.epoch += 1;
+        self.benefit += benefit;
+        self.harm += harm;
+        self.accesses += 1;
+        if self.accesses >= self.cfg.window {
+            self.close_window();
+        }
+    }
+
+    fn close_window(&mut self) {
+        let harmful = self.harm > self.benefit && self.harm >= self.cfg.min_harm_bytes;
+        if self.mode != WatchdogMode::Full {
+            self.degraded_windows += 1;
+        }
+        if self.hold > 0 {
+            self.hold -= 1;
+        }
+        if harmful {
+            self.harmful_streak += 1;
+            self.clean_streak = 0;
+            if self.harmful_streak >= self.cfg.trip_after {
+                self.trip();
+            }
+        } else {
+            self.clean_streak += 1;
+            self.harmful_streak = 0;
+            if self.mode != WatchdogMode::Full
+                && self.hold == 0
+                && self.clean_streak >= self.cfg.recover_after
+            {
+                self.step_up();
+            }
+        }
+        self.benefit = 0;
+        self.harm = 0;
+        self.accesses = 0;
+    }
+
+    fn trip(&mut self) {
+        self.harmful_streak = 0;
+        self.clean_streak = 0;
+        if self.mode == WatchdogMode::Inert {
+            // Already at the bottom: nothing left to shed. Re-arm the
+            // hold so recovery probes stay backed off.
+            self.hold = self.backoff.max(self.cfg.backoff_init);
+            return;
+        }
+        self.mode = self.mode.down();
+        self.trips += 1;
+        let b = if self.backoff == 0 { self.cfg.backoff_init } else { self.backoff };
+        self.hold = b;
+        self.backoff = (b * 2).min(self.cfg.backoff_cap);
+    }
+
+    fn step_up(&mut self) {
+        self.mode = self.mode.up();
+        self.recoveries += 1;
+        self.clean_streak = 0;
+        if self.mode == WatchdogMode::Full {
+            // Fully healthy again: the next incident starts the backoff
+            // schedule from scratch.
+            self.backoff = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> WatchdogConfig {
+        WatchdogConfig::default()
+    }
+
+    /// Close one window with the given per-access ledger entries.
+    fn window(wd: &mut Watchdog, benefit: Bytes, harm: Bytes) {
+        for _ in 0..wd.cfg.window {
+            wd.note_access(benefit / u64::from(wd.cfg.window), harm / u64::from(wd.cfg.window));
+        }
+    }
+
+    #[test]
+    fn trips_only_after_sustained_harm() {
+        let mut wd = Watchdog::new(cfg());
+        // One harmful window is not enough (trip_after = 2) …
+        window(&mut wd, 0, 4 * MIB);
+        assert_eq!(wd.mode(), WatchdogMode::Full);
+        assert_eq!(wd.trips, 0);
+        // … a second consecutive one trips the first rung.
+        window(&mut wd, 0, 4 * MIB);
+        assert_eq!(wd.mode(), WatchdogMode::Heuristic);
+        assert_eq!(wd.trips, 1);
+        assert!(wd.force_heuristic() && !wd.block_advise() && !wd.inert());
+        // Harm below the absolute floor never counts, whatever the
+        // benefit ratio; a benefit-dominated window never counts either.
+        let mut calm = Watchdog::new(cfg());
+        for _ in 0..8 {
+            window(&mut calm, 0, MIB / 2); // under min_harm_bytes
+            window(&mut calm, 8 * MIB, 4 * MIB); // benefit outweighs
+        }
+        assert_eq!(calm.mode(), WatchdogMode::Full);
+        assert_eq!(calm.trips, 0);
+    }
+
+    #[test]
+    fn hysteresis_never_flaps_on_alternating_windows() {
+        // harmful/clean/harmful/clean … — the streak resets every other
+        // window, so a flapping fault source never reaches trip_after.
+        let mut wd = Watchdog::new(cfg());
+        for _ in 0..16 {
+            window(&mut wd, 0, 4 * MIB);
+            window(&mut wd, 4 * MIB, 0);
+        }
+        assert_eq!(wd.mode(), WatchdogMode::Full, "no trip from alternation");
+        assert_eq!(wd.trips, 0);
+        assert_eq!(wd.degraded_windows, 0);
+    }
+
+    #[test]
+    fn backoff_doubles_per_trip_and_resets_on_full_recovery() {
+        let mut wd = Watchdog::new(cfg());
+        let trip = |wd: &mut Watchdog| {
+            for _ in 0..wd.cfg.trip_after {
+                window(wd, 0, 4 * MIB);
+            }
+        };
+        trip(&mut wd); // Full -> Heuristic, hold = 2
+        assert_eq!(wd.mode(), WatchdogMode::Heuristic);
+        // One clean window: hold 2 -> 1, no probe yet.
+        window(&mut wd, 0, 0);
+        assert_eq!(wd.mode(), WatchdogMode::Heuristic, "held back by backoff");
+        trip(&mut wd); // Heuristic -> NoAdvise, hold = 4 (doubled)
+        assert_eq!(wd.mode(), WatchdogMode::NoAdvise);
+        assert_eq!(wd.trips, 2);
+        // Three clean windows burn hold 4 -> 1; still no probe even
+        // though the clean streak cleared recover_after long ago.
+        for _ in 0..3 {
+            window(&mut wd, 0, 0);
+        }
+        assert_eq!(wd.mode(), WatchdogMode::NoAdvise, "doubled hold still in force");
+        // Fourth clean window: hold hits 0 and the probe fires.
+        window(&mut wd, 0, 0);
+        assert_eq!(wd.mode(), WatchdogMode::Heuristic);
+        assert_eq!(wd.recoveries, 1);
+        // Step the rest of the way up; at Full the schedule resets, so
+        // the next trip holds for backoff_init again, not 8.
+        for _ in 0..4 {
+            window(&mut wd, 0, 0);
+        }
+        assert_eq!(wd.mode(), WatchdogMode::Full);
+        trip(&mut wd);
+        assert_eq!(wd.mode(), WatchdogMode::Heuristic);
+        // hold = backoff_init = 2: two clean windows recover (streak
+        // already satisfies recover_after by then).
+        window(&mut wd, 0, 0);
+        window(&mut wd, 0, 0);
+        assert_eq!(wd.mode(), WatchdogMode::Full, "schedule restarted after full recovery");
+    }
+
+    #[test]
+    fn full_recovery_path_climbs_every_rung() {
+        let mut wd = Watchdog::new(cfg());
+        // Relentless harm rides the ladder all the way down.
+        for _ in 0..16 {
+            window(&mut wd, 0, 8 * MIB);
+        }
+        assert_eq!(wd.mode(), WatchdogMode::Inert);
+        assert!(wd.inert() && wd.block_advise() && wd.force_heuristic());
+        assert_eq!(wd.trips, 3, "one trip per rung");
+        assert!(wd.degraded_windows > 0, "dwell time recorded");
+        // Calm conditions: the breaker climbs back one rung at a time,
+        // each step gated by recover_after clean windows.
+        let mut modes = Vec::new();
+        for _ in 0..64 {
+            window(&mut wd, 0, 0);
+            modes.push(wd.mode());
+            if wd.mode() == WatchdogMode::Full {
+                break;
+            }
+        }
+        assert_eq!(wd.mode(), WatchdogMode::Full, "fully recovered: {modes:?}");
+        assert_eq!(wd.recoveries, 3, "one recovery per rung");
+        assert!(
+            modes.contains(&WatchdogMode::NoAdvise) && modes.contains(&WatchdogMode::Heuristic),
+            "no rung skipped on the way up: {modes:?}"
+        );
+    }
+
+    #[test]
+    fn retry_schedule_backs_off_and_abandons() {
+        let mut wd = Watchdog::new(cfg());
+        let id = AllocId(0);
+        let piece = PageRange::new(0, 64);
+        let mut raw: VecDeque<(AllocId, PageRange)> = VecDeque::new();
+        let mut issue_epochs = Vec::new();
+        raw.push_back((id, piece));
+        // Simulate: every issued retry fails again and re-enters the
+        // intake queue. Attempts 1, 2, 3 are scheduled +1, +2, +4
+        // epochs after their failure; the 4th failure is abandoned.
+        for _ in 0..32 {
+            wd.absorb_failures(&mut raw);
+            let due = wd.due_retries();
+            for (i, p) in due {
+                wd.note_retry();
+                issue_epochs.push(wd.epoch);
+                raw.push_back((i, p));
+            }
+            wd.note_access(0, 0);
+        }
+        assert_eq!(wd.retries, 3, "max_retries bounds the re-issues");
+        assert!(raw.is_empty() || wd.due_retries().is_empty(), "abandoned, not queued");
+        assert_eq!(issue_epochs.len(), 3);
+        let gap1 = issue_epochs[1] - issue_epochs[0];
+        let gap2 = issue_epochs[2] - issue_epochs[1];
+        assert!(gap2 > gap1, "retry gaps grow: {issue_epochs:?}");
+    }
+}

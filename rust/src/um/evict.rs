@@ -346,7 +346,7 @@ impl UmRuntime {
 
         if wb_pages > 0 {
             let bytes = wb_pages * PAGE_SIZE;
-            let occ = self.dma_d2h.transfer(now, bytes, self.eff(TransferMode::Eviction));
+            let occ = self.dma_d2h.transfer(now, bytes, self.eff_at(TransferMode::Eviction, now));
             self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, bytes, Some(id), "eviction");
             self.metrics.writeback_bytes += bytes;
             self.metrics.d2h_bytes += bytes;

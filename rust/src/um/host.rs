@@ -156,13 +156,15 @@ impl UmRuntime {
                     // chunk (fig. 1 of the paper). Per-piece constants
                     // hoisted out of the loop.
                     let fault_cost = self.policy.cpu_fault_cost;
-                    let eff = self.eff(TransferMode::Faulted);
                     let mut t = now;
                     let mut page = run.start;
                     while page < run.end {
                         let piece_end = ((page / PAGES_PER_CHUNK + 1) * PAGES_PER_CHUNK).min(run.end);
                         let piece = PageRange::new(page, piece_end);
                         let fault = fault_cost * piece.len() as u64;
+                        // Per-piece efficiency: chaos link episodes
+                        // (`eff_at`) can start or end mid-run.
+                        let eff = self.eff_at(TransferMode::Faulted, t + fault);
                         let occ = self.dma_d2h.transfer(t + fault, piece.bytes(), eff);
                         self.trace.record(TraceKind::CpuFault, t, t + fault, piece.bytes(), Some(id), "cpu-fault");
                         self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, piece.bytes(), Some(id), "cpu-fault-migrate");

@@ -146,6 +146,26 @@ pub struct UmMetrics {
     /// audit by `UmRuntime::finish_eviction_audit` (called once per
     /// run).
     pub evict_dead_hit_bytes: Bytes,
+    /// Bytes of bulk-prefetch pieces that failed transiently under
+    /// fault injection (the flaky-prefetch scenario, `sim/inject.rs`).
+    /// Always zero with injection off. Counted at failure time — a
+    /// piece the watchdog later retries successfully still counts (it
+    /// *did* fail once).
+    pub chaos_failed_prefetch_bytes: Bytes,
+
+    // --- um::auto watchdog counters (docs/ROBUSTNESS.md) ---
+    /// Watchdog trips: degradation-ladder steps taken down
+    /// (Full → Heuristic → NoAdvise → Inert).
+    pub wd_trips: u64,
+    /// Watchdog recoveries: ladder steps climbed back up after clean
+    /// re-arm probes.
+    pub wd_recoveries: u64,
+    /// Failed-prefetch pieces re-issued by the watchdog's bounded
+    /// retry.
+    pub wd_retries: u64,
+    /// Observation windows spent in any degraded mode (dwell time,
+    /// measured in windows).
+    pub wd_degraded_windows: u64,
     /// Per-stream counter slices (slot = stream index, clamped to
     /// [`MAX_STREAM_METRICS`]); all-zero except for streams that
     /// actually drove accesses.
@@ -228,7 +248,7 @@ impl UmMetrics {
     /// so the bench trajectory tracks decision quality across PRs).
     /// (`'static` is required here: associated constants may not elide
     /// lifetimes — rustc's `elided_lifetimes_in_associated_constant`.)
-    pub const AUTO_CSV_HEADER: [&'static str; 13] = [
+    pub const AUTO_CSV_HEADER: [&'static str; 17] = [
         "auto_decisions",
         "auto_pattern_flips",
         "auto_prefetched_bytes",
@@ -242,6 +262,10 @@ impl UmMetrics {
         "auto_fallback_predictions",
         "evict_live_evicted_bytes",
         "evict_dead_hit_bytes",
+        "wd_trips",
+        "wd_recoveries",
+        "wd_retries",
+        "wd_degraded_windows",
     ];
 
     /// The auto-policy counters as CSV fields (order matches
@@ -261,6 +285,10 @@ impl UmMetrics {
             self.auto_fallback_predictions.to_string(),
             self.evict_live_evicted_bytes.to_string(),
             self.evict_dead_hit_bytes.to_string(),
+            self.wd_trips.to_string(),
+            self.wd_recoveries.to_string(),
+            self.wd_retries.to_string(),
+            self.wd_degraded_windows.to_string(),
         ]
     }
 
@@ -332,6 +360,28 @@ mod tests {
     }
 
     #[test]
+    fn watchdog_counters_ride_in_the_csv() {
+        let m = UmMetrics {
+            wd_trips: 2,
+            wd_recoveries: 1,
+            wd_retries: 5,
+            wd_degraded_windows: 9,
+            ..Default::default()
+        };
+        let row = m.auto_csv_row();
+        let idx = |name: &str| {
+            UmMetrics::AUTO_CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap_or_else(|| panic!("{name} missing from AUTO_CSV_HEADER"))
+        };
+        assert_eq!(row[idx("wd_trips")], "2");
+        assert_eq!(row[idx("wd_recoveries")], "1");
+        assert_eq!(row[idx("wd_retries")], "5");
+        assert_eq!(row[idx("wd_degraded_windows")], "9");
+    }
+
+    #[test]
     fn per_stream_slots_clamp_and_filter() {
         let mut m = UmMetrics::default();
         m.stream_mut(StreamId(0)).gpu_accesses += 1;
@@ -357,8 +407,11 @@ mod tests {
         };
         assert!((m.eviction_dead_ratio() - 0.75).abs() < 1e-12);
         let row = m.auto_csv_row();
-        assert_eq!(row[row.len() - 2], "100", "live-evicted rides in the CSV");
-        assert_eq!(row[row.len() - 1], "300");
+        let idx = |name: &str| {
+            UmMetrics::AUTO_CSV_HEADER.iter().position(|h| *h == name).unwrap()
+        };
+        assert_eq!(row[idx("evict_live_evicted_bytes")], "100", "live-evicted rides in the CSV");
+        assert_eq!(row[idx("evict_dead_hit_bytes")], "300");
     }
 
     #[test]

@@ -79,7 +79,6 @@ impl UmRuntime {
         let base_group = self.policy.group_pages(placed);
         let cap_group = self.policy.advised_group_pages.max(base_group);
         let duplicate = class.read_mostly && !write;
-        let eff_faulted = self.eff(TransferMode::Faulted);
         let mut ready = now;
         let mut done = now;
         let mut stall_total = Ns::ZERO;
@@ -117,6 +116,9 @@ impl UmRuntime {
                 "migrate",
             );
             stall_total += service;
+            // Per-group efficiency: the chaos layer's link episodes
+            // (`eff_at`) can degrade mid-run.
+            let eff_faulted = self.eff_at(TransferMode::Faulted, focc.end);
             let docc = self.dma_h2d.transfer(focc.end, bytes, eff_faulted);
             self.trace.record(TraceKind::UmMemcpyHtoD, docc.start, docc.end, bytes, Some(id), "migrate");
             self.metrics.h2d_time += docc.duration();

@@ -37,7 +37,7 @@ pub mod auto;
 
 pub use auto::{
     AutoConfig, AutoEngine, DeadRange, EvictionForecast, LearnedPredictor, Prediction,
-    PredictorKind,
+    PredictorKind, Watchdog, WatchdogConfig, WatchdogMode,
 };
 pub use metrics::{StreamMetrics, UmMetrics};
 pub use policy::{Advise, EvictorKind, Loc, UmPolicy};

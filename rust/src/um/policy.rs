@@ -5,6 +5,7 @@
 //! paper's §II. Per-platform overrides (fault latencies) live in
 //! `platform::calibration`.
 
+use crate::sim::inject::InjectConfig;
 use crate::util::units::{Bytes, Ns, KIB, MIB};
 
 use super::auto::PredictorKind;
@@ -134,6 +135,11 @@ pub struct UmPolicy {
     /// only changes behaviour when the engine supplies hints (the
     /// `UM Auto` variant); see `docs/EVICTION.md`.
     pub evictor: EvictorKind,
+    /// Fault-injection scenario (the chaos layer; `docs/ROBUSTNESS.md`).
+    /// Default `Off`: no hook fires and the runtime is byte-identical
+    /// to the un-instrumented behaviour (pinned by
+    /// `rust/tests/chaos_determinism.rs`).
+    pub inject: InjectConfig,
 }
 
 impl Default for UmPolicy {
@@ -156,6 +162,7 @@ impl Default for UmPolicy {
             etc_threshold: 512 * MIB,
             auto_predictor: PredictorKind::Learned,
             evictor: EvictorKind::Lru,
+            inject: InjectConfig::default(),
         }
     }
 }

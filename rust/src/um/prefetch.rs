@@ -98,8 +98,21 @@ impl UmRuntime {
                 let mut page = run.start;
                 while page < run.end {
                     let piece = PageRange::new(page, (page + chunk_pages).min(run.end));
+                    // Chaos layer: a transiently failed piece moves
+                    // nothing — its pages stay host-resident and are
+                    // recorded for the watchdog's bounded retry (or a
+                    // later demand fault). See docs/ROBUSTNESS.md.
+                    let failed = match &mut self.inject {
+                        Some(inj) => inj.prefetch_piece_fails(),
+                        None => false,
+                    };
+                    if failed {
+                        self.note_failed_prefetch(id, piece);
+                        page = piece.end;
+                        continue;
+                    }
                     let t_space = self.ensure_device_space(piece.bytes(), t);
-                    let occ = self.dma_h2d.transfer(t_space, piece.bytes(), self.eff(TransferMode::Bulk));
+                    let occ = self.dma_h2d.transfer(t_space, piece.bytes(), self.eff_at(TransferMode::Bulk, t_space));
                     self.trace.record(TraceKind::UmMemcpyHtoD, occ.start, occ.end, piece.bytes(), Some(id), "prefetch");
                     self.metrics.h2d_bytes += piece.bytes();
                     self.metrics.h2d_time += occ.duration();
@@ -218,7 +231,7 @@ impl UmRuntime {
                 now
             }
             Residency::Device => {
-                let occ = self.dma_d2h.transfer(now, run.bytes(), self.eff(TransferMode::Bulk));
+                let occ = self.dma_d2h.transfer(now, run.bytes(), self.eff_at(TransferMode::Bulk, now));
                 self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, run.bytes(), Some(id), "prefetch");
                 self.metrics.d2h_bytes += run.bytes();
                 self.metrics.d2h_time += occ.duration();

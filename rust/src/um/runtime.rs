@@ -10,7 +10,7 @@ use crate::mem::{
 };
 use crate::mem::page::{AdviseFlags, PageFlags};
 use crate::platform::PlatformSpec;
-use crate::sim::{BandwidthResource, SerialResource};
+use crate::sim::{BandwidthResource, Injector, SerialResource};
 use crate::trace::{Trace, TraceKind};
 use crate::util::units::{transfer_ns, Bytes, Ns};
 
@@ -124,6 +124,19 @@ pub struct UmRuntime {
     /// flushed back into the LRU when hints refresh. Always empty
     /// under the LRU evictor.
     pub(super) evict_deferred: std::collections::VecDeque<ChunkRef>,
+    /// Fault-injection state (`sim/inject.rs`); `None` when the
+    /// policy's chaos scenario is `Off` — every hook then reduces to a
+    /// tag check and the runtime is byte-identical to the
+    /// un-instrumented behaviour (pinned by
+    /// `rust/tests/chaos_determinism.rs`). Rebuilt by
+    /// [`UmRuntime::reset_run_state`] so every repetition replays the
+    /// same perturbation schedule.
+    pub(super) inject: Option<Injector>,
+    /// Bulk-prefetch pieces that failed transiently under injection
+    /// (the flaky-prefetch scenario), awaiting the `um::auto`
+    /// watchdog's bounded retry — or a plain demand fault, whichever
+    /// touches them first.
+    pub(super) failed_prefetches: std::collections::VecDeque<(AllocId, PageRange)>,
 }
 
 impl UmRuntime {
@@ -152,6 +165,8 @@ impl UmRuntime {
             evict_hints: super::evict::AutoEvictHints::default(),
             evict_audit: crate::util::fxhash::FxHashMap::default(),
             evict_deferred: std::collections::VecDeque::new(),
+            inject: Injector::new(policy.inject),
+            failed_prefetches: std::collections::VecDeque::new(),
         }
     }
 
@@ -217,7 +232,7 @@ impl UmRuntime {
     /// figure of merit), but traced.
     pub fn memcpy_h2d(&mut self, dst: AllocId, bytes: Bytes, now: Ns) -> Ns {
         debug_assert_eq!(self.space.get(dst).kind, AllocKind::Device);
-        let occ = self.dma_h2d.transfer(now, bytes, self.plat.link.eff_bulk);
+        let occ = self.dma_h2d.transfer(now, bytes, self.eff_at(TransferMode::Bulk, now));
         self.metrics.h2d_bytes += bytes;
         self.metrics.h2d_time += occ.duration();
         self.trace.record(TraceKind::MemcpyHtoD, occ.start, occ.end, bytes, Some(dst), "cudaMemcpy");
@@ -227,7 +242,7 @@ impl UmRuntime {
     /// `cudaMemcpy(dst_host, src_device)`.
     pub fn memcpy_d2h(&mut self, src: AllocId, bytes: Bytes, now: Ns) -> Ns {
         debug_assert_eq!(self.space.get(src).kind, AllocKind::Device);
-        let occ = self.dma_d2h.transfer(now, bytes, self.plat.link.eff_bulk);
+        let occ = self.dma_d2h.transfer(now, bytes, self.eff_at(TransferMode::Bulk, now));
         self.metrics.d2h_bytes += bytes;
         self.metrics.d2h_time += occ.duration();
         self.trace.record(TraceKind::MemcpyDtoH, occ.start, occ.end, bytes, Some(src), "cudaMemcpy");
@@ -274,6 +289,13 @@ impl UmRuntime {
         if let Some(eng) = &mut self.auto {
             eng.note_stream(stream);
         }
+
+        // Chaos layer (`sim/inject.rs`): ECC-style chunk retirement and
+        // spurious fault noise fire at access entry — ahead of the
+        // prefetch gate and the engine's observer tap, so every variant
+        // sees the same perturbation stream and guardrail comparisons
+        // under injection stay like-for-like.
+        let now = if self.inject.is_some() { self.chaos_on_access(id, now) } else { now };
 
         // An in-flight auto-prefetch covering this range gates the
         // access (§III-A3: the wait for predicted-ahead data lands in
@@ -435,6 +457,67 @@ impl UmRuntime {
         self.plat.link.efficiency(mode)
     }
 
+    /// Like [`UmRuntime::eff`], but degraded by the chaos layer's
+    /// link-episode schedule at simulated time `now` (the link-degrade
+    /// and storm scenarios, `sim/inject.rs`). The `None` arm skips
+    /// even the `* 1.0` multiply, so runs with injection disabled are
+    /// byte-identical to the un-instrumented runtime by construction.
+    pub(super) fn eff_at(&self, mode: TransferMode, now: Ns) -> f64 {
+        let base = self.plat.link.efficiency(mode);
+        match &self.inject {
+            Some(inj) => base * inj.link_factor(now),
+            None => base,
+        }
+    }
+
+    /// Per-access chaos perturbations (ECC retirement, spurious fault
+    /// noise). Returns the access's possibly delayed start time.
+    fn chaos_on_access(&mut self, id: AllocId, now: Ns) -> Ns {
+        let Some(inj) = &mut self.inject else { return now };
+        let retire = inj.should_retire_chunk();
+        let noise = inj.fault_noise();
+        if retire {
+            self.chaos_retire_chunk(now);
+        }
+        match noise {
+            Some(pages) => {
+                self.service_faults(id, pages, false, false, 1.0, now, "chaos-noise").0
+            }
+            None => now,
+        }
+    }
+
+    /// ECC-style quarantine of one 2 MiB chunk (the ecc-retire and
+    /// storm scenarios): evict to free a chunk's worth of space if
+    /// necessary, then shrink usable capacity. Never panics a run —
+    /// retirement is skipped once capacity would drop below half the
+    /// device (the injector models isolated page retirements, not a
+    /// dying board) and when nothing is evictable (everything
+    /// `cudaMalloc`-locked). Undone by [`UmRuntime::reset_run_state`].
+    fn chaos_retire_chunk(&mut self, now: Ns) {
+        const CHUNK_BYTES: Bytes = PAGES_PER_CHUNK as Bytes * PAGE_SIZE;
+        if self.dev.capacity() < self.plat.gpu.usable() / 2 + CHUNK_BYTES {
+            return;
+        }
+        if self.dev.free() < CHUNK_BYTES && !self.dev.any_evictable() {
+            return;
+        }
+        self.ensure_device_space(CHUNK_BYTES, now);
+        self.dev.retire(CHUNK_BYTES);
+    }
+
+    /// Record a transiently failed bulk-prefetch piece (the
+    /// flaky-prefetch scenario) for the watchdog's bounded retry. The
+    /// queue is a capped retry work-list, not a log: beyond the cap
+    /// the pages simply wait for a demand fault.
+    pub(super) fn note_failed_prefetch(&mut self, id: AllocId, piece: PageRange) {
+        const CAP: usize = 64;
+        if self.failed_prefetches.len() < CAP {
+            self.failed_prefetches.push_back((id, piece));
+        }
+        self.metrics.chaos_failed_prefetch_bytes += piece.bytes();
+    }
+
     /// Reset all run state (new repetition) keeping allocations' *sizes*
     /// but clearing page state, residency, clocks, metrics, trace.
     pub fn reset_run_state(&mut self) {
@@ -468,6 +551,10 @@ impl UmRuntime {
         self.evict_hints.clear();
         self.evict_audit.clear();
         self.evict_deferred.clear();
+        // Fresh injector: every repetition replays the same schedule
+        // (the zero-variance invariant in `driver.rs` depends on it).
+        self.inject = Injector::new(self.policy.inject);
+        self.failed_prefetches.clear();
         self.dev.reset();
         self.dma_h2d.reset();
         self.dma_d2h.reset();

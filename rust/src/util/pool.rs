@@ -2,6 +2,7 @@
 //! in the offline crate set). The coordinator uses it to run independent
 //! (app × variant × platform) benchmark cells in parallel.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -51,7 +52,27 @@ impl Pool {
     }
 
     /// Run one closure per input, preserving input order in the output.
+    ///
+    /// Panics if any job panics; use [`Pool::try_map`] when jobs may
+    /// fail and the rest of the batch should still complete.
     pub fn map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        self.try_map(inputs, f)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|msg| panic!("pool job panicked: {msg}")))
+            .collect()
+    }
+
+    /// Like [`Pool::map`], but a panicking job yields `Err(message)` for
+    /// its slot instead of poisoning the whole batch: every other job
+    /// still runs to completion and returns `Ok`. The worker thread
+    /// survives the panic (the unwind is caught inside the job), so the
+    /// pool stays usable afterwards.
+    pub fn try_map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<Result<R, String>>
     where
         T: Send + 'static,
         R: Send + 'static,
@@ -59,18 +80,26 @@ impl Pool {
     {
         let n = inputs.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, Result<R, String>)>();
         for (i, input) in inputs.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.submit(move || {
-                let r = f(input);
+                let r = catch_unwind(AssertUnwindSafe(|| f(input))).map_err(|payload| {
+                    if let Some(s) = payload.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = payload.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "panic (non-string payload)".to_string()
+                    }
+                });
                 // Receiver may be gone if the caller panicked; ignore.
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (i, r) = rrx.recv().expect("worker result");
             slots[i] = Some(r);
@@ -130,5 +159,42 @@ mod tests {
         let pool = Pool::with_default_size(2);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn try_map_isolates_panicking_jobs() {
+        let pool = Pool::new(3);
+        let out = pool.try_map((0..16i32).collect(), |x| {
+            if x % 5 == 3 {
+                panic!("job {x} exploded");
+            }
+            x * 2
+        });
+        assert_eq!(out.len(), 16);
+        for (i, r) in out.iter().enumerate() {
+            if i % 5 == 3 {
+                let msg = r.as_ref().unwrap_err();
+                assert!(msg.contains("exploded"), "panic message preserved: {msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), (i as i32) * 2);
+            }
+        }
+        // Workers caught the unwind, so the pool is still serviceable.
+        let again = pool.try_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(again, vec![Ok(2), Ok(3), Ok(4)]);
+    }
+
+    #[test]
+    fn map_propagates_job_panics() {
+        let pool = Pool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0u8, 1], |x| {
+                if x == 1 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(res.is_err(), "map still surfaces job panics to the caller");
     }
 }

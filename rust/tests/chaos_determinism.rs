@@ -1,0 +1,184 @@
+//! Contracts of the chaos layer (`sim::inject`) and the `um::auto`
+//! watchdog (docs/ROBUSTNESS.md):
+//!
+//! * **Determinism under injection** — the same `(scenario, seed)`
+//!   produces byte-identical runs (every `Ns` output and the full
+//!   `UmMetrics`) for all six variants on both headline platforms.
+//! * **Disabled oracle** — with `ChaosScenario::Off` the injection seed
+//!   is inert: runs are byte-identical across seeds, consume no chaos
+//!   budget, and a healthy run never trips the watchdog.
+//! * **Graceful degradation** — under every active scenario `UM Auto`
+//!   completes and stays within the auto-guardrail tolerance of plain
+//!   UM *under the same injection*.
+//! * **Trip and recover** — a flaky-prefetch episode trips the watchdog
+//!   (rung-down, bounded retries) and, once the fault clears, the
+//!   backed-off re-arm probes climb the ladder back to `Full`.
+
+use umbra::apps::{AppId, Variant};
+use umbra::mem::PageRange;
+use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::sim::{ChaosScenario, InjectConfig};
+use umbra::um::{UmRuntime, WatchdogMode};
+use umbra::util::units::{Ns, MIB};
+
+/// Platform spec with `scenario` armed (default chaos seed).
+fn chaotic(plat_id: PlatformId, scenario: ChaosScenario) -> PlatformSpec {
+    let mut plat = plat_id.spec();
+    plat.um.inject = InjectConfig { scenario, ..InjectConfig::default() };
+    plat
+}
+
+const ALL_SCENARIOS: [ChaosScenario; 6] = [
+    ChaosScenario::Off,
+    ChaosScenario::LinkDegrade,
+    ChaosScenario::FlakyPrefetch,
+    ChaosScenario::EccRetire,
+    ChaosScenario::FaultNoise,
+    ChaosScenario::Storm,
+];
+
+#[test]
+fn same_seed_same_run_all_variants_both_platforms() {
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for scenario in ALL_SCENARIOS {
+            let plat = chaotic(plat_id, scenario);
+            for variant in Variant::ALL_WITH_AUTO {
+                let a = AppId::Bs.build(32 * MIB).run(&plat, variant, false);
+                let b = AppId::Bs.build(32 * MIB).run(&plat, variant, false);
+                let label =
+                    format!("{}/{}/{}", plat_id.name(), variant.name(), scenario.name());
+                assert_eq!(a.kernel_time, b.kernel_time, "{label}: kernel time");
+                assert_eq!(a.kernel_times, b.kernel_times, "{label}: launches");
+                assert_eq!(a.wall_time, b.wall_time, "{label}: wall time");
+                assert_eq!(a.metrics, b.metrics, "{label}: UmMetrics");
+            }
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_run_oversubscribed_under_storm() {
+    // The eviction paths (including ECC retirement pressure) replay
+    // identically too.
+    let mut plat = chaotic(PlatformId::IntelPascal, ChaosScenario::Storm);
+    plat.gpu.mem_capacity = 128 * MIB;
+    plat.gpu.reserved = 0;
+    let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+    for variant in [Variant::Um, Variant::UmAuto] {
+        let a = AppId::Bs.build(footprint).run(&plat, variant, false);
+        let b = AppId::Bs.build(footprint).run(&plat, variant, false);
+        assert_eq!(a.kernel_time, b.kernel_time, "{}: kernel time", variant.name());
+        assert_eq!(a.metrics, b.metrics, "{}: UmMetrics", variant.name());
+    }
+}
+
+#[test]
+fn scenario_off_ignores_the_seed_and_spends_no_budget() {
+    // The differential oracle for "injection disabled = byte-identical":
+    // with `Off`, the seed must be completely inert (no RNG consumed,
+    // no hook fired), so two runs with *different* seeds are identical.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for variant in [Variant::Um, Variant::UmAuto] {
+            let plat_a = plat_id.spec(); // default seed, scenario Off
+            let mut plat_b = plat_id.spec();
+            plat_b.um.inject =
+                InjectConfig { scenario: ChaosScenario::Off, seed: 0xDEAD_BEEF };
+            let a = AppId::Bs.build(32 * MIB).run(&plat_a, variant, false);
+            let b = AppId::Bs.build(32 * MIB).run(&plat_b, variant, false);
+            let label = format!("{}/{}", plat_id.name(), variant.name());
+            assert_eq!(a.kernel_time, b.kernel_time, "{label}: kernel time");
+            assert_eq!(a.metrics, b.metrics, "{label}: UmMetrics");
+            assert_eq!(a.metrics.chaos_failed_prefetch_bytes, 0, "{label}: no chaos");
+        }
+    }
+}
+
+#[test]
+fn watchdog_never_trips_on_a_healthy_run() {
+    // Sequential streaming apps with injection off: the ledger is all
+    // benefit, so the engine must stay at `Full` the whole run.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let plat = plat_id.spec();
+        for app in [AppId::Bs, AppId::Cg, AppId::Fdtd3d] {
+            let r = app.build(64 * MIB).run(&plat, Variant::UmAuto, false);
+            let label = format!("{}/{}", plat_id.name(), app.name());
+            assert_eq!(r.metrics.wd_trips, 0, "{label}: no trips");
+            assert_eq!(r.metrics.wd_degraded_windows, 0, "{label}: never degraded");
+            assert_eq!(r.metrics.wd_retries, 0, "{label}: nothing to retry");
+        }
+    }
+}
+
+#[test]
+fn auto_stays_within_guardrail_under_every_scenario() {
+    // Graceful degradation, quantified: under the same injection, the
+    // self-defending engine completes and stays within the (chaos)
+    // guardrail of plain UM — the watchdog turns "policy under faults"
+    // into "no worse than no policy".
+    const TOL: f64 = 1.10;
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for scenario in ChaosScenario::ALL_ACTIVE {
+            let plat = chaotic(plat_id, scenario);
+            for app in [AppId::Bs, AppId::Cg, AppId::Fdtd3d] {
+                let um = app.build(64 * MIB).run(&plat, Variant::Um, false);
+                let auto = app.build(64 * MIB).run(&plat, Variant::UmAuto, false);
+                assert!(
+                    (auto.kernel_time.0 as f64) <= (um.kernel_time.0 as f64) * TOL,
+                    "{}/{}/{}: UmAuto {:.3} ms vs Um {:.3} ms exceeds {TOL}",
+                    plat_id.name(),
+                    app.name(),
+                    scenario.name(),
+                    auto.kernel_time.0 as f64 / 1e6,
+                    um.kernel_time.0 as f64 / 1e6,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flaky_prefetch_trips_the_watchdog_and_recovers_after_the_fault_clears() {
+    // Drive the runtime directly with a sequential sweep so the engine
+    // escalates to bulk prefetch while the flaky-prefetch budget makes
+    // those pieces fail: the harm ledger trips the ladder down. The
+    // budget is finite (the fault clears), so a second sweep's clean
+    // windows let the backed-off probes climb back to `Full`.
+    let mut plat = PlatformId::IntelPascal.spec();
+    plat.um.inject = InjectConfig {
+        scenario: ChaosScenario::FlakyPrefetch,
+        ..InjectConfig::default()
+    };
+    let mut r = UmRuntime::new(&plat);
+    r.enable_auto();
+    let id = r.malloc_managed("x", 512 * MIB);
+    let full = r.space.get(id).full();
+    r.host_access(id, full, true, Ns::ZERO);
+    let pages = full.end;
+    let step = 32u32;
+    let mut t = Ns::ZERO;
+    for sweep in 0..2 {
+        let mut pos = 0u32;
+        while pos < pages {
+            let range = PageRange::new(pos, (pos + step).min(pages));
+            t = r.gpu_access(id, range, sweep == 0, t).done;
+            pos += step;
+        }
+    }
+    let m = &r.metrics;
+    assert!(m.chaos_failed_prefetch_bytes > 0, "the scenario actually fired");
+    assert!(m.wd_trips >= 1, "sustained harm tripped the ladder: {m:?}");
+    assert!(m.wd_degraded_windows >= 1, "time was spent degraded");
+    assert!(m.wd_retries >= 1, "failed pieces were retried with backoff");
+    assert!(
+        m.wd_recoveries >= 1,
+        "the watchdog re-armed after the fault cleared: {} trips, {} recoveries",
+        m.wd_trips,
+        m.wd_recoveries
+    );
+    let eng = r.auto_engine().expect("engine");
+    assert_eq!(
+        eng.watchdog.mode(),
+        WatchdogMode::Full,
+        "fully recovered by the end of the clean sweep"
+    );
+}

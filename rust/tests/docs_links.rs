@@ -136,15 +136,18 @@ fn relative_links_and_anchors_resolve() {
 #[test]
 fn required_documents_exist_and_are_linked() {
     let root = repo_root();
-    for doc in ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md", "docs/EVICTION.md"] {
+    for doc in
+        ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md", "docs/EVICTION.md", "docs/ROBUSTNESS.md"]
+    {
         assert!(root.join(doc).exists(), "{doc} missing");
     }
     let readme = fs::read_to_string(root.join("README.md")).unwrap();
     assert!(
         readme.contains("docs/ARCHITECTURE.md")
             && readme.contains("docs/PREDICTOR.md")
-            && readme.contains("docs/EVICTION.md"),
-        "README must link the architecture, predictor and eviction docs"
+            && readme.contains("docs/EVICTION.md")
+            && readme.contains("docs/ROBUSTNESS.md"),
+        "README must link the architecture, predictor, eviction and robustness docs"
     );
     // The eviction doc's headline sections are link targets from the
     // README and ARCHITECTURE: pin their anchors.
@@ -158,6 +161,16 @@ fn required_documents_exist_and_are_linked() {
         assert!(
             anchors(&eviction).iter().any(|a| a == anchor || a.starts_with(anchor)),
             "docs/EVICTION.md lost the '{anchor}' section"
+        );
+    }
+    // Same for the robustness doc: the chaos-layer/watchdog sections
+    // are referenced from the README, ARCHITECTURE and rustdoc.
+    let robustness = fs::read_to_string(root.join("docs/ROBUSTNESS.md")).unwrap();
+    let required = ["the-chaos-layer", "the-watchdog-ladder", "bounded-retry-and-backoff"];
+    for anchor in required {
+        assert!(
+            anchors(&robustness).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/ROBUSTNESS.md lost the '{anchor}' section"
         );
     }
 }
