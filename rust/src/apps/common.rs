@@ -137,6 +137,11 @@ impl Regime {
 pub struct RunOpts {
     /// Record a full event trace (memory-heavy; Figs. 4/5/7/8).
     pub trace: bool,
+    /// With `trace`, bound stored events (and, separately, decisions)
+    /// to this many entries (`None` = unbounded). Aggregate counters
+    /// stay exact past the cap; only raw entries beyond it are dropped
+    /// (and counted). Suite runs trace capped so wide sweeps stay cheap.
+    pub trace_cap: Option<usize>,
     /// Compute streams kernel launches rotate across. `1` is the
     /// paper's wiring (every launch on the default stream, prefetches
     /// on the background stream) and is bit-identical to the
@@ -148,7 +153,7 @@ pub struct RunOpts {
 
 impl Default for RunOpts {
     fn default() -> Self {
-        RunOpts { trace: false, streams: 1 }
+        RunOpts { trace: false, trace_cap: None, streams: 1 }
     }
 }
 
@@ -212,7 +217,10 @@ impl AppCtx {
     pub fn with_opts(plat: &PlatformSpec, variant: Variant, opts: &RunOpts) -> AppCtx {
         let mut um = UmRuntime::new(plat);
         if opts.trace {
-            um.enable_trace();
+            um.trace = match opts.trace_cap {
+                Some(cap) => Trace::capped(cap),
+                None => Trace::enabled(),
+            };
         }
         if variant.auto() {
             um.enable_auto();
@@ -265,7 +273,7 @@ impl AppCtx {
     pub fn prefetch_background(&mut self, id: AllocId, dst: Loc) {
         let range = self.um.space.get(id).full();
         let t = self.streams.now(StreamId::BACKGROUND);
-        let done = self.um.prefetch_async(id, range, dst, t);
+        let done = self.um.prefetch_async_on(StreamId::BACKGROUND, id, range, dst, t);
         self.streams.advance_to(StreamId::BACKGROUND, done);
         self.pending_gate = Some(self.pending_gate.map_or(done, |g| g.max(done)));
     }
@@ -274,7 +282,7 @@ impl AppCtx {
     pub fn prefetch_default(&mut self, id: AllocId, dst: Loc) {
         let range = self.um.space.get(id).full();
         let t = self.streams.now(StreamId::DEFAULT);
-        let done = self.um.prefetch_async(id, range, dst, t);
+        let done = self.um.prefetch_async_on(StreamId::DEFAULT, id, range, dst, t);
         self.streams.advance_to(StreamId::DEFAULT, done);
     }
 
@@ -510,7 +518,7 @@ mod tests {
         let ctx = AppCtx::with_opts(
             &intel_pascal(),
             Variant::Um,
-            &RunOpts { trace: false, streams: 3 },
+            &RunOpts { streams: 3, ..Default::default() },
         );
         // Stream 1 is the background prefetch stream; compute streams
         // are 0 plus freshly created ones.
@@ -525,7 +533,7 @@ mod tests {
         let mut ctx = AppCtx::with_opts(
             &intel_pascal(),
             Variant::Um,
-            &RunOpts { trace: false, streams: 2 },
+            &RunOpts { streams: 2, ..Default::default() },
         );
         let id = ctx.um.malloc_managed("x", 4 * crate::util::units::MIB);
         let full = ctx.um.space.get(id).full();
@@ -541,6 +549,31 @@ mod tests {
         assert_eq!(m.per_stream[0].gpu_accesses, 2, "launches 0 and 2");
         assert_eq!(m.per_stream[2].gpu_accesses, 2, "launches 1 and 3");
         assert_eq!(m.per_stream[1].gpu_accesses, 0, "background stream idle");
+    }
+
+    #[test]
+    fn trace_cap_bounds_storage_but_not_totals() {
+        use crate::gpu::{Access, KernelSpec, Phase};
+        use crate::trace::TraceKind;
+        let mut ctx = AppCtx::with_opts(
+            &intel_pascal(),
+            Variant::Um,
+            &RunOpts { trace: true, trace_cap: Some(4), ..Default::default() },
+        );
+        let id = ctx.um.malloc_managed("x", 4 * crate::util::units::MIB);
+        let full = ctx.um.space.get(id).full();
+        ctx.host_write(id, full);
+        let spec = KernelSpec {
+            name: "k",
+            phases: vec![Phase { name: "p", accesses: vec![Access::read(id, full)], flops: 1.0 }],
+        };
+        ctx.launch(&spec);
+        assert!(ctx.um.trace.dropped_events() > 0, "a 4-entry cap overflows on 4 MiB of faults");
+        assert_eq!(
+            ctx.um.trace.count(TraceKind::GpuFaultGroup),
+            ctx.um.metrics.gpu_fault_groups,
+            "aggregate counters stay exact past the cap"
+        );
     }
 
     #[test]

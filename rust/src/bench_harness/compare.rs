@@ -75,6 +75,19 @@ pub fn suite_json(
             ("wd_recoveries", Json::Int(m.wd_recoveries)),
             ("wd_retries", Json::Int(m.wd_retries)),
             ("wd_degraded_windows", Json::Int(m.wd_degraded_windows)),
+            // Distribution percentiles (docs/OBSERVABILITY.md): fault-
+            // group service time, transfer size, prefetch
+            // issue-to-consume lag. Additive — the compare gate
+            // ignores fields it does not know.
+            ("fault_ns_p50", Json::Int(m.fault_latency.p50())),
+            ("fault_ns_p90", Json::Int(m.fault_latency.p90())),
+            ("fault_ns_p99", Json::Int(m.fault_latency.p99())),
+            ("xfer_bytes_p50", Json::Int(m.transfer_size.p50())),
+            ("xfer_bytes_p90", Json::Int(m.transfer_size.p90())),
+            ("xfer_bytes_p99", Json::Int(m.transfer_size.p99())),
+            ("lag_ns_p50", Json::Int(m.prefetch_lag.p50())),
+            ("lag_ns_p90", Json::Int(m.prefetch_lag.p90())),
+            ("lag_ns_p99", Json::Int(m.prefetch_lag.p99())),
             ("streams", Json::Arr(stream_rows)),
         ]));
     }
@@ -296,6 +309,9 @@ mod tests {
         assert!(c.get("eviction_dead_ratio").is_some());
         assert!(c.get("wd_trips").is_some(), "watchdog counters in the schema");
         assert!(c.get("wd_degraded_windows").is_some());
+        assert!(c.get("fault_ns_p99").is_some(), "fault-latency percentiles in the schema");
+        assert!(c.get("xfer_bytes_p50").is_some(), "transfer-size percentiles in the schema");
+        assert!(c.get("lag_ns_p90").is_some(), "prefetch-lag percentiles in the schema");
         let streams = c.get("streams").and_then(Json::as_arr).unwrap();
         assert!(
             streams.len() >= 2,

@@ -8,7 +8,8 @@ use crate::apps::{AppId, Regime, RunOpts, Variant};
 use crate::bench_harness::{ablate, compare, figures, report::write_all};
 use crate::coordinator::{run_cell, run_cell_opts, Cell, Suite, SuiteConfig};
 use crate::platform::PlatformId;
-use crate::trace::TimeSeries;
+use crate::trace::{chrome, umt, ReasonCode, TimeSeries, Trace, TraceKind, UmtTrace};
+use crate::util::stats::LogHist;
 use crate::um::metrics::fmt_pct;
 use crate::um::{EvictorKind, PredictorKind};
 use crate::util::jsonout::Json;
@@ -24,6 +25,7 @@ USAGE:
   umbra list
   umbra run --app APP --platform PLAT --variant VAR --regime REG [--reps N] [--trace]
        [--predictor PRED] [--evictor EV] [--streams N] [--scenario CHAOS]
+       [--trace-out FILE.umt]
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
        [--evictor EV] [--streams N] [--with-auto] [--compare BASELINE.json]
        [--tolerance T]
@@ -34,6 +36,8 @@ USAGE:
   umbra chaos [--reps N] [--out DIR] [--smoke]
   umbra ablate [--out DIR]
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
+       [--trace-out FILE.umt]
+  umbra trace FILE.umt [--export-chrome FILE.json]
   umbra validate [--artifacts DIR]
   umbra report [--reps N] [--out DIR]
   umbra sweep --param P --values a,b,c --app APP --platform PLAT --variant VAR --regime REG
@@ -56,6 +60,15 @@ USAGE:
   reports completion, guardrail adherence and the um::auto watchdog's
   trip/recovery/retry counters (docs/ROBUSTNESS.md); `--smoke` trims
   the sweep for CI.
+
+  `umbra trace` with cell flags runs one traced cell: a transfer
+  time-series CSV with --out, and the binary .umt capture (events +
+  why-annotated provenance decisions) with --trace-out. Given a
+  FILE.umt path instead, it inspects an existing capture — per-kind
+  breakdown, decision summary grouped by reason code, latency/size
+  percentiles — verifies the decode→re-encode round trip, and
+  --export-chrome writes chrome://tracing / Perfetto JSON. The event
+  taxonomy, reason codes and format spec live in docs/OBSERVABILITY.md.
 
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
@@ -169,7 +182,8 @@ fn cmd_list() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cell = parse_cell(args)?;
     let reps = parse_reps(args, 5)?;
-    let trace = args.flag_bool("trace");
+    let trace_out = args.flag("trace-out");
+    let trace = args.flag_bool("trace") || trace_out.is_some();
     let predictor = parse_predictor(args)?;
     let streams = parse_streams(args)?;
     let scenario = parse_scenario(args)?;
@@ -177,7 +191,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     plat.um.auto_predictor = predictor;
     plat.um.evictor = parse_evictor(args)?;
     plat.um.inject = crate::sim::InjectConfig { scenario, ..Default::default() };
-    let r = run_cell_opts(cell, reps, &RunOpts { trace, streams }, &plat);
+    let r = run_cell_opts(cell, reps, &RunOpts { trace, streams, ..Default::default() }, &plat);
     println!("{}", cell.label());
     println!(
         "  kernel time: {} ± {} (n={}, min {}, max {})",
@@ -252,7 +266,33 @@ fn cmd_run(args: &Args) -> Result<()> {
             "  breakdown: fault stall {}, HtoD {} ({} B), DtoH {} ({} B)",
             b.fault_stall, b.h2d, b.h2d_bytes, b.d2h, b.d2h_bytes
         );
+        println!(
+            "  percentiles: fault service p50/p90/p99 {}/{}/{} ns, transfer {}/{}/{} B, prefetch lag p99 {} ns",
+            m.fault_latency.p50(),
+            m.fault_latency.p90(),
+            m.fault_latency.p99(),
+            m.transfer_size.p50(),
+            m.transfer_size.p90(),
+            m.transfer_size.p99(),
+            m.prefetch_lag.p99()
+        );
     }
+    if let Some(file) = trace_out {
+        let trace = r.last.trace.as_ref().expect("trace enabled for --trace-out");
+        write_umt(Path::new(file), trace, &cell.label())?;
+    }
+    Ok(())
+}
+
+/// Write a live trace as a `.umt` capture, creating parent directories.
+fn write_umt(path: &Path, trace: &Trace, label: &str) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let bytes = umt::encode(trace, label);
+    std::fs::write(path, &bytes)
+        .map_err(|e| anyhow!("cannot write '{}': {e}", path.display()))?;
+    eprintln!("wrote {} ({} bytes, .umt v{})", path.display(), bytes.len(), umt::UMT_VERSION);
     Ok(())
 }
 
@@ -472,6 +512,10 @@ fn cmd_ablate(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
+    // Inspector mode: a positional .umt path instead of cell flags.
+    if let Some(path) = args.positional.first() {
+        return inspect_umt(Path::new(path), args);
+    }
     let cell = parse_cell(args)?;
     let r = run_cell(cell, 1, true);
     let trace = r.last.trace.as_ref().expect("trace enabled");
@@ -490,6 +534,100 @@ fn cmd_trace(args: &Args) -> Result<()> {
         let path = Path::new(out).join("csv").join(format!("trace_{name}.csv"));
         series.to_csv().write(&path)?;
         eprintln!("wrote {}", path.display());
+    }
+    if let Some(file) = args.flag("trace-out") {
+        write_umt(Path::new(file), trace, &cell.label())?;
+    }
+    Ok(())
+}
+
+/// `umbra trace <file.umt>`: decode a capture, verify the canonical
+/// round trip, and render the per-kind breakdown, the reason-grouped
+/// decision summary and the latency/size percentile table. With
+/// `--export-chrome FILE.json`, also write the Chrome-trace document.
+fn inspect_umt(path: &Path, args: &Args) -> Result<()> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("cannot read '{}': {e}", path.display()))?;
+    let ut = UmtTrace::decode(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    if ut.encode() != bytes {
+        bail!("{}: decode→re-encode is not byte-identical (non-canonical capture)", path.display());
+    }
+    println!(
+        "{} — .umt v{}, {} events stored ({} dropped), {} decisions stored ({} dropped)",
+        ut.label,
+        ut.version,
+        ut.events.len(),
+        ut.dropped_events,
+        ut.decisions.len(),
+        ut.dropped_decisions
+    );
+
+    // Per-kind breakdown from the running sums (exact past any cap).
+    let mut t = TextTable::new(vec!["kind", "count", "total time", "bytes"]).left(0);
+    for k in TraceKind::ALL {
+        let i = k.code() as usize;
+        if ut.counts[i] == 0 {
+            continue;
+        }
+        t.row(vec![
+            k.label().to_string(),
+            ut.counts[i].to_string(),
+            format!("{}", Ns(ut.times[i])),
+            ut.byte_sums[i].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Decision summary grouped by reason code. Counts come from the
+    // exact per-reason sums; bytes/streams from the stored rows.
+    let mut t = TextTable::new(vec!["reason", "decisions", "bytes", "streams"]).left(0).left(3);
+    for rc in ReasonCode::ALL {
+        let n = ut.reason_counts[rc.code() as usize];
+        if n == 0 {
+            continue;
+        }
+        let stored: Vec<_> = ut.decisions.iter().filter(|d| d.reason == rc).collect();
+        let bytes: u64 = stored.iter().map(|d| d.bytes).sum();
+        let mut streams: Vec<u32> = stored.iter().map(|d| d.stream.0).collect();
+        streams.sort_unstable();
+        streams.dedup();
+        let streams =
+            streams.iter().map(u32::to_string).collect::<Vec<_>>().join(",");
+        t.row(vec![rc.name().to_string(), n.to_string(), bytes.to_string(), streams]);
+    }
+    println!("{}", t.render());
+
+    // Percentiles over the stored rows (under a capped capture these
+    // cover the kept prefix; the exact per-run aggregates ride in the
+    // suite CSV's fault_ns_* / xfer_bytes_* / lag_ns_* columns).
+    let mut fault = LogHist::default();
+    let mut xfer = LogHist::default();
+    for e in &ut.events {
+        match e.kind {
+            TraceKind::GpuFaultGroup => fault.record((e.end - e.start).0),
+            TraceKind::UmMemcpyHtoD
+            | TraceKind::UmMemcpyDtoH
+            | TraceKind::MemcpyHtoD
+            | TraceKind::MemcpyDtoH => xfer.record(e.bytes),
+            _ => {}
+        }
+    }
+    let mut t = TextTable::new(vec!["distribution", "n", "p50", "p90", "p99"]).left(0);
+    for (name, h) in [("fault group service (ns)", &fault), ("transfer size (bytes)", &xfer)] {
+        t.row(vec![
+            name.to_string(),
+            h.count().to_string(),
+            h.p50().to_string(),
+            h.p90().to_string(),
+            h.p99().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("round-trip: decode→re-encode byte-identical ({} bytes)", bytes.len());
+
+    if let Some(out) = args.flag("export-chrome") {
+        let out = Path::new(out);
+        chrome::export(&ut).write(out)?;
+        eprintln!("wrote {} (open in chrome://tracing or ui.perfetto.dev)", out.display());
     }
     Ok(())
 }
@@ -696,6 +834,46 @@ mod tests {
             let e = dispatch(&args(bad)).expect_err(bad).to_string();
             assert!(!e.is_empty(), "{bad}: error message present");
         }
+    }
+
+    #[test]
+    fn trace_capture_then_inspect_round_trips() {
+        let dir = std::env::temp_dir().join("umbra_cli_trace_test");
+        let umt = dir.join("bs.umt");
+        let json = dir.join("bs.json");
+        dispatch(&args(&format!(
+            "trace --app bs --platform pascal --variant um --regime in-memory --trace-out {}",
+            umt.display()
+        )))
+        .unwrap();
+        dispatch(&args(&format!(
+            "trace {} --export-chrome {}",
+            umt.display(),
+            json.display()
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(&json).unwrap();
+        Json::parse(&text).expect("chrome export parses");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_inspector_rejects_missing_and_garbage_files() {
+        assert!(dispatch(&args("trace /nonexistent/never.umt")).is_err());
+        let dir = std::env::temp_dir().join("umbra_cli_trace_garbage");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.umt");
+        std::fs::write(&bad, b"not a capture").unwrap();
+        assert!(dispatch(&args(&format!("trace {}", bad.display()))).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn usage_documents_the_trace_workflow() {
+        assert!(USAGE.contains("--trace-out"), "usage documents the capture flag");
+        assert!(USAGE.contains("--export-chrome"), "usage documents the exporter");
+        assert!(USAGE.contains("FILE.umt"), "usage documents the inspector form");
+        assert!(USAGE.contains("docs/OBSERVABILITY.md"), "usage points at the spec");
     }
 
     #[test]

@@ -82,6 +82,11 @@ impl SuiteConfig {
     }
 }
 
+/// Storage bound for traced suite runs: at most this many events (and
+/// as many decisions) are kept per run, ~48 B each. Single-cell
+/// `umbra trace` runs stay unbounded.
+pub const SUITE_TRACE_CAP: usize = 1 << 16;
+
 /// Results store.
 #[derive(Debug, Default)]
 pub struct Suite {
@@ -98,7 +103,14 @@ impl Suite {
     pub fn run(config: &SuiteConfig) -> Suite {
         let cells = config.cells();
         let reps = config.reps;
-        let opts = RunOpts { trace: config.trace, streams: config.streams.max(1) };
+        // Suite traces are capped: the sweep runs hundreds of cells and
+        // only aggregate counters / percentiles feed the CSV, so raw
+        // entries past the cap are dropped (counted, totals exact).
+        let opts = RunOpts {
+            trace: config.trace,
+            trace_cap: config.trace.then_some(SUITE_TRACE_CAP),
+            streams: config.streams.max(1),
+        };
         let predictor = config.predictor;
         let evictor = config.evictor;
         let pool = if config.threads == 0 {
@@ -181,6 +193,24 @@ mod tests {
     fn full_matrix_size() {
         let config = SuiteConfig { paper_matrix: false, ..Default::default() };
         assert_eq!(config.cells().len(), 8 * 3 * 5 * 2);
+    }
+
+    #[test]
+    fn traced_suite_runs_use_the_storage_cap() {
+        let config = SuiteConfig {
+            apps: vec![AppId::Bs],
+            platforms: vec![PlatformId::IntelPascal],
+            variants: vec![Variant::Um],
+            regimes: vec![Regime::InMemory],
+            reps: 1,
+            threads: 1,
+            trace: true,
+            ..Default::default()
+        };
+        let suite = Suite::run(&config);
+        let cell = config.cells()[0];
+        let trace = suite.get(&cell).unwrap().last.trace.as_ref().expect("traced");
+        assert_eq!(trace.cap(), SUITE_TRACE_CAP, "suite traces are bounded");
     }
 
     #[test]

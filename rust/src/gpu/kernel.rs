@@ -102,7 +102,7 @@ impl KernelExec {
             t = r.end;
             results.push(r);
         }
-        um.trace.record(TraceKind::Kernel, start, t, 0, None, spec.name);
+        um.trace.record_on(stream, TraceKind::Kernel, start, t, 0, None, spec.name);
         (t, results)
     }
 

@@ -1,0 +1,173 @@
+//! Chrome-trace (a.k.a. Trace Event Format / Perfetto JSON) export.
+//!
+//! Converts a decoded `.umt` capture into the JSON `chrome://tracing`
+//! and <https://ui.perfetto.dev> open directly: transfers, kernels,
+//! fault groups and the rest as complete (`"ph": "X"`) slices, and
+//! every provenance [`Decision`](super::Decision) as a thread-scoped
+//! instant (`"ph": "i"`) named by its reason code — all laid out on
+//! per-stream tracks (`tid` = stream id). Timestamps are microseconds
+//! (the format's unit), emitted in ascending order so downstream
+//! consumers can stream the file.
+
+use crate::util::jsonout::Json;
+use crate::util::units::Ns;
+
+use super::umt::UmtTrace;
+
+/// Simulated process id used for every track (one simulated process).
+const PID: u64 = 1;
+
+fn us(t: Ns) -> Json {
+    Json::Num(t.as_us())
+}
+
+/// Build the Chrome trace JSON document for one capture. Events and
+/// decision instants are merged and sorted by start time (stable, so
+/// equal timestamps keep recorded order).
+pub fn export(t: &UmtTrace) -> Json {
+    // (sort key, rendered row); sort on the exact Ns, not the f64 µs.
+    let mut rows: Vec<(Ns, Json)> = Vec::with_capacity(t.events.len() + t.decisions.len());
+    for e in &t.events {
+        let mut args = vec![("bytes", Json::Int(e.bytes)), ("tag", Json::str(e.tag.clone()))];
+        if let Some(a) = e.alloc {
+            args.push(("alloc", Json::Int(u64::from(a.0))));
+        }
+        rows.push((
+            e.start,
+            Json::obj(vec![
+                ("name", Json::str(e.kind.label())),
+                ("cat", Json::str("um")),
+                ("ph", Json::str("X")),
+                ("ts", us(e.start)),
+                ("dur", us(e.end - e.start)),
+                ("pid", Json::Int(PID)),
+                ("tid", Json::Int(u64::from(e.stream.0))),
+                ("args", Json::obj(args)),
+            ]),
+        ));
+    }
+    for d in &t.decisions {
+        let mut args = vec![
+            ("rung", Json::str(d.rung.name())),
+            ("bytes", Json::Int(d.bytes)),
+            ("aux", Json::Int(d.aux)),
+        ];
+        if let Some(a) = d.alloc {
+            args.push(("alloc", Json::Int(u64::from(a.0))));
+        }
+        rows.push((
+            d.at,
+            Json::obj(vec![
+                ("name", Json::str(d.reason.name())),
+                ("cat", Json::str("decision")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")), // thread-scoped instant
+                ("ts", us(d.at)),
+                ("pid", Json::Int(PID)),
+                ("tid", Json::Int(u64::from(d.stream.0))),
+                ("args", Json::obj(args)),
+            ]),
+        ));
+    }
+    rows.sort_by_key(|(at, _)| *at);
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows.into_iter().map(|(_, row)| row).collect())),
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", Json::obj(vec![("label", Json::str(t.label.clone()))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::stream::StreamId;
+    use crate::mem::AllocId;
+    use crate::trace::decision::{Decision, ReasonCode, Rung};
+    use crate::trace::event::{Trace, TraceKind};
+    use crate::trace::umt;
+
+    fn capture() -> UmtTrace {
+        let mut t = Trace::enabled();
+        t.record_on(
+            StreamId(1),
+            TraceKind::Kernel,
+            Ns(5_000),
+            Ns(9_000),
+            0,
+            None,
+            "bs",
+        );
+        t.record(TraceKind::UmMemcpyHtoD, Ns(1_000), Ns(3_000), 1 << 20, Some(AllocId(0)), "mig");
+        t.decision(Decision {
+            at: Ns(2_000),
+            stream: StreamId(1),
+            alloc: Some(AllocId(0)),
+            rung: Rung::Full,
+            reason: ReasonCode::EscalateBulk,
+            bytes: 1 << 20,
+            aux: 16,
+        });
+        let bytes = umt::encode(&t, "test-cell");
+        UmtTrace::decode(&bytes).unwrap()
+    }
+
+    fn rows(doc: &Json) -> &[Json] {
+        match doc {
+            Json::Obj(fields) => match &fields.iter().find(|(k, _)| k == "traceEvents").unwrap().1
+            {
+                Json::Arr(rows) => rows,
+                _ => panic!("traceEvents not an array"),
+            },
+            _ => panic!("document not an object"),
+        }
+    }
+
+    fn field<'a>(row: &'a Json, key: &str) -> &'a Json {
+        match row {
+            Json::Obj(fields) => &fields.iter().find(|(k, _)| k == key).unwrap().1,
+            _ => panic!("row not an object"),
+        }
+    }
+
+    #[test]
+    fn timestamps_sorted_and_tracks_by_stream() {
+        let doc = export(&capture());
+        let rows = rows(&doc);
+        assert_eq!(rows.len(), 3);
+        let ts: Vec<f64> = rows
+            .iter()
+            .map(|r| match field(r, "ts") {
+                Json::Num(x) => *x,
+                _ => panic!("ts not a number"),
+            })
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts must be ascending: {ts:?}");
+        // Recorded kernel-first, but the migration starts earlier.
+        assert_eq!(field(&rows[0], "name"), &Json::str("Unified Memory Memcpy HtoD"));
+        assert_eq!(field(&rows[0], "tid"), &Json::Int(0));
+        assert_eq!(field(&rows[2], "tid"), &Json::Int(1), "kernel rides its stream track");
+    }
+
+    #[test]
+    fn decisions_render_as_reason_named_instants() {
+        let doc = export(&capture());
+        let rows = rows(&doc);
+        let instant = &rows[1];
+        assert_eq!(field(instant, "ph"), &Json::str("i"));
+        assert_eq!(field(instant, "name"), &Json::str("escalate.bulk"));
+        assert_eq!(field(instant, "s"), &Json::str("t"));
+        assert_eq!(field(field(instant, "args"), "rung"), &Json::str("full"));
+    }
+
+    #[test]
+    fn document_parses_back_and_keeps_the_label() {
+        let rendered = export(&capture()).render();
+        let parsed = Json::parse(&rendered).expect("chrome JSON must parse");
+        let label = parsed
+            .get("otherData")
+            .and_then(|o| o.get("label"))
+            .and_then(|l| l.as_str())
+            .expect("label present");
+        assert_eq!(label, "test-cell");
+    }
+}

@@ -1,0 +1,271 @@
+//! Decision provenance: the *why* beside [`super::event`]'s *what*.
+//!
+//! `nvprof` rows say a transfer happened; they never say which policy
+//! chose it. Every actuation of the UM stack — advise set/unset, stream
+//! escalation, predictive prefetch, eviction victim choice, watchdog
+//! verdicts and rung transitions, chaos episodes — emits exactly one
+//! [`Decision`] carrying the originating `(stream, allocation)`, the
+//! engine's actuation rung at that instant, and a compact
+//! machine-readable [`ReasonCode`]. Decisions ride in the same gated
+//! [`super::Trace`] as events (zero observer effect when tracing is
+//! off), are captured in `.umt` files ([`super::umt`]) and rendered as
+//! instant markers on per-stream tracks by the Chrome exporter
+//! ([`super::chrome`]). See `docs/OBSERVABILITY.md` for the taxonomy.
+
+use crate::gpu::stream::StreamId;
+use crate::mem::AllocId;
+use crate::util::units::{Bytes, Ns};
+
+/// Machine-readable reason for one decision. Codes are a stable wire
+/// format (the `.umt` reason byte): new reasons append, existing codes
+/// never renumber. Names are dotted `family.detail` identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ReasonCode {
+    /// `SetReadMostly` applied: identical read-only repeats cleared the
+    /// engine threshold (`bytes` = advised range).
+    AdviseReadRepeats = 0,
+    /// `SetReadMostly` applied on a streaming-oversubscribed pattern so
+    /// evicted duplicates drop free instead of writing back.
+    AdviseStreamingDup = 1,
+    /// ReadMostly unset: a write was observed on an engine-advised
+    /// allocation.
+    AdviseUnsetWrite = 2,
+    /// Stream escalation: a large host-resident run was bulk-prefetched
+    /// past the fault probe (`bytes` = bulk transfer, `aux` = probe
+    /// pages).
+    EscalateBulk = 3,
+    /// Predictive prefetch issued by the learned delta-table predictor
+    /// (`bytes` = issued range, `aux` = pages).
+    PredictLearned = 4,
+    /// Predictive prefetch issued by the heuristic pattern rule.
+    PredictHeuristic = 5,
+    /// Predictive prefetch issued by the heuristic rule because learned
+    /// confidence was below threshold (fallback).
+    PredictFallback = 6,
+    /// Outstanding predictions consumed by an access (`bytes` = hit
+    /// bytes). Informational: an audit verdict, not an actuation.
+    PredictConsumed = 7,
+    /// Outstanding predictions aged out unused (`bytes` = mispredicted
+    /// bytes). Informational.
+    PredictExpired = 8,
+    /// Eviction victim was a hinted-dead chunk (learned evictor rank 1;
+    /// `aux` = chunk index).
+    EvictHintDead = 9,
+    /// Eviction victim chosen by plain LRU order (`aux` = chunk index).
+    EvictLru = 10,
+    /// Eviction victim was a previously parked predicted-live chunk —
+    /// the forecast lost to memory pressure (`aux` = chunk index).
+    EvictParkedLive = 11,
+    /// Forced eviction with only pinned/protected chunks left (`aux` =
+    /// chunk index).
+    EvictForcedPinned = 12,
+    /// Streamed-past ReadMostly duplicates dropped early (`bytes` =
+    /// dropped duplicate bytes).
+    EvictEarlyDrop = 13,
+    /// The learned evictor refreshed its dead/live hint sets (`bytes` =
+    /// hinted-dead bytes, `aux` = dead chunk count).
+    EvictHintRefresh = 14,
+    /// A demand fault re-touched pages evicted live this run — the
+    /// audit's live-eviction verdict (`bytes` = re-faulted bytes).
+    EvictLiveRefault = 15,
+    /// Watchdog window closed harmful: waste outweighed benefit
+    /// (`bytes` = harm, `aux` = benefit).
+    WdWindowHarmful = 16,
+    /// Watchdog window closed clean (`bytes` = benefit, `aux` = harm).
+    WdWindowClean = 17,
+    /// Watchdog tripped one rung down (`aux` = new rung code).
+    WdTrip = 18,
+    /// Watchdog recovered one rung up (`aux` = new rung code).
+    WdRecover = 19,
+    /// A failed predictive prefetch was re-issued after backoff
+    /// (`bytes` = retried range, `aux` = attempt number).
+    WdRetry = 20,
+    /// Entered a chaos link-degradation episode, as sampled at access
+    /// time (`aux` = degraded transfer efficiency in percent).
+    ChaosLinkDegrade = 21,
+    /// Chaos dropped a prefetch piece on the floor (`bytes` = lost
+    /// transfer).
+    ChaosFlakyPrefetch = 22,
+    /// Chaos retired a device chunk (ECC; `bytes` = retired capacity).
+    ChaosEccRetire = 23,
+    /// Chaos injected spurious fault groups (`aux` = extra groups).
+    ChaosFaultNoise = 24,
+}
+
+/// Number of reason codes (running-sum array width).
+pub const N_REASONS: usize = ReasonCode::ALL.len();
+
+impl ReasonCode {
+    /// Every reason, in wire-code order (`ALL[c]` has code `c`).
+    pub const ALL: [ReasonCode; 25] = [
+        ReasonCode::AdviseReadRepeats,
+        ReasonCode::AdviseStreamingDup,
+        ReasonCode::AdviseUnsetWrite,
+        ReasonCode::EscalateBulk,
+        ReasonCode::PredictLearned,
+        ReasonCode::PredictHeuristic,
+        ReasonCode::PredictFallback,
+        ReasonCode::PredictConsumed,
+        ReasonCode::PredictExpired,
+        ReasonCode::EvictHintDead,
+        ReasonCode::EvictLru,
+        ReasonCode::EvictParkedLive,
+        ReasonCode::EvictForcedPinned,
+        ReasonCode::EvictEarlyDrop,
+        ReasonCode::EvictHintRefresh,
+        ReasonCode::EvictLiveRefault,
+        ReasonCode::WdWindowHarmful,
+        ReasonCode::WdWindowClean,
+        ReasonCode::WdTrip,
+        ReasonCode::WdRecover,
+        ReasonCode::WdRetry,
+        ReasonCode::ChaosLinkDegrade,
+        ReasonCode::ChaosFlakyPrefetch,
+        ReasonCode::ChaosEccRetire,
+        ReasonCode::ChaosFaultNoise,
+    ];
+
+    /// The stable wire code (`.umt` reason byte).
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire code (`None` for codes from a newer format).
+    pub fn from_code(c: u8) -> Option<ReasonCode> {
+        ReasonCode::ALL.get(c as usize).copied()
+    }
+
+    /// Dotted human/grep-stable identifier.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReasonCode::AdviseReadRepeats => "advise.read_repeats",
+            ReasonCode::AdviseStreamingDup => "advise.streaming_dup",
+            ReasonCode::AdviseUnsetWrite => "advise.unset_write",
+            ReasonCode::EscalateBulk => "escalate.bulk",
+            ReasonCode::PredictLearned => "predict.learned",
+            ReasonCode::PredictHeuristic => "predict.heuristic",
+            ReasonCode::PredictFallback => "predict.fallback",
+            ReasonCode::PredictConsumed => "predict.consumed",
+            ReasonCode::PredictExpired => "predict.expired",
+            ReasonCode::EvictHintDead => "evict.hint_dead",
+            ReasonCode::EvictLru => "evict.lru",
+            ReasonCode::EvictParkedLive => "evict.parked_live",
+            ReasonCode::EvictForcedPinned => "evict.forced_pinned",
+            ReasonCode::EvictEarlyDrop => "evict.early_drop",
+            ReasonCode::EvictHintRefresh => "evict.hint_refresh",
+            ReasonCode::EvictLiveRefault => "evict.live_refault",
+            ReasonCode::WdWindowHarmful => "wd.window_harmful",
+            ReasonCode::WdWindowClean => "wd.window_clean",
+            ReasonCode::WdTrip => "wd.trip",
+            ReasonCode::WdRecover => "wd.recover",
+            ReasonCode::WdRetry => "wd.retry",
+            ReasonCode::ChaosLinkDegrade => "chaos.link_degrade",
+            ReasonCode::ChaosFlakyPrefetch => "chaos.flaky_prefetch",
+            ReasonCode::ChaosEccRetire => "chaos.ecc_retire",
+            ReasonCode::ChaosFaultNoise => "chaos.fault_noise",
+        }
+    }
+}
+
+/// The engine's actuation rung when a decision fired — the trace-layer
+/// mirror of `um::auto::WatchdogMode` (kept separate so decoding a
+/// `.umt` file never pulls in the engine). Runs without the auto
+/// engine report [`Rung::Full`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Rung {
+    /// Full actuation (learned predictor, advises, eviction hints).
+    Full = 0,
+    /// Learned predictor benched; heuristic prediction only.
+    Heuristic = 1,
+    /// No new advises on top of heuristic-only prediction.
+    NoAdvise = 2,
+    /// Engine fully inert (converged to plain UM).
+    Inert = 3,
+}
+
+impl Rung {
+    /// Every rung, in wire-code order.
+    pub const ALL: [Rung; 4] = [Rung::Full, Rung::Heuristic, Rung::NoAdvise, Rung::Inert];
+
+    /// The stable wire code (`.umt` rung byte).
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire code.
+    pub fn from_code(c: u8) -> Option<Rung> {
+        Rung::ALL.get(c as usize).copied()
+    }
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rung::Full => "full",
+            Rung::Heuristic => "heuristic",
+            Rung::NoAdvise => "no-advise",
+            Rung::Inert => "inert",
+        }
+    }
+}
+
+/// One provenance record: who decided what, when, and why.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Simulated instant the decision fired.
+    pub at: Ns,
+    /// The stream whose access motivated it (`StreamId::DEFAULT` for
+    /// host-side / allocation-scoped decisions).
+    pub stream: StreamId,
+    /// The allocation acted on (`None` for process-wide decisions such
+    /// as watchdog window verdicts).
+    pub alloc: Option<AllocId>,
+    /// The engine's actuation rung at that instant.
+    pub rung: Rung,
+    /// Why.
+    pub reason: ReasonCode,
+    /// Bytes the decision moved/affected (reason-specific, see
+    /// [`ReasonCode`] docs; 0 when not applicable).
+    pub bytes: Bytes,
+    /// Reason-specific auxiliary value (chunk index, page count, rung
+    /// code, attempt number — see [`ReasonCode`] docs).
+    pub aux: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reason_codes_are_stable_and_dense() {
+        for (i, r) in ReasonCode::ALL.iter().enumerate() {
+            assert_eq!(r.code() as usize, i, "{} out of order", r.name());
+            assert_eq!(ReasonCode::from_code(i as u8), Some(*r));
+        }
+        assert_eq!(ReasonCode::from_code(N_REASONS as u8), None);
+    }
+
+    #[test]
+    fn reason_names_are_unique_dotted_identifiers() {
+        let mut names: Vec<&str> = ReasonCode::ALL.iter().map(|r| r.name()).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate reason name");
+        for name in names {
+            assert!(
+                name.contains('.') && name.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "'{name}' is not a dotted lowercase identifier"
+            );
+        }
+    }
+
+    #[test]
+    fn rung_codes_round_trip() {
+        for r in Rung::ALL {
+            assert_eq!(Rung::from_code(r.code()), Some(r));
+        }
+        assert_eq!(Rung::from_code(4), None);
+    }
+}

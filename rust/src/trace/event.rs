@@ -1,39 +1,61 @@
 //! Trace records (the analogue of `nvprof --print-gpu-trace` rows).
 
+use crate::gpu::stream::StreamId;
 use crate::mem::AllocId;
 use crate::util::units::{Bytes, Ns};
+
+use super::decision::{Decision, ReasonCode, N_REASONS};
 
 /// Record categories. The first two are the rows the paper filters on;
 /// the rest make breakdowns and debugging possible.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
 pub enum TraceKind {
     /// `Unified Memory Memcpy HtoD` — page migration to the device
     /// (fault-driven or prefetch).
-    UmMemcpyHtoD,
+    UmMemcpyHtoD = 0,
     /// `Unified Memory Memcpy DtoH` — migration/eviction to the host.
-    UmMemcpyDtoH,
+    UmMemcpyDtoH = 1,
     /// GPU page-fault group handling (driver occupancy).
-    GpuFaultGroup,
+    GpuFaultGroup = 2,
     /// CPU page fault (host access to non-resident page).
-    CpuFault,
+    CpuFault = 3,
     /// Eviction decision (separate from the DtoH writeback transfer).
-    Eviction,
+    Eviction = 4,
     /// Remote (zero-copy / ATS) access window.
-    RemoteAccess,
+    RemoteAccess = 5,
     /// Read-duplicate invalidation (write to a ReadMostly page).
-    Invalidation,
+    Invalidation = 6,
     /// Explicit `cudaMemcpy` H2D (non-UM variants).
-    MemcpyHtoD,
+    MemcpyHtoD = 7,
     /// Explicit `cudaMemcpy` D2H (non-UM variants).
-    MemcpyDtoH,
+    MemcpyDtoH = 8,
     /// Kernel execution window.
-    Kernel,
+    Kernel = 9,
     /// `cudaMemPrefetchAsync` call window (the transfers it issues are
     /// recorded as `UmMemcpyHtoD`/`UmMemcpyDtoH`).
-    Prefetch,
+    Prefetch = 10,
 }
 
+/// Number of trace kinds (running-sum array width).
+pub const N_KINDS: usize = TraceKind::ALL.len();
+
 impl TraceKind {
+    /// Every kind, in wire-code order (`ALL[c]` has code `c`).
+    pub const ALL: [TraceKind; 11] = [
+        TraceKind::UmMemcpyHtoD,
+        TraceKind::UmMemcpyDtoH,
+        TraceKind::GpuFaultGroup,
+        TraceKind::CpuFault,
+        TraceKind::Eviction,
+        TraceKind::RemoteAccess,
+        TraceKind::Invalidation,
+        TraceKind::MemcpyHtoD,
+        TraceKind::MemcpyDtoH,
+        TraceKind::Kernel,
+        TraceKind::Prefetch,
+    ];
+
     pub fn label(self) -> &'static str {
         match self {
             TraceKind::UmMemcpyHtoD => "Unified Memory Memcpy HtoD",
@@ -49,6 +71,17 @@ impl TraceKind {
             TraceKind::Prefetch => "Prefetch",
         }
     }
+
+    /// The stable wire code (`.umt` kind byte) — also the running-sum
+    /// index. New kinds append; existing codes never renumber.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire code (`None` for codes from a newer format).
+    pub fn from_code(c: u8) -> Option<TraceKind> {
+        TraceKind::ALL.get(c as usize).copied()
+    }
 }
 
 /// One trace row.
@@ -59,6 +92,9 @@ pub struct TraceEvent {
     pub kind: TraceKind,
     pub bytes: Bytes,
     pub alloc: Option<AllocId>,
+    /// The stream the event is attributed to (the triggering access's
+    /// stream for UM activity, the launch stream for kernels).
+    pub stream: StreamId,
     /// Free-form tag (kernel name, phase, reason).
     pub tag: &'static str,
 }
@@ -70,31 +106,89 @@ impl TraceEvent {
 }
 
 /// Event log. Tracing costs memory on multi-GB simulations, so it can
-/// be disabled (benchmark timing runs) or enabled (Figs. 4/5/7/8 runs).
-#[derive(Clone, Debug, Default)]
+/// be disabled (benchmark timing runs), enabled unbounded
+/// (Figs. 4/5/7/8 runs, `.umt` capture) or enabled with a storage cap
+/// ([`Trace::capped`] — suite runs). Past the cap, rows are counted in
+/// [`Trace::dropped_events`] instead of stored; per-kind totals (and
+/// per-reason decision counts) stay exact via running sums, so
+/// [`super::Breakdown`] never degrades.
+#[derive(Clone, Debug)]
 pub struct Trace {
     enabled: bool,
+    /// Max stored events — and, separately, max stored decisions
+    /// (`usize::MAX` = unbounded).
+    cap: usize,
     events: Vec<TraceEvent>,
+    decisions: Vec<Decision>,
+    dropped_events: u64,
+    dropped_decisions: u64,
+    counts: [u64; N_KINDS],
+    times: [u64; N_KINDS],
+    byte_sums: [u64; N_KINDS],
+    reason_counts: [u64; N_REASONS],
+}
+
+impl Default for Trace {
+    fn default() -> Trace {
+        Trace::disabled()
+    }
 }
 
 impl Trace {
+    fn with_mode(enabled: bool, cap: usize) -> Trace {
+        Trace {
+            enabled,
+            cap,
+            events: Vec::new(),
+            decisions: Vec::new(),
+            dropped_events: 0,
+            dropped_decisions: 0,
+            counts: [0; N_KINDS],
+            times: [0; N_KINDS],
+            byte_sums: [0; N_KINDS],
+            reason_counts: [0; N_REASONS],
+        }
+    }
+
     pub fn enabled() -> Trace {
-        Trace { enabled: true, events: Vec::new() }
+        Trace::with_mode(true, usize::MAX)
     }
     pub fn disabled() -> Trace {
-        Trace { enabled: false, events: Vec::new() }
+        Trace::with_mode(false, usize::MAX)
+    }
+    /// Enabled, storing at most `cap` events (and at most `cap`
+    /// decisions); totals stay exact past the cap.
+    pub fn capped(cap: usize) -> Trace {
+        Trace::with_mode(true, cap)
     }
     pub fn is_enabled(&self) -> bool {
         self.enabled
     }
+    /// An empty trace in the same mode (enabled + cap) as this one —
+    /// what a new repetition starts from.
+    pub fn fresh(&self) -> Trace {
+        Trace::with_mode(self.enabled, self.cap)
+    }
 
     pub fn push(&mut self, ev: TraceEvent) {
         debug_assert!(ev.end >= ev.start, "event ends before it starts");
-        if self.enabled {
+        if !self.enabled {
+            return;
+        }
+        let i = ev.kind as usize;
+        self.counts[i] += 1;
+        self.times[i] += ev.duration().0;
+        self.byte_sums[i] += ev.bytes;
+        if self.events.len() < self.cap {
             self.events.push(ev);
+        } else {
+            self.dropped_events += 1;
         }
     }
 
+    /// Record an event attributed to the default stream (host-side ops,
+    /// single-stream paths). Stream-aware call sites use
+    /// [`Trace::record_on`].
     pub fn record(
         &mut self,
         kind: TraceKind,
@@ -104,11 +198,44 @@ impl Trace {
         alloc: Option<AllocId>,
         tag: &'static str,
     ) {
-        self.push(TraceEvent { start, end, kind, bytes, alloc, tag });
+        self.record_on(StreamId::DEFAULT, kind, start, end, bytes, alloc, tag);
+    }
+
+    /// Record an event attributed to `stream`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_on(
+        &mut self,
+        stream: StreamId,
+        kind: TraceKind,
+        start: Ns,
+        end: Ns,
+        bytes: Bytes,
+        alloc: Option<AllocId>,
+        tag: &'static str,
+    ) {
+        self.push(TraceEvent { start, end, kind, bytes, alloc, stream, tag });
+    }
+
+    /// Record one provenance decision (same gate and cap discipline as
+    /// events; per-reason counts stay exact past the cap).
+    pub fn decision(&mut self, d: Decision) {
+        if !self.enabled {
+            return;
+        }
+        self.reason_counts[d.reason as usize] += 1;
+        if self.decisions.len() < self.cap {
+            self.decisions.push(d);
+        } else {
+            self.dropped_decisions += 1;
+        }
     }
 
     pub fn events(&self) -> &[TraceEvent] {
         &self.events
+    }
+    /// Stored decisions, in emission order.
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
     }
     pub fn len(&self) -> usize {
         self.events.len()
@@ -116,40 +243,105 @@ impl Trace {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
+    /// The storage cap (entries; `usize::MAX` when unbounded).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+    /// Events dropped past the storage cap (totals still exact).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+    /// Decisions dropped past the storage cap (reason counts still
+    /// exact).
+    pub fn dropped_decisions(&self) -> u64 {
+        self.dropped_decisions
+    }
     pub fn clear(&mut self) {
         self.events.clear();
+        self.decisions.clear();
+        self.dropped_events = 0;
+        self.dropped_decisions = 0;
+        self.counts = [0; N_KINDS];
+        self.times = [0; N_KINDS];
+        self.byte_sums = [0; N_KINDS];
+        self.reason_counts = [0; N_REASONS];
     }
 
-    /// Events of one kind, in recorded order.
+    /// Events of one kind, in recorded order (stored rows only — under
+    /// a cap, use [`Trace::count`] for the exact total).
     pub fn of_kind(&self, kind: TraceKind) -> impl Iterator<Item = &TraceEvent> {
         self.events.iter().filter(move |e| e.kind == kind)
     }
 
-    /// Total duration of all events of `kind` (the paper's "total time
-    /// spent on" metric — occupancy, not wall-clock union).
-    pub fn total_time(&self, kind: TraceKind) -> Ns {
-        self.of_kind(kind).map(|e| e.duration()).sum()
+    /// Exact number of events of `kind` recorded (running sum — counts
+    /// rows dropped past the cap too).
+    pub fn count(&self, kind: TraceKind) -> u64 {
+        self.counts[kind as usize]
     }
 
-    /// Total bytes moved by events of `kind`.
+    /// Total duration of all events of `kind` (the paper's "total time
+    /// spent on" metric — occupancy, not wall-clock union). Exact even
+    /// past the storage cap.
+    pub fn total_time(&self, kind: TraceKind) -> Ns {
+        Ns(self.times[kind as usize])
+    }
+
+    /// Total bytes moved by events of `kind`. Exact even past the
+    /// storage cap.
     pub fn total_bytes(&self, kind: TraceKind) -> Bytes {
-        self.of_kind(kind).map(|e| e.bytes).sum()
+        self.byte_sums[kind as usize]
+    }
+
+    /// Exact per-reason decision counts, indexed by
+    /// [`ReasonCode::code`].
+    pub fn reason_counts(&self) -> &[u64; N_REASONS] {
+        &self.reason_counts
+    }
+
+    /// Exact number of decisions with `reason` (running sum).
+    pub fn decision_count(&self, reason: ReasonCode) -> u64 {
+        self.reason_counts[reason as usize]
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::decision::Rung;
 
     fn ev(kind: TraceKind, s: u64, e: u64, b: Bytes) -> TraceEvent {
-        TraceEvent { start: Ns(s), end: Ns(e), kind, bytes: b, alloc: None, tag: "" }
+        TraceEvent {
+            start: Ns(s),
+            end: Ns(e),
+            kind,
+            bytes: b,
+            alloc: None,
+            stream: StreamId::DEFAULT,
+            tag: "",
+        }
+    }
+
+    fn dec(reason: ReasonCode, at: u64, b: Bytes) -> Decision {
+        Decision {
+            at: Ns(at),
+            stream: StreamId::DEFAULT,
+            alloc: Some(AllocId(0)),
+            rung: Rung::Full,
+            reason,
+            bytes: b,
+            aux: 0,
+        }
     }
 
     #[test]
     fn disabled_trace_records_nothing() {
         let mut t = Trace::disabled();
         t.push(ev(TraceKind::Kernel, 0, 10, 0));
+        t.decision(dec(ReasonCode::EvictLru, 5, 64));
         assert!(t.is_empty());
+        assert!(t.decisions().is_empty());
+        assert_eq!(t.count(TraceKind::Kernel), 0);
+        assert_eq!(t.decision_count(ReasonCode::EvictLru), 0);
     }
 
     #[test]
@@ -162,6 +354,60 @@ mod tests {
         assert_eq!(t.total_bytes(TraceKind::UmMemcpyHtoD), 400);
         assert_eq!(t.total_time(TraceKind::UmMemcpyDtoH), Ns(5));
         assert_eq!(t.of_kind(TraceKind::UmMemcpyHtoD).count(), 2);
+        assert_eq!(t.count(TraceKind::UmMemcpyHtoD), 2);
+    }
+
+    #[test]
+    fn capped_trace_keeps_exact_totals() {
+        let mut t = Trace::capped(2);
+        for i in 0..5u64 {
+            t.push(ev(TraceKind::UmMemcpyHtoD, i * 10, i * 10 + 5, 100));
+        }
+        assert_eq!(t.len(), 2, "storage bounded by the cap");
+        assert_eq!(t.dropped_events(), 3);
+        assert_eq!(t.count(TraceKind::UmMemcpyHtoD), 5, "running count exact");
+        assert_eq!(t.total_time(TraceKind::UmMemcpyHtoD), Ns(25), "running time exact");
+        assert_eq!(t.total_bytes(TraceKind::UmMemcpyHtoD), 500, "running bytes exact");
+        for _ in 0..3 {
+            t.decision(dec(ReasonCode::PredictLearned, 1, 64));
+        }
+        assert_eq!(t.decisions().len(), 2);
+        assert_eq!(t.dropped_decisions(), 1);
+        assert_eq!(t.decision_count(ReasonCode::PredictLearned), 3, "reason count exact");
+    }
+
+    #[test]
+    fn fresh_preserves_mode_and_cap() {
+        let mut t = Trace::capped(1);
+        t.push(ev(TraceKind::Kernel, 0, 10, 0));
+        t.push(ev(TraceKind::Kernel, 10, 20, 0));
+        let f = t.fresh();
+        assert!(f.is_enabled() && f.is_empty() && f.dropped_events() == 0);
+        let mut f = f;
+        f.push(ev(TraceKind::Kernel, 0, 10, 0));
+        f.push(ev(TraceKind::Kernel, 10, 20, 0));
+        assert_eq!(f.len(), 1, "cap carried over");
+        assert_eq!(f.dropped_events(), 1);
+        assert!(!Trace::disabled().fresh().is_enabled(), "disabled stays disabled");
+    }
+
+    #[test]
+    fn decisions_recorded_in_order() {
+        let mut t = Trace::enabled();
+        t.decision(dec(ReasonCode::EscalateBulk, 10, 1 << 20));
+        t.decision(dec(ReasonCode::PredictLearned, 20, 1 << 16));
+        assert_eq!(t.decisions().len(), 2);
+        assert_eq!(t.decisions()[0].reason, ReasonCode::EscalateBulk);
+        assert_eq!(t.decision_count(ReasonCode::PredictLearned), 1);
+    }
+
+    #[test]
+    fn kind_codes_are_stable_and_dense() {
+        for (i, k) in TraceKind::ALL.iter().enumerate() {
+            assert_eq!(k.code() as usize, i, "{} out of order", k.label());
+            assert_eq!(TraceKind::from_code(i as u8), Some(*k));
+        }
+        assert_eq!(TraceKind::from_code(N_KINDS as u8), None);
     }
 
     #[test]

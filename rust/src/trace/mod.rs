@@ -1,4 +1,4 @@
-//! nvprof-like Unified Memory tracing.
+//! nvprof-like Unified Memory tracing — what moved, and why.
 //!
 //! The paper derives Figs. 4/5/7/8 from `nvprof --print-gpu-trace`
 //! output, filtering `Unified Memory Memcpy HtoD` / `DtoH` records and
@@ -6,9 +6,21 @@
 //! category. [`Trace`] records the same information from the simulator;
 //! [`series`] bins it into the paper's time-series plots and
 //! [`Breakdown`] reproduces the stacked-bar totals.
+//!
+//! On top of the *what*, [`decision`] records the *why*: every policy
+//! actuation (advise, escalation, prediction, eviction choice, watchdog
+//! transition, chaos episode) emits one [`Decision`] with a
+//! machine-readable [`ReasonCode`]. [`umt`] serializes a whole run to
+//! the compact binary `.umt` capture format, and [`chrome`] exports a
+//! capture as Chrome-trace/Perfetto JSON. See `docs/OBSERVABILITY.md`.
 
+pub mod chrome;
+pub mod decision;
 pub mod event;
 pub mod series;
+pub mod umt;
 
+pub use decision::{Decision, ReasonCode, Rung};
 pub use event::{Trace, TraceEvent, TraceKind};
 pub use series::{Breakdown, TimeSeries};
+pub use umt::UmtTrace;

@@ -107,9 +107,33 @@ mod tests {
     fn trace_with(evs: Vec<(TraceKind, u64, u64, Bytes)>) -> Trace {
         let mut t = Trace::enabled();
         for (kind, s, e, b) in evs {
-            t.push(TraceEvent { start: Ns(s), end: Ns(e), kind, bytes: b, alloc: None, tag: "" });
+            t.push(TraceEvent {
+                start: Ns(s),
+                end: Ns(e),
+                kind,
+                bytes: b,
+                alloc: None,
+                stream: crate::gpu::stream::StreamId::DEFAULT,
+                tag: "",
+            });
         }
         t
+    }
+
+    #[test]
+    fn breakdown_stays_exact_past_the_storage_cap() {
+        // The suite runs with a capped trace; Figs. 4/7 totals must not
+        // degrade when rows are dropped (running sums, not iteration).
+        let mut capped = Trace::capped(1);
+        let mut full = Trace::enabled();
+        for t in [&mut capped, &mut full] {
+            for i in 0..10u64 {
+                t.record(TraceKind::UmMemcpyHtoD, Ns(i * 100), Ns(i * 100 + 40), 256, None, "x");
+                t.record(TraceKind::GpuFaultGroup, Ns(i * 100), Ns(i * 100 + 7), 0, None, "x");
+            }
+        }
+        assert_eq!(Breakdown::from_trace(&capped), Breakdown::from_trace(&full));
+        assert!(capped.dropped_events() > 0, "the cap actually engaged");
     }
 
     #[test]

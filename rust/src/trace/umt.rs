@@ -1,0 +1,413 @@
+//! `.umt` — the compact versioned binary trace capture format.
+//!
+//! A `.umt` file is one run's complete observability record: every
+//! stored [`TraceEvent`], every stored [`Decision`], the exact running
+//! sums (which stay valid even when a storage cap dropped rows), and a
+//! free-form label naming the run. Encoding is dependency-free LEB128
+//! varints; integers are unsigned throughout (durations are stored as
+//! `end - start`, which the [`crate::trace::Trace`] push invariant
+//! keeps non-negative). Encoding is canonical — decoding a file and
+//! re-encoding it reproduces the input byte for byte, which the
+//! inspector (`umbra trace <file.umt>`) verifies on every read.
+//!
+//! Layout (all varints unless noted; see `docs/OBSERVABILITY.md` for
+//! the full spec):
+//!
+//! ```text
+//! magic    4 raw bytes "UMT\0"
+//! version  varint (currently 1)
+//! label    varint length + UTF-8 bytes
+//! sums     n_kinds, then per kind: count, total_ns, total_bytes
+//! reasons  n_reasons, then per reason: decision count
+//! dropped  dropped_events, dropped_decisions
+//! events   n, then per event: kind byte, start, dur, bytes,
+//!          alloc+1 (0 = none), stream, tag length + UTF-8 bytes
+//! decis.   n, then per decision: at, reason byte, rung byte,
+//!          stream, alloc+1 (0 = none), bytes, aux
+//! ```
+
+use crate::gpu::stream::StreamId;
+use crate::mem::AllocId;
+use crate::util::units::{Bytes, Ns};
+
+use super::decision::{Decision, ReasonCode, Rung};
+use super::event::{Trace, TraceEvent, TraceKind};
+
+/// Current format version. Bump on any layout change; the decoder
+/// rejects versions it does not know.
+pub const UMT_VERSION: u64 = 1;
+
+const MAGIC: &[u8; 4] = b"UMT\0";
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Streaming decoder over a byte slice (position-tracking reads).
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn byte(&mut self) -> Result<u8, String> {
+        let b = *self.buf.get(self.pos).ok_or("truncated file")?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let b = self.byte()?;
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                // Canonical form: no trailing zero continuation bytes
+                // (required for byte-identical re-encoding).
+                if shift > 0 && b == 0 {
+                    return Err("non-canonical varint".into());
+                }
+                return Ok(v);
+            }
+        }
+        Err("varint overruns 64 bits".into())
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let len = self.varint()? as usize;
+        let end = self.pos.checked_add(len).filter(|&e| e <= self.buf.len());
+        let end = end.ok_or("truncated string")?;
+        let s = std::str::from_utf8(&self.buf[self.pos..end])
+            .map_err(|e| format!("invalid UTF-8 in string: {e}"))?
+            .to_string();
+        self.pos = end;
+        Ok(s)
+    }
+}
+
+/// One decoded event. Identical to [`TraceEvent`] except the tag is an
+/// owned `String` (the live trace interns `&'static str` tags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UmtEvent {
+    pub start: Ns,
+    pub end: Ns,
+    pub kind: TraceKind,
+    pub bytes: Bytes,
+    pub alloc: Option<AllocId>,
+    pub stream: StreamId,
+    pub tag: String,
+}
+
+/// A decoded `.umt` capture — everything the inspector and the Chrome
+/// exporter need, with no dependency on the live UM stack.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UmtTrace {
+    /// Format version the file was written with.
+    pub version: u64,
+    /// Free-form run label (cell label for suite/driver captures).
+    pub label: String,
+    /// Exact per-kind event counts, indexed by [`TraceKind::code`].
+    pub counts: Vec<u64>,
+    /// Exact per-kind total durations (ns), same indexing.
+    pub times: Vec<u64>,
+    /// Exact per-kind total bytes, same indexing.
+    pub byte_sums: Vec<u64>,
+    /// Exact per-reason decision counts, indexed by
+    /// [`ReasonCode::code`].
+    pub reason_counts: Vec<u64>,
+    /// Events dropped past the capture's storage cap.
+    pub dropped_events: u64,
+    /// Decisions dropped past the capture's storage cap.
+    pub dropped_decisions: u64,
+    /// Stored events, in recorded order.
+    pub events: Vec<UmtEvent>,
+    /// Stored decisions, in emission order.
+    pub decisions: Vec<Decision>,
+}
+
+impl UmtTrace {
+    /// Snapshot a live trace for capture.
+    pub fn from_trace(trace: &Trace, label: &str) -> UmtTrace {
+        UmtTrace {
+            version: UMT_VERSION,
+            label: label.to_string(),
+            counts: TraceKind::ALL.iter().map(|&k| trace.count(k)).collect(),
+            times: TraceKind::ALL.iter().map(|&k| trace.total_time(k).0).collect(),
+            byte_sums: TraceKind::ALL.iter().map(|&k| trace.total_bytes(k)).collect(),
+            reason_counts: trace.reason_counts().to_vec(),
+            dropped_events: trace.dropped_events(),
+            dropped_decisions: trace.dropped_decisions(),
+            events: trace
+                .events()
+                .iter()
+                .map(|e| UmtEvent {
+                    start: e.start,
+                    end: e.end,
+                    kind: e.kind,
+                    bytes: e.bytes,
+                    alloc: e.alloc,
+                    stream: e.stream,
+                    tag: e.tag.to_string(),
+                })
+                .collect(),
+            decisions: trace.decisions().to_vec(),
+        }
+    }
+
+    /// Serialize to the canonical `.umt` byte form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_varint(&mut buf, self.version);
+        put_str(&mut buf, &self.label);
+        put_varint(&mut buf, self.counts.len() as u64);
+        for i in 0..self.counts.len() {
+            put_varint(&mut buf, self.counts[i]);
+            put_varint(&mut buf, self.times[i]);
+            put_varint(&mut buf, self.byte_sums[i]);
+        }
+        put_varint(&mut buf, self.reason_counts.len() as u64);
+        for &c in &self.reason_counts {
+            put_varint(&mut buf, c);
+        }
+        put_varint(&mut buf, self.dropped_events);
+        put_varint(&mut buf, self.dropped_decisions);
+        put_varint(&mut buf, self.events.len() as u64);
+        for e in &self.events {
+            buf.push(e.kind.code());
+            put_varint(&mut buf, e.start.0);
+            put_varint(&mut buf, (e.end - e.start).0);
+            put_varint(&mut buf, e.bytes);
+            put_varint(&mut buf, e.alloc.map_or(0, |a| u64::from(a.0) + 1));
+            put_varint(&mut buf, u64::from(e.stream.0));
+            put_str(&mut buf, &e.tag);
+        }
+        put_varint(&mut buf, self.decisions.len() as u64);
+        for d in &self.decisions {
+            put_varint(&mut buf, d.at.0);
+            buf.push(d.reason.code());
+            buf.push(d.rung.code());
+            put_varint(&mut buf, u64::from(d.stream.0));
+            put_varint(&mut buf, d.alloc.map_or(0, |a| u64::from(a.0) + 1));
+            put_varint(&mut buf, d.bytes);
+            put_varint(&mut buf, d.aux);
+        }
+        buf
+    }
+
+    /// Decode a `.umt` byte stream; errors name the first structural
+    /// problem found.
+    pub fn decode(bytes: &[u8]) -> Result<UmtTrace, String> {
+        if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+            return Err("not a .umt file (bad magic)".into());
+        }
+        let mut r = Reader { buf: bytes, pos: MAGIC.len() };
+        let version = r.varint()?;
+        if version != UMT_VERSION {
+            return Err(format!("unsupported .umt version {version} (expected {UMT_VERSION})"));
+        }
+        let label = r.string()?;
+        let n_kinds = r.varint()? as usize;
+        if n_kinds != TraceKind::ALL.len() {
+            return Err(format!("unexpected kind-table width {n_kinds}"));
+        }
+        let mut counts = Vec::with_capacity(n_kinds);
+        let mut times = Vec::with_capacity(n_kinds);
+        let mut byte_sums = Vec::with_capacity(n_kinds);
+        for _ in 0..n_kinds {
+            counts.push(r.varint()?);
+            times.push(r.varint()?);
+            byte_sums.push(r.varint()?);
+        }
+        let n_reasons = r.varint()? as usize;
+        if n_reasons != ReasonCode::ALL.len() {
+            return Err(format!("unexpected reason-table width {n_reasons}"));
+        }
+        let mut reason_counts = Vec::with_capacity(n_reasons);
+        for _ in 0..n_reasons {
+            reason_counts.push(r.varint()?);
+        }
+        let dropped_events = r.varint()?;
+        let dropped_decisions = r.varint()?;
+        let n_events = r.varint()? as usize;
+        let mut events = Vec::with_capacity(n_events.min(1 << 20));
+        for _ in 0..n_events {
+            let code = r.byte()?;
+            let kind =
+                TraceKind::from_code(code).ok_or(format!("unknown event kind code {code}"))?;
+            let start = Ns(r.varint()?);
+            let dur = Ns(r.varint()?);
+            let bytes = r.varint()?;
+            let alloc = match r.varint()? {
+                0 => None,
+                a => Some(AllocId((a - 1).try_into().map_err(|_| "alloc id overflow")?)),
+            };
+            let stream =
+                StreamId(r.varint()?.try_into().map_err(|_| "stream id overflow")?);
+            let tag = r.string()?;
+            events.push(UmtEvent { start, end: start + dur, kind, bytes, alloc, stream, tag });
+        }
+        let n_decisions = r.varint()? as usize;
+        let mut decisions = Vec::with_capacity(n_decisions.min(1 << 20));
+        for _ in 0..n_decisions {
+            let at = Ns(r.varint()?);
+            let code = r.byte()?;
+            let reason =
+                ReasonCode::from_code(code).ok_or(format!("unknown reason code {code}"))?;
+            let code = r.byte()?;
+            let rung = Rung::from_code(code).ok_or(format!("unknown rung code {code}"))?;
+            let stream =
+                StreamId(r.varint()?.try_into().map_err(|_| "stream id overflow")?);
+            let alloc = match r.varint()? {
+                0 => None,
+                a => Some(AllocId((a - 1).try_into().map_err(|_| "alloc id overflow")?)),
+            };
+            let bytes = r.varint()?;
+            let aux = r.varint()?;
+            decisions.push(Decision { at, stream, alloc, rung, reason, bytes, aux });
+        }
+        if r.pos != bytes.len() {
+            return Err(format!("{} trailing bytes after the decision table", bytes.len() - r.pos));
+        }
+        Ok(UmtTrace {
+            version,
+            label,
+            counts,
+            times,
+            byte_sums,
+            reason_counts,
+            dropped_events,
+            dropped_decisions,
+            events,
+            decisions,
+        })
+    }
+}
+
+/// Encode a live trace with its run label (the `--trace-out` path).
+pub fn encode(trace: &Trace, label: &str) -> Vec<u8> {
+    UmtTrace::from_trace(trace, label).encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::capped(4);
+        t.record_on(
+            StreamId(2),
+            TraceKind::UmMemcpyHtoD,
+            Ns(100),
+            Ns(350),
+            1 << 20,
+            Some(AllocId(3)),
+            "prefetch",
+        );
+        t.record(TraceKind::GpuFaultGroup, Ns(0), Ns(40), 1 << 16, Some(AllocId(0)), "migrate");
+        t.record(TraceKind::Kernel, Ns(400), Ns(900), 0, None, "bs");
+        for i in 0..4u64 {
+            t.record(TraceKind::Eviction, Ns(1000 + i), Ns(1000 + i), 1 << 21, Some(AllocId(1)), "evict");
+        }
+        t.decision(Decision {
+            at: Ns(120),
+            stream: StreamId(2),
+            alloc: Some(AllocId(3)),
+            rung: Rung::Full,
+            reason: ReasonCode::PredictLearned,
+            bytes: 1 << 20,
+            aux: 16,
+        });
+        t.decision(Decision {
+            at: Ns(1003),
+            stream: StreamId::DEFAULT,
+            alloc: None,
+            rung: Rung::Heuristic,
+            reason: ReasonCode::WdTrip,
+            bytes: 0,
+            aux: 1,
+        });
+        t
+    }
+
+    #[test]
+    fn encode_decode_round_trips_byte_identically() {
+        let t = sample_trace();
+        let bytes = encode(&t, "Intel-Pascal/BS/UM Auto/oversubscribed");
+        let decoded = UmtTrace::decode(&bytes).expect("decode");
+        assert_eq!(decoded.encode(), bytes, "re-encode must be byte-identical");
+        assert_eq!(decoded.label, "Intel-Pascal/BS/UM Auto/oversubscribed");
+        assert_eq!(decoded.events.len(), 4, "cap respected in capture");
+        assert_eq!(decoded.dropped_events, 3);
+        assert_eq!(decoded.counts[TraceKind::Eviction.code() as usize], 4, "sums exact");
+        assert_eq!(decoded.decisions.len(), 2);
+        assert_eq!(decoded.decisions[0].reason, ReasonCode::PredictLearned);
+        assert_eq!(decoded.decisions[1].rung, Rung::Heuristic);
+        assert_eq!(decoded.events[0].stream, StreamId(2));
+        assert_eq!(decoded.events[0].tag, "prefetch");
+    }
+
+    #[test]
+    fn empty_trace_round_trips() {
+        let bytes = encode(&Trace::enabled(), "");
+        let decoded = UmtTrace::decode(&bytes).expect("decode empty");
+        assert_eq!(decoded.encode(), bytes);
+        assert!(decoded.events.is_empty() && decoded.decisions.is_empty());
+    }
+
+    #[test]
+    fn decoder_rejects_garbage() {
+        assert!(UmtTrace::decode(b"").is_err(), "empty input");
+        assert!(UmtTrace::decode(b"nope").is_err(), "bad magic");
+        let mut bytes = encode(&sample_trace(), "x");
+        bytes.truncate(bytes.len() - 1);
+        assert!(UmtTrace::decode(&bytes).is_err(), "truncated file");
+        let mut bytes = encode(&sample_trace(), "x");
+        bytes.push(0);
+        assert!(UmtTrace::decode(&bytes).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn decoder_rejects_unknown_version() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"UMT\0");
+        bytes.push(99); // version varint
+        let err = UmtTrace::decode(&bytes).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn varints_are_canonical() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 0);
+        assert_eq!(buf, [0]);
+        buf.clear();
+        put_varint(&mut buf, 127);
+        assert_eq!(buf, [127]);
+        buf.clear();
+        put_varint(&mut buf, 128);
+        assert_eq!(buf, [0x80, 0x01]);
+        buf.clear();
+        put_varint(&mut buf, u64::MAX);
+        let mut r = Reader { buf: &buf, pos: 0 };
+        assert_eq!(r.varint().unwrap(), u64::MAX);
+        // A padded (non-canonical) encoding of 1 must be rejected —
+        // canonical form is what makes re-encoding byte-identical.
+        let padded = [0x81, 0x00];
+        let mut r = Reader { buf: &padded, pos: 0 };
+        assert!(r.varint().is_err());
+    }
+}

@@ -21,7 +21,7 @@ use std::collections::VecDeque;
 
 use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, ChunkRef, PageRange, Residency, PAGES_PER_CHUNK, PAGE_SIZE};
-use crate::trace::TraceKind;
+use crate::trace::{Decision, ReasonCode, Rung, TraceKind};
 use crate::um::policy::{Advise, EvictorKind};
 use crate::util::fxhash::FxHashSet;
 use crate::util::units::{Bytes, Ns};
@@ -71,10 +71,10 @@ impl UmRuntime {
         write: bool,
         now: Ns,
     ) -> AccessOutcome {
-        let cfg = match &self.auto {
+        let (cfg, rung) = match &self.auto {
             // A watchdog-inert engine actuates nothing: the access
             // takes the exact plain-UM path (`docs/ROBUSTNESS.md`).
-            Some(e) if !e.watchdog.inert() => e.cfg,
+            Some(e) if !e.watchdog.inert() => (e.cfg, e.watchdog.mode().rung()),
             _ => return self.migrate_or_map_h2d(id, run, class, write, now),
         };
         if !cfg.escalate
@@ -101,7 +101,24 @@ impl UmRuntime {
         if !bulk.is_empty() {
             let t0 = out.done;
             let t = self.prefetch_run_to_gpu(id, bulk, Residency::Host, t0);
-            self.trace.record(TraceKind::Prefetch, t0, t, bulk.bytes(), Some(id), "auto-escalate");
+            self.trace.record_on(
+                stream,
+                TraceKind::Prefetch,
+                t0,
+                t,
+                bulk.bytes(),
+                Some(id),
+                "auto-escalate",
+            );
+            self.trace.decision(Decision {
+                at: t0,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: ReasonCode::EscalateBulk,
+                bytes: bulk.bytes(),
+                aux: u64::from(cfg.probe_pages),
+            });
             if write {
                 self.mark_dirty(id, bulk);
             }
@@ -147,6 +164,7 @@ impl UmRuntime {
         // breaker held *entering* this access; the ledger tick at the
         // bottom may move it for the next one.
         let wd_mode = eng.watchdog.mode();
+        let rung = wd_mode.rung();
         let force_heur = eng.watchdog.force_heuristic();
         let block_advise = eng.watchdog.block_advise();
         let inert = eng.watchdog.inert();
@@ -160,21 +178,62 @@ impl UmRuntime {
         // TTL-expire data that was in fact used. No-op single-stream.
         for ((s, a), st) in eng.state.iter_mut() {
             if *a == id && *s != stream {
-                let o = st.history.audit_consumed(range);
+                let o = st.history.audit_consumed(range, now, &mut self.metrics.prefetch_lag);
                 self.metrics.auto_prefetch_hit_bytes += o.prefetch_hit_bytes;
                 self.metrics.auto_mispredicted_prefetch_bytes += o.mispredicted_bytes;
                 wd_benefit += o.prefetch_hit_bytes;
                 wd_harm += o.mispredicted_bytes;
+                if o.prefetch_hit_bytes > 0 {
+                    self.trace.decision(Decision {
+                        at: now,
+                        stream,
+                        alloc: Some(id),
+                        rung,
+                        reason: ReasonCode::PredictConsumed,
+                        bytes: o.prefetch_hit_bytes,
+                        aux: u64::from(s.0),
+                    });
+                }
             }
         }
 
         // ---- observe + classify (per-(stream, allocation) state) ----
         let st = eng.state.entry((stream, id)).or_default();
-        let obs = st.history.observe(range, write, out.h2d_bytes, cfg.window, cfg.pending_ttl);
+        let obs = st.history.observe(
+            range,
+            write,
+            out.h2d_bytes,
+            cfg.window,
+            cfg.pending_ttl,
+            now,
+            &mut self.metrics.prefetch_lag,
+        );
         self.metrics.auto_prefetch_hit_bytes += obs.prefetch_hit_bytes;
         self.metrics.auto_mispredicted_prefetch_bytes += obs.mispredicted_bytes;
         wd_benefit += obs.prefetch_hit_bytes;
         wd_harm += obs.mispredicted_bytes;
+        if obs.prefetch_hit_bytes > 0 {
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: ReasonCode::PredictConsumed,
+                bytes: obs.prefetch_hit_bytes,
+                aux: u64::from(stream.0),
+            });
+        }
+        if obs.mispredicted_bytes > 0 {
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: ReasonCode::PredictExpired,
+                bytes: obs.mispredicted_bytes,
+                aux: u64::from(cfg.pending_ttl),
+            });
+        }
         let flipped = st.tracker.update(classify(st.history.window()), cfg.hysteresis);
         if flipped {
             self.metrics.auto_pattern_flips += 1;
@@ -195,16 +254,20 @@ impl UmRuntime {
         // (learned mode) or the single classifier-rule range (heuristic
         // mode; also the learned mode's low-confidence fallback). The
         // heuristic arm is byte-identical to the original engine.
-        let predictions: Vec<PageRange> = if !cfg.predict || inert {
-            Vec::new()
+        let (predictions, pred_reason): (Vec<PageRange>, ReasonCode) = if !cfg.predict || inert {
+            (Vec::new(), ReasonCode::PredictHeuristic)
         } else if force_heur {
             // Watchdog rung ≥ Heuristic: the classifier rule alone.
-            heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect()
+            (
+                heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect(),
+                ReasonCode::PredictHeuristic,
+            )
         } else {
             match cfg.predictor {
-                PredictorKind::Heuristic => {
-                    heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect()
-                }
+                PredictorKind::Heuristic => (
+                    heuristic_prediction(pat, range, cfg.max_predict_pages).into_iter().collect(),
+                    ReasonCode::PredictHeuristic,
+                ),
                 PredictorKind::Learned => {
                     self.metrics.auto_predict_queries += 1;
                     let ranked = st.predictor.predict(range, &cfg);
@@ -214,11 +277,11 @@ impl UmRuntime {
                                 .into_iter()
                                 .collect();
                         self.metrics.auto_fallback_predictions += fb.len() as u64;
-                        fb
+                        (fb, ReasonCode::PredictFallback)
                     } else {
                         self.metrics.auto_predict_confident += 1;
                         self.metrics.auto_learned_predictions += ranked.len() as u64;
-                        ranked.into_iter().map(|p| p.range).collect()
+                        (ranked.into_iter().map(|p| p.range).collect(), ReasonCode::PredictLearned)
                     }
                 }
             }
@@ -271,12 +334,34 @@ impl UmRuntime {
             self.metrics.auto_advises += 1;
             self.metrics.auto_decisions += 1;
             self.metrics.stream_mut(stream).auto_decisions += 1;
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: if pat == Pattern::ReadMostly {
+                    ReasonCode::AdviseReadRepeats
+                } else {
+                    ReasonCode::AdviseStreamingDup
+                },
+                bytes: full.bytes(),
+                aux: u64::from(read_repeats),
+            });
         }
         if unset_read_mostly {
             self.mem_advise(id, full, Advise::UnsetReadMostly, now);
             self.metrics.auto_advises += 1;
             self.metrics.auto_decisions += 1;
             self.metrics.stream_mut(stream).auto_decisions += 1;
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: ReasonCode::AdviseUnsetWrite,
+                bytes: full.bytes(),
+                aux: 0,
+            });
             // The engine is the only advise source in the UmAuto variant
             // (apps hand-advise only in UmAdvise/UmBoth, which never
             // attach it): once the last auto advise is withdrawn, hand
@@ -309,10 +394,19 @@ impl UmRuntime {
             sm.auto_decisions += 1;
             sm.auto_predictions += 1;
             sm.auto_prefetched_bytes += issued;
+            self.trace.decision(Decision {
+                at: t_pred,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: pred_reason,
+                bytes: issued,
+                aux: pieces.len() as u64,
+            });
             let history =
                 &mut eng.state.get_mut(&(stream, id)).expect("entry created above").history;
             for piece in pieces {
-                history.push_pending(piece, ready);
+                history.push_pending(piece, ready, t_pred);
             }
             // Ranked predictions share the DMA engine: issue in order.
             t_pred = ready;
@@ -342,6 +436,15 @@ impl UmRuntime {
                     self.metrics.auto_early_dropped_bytes += dropped;
                     self.metrics.auto_decisions += 1;
                     self.metrics.stream_mut(stream).auto_decisions += 1;
+                    self.trace.decision(Decision {
+                        at: now,
+                        stream,
+                        alloc: Some(id),
+                        rung,
+                        reason: ReasonCode::EvictEarlyDrop,
+                        bytes: dropped,
+                        aux: u64::from(range.start),
+                    });
                 }
             }
             // … and protect hot (read-mostly) allocations from the
@@ -372,7 +475,7 @@ impl UmRuntime {
             // from the bottom, which is exactly the cyclic pattern raw
             // LRU is pessimal for.
             let sweep = streaming && range.len().saturating_mul(2) >= full.len();
-            self.auto_actuate_learned_eviction(&eng, stream, id, sweep);
+            self.auto_actuate_learned_eviction(&eng, stream, id, sweep, rung, now);
         }
 
         // ---- bounded retry of failed prefetches (fault injection) ---
@@ -397,9 +500,18 @@ impl UmRuntime {
                 let issued: Bytes = pieces.iter().map(|p| p.bytes()).sum();
                 self.metrics.auto_prefetched_bytes += issued;
                 self.metrics.stream_mut(stream).auto_prefetched_bytes += issued;
+                self.trace.decision(Decision {
+                    at: t_retry,
+                    stream,
+                    alloc: Some(rid),
+                    rung,
+                    reason: ReasonCode::WdRetry,
+                    bytes: issued,
+                    aux: eng.watchdog.retries,
+                });
                 let history = &mut eng.state.entry((stream, rid)).or_default().history;
                 for p in pieces {
-                    history.push_pending(p, ready);
+                    history.push_pending(p, ready, t_retry);
                 }
                 t_retry = ready;
             }
@@ -411,6 +523,22 @@ impl UmRuntime {
         // whose prefetch failed outright since the last tick.
         wd_harm += eng.watchdog.failed_delta(self.metrics.chaos_failed_prefetch_bytes);
         eng.watchdog.note_access(wd_benefit, wd_harm);
+        // Drain breaker incidents unconditionally (the buffer must stay
+        // bounded whether or not tracing is on); the gate inside
+        // `Trace::decision` decides whether anything is kept. Stamped
+        // with the post-tick rung: a trip's decision already shows the
+        // rung it landed on.
+        for ev in eng.watchdog.drain_events() {
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: None,
+                rung: eng.watchdog.mode().rung(),
+                reason: ev.reason,
+                bytes: ev.bytes,
+                aux: ev.aux,
+            });
+        }
         self.metrics.wd_trips = eng.watchdog.trips;
         self.metrics.wd_recoveries = eng.watchdog.recoveries;
         self.metrics.wd_retries = eng.watchdog.retries;
@@ -449,6 +577,8 @@ impl UmRuntime {
         stream: StreamId,
         id: AllocId,
         sweep: bool,
+        rung: Rung,
+        now: Ns,
     ) {
         let cfg = &eng.cfg;
         let fc = eng.eviction_forecast_for(id);
@@ -522,11 +652,29 @@ impl UmRuntime {
             self.metrics.auto_early_dropped_bytes += dropped_total;
             self.metrics.auto_decisions += 1;
             self.metrics.stream_mut(stream).auto_decisions += 1;
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: Some(id),
+                rung,
+                reason: ReasonCode::EvictEarlyDrop,
+                bytes: dropped_total,
+                aux: fc.dead.len() as u64,
+            });
         }
 
         // Hinted-dead chunks the sweep rule now calls live are not
         // hints at all.
         dead_chunks.retain(|c| !live_chunks.contains(&c.chunk));
+        self.trace.decision(Decision {
+            at: now,
+            stream,
+            alloc: Some(id),
+            rung,
+            reason: ReasonCode::EvictHintRefresh,
+            bytes: 0,
+            aux: dead_chunks.len() as u64,
+        });
         self.evict_hints.set_for(id, dead_chunks, live_chunks);
         // The parked victims belong to the previous forecast: give
         // them back to the LRU before the new hints take effect.
@@ -853,7 +1001,7 @@ mod tests {
             .entry((StreamId::DEFAULT, a))
             .or_default()
             .history
-            .push_pending(want, ready);
+            .push_pending(want, ready, Ns::ZERO);
         let out = r.gpu_access(a, want, false, Ns::ZERO);
         assert!(out.done >= ready, "access waited for the in-flight data: {}", out.done);
         assert!(out.transfer_wait >= ready, "wait attributed to transfer_wait");
@@ -884,7 +1032,7 @@ mod tests {
             .entry((StreamId::DEFAULT, a))
             .or_default()
             .history
-            .push_pending(want, ready);
+            .push_pending(want, ready, Ns::ZERO);
         let out = r.gpu_access_on(StreamId(2), a, want, false, Ns::ZERO);
         assert!(out.done >= ready, "other stream gated too: {}", out.done);
         assert_eq!(r.metrics.auto_prefetch_hit_bytes, want.bytes(), "cross-stream hit credited");
@@ -983,6 +1131,76 @@ mod tests {
             m.auto_prefetched_bytes,
             m.per_stream.iter().map(|s| s.auto_prefetched_bytes).sum::<u64>(),
         );
+    }
+
+    #[test]
+    fn every_actuation_emits_exactly_one_provenance_decision() {
+        // The counted-actuation sites (escalation, advise set/unset,
+        // each issued prediction, early drops) each emit exactly one
+        // Decision — so with tracing on, the actuation-reason decision
+        // count must equal the `auto_decisions` metric.
+        let actuation = |r: ReasonCode| {
+            matches!(
+                r,
+                ReasonCode::EscalateBulk
+                    | ReasonCode::AdviseReadRepeats
+                    | ReasonCode::AdviseStreamingDup
+                    | ReasonCode::AdviseUnsetWrite
+                    | ReasonCode::PredictLearned
+                    | ReasonCode::PredictHeuristic
+                    | ReasonCode::PredictFallback
+                    | ReasonCode::EvictEarlyDrop
+            )
+        };
+        let mut plat = intel_pascal();
+        plat.gpu.mem_capacity = 64 * MIB;
+        plat.gpu.reserved = 0;
+        let (mut r, a) = prepped(&plat, 96 * MIB);
+        r.trace = crate::trace::Trace::enabled();
+        let full = r.space.get(a).full();
+        let half = PageRange::new(0, full.end / 2);
+        let rest = PageRange::new(full.end / 2, full.end);
+        let mut t = Ns::ZERO;
+        for _ in 0..6 {
+            t = r.gpu_access(a, half, false, t).done;
+            t = r.gpu_access(a, rest, false, t).done;
+        }
+        t = r.gpu_access(a, half, true, t).done; // forces the unset path
+        let _ = t;
+        assert!(r.metrics.auto_decisions > 0, "sanity: the engine actuated");
+        let actuations =
+            r.trace.decisions().iter().filter(|d| actuation(d.reason)).count() as u64;
+        assert_eq!(actuations, r.metrics.auto_decisions, "one decision per actuation");
+        assert!(
+            r.trace.decision_count(ReasonCode::AdviseUnsetWrite) >= 1,
+            "the protective unset is why-annotated too"
+        );
+        assert!(
+            r.trace.decisions().iter().all(|d| d.stream == StreamId::DEFAULT),
+            "single-stream run: every decision rides stream 0"
+        );
+    }
+
+    #[test]
+    fn disabling_the_trace_changes_no_metrics() {
+        // In-crate spot check of the zero-observer-effect rule (the
+        // full differential oracle lives in tests/observer_effect.rs).
+        let run = |trace_on: bool| {
+            let (mut r, a) = prepped(&intel_pascal(), 64 * MIB);
+            if trace_on {
+                r.trace = crate::trace::Trace::enabled();
+            }
+            let full = r.space.get(a).full();
+            let mut t = Ns::ZERO;
+            for _ in 0..4 {
+                t = r.gpu_access(a, full, false, t).done;
+            }
+            (t, r.metrics)
+        };
+        let (t_off, m_off) = run(false);
+        let (t_on, m_on) = run(true);
+        assert_eq!(t_off, t_on, "simulated time identical");
+        assert_eq!(m_off, m_on, "metrics (incl. histograms) identical");
     }
 
     #[test]

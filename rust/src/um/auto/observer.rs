@@ -11,6 +11,7 @@
 use std::collections::VecDeque;
 
 use crate::mem::PageRange;
+use crate::util::stats::LogHist;
 use crate::util::units::{Bytes, Ns};
 
 use super::pattern::AccessRecord;
@@ -34,6 +35,10 @@ struct Pending {
     /// lands inside the measured kernel window, exactly like the
     /// hand-tuned background prefetch).
     ready: Ns,
+    /// Simulated instant the prediction was issued — the start of the
+    /// issue-to-consume lag sample recorded when an access consumes it
+    /// (`UmMetrics::prefetch_lag`).
+    issued: Ns,
     /// Observations survived without being consumed.
     age: u32,
 }
@@ -62,9 +67,12 @@ fn overlaps(a: PageRange, b: PageRange) -> bool {
 }
 
 impl AllocHistory {
-    /// Record one access. `window_cap` bounds the window; pending
-    /// predictions that go unused for `pending_ttl` observations are
-    /// charged as mispredicted.
+    /// Record one access at simulated time `now`. `window_cap` bounds
+    /// the window; pending predictions that go unused for `pending_ttl`
+    /// observations are charged as mispredicted. Each consumed pending
+    /// entry records one issue-to-consume lag sample into `lag`
+    /// (unconditionally — the distribution exists with tracing off).
+    #[allow(clippy::too_many_arguments)]
     pub fn observe(
         &mut self,
         range: PageRange,
@@ -72,6 +80,8 @@ impl AllocHistory {
         h2d_bytes: Bytes,
         window_cap: usize,
         pending_ttl: u32,
+        now: Ns,
+        lag: &mut LogHist,
     ) -> Observation {
         let mut obs = Observation::default();
         // Audit outstanding predictions. Only the actually-consumed
@@ -83,6 +93,7 @@ impl AllocHistory {
             let hi = p.range.end.min(range.end);
             if lo < hi {
                 obs.prefetch_hit_bytes += PageRange::new(lo, hi).bytes();
+                lag.record(now.0.saturating_sub(p.issued.0));
                 // Keep the larger unconsumed side pending (predictions
                 // are contiguous and typically consumed from the
                 // front). A middle hit leaves two sides but only one
@@ -136,7 +147,7 @@ impl AllocHistory {
     /// shared with `observe`'s audit pass: there, hits and aging happen
     /// in one `retain_mut` sweep (a hit entry does not age that round),
     /// and splitting the pass would change single-stream expiry timing.
-    pub fn audit_consumed(&mut self, range: PageRange) -> Observation {
+    pub fn audit_consumed(&mut self, range: PageRange, now: Ns, lag: &mut LogHist) -> Observation {
         let mut obs = Observation::default();
         self.pending.retain_mut(|p| {
             let lo = p.range.start.max(range.start);
@@ -145,6 +156,7 @@ impl AllocHistory {
                 return true; // untouched: keep, do not age
             }
             obs.prefetch_hit_bytes += PageRange::new(lo, hi).bytes();
+            lag.record(now.0.saturating_sub(p.issued.0));
             let left = PageRange::new(p.range.start, lo);
             let right = PageRange::new(hi, p.range.end);
             let (rem, dropped) =
@@ -170,9 +182,10 @@ impl AllocHistory {
     }
 
     /// Register an issued predictive prefetch for hit/miss auditing and
-    /// in-flight gating.
-    pub fn push_pending(&mut self, range: PageRange, ready: Ns) {
-        self.pending.push(Pending { range, ready, age: 0 });
+    /// in-flight gating. `issued` is the decision instant (the lag
+    /// sample's start); `ready` is the transfer's completion time.
+    pub fn push_pending(&mut self, range: PageRange, ready: Ns, issued: Ns) {
+        self.pending.push(Pending { range, ready, issued, age: 0 });
     }
 
     /// The in-flight gate for an access to `range`: the latest
@@ -201,11 +214,17 @@ mod tests {
         PageRange::new(start, end)
     }
 
+    /// Shorthand: observe with no migrated bytes at t=0, discarding the
+    /// lag histogram (tests that care about lag thread their own).
+    fn ob(h: &mut AllocHistory, range: PageRange, write: bool, cap: usize, ttl: u32) -> Observation {
+        h.observe(range, write, 0, cap, ttl, Ns::ZERO, &mut LogHist::default())
+    }
+
     #[test]
     fn window_is_bounded_and_ordered() {
         let mut h = AllocHistory::default();
         for i in 0..10u32 {
-            h.observe(r(i * 8, i * 8 + 8), false, 0, 4, 4);
+            ob(&mut h, r(i * 8, i * 8 + 8), false, 4, 4);
         }
         assert_eq!(h.window().len(), 4);
         assert_eq!(h.window()[0].range, r(48, 56), "oldest surviving record");
@@ -220,11 +239,11 @@ mod tests {
         // put for 100k observations.
         let mut h = AllocHistory::default();
         for i in 0..16u32 {
-            h.observe(r(i * 8, i * 8 + 8), false, 0, 8, 4);
+            ob(&mut h, r(i * 8, i * 8 + 8), false, 8, 4);
         }
         let settled = h.window().capacity();
         for i in 16..100_000u32 {
-            h.observe(r(i * 8, i * 8 + 8), false, 0, 8, 4);
+            ob(&mut h, r(i * 8, i * 8 + 8), false, 8, 4);
         }
         assert_eq!(h.window().len(), 8, "len pinned to the configured cap");
         assert_eq!(h.window().capacity(), settled, "ring never reallocates");
@@ -234,10 +253,10 @@ mod tests {
     #[test]
     fn wrap_detection_against_seen_pages() {
         let mut h = AllocHistory::default();
-        h.observe(r(0, 32), false, 0, 8, 4);
-        h.observe(r(32, 64), false, 0, 8, 4);
+        ob(&mut h, r(0, 32), false, 8, 4);
+        ob(&mut h, r(32, 64), false, 8, 4);
         assert!(!h.window()[1].wrapped, "forward progress is not a wrap");
-        h.observe(r(0, 32), false, 0, 8, 4);
+        ob(&mut h, r(0, 32), false, 8, 4);
         assert!(h.window()[2].wrapped, "revisiting seen pages is");
     }
 
@@ -245,11 +264,11 @@ mod tests {
     fn read_repeats_count_and_reset() {
         let mut h = AllocHistory::default();
         for _ in 0..3 {
-            h.observe(r(0, 16), false, 0, 8, 4);
+            ob(&mut h, r(0, 16), false, 8, 4);
         }
         assert_eq!(h.read_repeats, 2);
         assert!(!h.writes_ever);
-        h.observe(r(0, 16), true, 0, 8, 4);
+        ob(&mut h, r(0, 16), true, 8, 4);
         assert_eq!(h.read_repeats, 0, "a write breaks the repeat run");
         assert!(h.writes_ever);
     }
@@ -257,19 +276,19 @@ mod tests {
     #[test]
     fn pending_prefetch_hit_and_misprediction() {
         let mut h = AllocHistory::default();
-        h.push_pending(r(100, 120), Ns(500));
-        h.push_pending(r(500, 540), Ns(900));
+        h.push_pending(r(100, 120), Ns(500), Ns::ZERO);
+        h.push_pending(r(500, 540), Ns(900), Ns::ZERO);
         // Partial hit on the first: only the consumed intersection is
         // credited, the remainder stays pending. The second ages.
-        let o = h.observe(r(100, 110), false, 0, 8, 2);
+        let o = ob(&mut h, r(100, 110), false, 8, 2);
         assert_eq!(o.prefetch_hit_bytes, r(100, 110).bytes());
         assert_eq!(o.mispredicted_bytes, 0);
         assert_eq!(h.pending_count(), 2, "unconsumed remainder kept");
-        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        let o = ob(&mut h, r(0, 8), false, 8, 2);
         assert_eq!(o.mispredicted_bytes, r(500, 540).bytes(), "aged out after ttl");
         assert_eq!(h.pending_count(), 1);
         // The grazed remainder eventually expires as mispredicted too.
-        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        let o = ob(&mut h, r(0, 8), false, 8, 2);
         assert_eq!(o.mispredicted_bytes, r(110, 120).bytes());
         assert_eq!(h.pending_count(), 0);
     }
@@ -277,8 +296,8 @@ mod tests {
     #[test]
     fn middle_hit_keeps_one_side_and_charges_the_other() {
         let mut h = AllocHistory::default();
-        h.push_pending(r(0, 100), Ns(1));
-        let o = h.observe(r(40, 60), false, 0, 8, 4);
+        h.push_pending(r(0, 100), Ns(1), Ns::ZERO);
+        let o = ob(&mut h, r(40, 60), false, 8, 4);
         assert_eq!(o.prefetch_hit_bytes, r(40, 60).bytes());
         // Two unconsumed sides, one pending slot: the discarded side is
         // charged immediately instead of vanishing from the audit.
@@ -289,8 +308,8 @@ mod tests {
     #[test]
     fn fully_consumed_prediction_is_removed() {
         let mut h = AllocHistory::default();
-        h.push_pending(r(100, 120), Ns(500));
-        let o = h.observe(r(90, 130), false, 0, 8, 2);
+        h.push_pending(r(100, 120), Ns(500), Ns::ZERO);
+        let o = ob(&mut h, r(90, 130), false, 8, 2);
         assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
         assert_eq!(h.pending_count(), 0);
     }
@@ -298,22 +317,22 @@ mod tests {
     #[test]
     fn audit_consumed_credits_hits_without_aging() {
         let mut h = AllocHistory::default();
-        h.push_pending(r(100, 120), Ns(500));
-        h.push_pending(r(500, 540), Ns(900));
+        h.push_pending(r(100, 120), Ns(500), Ns::ZERO);
+        h.push_pending(r(500, 540), Ns(900), Ns::ZERO);
         // A foreign stream's access consumes the first prediction; the
         // second is untouched and — unlike `observe` — does NOT age.
-        let o = h.audit_consumed(r(100, 120));
+        let o = h.audit_consumed(r(100, 120), Ns::ZERO, &mut LogHist::default());
         assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
         assert_eq!(o.mispredicted_bytes, 0);
         assert_eq!(h.pending_count(), 1, "consumed entry retired");
         for _ in 0..10 {
-            h.audit_consumed(r(0, 8));
+            h.audit_consumed(r(0, 8), Ns::ZERO, &mut LogHist::default());
         }
         assert_eq!(h.pending_count(), 1, "foreign misses never age entries out");
         // The owning stream's own observe still expires it on its own
         // cadence (ttl 2: ages at each non-overlapping observation).
-        h.observe(r(0, 8), false, 0, 8, 2);
-        let o = h.observe(r(0, 8), false, 0, 8, 2);
+        ob(&mut h, r(0, 8), false, 8, 2);
+        let o = ob(&mut h, r(0, 8), false, 8, 2);
         assert_eq!(o.mispredicted_bytes, r(500, 540).bytes());
         assert_eq!(h.pending_count(), 0);
     }
@@ -321,8 +340,30 @@ mod tests {
     #[test]
     fn gate_applies_only_to_overlapping_accesses() {
         let mut h = AllocHistory::default();
-        h.push_pending(r(100, 120), Ns(7_000));
+        h.push_pending(r(100, 120), Ns(7_000), Ns::ZERO);
         assert_eq!(h.gate_for(r(110, 130)), Ns(7_000), "overlap waits");
         assert_eq!(h.gate_for(r(0, 50)), Ns::ZERO, "disjoint access does not");
+    }
+
+    #[test]
+    fn consumption_records_issue_to_consume_lag() {
+        let mut h = AllocHistory::default();
+        h.push_pending(r(100, 120), Ns(500), Ns(100));
+        let mut lag = LogHist::default();
+        // Miss: no lag sample.
+        h.observe(r(0, 8), false, 0, 8, 8, Ns(400), &mut lag);
+        assert_eq!(lag.count(), 0, "expiry/aging never records lag");
+        // Hit at t=700, issued at t=100: one 600 ns sample.
+        let o = h.observe(r(100, 120), false, 0, 8, 8, Ns(700), &mut lag);
+        assert_eq!(o.prefetch_hit_bytes, r(100, 120).bytes());
+        assert_eq!(lag.count(), 1);
+        assert_eq!(lag.buckets()[9], 1, "600 ns lands in [512, 1024)");
+        // Cross-stream consumption records lag too (clamped at 0 if the
+        // foreign clock reads earlier than the issue).
+        let mut h = AllocHistory::default();
+        h.push_pending(r(0, 16), Ns(500), Ns(300));
+        h.audit_consumed(r(0, 16), Ns(200), &mut lag);
+        assert_eq!(lag.count(), 2);
+        assert_eq!(lag.buckets()[0], 1, "clock skew clamps to bucket 0");
     }
 }

@@ -37,6 +37,7 @@
 use std::collections::VecDeque;
 
 use crate::mem::{AllocId, PageRange};
+use crate::trace::{ReasonCode, Rung};
 use crate::util::fxhash::FxHashMap;
 use crate::util::units::{Bytes, MIB};
 
@@ -97,6 +98,17 @@ pub enum WatchdogMode {
 }
 
 impl WatchdogMode {
+    /// The provenance-trace rung this mode maps to (same ladder, wire
+    /// representation lives in [`crate::trace`]).
+    pub fn rung(self) -> Rung {
+        match self {
+            WatchdogMode::Full => Rung::Full,
+            WatchdogMode::Heuristic => Rung::Heuristic,
+            WatchdogMode::NoAdvise => Rung::NoAdvise,
+            WatchdogMode::Inert => Rung::Inert,
+        }
+    }
+
     fn down(self) -> WatchdogMode {
         match self {
             WatchdogMode::Full => WatchdogMode::Heuristic,
@@ -121,6 +133,22 @@ struct Retry {
     piece: PageRange,
     /// First access epoch at which the retry may be issued.
     due: u64,
+}
+
+/// One provenance-worthy breaker incident, buffered until the actuator
+/// drains it (the breaker has no trace handle or timestamp of its own —
+/// the actuator stamps stream/time when it converts these into
+/// [`crate::trace::Decision`] records).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WdEvent {
+    /// What happened (`wd.*` reason codes only).
+    pub reason: ReasonCode,
+    /// Headline byte figure: harm for a harmful window, benefit for a
+    /// clean one, 0 for ladder transitions.
+    pub bytes: Bytes,
+    /// Secondary figure: the opposing ledger side for window verdicts,
+    /// the *new* rung's wire code for trips and recoveries.
+    pub aux: u64,
 }
 
 /// The breaker itself: ledger accumulators, ladder state, counters and
@@ -149,6 +177,10 @@ pub struct Watchdog {
     queue: VecDeque<Retry>,
     /// Attempts so far per failed piece (keyed by start page).
     attempts: FxHashMap<(AllocId, u32), u32>,
+    /// Incidents since the last [`Watchdog::drain_events`] call. The
+    /// actuator drains this every post-access step, so it never holds
+    /// more than one window verdict plus one ladder transition.
+    events: Vec<WdEvent>,
     /// Rungs descended (the `wd_trips` metric).
     pub trips: u64,
     /// Rungs re-ascended (the `wd_recoveries` metric).
@@ -233,6 +265,14 @@ impl Watchdog {
         self.retries += 1;
     }
 
+    /// Take the incidents buffered since the last drain (window
+    /// verdicts and ladder transitions, in occurrence order). Must be
+    /// called every post-access step — unconditionally, not just when
+    /// tracing — so the buffer stays bounded.
+    pub fn drain_events(&mut self) -> Vec<WdEvent> {
+        std::mem::take(&mut self.events)
+    }
+
     /// Feed one access's ledger entries and advance the epoch clock;
     /// closes (and evaluates) the window every
     /// [`WatchdogConfig::window`] accesses.
@@ -248,6 +288,11 @@ impl Watchdog {
 
     fn close_window(&mut self) {
         let harmful = self.harm > self.benefit && self.harm >= self.cfg.min_harm_bytes;
+        self.events.push(if harmful {
+            WdEvent { reason: ReasonCode::WdWindowHarmful, bytes: self.harm, aux: self.benefit }
+        } else {
+            WdEvent { reason: ReasonCode::WdWindowClean, bytes: self.benefit, aux: self.harm }
+        });
         if self.mode != WatchdogMode::Full {
             self.degraded_windows += 1;
         }
@@ -286,6 +331,11 @@ impl Watchdog {
         }
         self.mode = self.mode.down();
         self.trips += 1;
+        self.events.push(WdEvent {
+            reason: ReasonCode::WdTrip,
+            bytes: 0,
+            aux: u64::from(self.mode.rung().code()),
+        });
         let b = if self.backoff == 0 { self.cfg.backoff_init } else { self.backoff };
         self.hold = b;
         self.backoff = (b * 2).min(self.cfg.backoff_cap);
@@ -294,6 +344,11 @@ impl Watchdog {
     fn step_up(&mut self) {
         self.mode = self.mode.up();
         self.recoveries += 1;
+        self.events.push(WdEvent {
+            reason: ReasonCode::WdRecover,
+            bytes: 0,
+            aux: u64::from(self.mode.rung().code()),
+        });
         self.clean_streak = 0;
         if self.mode == WatchdogMode::Full {
             // Fully healthy again: the next incident starts the backoff
@@ -423,6 +478,32 @@ mod tests {
             modes.contains(&WatchdogMode::NoAdvise) && modes.contains(&WatchdogMode::Heuristic),
             "no rung skipped on the way up: {modes:?}"
         );
+    }
+
+    #[test]
+    fn incidents_buffer_and_drain_in_order() {
+        let mut wd = Watchdog::new(cfg());
+        window(&mut wd, 0, 4 * MIB); // harmful #1
+        window(&mut wd, 0, 4 * MIB); // harmful #2 -> trip
+        let ev = wd.drain_events();
+        assert_eq!(ev.len(), 3, "two verdicts plus one trip: {ev:?}");
+        assert_eq!(ev[0].reason, ReasonCode::WdWindowHarmful);
+        assert_eq!(ev[0].bytes, 4 * MIB);
+        assert_eq!(ev[0].aux, 0, "benefit side of the ledger");
+        assert_eq!(ev[2].reason, ReasonCode::WdTrip);
+        assert_eq!(ev[2].aux, u64::from(Rung::Heuristic.code()), "new rung on the wire");
+        assert!(wd.drain_events().is_empty(), "drain empties the buffer");
+        // Clean windows burn the hold, then recovery emits its event.
+        for _ in 0..4 {
+            window(&mut wd, MIB, 0);
+        }
+        let ev = wd.drain_events();
+        assert!(ev.iter().all(|e| e.reason != ReasonCode::WdWindowHarmful));
+        let rec: Vec<&WdEvent> =
+            ev.iter().filter(|e| e.reason == ReasonCode::WdRecover).collect();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].aux, u64::from(Rung::Full.code()));
+        assert_eq!(wd.mode().rung(), Rung::Full, "mode and rung ladders agree");
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::mem::{
     PAGE_SIZE,
 };
 use crate::mem::page::PageFlags;
-use crate::trace::TraceKind;
+use crate::trace::{Decision, ReasonCode, TraceKind};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::util::units::{Bytes, Ns};
 
@@ -184,7 +184,9 @@ impl UmRuntime {
                 // memory so this indicates a harness bug.
                 panic!("device OOM: need {goal} free, nothing evictable");
             };
-            let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+            let reason =
+                if forced { ReasonCode::EvictForcedPinned } else { ReasonCode::EvictLru };
+            let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t, reason);
             if !background {
                 t = end;
             }
@@ -220,7 +222,8 @@ impl UmRuntime {
             if let Some(chunk) = self.evict_hints.take_dead(&self.dev) {
                 let resident = self.dev.resident_bytes_of(chunk);
                 self.dev.note_eviction(false);
-                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                let end =
+                    self.evict_chunk(chunk.alloc, chunk.chunk, resident, t, ReasonCode::EvictHintDead);
                 if !background {
                     t = end;
                 }
@@ -233,7 +236,8 @@ impl UmRuntime {
                     continue;
                 }
                 self.dev.note_eviction(false);
-                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                let end =
+                    self.evict_chunk(chunk.alloc, chunk.chunk, resident, t, ReasonCode::EvictLru);
                 if !background {
                     t = end;
                 }
@@ -244,7 +248,13 @@ impl UmRuntime {
             if let Some(chunk) = self.next_parked_victim() {
                 let resident = self.dev.resident_bytes_of(chunk);
                 self.dev.note_eviction(false);
-                let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                let end = self.evict_chunk(
+                    chunk.alloc,
+                    chunk.chunk,
+                    resident,
+                    t,
+                    ReasonCode::EvictParkedLive,
+                );
                 if !background {
                     t = end;
                 }
@@ -254,7 +264,13 @@ impl UmRuntime {
             if self.dev.only_pinned_left() {
                 if let Some((chunk, resident)) = self.dev.pop_victim(true) {
                     self.dev.note_eviction(true);
-                    let end = self.evict_chunk(chunk.alloc, chunk.chunk, resident, t);
+                    let end = self.evict_chunk(
+                        chunk.alloc,
+                        chunk.chunk,
+                        resident,
+                        t,
+                        ReasonCode::EvictForcedPinned,
+                    );
                     if !background {
                         t = end;
                     }
@@ -292,8 +308,17 @@ impl UmRuntime {
 
     /// Evict one chunk: transition pages, account writeback vs drop,
     /// schedule the writeback DMA. Returns writeback completion (or
-    /// `now` if everything was droppable).
-    fn evict_chunk(&mut self, id: AllocId, chunk: u32, resident: Bytes, now: Ns) -> Ns {
+    /// `now` if everything was droppable). `reason` is the victim
+    /// selection's provenance — which arm of the evictor chose this
+    /// chunk — emitted as one why-annotated decision per eviction.
+    fn evict_chunk(
+        &mut self,
+        id: AllocId,
+        chunk: u32,
+        resident: Bytes,
+        now: Ns,
+        reason: ReasonCode,
+    ) -> Ns {
         let alloc = self.space.get(id);
         let run = alloc.pages.clamp(PageRange::new(
             chunk * PAGES_PER_CHUNK,
@@ -342,12 +367,38 @@ impl UmRuntime {
         self.metrics.evicted_chunks += 1;
         self.access_evicted_bytes += resident;
         self.metrics.dropped_bytes += drop_pages * PAGE_SIZE;
-        self.trace.record(TraceKind::Eviction, now, now, resident, Some(id), "evict");
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::Eviction,
+            now,
+            now,
+            resident,
+            Some(id),
+            "evict",
+        );
+        self.trace.decision(Decision {
+            at: now,
+            stream: self.access_stream,
+            alloc: Some(id),
+            rung: self.current_rung(),
+            reason,
+            bytes: resident,
+            aux: u64::from(chunk),
+        });
 
         if wb_pages > 0 {
             let bytes = wb_pages * PAGE_SIZE;
             let occ = self.dma_d2h.transfer(now, bytes, self.eff_at(TransferMode::Eviction, now));
-            self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, bytes, Some(id), "eviction");
+            self.metrics.transfer_size.record(bytes);
+            self.trace.record_on(
+                self.access_stream,
+                TraceKind::UmMemcpyDtoH,
+                occ.start,
+                occ.end,
+                bytes,
+                Some(id),
+                "eviction",
+            );
             self.metrics.writeback_bytes += bytes;
             self.metrics.d2h_bytes += bytes;
             self.metrics.d2h_time += occ.duration();
@@ -444,10 +495,11 @@ impl UmRuntime {
     /// neither does touching the still-resident part of a partially
     /// evicted chunk. O(1) when nothing is outstanding (the in-memory
     /// common case).
-    pub(super) fn audit_note_demand(&mut self, id: AllocId, run: PageRange) {
+    pub(super) fn audit_note_demand(&mut self, id: AllocId, run: PageRange, now: Ns) {
         if self.evict_audit.is_empty() {
             return;
         }
+        let mut refault: Bytes = 0;
         let mut page = run.start;
         while page < run.end {
             let chunk = Self::chunk_of(page);
@@ -457,8 +509,9 @@ impl UmRuntime {
                 let base = chunk * PAGES_PER_CHUNK;
                 let hit = *outstanding & chunk_mask(page - base, chunk_end - base);
                 if hit != 0 {
-                    self.metrics.evict_live_evicted_bytes +=
-                        u64::from(hit.count_ones()) * PAGE_SIZE;
+                    let bytes = u64::from(hit.count_ones()) * PAGE_SIZE;
+                    self.metrics.evict_live_evicted_bytes += bytes;
+                    refault += bytes;
                     *outstanding &= !hit;
                     if *outstanding == 0 {
                         self.evict_audit.remove(&cref);
@@ -466,6 +519,19 @@ impl UmRuntime {
                 }
             }
             page = chunk_end;
+        }
+        if refault > 0 {
+            // One why-annotated record per demand access that touched
+            // live-evicted pages: the evictor's past choice proved wrong.
+            self.trace.decision(Decision {
+                at: now,
+                stream: self.access_stream,
+                alloc: Some(id),
+                rung: self.current_rung(),
+                reason: ReasonCode::EvictLiveRefault,
+                bytes: refault,
+                aux: 0,
+            });
         }
     }
 
@@ -793,6 +859,32 @@ mod tests {
         r.finish_eviction_audit();
         assert_eq!(r.metrics.evict_dead_hit_bytes, dead, "flush is idempotent");
         r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn every_eviction_carries_a_provenance_decision() {
+        let (mut r, a, b) = setup_oversub(false);
+        r.trace = crate::trace::Trace::enabled();
+        let fa = r.space.get(a).full();
+        let fb = r.space.get(b).full();
+        r.gpu_access(a, fa, false, Ns::ZERO);
+        let o = r.gpu_access(b, fb, false, Ns(1));
+        r.gpu_access(a, fa, false, o.done);
+        let evict_reasons = [
+            ReasonCode::EvictLru,
+            ReasonCode::EvictHintDead,
+            ReasonCode::EvictParkedLive,
+            ReasonCode::EvictForcedPinned,
+        ];
+        let choices: u64 = evict_reasons.iter().map(|&c| r.trace.decision_count(c)).sum();
+        assert_eq!(
+            choices, r.metrics.evicted_chunks,
+            "one victim-choice decision per evicted chunk"
+        );
+        assert!(
+            r.trace.decision_count(ReasonCode::EvictLiveRefault) > 0,
+            "re-demanding evicted pages leaves a live-refault record"
+        );
     }
 
     #[test]

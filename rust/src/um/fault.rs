@@ -64,7 +64,18 @@ impl UmRuntime {
                 .fault_service(pages_here.max(1), advised)
                 .scale(cost_scale);
             let occ = self.fault_path.serve(ready, service);
-            self.trace.record(TraceKind::GpuFaultGroup, occ.start, occ.end, pages_here as u64 * crate::mem::PAGE_SIZE, Some(id), tag);
+            // Per-group service latency feeds the fault_ns_* percentile
+            // columns — unconditionally, never through the trace gate.
+            self.metrics.fault_latency.record(service.0);
+            self.trace.record_on(
+                self.access_stream,
+                TraceKind::GpuFaultGroup,
+                occ.start,
+                occ.end,
+                pages_here as u64 * crate::mem::PAGE_SIZE,
+                Some(id),
+                tag,
+            );
             t_last = t_last.max(occ.end);
             total += service;
         }
@@ -146,6 +157,8 @@ mod tests {
         let (done, total) = r.service_faults(id, 64, false, false, 1.0, Ns::ZERO, "t");
         // 64 pages / 8 per group = 8 groups, serialized
         assert_eq!(r.metrics.gpu_fault_groups, 8);
+        assert_eq!(r.metrics.fault_latency.count(), 8, "one latency sample per group");
+        assert!(r.metrics.fault_latency.p50() > 0);
         assert_eq!(done, total, "serial from t=0: completion == total service");
         assert!(total >= Ns::from_us(8.0 * 30.0), "at least 8 group bases");
     }

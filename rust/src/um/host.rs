@@ -93,7 +93,7 @@ impl UmRuntime {
                         });
                         self.add_device_residency(id, dev_run, true, t_space);
                         let dur = self.remote_time(dev_run.bytes());
-                        self.trace.record(TraceKind::RemoteAccess, t_space, t_space + dur, dev_run.bytes(), Some(id), "cpu-init-remote");
+                        self.trace.record_on(self.access_stream, TraceKind::RemoteAccess, t_space, t_space + dur, dev_run.bytes(), Some(id), "cpu-init-remote");
                         self.metrics.remote_bytes_cpu_to_dev += dev_run.bytes();
                         self.metrics.populated_dev_pages += dev_run.len() as u64;
                         done = t_space + dur;
@@ -129,7 +129,7 @@ impl UmRuntime {
                     // Invalidate the device duplicates; host copy is
                     // already current, so dropping them is free of DMA.
                     let occ = self.fault_path.serve(now, self.policy.invalidation_cost);
-                    self.trace.record(TraceKind::Invalidation, occ.start, occ.end, run.bytes(), Some(id), "host-write-collapse");
+                    self.trace.record_on(self.access_stream, TraceKind::Invalidation, occ.start, occ.end, run.bytes(), Some(id), "host-write-collapse");
                     self.drop_device_residency(id, run);
                     self.space.get_mut(id).pages.update(run, |p| {
                         p.residency = Residency::Host;
@@ -145,7 +145,7 @@ impl UmRuntime {
                     && (class.cpu_mapped || class.accessed_by_cpu || class.pref_gpu);
                 if can_remote {
                     let dur = self.remote_time(run.bytes());
-                    self.trace.record(TraceKind::RemoteAccess, now, now + dur, run.bytes(), Some(id), "cpu-remote");
+                    self.trace.record_on(self.access_stream, TraceKind::RemoteAccess, now, now + dur, run.bytes(), Some(id), "cpu-remote");
                     self.metrics.remote_bytes_cpu_to_dev += run.bytes();
                     if write {
                         self.mark_dirty(id, run);
@@ -166,8 +166,9 @@ impl UmRuntime {
                         // (`eff_at`) can start or end mid-run.
                         let eff = self.eff_at(TransferMode::Faulted, t + fault);
                         let occ = self.dma_d2h.transfer(t + fault, piece.bytes(), eff);
-                        self.trace.record(TraceKind::CpuFault, t, t + fault, piece.bytes(), Some(id), "cpu-fault");
-                        self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, piece.bytes(), Some(id), "cpu-fault-migrate");
+                        self.metrics.transfer_size.record(piece.bytes());
+                        self.trace.record_on(self.access_stream, TraceKind::CpuFault, t, t + fault, piece.bytes(), Some(id), "cpu-fault");
+                        self.trace.record_on(self.access_stream, TraceKind::UmMemcpyDtoH, occ.start, occ.end, piece.bytes(), Some(id), "cpu-fault-migrate");
                         self.metrics.cpu_faults += piece.len() as u64;
                         self.metrics.migrated_pages_d2h += piece.len() as u64;
                         self.metrics.d2h_bytes += piece.bytes();

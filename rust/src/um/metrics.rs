@@ -3,6 +3,7 @@
 //! `umbra trace` summary and the ablation benches.
 
 use crate::gpu::stream::StreamId;
+use crate::util::stats::LogHist;
 use crate::util::units::{Bytes, Ns};
 
 /// Streams with their own [`StreamMetrics`] slot; accesses on streams
@@ -166,6 +167,19 @@ pub struct UmMetrics {
     /// Observation windows spent in any degraded mode (dwell time,
     /// measured in windows).
     pub wd_degraded_windows: u64,
+
+    // --- latency/size distributions (docs/OBSERVABILITY.md) ---
+    // Fed unconditionally on the hot path (fixed-size, O(1) record),
+    // never through the trace gate, so enabling/capping/disabling
+    // tracing cannot change them — the observer-effect oracle compares
+    // whole `UmMetrics` values across trace modes.
+    /// Fault-group service latency distribution (ns per group).
+    pub fault_latency: LogHist,
+    /// Transfer-size distribution (bytes per DMA/memcpy occupancy).
+    pub transfer_size: LogHist,
+    /// Predictive-prefetch issue-to-consume lag distribution (ns from
+    /// the issuing decision to the access that consumed it).
+    pub prefetch_lag: LogHist,
     /// Per-stream counter slices (slot = stream index, clamped to
     /// [`MAX_STREAM_METRICS`]); all-zero except for streams that
     /// actually drove accesses.
@@ -248,7 +262,10 @@ impl UmMetrics {
     /// so the bench trajectory tracks decision quality across PRs).
     /// (`'static` is required here: associated constants may not elide
     /// lifetimes — rustc's `elided_lifetimes_in_associated_constant`.)
-    pub const AUTO_CSV_HEADER: [&'static str; 17] = [
+    /// New columns append at the end — downstream tooling (and the
+    /// positional assertions in this module's tests) index the earlier
+    /// columns by position.
+    pub const AUTO_CSV_HEADER: [&'static str; 26] = [
         "auto_decisions",
         "auto_pattern_flips",
         "auto_prefetched_bytes",
@@ -266,6 +283,15 @@ impl UmMetrics {
         "wd_recoveries",
         "wd_retries",
         "wd_degraded_windows",
+        "fault_ns_p50",
+        "fault_ns_p90",
+        "fault_ns_p99",
+        "xfer_bytes_p50",
+        "xfer_bytes_p90",
+        "xfer_bytes_p99",
+        "lag_ns_p50",
+        "lag_ns_p90",
+        "lag_ns_p99",
     ];
 
     /// The auto-policy counters as CSV fields (order matches
@@ -289,6 +315,15 @@ impl UmMetrics {
             self.wd_recoveries.to_string(),
             self.wd_retries.to_string(),
             self.wd_degraded_windows.to_string(),
+            self.fault_latency.p50().to_string(),
+            self.fault_latency.p90().to_string(),
+            self.fault_latency.p99().to_string(),
+            self.transfer_size.p50().to_string(),
+            self.transfer_size.p90().to_string(),
+            self.transfer_size.p99().to_string(),
+            self.prefetch_lag.p50().to_string(),
+            self.prefetch_lag.p90().to_string(),
+            self.prefetch_lag.p99().to_string(),
         ]
     }
 
@@ -357,6 +392,30 @@ mod tests {
         assert_eq!(row[0], "7");
         assert_eq!(row[2], "4096");
         assert_eq!(row[9], "3");
+    }
+
+    #[test]
+    fn percentile_columns_append_at_the_end() {
+        let mut m = UmMetrics::default();
+        for _ in 0..10 {
+            m.fault_latency.record(1500);
+            m.transfer_size.record(2 << 20);
+            m.prefetch_lag.record(100_000);
+        }
+        let row = m.auto_csv_row();
+        let idx = |name: &str| {
+            UmMetrics::AUTO_CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap_or_else(|| panic!("{name} missing from AUTO_CSV_HEADER"))
+        };
+        assert_eq!(row[idx("fault_ns_p50")], (1024 + 512).to_string());
+        assert_eq!(row[idx("xfer_bytes_p99")], ((2 << 20) + (1 << 20)).to_string());
+        assert_eq!(row[idx("lag_ns_p90")], (65536 + 32768).to_string());
+        // Positional compatibility: the original 17 columns keep their
+        // indices, so pre-existing consumers never re-map.
+        assert_eq!(UmMetrics::AUTO_CSV_HEADER[16], "wd_degraded_windows");
+        assert_eq!(idx("fault_ns_p50"), 17);
     }
 
     #[test]

@@ -107,7 +107,9 @@ impl UmRuntime {
             let t_space = self.ensure_device_space(bytes, ready);
             let service = self.policy.fault_service(group.len(), advised);
             let focc = self.fault_path.serve(t_space, service);
-            self.trace.record(
+            self.metrics.fault_latency.record(service.0);
+            self.trace.record_on(
+                self.access_stream,
                 TraceKind::GpuFaultGroup,
                 focc.start,
                 focc.end,
@@ -120,7 +122,16 @@ impl UmRuntime {
             // (`eff_at`) can degrade mid-run.
             let eff_faulted = self.eff_at(TransferMode::Faulted, focc.end);
             let docc = self.dma_h2d.transfer(focc.end, bytes, eff_faulted);
-            self.trace.record(TraceKind::UmMemcpyHtoD, docc.start, docc.end, bytes, Some(id), "migrate");
+            self.metrics.transfer_size.record(bytes);
+            self.trace.record_on(
+                self.access_stream,
+                TraceKind::UmMemcpyHtoD,
+                docc.start,
+                docc.end,
+                bytes,
+                Some(id),
+                "migrate",
+            );
             self.metrics.h2d_time += docc.duration();
             // Page state + residency accounting as the group arrives.
             self.space.get_mut(id).pages.update(group, |p| {
@@ -139,7 +150,16 @@ impl UmRuntime {
         for _ in 0..dup_extra {
             let service = self.policy.fault_service(1, advised);
             let focc = self.fault_path.serve(ready, service);
-            self.trace.record(TraceKind::GpuFaultGroup, focc.start, focc.end, 0, Some(id), "dup-fault");
+            self.metrics.fault_latency.record(service.0);
+            self.trace.record_on(
+                self.access_stream,
+                TraceKind::GpuFaultGroup,
+                focc.start,
+                focc.end,
+                0,
+                Some(id),
+                "dup-fault",
+            );
             stall_total += service;
             ready = focc.end;
             done = done.max(focc.end);
@@ -188,7 +208,15 @@ impl UmRuntime {
         });
         let bytes = run.bytes();
         let dur = self.remote_time(bytes);
-        self.trace.record(TraceKind::RemoteAccess, now, now + dur, bytes, Some(id), "gpu-remote");
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::RemoteAccess,
+            now,
+            now + dur,
+            bytes,
+            Some(id),
+            "gpu-remote",
+        );
         self.metrics.remote_bytes_gpu_to_host += bytes;
         AccessOutcome { done: now, remote_bytes: bytes, ..Default::default() }
     }
@@ -198,7 +226,15 @@ impl UmRuntime {
     /// is dropped and the device copy becomes the only (dirty) one.
     pub(super) fn invalidate_duplicates(&mut self, id: AllocId, run: PageRange, now: Ns) -> AccessOutcome {
         let occ = self.fault_path.serve(now, self.policy.invalidation_cost);
-        self.trace.record(TraceKind::Invalidation, occ.start, occ.end, run.bytes(), Some(id), "collapse");
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::Invalidation,
+            occ.start,
+            occ.end,
+            run.bytes(),
+            Some(id),
+            "collapse",
+        );
         self.space.get_mut(id).pages.update(run, |p| {
             debug_assert_eq!(p.residency, Residency::Both);
             p.residency = Residency::Device;

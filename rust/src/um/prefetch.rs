@@ -7,15 +7,30 @@
 //! * prefetching a range whose `PreferredLocation` is the *other*
 //!   memory un-pins it ("the pages will no longer be pinned").
 
+use crate::gpu::stream::StreamId;
 use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGE_SIZE};
 use crate::mem::page::{AdviseFlags, PageFlags};
-use crate::trace::TraceKind;
+use crate::trace::{Decision, ReasonCode, TraceKind};
 use crate::util::units::{Bytes, Ns};
 
 use super::policy::Loc;
 use super::runtime::UmRuntime;
 
 impl UmRuntime {
+    /// [`UmRuntime::prefetch_async`] attributed to `stream` (trace
+    /// tracks + per-stream rows; the data movement is identical).
+    pub fn prefetch_async_on(
+        &mut self,
+        stream: StreamId,
+        id: AllocId,
+        range: PageRange,
+        dst: Loc,
+        now: Ns,
+    ) -> Ns {
+        self.access_stream = stream;
+        self.prefetch_async(id, range, dst, now)
+    }
+
     /// Prefetch `range` of `id` to `dst`; returns the completion time on
     /// the prefetching stream. The caller decides whether the kernel
     /// stream waits (background-stream prefetch) or not.
@@ -41,7 +56,15 @@ impl UmRuntime {
             };
             pos = run.end;
         }
-        self.trace.record(TraceKind::Prefetch, now, t, range.bytes(), Some(id), "cudaMemPrefetchAsync");
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::Prefetch,
+            now,
+            t,
+            range.bytes(),
+            Some(id),
+            "cudaMemPrefetchAsync",
+        );
         t
     }
 
@@ -108,12 +131,30 @@ impl UmRuntime {
                     };
                     if failed {
                         self.note_failed_prefetch(id, piece);
+                        self.trace.decision(Decision {
+                            at: t,
+                            stream: self.access_stream,
+                            alloc: Some(id),
+                            rung: self.current_rung(),
+                            reason: ReasonCode::ChaosFlakyPrefetch,
+                            bytes: piece.bytes(),
+                            aux: u64::from(piece.start),
+                        });
                         page = piece.end;
                         continue;
                     }
                     let t_space = self.ensure_device_space(piece.bytes(), t);
                     let occ = self.dma_h2d.transfer(t_space, piece.bytes(), self.eff_at(TransferMode::Bulk, t_space));
-                    self.trace.record(TraceKind::UmMemcpyHtoD, occ.start, occ.end, piece.bytes(), Some(id), "prefetch");
+                    self.metrics.transfer_size.record(piece.bytes());
+                    self.trace.record_on(
+                        self.access_stream,
+                        TraceKind::UmMemcpyHtoD,
+                        occ.start,
+                        occ.end,
+                        piece.bytes(),
+                        Some(id),
+                        "prefetch",
+                    );
                     self.metrics.h2d_bytes += piece.bytes();
                     self.metrics.h2d_time += occ.duration();
                     self.metrics.prefetched_pages_h2d += piece.len() as u64;
@@ -201,7 +242,15 @@ impl UmRuntime {
             pieces.push(piece);
         }
         if issued > 0 {
-            self.trace.record(TraceKind::Prefetch, now, t, issued, Some(id), "auto-predict");
+            self.trace.record_on(
+                self.access_stream,
+                TraceKind::Prefetch,
+                now,
+                t,
+                issued,
+                Some(id),
+                "auto-predict",
+            );
         }
         (pieces, t)
     }
@@ -232,7 +281,16 @@ impl UmRuntime {
             }
             Residency::Device => {
                 let occ = self.dma_d2h.transfer(now, run.bytes(), self.eff_at(TransferMode::Bulk, now));
-                self.trace.record(TraceKind::UmMemcpyDtoH, occ.start, occ.end, run.bytes(), Some(id), "prefetch");
+                self.metrics.transfer_size.record(run.bytes());
+                self.trace.record_on(
+                    self.access_stream,
+                    TraceKind::UmMemcpyDtoH,
+                    occ.start,
+                    occ.end,
+                    run.bytes(),
+                    Some(id),
+                    "prefetch",
+                );
                 self.metrics.d2h_bytes += run.bytes();
                 self.metrics.d2h_time += occ.duration();
                 self.metrics.prefetched_pages_d2h += run.len() as u64;

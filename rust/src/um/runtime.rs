@@ -11,7 +11,7 @@ use crate::mem::{
 use crate::mem::page::{AdviseFlags, PageFlags};
 use crate::platform::PlatformSpec;
 use crate::sim::{BandwidthResource, Injector, SerialResource};
-use crate::trace::{Trace, TraceKind};
+use crate::trace::{Decision, ReasonCode, Rung, Trace, TraceKind};
 use crate::util::units::{transfer_ns, Bytes, Ns};
 
 use super::auto::AutoEngine;
@@ -137,6 +137,10 @@ pub struct UmRuntime {
     /// watchdog's bounded retry — or a plain demand fault, whichever
     /// touches them first.
     pub(super) failed_prefetches: std::collections::VecDeque<(AllocId, PageRange)>,
+    /// Whether the last chaos check saw a degraded link — provenance
+    /// emits one `chaos.link_degrade` decision per episode edge, not
+    /// one per access inside it. Pure trace bookkeeping.
+    chaos_link_degraded: bool,
 }
 
 impl UmRuntime {
@@ -167,6 +171,16 @@ impl UmRuntime {
             evict_deferred: std::collections::VecDeque::new(),
             inject: Injector::new(policy.inject),
             failed_prefetches: std::collections::VecDeque::new(),
+            chaos_link_degraded: false,
+        }
+    }
+
+    /// The watchdog rung decisions are stamped with — [`Rung::Full`]
+    /// when no engine is attached (plain variants never degrade).
+    pub(super) fn current_rung(&self) -> Rung {
+        match &self.auto {
+            Some(e) => e.watchdog.mode().rung(),
+            None => Rung::Full,
         }
     }
 
@@ -235,6 +249,7 @@ impl UmRuntime {
         let occ = self.dma_h2d.transfer(now, bytes, self.eff_at(TransferMode::Bulk, now));
         self.metrics.h2d_bytes += bytes;
         self.metrics.h2d_time += occ.duration();
+        self.metrics.transfer_size.record(bytes);
         self.trace.record(TraceKind::MemcpyHtoD, occ.start, occ.end, bytes, Some(dst), "cudaMemcpy");
         occ.end
     }
@@ -245,6 +260,7 @@ impl UmRuntime {
         let occ = self.dma_d2h.transfer(now, bytes, self.eff_at(TransferMode::Bulk, now));
         self.metrics.d2h_bytes += bytes;
         self.metrics.d2h_time += occ.duration();
+        self.metrics.transfer_size.record(bytes);
         self.trace.record(TraceKind::MemcpyDtoH, occ.start, occ.end, bytes, Some(src), "cudaMemcpy");
         occ.end
     }
@@ -375,7 +391,7 @@ impl UmRuntime {
         // point) rather than at re-residency so speculative
         // prefetch-back alone never biases the eviction-quality
         // comparison. Pure bookkeeping; never alters behaviour.
-        self.audit_note_demand(id, run);
+        self.audit_note_demand(id, run, now);
         match class.res {
             Residency::Device => {
                 self.touch_chunks(id, run, now);
@@ -471,16 +487,43 @@ impl UmRuntime {
     }
 
     /// Per-access chaos perturbations (ECC retirement, spurious fault
-    /// noise). Returns the access's possibly delayed start time.
+    /// noise). Returns the access's possibly delayed start time. Each
+    /// episode is why-annotated: a `chaos.*` decision per link-degrade
+    /// edge, retired chunk and noise burst (`docs/OBSERVABILITY.md`).
     fn chaos_on_access(&mut self, id: AllocId, now: Ns) -> Ns {
         let Some(inj) = &mut self.inject else { return now };
         let retire = inj.should_retire_chunk();
         let noise = inj.fault_noise();
+        let factor = inj.link_factor(now);
+        let rung = self.current_rung();
+        let stream = self.access_stream;
+        let degraded = factor < 1.0;
+        if degraded && !self.chaos_link_degraded {
+            self.trace.decision(Decision {
+                at: now,
+                stream,
+                alloc: None,
+                rung,
+                reason: ReasonCode::ChaosLinkDegrade,
+                bytes: 0,
+                aux: (factor * 100.0) as u64,
+            });
+        }
+        self.chaos_link_degraded = degraded;
         if retire {
             self.chaos_retire_chunk(now);
         }
         match noise {
             Some(pages) => {
+                self.trace.decision(Decision {
+                    at: now,
+                    stream,
+                    alloc: Some(id),
+                    rung,
+                    reason: ReasonCode::ChaosFaultNoise,
+                    bytes: u64::from(pages) * PAGE_SIZE,
+                    aux: u64::from(pages),
+                });
                 self.service_faults(id, pages, false, false, 1.0, now, "chaos-noise").0
             }
             None => now,
@@ -504,6 +547,15 @@ impl UmRuntime {
         }
         self.ensure_device_space(CHUNK_BYTES, now);
         self.dev.retire(CHUNK_BYTES);
+        self.trace.decision(Decision {
+            at: now,
+            stream: self.access_stream,
+            alloc: None,
+            rung: self.current_rung(),
+            reason: ReasonCode::ChaosEccRetire,
+            bytes: CHUNK_BYTES,
+            aux: 0,
+        });
     }
 
     /// Record a transiently failed bulk-prefetch piece (the
@@ -543,7 +595,6 @@ impl UmRuntime {
             };
             self.space.get_mut(id).pages.set_range(PageRange::new(0, n), st);
         }
-        let was_enabled = self.trace.is_enabled();
         self.advise_hints_active = false;
         if let Some(eng) = &mut self.auto {
             eng.reset();
@@ -555,12 +606,15 @@ impl UmRuntime {
         // (the zero-variance invariant in `driver.rs` depends on it).
         self.inject = Injector::new(self.policy.inject);
         self.failed_prefetches.clear();
+        self.chaos_link_degraded = false;
         self.dev.reset();
         self.dma_h2d.reset();
         self.dma_d2h.reset();
         self.fault_path.reset();
         self.metrics.reset();
-        self.trace = if was_enabled { Trace::enabled() } else { Trace::disabled() };
+        // Same mode and cap, empty buffers: a capped suite trace stays
+        // capped across repetitions.
+        self.trace = self.trace.fresh();
         // Re-pin cudaMalloc allocations.
         for i in 0..self.space.len() {
             let id = AllocId(i as u32);

@@ -16,13 +16,29 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
+/// Map an `UMBRA_LOG` value to a level. `None` for unknown values —
+/// the caller decides the fallback (and says so), rather than mapping
+/// typos like `UMBRA_LOG=inof` silently to the default.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
 fn init_from_env() -> u8 {
-    let lvl = match std::env::var("UMBRA_LOG").ok().as_deref() {
-        Some("error") => Level::Error,
-        Some("info") => Level::Info,
-        Some("debug") => Level::Debug,
-        Some("trace") => Level::Trace,
-        _ => Level::Warn,
+    let lvl = match std::env::var("UMBRA_LOG").ok() {
+        None => Level::Warn,
+        Some(v) => parse_level(&v).unwrap_or_else(|| {
+            eprintln!(
+                "umbra: unknown UMBRA_LOG value '{v}' (expected error|warn|info|debug|trace); using warn"
+            );
+            Level::Warn
+        }),
     } as u8;
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
@@ -79,6 +95,22 @@ mod tests {
         assert_eq!(level(), Level::Debug);
         set_level(Level::Warn);
         assert_eq!(level(), Level::Warn);
+    }
+
+    #[test]
+    fn parse_level_accepts_every_documented_value() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn), "warn is accepted explicitly");
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+    }
+
+    #[test]
+    fn parse_level_rejects_unknown_values() {
+        assert_eq!(parse_level("inof"), None, "typos are not silently warn");
+        assert_eq!(parse_level("WARN"), None, "values are case-sensitive, as documented");
+        assert_eq!(parse_level(""), None);
     }
 
     #[test]

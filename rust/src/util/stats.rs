@@ -95,6 +95,85 @@ pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     samples[rank]
 }
 
+/// Number of power-of-two buckets in a [`LogHist`].
+pub const LOG_HIST_BUCKETS: usize = 40;
+
+/// Streaming log2-bucketed histogram for latency/size distributions.
+///
+/// Bucket `b` covers `[2^b, 2^(b+1))` (0 and 1 both land in bucket 0;
+/// values at or above `2^39` saturate into the last bucket — far above
+/// any simulated latency in ns or transfer in bytes). Fixed size, O(1)
+/// `record`, no allocation: safe to embed in `UmMetrics` (it stays
+/// `Copy` + `PartialEq`) and feed unconditionally on the fault path,
+/// so distributions exist whether or not tracing is on — the
+/// zero-observer-effect oracle depends on that.
+///
+/// Percentiles are nearest-rank over bucket counts, reported as the
+/// bucket's geometric midpoint (`1.5 * 2^b`) — exact to within the
+/// bucket's factor-of-two width, which is all a log-scale latency
+/// distribution claims anyway.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogHist {
+    buckets: [u64; LOG_HIST_BUCKETS],
+    n: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> LogHist {
+        LogHist { buckets: [0; LOG_HIST_BUCKETS], n: 0 }
+    }
+}
+
+impl LogHist {
+    /// Record one sample (a latency in ns, a size in bytes, ...).
+    pub fn record(&mut self, v: u64) {
+        let b = if v < 2 { 0 } else { (63 - v.leading_zeros() as usize).min(LOG_HIST_BUCKETS - 1) };
+        self.buckets[b] += 1;
+        self.n += 1;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Raw bucket counts (bucket `b` covers `[2^b, 2^(b+1))`).
+    pub fn buckets(&self) -> &[u64; LOG_HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Nearest-rank percentile (`p` in [0,100]); 0 with no samples.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                // Geometric midpoint of [2^b, 2^(b+1)): 1.5 * 2^b
+                // (bucket 0 reports 1).
+                return if b == 0 { 1 } else { (1u64 << b) + (1u64 << (b - 1)) };
+            }
+        }
+        unreachable!("cumulative count covers every recorded sample")
+    }
+
+    /// Median (bucketed).
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+    /// 90th percentile (bucketed).
+    pub fn p90(&self) -> u64 {
+        self.percentile(90.0)
+    }
+    /// 99th percentile (bucketed).
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+}
+
 /// Geometric mean of positive values (used for cross-app speedup roll-ups).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -159,5 +238,36 @@ mod tests {
     fn rsd_zero_mean() {
         let s = Summary::of(&[Ns(0), Ns(0)]);
         assert_eq!(s.rsd(), 0.0);
+    }
+
+    #[test]
+    fn log_hist_buckets_and_percentiles() {
+        let mut h = LogHist::default();
+        assert_eq!(h.p50(), 0, "empty histogram reports 0");
+        // 90 samples in [1024, 2048) and 10 in [65536, 131072).
+        for _ in 0..90 {
+            h.record(1500);
+        }
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.buckets()[10], 90);
+        assert_eq!(h.buckets()[16], 10);
+        assert_eq!(h.p50(), 1024 + 512, "bucket-10 geometric midpoint");
+        assert_eq!(h.p90(), 1024 + 512, "rank 90 still in the low bucket");
+        assert_eq!(h.p99(), 65536 + 32768, "tail lands in the high bucket");
+    }
+
+    #[test]
+    fn log_hist_edge_values() {
+        let mut h = LogHist::default();
+        h.record(0);
+        h.record(1);
+        assert_eq!(h.buckets()[0], 2, "0 and 1 share bucket 0");
+        assert_eq!(h.p50(), 1);
+        h.record(u64::MAX);
+        assert_eq!(h.buckets()[LOG_HIST_BUCKETS - 1], 1, "huge values saturate");
+        assert_eq!(h.p99(), (1u64 << 39) + (1u64 << 38));
     }
 }

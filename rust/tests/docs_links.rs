@@ -136,9 +136,13 @@ fn relative_links_and_anchors_resolve() {
 #[test]
 fn required_documents_exist_and_are_linked() {
     let root = repo_root();
-    for doc in
-        ["docs/ARCHITECTURE.md", "docs/PREDICTOR.md", "docs/EVICTION.md", "docs/ROBUSTNESS.md"]
-    {
+    for doc in [
+        "docs/ARCHITECTURE.md",
+        "docs/PREDICTOR.md",
+        "docs/EVICTION.md",
+        "docs/ROBUSTNESS.md",
+        "docs/OBSERVABILITY.md",
+    ] {
         assert!(root.join(doc).exists(), "{doc} missing");
     }
     let readme = fs::read_to_string(root.join("README.md")).unwrap();
@@ -146,8 +150,9 @@ fn required_documents_exist_and_are_linked() {
         readme.contains("docs/ARCHITECTURE.md")
             && readme.contains("docs/PREDICTOR.md")
             && readme.contains("docs/EVICTION.md")
-            && readme.contains("docs/ROBUSTNESS.md"),
-        "README must link the architecture, predictor, eviction and robustness docs"
+            && readme.contains("docs/ROBUSTNESS.md")
+            && readme.contains("docs/OBSERVABILITY.md"),
+        "README must link the architecture, predictor, eviction, robustness and observability docs"
     );
     // The eviction doc's headline sections are link targets from the
     // README and ARCHITECTURE: pin their anchors.
@@ -171,6 +176,22 @@ fn required_documents_exist_and_are_linked() {
         assert!(
             anchors(&robustness).iter().any(|a| a == anchor || a.starts_with(anchor)),
             "docs/ROBUSTNESS.md lost the '{anchor}' section"
+        );
+    }
+    // And the observability doc: the taxonomy, format, export and
+    // percentile sections are linked from the README, ARCHITECTURE and
+    // the trace-layer rustdoc.
+    let observability = fs::read_to_string(root.join("docs/OBSERVABILITY.md")).unwrap();
+    let required = [
+        "event-taxonomy-and-reason-codes",
+        "the-umt-format",
+        "chrome-trace-export",
+        "latency-percentiles",
+    ];
+    for anchor in required {
+        assert!(
+            anchors(&observability).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/OBSERVABILITY.md lost the '{anchor}' section"
         );
     }
 }

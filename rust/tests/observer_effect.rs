@@ -1,0 +1,91 @@
+//! Zero-observer-effect oracle (docs/OBSERVABILITY.md): the trace is a
+//! pure observer. Running the same cell with tracing disabled, enabled
+//! unbounded, or enabled with a tiny storage cap must produce
+//! byte-identical simulated times (`Ns`) and `UmMetrics` — including
+//! the percentile histograms, which are fed unconditionally and never
+//! through the trace gate.
+
+use umbra::apps::{AppId, RunOpts, RunResult, Variant};
+use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::util::units::MIB;
+
+/// The three observation modes under test.
+fn modes() -> [(&'static str, RunOpts); 3] {
+    [
+        ("disabled", RunOpts { trace: false, ..Default::default() }),
+        ("enabled", RunOpts { trace: true, ..Default::default() }),
+        ("capped", RunOpts { trace: true, trace_cap: Some(8), ..Default::default() }),
+    ]
+}
+
+/// Everything a run reports that must not depend on observation:
+/// simulated times and the full metrics block. (The breakdown and the
+/// trace itself are observation products and are excluded by design.)
+fn observables(r: &RunResult) -> (umbra::util::units::Ns, Vec<umbra::util::units::Ns>, umbra::util::units::Ns, umbra::um::UmMetrics) {
+    (r.kernel_time, r.kernel_times.clone(), r.wall_time, r.metrics.clone())
+}
+
+fn assert_identical(plat: &PlatformSpec, footprint: u64, label: &str) {
+    for variant in Variant::ALL_WITH_AUTO {
+        let mut baseline = None;
+        for (mode, opts) in modes() {
+            let r = AppId::Bs.build(footprint).run_with(plat, variant, &opts);
+            let got = observables(&r);
+            match &baseline {
+                None => baseline = Some((got, mode)),
+                Some((want, base_mode)) => {
+                    assert_eq!(
+                        &got, want,
+                        "{label}/{}: trace mode '{mode}' diverged from '{base_mode}'",
+                        variant.name()
+                    );
+                }
+            }
+            // The modes must also deliver what they promise.
+            match mode {
+                "disabled" => assert!(r.trace.is_none(), "{label}: no trace when disabled"),
+                _ => assert!(r.trace.is_some(), "{label}: trace present when enabled"),
+            }
+            if mode == "capped" {
+                let t = r.trace.as_ref().unwrap();
+                assert!(t.len() <= 8, "{label}: cap bounds storage");
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_changes_nothing_in_memory() {
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let plat = plat_id.spec();
+        assert_identical(&plat, 48 * MIB, &format!("{}/in-memory", plat_id.name()));
+    }
+}
+
+#[test]
+fn tracing_changes_nothing_oversubscribed() {
+    // Shrink the GPU so eviction, writeback and (on UM Auto) the
+    // watchdog all engage — the paths with the densest instrumentation.
+    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        let mut plat = plat_id.spec();
+        plat.gpu.mem_capacity = 128 * MIB;
+        plat.gpu.reserved = 0;
+        let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+        assert_identical(&plat, footprint, &format!("{}/oversubscribed", plat_id.name()));
+    }
+}
+
+#[test]
+fn tracing_changes_nothing_under_injection() {
+    // Chaos decisions (chaos.*) ride the same gate: an armed scenario
+    // with tracing on/off/capped still replays byte-identically.
+    let mut plat = PlatformId::IntelPascal.spec();
+    plat.um.inject = umbra::sim::InjectConfig {
+        scenario: umbra::sim::ChaosScenario::Storm,
+        ..Default::default()
+    };
+    plat.gpu.mem_capacity = 128 * MIB;
+    plat.gpu.reserved = 0;
+    let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+    assert_identical(&plat, footprint, "Intel-Pascal/storm");
+}
