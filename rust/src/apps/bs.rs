@@ -81,15 +81,15 @@ impl UmApp for BlackScholes {
         if variant == Variant::Explicit {
             // Host staging + device arrays + cudaMemcpy.
             let h_in: Vec<AllocId> =
-                (0..3).map(|i| ctx.um.malloc_host(["h_S", "h_X", "h_T"][i], ab)).collect();
+                (0..3).map(|i| ctx.malloc_host(["h_S", "h_X", "h_T"][i], ab)).collect();
             let d_in = [
-                ctx.um.malloc_device("d_S", ab),
-                ctx.um.malloc_device("d_X", ab),
-                ctx.um.malloc_device("d_T", ab),
+                ctx.malloc_device("d_S", ab),
+                ctx.malloc_device("d_X", ab),
+                ctx.malloc_device("d_T", ab),
             ];
-            let d_out = [ctx.um.malloc_device("d_Call", ab), ctx.um.malloc_device("d_Put", ab)];
+            let d_out = [ctx.malloc_device("d_Call", ab), ctx.malloc_device("d_Put", ab)];
             let h_out: Vec<AllocId> =
-                (0..2).map(|i| ctx.um.malloc_host(["h_Call", "h_Put"][i], ab)).collect();
+                (0..2).map(|i| ctx.malloc_host(["h_Call", "h_Put"][i], ab)).collect();
             for &h in &h_in {
                 let full = ctx.um.space.get(h).full();
                 ctx.host_write(h, full);
@@ -113,11 +113,11 @@ impl UmApp for BlackScholes {
 
         // Managed variants.
         let inputs = [
-            ctx.um.malloc_managed("StockPrice", ab),
-            ctx.um.malloc_managed("OptionStrike", ab),
-            ctx.um.malloc_managed("OptionYears", ab),
+            ctx.malloc_managed("StockPrice", ab),
+            ctx.malloc_managed("OptionStrike", ab),
+            ctx.malloc_managed("OptionYears", ab),
         ];
-        let outputs = [ctx.um.malloc_managed("CallResult", ab), ctx.um.malloc_managed("PutResult", ab)];
+        let outputs = [ctx.malloc_managed("CallResult", ab), ctx.malloc_managed("PutResult", ab)];
 
         // Host initialization of the inputs.
         for &id in &inputs {

@@ -154,14 +154,14 @@ impl ConjugateGradient {
         trace: bool,
     ) -> RunResult {
         let mut ctx = AppCtx::new(plat, Variant::UmAdvise, trace);
-        let vals = ctx.um.malloc_managed("vals", self.vals_bytes());
-        let cols = ctx.um.malloc_managed("cols", self.cols_bytes());
-        let rowptr = ctx.um.malloc_managed("rowptr", self.rowptr_bytes());
-        let x = ctx.um.malloc_managed("x", self.vec_bytes());
-        let b = ctx.um.malloc_managed("b", self.vec_bytes());
-        let p = ctx.um.malloc_managed("p", self.vec_bytes());
-        let r = ctx.um.malloc_managed("r", self.vec_bytes());
-        let ap = ctx.um.malloc_managed("Ap", self.vec_bytes());
+        let vals = ctx.malloc_managed("vals", self.vals_bytes());
+        let cols = ctx.malloc_managed("cols", self.cols_bytes());
+        let rowptr = ctx.malloc_managed("rowptr", self.rowptr_bytes());
+        let x = ctx.malloc_managed("x", self.vec_bytes());
+        let b = ctx.malloc_managed("b", self.vec_bytes());
+        let p = ctx.malloc_managed("p", self.vec_bytes());
+        let r = ctx.malloc_managed("r", self.vec_bytes());
+        let ap = ctx.malloc_managed("Ap", self.vec_bytes());
         let matrix = [vals, cols, rowptr];
         let mat_and_b = [vals, cols, rowptr, b];
 
@@ -231,16 +231,17 @@ impl UmApp for ConjugateGradient {
         let mut ctx = AppCtx::with_opts(plat, variant, opts);
 
         if variant == Variant::Explicit {
-            let h_mat = ctx.um.malloc_host("h_A", self.vals_bytes() + self.cols_bytes() + self.rowptr_bytes());
-            let d_vals = ctx.um.malloc_device("d_vals", self.vals_bytes());
-            let d_cols = ctx.um.malloc_device("d_cols", self.cols_bytes());
-            let d_rowptr = ctx.um.malloc_device("d_rowptr", self.rowptr_bytes());
-            let d_x = ctx.um.malloc_device("d_x", self.vec_bytes());
-            let d_b = ctx.um.malloc_device("d_b", self.vec_bytes());
-            let d_p = ctx.um.malloc_device("d_p", self.vec_bytes());
-            let d_r = ctx.um.malloc_device("d_r", self.vec_bytes());
-            let d_ap = ctx.um.malloc_device("d_Ap", self.vec_bytes());
-            let h_x = ctx.um.malloc_host("h_x", self.vec_bytes());
+            let h_mat = ctx
+                .malloc_host("h_A", self.vals_bytes() + self.cols_bytes() + self.rowptr_bytes());
+            let d_vals = ctx.malloc_device("d_vals", self.vals_bytes());
+            let d_cols = ctx.malloc_device("d_cols", self.cols_bytes());
+            let d_rowptr = ctx.malloc_device("d_rowptr", self.rowptr_bytes());
+            let d_x = ctx.malloc_device("d_x", self.vec_bytes());
+            let d_b = ctx.malloc_device("d_b", self.vec_bytes());
+            let d_p = ctx.malloc_device("d_p", self.vec_bytes());
+            let d_r = ctx.malloc_device("d_r", self.vec_bytes());
+            let d_ap = ctx.malloc_device("d_Ap", self.vec_bytes());
+            let h_x = ctx.malloc_host("h_x", self.vec_bytes());
             let full_h = ctx.um.space.get(h_mat).full();
             ctx.host_write(h_mat, full_h);
             for d in [d_vals, d_cols, d_rowptr, d_b] {
@@ -256,14 +257,14 @@ impl UmApp for ConjugateGradient {
             return ctx.finish("CG");
         }
 
-        let vals = ctx.um.malloc_managed("vals", self.vals_bytes());
-        let cols = ctx.um.malloc_managed("cols", self.cols_bytes());
-        let rowptr = ctx.um.malloc_managed("rowptr", self.rowptr_bytes());
-        let x = ctx.um.malloc_managed("x", self.vec_bytes());
-        let b = ctx.um.malloc_managed("b", self.vec_bytes());
-        let p = ctx.um.malloc_managed("p", self.vec_bytes());
-        let r = ctx.um.malloc_managed("r", self.vec_bytes());
-        let ap = ctx.um.malloc_managed("Ap", self.vec_bytes());
+        let vals = ctx.malloc_managed("vals", self.vals_bytes());
+        let cols = ctx.malloc_managed("cols", self.cols_bytes());
+        let rowptr = ctx.malloc_managed("rowptr", self.rowptr_bytes());
+        let x = ctx.malloc_managed("x", self.vec_bytes());
+        let b = ctx.malloc_managed("b", self.vec_bytes());
+        let p = ctx.malloc_managed("p", self.vec_bytes());
+        let r = ctx.malloc_managed("r", self.vec_bytes());
+        let ap = ctx.malloc_managed("Ap", self.vec_bytes());
 
         if variant.advises() {
             // §IV-A: preferred location of A and b on the GPU.

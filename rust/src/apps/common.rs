@@ -5,6 +5,7 @@ use crate::gpu::{KernelExec, KernelSpec};
 use crate::gpu::stream::{StreamId, StreamSet};
 use crate::mem::AllocId;
 use crate::platform::{calibration, PlatformId, PlatformSpec};
+use crate::trace::replay::{ReplayAccess, ReplayOp, ReplayPhase, ReplayProgram};
 use crate::trace::{Breakdown, Trace};
 use crate::um::{Loc, UmMetrics, UmRuntime};
 use crate::util::units::{Bytes, Ns};
@@ -92,6 +93,23 @@ impl Variant {
     pub fn auto(self) -> bool {
         self == Variant::UmAuto
     }
+
+    /// Stable wire code (`.umt` replay section); index into
+    /// [`Variant::ALL_WITH_AUTO`].
+    pub fn code(self) -> u8 {
+        match self {
+            Variant::Explicit => 0,
+            Variant::Um => 1,
+            Variant::UmAdvise => 2,
+            Variant::UmPrefetch => 3,
+            Variant::UmBoth => 4,
+            Variant::UmAuto => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Variant> {
+        Variant::ALL_WITH_AUTO.get(c as usize).copied()
+    }
 }
 
 /// Problem-size regime (§III-B: ~80% and ~150% of GPU memory).
@@ -149,11 +167,15 @@ pub struct RunOpts {
     /// (`--streams`) that exercises the `(stream, allocation)`-keyed
     /// `um::auto` engine.
     pub streams: u32,
+    /// Record the app's verb sequence as a [`ReplayProgram`] (the
+    /// `.umt` v2 replay section; `docs/REPLAY.md`). Recording is pure
+    /// bookkeeping — it never changes the run's timing or metrics.
+    pub record: bool,
 }
 
 impl Default for RunOpts {
     fn default() -> Self {
-        RunOpts { trace: false, trace_cap: None, streams: 1 }
+        RunOpts { trace: false, trace_cap: None, streams: 1, record: false }
     }
 }
 
@@ -180,6 +202,8 @@ pub struct RunResult {
     pub breakdown: Breakdown,
     /// The full event log when tracing was enabled.
     pub trace: Option<Trace>,
+    /// The recorded verb program when [`RunOpts::record`] was set.
+    pub replay: Option<ReplayProgram>,
 }
 
 /// Run context: owns the UM runtime, the stream clocks and the
@@ -201,6 +225,8 @@ pub struct AppCtx {
     /// background prefetch (§III-A3), so the wait for in-flight data is
     /// part of the measured kernel execution time.
     pending_gate: Option<Ns>,
+    /// Verb capture (`RunOpts::record`); `None` when not recording.
+    recorder: Option<ReplayProgram>,
 }
 
 impl AppCtx {
@@ -230,6 +256,17 @@ impl AppCtx {
         for _ in 1..opts.streams.max(1) {
             compute.push(streams.create());
         }
+        let recorder = opts.record.then(|| ReplayProgram {
+            app: String::new(),
+            platform: PlatformId::parse(plat.name)
+                .expect("verb capture requires one of the three spec platforms"),
+            variant,
+            streams: opts.streams.max(1),
+            predictor: plat.um.auto_predictor,
+            evictor: plat.um.evictor,
+            inject: plat.um.inject,
+            ops: Vec::new(),
+        });
         AppCtx {
             um,
             streams,
@@ -239,7 +276,40 @@ impl AppCtx {
             kernel_time: Ns::ZERO,
             kernel_times: Vec::new(),
             pending_gate: None,
+            recorder,
         }
+    }
+
+    fn record(&mut self, op: ReplayOp) {
+        if let Some(p) = self.recorder.as_mut() {
+            p.ops.push(op);
+        }
+    }
+
+    /// `cudaMallocManaged`. Apps allocate through these wrappers (not
+    /// `ctx.um` directly) so verb capture sees every allocation in
+    /// order — replays must re-create identical [`AllocId`]s.
+    pub fn malloc_managed(&mut self, name: &str, size: Bytes) -> AllocId {
+        if self.recorder.is_some() {
+            self.record(ReplayOp::MallocManaged { name: name.into(), size });
+        }
+        self.um.malloc_managed(name, size)
+    }
+
+    /// `cudaMalloc` (Explicit variant).
+    pub fn malloc_device(&mut self, name: &str, size: Bytes) -> AllocId {
+        if self.recorder.is_some() {
+            self.record(ReplayOp::MallocDevice { name: name.into(), size });
+        }
+        self.um.malloc_device(name, size)
+    }
+
+    /// Pinned host staging buffer (Explicit variant).
+    pub fn malloc_host(&mut self, name: &str, size: Bytes) -> AllocId {
+        if self.recorder.is_some() {
+            self.record(ReplayOp::MallocHost { name: name.into(), size });
+        }
+        self.um.malloc_host(name, size)
     }
 
     pub fn now(&self) -> Ns {
@@ -248,18 +318,21 @@ impl AppCtx {
 
     /// Host-side op on the default stream timeline.
     pub fn host_write(&mut self, id: AllocId, range: crate::mem::PageRange) {
+        self.record(ReplayOp::HostWrite { alloc: id, range });
         let t = self.streams.now(StreamId::DEFAULT);
         let out = self.um.host_access(id, range, true, t);
         self.streams.advance_to(StreamId::DEFAULT, out.done);
     }
 
     pub fn host_read(&mut self, id: AllocId, range: crate::mem::PageRange) {
+        self.record(ReplayOp::HostRead { alloc: id, range });
         let t = self.streams.now(StreamId::DEFAULT);
         let out = self.um.host_access(id, range, false, t);
         self.streams.advance_to(StreamId::DEFAULT, out.done);
     }
 
     pub fn advise(&mut self, id: AllocId, advise: crate::um::Advise) {
+        self.record(ReplayOp::Advise { alloc: id, advise });
         let range = self.um.space.get(id).full();
         let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.mem_advise(id, range, advise, t);
@@ -271,6 +344,7 @@ impl AppCtx {
     /// in the default stream). The next [`AppCtx::launch`] waits for
     /// these transfers *inside* its measured window.
     pub fn prefetch_background(&mut self, id: AllocId, dst: Loc) {
+        self.record(ReplayOp::PrefetchBackground { alloc: id, dst });
         let range = self.um.space.get(id).full();
         let t = self.streams.now(StreamId::BACKGROUND);
         let done = self.um.prefetch_async_on(StreamId::BACKGROUND, id, range, dst, t);
@@ -280,6 +354,7 @@ impl AppCtx {
 
     /// Prefetch on the default stream (results back to the host).
     pub fn prefetch_default(&mut self, id: AllocId, dst: Loc) {
+        self.record(ReplayOp::PrefetchDefault { alloc: id, dst });
         let range = self.um.space.get(id).full();
         let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.prefetch_async_on(StreamId::DEFAULT, id, range, dst, t);
@@ -288,6 +363,7 @@ impl AppCtx {
 
     /// Explicit `cudaMemcpy`s (Explicit variant only).
     pub fn memcpy_h2d(&mut self, dst: AllocId) {
+        self.record(ReplayOp::MemcpyH2D { alloc: dst });
         let bytes = self.um.space.get(dst).size;
         let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.memcpy_h2d(dst, bytes, t);
@@ -295,6 +371,7 @@ impl AppCtx {
     }
 
     pub fn memcpy_d2h(&mut self, src: AllocId) {
+        self.record(ReplayOp::MemcpyD2H { alloc: src });
         let bytes = self.um.space.get(src).size;
         let t = self.streams.now(StreamId::DEFAULT);
         let done = self.um.memcpy_d2h(src, bytes, t);
@@ -308,6 +385,26 @@ impl AppCtx {
     /// arrived — exactly the concurrent-launch pattern of §III-A3,
     /// where the wait shows up in the GPU kernel execution time.
     pub fn launch(&mut self, spec: &KernelSpec) -> Ns {
+        if self.recorder.is_some() {
+            let phases = spec
+                .phases
+                .iter()
+                .map(|p| ReplayPhase {
+                    flops_bits: p.flops.to_bits(),
+                    accesses: p
+                        .accesses
+                        .iter()
+                        .map(|a| ReplayAccess {
+                            alloc: a.alloc,
+                            range: a.range,
+                            kind: a.kind,
+                            passes_bits: a.dram_passes.to_bits(),
+                        })
+                        .collect(),
+                })
+                .collect();
+            self.record(ReplayOp::Launch { phases });
+        }
         let stream = self.compute[self.next_launch % self.compute.len()];
         self.next_launch += 1;
         let start = self.streams.now(stream);
@@ -330,6 +427,7 @@ impl AppCtx {
 
     /// `cudaDeviceSynchronize`.
     pub fn device_sync(&mut self) -> Ns {
+        self.record(ReplayOp::DeviceSync);
         self.streams.device_sync()
     }
 
@@ -345,6 +443,10 @@ impl AppCtx {
         } else {
             None
         };
+        let replay = self.recorder.take().map(|mut p| {
+            p.app = app.to_string();
+            p
+        });
         RunResult {
             app,
             variant: self.variant,
@@ -354,6 +456,7 @@ impl AppCtx {
             metrics: self.um.metrics,
             breakdown,
             trace,
+            replay,
         }
     }
 }
@@ -574,6 +677,47 @@ mod tests {
             ctx.um.metrics.gpu_fault_groups,
             "aggregate counters stay exact past the cap"
         );
+    }
+
+    #[test]
+    fn record_captures_the_verb_sequence() {
+        use crate::gpu::{Access, KernelSpec, Phase};
+        use crate::util::units::MIB;
+        let mut ctx = AppCtx::with_opts(
+            &intel_pascal(),
+            Variant::UmAuto,
+            &RunOpts { record: true, ..Default::default() },
+        );
+        let id = ctx.malloc_managed("x", 4 * MIB);
+        let full = ctx.um.space.get(id).full();
+        ctx.host_write(id, full);
+        let spec = KernelSpec {
+            name: "k",
+            phases: vec![Phase { name: "p", accesses: vec![Access::read(id, full)], flops: 1.0 }],
+        };
+        ctx.launch(&spec);
+        let res = ctx.finish("BS");
+        let prog = res.replay.expect("recorded program");
+        assert_eq!(prog.app, "BS");
+        assert_eq!(prog.platform, PlatformId::IntelPascal);
+        assert_eq!(prog.variant, Variant::UmAuto);
+        assert_eq!(prog.launches(), 1);
+        prog.validate().expect("capture is structurally valid");
+        assert!(matches!(prog.ops[0], ReplayOp::MallocManaged { size, .. } if size == 4 * MIB));
+        assert!(matches!(prog.ops[1], ReplayOp::HostWrite { .. }));
+        assert!(matches!(prog.ops[2], ReplayOp::Launch { .. }));
+        // An unrecorded run carries no program.
+        let res = AppCtx::new(&intel_pascal(), Variant::Um, false).finish("BS");
+        assert!(res.replay.is_none());
+    }
+
+    #[test]
+    fn variant_wire_codes_are_all_with_auto_indices() {
+        for (i, v) in Variant::ALL_WITH_AUTO.into_iter().enumerate() {
+            assert_eq!(v.code() as usize, i);
+            assert_eq!(Variant::from_code(v.code()), Some(v));
+        }
+        assert_eq!(Variant::from_code(6), None);
     }
 
     #[test]

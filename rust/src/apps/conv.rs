@@ -143,13 +143,13 @@ impl UmApp for FftConv {
         let name: &'static str = self.plan.name();
 
         if variant == Variant::Explicit {
-            let h_in = ctx.um.malloc_host("h_input", self.sizes[0]);
-            let h_k = ctx.um.malloc_host("h_kernel", self.sizes[1]);
-            let d_in = ctx.um.malloc_device("d_input", self.sizes[0]);
-            let d_k = ctx.um.malloc_device("d_kernel", self.sizes[1]);
-            let d_wd = ctx.um.malloc_device("d_ws_data", self.sizes[2]);
-            let d_wk = ctx.um.malloc_device("d_ws_kernel", self.sizes[3]);
-            let h_out = ctx.um.malloc_host("h_out", self.sizes[2]);
+            let h_in = ctx.malloc_host("h_input", self.sizes[0]);
+            let h_k = ctx.malloc_host("h_kernel", self.sizes[1]);
+            let d_in = ctx.malloc_device("d_input", self.sizes[0]);
+            let d_k = ctx.malloc_device("d_kernel", self.sizes[1]);
+            let d_wd = ctx.malloc_device("d_ws_data", self.sizes[2]);
+            let d_wk = ctx.malloc_device("d_ws_kernel", self.sizes[3]);
+            let h_out = ctx.malloc_host("h_out", self.sizes[2]);
             for h in [h_in, h_k] {
                 let full = ctx.um.space.get(h).full();
                 ctx.host_write(h, full);
@@ -164,10 +164,10 @@ impl UmApp for FftConv {
             return ctx.finish(name);
         }
 
-        let input = ctx.um.malloc_managed("input", self.sizes[0]);
-        let kernel = ctx.um.malloc_managed("kernel", self.sizes[1]);
-        let ws_d = ctx.um.malloc_managed("ws_data", self.sizes[2]);
-        let ws_k = ctx.um.malloc_managed("ws_kernel", self.sizes[3]);
+        let input = ctx.malloc_managed("input", self.sizes[0]);
+        let kernel = ctx.malloc_managed("kernel", self.sizes[1]);
+        let ws_d = ctx.malloc_managed("ws_data", self.sizes[2]);
+        let ws_k = ctx.malloc_managed("ws_kernel", self.sizes[3]);
 
         if variant.advises() {
             // CPU-initialized inputs wanted on the GPU.

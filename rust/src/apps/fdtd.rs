@@ -82,10 +82,10 @@ impl UmApp for Fdtd3d {
         let ab = self.array_bytes();
 
         if variant == Variant::Explicit {
-            let h_data = ctx.um.malloc_host("h_data", ab);
-            let d_a = ctx.um.malloc_device("d_A", ab);
-            let d_b = ctx.um.malloc_device("d_B", ab);
-            let d_c = ctx.um.malloc_device("d_coeff", COEFF_BYTES);
+            let h_data = ctx.malloc_host("h_data", ab);
+            let d_a = ctx.malloc_device("d_A", ab);
+            let d_b = ctx.malloc_device("d_B", ab);
+            let d_c = ctx.malloc_device("d_coeff", COEFF_BYTES);
             let full_h = ctx.um.space.get(h_data).full();
             ctx.host_write(h_data, full_h);
             ctx.memcpy_h2d(d_a);
@@ -103,9 +103,9 @@ impl UmApp for Fdtd3d {
             return ctx.finish("FDTD3d");
         }
 
-        let a = ctx.um.malloc_managed("A", ab);
-        let b = ctx.um.malloc_managed("B", ab);
-        let coeff = ctx.um.malloc_managed("coeff", COEFF_BYTES);
+        let a = ctx.malloc_managed("A", ab);
+        let b = ctx.malloc_managed("B", ab);
+        let coeff = ctx.malloc_managed("coeff", COEFF_BYTES);
 
         if variant.advises() {
             // §IV-B: one array prefers GPU + AccessedBy CPU; nothing on

@@ -121,13 +121,13 @@ impl UmApp for Graph500 {
         let mut rng = Rng::new(self.seed);
 
         if variant == Variant::Explicit {
-            let h_graph = ctx.um.malloc_host("h_graph", self.rowptr_bytes() + self.cols_bytes());
-            let rowptr = ctx.um.malloc_device("d_rowptr", self.rowptr_bytes());
-            let cols = ctx.um.malloc_device("d_cols", self.cols_bytes());
-            let levels = ctx.um.malloc_device("d_levels", self.vec_bytes());
-            let front = ctx.um.malloc_device("d_front", self.vec_bytes());
-            let next = ctx.um.malloc_device("d_next", self.vec_bytes());
-            let h_levels = ctx.um.malloc_host("h_levels", self.vec_bytes());
+            let h_graph = ctx.malloc_host("h_graph", self.rowptr_bytes() + self.cols_bytes());
+            let rowptr = ctx.malloc_device("d_rowptr", self.rowptr_bytes());
+            let cols = ctx.malloc_device("d_cols", self.cols_bytes());
+            let levels = ctx.malloc_device("d_levels", self.vec_bytes());
+            let front = ctx.malloc_device("d_front", self.vec_bytes());
+            let next = ctx.malloc_device("d_next", self.vec_bytes());
+            let h_levels = ctx.malloc_host("h_levels", self.vec_bytes());
             let full_h = ctx.um.space.get(h_graph).full();
             ctx.host_write(h_graph, full_h);
             ctx.memcpy_h2d(rowptr);
@@ -141,11 +141,11 @@ impl UmApp for Graph500 {
             return ctx.finish("Graph500");
         }
 
-        let rowptr = ctx.um.malloc_managed("rowptr", self.rowptr_bytes());
-        let cols = ctx.um.malloc_managed("cols", self.cols_bytes());
-        let levels = ctx.um.malloc_managed("levels", self.vec_bytes());
-        let front = ctx.um.malloc_managed("front", self.vec_bytes());
-        let next = ctx.um.malloc_managed("next", self.vec_bytes());
+        let rowptr = ctx.malloc_managed("rowptr", self.rowptr_bytes());
+        let cols = ctx.malloc_managed("cols", self.cols_bytes());
+        let levels = ctx.malloc_managed("levels", self.vec_bytes());
+        let front = ctx.malloc_managed("front", self.vec_bytes());
+        let next = ctx.malloc_managed("next", self.vec_bytes());
 
         if variant.advises() {
             // The graph structure is constant and GPU-resident.

@@ -73,12 +73,12 @@ impl UmApp for MatMul {
         let mb = self.mat_bytes();
 
         if variant == Variant::Explicit {
-            let h_a = ctx.um.malloc_host("h_A", mb);
-            let h_b = ctx.um.malloc_host("h_B", mb);
-            let h_c = ctx.um.malloc_host("h_C", mb);
-            let d_a = ctx.um.malloc_device("d_A", mb);
-            let d_b = ctx.um.malloc_device("d_B", mb);
-            let d_c = ctx.um.malloc_device("d_C", mb);
+            let h_a = ctx.malloc_host("h_A", mb);
+            let h_b = ctx.malloc_host("h_B", mb);
+            let h_c = ctx.malloc_host("h_C", mb);
+            let d_a = ctx.malloc_device("d_A", mb);
+            let d_b = ctx.malloc_device("d_B", mb);
+            let d_c = ctx.malloc_device("d_C", mb);
             for h in [h_a, h_b] {
                 let full = ctx.um.space.get(h).full();
                 ctx.host_write(h, full);
@@ -93,9 +93,9 @@ impl UmApp for MatMul {
             return ctx.finish("cuBLAS");
         }
 
-        let a = ctx.um.malloc_managed("A", mb);
-        let b = ctx.um.malloc_managed("B", mb);
-        let c = ctx.um.malloc_managed("C", mb);
+        let a = ctx.malloc_managed("A", mb);
+        let b = ctx.malloc_managed("B", mb);
+        let c = ctx.malloc_managed("C", mb);
 
         if variant.advises() {
             // Placement advises go in *before* initialization so the P9

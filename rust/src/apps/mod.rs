@@ -30,5 +30,7 @@ pub mod cg;
 pub mod graph500;
 pub mod conv;
 pub mod fdtd;
+pub mod replay;
 
 pub use common::{AppCtx, AppId, Regime, RunOpts, RunResult, UmApp, Variant};
+pub use replay::{replay, ReplayConfig};

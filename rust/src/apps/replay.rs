@@ -1,0 +1,177 @@
+//! Replay executor: re-feed a captured [`ReplayProgram`] through the
+//! live UM stack (`umbra replay`).
+//!
+//! A program is the exact verb sequence of an [`AppCtx`]-hosted run
+//! with no absolute timestamps, so replaying it re-derives all timing
+//! from the simulator. On the capture's own platform/knobs the result
+//! is byte-identical to the originating run (the simulator is
+//! deterministic); with overridden platform or policy knobs it answers
+//! "what would this exact workload have done under X" — the
+//! decision-quality regression question the committed corpus exists
+//! for. See `docs/REPLAY.md`.
+
+use crate::apps::common::{AppCtx, RunOpts, RunResult, Variant};
+use crate::gpu::{Access, KernelSpec, Phase};
+use crate::platform::PlatformId;
+use crate::sim::InjectConfig;
+use crate::trace::replay::{ReplayOp, ReplayProgram};
+use crate::um::{AutoConfig, EvictorKind, PredictorKind};
+
+/// The knobs a replay runs under. [`ReplayConfig::from_program`] takes
+/// everything from the capture header (faithful replay); the CLI and
+/// the regression tests override fields for cross-platform /
+/// cross-policy studies.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    pub platform: PlatformId,
+    pub variant: Variant,
+    pub predictor: PredictorKind,
+    pub evictor: EvictorKind,
+    pub inject: InjectConfig,
+    pub streams: u32,
+    /// Full `um::auto` engine-knob override (perturbation studies;
+    /// `None` = the default [`AutoConfig`] with `predictor` applied).
+    pub auto_cfg: Option<AutoConfig>,
+}
+
+impl ReplayConfig {
+    /// Faithful-replay configuration: every knob from the capture header.
+    pub fn from_program(p: &ReplayProgram) -> ReplayConfig {
+        ReplayConfig {
+            platform: p.platform,
+            variant: p.variant,
+            predictor: p.predictor,
+            evictor: p.evictor,
+            inject: p.inject,
+            streams: p.streams,
+            auto_cfg: None,
+        }
+    }
+}
+
+/// Execute `prog` under `cfg`. `opts.trace` / `opts.record` behave as
+/// in an app run; `opts.streams` is ignored in favour of
+/// `cfg.streams` (the stream count is part of the workload: launches
+/// round-robin across it exactly like the original run).
+pub fn replay(prog: &ReplayProgram, cfg: &ReplayConfig, opts: &RunOpts) -> RunResult {
+    let mut plat = cfg.platform.spec();
+    plat.um.auto_predictor = cfg.predictor;
+    plat.um.evictor = cfg.evictor;
+    plat.um.inject = cfg.inject;
+    let opts = RunOpts { streams: cfg.streams, ..*opts };
+    let mut ctx = AppCtx::with_opts(&plat, cfg.variant, &opts);
+    if cfg.variant.auto() {
+        if let Some(ac) = cfg.auto_cfg {
+            // Re-attach with the override; the predictor knob always
+            // comes from the config so `--predictor` composes with it.
+            ctx.um.enable_auto_with(AutoConfig { predictor: cfg.predictor, ..ac });
+        }
+    }
+    for op in &prog.ops {
+        run_op(&mut ctx, op);
+    }
+    let mut res = ctx.finish("replay");
+    // A re-record (`--trace-out`) keeps the originating app label so a
+    // faithful replay's capture is identical to the input program.
+    if let Some(p) = res.replay.as_mut() {
+        p.app = prog.app.clone();
+    }
+    res
+}
+
+fn run_op(ctx: &mut AppCtx, op: &ReplayOp) {
+    match op {
+        ReplayOp::MallocManaged { name, size } => {
+            ctx.malloc_managed(name, *size);
+        }
+        ReplayOp::MallocDevice { name, size } => {
+            ctx.malloc_device(name, *size);
+        }
+        ReplayOp::MallocHost { name, size } => {
+            ctx.malloc_host(name, *size);
+        }
+        ReplayOp::HostWrite { alloc, range } => ctx.host_write(*alloc, *range),
+        ReplayOp::HostRead { alloc, range } => ctx.host_read(*alloc, *range),
+        ReplayOp::Advise { alloc, advise } => ctx.advise(*alloc, *advise),
+        ReplayOp::PrefetchBackground { alloc, dst } => ctx.prefetch_background(*alloc, *dst),
+        ReplayOp::PrefetchDefault { alloc, dst } => ctx.prefetch_default(*alloc, *dst),
+        ReplayOp::MemcpyH2D { alloc } => ctx.memcpy_h2d(*alloc),
+        ReplayOp::MemcpyD2H { alloc } => ctx.memcpy_d2h(*alloc),
+        ReplayOp::Launch { phases } => {
+            let spec = KernelSpec {
+                name: "replay",
+                phases: phases
+                    .iter()
+                    .map(|p| Phase {
+                        name: "replay",
+                        accesses: p
+                            .accesses
+                            .iter()
+                            .map(|a| Access {
+                                alloc: a.alloc,
+                                range: a.range,
+                                kind: a.kind,
+                                dram_passes: f64::from_bits(a.passes_bits),
+                            })
+                            .collect(),
+                        flops: f64::from_bits(p.flops_bits),
+                    })
+                    .collect(),
+            };
+            ctx.launch(&spec);
+        }
+        ReplayOp::DeviceSync => {
+            ctx.device_sync();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppId;
+    use crate::util::units::MIB;
+
+    fn capture(variant: Variant) -> (RunResult, ReplayProgram) {
+        let plat = PlatformId::IntelPascal.spec();
+        let app = AppId::Bs.build(64 * MIB);
+        let orig = app.run_with(&plat, variant, &RunOpts { record: true, ..Default::default() });
+        let prog = orig.replay.clone().expect("recorded");
+        (orig, prog)
+    }
+
+    #[test]
+    fn faithful_replay_is_byte_identical() {
+        for variant in [Variant::Um, Variant::UmBoth, Variant::UmAuto] {
+            let (orig, prog) = capture(variant);
+            prog.validate().expect("capture validates");
+            let rep = replay(&prog, &ReplayConfig::from_program(&prog), &RunOpts::default());
+            assert_eq!(rep.metrics, orig.metrics, "{variant:?} metrics");
+            assert_eq!(rep.kernel_time, orig.kernel_time, "{variant:?} kernel time");
+            assert_eq!(rep.kernel_times, orig.kernel_times, "{variant:?} per-launch");
+            assert_eq!(rep.wall_time, orig.wall_time, "{variant:?} wall");
+        }
+    }
+
+    #[test]
+    fn rerecorded_replay_reproduces_the_program() {
+        let (_, prog) = capture(Variant::UmBoth);
+        let rep = replay(
+            &prog,
+            &ReplayConfig::from_program(&prog),
+            &RunOpts { record: true, ..Default::default() },
+        );
+        assert_eq!(rep.replay.expect("re-recorded"), prog);
+    }
+
+    #[test]
+    fn auto_cfg_override_changes_the_engine() {
+        let (_, prog) = capture(Variant::UmAuto);
+        let cfg = ReplayConfig {
+            auto_cfg: Some(AutoConfig { escalate: false, predict: false, ..AutoConfig::default() }),
+            ..ReplayConfig::from_program(&prog)
+        };
+        let rep = replay(&prog, &cfg, &RunOpts::default());
+        assert_eq!(rep.metrics.auto_predict_queries, 0, "prediction disabled by override");
+    }
+}

@@ -15,7 +15,7 @@
 //!   (the normalized "mispredicted bytes" figure); lower is better.
 
 use crate::apps::Variant;
-use crate::coordinator::Suite;
+use crate::coordinator::{ReplayResult, Suite};
 use crate::um::{EvictorKind, PredictorKind};
 use crate::util::jsonout::Json;
 
@@ -97,6 +97,56 @@ pub fn suite_json(
         ("reps", Json::Int(reps as u64)),
         ("streams", Json::Int(streams as u64)),
         ("cells", Json::Arr(json_cells)),
+    ])
+}
+
+/// Build the corpus-replay artifact (`json/replay.json`): one record
+/// per replayed trace in the exact shape of
+/// `corpora/expectations.json`, so a CI artifact from `umbra replay
+/// corpora --out …` can be committed verbatim as the refreshed
+/// expectation file (the PR-5 baseline-refresh recipe; see
+/// `docs/REPLAY.md`). `kernel_ns`/`wall_ns` are exact — replay is
+/// deterministic — while the regression test applies its tolerance
+/// band at compare time.
+pub fn replay_json(results: &[(String, ReplayResult)], tolerance: f64) -> Json {
+    let mut rows: Vec<_> = results.iter().collect();
+    rows.sort_by(|a, b| {
+        (&a.0, a.1.config.platform.name(), a.1.config.predictor.name())
+            .cmp(&(&b.0, b.1.config.platform.name(), b.1.config.predictor.name()))
+    });
+    let traces = rows
+        .into_iter()
+        .map(|(stem, r)| {
+            let m = &r.last.metrics;
+            Json::obj(vec![
+                ("trace", Json::str(stem)),
+                ("platform", Json::str(r.config.platform.name())),
+                ("predictor", Json::str(r.config.predictor.name())),
+                ("evictor", Json::str(r.config.evictor.name())),
+                ("variant", Json::str(r.config.variant.name())),
+                ("streams", Json::Int(u64::from(r.config.streams))),
+                ("kernel_ns", Json::Int(r.last.kernel_time.0)),
+                ("wall_ns", Json::Int(r.last.wall_time.0)),
+                ("accuracy", Json::Num(m.prediction_accuracy())),
+                ("coverage", Json::Num(m.prediction_coverage())),
+                ("misprediction_ratio", Json::Num(m.misprediction_ratio())),
+                ("learned_predictions", Json::Int(m.auto_learned_predictions)),
+                ("fallback_predictions", Json::Int(m.auto_fallback_predictions)),
+                ("fault_groups", Json::Int(m.gpu_fault_groups)),
+                ("evicted_chunks", Json::Int(m.evicted_chunks)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "_note",
+            Json::str(
+                "Corpus replay expectations. Refresh: run `umbra replay corpora --out OUT` \
+                 (or take CI's replay-regression artifact) and copy OUT/json/replay.json here.",
+            ),
+        ),
+        ("tolerance", Json::Num(tolerance)),
+        ("traces", Json::Arr(traces)),
     ])
 }
 
@@ -280,6 +330,31 @@ mod tests {
         assert!(compare_decision_quality(&Json::Null, &Json::Null, 0.05).is_err());
         let bad = Json::obj(vec![("x", Json::Int(1))]);
         assert!(compare_decision_quality(&doc(vec![]), &bad, 0.05).is_err());
+    }
+
+    #[test]
+    fn replay_json_matches_the_expectation_schema() {
+        use crate::apps::replay::ReplayConfig;
+        use crate::apps::RunOpts;
+        use crate::coordinator::run_replay;
+        use crate::sim::synth::{generate, SynthParams};
+        use crate::util::units::MIB;
+        let prog =
+            generate(&SynthParams { footprint: 64 * MIB, launches: 8, ..Default::default() });
+        let cfg = ReplayConfig::from_program(&prog);
+        let r = run_replay(&prog, &cfg, 1, &RunOpts::default());
+        let kernel_ns = r.last.kernel_time.0;
+        let json = replay_json(&[("t0".to_string(), r)], 0.05);
+        let back = Json::parse(&json.render()).unwrap();
+        assert_eq!(back.get("tolerance").and_then(Json::as_f64), Some(0.05));
+        let traces = back.get("traces").and_then(Json::as_arr).unwrap();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.get("trace").and_then(Json::as_str), Some("t0"));
+        assert_eq!(t.get("platform").and_then(Json::as_str), Some("Intel-Pascal"));
+        assert_eq!(t.get("kernel_ns").and_then(Json::as_f64), Some(kernel_ns as f64));
+        assert!(t.get("learned_predictions").is_some());
+        assert!(t.get("evicted_chunks").is_some());
     }
 
     #[test]

@@ -640,7 +640,8 @@ pub fn fig_evict(reps: usize) -> Report {
             let mut plat = platform.spec();
             tweak(&mut plat);
             let cell = Cell { app, platform, variant, regime: Regime::Oversubscribed };
-            let r = run_cell_opts(cell, reps, &RunOpts { trace: false, streams }, &plat);
+            let opts = RunOpts { trace: false, streams, ..Default::default() };
+            let r = run_cell_opts(cell, reps, &opts, &plat);
             let m = &r.last.metrics;
             let gb = |b: u64| format!("{:.2}", b as f64 / 1e9);
             table.row(vec![
@@ -744,7 +745,12 @@ pub fn fig_chaos(reps: usize, smoke: bool) -> Report {
             let run = |variant: Variant| -> Option<CellResult> {
                 let cell = Cell { app, platform, variant, regime: Regime::Oversubscribed };
                 catch_unwind(AssertUnwindSafe(|| {
-                    run_cell_opts(cell, reps, &RunOpts { trace: false, streams: 1 }, &plat)
+                    run_cell_opts(
+                        cell,
+                        reps,
+                        &RunOpts { trace: false, streams: 1, ..Default::default() },
+                        &plat,
+                    )
                 }))
                 .ok()
             };
@@ -802,6 +808,81 @@ pub fn fig_chaos(reps: usize, smoke: bool) -> Report {
     Report::new("chaos", text).with_csv("chaos", csv)
 }
 
+// ---------------------------------------------------------------------
+// Generator sweep (synthetic workloads through the replay stack)
+// ---------------------------------------------------------------------
+
+/// The generator-sweep study: every [`SynthPattern`] (seeded, default
+/// parameters) replayed as `UM Auto` on Intel-Pascal under both
+/// predictor modes — how the engine's decision quality responds to
+/// zipfian hot sets, bursty phase changes, stride-cycle chases and
+/// tenant interleaves that the six benchmark apps do not produce.
+/// See `docs/REPLAY.md`.
+pub fn fig_synth(reps: usize) -> Report {
+    use crate::apps::replay::ReplayConfig;
+    use crate::coordinator::run_replay;
+    use crate::sim::synth::{generate, SynthParams, SynthPattern};
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec![
+        "pattern",
+        "predictor",
+        "kernel_ms",
+        "accuracy",
+        "coverage",
+        "mispred_ratio",
+        "learned_predictions",
+        "fallback_predictions",
+        "fault_groups",
+    ]);
+    let mut table = TextTable::new(vec![
+        "pattern",
+        "heuristic (ms)",
+        "learned (ms)",
+        "learn/heur",
+        "heur acc",
+        "learn acc",
+        "learn cov",
+    ])
+    .title("generator sweep: synthetic patterns, UM Auto on Intel-Pascal".to_string())
+    .left(0);
+    for pattern in SynthPattern::ALL {
+        let mut cells = Vec::new();
+        for predictor in [PredictorKind::Heuristic, PredictorKind::Learned] {
+            let prog = generate(&SynthParams { pattern, predictor, ..Default::default() });
+            let cfg = ReplayConfig::from_program(&prog);
+            let r = run_replay(&prog, &cfg, reps, &RunOpts::default());
+            let m = r.last.metrics;
+            csv.row(vec![
+                pattern.name().to_string(),
+                predictor.name().to_string(),
+                format!("{:.3}", r.kernel_time.mean.as_ms()),
+                fmt_frac(m.prediction_accuracy()),
+                fmt_frac(m.prediction_coverage()),
+                fmt_frac(m.misprediction_ratio()),
+                m.auto_learned_predictions.to_string(),
+                m.auto_fallback_predictions.to_string(),
+                m.gpu_fault_groups.to_string(),
+            ]);
+            cells.push((r.kernel_time.mean.as_ms(), m));
+        }
+        let (h_ms, hm) = &cells[0];
+        let (l_ms, lm) = &cells[1];
+        table.row(vec![
+            pattern.name().to_string(),
+            format!("{h_ms:.1}"),
+            format!("{l_ms:.1}"),
+            format!("{:.2}x", l_ms / h_ms),
+            fmt_pct(hm.prediction_accuracy()),
+            fmt_pct(lm.prediction_accuracy()),
+            fmt_pct(lm.prediction_coverage()),
+        ]);
+    }
+    text.push_str(&table.render());
+    text.push('\n');
+    Report::new("synth", text).with_csv("synth", csv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -829,5 +910,15 @@ mod tests {
         let r = fig5();
         assert_eq!(r.csvs.len(), 16); // 4 cases x 4 variants
         assert!(r.text.contains("total HtoD"));
+    }
+
+    #[test]
+    fn fig_synth_covers_patterns_and_predictors() {
+        use crate::sim::SynthPattern;
+        let r = fig_synth(1);
+        assert_eq!(r.csvs[0].1.n_rows(), 12, "6 patterns x 2 predictors");
+        for pattern in SynthPattern::ALL {
+            assert!(r.text.contains(pattern.name()), "{}", pattern.name());
+        }
     }
 }

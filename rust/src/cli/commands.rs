@@ -4,17 +4,21 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::apps::replay::ReplayConfig;
 use crate::apps::{AppId, Regime, RunOpts, Variant};
 use crate::bench_harness::{ablate, compare, figures, report::write_all};
-use crate::coordinator::{run_cell, run_cell_opts, Cell, Suite, SuiteConfig};
+use crate::coordinator::{run_cell_opts, run_replay, Cell, ReplayResult, Suite, SuiteConfig};
 use crate::platform::PlatformId;
+use crate::sim::synth;
+use crate::sim::{SynthParams, SynthPattern};
+use crate::trace::replay::ReplayProgram;
 use crate::trace::{chrome, umt, ReasonCode, TimeSeries, Trace, TraceKind, UmtTrace};
 use crate::util::stats::LogHist;
-use crate::um::metrics::fmt_pct;
+use crate::um::metrics::{fmt_frac, fmt_pct};
 use crate::um::{EvictorKind, PredictorKind};
 use crate::util::jsonout::Json;
 use crate::util::table::TextTable;
-use crate::util::units::Ns;
+use crate::util::units::{fmt_bytes, Ns, MIB};
 
 use super::args::Args;
 
@@ -38,6 +42,13 @@ USAGE:
   umbra trace --app APP --platform PLAT --variant VAR --regime REG [--out DIR]
        [--trace-out FILE.umt]
   umbra trace FILE.umt [--export-chrome FILE.json]
+  umbra replay FILE.umt|DIR [--reps N] [--out DIR] [--platform PLAT] [--variant VAR]
+       [--predictor PRED] [--evictor EV] [--streams N] [--scenario CHAOS]
+       [--trace] [--trace-out FILE.umt]
+  umbra synth --pattern PAT [--seed N] [--footprint-mib N] [--allocs N] [--launches N]
+       [--window-pages N] [--streams N] [--variant VAR] [--platform PLAT]
+       [--predictor PRED] [--evictor EV] [--hot-frac F] [--hot-bias F]
+       [--phase-len N] [--depth N] [--tenants N] [--out FILE.umt] [--reps N]
   umbra validate [--artifacts DIR]
   umbra report [--reps N] [--out DIR]
   umbra sweep --param P --values a,b,c --app APP --platform PLAT --variant VAR --regime REG
@@ -54,6 +65,8 @@ USAGE:
          ranker; only UM Auto cells differ. See docs/EVICTION.md)
   CHAOS = off|link-degrade|flaky-prefetch|ecc-retire|fault-noise|storm
          (deterministic fault injection, default off. See docs/ROBUSTNESS.md)
+  PAT  = sequential|random|zipf|bursty|chase|tenant-mix (synthetic access
+         patterns; parameter reference in docs/REPLAY.md)
 
   `umbra chaos` runs plain UM and UM Auto side by side under every
   injection scenario on the oversubscription pathology cells and
@@ -69,6 +82,21 @@ USAGE:
   percentiles — verifies the decode→re-encode round trip, and
   --export-chrome writes chrome://tracing / Perfetto JSON. The event
   taxonomy, reason codes and format spec live in docs/OBSERVABILITY.md.
+  Captures written with --trace-out also embed the replayable verb
+  program (.umt v2, docs/REPLAY.md).
+
+  `umbra replay FILE.umt` re-feeds a capture's recorded verb program
+  through the full UM stack and reports the same metrics surface as a
+  live run — a same-platform replay with no overrides reproduces the
+  originating run's Ns byte-for-byte; --platform/--variant/--predictor/
+  --evictor/--streams/--scenario override the capture header to answer
+  what-if questions. Given a DIR (e.g. the committed corpora/), every
+  replayable .umt inside is replayed and --out writes csv/replay.csv
+  plus json/replay.json (the decision-quality expectation schema —
+  corpora/expectations.json is refreshed from it). `umbra synth`
+  generates a seeded synthetic workload (PAT above) and either runs it
+  live or writes a committable capture with --out FILE.umt; same seed
+  and parameters are byte-identical. Semantics in docs/REPLAY.md.
 
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
@@ -97,6 +125,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "chaos" => cmd_chaos(args),
         "ablate" => cmd_ablate(args),
         "trace" => cmd_trace(args),
+        "replay" => cmd_replay(args),
+        "synth" => cmd_synth(args),
         "validate" => cmd_validate(args),
         "report" => cmd_report(args),
         "sweep" => cmd_sweep(args),
@@ -191,7 +221,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     plat.um.auto_predictor = predictor;
     plat.um.evictor = parse_evictor(args)?;
     plat.um.inject = crate::sim::InjectConfig { scenario, ..Default::default() };
-    let r = run_cell_opts(cell, reps, &RunOpts { trace, streams, ..Default::default() }, &plat);
+    let record = trace_out.is_some();
+    let r =
+        run_cell_opts(cell, reps, &RunOpts { trace, streams, record, ..Default::default() }, &plat);
     println!("{}", cell.label());
     println!(
         "  kernel time: {} ± {} (n={}, min {}, max {})",
@@ -279,17 +311,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(file) = trace_out {
         let trace = r.last.trace.as_ref().expect("trace enabled for --trace-out");
-        write_umt(Path::new(file), trace, &cell.label())?;
+        write_umt(Path::new(file), trace, &cell.label(), r.last.replay.as_ref())?;
     }
     Ok(())
 }
 
 /// Write a live trace as a `.umt` capture, creating parent directories.
-fn write_umt(path: &Path, trace: &Trace, label: &str) -> Result<()> {
+/// When the run recorded its verb program, it rides along in the
+/// capture's replay section (making the file `umbra replay`-able).
+fn write_umt(
+    path: &Path,
+    trace: &Trace,
+    label: &str,
+    program: Option<&ReplayProgram>,
+) -> Result<()> {
+    let mut ut = UmtTrace::from_trace(trace, label);
+    ut.replay = program.cloned();
+    write_umt_bytes(path, &ut)
+}
+
+/// Encode and write a fully-built [`UmtTrace`], creating parent
+/// directories (shared by the capture path and `umbra synth --out`).
+fn write_umt_bytes(path: &Path, ut: &UmtTrace) -> Result<()> {
     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
         std::fs::create_dir_all(dir)?;
     }
-    let bytes = umt::encode(trace, label);
+    let bytes = ut.encode();
     std::fs::write(path, &bytes)
         .map_err(|e| anyhow!("cannot write '{}': {e}", path.display()))?;
     eprintln!("wrote {} ({} bytes, .umt v{})", path.display(), bytes.len(), umt::UMT_VERSION);
@@ -517,7 +564,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
         return inspect_umt(Path::new(path), args);
     }
     let cell = parse_cell(args)?;
-    let r = run_cell(cell, 1, true);
+    let record = args.flag("trace-out").is_some();
+    let opts = RunOpts { trace: true, record, ..Default::default() };
+    let r = run_cell_opts(cell, 1, &opts, &cell.platform.spec());
     let trace = r.last.trace.as_ref().expect("trace enabled");
     let bin = Ns((r.last.wall_time.0 / 100).max(1));
     let series = TimeSeries::from_trace(trace, bin);
@@ -536,7 +585,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         eprintln!("wrote {}", path.display());
     }
     if let Some(file) = args.flag("trace-out") {
-        write_umt(Path::new(file), trace, &cell.label())?;
+        write_umt(Path::new(file), trace, &cell.label(), r.last.replay.as_ref())?;
     }
     Ok(())
 }
@@ -623,6 +672,16 @@ fn inspect_umt(path: &Path, args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     println!("round-trip: decode→re-encode byte-identical ({} bytes)", bytes.len());
+    if let Some(p) = &ut.replay {
+        println!(
+            "replay section: {} — {} ops, {} launches, {} footprint (feed back with `umbra replay {}`)",
+            p.app,
+            p.ops.len(),
+            p.launches(),
+            fmt_bytes(p.footprint()),
+            path.display()
+        );
+    }
 
     if let Some(out) = args.flag("export-chrome") {
         let out = Path::new(out);
@@ -630,6 +689,323 @@ fn inspect_umt(path: &Path, args: &Args) -> Result<()> {
         eprintln!("wrote {} (open in chrome://tracing or ui.perfetto.dev)", out.display());
     }
     Ok(())
+}
+
+/// `umbra replay FILE.umt|DIR`: re-feed a capture's recorded verb
+/// program through the full UM stack. With no overrides a
+/// same-platform replay reproduces the originating run byte-for-byte;
+/// the cell flags override the capture header for what-if runs.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("replay: which capture? (FILE.umt or a directory of captures)"))?;
+    let path = Path::new(path);
+    if path.is_dir() {
+        return replay_dir(path, args);
+    }
+    let prog = read_program(path)?;
+    let mut cfg = ReplayConfig::from_program(&prog);
+    override_config(&mut cfg, args)?;
+    let reps = parse_reps(args, 1)?;
+    let trace_out = args.flag("trace-out");
+    let opts = RunOpts {
+        trace: args.flag_bool("trace") || trace_out.is_some(),
+        record: trace_out.is_some(),
+        ..Default::default()
+    };
+    let rr = run_replay(&prog, &cfg, reps, &opts);
+    print_replay_summary(&rr, &prog);
+    if let Some(file) = trace_out {
+        let trace = rr.last.trace.as_ref().expect("trace enabled for --trace-out");
+        write_umt(Path::new(file), trace, &rr.label, rr.last.replay.as_ref())?;
+    }
+    Ok(())
+}
+
+/// Decode a capture and pull out its replay program, with a pointed
+/// error for v1 captures (events/decisions but no verb program).
+fn read_program(path: &Path) -> Result<ReplayProgram> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow!("cannot read '{}': {e}", path.display()))?;
+    let ut = UmtTrace::decode(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let prog = ut.replay.ok_or_else(|| {
+        anyhow!(
+            "{}: no replay section (.umt v{}) — capture with `umbra run --trace-out` \
+             or generate with `umbra synth --out`",
+            path.display(),
+            ut.version
+        )
+    })?;
+    prog.validate().map_err(|e| anyhow!("{}: invalid replay program: {e}", path.display()))?;
+    Ok(prog)
+}
+
+/// Apply cell-flag overrides to a replay config — only flags actually
+/// present override the capture header (the parse_* defaults must not
+/// clobber e.g. a heuristic-predictor capture).
+fn override_config(cfg: &mut ReplayConfig, args: &Args) -> Result<()> {
+    if let Some(v) = args.flag("platform") {
+        cfg.platform =
+            PlatformId::parse(v).ok_or_else(|| anyhow!("--platform: invalid value '{v}'"))?;
+    }
+    if let Some(v) = args.flag("variant") {
+        cfg.variant = Variant::parse(v).ok_or_else(|| anyhow!("--variant: invalid value '{v}'"))?;
+    }
+    if let Some(v) = args.flag("predictor") {
+        cfg.predictor =
+            PredictorKind::parse(v).ok_or_else(|| anyhow!("--predictor: invalid value '{v}'"))?;
+    }
+    if let Some(v) = args.flag("evictor") {
+        cfg.evictor =
+            EvictorKind::parse(v).ok_or_else(|| anyhow!("--evictor: invalid value '{v}'"))?;
+    }
+    if args.flag("streams").is_some() {
+        cfg.streams = parse_streams(args)?;
+    }
+    if args.flag("scenario").is_some() {
+        cfg.inject.scenario = parse_scenario(args)?;
+    }
+    Ok(())
+}
+
+fn print_replay_summary(rr: &ReplayResult, prog: &ReplayProgram) {
+    let m = &rr.last.metrics;
+    println!(
+        "{} — {} ops, {} launches, {} footprint ({}, {} predictor, {} evictor, {} stream(s))",
+        rr.label,
+        prog.ops.len(),
+        prog.launches(),
+        fmt_bytes(prog.footprint()),
+        rr.config.variant.name(),
+        rr.config.predictor.name(),
+        rr.config.evictor.name(),
+        rr.config.streams
+    );
+    println!(
+        "  kernel time: {} ± {} (n={})",
+        rr.kernel_time.mean, rr.kernel_time.std, rr.kernel_time.n
+    );
+    println!("  wall time:   {}", rr.last.wall_time);
+    println!(
+        "  faults: {} groups / {} pages; migrated h2d {} pages, d2h {} pages",
+        m.gpu_fault_groups, m.gpu_faulted_pages, m.migrated_pages_h2d, m.migrated_pages_d2h
+    );
+    println!(
+        "  evictions: {} chunks ({} B written back, {} dead)",
+        m.evicted_chunks,
+        m.writeback_bytes,
+        fmt_pct(m.eviction_dead_ratio())
+    );
+    if rr.config.variant.auto() {
+        println!(
+            "  predictor: accuracy {}, coverage {}, {} learned / {} fallback predictions",
+            fmt_pct(m.prediction_accuracy()),
+            fmt_pct(m.prediction_coverage()),
+            m.auto_learned_predictions,
+            m.auto_fallback_predictions
+        );
+        println!(
+            "  watchdog: {} trips, {} recoveries, {} retries",
+            m.wd_trips, m.wd_recoveries, m.wd_retries
+        );
+    }
+}
+
+/// Directory mode: replay every replayable `.umt` inside (sorted),
+/// render the comparison table, and with `--out` write the replayed
+/// metrics CSV plus the expectation-schema JSON (`json/replay.json`,
+/// the document `corpora/expectations.json` is refreshed from).
+fn replay_dir(dir: &Path, args: &Args) -> Result<()> {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("cannot read '{}': {e}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "umt"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("{}: no .umt captures found", dir.display());
+    }
+    let reps = parse_reps(args, 1)?;
+    let mut results: Vec<(String, ReplayResult)> = Vec::new();
+    let mut skipped = 0usize;
+    for f in &files {
+        let bytes = std::fs::read(f).map_err(|e| anyhow!("cannot read '{}': {e}", f.display()))?;
+        let ut = UmtTrace::decode(&bytes).map_err(|e| anyhow!("{}: {e}", f.display()))?;
+        let Some(prog) = ut.replay else {
+            eprintln!("skipping {} (no replay section)", f.display());
+            skipped += 1;
+            continue;
+        };
+        prog.validate()
+            .map_err(|e| anyhow!("{}: invalid replay program: {e}", f.display()))?;
+        let mut cfg = ReplayConfig::from_program(&prog);
+        override_config(&mut cfg, args)?;
+        let rr = run_replay(&prog, &cfg, reps, &RunOpts::default());
+        let stem = f.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        results.push((stem, rr));
+    }
+    if results.is_empty() {
+        bail!("{}: no replayable captures ({skipped} skipped)", dir.display());
+    }
+    let mut t = TextTable::new(vec![
+        "trace", "platform", "pred", "kernel (ms)", "accuracy", "coverage", "faults", "evict",
+    ])
+    .left(0)
+    .left(1)
+    .left(2);
+    for (stem, rr) in &results {
+        let m = &rr.last.metrics;
+        t.row(vec![
+            stem.clone(),
+            rr.config.platform.name().to_string(),
+            rr.config.predictor.name().to_string(),
+            format!("{:.3}", rr.kernel_time.mean.as_ms()),
+            fmt_pct(m.prediction_accuracy()),
+            fmt_pct(m.prediction_coverage()),
+            m.gpu_fault_groups.to_string(),
+            m.evicted_chunks.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if skipped > 0 {
+        eprintln!("skipped {skipped} capture(s) without a replay section");
+    }
+    if let Some(out) = args.flag("out") {
+        let out = Path::new(out);
+        let mut csv = crate::util::csvout::Csv::new(vec![
+            "trace",
+            "platform",
+            "predictor",
+            "evictor",
+            "variant",
+            "streams",
+            "kernel_ns",
+            "wall_ns",
+            "accuracy",
+            "coverage",
+            "misprediction_ratio",
+            "learned_predictions",
+            "fallback_predictions",
+            "fault_groups",
+            "evicted_chunks",
+        ]);
+        for (stem, rr) in &results {
+            let m = &rr.last.metrics;
+            csv.row(vec![
+                stem.clone(),
+                rr.config.platform.name().to_string(),
+                rr.config.predictor.name().to_string(),
+                rr.config.evictor.name().to_string(),
+                rr.config.variant.name().to_string(),
+                rr.config.streams.to_string(),
+                rr.kernel_time.mean.0.to_string(),
+                rr.last.wall_time.0.to_string(),
+                fmt_frac(m.prediction_accuracy()),
+                fmt_frac(m.prediction_coverage()),
+                fmt_frac(m.misprediction_ratio()),
+                m.auto_learned_predictions.to_string(),
+                m.auto_fallback_predictions.to_string(),
+                m.gpu_fault_groups.to_string(),
+                m.evicted_chunks.to_string(),
+            ]);
+        }
+        csv.write(&out.join("csv/replay.csv"))?;
+        compare::replay_json(&results, 0.05).write(&out.join("json/replay.json"))?;
+        eprintln!(
+            "wrote {}/csv/replay.csv and {}/json/replay.json",
+            out.display(),
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+/// `umbra synth`: build a seeded synthetic workload and either run it
+/// live (default) or write a committable capture with `--out FILE.umt`.
+/// Same seed + parameters is byte-identical (docs/REPLAY.md).
+fn cmd_synth(args: &Args) -> Result<()> {
+    let pattern = match args.flag("pattern") {
+        None => {
+            bail!("synth: --pattern required (sequential|random|zipf|bursty|chase|tenant-mix)")
+        }
+        Some(v) => SynthPattern::parse(v).ok_or_else(|| {
+            anyhow!(
+                "--pattern: invalid value '{v}' (sequential|random|zipf|bursty|chase|tenant-mix)"
+            )
+        })?,
+    };
+    let pattern = refine_pattern(pattern, args)?;
+    let variant = match args.flag("variant") {
+        None => Variant::UmAuto,
+        Some(v) => Variant::parse(v).ok_or_else(|| anyhow!("--variant: invalid value '{v}'"))?,
+    };
+    let platform = match args.flag("platform") {
+        None => PlatformId::IntelPascal,
+        Some(v) => {
+            PlatformId::parse(v).ok_or_else(|| anyhow!("--platform: invalid value '{v}'"))?
+        }
+    };
+    let params = SynthParams {
+        pattern,
+        seed: args.flag_usize("seed", 1).map_err(|e| anyhow!(e))? as u64,
+        footprint: args.flag_usize("footprint-mib", 256).map_err(|e| anyhow!(e))?.max(1) as u64
+            * MIB,
+        allocs: args.flag_usize("allocs", 1).map_err(|e| anyhow!(e))?.max(1) as u32,
+        launches: args.flag_usize("launches", 96).map_err(|e| anyhow!(e))?.max(1) as u32,
+        window_pages: args.flag_usize("window-pages", 64).map_err(|e| anyhow!(e))?.max(1) as u32,
+        streams: parse_streams(args)?,
+        variant,
+        platform,
+        predictor: parse_predictor(args)?,
+        evictor: parse_evictor(args)?,
+    };
+    let prog = synth::generate(&params);
+    if let Some(file) = args.flag("out") {
+        let label = format!("synth/{}", pattern.name());
+        return write_umt_bytes(Path::new(file), &UmtTrace::for_replay(prog, &label));
+    }
+    let cfg = ReplayConfig::from_program(&prog);
+    let reps = parse_reps(args, 1)?;
+    let rr = run_replay(&prog, &cfg, reps, &RunOpts::default());
+    print_replay_summary(&rr, &prog);
+    Ok(())
+}
+
+/// Fold the pattern-specific CLI knobs into a parsed [`SynthPattern`]
+/// (knobs for a different pattern are ignored, like the other cell
+/// flags that don't apply to a given variant).
+fn refine_pattern(p: SynthPattern, args: &Args) -> Result<SynthPattern> {
+    fn f64_flag(args: &Args, name: &str, default: f64) -> Result<f64> {
+        match args.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number '{v}'")),
+        }
+    }
+    fn u32_flag(args: &Args, name: &str, default: u32) -> Result<u32> {
+        let n = args.flag_usize(name, default as usize).map_err(|e| anyhow!(e))?;
+        if n == 0 {
+            bail!("--{name}: must be at least 1");
+        }
+        Ok(n as u32)
+    }
+    Ok(match p {
+        SynthPattern::Zipf { hot_fraction, hot_bias } => SynthPattern::Zipf {
+            hot_fraction: f64_flag(args, "hot-frac", hot_fraction)?,
+            hot_bias: f64_flag(args, "hot-bias", hot_bias)?,
+        },
+        SynthPattern::Bursty { phase_len } => {
+            SynthPattern::Bursty { phase_len: u32_flag(args, "phase-len", phase_len)? }
+        }
+        SynthPattern::Chase { depth } => {
+            SynthPattern::Chase { depth: u32_flag(args, "depth", depth)? }
+        }
+        SynthPattern::TenantMix { tenants } => {
+            SynthPattern::TenantMix { tenants: u32_flag(args, "tenants", tenants)? }
+        }
+        other => other,
+    })
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
@@ -896,5 +1272,86 @@ mod tests {
         assert_eq!(c.platform, PlatformId::P9Volta);
         assert_eq!(c.variant, Variant::UmBoth);
         assert_eq!(c.regime, Regime::Oversubscribed);
+    }
+
+    #[test]
+    fn synth_live_run_works() {
+        dispatch(&args(
+            "synth --pattern sequential --footprint-mib 64 --launches 8",
+        ))
+        .unwrap();
+        assert!(dispatch(&args("synth")).is_err(), "--pattern is required");
+        assert!(dispatch(&args("synth --pattern bogus")).is_err());
+        assert!(dispatch(&args("synth --pattern bursty --phase-len 0")).is_err());
+    }
+
+    #[test]
+    fn synth_capture_then_replay_round_trips() {
+        let dir = std::env::temp_dir().join("umbra_cli_synth_replay");
+        let _ = std::fs::remove_dir_all(&dir);
+        let umt = dir.join("chase.umt");
+        dispatch(&args(&format!(
+            "synth --pattern chase --seed 7 --footprint-mib 64 --launches 16 --out {}",
+            umt.display()
+        )))
+        .unwrap();
+        // Inspector understands the replay section...
+        dispatch(&args(&format!("trace {}", umt.display()))).unwrap();
+        // ...faithful replay runs, and header overrides are accepted.
+        dispatch(&args(&format!("replay {}", umt.display()))).unwrap();
+        dispatch(&args(&format!("replay {} --predictor heuristic", umt.display()))).unwrap();
+        assert!(
+            dispatch(&args(&format!("replay {} --predictor bogus", umt.display()))).is_err(),
+            "override flags still validate"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_requires_a_replay_section() {
+        let dir = std::env::temp_dir().join("umbra_cli_replay_plain");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain = dir.join("plain.umt");
+        // A capture without a verb program (the pre-v2 shape).
+        let trace = Trace::enabled();
+        std::fs::write(&plain, umt::encode(&trace, "plain")).unwrap();
+        let e = dispatch(&args(&format!("replay {}", plain.display())))
+            .expect_err("plain capture is not replayable")
+            .to_string();
+        assert!(e.contains("no replay section"), "pointed error: {e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_dir_mode_writes_expectation_schema() {
+        let dir = std::env::temp_dir().join("umbra_cli_replay_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        let corpus = dir.join("corpus");
+        for (pat, seed) in [("sequential", 1), ("random", 2)] {
+            dispatch(&args(&format!(
+                "synth --pattern {pat} --seed {seed} --footprint-mib 64 --launches 8 --out {}",
+                corpus.join(format!("{pat}.umt")).display()
+            )))
+            .unwrap();
+        }
+        // A non-replayable capture in the directory is skipped, not fatal.
+        std::fs::write(corpus.join("plain.umt"), umt::encode(&Trace::enabled(), "plain")).unwrap();
+        let out = dir.join("out");
+        dispatch(&args(&format!("replay {} --out {}", corpus.display(), out.display()))).unwrap();
+        assert!(out.join("csv/replay.csv").exists());
+        let text = std::fs::read_to_string(out.join("json/replay.json")).unwrap();
+        let json = Json::parse(&text).expect("expectation schema parses");
+        let traces = json.get("traces").and_then(Json::as_arr).expect("traces array");
+        assert_eq!(traces.len(), 2, "two replayable captures, plain one skipped");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn usage_documents_replay_and_synth() {
+        assert!(USAGE.contains("umbra replay"), "usage documents the subcommand");
+        assert!(USAGE.contains("umbra synth"), "usage documents the generator");
+        assert!(USAGE.contains("--pattern"), "usage documents the pattern knob");
+        assert!(USAGE.contains("tenant-mix"), "usage lists the patterns");
+        assert!(USAGE.contains("docs/REPLAY.md"), "usage points at the design doc");
     }
 }

@@ -1,7 +1,9 @@
 //! One benchmark cell: (app, platform, variant, regime) × repetitions.
 
+use crate::apps::replay::{replay, ReplayConfig};
 use crate::apps::{AppId, Regime, RunOpts, RunResult, Variant};
 use crate::platform::{PlatformId, PlatformSpec};
+use crate::trace::replay::ReplayProgram;
 use crate::trace::Breakdown;
 use crate::util::stats::Summary;
 use crate::util::units::Ns;
@@ -63,8 +65,14 @@ pub fn run_cell_opts(cell: Cell, reps: usize, opts: &RunOpts, plat: &PlatformSpe
     let mut launches: Vec<Ns> = Vec::new();
     let mut last: Option<RunResult> = None;
     for rep in 0..reps {
-        // Trace only the final repetition (traces are large).
-        let rep_opts = RunOpts { trace: opts.trace && rep == reps - 1, ..*opts };
+        // Trace/record only the final repetition (traces are large;
+        // every rep's program would be identical anyway).
+        let is_last = rep == reps - 1;
+        let rep_opts = RunOpts {
+            trace: opts.trace && is_last,
+            record: opts.record && is_last,
+            ..*opts
+        };
         let r = app.run_with(plat, cell.variant, &rep_opts);
         totals.push(r.kernel_time);
         launches.extend(r.kernel_times.iter().copied());
@@ -76,6 +84,54 @@ pub fn run_cell_opts(cell: Cell, reps: usize, opts: &RunOpts, plat: &PlatformSpe
         kernel_time: Summary::of(&totals),
         per_launch: Summary::of(&launches),
         breakdown: last.breakdown,
+        last,
+    }
+}
+
+/// Aggregated result of replaying one program — the replay analogue
+/// of [`CellResult`], feeding the same reporting surface.
+#[derive(Clone, Debug)]
+pub struct ReplayResult {
+    /// `platform/app` of the replay (platform from the config, which
+    /// may override the capture header).
+    pub label: String,
+    pub config: ReplayConfig,
+    pub kernel_time: Summary,
+    pub per_launch: Summary,
+    pub last: RunResult,
+}
+
+/// Replay `prog` under `cfg`, `reps` times (determinism means zero
+/// variance; the repetition machinery mirrors [`run_cell_opts`]).
+/// Tracing/re-recording happens only on the final repetition.
+pub fn run_replay(
+    prog: &ReplayProgram,
+    cfg: &ReplayConfig,
+    reps: usize,
+    opts: &RunOpts,
+) -> ReplayResult {
+    assert!(reps >= 1);
+    let mut totals = Vec::with_capacity(reps);
+    let mut launches: Vec<Ns> = Vec::new();
+    let mut last: Option<RunResult> = None;
+    for rep in 0..reps {
+        let is_last = rep == reps - 1;
+        let rep_opts = RunOpts {
+            trace: opts.trace && is_last,
+            record: opts.record && is_last,
+            ..*opts
+        };
+        let r = replay(prog, cfg, &rep_opts);
+        totals.push(r.kernel_time);
+        launches.extend(r.kernel_times.iter().copied());
+        last = Some(r);
+    }
+    let last = last.expect("reps >= 1");
+    ReplayResult {
+        label: format!("{}/{}", cfg.platform.name(), prog.app),
+        config: *cfg,
+        kernel_time: Summary::of(&totals),
+        per_launch: Summary::of(&launches),
         last,
     }
 }
@@ -114,5 +170,19 @@ mod tests {
     #[test]
     fn label_format() {
         assert_eq!(cell().label(), "Intel-Pascal/BS/UM/in-memory");
+    }
+
+    #[test]
+    fn replay_aggregates_like_a_cell() {
+        use crate::sim::synth::{generate, SynthParams};
+        use crate::util::units::MIB;
+        let prog =
+            generate(&SynthParams { footprint: 64 * MIB, launches: 8, ..Default::default() });
+        let cfg = ReplayConfig::from_program(&prog);
+        let r = run_replay(&prog, &cfg, 2, &RunOpts::default());
+        assert_eq!(r.kernel_time.n, 2);
+        assert_eq!(r.kernel_time.std, Ns::ZERO, "deterministic replay");
+        assert_eq!(r.per_launch.n, 16);
+        assert_eq!(r.label, "Intel-Pascal/synth:sequential");
     }
 }

@@ -7,5 +7,5 @@
 pub mod driver;
 pub mod suite;
 
-pub use driver::{run_cell, run_cell_on, run_cell_opts, Cell, CellResult};
+pub use driver::{run_cell, run_cell_on, run_cell_opts, run_replay, Cell, CellResult, ReplayResult};
 pub use suite::{Suite, SuiteConfig};

@@ -110,6 +110,7 @@ impl Suite {
             trace: config.trace,
             trace_cap: config.trace.then_some(SUITE_TRACE_CAP),
             streams: config.streams.max(1),
+            ..Default::default()
         };
         let predictor = config.predictor;
         let evictor = config.evictor;

@@ -18,6 +18,24 @@ impl AccessKind {
     pub fn writes(self) -> bool {
         matches!(self, AccessKind::Write | AccessKind::ReadWrite)
     }
+
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            AccessKind::Read => 0,
+            AccessKind::Write => 1,
+            AccessKind::ReadWrite => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<AccessKind> {
+        match c {
+            0 => Some(AccessKind::Read),
+            1 => Some(AccessKind::Write),
+            2 => Some(AccessKind::ReadWrite),
+            _ => None,
+        }
+    }
 }
 
 /// One range touched by a phase.

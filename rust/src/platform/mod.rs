@@ -91,6 +91,24 @@ impl PlatformId {
             _ => None,
         }
     }
+
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            PlatformId::IntelPascal => 0,
+            PlatformId::IntelVolta => 1,
+            PlatformId::P9Volta => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<PlatformId> {
+        match c {
+            0 => Some(PlatformId::IntelPascal),
+            1 => Some(PlatformId::IntelVolta),
+            2 => Some(PlatformId::P9Volta),
+            _ => None,
+        }
+    }
 }
 
 /// Intel Core i7-7820X + GeForce GTX 1050 Ti (4 GB) over PCIe 3.0.

@@ -82,6 +82,30 @@ impl ChaosScenario {
             _ => None,
         }
     }
+
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            ChaosScenario::Off => 0,
+            ChaosScenario::LinkDegrade => 1,
+            ChaosScenario::FlakyPrefetch => 2,
+            ChaosScenario::EccRetire => 3,
+            ChaosScenario::FaultNoise => 4,
+            ChaosScenario::Storm => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<ChaosScenario> {
+        match c {
+            0 => Some(ChaosScenario::Off),
+            1 => Some(ChaosScenario::LinkDegrade),
+            2 => Some(ChaosScenario::FlakyPrefetch),
+            3 => Some(ChaosScenario::EccRetire),
+            4 => Some(ChaosScenario::FaultNoise),
+            5 => Some(ChaosScenario::Storm),
+            _ => None,
+        }
+    }
 }
 
 /// Injection knob carried inside `UmPolicy` (and therefore `Copy`).

@@ -18,7 +18,9 @@
 pub mod clock;
 pub mod inject;
 pub mod resource;
+pub mod synth;
 
 pub use clock::Clock;
 pub use inject::{ChaosScenario, InjectConfig, Injector};
 pub use resource::{BandwidthResource, SerialResource};
+pub use synth::{SynthParams, SynthPattern};

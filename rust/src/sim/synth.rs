@@ -1,0 +1,322 @@
+//! Seeded synthetic workload generator (`umbra synth`).
+//!
+//! Emits [`ReplayProgram`]s — the same replayable verb form app
+//! captures use — from a handful of parameterized access patterns:
+//! zipfian hot sets, bursty phase changes, pointer chases with a
+//! learnable stride cycle, and multi-tenant interleaves. Same
+//! seed + parameters ⇒ byte-identical program (the generator draws
+//! only from [`Rng`]), so generated `.umt` files are committable
+//! corpus material. See `docs/REPLAY.md` for the parameter reference.
+
+use crate::apps::Variant;
+use crate::gpu::AccessKind;
+use crate::mem::{AllocId, PageRange, PAGE_SIZE};
+use crate::platform::PlatformId;
+use crate::sim::{ChaosScenario, InjectConfig};
+use crate::trace::replay::{ReplayAccess, ReplayOp, ReplayPhase, ReplayProgram};
+use crate::um::{Advise, EvictorKind, Loc, PredictorKind};
+use crate::util::rng::Rng;
+use crate::util::units::{Bytes, MIB};
+
+/// The access-pattern family a synthetic workload draws launches from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SynthPattern {
+    /// Linear streaming walk over the footprint (wraps around).
+    Sequential,
+    /// Uniformly random window per launch.
+    Random,
+    /// Zipfian hot set: a `hot_fraction` prefix of the footprint
+    /// receives a `hot_bias` share of the launches; the rest is
+    /// uniform cold traffic.
+    Zipf { hot_fraction: f64, hot_bias: f64 },
+    /// Sequential within a phase, jumping to a random base every
+    /// `phase_len` launches (working-set change).
+    Bursty { phase_len: u32 },
+    /// Pointer chase: the window advances by a cyclic sequence of
+    /// `depth` strides. Learnable by the delta-table predictor when
+    /// `depth` fits its history; opaque to the sequential heuristic.
+    Chase { depth: u32 },
+    /// `tenants` independent sequential walkers, round-robin
+    /// interleaved, each bound to its own allocation.
+    TenantMix { tenants: u32 },
+}
+
+impl SynthPattern {
+    /// All patterns at their default parameters (sweeps/figures).
+    pub const ALL: [SynthPattern; 6] = [
+        SynthPattern::Sequential,
+        SynthPattern::Random,
+        SynthPattern::Zipf { hot_fraction: 0.1, hot_bias: 0.8 },
+        SynthPattern::Bursty { phase_len: 32 },
+        SynthPattern::Chase { depth: 3 },
+        SynthPattern::TenantMix { tenants: 3 },
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SynthPattern::Sequential => "sequential",
+            SynthPattern::Random => "random",
+            SynthPattern::Zipf { .. } => "zipf",
+            SynthPattern::Bursty { .. } => "bursty",
+            SynthPattern::Chase { .. } => "chase",
+            SynthPattern::TenantMix { .. } => "tenant-mix",
+        }
+    }
+
+    /// Parse a pattern name to its default-parameter form (CLI flags
+    /// then override the parameters).
+    pub fn parse(s: &str) -> Option<SynthPattern> {
+        let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
+        SynthPattern::ALL.into_iter().find(|p| p.name().replace('-', "") == norm)
+    }
+}
+
+/// Generator parameters: pattern + seed + workload shape + the replay
+/// header (platform/variant/streams) the emitted program defaults to.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthParams {
+    pub pattern: SynthPattern,
+    pub seed: u64,
+    /// Total managed footprint, split evenly across `allocs`.
+    pub footprint: Bytes,
+    pub allocs: u32,
+    /// Kernel launches to emit.
+    pub launches: u32,
+    /// Pages each launch touches.
+    pub window_pages: u32,
+    pub streams: u32,
+    pub variant: Variant,
+    pub platform: PlatformId,
+    pub predictor: PredictorKind,
+    pub evictor: EvictorKind,
+}
+
+impl Default for SynthParams {
+    fn default() -> Self {
+        SynthParams {
+            pattern: SynthPattern::Sequential,
+            seed: 1,
+            footprint: 256 * MIB,
+            allocs: 1,
+            launches: 96,
+            window_pages: 64,
+            streams: 1,
+            variant: Variant::UmAuto,
+            platform: PlatformId::IntelPascal,
+            predictor: PredictorKind::Learned,
+            evictor: EvictorKind::Lru,
+        }
+    }
+}
+
+/// Generate the program. Deterministic: the only entropy source is
+/// `Rng::new(params.seed)`.
+pub fn generate(params: &SynthParams) -> ReplayProgram {
+    let allocs = params.allocs.max(1) as u64;
+    let window = u64::from(params.window_pages.max(1));
+    // Equal-sized allocations, each at least one window.
+    let pages_per = (params.footprint.div_ceil(PAGE_SIZE) / allocs).max(window);
+    let total = pages_per * allocs;
+    let alloc_bytes = pages_per * PAGE_SIZE;
+    let mut rng = Rng::new(params.seed);
+    let mut ops = Vec::new();
+
+    // --- allocate + initialize ------------------------------------
+    let explicit = params.variant == Variant::Explicit;
+    let data: Vec<AllocId> = (0..allocs as u32)
+        .map(|i| {
+            let name = format!("synth{i}");
+            ops.push(if explicit {
+                ReplayOp::MallocDevice { name, size: alloc_bytes }
+            } else {
+                ReplayOp::MallocManaged { name, size: alloc_bytes }
+            });
+            AllocId(i)
+        })
+        .collect();
+    if explicit {
+        ops.push(ReplayOp::MallocHost { name: "h_synth".into(), size: alloc_bytes });
+        for &id in &data {
+            ops.push(ReplayOp::MemcpyH2D { alloc: id });
+        }
+    } else {
+        for &id in &data {
+            ops.push(ReplayOp::HostWrite {
+                alloc: id,
+                range: PageRange { start: 0, end: pages_per as u32 },
+            });
+        }
+        if params.variant.advises() {
+            for &id in &data {
+                ops.push(ReplayOp::Advise {
+                    alloc: id,
+                    advise: Advise::PreferredLocation(Loc::Gpu),
+                });
+            }
+        }
+        if params.variant.prefetches() {
+            for &id in &data {
+                ops.push(ReplayOp::PrefetchBackground { alloc: id, dst: Loc::Gpu });
+            }
+        }
+    }
+
+    // --- launches ---------------------------------------------------
+    // Pattern state: a global page position over the concatenated
+    // allocations; `span` keeps a full window in range.
+    let span = total - window + 1;
+    let mut pos: u64 = 0;
+    let hot_span = |frac: f64| (((total as f64 * frac) as u64).max(window) - window + 1).max(1);
+    let chase_strides: Vec<u64> = match params.pattern {
+        SynthPattern::Chase { depth } => {
+            (0..depth.max(1)).map(|_| rng.range(1, 31) * window).collect()
+        }
+        _ => Vec::new(),
+    };
+    let mut tenant_pos: Vec<u64> = vec![0; allocs as usize];
+    for i in 0..params.launches {
+        let gpos = match params.pattern {
+            SynthPattern::Sequential => {
+                let p = pos;
+                pos = (pos + window) % span;
+                p
+            }
+            SynthPattern::Random => rng.below(span),
+            SynthPattern::Zipf { hot_fraction, hot_bias } => {
+                if rng.chance(hot_bias) {
+                    rng.below(hot_span(hot_fraction))
+                } else {
+                    rng.below(span)
+                }
+            }
+            SynthPattern::Bursty { phase_len } => {
+                if i % phase_len.max(1) == 0 {
+                    pos = rng.below(span);
+                }
+                let p = pos % span;
+                pos += window;
+                p
+            }
+            SynthPattern::Chase { .. } => {
+                let p = pos;
+                pos = (pos + chase_strides[i as usize % chase_strides.len()]) % span;
+                p
+            }
+            SynthPattern::TenantMix { tenants } => {
+                let t = (u64::from(i) % u64::from(tenants.max(1))) % allocs;
+                let local_span = pages_per - window + 1;
+                let p = t * pages_per + tenant_pos[t as usize] % local_span;
+                tenant_pos[t as usize] += window;
+                p
+            }
+        };
+        // Map the global position into (allocation, window), clamping
+        // at the allocation boundary.
+        let alloc = (gpos / pages_per).min(allocs - 1);
+        let start = gpos - alloc * pages_per;
+        let end = (start + window).min(pages_per);
+        let kind = if rng.chance(0.25) { AccessKind::ReadWrite } else { AccessKind::Read };
+        ops.push(ReplayOp::Launch {
+            phases: vec![ReplayPhase {
+                flops_bits: ((end - start) as f64 * PAGE_SIZE as f64).to_bits(),
+                accesses: vec![ReplayAccess {
+                    alloc: data[alloc as usize],
+                    range: PageRange { start: start as u32, end: end as u32 },
+                    kind,
+                    passes_bits: 1.0f64.to_bits(),
+                }],
+            }],
+        });
+    }
+
+    // --- consume results --------------------------------------------
+    if explicit {
+        ops.push(ReplayOp::MemcpyD2H { alloc: data[0] });
+    } else {
+        ops.push(ReplayOp::HostRead {
+            alloc: data[0],
+            range: PageRange { start: 0, end: pages_per as u32 },
+        });
+    }
+    ops.push(ReplayOp::DeviceSync);
+
+    ReplayProgram {
+        app: format!("synth:{}", params.pattern.name()),
+        platform: params.platform,
+        variant: params.variant,
+        streams: params.streams.max(1),
+        predictor: params.predictor,
+        evictor: params.evictor,
+        inject: InjectConfig { scenario: ChaosScenario::Off, seed: params.seed },
+        ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_patterns_generate_valid_programs() {
+        for pattern in SynthPattern::ALL {
+            let params = SynthParams { pattern, allocs: 3, streams: 2, ..Default::default() };
+            let p = generate(&params);
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", pattern.name()));
+            assert_eq!(p.launches(), 96, "{}", pattern.name());
+            assert_eq!(p.app, format!("synth:{}", pattern.name()));
+            assert!(p.footprint() >= 255 * MIB, "{}", pattern.name());
+        }
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_and_seeds_differ() {
+        for pattern in SynthPattern::ALL {
+            let params = SynthParams { pattern, ..Default::default() };
+            let a = generate(&params);
+            let b = generate(&params);
+            assert_eq!(a, b, "{} deterministic", pattern.name());
+            let c = generate(&SynthParams { seed: 2, ..params });
+            assert_ne!(a, c, "{} seed-sensitive", pattern.name());
+        }
+    }
+
+    #[test]
+    fn explicit_variant_uses_device_allocations() {
+        let p = generate(&SynthParams { variant: Variant::Explicit, ..Default::default() });
+        p.validate().expect("valid");
+        assert!(p.ops.iter().any(|o| matches!(o, ReplayOp::MallocDevice { .. })));
+        assert!(p.ops.iter().any(|o| matches!(o, ReplayOp::MemcpyH2D { .. })));
+        assert!(!p.ops.iter().any(|o| matches!(o, ReplayOp::MallocManaged { .. })));
+    }
+
+    #[test]
+    fn pattern_parse_roundtrip() {
+        for pattern in SynthPattern::ALL {
+            assert_eq!(SynthPattern::parse(pattern.name()), Some(pattern));
+        }
+        assert_eq!(SynthPattern::parse("tenantmix"), Some(SynthPattern::TenantMix { tenants: 3 }));
+        assert_eq!(SynthPattern::parse("nope"), None);
+    }
+
+    #[test]
+    fn windows_respect_allocation_bounds() {
+        let params = SynthParams {
+            pattern: SynthPattern::Random,
+            allocs: 4,
+            window_pages: 128,
+            ..Default::default()
+        };
+        let p = generate(&params);
+        let pages_per = (params.footprint.div_ceil(PAGE_SIZE) / 4).max(128);
+        for op in &p.ops {
+            if let ReplayOp::Launch { phases } = op {
+                for ph in phases {
+                    for a in &ph.accesses {
+                        assert!(a.range.start < a.range.end);
+                        assert!(u64::from(a.range.end) <= pages_per);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -17,10 +17,12 @@
 pub mod chrome;
 pub mod decision;
 pub mod event;
+pub mod replay;
 pub mod series;
 pub mod umt;
 
 pub use decision::{Decision, ReasonCode, Rung};
 pub use event::{Trace, TraceEvent, TraceKind};
+pub use replay::{ReplayAccess, ReplayOp, ReplayPhase, ReplayProgram};
 pub use series::{Breakdown, TimeSeries};
 pub use umt::UmtTrace;

@@ -1,0 +1,493 @@
+//! Replayable workload programs — the `.umt` v2 *replay section*.
+//!
+//! The v1 capture records what *happened* (events + why-annotated
+//! decisions). The replay section records what the app *did*: the
+//! exact sequence of allocator / advise / prefetch / launch verbs at
+//! the semantic level of [`crate::apps::AppCtx`], with no absolute
+//! timestamps. Re-executing those verbs through the live UM stack
+//! (`umbra replay`) reproduces the originating run byte-for-byte on
+//! the same platform — the simulator is deterministic, so identical
+//! inputs give identical `UmMetrics` and `Ns` — and produces valid
+//! (different) timings on any other platform. See `docs/REPLAY.md`.
+//!
+//! Everything here is plain data + a canonical wire form (the same
+//! LEB128 varints as the rest of `.umt`); the executor that feeds a
+//! program back through the runtime lives in [`crate::apps::replay`],
+//! and the seeded synthetic-workload generator in [`crate::sim::synth`].
+
+use crate::apps::Variant;
+use crate::gpu::AccessKind;
+use crate::mem::{AllocId, PageRange, PAGE_SIZE};
+use crate::platform::PlatformId;
+use crate::sim::InjectConfig;
+use crate::um::{Advise, EvictorKind, PredictorKind};
+use crate::util::units::Bytes;
+
+use super::umt::{put_str, put_varint, Reader};
+
+/// One kernel access as recorded for replay. Mirrors
+/// [`crate::gpu::Access`] with the DRAM-pass weight stored bit-exact
+/// (`f64::to_bits`) so the canonical encoding never round-trips through
+/// decimal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplayAccess {
+    pub alloc: AllocId,
+    pub range: PageRange,
+    pub kind: AccessKind,
+    /// `f64::to_bits` of [`crate::gpu::Access::dram_passes`].
+    pub passes_bits: u64,
+}
+
+/// One kernel phase as recorded for replay (flops stored bit-exact).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplayPhase {
+    /// `f64::to_bits` of [`crate::gpu::Phase::flops`].
+    pub flops_bits: u64,
+    pub accesses: Vec<ReplayAccess>,
+}
+
+/// One recorded [`crate::apps::AppCtx`] verb. The op set is exactly
+/// the closed verb surface the six benchmark apps are written in, so a
+/// capture of any app run replays without loss.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplayOp {
+    /// `cudaMallocManaged`; replays must re-allocate in recorded order
+    /// so [`AllocId`]s line up.
+    MallocManaged { name: String, size: Bytes },
+    /// `cudaMalloc` (Explicit variant).
+    MallocDevice { name: String, size: Bytes },
+    /// Host staging buffer (Explicit variant).
+    MallocHost { name: String, size: Bytes },
+    /// Host-side write access (first touch / result update).
+    HostWrite { alloc: AllocId, range: PageRange },
+    /// Host-side read access (result consumption).
+    HostRead { alloc: AllocId, range: PageRange },
+    /// `cudaMemAdvise` over the whole allocation.
+    Advise { alloc: AllocId, advise: Advise },
+    /// `cudaMemPrefetchAsync` on the background stream.
+    PrefetchBackground { alloc: AllocId, dst: crate::um::Loc },
+    /// `cudaMemPrefetchAsync` on the default stream.
+    PrefetchDefault { alloc: AllocId, dst: crate::um::Loc },
+    /// Explicit `cudaMemcpy` H→D of the whole allocation.
+    MemcpyH2D { alloc: AllocId },
+    /// Explicit `cudaMemcpy` D→H of the whole allocation.
+    MemcpyD2H { alloc: AllocId },
+    /// One kernel launch (round-robins compute streams at replay time
+    /// exactly like the original run did).
+    Launch { phases: Vec<ReplayPhase> },
+    /// `cudaDeviceSynchronize` issued by the app mid-run.
+    DeviceSync,
+}
+
+/// A complete replayable workload: the configuration header a replay
+/// defaults to (platform, variant and policy knobs of the originating
+/// run) plus the recorded verb sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayProgram {
+    /// App label of the originating run (`"synth:<pattern>"` for
+    /// generated programs).
+    pub app: String,
+    /// Platform the capture was taken on (replay default).
+    pub platform: PlatformId,
+    pub variant: Variant,
+    /// Compute streams kernel launches rotated across.
+    pub streams: u32,
+    /// `um::auto` predictor knob of the originating run.
+    pub predictor: PredictorKind,
+    /// Eviction-policy knob of the originating run.
+    pub evictor: EvictorKind,
+    /// Fault-injection scenario + seed of the originating run.
+    pub inject: InjectConfig,
+    pub ops: Vec<ReplayOp>,
+}
+
+impl ReplayProgram {
+    /// Kernel launches in the program (the replay's `kernel_times` len).
+    pub fn launches(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, ReplayOp::Launch { .. })).count()
+    }
+
+    /// Total bytes across all allocations (the replayed footprint).
+    pub fn footprint(&self) -> Bytes {
+        self.ops
+            .iter()
+            .map(|o| match o {
+                ReplayOp::MallocManaged { size, .. }
+                | ReplayOp::MallocDevice { size, .. }
+                | ReplayOp::MallocHost { size, .. } => *size,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Structural validation: every op must reference an allocation
+    /// that an earlier op created, and every page range must fit inside
+    /// that allocation. Decoding checks the wire form; this checks the
+    /// program makes sense before it is fed to the runtime.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut pages: Vec<u64> = Vec::new();
+        let check = |pages: &[u64],
+                     alloc: AllocId,
+                     range: Option<PageRange>|
+         -> Result<(), String> {
+            let n = *pages
+                .get(alloc.0 as usize)
+                .ok_or(format!("op references alloc {} before allocation", alloc.0))?;
+            if let Some(r) = range {
+                if u64::from(r.end) > n {
+                    return Err(format!(
+                        "range {}..{} exceeds alloc {} ({n} pages)",
+                        r.start, r.end, alloc.0
+                    ));
+                }
+            }
+            Ok(())
+        };
+        for op in &self.ops {
+            match op {
+                ReplayOp::MallocManaged { size, .. }
+                | ReplayOp::MallocDevice { size, .. }
+                | ReplayOp::MallocHost { size, .. } => pages.push(size.div_ceil(PAGE_SIZE)),
+                ReplayOp::HostWrite { alloc, range } | ReplayOp::HostRead { alloc, range } => {
+                    check(&pages, *alloc, Some(*range))?
+                }
+                ReplayOp::Advise { alloc, .. }
+                | ReplayOp::PrefetchBackground { alloc, .. }
+                | ReplayOp::PrefetchDefault { alloc, .. }
+                | ReplayOp::MemcpyH2D { alloc }
+                | ReplayOp::MemcpyD2H { alloc } => check(&pages, *alloc, None)?,
+                ReplayOp::Launch { phases } => {
+                    for p in phases {
+                        for a in &p.accesses {
+                            check(&pages, a.alloc, Some(a.range))?;
+                        }
+                    }
+                }
+                ReplayOp::DeviceSync => {}
+            }
+        }
+        if self.streams == 0 {
+            return Err("program header has zero streams".into());
+        }
+        Ok(())
+    }
+
+    /// Append the canonical wire form (the `.umt` v2 replay section).
+    pub(crate) fn encode_into(&self, buf: &mut Vec<u8>) {
+        put_str(buf, &self.app);
+        buf.push(self.platform.code());
+        buf.push(self.variant.code());
+        put_varint(buf, u64::from(self.streams));
+        buf.push(self.predictor.code());
+        buf.push(self.evictor.code());
+        buf.push(self.inject.scenario.code());
+        put_varint(buf, self.inject.seed);
+        put_varint(buf, self.ops.len() as u64);
+        for op in &self.ops {
+            match op {
+                ReplayOp::MallocManaged { name, size } => {
+                    buf.push(0);
+                    put_str(buf, name);
+                    put_varint(buf, *size);
+                }
+                ReplayOp::MallocDevice { name, size } => {
+                    buf.push(1);
+                    put_str(buf, name);
+                    put_varint(buf, *size);
+                }
+                ReplayOp::MallocHost { name, size } => {
+                    buf.push(2);
+                    put_str(buf, name);
+                    put_varint(buf, *size);
+                }
+                ReplayOp::HostWrite { alloc, range } => {
+                    buf.push(3);
+                    put_varint(buf, u64::from(alloc.0));
+                    put_varint(buf, u64::from(range.start));
+                    put_varint(buf, u64::from(range.end));
+                }
+                ReplayOp::HostRead { alloc, range } => {
+                    buf.push(4);
+                    put_varint(buf, u64::from(alloc.0));
+                    put_varint(buf, u64::from(range.start));
+                    put_varint(buf, u64::from(range.end));
+                }
+                ReplayOp::Advise { alloc, advise } => {
+                    buf.push(5);
+                    put_varint(buf, u64::from(alloc.0));
+                    buf.push(advise.code());
+                }
+                ReplayOp::PrefetchBackground { alloc, dst } => {
+                    buf.push(6);
+                    put_varint(buf, u64::from(alloc.0));
+                    buf.push(dst.code());
+                }
+                ReplayOp::PrefetchDefault { alloc, dst } => {
+                    buf.push(7);
+                    put_varint(buf, u64::from(alloc.0));
+                    buf.push(dst.code());
+                }
+                ReplayOp::MemcpyH2D { alloc } => {
+                    buf.push(8);
+                    put_varint(buf, u64::from(alloc.0));
+                }
+                ReplayOp::MemcpyD2H { alloc } => {
+                    buf.push(9);
+                    put_varint(buf, u64::from(alloc.0));
+                }
+                ReplayOp::Launch { phases } => {
+                    buf.push(10);
+                    put_varint(buf, phases.len() as u64);
+                    for p in phases {
+                        put_varint(buf, p.flops_bits);
+                        put_varint(buf, p.accesses.len() as u64);
+                        for a in &p.accesses {
+                            put_varint(buf, u64::from(a.alloc.0));
+                            put_varint(buf, u64::from(a.range.start));
+                            put_varint(buf, u64::from(a.range.end));
+                            buf.push(a.kind.code());
+                            put_varint(buf, a.passes_bits);
+                        }
+                    }
+                }
+                ReplayOp::DeviceSync => buf.push(11),
+            }
+        }
+    }
+
+    /// Decode one replay section (the reader sits right after the v2
+    /// presence byte). Errors name the first structural problem found.
+    pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<ReplayProgram, String> {
+        let app = r.string()?;
+        let platform = {
+            let c = r.byte()?;
+            PlatformId::from_code(c).ok_or(format!("unknown platform code {c}"))?
+        };
+        let variant = {
+            let c = r.byte()?;
+            Variant::from_code(c).ok_or(format!("unknown variant code {c}"))?
+        };
+        let streams = r.varint()?.try_into().map_err(|_| "streams overflow")?;
+        let predictor = {
+            let c = r.byte()?;
+            PredictorKind::from_code(c).ok_or(format!("unknown predictor code {c}"))?
+        };
+        let evictor = {
+            let c = r.byte()?;
+            EvictorKind::from_code(c).ok_or(format!("unknown evictor code {c}"))?
+        };
+        let scenario = {
+            let c = r.byte()?;
+            crate::sim::ChaosScenario::from_code(c)
+                .ok_or(format!("unknown chaos scenario code {c}"))?
+        };
+        let seed = r.varint()?;
+        let n_ops = r.varint()? as usize;
+        let mut ops = Vec::with_capacity(n_ops.min(1 << 20));
+        for _ in 0..n_ops {
+            ops.push(Self::decode_op(r)?);
+        }
+        Ok(ReplayProgram {
+            app,
+            platform,
+            variant,
+            streams,
+            predictor,
+            evictor,
+            inject: InjectConfig { scenario, seed },
+            ops,
+        })
+    }
+
+    fn decode_op(r: &mut Reader<'_>) -> Result<ReplayOp, String> {
+        fn alloc(r: &mut Reader<'_>) -> Result<AllocId, String> {
+            Ok(AllocId(r.varint()?.try_into().map_err(|_| "alloc id overflow")?))
+        }
+        fn page_range(r: &mut Reader<'_>) -> Result<PageRange, String> {
+            let start: u32 = r.varint()?.try_into().map_err(|_| "page index overflow")?;
+            let end: u32 = r.varint()?.try_into().map_err(|_| "page index overflow")?;
+            if start > end {
+                return Err(format!("inverted page range {start}..{end}"));
+            }
+            Ok(PageRange { start, end })
+        }
+        let code = r.byte()?;
+        Ok(match code {
+            0 => ReplayOp::MallocManaged { name: r.string()?, size: r.varint()? },
+            1 => ReplayOp::MallocDevice { name: r.string()?, size: r.varint()? },
+            2 => ReplayOp::MallocHost { name: r.string()?, size: r.varint()? },
+            3 => ReplayOp::HostWrite { alloc: alloc(r)?, range: page_range(r)? },
+            4 => ReplayOp::HostRead { alloc: alloc(r)?, range: page_range(r)? },
+            5 => {
+                let a = alloc(r)?;
+                let c = r.byte()?;
+                let advise = Advise::from_code(c).ok_or(format!("unknown advise code {c}"))?;
+                ReplayOp::Advise { alloc: a, advise }
+            }
+            6 | 7 => {
+                let a = alloc(r)?;
+                let c = r.byte()?;
+                let dst = crate::um::Loc::from_code(c).ok_or(format!("unknown loc code {c}"))?;
+                if code == 6 {
+                    ReplayOp::PrefetchBackground { alloc: a, dst }
+                } else {
+                    ReplayOp::PrefetchDefault { alloc: a, dst }
+                }
+            }
+            8 => ReplayOp::MemcpyH2D { alloc: alloc(r)? },
+            9 => ReplayOp::MemcpyD2H { alloc: alloc(r)? },
+            10 => {
+                let n_phases = r.varint()? as usize;
+                let mut phases = Vec::with_capacity(n_phases.min(1 << 16));
+                for _ in 0..n_phases {
+                    let flops_bits = r.varint()?;
+                    let n_acc = r.varint()? as usize;
+                    let mut accesses = Vec::with_capacity(n_acc.min(1 << 16));
+                    for _ in 0..n_acc {
+                        let a = alloc(r)?;
+                        let range = page_range(r)?;
+                        let c = r.byte()?;
+                        let kind = AccessKind::from_code(c)
+                            .ok_or(format!("unknown access kind code {c}"))?;
+                        accesses.push(ReplayAccess {
+                            alloc: a,
+                            range,
+                            kind,
+                            passes_bits: r.varint()?,
+                        });
+                    }
+                    phases.push(ReplayPhase { flops_bits, accesses });
+                }
+                ReplayOp::Launch { phases }
+            }
+            11 => ReplayOp::DeviceSync,
+            other => return Err(format!("unknown replay op code {other}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ChaosScenario;
+    use crate::um::Loc;
+    use crate::util::units::MIB;
+
+    pub(crate) fn sample_program() -> ReplayProgram {
+        ReplayProgram {
+            app: "test".into(),
+            platform: PlatformId::IntelPascal,
+            variant: Variant::UmAuto,
+            streams: 2,
+            predictor: PredictorKind::Learned,
+            evictor: EvictorKind::Lru,
+            inject: InjectConfig::default(),
+            ops: vec![
+                ReplayOp::MallocManaged { name: "a".into(), size: 4 * MIB },
+                ReplayOp::MallocManaged { name: "b".into(), size: 2 * MIB },
+                ReplayOp::HostWrite { alloc: AllocId(0), range: PageRange { start: 0, end: 64 } },
+                ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly },
+                ReplayOp::PrefetchBackground { alloc: AllocId(1), dst: Loc::Gpu },
+                ReplayOp::Launch {
+                    phases: vec![ReplayPhase {
+                        flops_bits: 1.5e6f64.to_bits(),
+                        accesses: vec![ReplayAccess {
+                            alloc: AllocId(0),
+                            range: PageRange { start: 0, end: 64 },
+                            kind: AccessKind::Read,
+                            passes_bits: 1.0f64.to_bits(),
+                        }],
+                    }],
+                },
+                ReplayOp::HostRead { alloc: AllocId(1), range: PageRange { start: 0, end: 32 } },
+                ReplayOp::DeviceSync,
+            ],
+        }
+    }
+
+    fn round_trip(p: &ReplayProgram) -> ReplayProgram {
+        let mut buf = Vec::new();
+        p.encode_into(&mut buf);
+        let mut r = Reader::new(&buf);
+        let decoded = ReplayProgram::decode_from(&mut r).expect("decode");
+        assert_eq!(r.remaining(), 0, "decode consumed everything");
+        decoded
+    }
+
+    #[test]
+    fn program_round_trips_byte_identically() {
+        let p = sample_program();
+        let decoded = round_trip(&p);
+        assert_eq!(decoded, p);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        p.encode_into(&mut a);
+        decoded.encode_into(&mut b);
+        assert_eq!(a, b, "re-encode is byte-identical");
+    }
+
+    #[test]
+    fn validate_accepts_sample_and_catches_bad_references() {
+        sample_program().validate().expect("sample valid");
+        let mut p = sample_program();
+        p.ops.push(ReplayOp::MemcpyD2H { alloc: AllocId(9) });
+        assert!(p.validate().is_err(), "unknown alloc id");
+        let mut p = sample_program();
+        p.ops.push(ReplayOp::HostRead {
+            alloc: AllocId(1),
+            range: PageRange { start: 0, end: 1 << 20 },
+        });
+        assert!(p.validate().is_err(), "range past the allocation");
+        let mut p = sample_program();
+        p.streams = 0;
+        assert!(p.validate().is_err(), "zero streams");
+    }
+
+    #[test]
+    fn decoder_rejects_unknown_op_and_inverted_range() {
+        let mut buf = Vec::new();
+        sample_program().encode_into(&mut buf);
+        let mut bad = buf.clone();
+        let last_sync = bad.len() - 1;
+        bad[last_sync] = 99; // DeviceSync opcode -> unknown
+        let mut r = Reader::new(&bad);
+        assert!(ReplayProgram::decode_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn counters_summarize_the_program() {
+        let p = sample_program();
+        assert_eq!(p.launches(), 1);
+        assert_eq!(p.footprint(), 6 * MIB);
+    }
+
+    #[test]
+    fn wire_codes_round_trip() {
+        for plat in PlatformId::ALL {
+            assert_eq!(PlatformId::from_code(plat.code()), Some(plat));
+        }
+        for v in Variant::ALL_WITH_AUTO {
+            assert_eq!(Variant::from_code(v.code()), Some(v));
+        }
+        for k in [AccessKind::Read, AccessKind::Write, AccessKind::ReadWrite] {
+            assert_eq!(AccessKind::from_code(k.code()), Some(k));
+        }
+        for s in ChaosScenario::ALL_ACTIVE.into_iter().chain([ChaosScenario::Off]) {
+            assert_eq!(ChaosScenario::from_code(s.code()), Some(s));
+        }
+        for p in [PredictorKind::Heuristic, PredictorKind::Learned] {
+            assert_eq!(PredictorKind::from_code(p.code()), Some(p));
+        }
+        for e in [EvictorKind::Lru, EvictorKind::Learned] {
+            assert_eq!(EvictorKind::from_code(e.code()), Some(e));
+        }
+        for c in 0..=8u8 {
+            let a = Advise::from_code(c).expect("advise code");
+            assert_eq!(a.code(), c);
+        }
+        assert_eq!(Advise::from_code(9), None);
+        for l in [Loc::Cpu, Loc::Gpu] {
+            assert_eq!(Loc::from_code(l.code()), Some(l));
+        }
+    }
+}

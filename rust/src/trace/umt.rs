@@ -24,7 +24,14 @@
 //!          alloc+1 (0 = none), stream, tag length + UTF-8 bytes
 //! decis.   n, then per decision: at, reason byte, rung byte,
 //!          stream, alloc+1 (0 = none), bytes, aux
+//! replay   (v2 only) presence byte, then the replay section — the
+//!          recorded verb program; see [`super::replay`] and
+//!          `docs/REPLAY.md`
 //! ```
+//!
+//! Version 2 appends the optional replay section after the decision
+//! table; the decoder still accepts v1 files (they decode with
+//! `replay: None` and re-encode byte-identically as v1).
 
 use crate::gpu::stream::StreamId;
 use crate::mem::AllocId;
@@ -32,14 +39,17 @@ use crate::util::units::{Bytes, Ns};
 
 use super::decision::{Decision, ReasonCode, Rung};
 use super::event::{Trace, TraceEvent, TraceKind};
+use super::replay::ReplayProgram;
 
 /// Current format version. Bump on any layout change; the decoder
-/// rejects versions it does not know.
-pub const UMT_VERSION: u64 = 1;
+/// rejects versions it does not know (and accepts every older one it
+/// still understands — currently v1, which simply lacks the replay
+/// section).
+pub const UMT_VERSION: u64 = 2;
 
 const MAGIC: &[u8; 4] = b"UMT\0";
 
-fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+pub(crate) fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
     loop {
         let b = (v & 0x7f) as u8;
         v >>= 7;
@@ -51,25 +61,33 @@ fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
     }
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_varint(buf, s.len() as u64);
     buf.extend_from_slice(s.as_bytes());
 }
 
 /// Streaming decoder over a byte slice (position-tracking reads).
-struct Reader<'a> {
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn byte(&mut self) -> Result<u8, String> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn byte(&mut self) -> Result<u8, String> {
         let b = *self.buf.get(self.pos).ok_or("truncated file")?;
         self.pos += 1;
         Ok(b)
     }
 
-    fn varint(&mut self) -> Result<u64, String> {
+    pub(crate) fn varint(&mut self) -> Result<u64, String> {
         let mut v: u64 = 0;
         for shift in (0..64).step_by(7) {
             let b = self.byte()?;
@@ -86,7 +104,7 @@ impl<'a> Reader<'a> {
         Err("varint overruns 64 bits".into())
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    pub(crate) fn string(&mut self) -> Result<String, String> {
         let len = self.varint()? as usize;
         let end = self.pos.checked_add(len).filter(|&e| e <= self.buf.len());
         let end = end.ok_or("truncated string")?;
@@ -136,6 +154,9 @@ pub struct UmtTrace {
     pub events: Vec<UmtEvent>,
     /// Stored decisions, in emission order.
     pub decisions: Vec<Decision>,
+    /// The replayable verb program (v2 captures recorded with
+    /// `RunOpts::record`; `None` for v1 files and event-only captures).
+    pub replay: Option<ReplayProgram>,
 }
 
 impl UmtTrace {
@@ -164,7 +185,17 @@ impl UmtTrace {
                 })
                 .collect(),
             decisions: trace.decisions().to_vec(),
+            replay: None,
         }
+    }
+
+    /// A v2 capture holding only a replay program — the form `umbra
+    /// synth --out` writes for committable corpus files (valid empty
+    /// event/decision tables, program attached).
+    pub fn for_replay(program: ReplayProgram, label: &str) -> UmtTrace {
+        let mut t = UmtTrace::from_trace(&Trace::enabled(), label);
+        t.replay = Some(program);
+        t
     }
 
     /// Serialize to the canonical `.umt` byte form.
@@ -205,6 +236,17 @@ impl UmtTrace {
             put_varint(&mut buf, d.bytes);
             put_varint(&mut buf, d.aux);
         }
+        // The replay section exists only from v2 on; a decoded v1 file
+        // keeps `version == 1` and re-encodes byte-identically.
+        if self.version >= 2 {
+            match &self.replay {
+                None => buf.push(0),
+                Some(p) => {
+                    buf.push(1);
+                    p.encode_into(&mut buf);
+                }
+            }
+        }
         buf
     }
 
@@ -216,8 +258,10 @@ impl UmtTrace {
         }
         let mut r = Reader { buf: bytes, pos: MAGIC.len() };
         let version = r.varint()?;
-        if version != UMT_VERSION {
-            return Err(format!("unsupported .umt version {version} (expected {UMT_VERSION})"));
+        if !(1..=UMT_VERSION).contains(&version) {
+            return Err(format!(
+                "unsupported .umt version {version} (this build reads 1..={UMT_VERSION})"
+            ));
         }
         let label = r.string()?;
         let n_kinds = r.varint()? as usize;
@@ -279,6 +323,15 @@ impl UmtTrace {
             let aux = r.varint()?;
             decisions.push(Decision { at, stream, alloc, rung, reason, bytes, aux });
         }
+        let replay = if version >= 2 {
+            match r.byte()? {
+                0 => None,
+                1 => Some(ReplayProgram::decode_from(&mut r)?),
+                b => return Err(format!("bad replay-section presence byte {b}")),
+            }
+        } else {
+            None
+        };
         if r.pos != bytes.len() {
             return Err(format!("{} trailing bytes after the decision table", bytes.len() - r.pos));
         }
@@ -293,6 +346,7 @@ impl UmtTrace {
             dropped_decisions,
             events,
             decisions,
+            replay,
         })
     }
 }
@@ -387,6 +441,60 @@ mod tests {
         bytes.push(99); // version varint
         let err = UmtTrace::decode(&bytes).unwrap_err();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v1_files_still_decode_and_reencode_byte_identically() {
+        // Craft a v1 byte stream: encode with the version field forced
+        // to 1 (the encoder then writes no replay section, which is
+        // exactly the v1 layout).
+        let mut ut = UmtTrace::from_trace(&sample_trace(), "legacy");
+        ut.version = 1;
+        let v1_bytes = ut.encode();
+        let decoded = UmtTrace::decode(&v1_bytes).expect("v1 decodes");
+        assert_eq!(decoded.version, 1);
+        assert!(decoded.replay.is_none());
+        assert_eq!(decoded.encode(), v1_bytes, "v1 re-encode byte-identical");
+    }
+
+    #[test]
+    fn v2_replay_section_round_trips() {
+        use super::super::replay::{ReplayOp, ReplayProgram};
+        use crate::apps::Variant;
+        use crate::platform::PlatformId;
+        use crate::sim::InjectConfig;
+        use crate::um::{EvictorKind, PredictorKind};
+        let prog = ReplayProgram {
+            app: "synth:zipf".into(),
+            platform: PlatformId::P9Volta,
+            variant: Variant::UmAuto,
+            streams: 2,
+            predictor: PredictorKind::Learned,
+            evictor: EvictorKind::Lru,
+            inject: InjectConfig::default(),
+            ops: vec![
+                ReplayOp::MallocManaged { name: "a".into(), size: 1 << 22 },
+                ReplayOp::DeviceSync,
+            ],
+        };
+        let ut = UmtTrace::for_replay(prog.clone(), "corpus");
+        assert_eq!(ut.version, UMT_VERSION);
+        let bytes = ut.encode();
+        let decoded = UmtTrace::decode(&bytes).expect("decode v2");
+        assert_eq!(decoded.encode(), bytes, "re-encode byte-identical");
+        assert_eq!(decoded.replay.as_ref(), Some(&prog));
+        assert_eq!(decoded.label, "corpus");
+        // A with-events capture carrying a program also round-trips.
+        let mut ut = UmtTrace::from_trace(&sample_trace(), "both");
+        ut.replay = Some(prog.clone());
+        let bytes = ut.encode();
+        let decoded = UmtTrace::decode(&bytes).expect("decode v2 with events");
+        assert_eq!(decoded.encode(), bytes);
+        assert_eq!(decoded.replay, Some(prog));
+        // Truncating inside the replay section fails cleanly.
+        let mut cut = bytes.clone();
+        cut.truncate(cut.len() - 1);
+        assert!(UmtTrace::decode(&cut).is_err());
     }
 
     #[test]

@@ -78,6 +78,22 @@ impl PredictorKind {
             _ => None,
         }
     }
+
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            PredictorKind::Heuristic => 0,
+            PredictorKind::Learned => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<PredictorKind> {
+        match c {
+            0 => Some(PredictorKind::Heuristic),
+            1 => Some(PredictorKind::Learned),
+            _ => None,
+        }
+    }
 }
 
 /// One ranked predicted next access.

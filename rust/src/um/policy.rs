@@ -44,6 +44,22 @@ impl EvictorKind {
             _ => None,
         }
     }
+
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            EvictorKind::Lru => 0,
+            EvictorKind::Learned => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<EvictorKind> {
+        match c {
+            0 => Some(EvictorKind::Lru),
+            1 => Some(EvictorKind::Learned),
+            _ => None,
+        }
+    }
 }
 
 /// `cudaMemAdvise` advice values (paper §II-B).
@@ -61,11 +77,63 @@ pub enum Advise {
     UnsetAccessedBy(Loc),
 }
 
+impl Advise {
+    /// Stable wire code (`.umt` replay section): the full advise ×
+    /// location product packed into one byte, so a decoded capture
+    /// re-encodes canonically with no alias ambiguity.
+    pub fn code(self) -> u8 {
+        match self {
+            Advise::ReadMostly => 0,
+            Advise::PreferredLocation(Loc::Cpu) => 1,
+            Advise::PreferredLocation(Loc::Gpu) => 2,
+            Advise::AccessedBy(Loc::Cpu) => 3,
+            Advise::AccessedBy(Loc::Gpu) => 4,
+            Advise::UnsetReadMostly => 5,
+            Advise::UnsetPreferredLocation => 6,
+            Advise::UnsetAccessedBy(Loc::Cpu) => 7,
+            Advise::UnsetAccessedBy(Loc::Gpu) => 8,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Advise> {
+        match c {
+            0 => Some(Advise::ReadMostly),
+            1 => Some(Advise::PreferredLocation(Loc::Cpu)),
+            2 => Some(Advise::PreferredLocation(Loc::Gpu)),
+            3 => Some(Advise::AccessedBy(Loc::Cpu)),
+            4 => Some(Advise::AccessedBy(Loc::Gpu)),
+            5 => Some(Advise::UnsetReadMostly),
+            6 => Some(Advise::UnsetPreferredLocation),
+            7 => Some(Advise::UnsetAccessedBy(Loc::Cpu)),
+            8 => Some(Advise::UnsetAccessedBy(Loc::Gpu)),
+            _ => None,
+        }
+    }
+}
+
 /// A processor / memory location.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Loc {
     Cpu,
     Gpu,
+}
+
+impl Loc {
+    /// Stable wire code (`.umt` replay section).
+    pub fn code(self) -> u8 {
+        match self {
+            Loc::Cpu => 0,
+            Loc::Gpu => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Loc> {
+        match c {
+            0 => Some(Loc::Cpu),
+            1 => Some(Loc::Gpu),
+            _ => None,
+        }
+    }
 }
 
 /// Driver policy parameters.

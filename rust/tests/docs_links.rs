@@ -142,6 +142,7 @@ fn required_documents_exist_and_are_linked() {
         "docs/EVICTION.md",
         "docs/ROBUSTNESS.md",
         "docs/OBSERVABILITY.md",
+        "docs/REPLAY.md",
     ] {
         assert!(root.join(doc).exists(), "{doc} missing");
     }
@@ -151,8 +152,10 @@ fn required_documents_exist_and_are_linked() {
             && readme.contains("docs/PREDICTOR.md")
             && readme.contains("docs/EVICTION.md")
             && readme.contains("docs/ROBUSTNESS.md")
-            && readme.contains("docs/OBSERVABILITY.md"),
-        "README must link the architecture, predictor, eviction, robustness and observability docs"
+            && readme.contains("docs/OBSERVABILITY.md")
+            && readme.contains("docs/REPLAY.md"),
+        "README must link the architecture, predictor, eviction, robustness, observability \
+         and replay docs"
     );
     // The eviction doc's headline sections are link targets from the
     // README and ARCHITECTURE: pin their anchors.
@@ -192,6 +195,23 @@ fn required_documents_exist_and_are_linked() {
         assert!(
             anchors(&observability).iter().any(|a| a == anchor || a.starts_with(anchor)),
             "docs/OBSERVABILITY.md lost the '{anchor}' section"
+        );
+    }
+    // And the replay doc: the format/semantics/generator/corpus
+    // sections are linked from the README, OBSERVABILITY and the
+    // replay-layer rustdoc.
+    let replay = fs::read_to_string(root.join("docs/REPLAY.md")).unwrap();
+    let required = [
+        "the-replay-section",
+        "replay-semantics",
+        "what-is-and-isnt-reproduced",
+        "generator-parameter-reference",
+        "adding-a-corpus-trace",
+    ];
+    for anchor in required {
+        assert!(
+            anchors(&replay).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/REPLAY.md lost the '{anchor}' section"
         );
     }
 }

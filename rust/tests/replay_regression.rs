@@ -1,0 +1,234 @@
+//! The committed-corpus decision-quality regression suite.
+//!
+//! Every trace under `corpora/` is decoded (with the canonical
+//! round-trip verified), structurally validated, and replayed on both
+//! paper platforms in both predictor modes. Numeric expectations live
+//! in `corpora/expectations.json` (refreshed from `umbra replay
+//! corpora --out`, see docs/REPLAY.md); the perturbation tests pin the
+//! suite's sensitivity — deliberately breaking a policy constant such
+//! as `min_confidence` must change the replayed metrics.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use umbra::apps::replay::{replay, ReplayConfig};
+use umbra::apps::RunOpts;
+use umbra::platform::PlatformId;
+use umbra::trace::{ReplayProgram, UmtTrace};
+use umbra::um::{AutoConfig, PredictorKind};
+use umbra::util::jsonout::Json;
+
+fn corpora_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").join("corpora")
+}
+
+/// All committed corpus traces, sorted by file name.
+fn corpus() -> Vec<(String, ReplayProgram)> {
+    let mut files: Vec<PathBuf> = fs::read_dir(corpora_dir())
+        .expect("corpora/ exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "umt"))
+        .collect();
+    files.sort();
+    files
+        .iter()
+        .map(|f| {
+            let bytes = fs::read(f).unwrap_or_else(|e| panic!("read {}: {e}", f.display()));
+            assert!(
+                bytes.len() < 100 * 1024,
+                "{}: {} bytes exceeds the 100 KiB corpus budget",
+                f.display(),
+                bytes.len()
+            );
+            let ut = UmtTrace::decode(&bytes)
+                .unwrap_or_else(|e| panic!("{}: decode failed: {e}", f.display()));
+            assert_eq!(ut.encode(), bytes, "{}: decode→re-encode byte-identical", f.display());
+            let prog = ut
+                .replay
+                .unwrap_or_else(|| panic!("{}: corpus trace has no replay section", f.display()));
+            prog.validate().unwrap_or_else(|e| panic!("{}: invalid program: {e}", f.display()));
+            let stem = f.file_stem().expect("stem").to_string_lossy().into_owned();
+            (stem, prog)
+        })
+        .collect()
+}
+
+fn config(prog: &ReplayProgram, platform: PlatformId, predictor: PredictorKind) -> ReplayConfig {
+    ReplayConfig { platform, predictor, ..ReplayConfig::from_program(prog) }
+}
+
+#[test]
+fn corpus_covers_the_regime_classes() {
+    let stems: Vec<String> = corpus().into_iter().map(|(s, _)| s).collect();
+    assert!(stems.len() >= 8, "starter corpus has 8 traces, found {stems:?}");
+    for required in [
+        "seq_stream",
+        "cyclic_oversub",
+        "random",
+        "multi_stream",
+        "adv_zipf",
+        "adv_bursty",
+        "adv_chase",
+        "adv_tenant",
+    ] {
+        assert!(stems.iter().any(|s| s == required), "corpus lost the '{required}' trace");
+    }
+}
+
+#[test]
+fn every_trace_replays_on_both_platforms_and_predictors() {
+    for (stem, prog) in corpus() {
+        for platform in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+            for predictor in [PredictorKind::Heuristic, PredictorKind::Learned] {
+                let cfg = config(&prog, platform, predictor);
+                let r = replay(&prog, &cfg, &RunOpts::default());
+                let label = format!("{stem}/{}/{}", platform.name(), predictor.name());
+                assert!(r.kernel_time.0 > 0, "{label}: zero kernel time");
+                assert_eq!(
+                    r.kernel_times.len(),
+                    prog.launches(),
+                    "{label}: one timing per launch"
+                );
+                assert!(r.wall_time >= r.kernel_time, "{label}: wall >= kernel");
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_replay_is_deterministic() {
+    for (stem, prog) in corpus() {
+        let cfg = config(&prog, PlatformId::IntelPascal, PredictorKind::Learned);
+        let a = replay(&prog, &cfg, &RunOpts::default());
+        let b = replay(&prog, &cfg, &RunOpts::default());
+        assert_eq!(a.metrics, b.metrics, "{stem}: metrics drift across replays");
+        assert_eq!(a.kernel_times, b.kernel_times, "{stem}: timings drift across replays");
+    }
+}
+
+/// Compare replayed metrics against `corpora/expectations.json`. An
+/// empty `traces` list is the bootstrap state (schema checked, numeric
+/// pinning dormant); once entries exist, every one must match a
+/// replayed (trace, platform, predictor) tuple — a stale expectation
+/// is a failure, never a silent skip.
+#[test]
+fn replayed_metrics_match_the_committed_expectations() {
+    let path = corpora_dir().join("expectations.json");
+    let text = fs::read_to_string(&path).expect("corpora/expectations.json exists");
+    let json = Json::parse(&text).expect("expectations.json parses");
+    let tolerance = json.get("tolerance").and_then(Json::as_f64).expect("tolerance field");
+    let expected = json.get("traces").and_then(Json::as_arr).expect("traces array");
+    if expected.is_empty() {
+        // Bootstrap: nothing pinned yet. The other tests in this file
+        // still gate structure, determinism and sensitivity.
+        return;
+    }
+    let corpus = corpus();
+    let mut checked = 0usize;
+    for e in expected {
+        let stem = e.get("trace").and_then(Json::as_str).expect("trace name");
+        let plat = e.get("platform").and_then(Json::as_str).expect("platform name");
+        let pred = e.get("predictor").and_then(Json::as_str).expect("predictor name");
+        let platform = PlatformId::parse(plat).unwrap_or_else(|| panic!("bad platform '{plat}'"));
+        let predictor =
+            PredictorKind::parse(pred).unwrap_or_else(|| panic!("bad predictor '{pred}'"));
+        let (_, prog) = corpus
+            .iter()
+            .find(|(s, _)| s == stem)
+            .unwrap_or_else(|| panic!("expectation for unknown trace '{stem}'"));
+        let r = replay(prog, &config(prog, platform, predictor), &RunOpts::default());
+        let label = format!("{stem}/{plat}/{pred}");
+        // Kernel time pins within the relative tolerance band (exact
+        // on refresh; the band absorbs deliberate re-calibrations).
+        let want = e.get("kernel_ns").and_then(Json::as_f64).expect("kernel_ns");
+        let got = r.kernel_time.0 as f64;
+        assert!(
+            (got - want).abs() <= want * tolerance,
+            "{label}: kernel_ns {got} outside ±{tolerance} of pinned {want}"
+        );
+        // Decision-quality metrics pin within an absolute band.
+        for (field, got) in [
+            ("accuracy", r.metrics.prediction_accuracy()),
+            ("coverage", r.metrics.prediction_coverage()),
+        ] {
+            let Some(want) = e.get(field).and_then(Json::as_f64) else { continue };
+            if want.is_nan() || got.is_nan() {
+                continue;
+            }
+            assert!(
+                (got - want).abs() <= tolerance,
+                "{label}: {field} {got:.4} outside ±{tolerance} of pinned {want:.4}"
+            );
+        }
+        if let Some(want) = e.get("learned_predictions").and_then(Json::as_f64) {
+            let got = r.metrics.auto_learned_predictions as f64;
+            assert!(
+                (got - want).abs() <= want.max(1.0) * tolerance,
+                "{label}: learned_predictions {got} outside ±{tolerance} of pinned {want}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked > 0, "expectations present but none were checked");
+}
+
+#[test]
+fn perturbing_min_confidence_changes_the_replayed_metrics() {
+    // The acceptance criterion for the regression suite: deliberately
+    // breaking a policy constant must show up. min_confidence = 2.0 is
+    // unsatisfiable (confidence caps at 1.0), so the learned predictor
+    // can never fire.
+    let (_, prog) = corpus()
+        .into_iter()
+        .find(|(s, _)| s == "adv_chase")
+        .expect("adv_chase trace present");
+    let cfg = config(&prog, PlatformId::IntelPascal, PredictorKind::Learned);
+    let healthy = replay(&prog, &cfg, &RunOpts::default());
+    assert!(
+        healthy.metrics.auto_learned_predictions > 0,
+        "the chase stride cycle must be learnable by the delta table"
+    );
+    let perturbed_cfg = ReplayConfig {
+        auto_cfg: Some(AutoConfig { min_confidence: 2.0, ..AutoConfig::default() }),
+        ..cfg
+    };
+    let perturbed = replay(&prog, &perturbed_cfg, &RunOpts::default());
+    assert_eq!(
+        perturbed.metrics.auto_learned_predictions, 0,
+        "unsatisfiable confidence gate must silence the learned predictor"
+    );
+    assert_ne!(
+        perturbed.metrics, healthy.metrics,
+        "the regression suite must detect the perturbation"
+    );
+}
+
+#[test]
+fn chase_trace_separates_the_predictors() {
+    // The adversarial chase pattern exists precisely because the two
+    // predictors disagree on it: the delta table learns the stride
+    // cycle, the sequential heuristic cannot.
+    let (_, prog) = corpus()
+        .into_iter()
+        .find(|(s, _)| s == "adv_chase")
+        .expect("adv_chase trace present");
+    let learned = replay(
+        &prog,
+        &config(&prog, PlatformId::IntelPascal, PredictorKind::Learned),
+        &RunOpts::default(),
+    );
+    let heuristic = replay(
+        &prog,
+        &config(&prog, PlatformId::IntelPascal, PredictorKind::Heuristic),
+        &RunOpts::default(),
+    );
+    assert_ne!(
+        learned.metrics, heuristic.metrics,
+        "predictor modes must be distinguishable on the chase trace"
+    );
+    assert_eq!(
+        heuristic.metrics.auto_learned_predictions, 0,
+        "heuristic mode never emits learned predictions"
+    );
+}

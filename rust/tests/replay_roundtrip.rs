@@ -1,0 +1,109 @@
+//! Capture → replay fidelity (the tentpole acceptance property): a
+//! recorded app run, replayed on the same platform with no overrides,
+//! reproduces the originating run's `UmMetrics` and every `Ns`
+//! byte-identically — the simulator is deterministic, replay re-issues
+//! the identical verb sequence, so the whole-struct equality oracle
+//! holds across all six variants, both regimes and both paper
+//! platforms. Plus the `umbra synth` determinism property: same seed
+//! and parameters are byte-identical, different seeds differ.
+
+use umbra::apps::replay::{replay, ReplayConfig};
+use umbra::apps::{AppId, Regime, RunOpts, Variant};
+use umbra::platform::PlatformId;
+use umbra::sim::synth::{self, SynthParams, SynthPattern};
+use umbra::trace::UmtTrace;
+use umbra::util::units::MIB;
+
+/// Record one BS run and return its result (program attached).
+fn recorded_run(
+    platform: PlatformId,
+    variant: Variant,
+    regime: Regime,
+    streams: u32,
+) -> umbra::apps::RunResult {
+    let app = AppId::Bs.build_for(platform, regime);
+    let opts = RunOpts { record: true, streams, ..Default::default() };
+    app.run_with(&platform.spec(), variant, &opts)
+}
+
+#[test]
+fn faithful_replay_is_byte_identical_across_the_matrix() {
+    for platform in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for regime in Regime::ALL {
+            for variant in Variant::ALL_WITH_AUTO {
+                let original = recorded_run(platform, variant, regime, 1);
+                let prog = original.replay.clone().expect("recorded");
+                prog.validate().expect("captured program validates");
+                let cfg = ReplayConfig::from_program(&prog);
+                let replayed = replay(&prog, &cfg, &RunOpts::default());
+                let label = format!("{}/{}/{}", platform.name(), variant.name(), regime.name());
+                assert_eq!(
+                    replayed.metrics, original.metrics,
+                    "{label}: UmMetrics must be byte-identical"
+                );
+                assert_eq!(replayed.kernel_time, original.kernel_time, "{label}: kernel Ns");
+                assert_eq!(replayed.kernel_times, original.kernel_times, "{label}: per-launch Ns");
+                assert_eq!(replayed.wall_time, original.wall_time, "{label}: wall Ns");
+            }
+        }
+    }
+}
+
+#[test]
+fn faithful_replay_holds_with_multiple_streams() {
+    let original =
+        recorded_run(PlatformId::IntelPascal, Variant::UmAuto, Regime::Oversubscribed, 2);
+    let prog = original.replay.clone().expect("recorded");
+    assert_eq!(prog.streams, 2, "stream count captured in the header");
+    let replayed = replay(&prog, &ReplayConfig::from_program(&prog), &RunOpts::default());
+    assert_eq!(replayed.metrics, original.metrics);
+    assert_eq!(replayed.kernel_times, original.kernel_times);
+}
+
+#[test]
+fn recapture_of_a_replay_reproduces_the_program() {
+    // Replaying with record on yields the same program back — replay
+    // is a fixed point of capture.
+    let original = recorded_run(PlatformId::IntelPascal, Variant::UmBoth, Regime::InMemory, 1);
+    let prog = original.replay.clone().expect("recorded");
+    let replayed = replay(
+        &prog,
+        &ReplayConfig::from_program(&prog),
+        &RunOpts { record: true, ..Default::default() },
+    );
+    assert_eq!(replayed.replay.as_ref(), Some(&prog), "re-capture == input program");
+}
+
+#[test]
+fn synth_same_seed_is_byte_identical_and_seeds_differ() {
+    for pattern in SynthPattern::ALL {
+        let params =
+            SynthParams { pattern, footprint: 64 * MIB, launches: 24, ..Default::default() };
+        let a = synth::generate(&params);
+        let b = synth::generate(&params);
+        assert_eq!(a, b, "{}: same seed+params must generate identical programs", pattern.name());
+        let bytes_a = UmtTrace::for_replay(a.clone(), "t").encode();
+        let bytes_b = UmtTrace::for_replay(b, "t").encode();
+        assert_eq!(bytes_a, bytes_b, "{}: encoded captures byte-identical", pattern.name());
+        let c = synth::generate(&SynthParams { seed: 99, ..params });
+        assert_ne!(a, c, "{}: a different seed must generate a different program", pattern.name());
+    }
+}
+
+#[test]
+fn synth_programs_replay_deterministically() {
+    // Live-run determinism for the generator path: two replays of the
+    // same generated program agree on everything.
+    let prog = synth::generate(&SynthParams {
+        pattern: SynthPattern::Zipf { hot_fraction: 0.1, hot_bias: 0.8 },
+        footprint: 128 * MIB,
+        launches: 32,
+        ..Default::default()
+    });
+    let cfg = ReplayConfig::from_program(&prog);
+    let a = replay(&prog, &cfg, &RunOpts::default());
+    let b = replay(&prog, &cfg, &RunOpts::default());
+    assert_eq!(a.metrics, b.metrics);
+    assert_eq!(a.kernel_times, b.kernel_times);
+    assert_eq!(a.wall_time, b.wall_time);
+}

@@ -43,7 +43,7 @@ fn single_stream_runs_bit_identical_all_variants_both_platforms() {
                 let app = AppId::Bs.build_for(platform, regime);
                 let plat = platform.spec();
                 let legacy = app.run(&plat, variant, false);
-                let opts = RunOpts { trace: false, streams: 1 };
+                let opts = RunOpts { trace: false, streams: 1, ..Default::default() };
                 let threaded = app.run_with(&plat, variant, &opts);
                 let label = format!("{}/{}/{}", platform.name(), variant.name(), regime.name());
                 assert_eq!(legacy.kernel_time, threaded.kernel_time, "{label}: kernel time");
@@ -164,7 +164,7 @@ fn two_streams_on_one_allocation_classify_per_stream() {
 fn two_stream_auto_run_is_deterministic_and_counts_per_stream() {
     let app = AppId::Bs.build_for(PlatformId::IntelPascal, Regime::InMemory);
     let plat = PlatformId::IntelPascal.spec();
-    let opts = RunOpts { trace: false, streams: 2 };
+    let opts = RunOpts { trace: false, streams: 2, ..Default::default() };
     let a = app.run_with(&plat, Variant::UmAuto, &opts);
     let b = app.run_with(&plat, Variant::UmAuto, &opts);
     assert_eq!(a.kernel_time, b.kernel_time, "multi-stream runs are deterministic");

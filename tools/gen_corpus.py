@@ -1,0 +1,330 @@
+#!/usr/bin/env python3
+"""Generate the committed replay corpus (corpora/*.umt).
+
+Each corpus file is a .umt v2 capture holding only a replay section —
+the exact byte form `UmtTrace::for_replay(program, label).encode()`
+produces (empty event/decision tables, program attached), so the
+inspector's decode→re-encode byte-identity check passes on every file.
+
+The programs are hand-designed, fully deterministic access patterns
+(arithmetic walks + a small LCG — no RNG library), one per regime
+class the UM policy engine distinguishes, plus adversarial generator
+shapes. Regenerate with:
+
+    python3 tools/gen_corpus.py
+
+and refresh corpora/expectations.json from a replay of the result
+(see docs/REPLAY.md, "Adding a corpus trace").
+"""
+
+import os
+import struct
+
+PAGE = 64 * 1024  # crate::mem::PAGE_SIZE
+MIB = 1 << 20
+GIB = 1 << 30
+
+# Wire codes (rust/src/trace/replay.rs).
+PLATFORM = {"intel-pascal": 0, "intel-volta": 1, "p9-volta": 2}
+VARIANT_UM_AUTO = 5
+PREDICTOR_LEARNED = 1
+EVICTOR_LRU = 0
+SCENARIO_OFF = 0
+INJECT_DEFAULT_SEED = 0xC4A0_5EED
+
+OP_MALLOC_MANAGED = 0
+OP_HOST_WRITE = 3
+OP_HOST_READ = 4
+OP_LAUNCH = 10
+OP_DEVICE_SYNC = 11
+
+KIND_READ = 0
+KIND_READ_WRITE = 2
+
+N_TRACE_KINDS = 11  # TraceKind::ALL
+N_REASON_CODES = 25  # ReasonCode::ALL
+
+
+def varint(v):
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def string(s):
+    b = s.encode("utf-8")
+    return varint(len(b)) + b
+
+
+def f64_bits(x):
+    return struct.unpack(">Q", struct.pack(">d", float(x)))[0]
+
+
+class Program:
+    """Builder mirroring ReplayProgram + its canonical wire form."""
+
+    def __init__(self, app, streams=1):
+        self.app = app
+        self.streams = streams
+        self.ops = []
+        self.pages = []  # per-alloc page counts, for bounds checks
+
+    def malloc_managed(self, name, size):
+        self.ops.append(bytes([OP_MALLOC_MANAGED]) + string(name) + varint(size))
+        self.pages.append((size + PAGE - 1) // PAGE)
+        return len(self.pages) - 1
+
+    def _access(self, alloc, start, end):
+        assert 0 <= alloc < len(self.pages), "alloc before use"
+        assert 0 <= start <= end <= self.pages[alloc], (
+            f"range {start}..{end} exceeds alloc {alloc} ({self.pages[alloc]} pages)"
+        )
+        return varint(alloc) + varint(start) + varint(end)
+
+    def host_write(self, alloc, start, end):
+        self.ops.append(bytes([OP_HOST_WRITE]) + self._access(alloc, start, end))
+
+    def host_read(self, alloc, start, end):
+        self.ops.append(bytes([OP_HOST_READ]) + self._access(alloc, start, end))
+
+    def launch(self, alloc, start, end, kind=KIND_READ):
+        # One phase, one access; flops scale with the touched bytes
+        # (the sim::synth convention) and passes stay at 1.0.
+        phase = (
+            varint(f64_bits((end - start) * PAGE))
+            + varint(1)
+            + self._access(alloc, start, end)
+            + bytes([kind])
+            + varint(f64_bits(1.0))
+        )
+        self.ops.append(bytes([OP_LAUNCH]) + varint(1) + phase)
+
+    def device_sync(self):
+        self.ops.append(bytes([OP_DEVICE_SYNC]))
+
+    def encode_section(self, platform):
+        out = bytearray()
+        out += string(self.app)
+        out += bytes([PLATFORM[platform], VARIANT_UM_AUTO])
+        out += varint(self.streams)
+        out += bytes([PREDICTOR_LEARNED, EVICTOR_LRU, SCENARIO_OFF])
+        out += varint(INJECT_DEFAULT_SEED)
+        out += varint(len(self.ops))
+        for op in self.ops:
+            out += op
+        return bytes(out)
+
+
+def umt_file(program, platform, label):
+    """UmtTrace::for_replay(program, label).encode() — v2, empty tables."""
+    out = bytearray(b"UMT\0")
+    out += varint(2)  # version
+    out += string(label)
+    out += varint(N_TRACE_KINDS)
+    out += b"\x00\x00\x00" * N_TRACE_KINDS  # count, total_ns, total_bytes
+    out += varint(N_REASON_CODES)
+    out += b"\x00" * N_REASON_CODES
+    out += b"\x00\x00"  # dropped events / decisions
+    out += b"\x00\x00"  # stored events / decisions
+    out += b"\x01"  # replay section present
+    out += program.encode_section(platform)
+    return bytes(out)
+
+
+class Lcg:
+    """Tiny deterministic LCG (Numerical Recipes constants)."""
+
+    def __init__(self, seed):
+        self.state = seed & 0xFFFFFFFF
+
+    def below(self, n):
+        self.state = (self.state * 1664525 + 1013904223) & 0xFFFFFFFF
+        return self.state % n
+
+
+def setup(prog, allocs):
+    """mallocs + first-touch host writes, in recorded order."""
+    ids = []
+    for name, size in allocs:
+        ids.append(prog.malloc_managed(name, size))
+    for a in ids:
+        prog.host_write(a, 0, prog.pages[a])
+    return ids
+
+
+def finish(prog, alloc0):
+    prog.host_read(alloc0, 0, prog.pages[alloc0])
+    prog.device_sync()
+
+
+def kind_for(i):
+    # Deterministic read-mostly mix: every 4th launch writes back.
+    return KIND_READ_WRITE if i % 4 == 3 else KIND_READ
+
+
+def seq_stream():
+    # Linear streaming: two full passes over 2 GiB, the regime the
+    # sequential heuristic and the delta table both handle.
+    p = Program("corpus:seq-stream")
+    [a] = setup(p, [("seq", 2 * GIB)])
+    window, total = 256, p.pages[a]
+    pos = 0
+    for i in range(2 * total // window):
+        p.launch(a, pos, pos + window, kind_for(i))
+        pos = (pos + window) % total
+    finish(p, a)
+    return p
+
+
+def cyclic_oversub():
+    # Cyclic walk over 6 GiB — oversubscribes Intel-Pascal's 4 GiB,
+    # fits the Volta platforms; the eviction-pathology regime class.
+    p = Program("corpus:cyclic-oversub")
+    [a] = setup(p, [("cyc", 6 * GIB)])
+    window, total = 1024, p.pages[a]
+    pos = 0
+    for i in range(192):
+        p.launch(a, pos, pos + window, kind_for(i))
+        pos = (pos + window) % (total - window + 1)
+    finish(p, a)
+    return p
+
+
+def random_windows():
+    # Uniform random windows: the unpredictable regime class where
+    # prefetch confidence should stay low.
+    p = Program("corpus:random")
+    [a] = setup(p, [("rnd", 2 * GIB)])
+    window, total = 64, p.pages[a]
+    rng = Lcg(0x5EED_0001)
+    for i in range(256):
+        pos = rng.below(total - window + 1)
+        p.launch(a, pos, pos + window, kind_for(i))
+    finish(p, a)
+    return p
+
+
+def multi_stream():
+    # Four allocations, launches round-robined across four compute
+    # streams, each stream walking its own allocation.
+    p = Program("corpus:multi-stream", streams=4)
+    ids = setup(p, [(f"ms{i}", 512 * MIB) for i in range(4)])
+    window = 64
+    pos = [0, 0, 0, 0]
+    for i in range(256):
+        t = i % 4
+        a = ids[t]
+        total = p.pages[a]
+        p.launch(a, pos[t], pos[t] + window, kind_for(i))
+        pos[t] = (pos[t] + window) % (total - window + 1)
+    finish(p, ids[0])
+    return p
+
+
+def adv_zipf():
+    # Adversarial: zipfian hot set — 4 of 5 launches cycle a 10% hot
+    # prefix, every 5th is uniform cold traffic.
+    p = Program("corpus:adv-zipf")
+    [a] = setup(p, [("zipf", 2 * GIB)])
+    window, total = 64, p.pages[a]
+    hot = total // 10
+    rng = Lcg(0x5EED_0002)
+    hot_pos = 0
+    for i in range(320):
+        if i % 5 == 4:
+            pos = rng.below(total - window + 1)
+        else:
+            pos = hot_pos
+            hot_pos = (hot_pos + window) % max(hot - window + 1, 1)
+        p.launch(a, pos, pos + window, kind_for(i))
+    finish(p, a)
+    return p
+
+
+def adv_bursty():
+    # Adversarial: phase changes — sequential within a 32-launch phase,
+    # jumping to a fresh random base at each phase boundary.
+    p = Program("corpus:adv-bursty")
+    [a] = setup(p, [("burst", 2 * GIB)])
+    window, total = 128, p.pages[a]
+    rng = Lcg(0x5EED_0003)
+    pos = 0
+    for i in range(256):
+        if i % 32 == 0:
+            pos = rng.below(total - window + 1)
+        p.launch(a, pos, pos + window, kind_for(i))
+        pos = (pos + window) % (total - window + 1)
+    finish(p, a)
+    return p
+
+
+def adv_chase():
+    # Adversarial: pointer chase — the window advances by a recurring
+    # +7/+13/+3-window stride cycle. The delta-table predictor can
+    # learn it; the sequential heuristic cannot. This is the trace the
+    # regression suite perturbs `min_confidence` against.
+    p = Program("corpus:adv-chase")
+    [a] = setup(p, [("chase", 512 * MIB)])
+    window, total = 4, p.pages[a]
+    strides = [7 * window, 13 * window, 3 * window]
+    span = total - window + 1
+    pos = 0
+    for i in range(384):
+        p.launch(a, pos, pos + window, kind_for(i))
+        pos = (pos + strides[i % 3]) % span
+    finish(p, a)
+    return p
+
+
+def adv_tenant():
+    # Adversarial: tenant mix — three independent sequential walkers
+    # interleaved round-robin across two streams, each in its own
+    # allocation (cross-tenant interference without true sharing).
+    p = Program("corpus:adv-tenant", streams=2)
+    ids = setup(p, [(f"t{i}", 170 * MIB) for i in range(3)])
+    window = 64
+    pos = [0, 0, 0]
+    for i in range(300):
+        t = i % 3
+        a = ids[t]
+        span = p.pages[a] - window + 1
+        p.launch(a, pos[t], pos[t] + window, kind_for(i))
+        pos[t] = (pos[t] + window) % span
+    finish(p, ids[0])
+    return p
+
+
+CORPUS = [
+    ("seq_stream", seq_stream),
+    ("cyclic_oversub", cyclic_oversub),
+    ("random", random_windows),
+    ("multi_stream", multi_stream),
+    ("adv_zipf", adv_zipf),
+    ("adv_bursty", adv_bursty),
+    ("adv_chase", adv_chase),
+    ("adv_tenant", adv_tenant),
+]
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_dir = os.path.join(root, "corpora")
+    os.makedirs(out_dir, exist_ok=True)
+    for stem, build in CORPUS:
+        prog = build()
+        data = umt_file(prog, "intel-pascal", f"corpus/{stem}")
+        assert len(data) < 100 * 1024, f"{stem}: {len(data)} bytes exceeds the 100 KiB budget"
+        path = os.path.join(out_dir, f"{stem}.umt")
+        with open(path, "wb") as f:
+            f.write(data)
+        launches = sum(1 for op in prog.ops if op[0] == OP_LAUNCH)
+        print(f"{path}: {len(data)} bytes, {len(prog.ops)} ops, {launches} launches")
+
+
+if __name__ == "__main__":
+    main()
