@@ -1,0 +1,411 @@
+//! Pass 3: policy lints (`vet.lint.*`).
+//!
+//! These are programs that execute fine and race on nothing, but
+//! encode a *self-defeating policy* — the semantic smells the paper
+//! measures the cost of. Each lint is a straight single-pass scan over
+//! the verb stream with a little per-allocation state:
+//!
+//! * [`super::LINT_READMOSTLY_WRITE`] — a write access (host write,
+//!   H2D memcpy, or a writing kernel access) while a `ReadMostly`
+//!   advise is active on the allocation. `ReadMostly` replicates pages
+//!   to every reader; one write collapses all the duplicates (the
+//!   paper's §IV-B worst case).
+//! * [`super::LINT_ADVISE_CHURN`] — the same advise family on the same
+//!   allocation going set → unset → set. Every transition is a driver
+//!   round trip plus a policy re-evaluation; cycling it is a sign the
+//!   program is fighting its own hints.
+//! * [`super::LINT_PREFETCH_ORDER`] — `PreferredLocation(Gpu)` advised
+//!   *after* the allocation was already prefetched to the GPU. The
+//!   prefetch ran without the residency hint, so the pages arrived
+//!   unpinned and the advise can no longer protect that placement;
+//!   advising first is strictly better.
+//! * [`super::LINT_STREAMS_UNUSED`] — the header declares more compute
+//!   streams than the launch rotation ever reaches: declared
+//!   parallelism the program cannot exhibit.
+//! * [`super::LINT_UNUSED_ALLOC`] — a managed allocation no later verb
+//!   references. Host staging buffers (`MallocHost`) are exempt:
+//!   explicit-variant captures legitimately record a staging buffer
+//!   whose traffic is represented by memcpy verbs on the device
+//!   allocation.
+
+use crate::mem::AllocKind;
+use crate::trace::replay::{ReplayOp, ReplayProgram};
+use crate::um::{Advise, Loc};
+
+use super::{
+    Diagnostic, Severity, LINT_ADVISE_CHURN, LINT_PREFETCH_ORDER, LINT_READMOSTLY_WRITE,
+    LINT_STREAMS_UNUSED, LINT_UNUSED_ALLOC,
+};
+
+/// Advise families for churn tracking. `AccessedBy(Cpu)` and
+/// `AccessedBy(Gpu)` are independent hints, so they churn separately.
+const FAMILIES: usize = 4;
+
+fn family(a: Advise) -> Option<(usize, &'static str, bool)> {
+    // (family index, display name, is_set)
+    match a {
+        Advise::ReadMostly => Some((0, "ReadMostly", true)),
+        Advise::UnsetReadMostly => Some((0, "ReadMostly", false)),
+        Advise::PreferredLocation(_) => Some((1, "PreferredLocation", true)),
+        Advise::UnsetPreferredLocation => Some((1, "PreferredLocation", false)),
+        Advise::AccessedBy(Loc::Cpu) => Some((2, "AccessedBy(Cpu)", true)),
+        Advise::AccessedBy(Loc::Gpu) => Some((3, "AccessedBy(Gpu)", true)),
+        Advise::UnsetAccessedBy(Loc::Cpu) => Some((2, "AccessedBy(Cpu)", false)),
+        Advise::UnsetAccessedBy(Loc::Gpu) => Some((3, "AccessedBy(Gpu)", false)),
+    }
+}
+
+/// Per-allocation lint state.
+struct St {
+    name: String,
+    kind: AllocKind,
+    malloc_op: usize,
+    referenced: bool,
+    readmostly: bool,
+    readmostly_warned: bool,
+    prefetched_gpu: bool,
+    prefetch_order_warned: bool,
+    /// Per advise family: 0 = never set, 1 = set, 2 = unset after set.
+    advise_state: [u8; FAMILIES],
+    advise_churn_warned: [bool; FAMILIES],
+}
+
+pub(super) fn check(prog: &ReplayProgram, out: &mut Vec<Diagnostic>) {
+    let mut sts: Vec<St> = Vec::new();
+    let mut launches = 0u64;
+
+    for (i, op) in prog.ops.iter().enumerate() {
+        match op {
+            ReplayOp::MallocManaged { name, .. }
+            | ReplayOp::MallocDevice { name, .. }
+            | ReplayOp::MallocHost { name, .. } => {
+                let kind = match op {
+                    ReplayOp::MallocManaged { .. } => AllocKind::Managed,
+                    ReplayOp::MallocDevice { .. } => AllocKind::Device,
+                    _ => AllocKind::Host,
+                };
+                sts.push(St {
+                    name: name.clone(),
+                    kind,
+                    malloc_op: i,
+                    referenced: false,
+                    readmostly: false,
+                    readmostly_warned: false,
+                    prefetched_gpu: false,
+                    prefetch_order_warned: false,
+                    advise_state: [0; FAMILIES],
+                    advise_churn_warned: [false; FAMILIES],
+                });
+            }
+            ReplayOp::HostWrite { alloc, .. } => {
+                if let Some(st) = sts.get_mut(alloc.0 as usize) {
+                    st.referenced = true;
+                    warn_readmostly_write(st, i, "host write", out);
+                }
+            }
+            ReplayOp::HostRead { alloc, .. } | ReplayOp::MemcpyD2H { alloc } => {
+                if let Some(st) = sts.get_mut(alloc.0 as usize) {
+                    st.referenced = true;
+                }
+            }
+            ReplayOp::MemcpyH2D { alloc } => {
+                if let Some(st) = sts.get_mut(alloc.0 as usize) {
+                    st.referenced = true;
+                    warn_readmostly_write(st, i, "H2D memcpy", out);
+                }
+            }
+            ReplayOp::Advise { alloc, advise } => {
+                let Some(st) = sts.get_mut(alloc.0 as usize) else { continue };
+                st.referenced = true;
+                if let Some((f, fname, is_set)) = family(*advise) {
+                    if is_set {
+                        if st.advise_state[f] == 2 && !st.advise_churn_warned[f] {
+                            st.advise_churn_warned[f] = true;
+                            out.push(Diagnostic {
+                                code: LINT_ADVISE_CHURN,
+                                severity: Severity::Warning,
+                                op: Some(i),
+                                message: format!(
+                                    "advise churn on '{}': {fname} set again after a set/unset \
+                                     cycle — each transition is a driver round trip",
+                                    st.name
+                                ),
+                            });
+                        }
+                        st.advise_state[f] = 1;
+                    } else if st.advise_state[f] == 1 {
+                        st.advise_state[f] = 2;
+                    }
+                }
+                match advise {
+                    Advise::ReadMostly => st.readmostly = true,
+                    Advise::UnsetReadMostly => st.readmostly = false,
+                    Advise::PreferredLocation(Loc::Gpu) => {
+                        if st.prefetched_gpu && !st.prefetch_order_warned {
+                            st.prefetch_order_warned = true;
+                            out.push(Diagnostic {
+                                code: LINT_PREFETCH_ORDER,
+                                severity: Severity::Warning,
+                                op: Some(i),
+                                message: format!(
+                                    "PreferredLocation(Gpu) advised after '{}' was already \
+                                     prefetched to the GPU — the pages arrived unpinned; advise \
+                                     before prefetching so the residency hint guides placement",
+                                    st.name
+                                ),
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            ReplayOp::PrefetchBackground { alloc, dst }
+            | ReplayOp::PrefetchDefault { alloc, dst } => {
+                if let Some(st) = sts.get_mut(alloc.0 as usize) {
+                    st.referenced = true;
+                    if *dst == Loc::Gpu {
+                        st.prefetched_gpu = true;
+                    }
+                }
+            }
+            ReplayOp::Launch { phases } => {
+                launches += 1;
+                for ph in phases {
+                    for acc in &ph.accesses {
+                        if let Some(st) = sts.get_mut(acc.alloc.0 as usize) {
+                            st.referenced = true;
+                            if acc.kind.writes() {
+                                warn_readmostly_write(st, i, "writing kernel access", out);
+                            }
+                        }
+                    }
+                }
+            }
+            ReplayOp::DeviceSync => {}
+        }
+    }
+
+    let declared = u64::from(prog.streams);
+    if declared > 1 && launches < declared {
+        out.push(Diagnostic {
+            code: LINT_STREAMS_UNUSED,
+            severity: Severity::Warning,
+            op: None,
+            message: format!(
+                "header declares {declared} compute streams but only {launches} launch(es) ever \
+                 rotate across them — {} stream(s) can never be used",
+                declared - launches
+            ),
+        });
+    }
+
+    for st in &sts {
+        if st.kind == AllocKind::Managed && !st.referenced {
+            out.push(Diagnostic {
+                code: LINT_UNUSED_ALLOC,
+                severity: Severity::Warning,
+                op: Some(st.malloc_op),
+                message: format!(
+                    "managed allocation '{}' is never referenced by any later verb",
+                    st.name
+                ),
+            });
+        }
+    }
+}
+
+fn warn_readmostly_write(st: &mut St, op: usize, what: &str, out: &mut Vec<Diagnostic>) {
+    if st.readmostly && !st.readmostly_warned {
+        st.readmostly_warned = true;
+        out.push(Diagnostic {
+            code: LINT_READMOSTLY_WRITE,
+            severity: Severity::Warning,
+            op: Some(op),
+            message: format!(
+                "{what} to '{}' while ReadMostly is active — one write invalidates every \
+                 replicated copy; unset the advise before writing",
+                st.name
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::state::tests::{hw, launch, mm, prog};
+    use super::*;
+    use crate::gpu::AccessKind;
+    use crate::mem::AllocId;
+
+    fn adv(alloc: u32, advise: Advise) -> ReplayOp {
+        ReplayOp::Advise { alloc: AllocId(alloc), advise }
+    }
+
+    fn codes_of(p: &ReplayProgram) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        check(p, &mut out);
+        let mut c: Vec<&'static str> = out.iter().map(|d| d.code).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    #[test]
+    fn minimal_clean_program_lints_clean() {
+        let p = super::super::state::tests::minimal_clean_program();
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn write_under_readmostly_warns_once_and_unset_clears() {
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                adv(0, Advise::ReadMostly),
+                launch(0, 0, 32, AccessKind::ReadWrite),
+                launch(0, 32, 64, AccessKind::ReadWrite),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        let rm: Vec<_> = out.iter().filter(|d| d.code == LINT_READMOSTLY_WRITE).collect();
+        assert_eq!(rm.len(), 1, "deduplicated per allocation: {out:?}");
+        assert_eq!(rm[0].op, Some(3), "first writing access after the advise");
+        // Unsetting first makes the same write clean.
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                adv(0, Advise::ReadMostly),
+                launch(0, 0, 32, AccessKind::Read),
+                adv(0, Advise::UnsetReadMostly),
+                launch(0, 32, 64, AccessKind::ReadWrite),
+            ],
+        );
+        assert!(codes_of(&p).is_empty(), "{:?}", codes_of(&p));
+    }
+
+    #[test]
+    fn advise_set_unset_set_cycle_is_churn() {
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                adv(0, Advise::ReadMostly),
+                adv(0, Advise::UnsetReadMostly),
+                adv(0, Advise::ReadMostly),
+                adv(0, Advise::UnsetReadMostly),
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        let churn: Vec<_> = out.iter().filter(|d| d.code == LINT_ADVISE_CHURN).collect();
+        assert_eq!(churn.len(), 1, "{out:?}");
+        assert_eq!(churn[0].op, Some(4), "the re-set closes the cycle");
+        // set → unset alone is not churn; distinct families don't mix.
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                adv(0, Advise::ReadMostly),
+                adv(0, Advise::UnsetReadMostly),
+                adv(0, Advise::PreferredLocation(Loc::Cpu)),
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn preferred_location_after_gpu_prefetch_is_misordered() {
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu },
+                adv(0, Advise::PreferredLocation(Loc::Gpu)),
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        assert_eq!(codes_of(&p), vec![LINT_PREFETCH_ORDER]);
+        // Advise-then-prefetch (the synth generator's order) is clean.
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                adv(0, Advise::PreferredLocation(Loc::Gpu)),
+                ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu },
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn declared_streams_the_rotation_never_reaches_warn() {
+        let p = prog(
+            4,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                launch(0, 0, 32, AccessKind::Read),
+                launch(0, 32, 64, AccessKind::Read),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        let su: Vec<_> = out.iter().filter(|d| d.code == LINT_STREAMS_UNUSED).collect();
+        assert_eq!(su.len(), 1, "{out:?}");
+        assert_eq!(su[0].op, None, "whole-program finding");
+        // Two launches over two streams reach every stream.
+        let p = prog(
+            2,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                launch(0, 0, 32, AccessKind::Read),
+                launch(0, 32, 64, AccessKind::Read),
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn unreferenced_managed_allocation_warns_but_host_staging_is_exempt() {
+        let p = prog(
+            1,
+            vec![
+                mm("used", 64),
+                mm("orphan", 64),
+                hw(0, 0, 64),
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        let ua: Vec<_> = out.iter().filter(|d| d.code == LINT_UNUSED_ALLOC).collect();
+        assert_eq!(ua.len(), 1, "{out:?}");
+        assert_eq!(ua[0].op, Some(1));
+        assert!(ua[0].message.contains("orphan"), "{}", ua[0].message);
+        // The explicit variant's staging buffer shape: a MallocHost the
+        // memcpy verbs never name directly.
+        let p = prog(
+            1,
+            vec![
+                ReplayOp::MallocDevice { name: "d".into(), size: 64 * crate::mem::PAGE_SIZE },
+                ReplayOp::MallocHost { name: "h".into(), size: 64 * crate::mem::PAGE_SIZE },
+                ReplayOp::MemcpyH2D { alloc: AllocId(0) },
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+}

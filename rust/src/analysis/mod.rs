@@ -1,0 +1,279 @@
+//! Static verification of replay programs (`umbra vet`).
+//!
+//! A [`crate::trace::replay::ReplayProgram`] is a program in a
+//! 12-opcode verb language, and like any program it can be *wrong*
+//! before it is ever slow: verbs referencing allocations that don't
+//! exist, windows past an allocation's end, hints that contradict the
+//! accesses they are supposed to help (the paper's §IV-B ReadMostly
+//! misapplication), or cross-stream accesses with no synchronization
+//! between them. All of these are decidable from the verb stream
+//! alone — no simulated nanosecond needs to run — so this module
+//! checks them statically, before `umbra replay` spends cycles and
+//! before a corrupted or hand-edited corpus file fails deep inside the
+//! simulator with an unactionable panic.
+//!
+//! Three passes, one family of diagnostic codes each (docs/ANALYSIS.md
+//! has the full table with worked examples):
+//!
+//! * [`state`] — a flow-sensitive abstract interpreter over the
+//!   allocation-state lattice (`vet.alloc.*`): existence, kind and
+//!   bounds of every verb's allocation reference, empty launches,
+//!   device-capacity overcommit by prefetch, dead hint verbs after the
+//!   final launch.
+//! * [`race`] — a happens-before race detector (`vet.race.*`): vector
+//!   clocks over the per-stream verb timelines, with the executor's
+//!   exact ordering edges (host verbs block on the default stream,
+//!   launches see all host work issued before them, background
+//!   prefetches gate the next launch, `DeviceSync` is a global
+//!   barrier). Cross-stream overlapping accesses with at least one
+//!   write and no ordering path between them are reported.
+//! * [`lint`] — policy lints (`vet.lint.*`): semantic smells the paper
+//!   warns about — writes under an active `ReadMostly`, advise
+//!   set/unset churn, prefetch-before-advise orderings that defeat
+//!   escalation, and header/verb mismatches.
+//!
+//! Every diagnostic carries a stable machine-readable code, a severity
+//! and (where meaningful) the offending op index. Severity policy:
+//! *errors* are programs the executor cannot run faithfully (replay
+//! refuses them without `--no-vet`); *warnings* are programs that run
+//! but encode a hazard or a self-defeating policy (CI's `--deny
+//! warnings` treats them as fatal for committed corpora).
+
+pub mod lint;
+pub mod race;
+pub mod state;
+
+use crate::trace::replay::ReplayProgram;
+use crate::util::jsonout::Json;
+
+// --- stable diagnostic codes -----------------------------------------
+// Append-only: external tooling (CI annotations, the committed vet
+// artifact) keys on these strings.
+
+/// Verb references an allocation id no malloc has produced yet.
+pub const ALLOC_UNALLOCATED: &str = "vet.alloc.unallocated";
+/// Page range extends past the allocation's end (or is inverted).
+pub const ALLOC_OOB: &str = "vet.alloc.oob";
+/// Verb is meaningless or fatal for the allocation's kind (e.g. a host
+/// access to `cudaMalloc` memory — the executor panics on it).
+pub const ALLOC_KIND: &str = "vet.alloc.kind";
+/// Kernel launch whose phases touch no pages at all.
+pub const ALLOC_EMPTY_LAUNCH: &str = "vet.alloc.empty-launch";
+/// Cumulative distinct prefetch-to-GPU footprint exceeds usable device
+/// memory — the prefetched set cannot co-reside and will thrash.
+pub const ALLOC_OVERCOMMIT: &str = "vet.alloc.overcommit";
+/// Advise / GPU-directed prefetch after the final launch: no kernel can
+/// ever observe its effect.
+pub const ALLOC_DEAD_VERB: &str = "vet.alloc.dead-verb";
+
+/// Unordered cross-stream write/write overlap.
+pub const RACE_WW: &str = "vet.race.ww";
+/// Unordered cross-stream write/read overlap.
+pub const RACE_RW: &str = "vet.race.rw";
+
+/// Write access while a `ReadMostly` advise is active on the
+/// allocation (invalidates every duplicate; paper §IV-B).
+pub const LINT_READMOSTLY_WRITE: &str = "vet.lint.readmostly-write";
+/// Set → unset → set cycle of the same advise family on one
+/// allocation (each transition is a full driver round trip).
+pub const LINT_ADVISE_CHURN: &str = "vet.lint.advise-churn";
+/// `PreferredLocation(Gpu)` advise issued *after* a prefetch to GPU of
+/// the same allocation — the prefetch ran unpinned, so the advise can
+/// no longer protect it from eviction-then-refault.
+pub const LINT_PREFETCH_ORDER: &str = "vet.lint.prefetch-order";
+/// Header declares more compute streams than the launches ever rotate
+/// across.
+pub const LINT_STREAMS_UNUSED: &str = "vet.lint.streams-unused";
+/// Managed allocation no later verb ever references.
+pub const LINT_UNUSED_ALLOC: &str = "vet.lint.unused-alloc";
+
+/// The full code registry: `(code, severity)` for every diagnostic the
+/// three passes can emit. Tests assert emitted codes stay registered.
+pub const CODES: [(&str, Severity); 13] = [
+    (ALLOC_UNALLOCATED, Severity::Error),
+    (ALLOC_OOB, Severity::Error),
+    (ALLOC_KIND, Severity::Error),
+    (ALLOC_EMPTY_LAUNCH, Severity::Warning),
+    (ALLOC_OVERCOMMIT, Severity::Warning),
+    (ALLOC_DEAD_VERB, Severity::Warning),
+    (RACE_WW, Severity::Warning),
+    (RACE_RW, Severity::Warning),
+    (LINT_READMOSTLY_WRITE, Severity::Warning),
+    (LINT_ADVISE_CHURN, Severity::Warning),
+    (LINT_PREFETCH_ORDER, Severity::Warning),
+    (LINT_STREAMS_UNUSED, Severity::Warning),
+    (LINT_UNUSED_ALLOC, Severity::Warning),
+];
+
+/// Diagnostic severity. `Error` means the executor cannot run the
+/// program faithfully (replay refuses without `--no-vet`); `Warning`
+/// means it runs but encodes a hazard (`--deny warnings` makes these
+/// fatal too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a stable code, its severity, the offending op index
+/// (`None` for whole-program findings like a header mismatch) and a
+/// human-readable message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Index into `prog.ops` (`None` for header/whole-program findings).
+    pub op: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// One-line rendering: `error[vet.alloc.oob] op#12: ...`.
+    pub fn render(&self) -> String {
+        match self.op {
+            Some(i) => format!("{}[{}] op#{i}: {}", self.severity.name(), self.code, self.message),
+            None => format!("{}[{}]: {}", self.severity.name(), self.code, self.message),
+        }
+    }
+}
+
+/// The result of vetting one program: every diagnostic, ordered by op
+/// index (whole-program findings last) then code — deterministic for a
+/// given program byte-for-byte.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VetReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VetReport {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The distinct codes present, sorted (mutation tests key on this).
+    pub fn codes(&self) -> Vec<&'static str> {
+        let mut c: Vec<&'static str> = self.diagnostics.iter().map(|d| d.code).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// JSON form for `json/vet.json` (one object per vetted file).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::Int(self.errors() as u64)),
+            ("warnings", Json::Int(self.warnings() as u64)),
+            (
+                "diagnostics",
+                Json::Arr(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("code", Json::str(d.code)),
+                                ("severity", Json::str(d.severity.name())),
+                                ("op", d.op.map_or(Json::Null, |i| Json::Int(i as u64))),
+                                ("message", Json::str(d.message.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Vet a program: run all three passes and return every finding. Pure
+/// and deterministic — same program bytes, same report, no timing is
+/// ever executed.
+pub fn vet(prog: &ReplayProgram) -> VetReport {
+    let mut diagnostics = Vec::new();
+    state::check(prog, &mut diagnostics);
+    race::check(prog, &mut diagnostics);
+    lint::check(prog, &mut diagnostics);
+    diagnostics.sort_by_key(|d| (d.op.unwrap_or(usize::MAX), d.code));
+    VetReport { diagnostics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{AllocId, PageRange};
+    use crate::trace::replay::ReplayOp;
+
+    #[test]
+    fn registry_is_unique_and_well_formed() {
+        let mut codes: Vec<&str> = CODES.iter().map(|(c, _)| *c).collect();
+        codes.sort_unstable();
+        let n = codes.len();
+        codes.dedup();
+        assert_eq!(codes.len(), n, "codes are unique");
+        for (code, _) in CODES {
+            let fam = code.split('.').collect::<Vec<_>>();
+            assert_eq!(fam.len(), 3, "{code}: vet.<family>.<name>");
+            assert_eq!(fam[0], "vet");
+            assert!(matches!(fam[1], "alloc" | "race" | "lint"), "{code}");
+        }
+    }
+
+    #[test]
+    fn clean_program_vets_clean_and_report_is_deterministic() {
+        let p = crate::analysis::state::tests::minimal_clean_program();
+        let a = vet(&p);
+        assert!(a.is_clean(), "{:?}", a.diagnostics);
+        assert_eq!(a, vet(&p), "deterministic");
+    }
+
+    #[test]
+    fn emitted_codes_are_registered_with_matching_severity() {
+        // A deliberately broken program exercising several passes.
+        let mut p = crate::analysis::state::tests::minimal_clean_program();
+        p.ops.push(ReplayOp::HostRead {
+            alloc: AllocId(77),
+            range: PageRange { start: 0, end: 1 },
+        });
+        let report = vet(&p);
+        assert!(!report.is_clean());
+        for d in &report.diagnostics {
+            let (_, sev) = CODES
+                .iter()
+                .find(|(c, _)| *c == d.code)
+                .unwrap_or_else(|| panic!("{}: unregistered code", d.code));
+            assert_eq!(*sev, d.severity, "{}", d.code);
+        }
+    }
+
+    #[test]
+    fn render_and_json_carry_the_code() {
+        let d = Diagnostic {
+            code: ALLOC_OOB,
+            severity: Severity::Error,
+            op: Some(3),
+            message: "window 0..99 exceeds 'a' (64 pages)".into(),
+        };
+        assert_eq!(d.render(), "error[vet.alloc.oob] op#3: window 0..99 exceeds 'a' (64 pages)");
+        let r = VetReport { diagnostics: vec![d] };
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 0);
+        let j = r.to_json().render();
+        assert!(j.contains("vet.alloc.oob"), "{j}");
+        assert!(j.contains("\"op\": 3"), "{j}");
+    }
+}

@@ -1,0 +1,390 @@
+//! Pass 2: happens-before race detection over the per-stream verb
+//! timelines (`vet.race.*`).
+//!
+//! The detector assigns every data access a vector clock and reports
+//! cross-timeline overlapping page ranges with at least one write and
+//! no ordering path between them — the trace-level analogue of a
+//! dynamic data-race detector, computed without executing anything.
+//!
+//! ## Timelines and ordering edges
+//!
+//! Clock slots: slot 0 is the **host timeline** (the program-order
+//! sequence of host-side verbs); slot `s + 1` is device stream `s`
+//! (stream 0 = default compute, stream 1 = background prefetch,
+//! streams 2.. = the extra compute streams the `--streams` knob
+//! rotates across). The edges mirror the executor
+//! ([`crate::apps::AppCtx`]) exactly:
+//!
+//! * **Host verbs** (`HostWrite`/`HostRead`/`Memcpy*`) run on the host
+//!   timeline and *block on the default stream* (the executor starts
+//!   them at `now(DEFAULT)`), so each one joins stream 0's clock —
+//!   host access after a default-stream kernel is ordered, host access
+//!   after another stream's kernel is **not**.
+//! * **Launches** round-robin `launch_index % streams` onto compute
+//!   streams (stream 0, then 2, 3, …) and join the host clock at
+//!   issue: a kernel observes every host verb issued before it. The
+//!   reverse does not hold — later host verbs are not ordered after
+//!   the kernel unless a sync intervenes.
+//! * **`PrefetchBackground`** runs on stream 1 and gates the *next*
+//!   launch (any stream): the executor makes that kernel wait for the
+//!   prefetch, a real ordering edge.
+//! * **`DeviceSync`** joins every timeline into the host clock — the
+//!   global barrier.
+//!
+//! Two accesses race iff they are on different timelines, overlap in
+//! pages of the same allocation, at least one writes, and neither
+//! clock dominates the other. Both write → [`super::RACE_WW`]; exactly
+//! one writes → [`super::RACE_RW`]. Reports are deduplicated per
+//! (code, allocation, timeline pair): the first racing pair is shown,
+//! not every combination along two long racing walks.
+
+use std::collections::HashSet;
+
+use crate::gpu::stream::StreamId;
+use crate::mem::PageRange;
+use crate::trace::replay::{ReplayOp, ReplayProgram};
+use crate::util::units::Bytes;
+
+use super::{Diagnostic, Severity, RACE_RW, RACE_WW};
+
+/// One recorded data access with its vector-clock snapshot.
+struct Acc {
+    op: usize,
+    /// Clock slot (0 = host, `s + 1` = device stream `s`).
+    slot: usize,
+    alloc: u32,
+    range: PageRange,
+    writes: bool,
+}
+
+pub(super) fn check(prog: &ReplayProgram, out: &mut Vec<Diagnostic>) {
+    let streams = prog.streams.max(1) as usize;
+    // Stream ids in use: 0 (default) and 1 (background) always exist;
+    // extra compute streams get ids 2..=streams.
+    let n_streams = if streams <= 1 { 2 } else { streams + 1 };
+    let slots = n_streams + 1; // + the host timeline at slot 0
+
+    let mut clocks: Vec<Vec<u64>> = vec![vec![0; slots]; slots];
+    let mut gate: Option<Vec<u64>> = None;
+    let mut next_launch = 0usize;
+    let mut alloc_meta: Vec<(String, u32)> = Vec::new(); // (name, pages)
+    let mut accs: Vec<Acc> = Vec::new();
+    let mut acc_clocks: Vec<Vec<u64>> = Vec::new();
+
+    let host_event = |clocks: &mut Vec<Vec<u64>>| {
+        let s0 = clocks[1].clone(); // host verbs block on stream 0
+        join(&mut clocks[0], &s0);
+        clocks[0][0] += 1;
+    };
+
+    for (i, op) in prog.ops.iter().enumerate() {
+        match op {
+            ReplayOp::MallocManaged { name, size }
+            | ReplayOp::MallocDevice { name, size }
+            | ReplayOp::MallocHost { name, size } => {
+                alloc_meta.push((name.clone(), pages(*size)));
+            }
+            ReplayOp::HostWrite { alloc, range } | ReplayOp::HostRead { alloc, range } => {
+                host_event(&mut clocks);
+                let writes = matches!(op, ReplayOp::HostWrite { .. });
+                record(
+                    &alloc_meta,
+                    i,
+                    0,
+                    alloc.0,
+                    *range,
+                    writes,
+                    &mut accs,
+                    &mut acc_clocks,
+                    &clocks[0],
+                );
+            }
+            ReplayOp::MemcpyH2D { alloc } | ReplayOp::MemcpyD2H { alloc } => {
+                host_event(&mut clocks);
+                let writes = matches!(op, ReplayOp::MemcpyH2D { .. });
+                if let Some(p) = alloc_meta.get(alloc.0 as usize).map(|(_, p)| *p) {
+                    let full = PageRange { start: 0, end: p };
+                    record(
+                        &alloc_meta,
+                        i,
+                        0,
+                        alloc.0,
+                        full,
+                        writes,
+                        &mut accs,
+                        &mut acc_clocks,
+                        &clocks[0],
+                    );
+                }
+            }
+            ReplayOp::PrefetchBackground { .. } => {
+                // Issued from the host, runs on stream 1; its completion
+                // gates the next launch. Data movement, not an access.
+                let bg = StreamId::BACKGROUND.0 as usize + 1;
+                let h = clocks[0].clone();
+                join(&mut clocks[bg], &h);
+                clocks[bg][bg] += 1;
+                gate = Some(clocks[bg].clone());
+            }
+            ReplayOp::Launch { phases } => {
+                let c = next_launch % streams;
+                next_launch += 1;
+                let sid = if c == 0 { 0 } else { c + 1 }; // default, then created ids 2..
+                let slot = sid + 1;
+                let h = clocks[0].clone();
+                join(&mut clocks[slot], &h);
+                if let Some(g) = gate.take() {
+                    join(&mut clocks[slot], &g);
+                }
+                clocks[slot][slot] += 1;
+                for ph in phases {
+                    for a in &ph.accesses {
+                        record(
+                            &alloc_meta,
+                            i,
+                            slot,
+                            a.alloc.0,
+                            a.range,
+                            a.kind.writes(),
+                            &mut accs,
+                            &mut acc_clocks,
+                            &clocks[slot],
+                        );
+                    }
+                }
+            }
+            ReplayOp::DeviceSync => {
+                let joined: Vec<u64> = (0..slots)
+                    .map(|k| clocks.iter().map(|c| c[k]).max().unwrap_or(0))
+                    .collect();
+                clocks[0] = joined;
+                clocks[0][0] += 1;
+            }
+            ReplayOp::Advise { .. } | ReplayOp::PrefetchDefault { .. } => {
+                // Metadata / data movement: no data access to race on.
+            }
+        }
+    }
+
+    // Pairwise concurrency check. Program order means a later access
+    // can never happen-before an earlier one, so one direction
+    // suffices: `a` (earlier) is ordered before `b` iff `b`'s clock
+    // has seen `a`'s tick on `a`'s own timeline.
+    let mut seen: HashSet<(&'static str, u32, usize, usize)> = HashSet::new();
+    for bi in 0..accs.len() {
+        for ai in 0..bi {
+            let (a, b) = (&accs[ai], &accs[bi]);
+            if a.slot == b.slot || a.alloc != b.alloc || !(a.writes || b.writes) {
+                continue;
+            }
+            if a.range.start >= b.range.end || b.range.start >= a.range.end {
+                continue;
+            }
+            if acc_clocks[bi][a.slot] >= acc_clocks[ai][a.slot] {
+                continue; // ordered: b happens-after a
+            }
+            let code = if a.writes && b.writes { RACE_WW } else { RACE_RW };
+            let (lo, hi) = (a.slot.min(b.slot), a.slot.max(b.slot));
+            if !seen.insert((code, a.alloc, lo, hi)) {
+                continue;
+            }
+            let name = alloc_meta
+                .get(a.alloc as usize)
+                .map_or_else(|| format!("#{}", a.alloc), |(n, _)| format!("'{n}'"));
+            out.push(Diagnostic {
+                code,
+                severity: Severity::Warning,
+                op: Some(b.op),
+                message: format!(
+                    "{} race on {}: op#{} ({}) pages {}..{} vs op#{} ({}) pages {}..{} — no \
+                     synchronization orders them",
+                    if code == RACE_WW { "write/write" } else { "write/read" },
+                    name,
+                    a.op,
+                    slot_name(a.slot),
+                    a.range.start,
+                    a.range.end,
+                    b.op,
+                    slot_name(b.slot),
+                    b.range.start,
+                    b.range.end
+                ),
+            });
+        }
+    }
+}
+
+fn pages(size: Bytes) -> u32 {
+    size.div_ceil(crate::mem::PAGE_SIZE) as u32
+}
+
+fn join(a: &mut [u64], b: &[u64]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = (*x).max(*y);
+    }
+}
+
+/// Record one access if its allocation reference and range are valid
+/// (invalid ones are the state pass's findings, not race material).
+#[allow(clippy::too_many_arguments)]
+fn record(
+    alloc_meta: &[(String, u32)],
+    op: usize,
+    slot: usize,
+    alloc: u32,
+    range: PageRange,
+    writes: bool,
+    accs: &mut Vec<Acc>,
+    acc_clocks: &mut Vec<Vec<u64>>,
+    clock: &[u64],
+) {
+    let Some((_, pages)) = alloc_meta.get(alloc as usize) else { return };
+    if range.start >= range.end || range.end > *pages {
+        return;
+    }
+    accs.push(Acc { op, slot, alloc, range, writes });
+    acc_clocks.push(clock.to_vec());
+}
+
+fn slot_name(slot: usize) -> String {
+    match slot {
+        0 => "host".into(),
+        1 => "stream 0".into(),
+        2 => "background".into(),
+        s => format!("stream {}", s - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::state::tests::{hr, hw, launch, mm, prog};
+    use super::*;
+    use crate::gpu::AccessKind;
+
+    fn codes_of(p: &ReplayProgram) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        check(p, &mut out);
+        let mut c: Vec<&'static str> = out.iter().map(|d| d.code).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Two launches on a 2-stream program land on stream 0 and stream 2.
+    fn two_stream(k0: AccessKind, k1: AccessKind, r0: (u32, u32), r1: (u32, u32)) -> ReplayProgram {
+        prog(
+            2,
+            vec![
+                mm("a", 128),
+                hw(0, 0, 128),
+                launch(0, r0.0, r0.1, k0),
+                launch(0, r1.0, r1.1, k1),
+                ReplayOp::DeviceSync,
+                hr(0, 0, 128),
+            ],
+        )
+    }
+
+    #[test]
+    fn overlapping_cross_stream_writes_race() {
+        let p = two_stream(AccessKind::ReadWrite, AccessKind::Write, (0, 64), (32, 96));
+        assert_eq!(codes_of(&p), vec![RACE_WW]);
+    }
+
+    #[test]
+    fn write_read_overlap_races_and_read_read_does_not() {
+        let p = two_stream(AccessKind::Read, AccessKind::Write, (0, 64), (32, 96));
+        assert_eq!(codes_of(&p), vec![RACE_RW]);
+        let p = two_stream(AccessKind::Read, AccessKind::Read, (0, 64), (32, 96));
+        assert!(codes_of(&p).is_empty(), "read/read never races");
+    }
+
+    #[test]
+    fn disjoint_ranges_do_not_race() {
+        let p = two_stream(AccessKind::ReadWrite, AccessKind::ReadWrite, (0, 64), (64, 128));
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn device_sync_orders_cross_stream_accesses() {
+        let p = prog(
+            2,
+            vec![
+                mm("a", 128),
+                hw(0, 0, 128),
+                launch(0, 0, 64, AccessKind::ReadWrite),
+                ReplayOp::DeviceSync,
+                launch(0, 32, 96, AccessKind::ReadWrite),
+                ReplayOp::DeviceSync,
+                hr(0, 0, 128),
+            ],
+        );
+        assert!(codes_of(&p).is_empty(), "the barrier orders the overlap");
+    }
+
+    #[test]
+    fn launches_see_prior_host_writes_but_host_reads_race_with_running_kernels() {
+        // The setup write is ordered before both kernels (issue edge) —
+        // but reading results of a *non-default* stream without a sync
+        // is a race, while stream 0 results are ordered (host verbs
+        // block on the default stream).
+        let racy = prog(
+            2,
+            vec![
+                mm("a", 128),
+                hw(0, 0, 128),
+                launch(0, 0, 64, AccessKind::Read),       // stream 0
+                launch(0, 64, 128, AccessKind::ReadWrite), // stream 2
+                hr(0, 64, 128),                            // unsynchronized result read
+            ],
+        );
+        assert_eq!(codes_of(&racy), vec![RACE_RW]);
+        let ordered = prog(
+            2,
+            vec![
+                mm("a", 128),
+                hw(0, 0, 128),
+                launch(0, 0, 64, AccessKind::ReadWrite), // stream 0
+                hr(0, 0, 64),                            // blocks on stream 0: ordered
+            ],
+        );
+        assert!(codes_of(&ordered).is_empty());
+    }
+
+    #[test]
+    fn single_stream_programs_never_race() {
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                launch(0, 0, 64, AccessKind::ReadWrite),
+                launch(0, 0, 64, AccessKind::ReadWrite),
+                hr(0, 0, 64), // blocks on stream 0 — ordered without any sync
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn reports_are_deduplicated_per_pair() {
+        // Two racing pairs on the same (alloc, stream pair): one report.
+        let p = prog(
+            2,
+            vec![
+                mm("a", 256),
+                hw(0, 0, 256),
+                launch(0, 0, 64, AccessKind::ReadWrite),
+                launch(0, 0, 64, AccessKind::ReadWrite),
+                launch(0, 128, 192, AccessKind::ReadWrite),
+                launch(0, 128, 192, AccessKind::ReadWrite),
+                ReplayOp::DeviceSync,
+                hr(0, 0, 256),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].code, RACE_WW);
+    }
+}

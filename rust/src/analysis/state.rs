@@ -1,0 +1,450 @@
+//! Pass 1: flow-sensitive abstract interpretation over the
+//! allocation-state lattice (`vet.alloc.*`).
+//!
+//! The abstract state is deliberately tiny: the verb language has no
+//! free verb, so an allocation id moves through exactly two lattice
+//! points — *unallocated* (no malloc has produced it yet) and
+//! *allocated* with a known `(kind, pages, bytes)`. Walking the verb
+//! stream once against that state decides, exactly:
+//!
+//! * every reference resolves ([`super::ALLOC_UNALLOCATED`]) — ids are
+//!   assigned in malloc order, so "allocated later in the program" is
+//!   still a use-before-allocation at this verb;
+//! * every page range fits its allocation ([`super::ALLOC_OOB`]);
+//! * every verb is meaningful for the allocation's kind
+//!   ([`super::ALLOC_KIND`]): host accesses to `cudaMalloc` memory
+//!   panic in the executor, advises/prefetches of non-managed memory
+//!   are CUDA errors (the runtime degrades them to no-ops), and
+//!   memcpys must name the device-side allocation;
+//! * launches touch at least one page ([`super::ALLOC_EMPTY_LAUNCH`]);
+//! * the distinct prefetch-to-GPU footprint fits usable device memory
+//!   ([`super::ALLOC_OVERCOMMIT`]) — a prefetch set larger than the
+//!   device guarantees eviction thrash, which is either an
+//!   oversubscription regime the program should enter *without*
+//!   bulk-prefetching, or a generator bug;
+//! * no hint verb is dead ([`super::ALLOC_DEAD_VERB`]): an advise or a
+//!   GPU-directed prefetch after the final launch can never be
+//!   observed by a kernel.
+
+use crate::mem::{AllocKind, PageRange};
+use crate::trace::replay::{ReplayOp, ReplayProgram};
+use crate::um::Loc;
+use crate::util::units::{fmt_bytes, Bytes};
+
+use super::{
+    Diagnostic, Severity, ALLOC_DEAD_VERB, ALLOC_EMPTY_LAUNCH, ALLOC_KIND, ALLOC_OOB,
+    ALLOC_OVERCOMMIT, ALLOC_UNALLOCATED,
+};
+
+/// Abstract state of one allocation: everything later verbs can be
+/// checked against.
+struct AllocSt {
+    name: String,
+    kind: AllocKind,
+    pages: u32,
+    bytes: Bytes,
+}
+
+pub(super) fn check(prog: &ReplayProgram, out: &mut Vec<Diagnostic>) {
+    let spec = prog.platform.spec();
+    let usable = spec.gpu.usable();
+    let last_launch = prog.ops.iter().rposition(|o| matches!(o, ReplayOp::Launch { .. }));
+    let mut allocs: Vec<AllocSt> = Vec::new();
+    // Distinct allocations already counted toward the prefetch-to-GPU
+    // footprint (re-prefetching the same allocation is not overcommit).
+    let mut prefetched_gpu: Vec<bool> = Vec::new();
+    let mut prefetch_footprint: Bytes = 0;
+    let mut overcommit_reported = false;
+
+    for (i, op) in prog.ops.iter().enumerate() {
+        // A hint verb is dead once no launch can follow it. (A
+        // CPU-directed prefetch after the last launch is legitimate
+        // result staging and stays exempt.)
+        let dead = |out: &mut Vec<Diagnostic>, what: &str| {
+            out.push(Diagnostic {
+                code: ALLOC_DEAD_VERB,
+                severity: Severity::Warning,
+                op: Some(i),
+                message: format!("{what} after the final kernel launch — no kernel can observe it"),
+            });
+        };
+        match op {
+            ReplayOp::MallocManaged { name, size } => {
+                allocs.push(alloc_st(name, AllocKind::Managed, *size));
+                prefetched_gpu.push(false);
+            }
+            ReplayOp::MallocDevice { name, size } => {
+                allocs.push(alloc_st(name, AllocKind::Device, *size));
+                prefetched_gpu.push(false);
+            }
+            ReplayOp::MallocHost { name, size } => {
+                allocs.push(alloc_st(name, AllocKind::Host, *size));
+                prefetched_gpu.push(false);
+            }
+            ReplayOp::HostWrite { alloc, range } | ReplayOp::HostRead { alloc, range } => {
+                let verb = if matches!(op, ReplayOp::HostWrite { .. }) {
+                    "host write"
+                } else {
+                    "host read"
+                };
+                let Some(a) = resolve(&allocs, i, alloc.0, verb, out) else { continue };
+                if a.kind == AllocKind::Device {
+                    out.push(Diagnostic {
+                        code: ALLOC_KIND,
+                        severity: Severity::Error,
+                        op: Some(i),
+                        message: format!(
+                            "{verb} to cudaMalloc allocation '{}' — the executor panics on host \
+                             access to device memory; use a memcpy verb",
+                            a.name
+                        ),
+                    });
+                    continue;
+                }
+                check_range(a, i, verb, *range, out);
+            }
+            ReplayOp::Advise { alloc, .. } => {
+                let Some(a) = resolve(&allocs, i, alloc.0, "advise", out) else { continue };
+                if a.kind != AllocKind::Managed {
+                    out.push(Diagnostic {
+                        code: ALLOC_KIND,
+                        severity: Severity::Error,
+                        op: Some(i),
+                        message: format!(
+                            "advise on non-managed allocation '{}' — cudaMemAdvise requires \
+                             managed memory",
+                            a.name
+                        ),
+                    });
+                } else if last_launch.is_none_or(|l| i > l) {
+                    dead(out, "advise");
+                }
+            }
+            ReplayOp::PrefetchBackground { alloc, dst }
+            | ReplayOp::PrefetchDefault { alloc, dst } => {
+                let Some(a) = resolve(&allocs, i, alloc.0, "prefetch", out) else { continue };
+                if a.kind != AllocKind::Managed {
+                    out.push(Diagnostic {
+                        code: ALLOC_KIND,
+                        severity: Severity::Error,
+                        op: Some(i),
+                        message: format!(
+                            "prefetch of non-managed allocation '{}' — cudaMemPrefetchAsync \
+                             requires managed memory (the runtime degrades this to a no-op)",
+                            a.name
+                        ),
+                    });
+                    continue;
+                }
+                if *dst == Loc::Gpu {
+                    if last_launch.is_none_or(|l| i > l) {
+                        dead(out, "prefetch to GPU");
+                    }
+                    let idx = alloc.0 as usize;
+                    if !prefetched_gpu[idx] {
+                        prefetched_gpu[idx] = true;
+                        prefetch_footprint += a.bytes;
+                        if !overcommit_reported && prefetch_footprint > usable {
+                            overcommit_reported = true;
+                            out.push(Diagnostic {
+                                code: ALLOC_OVERCOMMIT,
+                                severity: Severity::Warning,
+                                op: Some(i),
+                                message: format!(
+                                    "cumulative prefetch-to-GPU footprint {} exceeds usable \
+                                     device memory {} on {} — the prefetched set cannot \
+                                     co-reside and will thrash eviction",
+                                    fmt_bytes(prefetch_footprint),
+                                    fmt_bytes(usable),
+                                    prog.platform.name()
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            ReplayOp::MemcpyH2D { alloc } | ReplayOp::MemcpyD2H { alloc } => {
+                let Some(a) = resolve(&allocs, i, alloc.0, "memcpy", out) else { continue };
+                if a.kind == AllocKind::Host {
+                    out.push(Diagnostic {
+                        code: ALLOC_KIND,
+                        severity: Severity::Error,
+                        op: Some(i),
+                        message: format!(
+                            "memcpy names host staging allocation '{}' — name the device-side \
+                             allocation being copied",
+                            a.name
+                        ),
+                    });
+                }
+            }
+            ReplayOp::Launch { phases } => {
+                let mut touched = 0u64;
+                for ph in phases {
+                    for acc in &ph.accesses {
+                        let Some(a) = resolve(&allocs, i, acc.alloc.0, "kernel access", out)
+                        else {
+                            continue;
+                        };
+                        check_range(a, i, "kernel access", acc.range, out);
+                        touched += u64::from(acc.range.end.saturating_sub(acc.range.start));
+                    }
+                }
+                if touched == 0 {
+                    out.push(Diagnostic {
+                        code: ALLOC_EMPTY_LAUNCH,
+                        severity: Severity::Warning,
+                        op: Some(i),
+                        message: "kernel launch with an empty access set — no pages touched, \
+                                  nothing to measure"
+                            .into(),
+                    });
+                }
+            }
+            ReplayOp::DeviceSync => {}
+        }
+    }
+}
+
+fn alloc_st(name: &str, kind: AllocKind, size: Bytes) -> AllocSt {
+    AllocSt {
+        name: name.to_string(),
+        kind,
+        pages: size.div_ceil(crate::mem::PAGE_SIZE) as u32,
+        bytes: size,
+    }
+}
+
+/// Resolve an allocation reference against the abstract state; emits
+/// [`ALLOC_UNALLOCATED`] and yields `None` when the id has not been
+/// produced by any malloc verb yet.
+fn resolve<'a>(
+    allocs: &'a [AllocSt],
+    op: usize,
+    id: u32,
+    verb: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Option<&'a AllocSt> {
+    let a = allocs.get(id as usize);
+    if a.is_none() {
+        out.push(Diagnostic {
+            code: ALLOC_UNALLOCATED,
+            severity: Severity::Error,
+            op: Some(op),
+            message: format!(
+                "{verb} references allocation #{id}, but only {} allocation(s) exist at this \
+                 point in the program",
+                allocs.len()
+            ),
+        });
+    }
+    a
+}
+
+/// Bounds-check a page range against its allocation; inverted ranges
+/// count as out of bounds too (they cannot come from `PageRange::new`,
+/// only from a corrupted capture).
+fn check_range(a: &AllocSt, op: usize, verb: &str, range: PageRange, out: &mut Vec<Diagnostic>) {
+    if range.start > range.end || range.end > a.pages {
+        out.push(Diagnostic {
+            code: ALLOC_OOB,
+            severity: Severity::Error,
+            op: Some(op),
+            message: format!(
+                "{verb} window {}..{} exceeds allocation '{}' ({} pages)",
+                range.start, range.end, a.name, a.pages
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::apps::Variant;
+    use crate::gpu::AccessKind;
+    use crate::mem::{AllocId, PAGE_SIZE};
+    use crate::platform::PlatformId;
+    use crate::sim::InjectConfig;
+    use crate::trace::replay::{ReplayAccess, ReplayPhase};
+    use crate::um::{Advise, EvictorKind, PredictorKind};
+
+    pub(crate) fn prog(streams: u32, ops: Vec<ReplayOp>) -> ReplayProgram {
+        ReplayProgram {
+            app: "test".into(),
+            platform: PlatformId::IntelPascal,
+            variant: Variant::UmAuto,
+            streams,
+            predictor: PredictorKind::default(),
+            evictor: EvictorKind::default(),
+            inject: InjectConfig::default(),
+            ops,
+        }
+    }
+
+    pub(crate) fn mm(name: &str, pages: u32) -> ReplayOp {
+        ReplayOp::MallocManaged { name: name.into(), size: u64::from(pages) * PAGE_SIZE }
+    }
+
+    pub(crate) fn launch(alloc: u32, start: u32, end: u32, kind: AccessKind) -> ReplayOp {
+        ReplayOp::Launch {
+            phases: vec![ReplayPhase {
+                flops_bits: 1.0f64.to_bits(),
+                accesses: vec![ReplayAccess {
+                    alloc: AllocId(alloc),
+                    range: PageRange { start, end },
+                    kind,
+                    passes_bits: 1.0f64.to_bits(),
+                }],
+            }],
+        }
+    }
+
+    pub(crate) fn hw(alloc: u32, start: u32, end: u32) -> ReplayOp {
+        ReplayOp::HostWrite { alloc: AllocId(alloc), range: PageRange { start, end } }
+    }
+
+    pub(crate) fn hr(alloc: u32, start: u32, end: u32) -> ReplayOp {
+        ReplayOp::HostRead { alloc: AllocId(alloc), range: PageRange { start, end } }
+    }
+
+    /// A small single-stream program every pass accepts.
+    pub(crate) fn minimal_clean_program() -> ReplayProgram {
+        prog(
+            1,
+            vec![
+                mm("a", 64),
+                hw(0, 0, 64),
+                launch(0, 0, 32, AccessKind::Read),
+                launch(0, 32, 64, AccessKind::ReadWrite),
+                ReplayOp::DeviceSync,
+                hr(0, 0, 64),
+            ],
+        )
+    }
+
+    fn codes_of(p: &ReplayProgram) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        check(p, &mut out);
+        let mut c: Vec<&'static str> = out.iter().map(|d| d.code).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    #[test]
+    fn clean_program_passes() {
+        assert!(codes_of(&minimal_clean_program()).is_empty());
+    }
+
+    #[test]
+    fn unallocated_reference_is_an_error() {
+        let p = prog(1, vec![mm("a", 64), hw(3, 0, 8)]);
+        assert_eq!(codes_of(&p), vec![ALLOC_UNALLOCATED]);
+        // Allocated *later* is still unallocated at the point of use.
+        let p = prog(1, vec![hw(0, 0, 8), mm("a", 64)]);
+        assert_eq!(codes_of(&p), vec![ALLOC_UNALLOCATED]);
+    }
+
+    #[test]
+    fn out_of_bounds_and_inverted_windows_are_errors() {
+        let p = prog(1, vec![mm("a", 64), hw(0, 0, 65)]);
+        assert_eq!(codes_of(&p), vec![ALLOC_OOB]);
+        let p = prog(1, vec![mm("a", 64), launch(0, 48, 12, AccessKind::Read)]);
+        assert_eq!(codes_of(&p), vec![ALLOC_OOB]);
+    }
+
+    #[test]
+    fn host_access_to_device_memory_is_a_kind_error() {
+        let p = prog(
+            1,
+            vec![ReplayOp::MallocDevice { name: "d".into(), size: 4 * PAGE_SIZE }, hw(0, 0, 4)],
+        );
+        assert_eq!(codes_of(&p), vec![ALLOC_KIND]);
+    }
+
+    #[test]
+    fn advise_and_prefetch_require_managed_memory() {
+        let dev = ReplayOp::MallocDevice { name: "d".into(), size: 4 * PAGE_SIZE };
+        let p = prog(
+            1,
+            vec![
+                dev.clone(),
+                ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly },
+                launch(0, 0, 4, AccessKind::Read),
+            ],
+        );
+        assert_eq!(codes_of(&p), vec![ALLOC_KIND]);
+        let p = prog(
+            1,
+            vec![
+                dev,
+                ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu },
+                launch(0, 0, 4, AccessKind::Read),
+            ],
+        );
+        assert_eq!(codes_of(&p), vec![ALLOC_KIND]);
+    }
+
+    #[test]
+    fn empty_launch_is_a_warning() {
+        let p = prog(1, vec![mm("a", 64), ReplayOp::Launch { phases: vec![] }, hw(0, 0, 1)]);
+        assert_eq!(codes_of(&p), vec![ALLOC_EMPTY_LAUNCH]);
+    }
+
+    #[test]
+    fn prefetch_overcommit_is_flagged_once_and_deduped() {
+        // Two allocations of 40960 pages = 2.5 GiB each on a 4 GiB
+        // device: the second prefetch crosses usable capacity; the
+        // repeat prefetch of alloc 0 never re-counts.
+        let pf = |a| ReplayOp::PrefetchBackground { alloc: AllocId(a), dst: Loc::Gpu };
+        let p = prog(
+            1,
+            vec![
+                mm("x", 40960),
+                mm("y", 40960),
+                pf(0),
+                pf(0),
+                pf(1),
+                launch(0, 0, 64, AccessKind::Read),
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        let over: Vec<_> = out.iter().filter(|d| d.code == ALLOC_OVERCOMMIT).collect();
+        assert_eq!(over.len(), 1, "{out:?}");
+        assert_eq!(over[0].op, Some(4), "reported at the crossing prefetch");
+        // A single 2.5 GiB prefetch set stays under usable capacity.
+        let p = prog(1, vec![mm("x", 40960), pf(0), launch(0, 0, 64, AccessKind::Read)]);
+        assert!(codes_of(&p).is_empty());
+    }
+
+    #[test]
+    fn hints_after_the_final_launch_are_dead() {
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                launch(0, 0, 64, AccessKind::Read),
+                ReplayOp::DeviceSync,
+                ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly },
+                ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu },
+            ],
+        );
+        let mut out = Vec::new();
+        check(&p, &mut out);
+        assert_eq!(out.iter().filter(|d| d.code == ALLOC_DEAD_VERB).count(), 2);
+        // A CPU-directed prefetch after the last launch is result
+        // staging, not a dead verb.
+        let p = prog(
+            1,
+            vec![
+                mm("a", 64),
+                launch(0, 0, 64, AccessKind::Read),
+                ReplayOp::DeviceSync,
+                ReplayOp::PrefetchDefault { alloc: AllocId(0), dst: Loc::Cpu },
+            ],
+        );
+        assert!(codes_of(&p).is_empty());
+    }
+}

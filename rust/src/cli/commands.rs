@@ -44,11 +44,13 @@ USAGE:
   umbra trace FILE.umt [--export-chrome FILE.json]
   umbra replay FILE.umt|DIR [--reps N] [--out DIR] [--platform PLAT] [--variant VAR]
        [--predictor PRED] [--evictor EV] [--streams N] [--scenario CHAOS]
-       [--trace] [--trace-out FILE.umt]
+       [--trace] [--trace-out FILE.umt] [--no-vet]
   umbra synth --pattern PAT [--seed N] [--footprint-mib N] [--allocs N] [--launches N]
        [--window-pages N] [--streams N] [--variant VAR] [--platform PLAT]
        [--predictor PRED] [--evictor EV] [--hot-frac F] [--hot-bias F]
        [--phase-len N] [--depth N] [--tenants N] [--out FILE.umt] [--reps N]
+       [--no-vet]
+  umbra vet FILE.umt|DIR [--deny warnings] [--out DIR]
   umbra validate [--artifacts DIR]
   umbra report [--reps N] [--out DIR]
   umbra sweep --param P --values a,b,c --app APP --platform PLAT --variant VAR --regime REG
@@ -98,6 +100,20 @@ USAGE:
   live or writes a committable capture with --out FILE.umt; same seed
   and parameters are byte-identical. Semantics in docs/REPLAY.md.
 
+  `umbra vet` statically verifies replay programs without executing a
+  single simulated nanosecond: an allocation-state abstract interpreter
+  (vet.alloc.* — unallocated references, out-of-bounds windows, kind
+  errors the executor panics on, empty launches, prefetch overcommit,
+  dead hints), a happens-before race detector over the stream timelines
+  (vet.race.ww / vet.race.rw), and policy lints (vet.lint.* — writes
+  under ReadMostly, advise churn, prefetch-before-advise, header
+  mismatches). Exit is nonzero on any error, or on any warning under
+  --deny warnings (the CI gate for committed corpora); --out DIR writes
+  json/vet.json. `umbra replay` runs the same checks first and refuses
+  a program that vets with errors, and `umbra synth --out` refuses to
+  write a capture that vets with any diagnostic — --no-vet skips either
+  gate. Codes, severities and the lattice live in docs/ANALYSIS.md.
+
   `auto` runs the um::auto online policy engine (UM Auto variant); the
   `umbra auto` subcommand regenerates the auto-vs-hand-tuned study in
   the chosen predictor mode, `umbra auto --compare` the learned-vs-
@@ -127,6 +143,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "trace" => cmd_trace(args),
         "replay" => cmd_replay(args),
         "synth" => cmd_synth(args),
+        "vet" => cmd_vet(args),
         "validate" => cmd_validate(args),
         "report" => cmd_report(args),
         "sweep" => cmd_sweep(args),
@@ -705,6 +722,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
         return replay_dir(path, args);
     }
     let prog = read_program(path)?;
+    if !args.flag_bool("no-vet") {
+        refuse_on_vet_errors(path, &prog)?;
+    }
     let mut cfg = ReplayConfig::from_program(&prog);
     override_config(&mut cfg, args)?;
     let reps = parse_reps(args, 1)?;
@@ -739,6 +759,41 @@ fn read_program(path: &Path) -> Result<ReplayProgram> {
     })?;
     prog.validate().map_err(|e| anyhow!("{}: invalid replay program: {e}", path.display()))?;
     Ok(prog)
+}
+
+/// Decode one capture for directory-mode replay: `Ok(None)` for a
+/// valid capture without a replay section (skippable), `Err` for a
+/// file that fails to decode or validate — reported per file so one
+/// corrupted capture doesn't abort the rest of the corpus.
+fn decode_replayable(path: &Path) -> Result<Option<ReplayProgram>> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow!("cannot read '{}': {e}", path.display()))?;
+    let ut = UmtTrace::decode(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let Some(prog) = ut.replay else { return Ok(None) };
+    prog.validate().map_err(|e| anyhow!("{}: invalid replay program: {e}", path.display()))?;
+    Ok(Some(prog))
+}
+
+/// The replay-side vet gate: refuse to execute a program whose static
+/// verification reports *errors* (the executor would panic or silently
+/// no-op on them — see docs/ANALYSIS.md). Warnings replay fine;
+/// `--no-vet` skips the gate entirely.
+fn refuse_on_vet_errors(path: &Path, prog: &ReplayProgram) -> Result<()> {
+    let report = crate::analysis::vet(prog);
+    let errors = report.errors();
+    if errors == 0 {
+        return Ok(());
+    }
+    for d in &report.diagnostics {
+        if d.severity == crate::analysis::Severity::Error {
+            eprintln!("{}: {}", path.display(), d.render());
+        }
+    }
+    bail!(
+        "{}: vet found {errors} error(s) — the executor cannot run this program faithfully \
+         (--no-vet to replay anyway, `umbra vet` for the full report)",
+        path.display()
+    );
 }
 
 /// Apply cell-flag overrides to a replay config — only flags actually
@@ -828,18 +883,31 @@ fn replay_dir(dir: &Path, args: &Args) -> Result<()> {
         bail!("{}: no .umt captures found", dir.display());
     }
     let reps = parse_reps(args, 1)?;
+    let no_vet = args.flag_bool("no-vet");
     let mut results: Vec<(String, ReplayResult)> = Vec::new();
     let mut skipped = 0usize;
+    let mut failures: Vec<String> = Vec::new();
     for f in &files {
-        let bytes = std::fs::read(f).map_err(|e| anyhow!("cannot read '{}': {e}", f.display()))?;
-        let ut = UmtTrace::decode(&bytes).map_err(|e| anyhow!("{}: {e}", f.display()))?;
-        let Some(prog) = ut.replay else {
-            eprintln!("skipping {} (no replay section)", f.display());
-            skipped += 1;
-            continue;
+        let prog = match decode_replayable(f) {
+            Ok(Some(prog)) => prog,
+            Ok(None) => {
+                eprintln!("skipping {} (no replay section)", f.display());
+                skipped += 1;
+                continue;
+            }
+            Err(e) => {
+                eprintln!("{e:#}");
+                failures.push(f.display().to_string());
+                continue;
+            }
         };
-        prog.validate()
-            .map_err(|e| anyhow!("{}: invalid replay program: {e}", f.display()))?;
+        if !no_vet {
+            if let Err(e) = refuse_on_vet_errors(f, &prog) {
+                eprintln!("{e:#}");
+                failures.push(f.display().to_string());
+                continue;
+            }
+        }
         let mut cfg = ReplayConfig::from_program(&prog);
         override_config(&mut cfg, args)?;
         let rr = run_replay(&prog, &cfg, reps, &RunOpts::default());
@@ -847,7 +915,11 @@ fn replay_dir(dir: &Path, args: &Args) -> Result<()> {
         results.push((stem, rr));
     }
     if results.is_empty() {
-        bail!("{}: no replayable captures ({skipped} skipped)", dir.display());
+        bail!(
+            "{}: no replayable captures ({skipped} skipped, {} failed)",
+            dir.display(),
+            failures.len()
+        );
     }
     let mut t = TextTable::new(vec![
         "trace", "platform", "pred", "kernel (ms)", "accuracy", "coverage", "faults", "evict",
@@ -919,6 +991,14 @@ fn replay_dir(dir: &Path, args: &Args) -> Result<()> {
             out.display()
         );
     }
+    if !failures.is_empty() {
+        bail!(
+            "replay: {} of {} capture(s) failed ({}); the rest were replayed",
+            failures.len(),
+            files.len(),
+            failures.join(", ")
+        );
+    }
     Ok(())
 }
 
@@ -963,6 +1043,22 @@ fn cmd_synth(args: &Args) -> Result<()> {
     };
     let prog = synth::generate(&params);
     if let Some(file) = args.flag("out") {
+        // Committable corpora must vet clean — warnings included, the
+        // same bar `--deny warnings` holds the committed corpus to.
+        if !args.flag_bool("no-vet") {
+            let report = crate::analysis::vet(&prog);
+            if !report.is_clean() {
+                for d in &report.diagnostics {
+                    eprintln!("synth: {}", d.render());
+                }
+                bail!(
+                    "synth: generated program fails vet with {} error(s) / {} warning(s) — \
+                     committable captures must vet clean (--no-vet to write anyway)",
+                    report.errors(),
+                    report.warnings()
+                );
+            }
+        }
         let label = format!("synth/{}", pattern.name());
         return write_umt_bytes(Path::new(file), &UmtTrace::for_replay(prog, &label));
     }
@@ -1006,6 +1102,94 @@ fn refine_pattern(p: SynthPattern, args: &Args) -> Result<SynthPattern> {
         }
         other => other,
     })
+}
+
+/// `umbra vet FILE.umt|DIR`: statically verify replay programs —
+/// allocation-state abstract interpretation, happens-before race
+/// detection and policy lints — without executing anything. Nonzero
+/// exit on any error, on any warning under `--deny warnings`, or on a
+/// capture that fails to decode; `--out DIR` writes `json/vet.json`
+/// (written before the exit status is decided, so CI uploads the
+/// report for failing corpora too).
+fn cmd_vet(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("vet: which capture? (FILE.umt or a directory of captures)"))?;
+    let deny_warnings = match args.flag("deny") {
+        None => false,
+        Some("warnings") => true,
+        Some(v) => bail!("--deny: invalid value '{v}' (only 'warnings' is supported)"),
+    };
+    let path = Path::new(path);
+    let files: Vec<std::path::PathBuf> = if path.is_dir() {
+        let mut fs: Vec<std::path::PathBuf> = std::fs::read_dir(path)
+            .map_err(|e| anyhow!("cannot read '{}': {e}", path.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "umt"))
+            .collect();
+        fs.sort();
+        if fs.is_empty() {
+            bail!("{}: no .umt captures found", path.display());
+        }
+        fs
+    } else {
+        vec![path.to_path_buf()]
+    };
+
+    let (mut errors, mut warnings, mut failed) = (0usize, 0usize, 0usize);
+    let mut file_reports: Vec<Json> = Vec::new();
+    for f in &files {
+        match read_program(f) {
+            Err(e) => {
+                failed += 1;
+                eprintln!("{e:#}");
+                file_reports.push(Json::obj(vec![
+                    ("path", Json::str(f.display().to_string())),
+                    ("error", Json::str(format!("{e:#}"))),
+                ]));
+            }
+            Ok(prog) => {
+                let report = crate::analysis::vet(&prog);
+                for d in &report.diagnostics {
+                    println!("{}: {}", f.display(), d.render());
+                }
+                errors += report.errors();
+                warnings += report.warnings();
+                let mut fields = vec![("path".to_string(), Json::str(f.display().to_string()))];
+                if let Json::Obj(rest) = report.to_json() {
+                    fields.extend(rest);
+                }
+                file_reports.push(Json::Obj(fields));
+            }
+        }
+    }
+    let failed_note =
+        if failed > 0 { format!(", {failed} undecodable") } else { String::new() };
+    println!("vet: {} file(s), {errors} error(s), {warnings} warning(s){failed_note}", files.len());
+    if let Some(out) = args.flag("out") {
+        let doc = Json::obj(vec![
+            ("deny_warnings", Json::Bool(deny_warnings)),
+            ("errors", Json::Int(errors as u64)),
+            ("warnings", Json::Int(warnings as u64)),
+            ("undecodable", Json::Int(failed as u64)),
+            ("files", Json::Arr(file_reports)),
+        ]);
+        let p = Path::new(out).join("json/vet.json");
+        doc.write(&p)?;
+        eprintln!("wrote {}", p.display());
+    }
+    if failed > 0 {
+        bail!("vet: {failed} capture(s) failed to decode");
+    }
+    if errors > 0 {
+        bail!("vet: {errors} error(s)");
+    }
+    if deny_warnings && warnings > 0 {
+        bail!("vet: {warnings} warning(s) denied (--deny warnings)");
+    }
+    Ok(())
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
@@ -1353,5 +1537,147 @@ mod tests {
         assert!(USAGE.contains("--pattern"), "usage documents the pattern knob");
         assert!(USAGE.contains("tenant-mix"), "usage lists the patterns");
         assert!(USAGE.contains("docs/REPLAY.md"), "usage points at the design doc");
+    }
+
+    /// A one-warning program: the advise after the final launch is a
+    /// `vet.alloc.dead-verb`, nothing else fires.
+    fn warning_program() -> ReplayProgram {
+        use crate::mem::AllocId;
+        use crate::trace::replay::ReplayOp;
+        use crate::um::Advise;
+        let mut p = crate::analysis::state::tests::minimal_clean_program();
+        p.ops.push(ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly });
+        p
+    }
+
+    /// A one-error program: advising `cudaMalloc` memory is a
+    /// `vet.alloc.kind` error, but the executor degrades it to a no-op,
+    /// so `--no-vet` can still replay it.
+    fn error_program() -> ReplayProgram {
+        use crate::gpu::AccessKind;
+        use crate::mem::{AllocId, PAGE_SIZE};
+        use crate::trace::replay::ReplayOp;
+        use crate::um::Advise;
+        crate::analysis::state::tests::prog(
+            1,
+            vec![
+                ReplayOp::MallocDevice { name: "d".into(), size: 4 * PAGE_SIZE },
+                ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly },
+                crate::analysis::state::tests::launch(0, 0, 4, AccessKind::Read),
+            ],
+        )
+    }
+
+    #[test]
+    fn vet_reports_severities_and_writes_the_artifact() {
+        let dir = std::env::temp_dir().join("umbra_cli_vet");
+        let _ = std::fs::remove_dir_all(&dir);
+        let corpus = dir.join("corpus");
+        dispatch(&args(&format!(
+            "synth --pattern sequential --seed 1 --footprint-mib 64 --launches 8 --out {}",
+            corpus.join("clean.umt").display()
+        )))
+        .unwrap();
+        let warn = corpus.join("warn.umt");
+        std::fs::write(&warn, UmtTrace::for_replay(warning_program(), "warn").encode()).unwrap();
+        let err = corpus.join("err.umt");
+        std::fs::write(&err, UmtTrace::for_replay(error_program(), "err").encode()).unwrap();
+
+        // Single files: clean passes both bars, warnings pass only the
+        // default bar, errors always fail.
+        dispatch(&args(&format!("vet {}", corpus.join("clean.umt").display()))).unwrap();
+        dispatch(&args(&format!("vet {} --deny warnings", corpus.join("clean.umt").display())))
+            .unwrap();
+        dispatch(&args(&format!("vet {}", warn.display()))).unwrap();
+        assert!(dispatch(&args(&format!("vet {} --deny warnings", warn.display()))).is_err());
+        assert!(dispatch(&args(&format!("vet {}", err.display()))).is_err());
+        assert!(dispatch(&args(&format!("vet {} --deny bogus", warn.display()))).is_err());
+        assert!(dispatch(&args("vet")).is_err(), "positional required");
+
+        // Directory mode fails on the error file but still writes the
+        // artifact, with one entry per capture.
+        let out = dir.join("out");
+        assert!(dispatch(&args(&format!("vet {} --out {}", corpus.display(), out.display())))
+            .is_err());
+        let text = std::fs::read_to_string(out.join("json/vet.json")).unwrap();
+        let json = Json::parse(&text).expect("vet artifact parses");
+        let files = json.get("files").and_then(Json::as_arr).expect("files array");
+        assert_eq!(files.len(), 3);
+        assert!(text.contains("vet.alloc.dead-verb"), "{text}");
+        assert!(text.contains("vet.alloc.kind"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_refuses_vet_errors_unless_no_vet() {
+        let dir = std::env::temp_dir().join("umbra_cli_replay_vet_gate");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = dir.join("err.umt");
+        std::fs::write(&err, UmtTrace::for_replay(error_program(), "err").encode()).unwrap();
+        let e = dispatch(&args(&format!("replay {}", err.display())))
+            .expect_err("vet errors gate the replay")
+            .to_string();
+        assert!(e.contains("--no-vet"), "error points at the escape hatch: {e}");
+        dispatch(&args(&format!("replay {} --no-vet", err.display()))).unwrap();
+        // Warnings never gate a replay.
+        let warn = dir.join("warn.umt");
+        std::fs::write(&warn, UmtTrace::for_replay(warning_program(), "warn").encode()).unwrap();
+        dispatch(&args(&format!("replay {}", warn.display()))).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synth_out_refuses_programs_that_do_not_vet_clean() {
+        let dir = std::env::temp_dir().join("umbra_cli_synth_vet_gate");
+        let _ = std::fs::remove_dir_all(&dir);
+        // streams > launches ⇒ vet.lint.streams-unused, so the capture
+        // is refused — unless --no-vet forces it through.
+        let umt = dir.join("bad.umt");
+        let cmd = format!(
+            "synth --pattern sequential --footprint-mib 64 --launches 2 --streams 8 --out {}",
+            umt.display()
+        );
+        let e = dispatch(&args(&cmd)).expect_err("unvettable capture refused").to_string();
+        assert!(e.contains("vet"), "{e}");
+        assert!(!umt.exists(), "nothing written on refusal");
+        dispatch(&args(&format!("{cmd} --no-vet"))).unwrap();
+        assert!(umt.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_dir_continues_past_corrupted_captures() {
+        let dir = std::env::temp_dir().join("umbra_cli_replay_dir_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let corpus = dir.join("corpus");
+        dispatch(&args(&format!(
+            "synth --pattern sequential --seed 1 --footprint-mib 64 --launches 8 --out {}",
+            corpus.join("good.umt").display()
+        )))
+        .unwrap();
+        std::fs::write(corpus.join("bad.umt"), b"not a capture").unwrap();
+        let out = dir.join("out");
+        let e = dispatch(&args(&format!("replay {} --out {}", corpus.display(), out.display())))
+            .expect_err("corrupted capture fails the run")
+            .to_string();
+        assert!(e.contains("bad.umt"), "failure names the file: {e}");
+        assert!(e.contains("1 of 2"), "failure counts captures: {e}");
+        // The good capture was still replayed and its results written.
+        assert!(out.join("csv/replay.csv").exists());
+        let text = std::fs::read_to_string(out.join("json/replay.json")).unwrap();
+        let json = Json::parse(&text).expect("expectation schema parses");
+        let traces = json.get("traces").and_then(Json::as_arr).expect("traces array");
+        assert_eq!(traces.len(), 1, "good capture replayed despite the bad one");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn usage_documents_vet() {
+        assert!(USAGE.contains("umbra vet"), "usage documents the subcommand");
+        assert!(USAGE.contains("--deny warnings"), "usage documents the CI bar");
+        assert!(USAGE.contains("--no-vet"), "usage documents the escape hatch");
+        assert!(USAGE.contains("vet.race.ww"), "usage names the code families");
+        assert!(USAGE.contains("docs/ANALYSIS.md"), "usage points at the design doc");
     }
 }

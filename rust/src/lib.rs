@@ -28,6 +28,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`); real numerics at reduced shape.
 //! * [`trace`] — nvprof-like Unified Memory event tracing (the data
 //!   behind the paper's Figs. 4, 5, 7, 8).
+//! * [`analysis`] — static verification of replay programs (`umbra
+//!   vet`): allocation-state abstract interpretation, happens-before
+//!   race detection over the stream timelines, and policy lints.
 //! * [`coordinator`] — suite runner: repetition, statistics, thread-pooled
 //!   execution over the app × variant × platform matrix.
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
@@ -43,6 +46,7 @@ pub mod gpu;
 pub mod platform;
 pub mod apps;
 pub mod trace;
+pub mod analysis;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench_harness;

@@ -230,6 +230,9 @@ pub fn generate(params: &SynthParams) -> ReplayProgram {
     }
 
     // --- consume results --------------------------------------------
+    // Sync first: consuming results the device may still be writing
+    // would be a cross-stream race (`vet.race.rw`).
+    ops.push(ReplayOp::DeviceSync);
     if explicit {
         ops.push(ReplayOp::MemcpyD2H { alloc: data[0] });
     } else {
@@ -238,7 +241,6 @@ pub fn generate(params: &SynthParams) -> ReplayProgram {
             range: PageRange { start: 0, end: pages_per as u32 },
         });
     }
-    ops.push(ReplayOp::DeviceSync);
 
     ReplayProgram {
         app: format!("synth:{}", params.pattern.name()),

@@ -1,10 +1,23 @@
 //! A small fixed-size thread pool (std-only; rayon/tokio are unavailable
 //! in the offline crate set). The coordinator uses it to run independent
 //! (app × variant × platform) benchmark cells in parallel.
+//!
+//! Under `RUSTFLAGS="--cfg loom"` the std concurrency primitives are
+//! swapped for [loom](https://docs.rs/loom)'s model-checked replacements
+//! so `tests/pool_loom.rs` can exhaustively explore thread interleavings
+//! of [`Pool::try_map`] (order-preserving aggregation and the panic
+//! path). Normal builds never see loom: the dependency is gated on the
+//! same cfg, and the `concurrency-models` CI job is the only caller.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+
+#[cfg(loom)]
+use loom::sync::{mpsc, Arc, Mutex};
+#[cfg(loom)]
+use loom::thread;
+#[cfg(not(loom))]
+use std::sync::{mpsc, Arc, Mutex};
+#[cfg(not(loom))]
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -25,16 +38,13 @@ impl Pool {
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                thread::Builder::new()
-                    .name(format!("umbra-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // sender dropped: shut down
-                        }
-                    })
-                    .expect("spawn worker")
+                spawn_worker(i, move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // sender dropped: shut down
+                    }
+                })
             })
             .collect();
         Pool { tx: Some(tx), workers }
@@ -42,7 +52,10 @@ impl Pool {
 
     /// Pool sized to the machine (`min(cores, cap)`).
     pub fn with_default_size(cap: usize) -> Pool {
-        let cores = thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        #[cfg(loom)]
+        let cores = 2; // loom explores a fixed, small thread count
+        #[cfg(not(loom))]
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
         Pool::new(cores.min(cap).max(1))
     }
 
@@ -108,6 +121,18 @@ impl Pool {
     }
 }
 
+/// Spawn one worker (loom's scheduler has no `thread::Builder`, so
+/// model-checked builds lose the thread name — nothing else differs).
+#[cfg(not(loom))]
+fn spawn_worker<F: FnOnce() + Send + 'static>(i: usize, f: F) -> thread::JoinHandle<()> {
+    thread::Builder::new().name(format!("umbra-worker-{i}")).spawn(f).expect("spawn worker")
+}
+
+#[cfg(loom)]
+fn spawn_worker<F: FnOnce() + Send + 'static>(_i: usize, f: F) -> thread::JoinHandle<()> {
+    thread::spawn(f)
+}
+
 impl Drop for Pool {
     fn drop(&mut self) {
         self.tx.take(); // close the channel; workers drain and exit
@@ -117,7 +142,10 @@ impl Drop for Pool {
     }
 }
 
-#[cfg(test)]
+// The std-facing unit tests call `Pool` outside a `loom::model`, which
+// loom's primitives reject — model-checked coverage lives in
+// `tests/pool_loom.rs` instead.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};

@@ -143,6 +143,7 @@ fn required_documents_exist_and_are_linked() {
         "docs/ROBUSTNESS.md",
         "docs/OBSERVABILITY.md",
         "docs/REPLAY.md",
+        "docs/ANALYSIS.md",
     ] {
         assert!(root.join(doc).exists(), "{doc} missing");
     }
@@ -153,9 +154,10 @@ fn required_documents_exist_and_are_linked() {
             && readme.contains("docs/EVICTION.md")
             && readme.contains("docs/ROBUSTNESS.md")
             && readme.contains("docs/OBSERVABILITY.md")
-            && readme.contains("docs/REPLAY.md"),
-        "README must link the architecture, predictor, eviction, robustness, observability \
-         and replay docs"
+            && readme.contains("docs/REPLAY.md")
+            && readme.contains("docs/ANALYSIS.md"),
+        "README must link the architecture, predictor, eviction, robustness, observability, \
+         replay and analysis docs"
     );
     // The eviction doc's headline sections are link targets from the
     // README and ARCHITECTURE: pin their anchors.
@@ -212,6 +214,23 @@ fn required_documents_exist_and_are_linked() {
         assert!(
             anchors(&replay).iter().any(|a| a == anchor || a.starts_with(anchor)),
             "docs/REPLAY.md lost the '{anchor}' section"
+        );
+    }
+    // And the analysis doc: the lattice, happens-before, diagnostic
+    // table and limitations sections are linked from the README,
+    // REPLAY and the analysis-layer rustdoc.
+    let analysis = fs::read_to_string(root.join("docs/ANALYSIS.md")).unwrap();
+    let required = [
+        "the-allocation-state-lattice",
+        "happens-before-timelines-and-ordering-edges",
+        "severities-and-gates",
+        "diagnostic-reference",
+        "what-vet-cannot-prove",
+    ];
+    for anchor in required {
+        assert!(
+            anchors(&analysis).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/ANALYSIS.md lost the '{anchor}' section"
         );
     }
 }

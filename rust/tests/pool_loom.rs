@@ -1,0 +1,60 @@
+//! Loom model-check of [`umbra::util::pool::Pool`].
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg loom"` (the
+//! `concurrency-models` CI job); a normal `cargo test` sees an empty
+//! test target. Loom replaces the pool's `Arc`/`Mutex`/`mpsc`/`thread`
+//! with instrumented versions and exhaustively explores every
+//! observable interleaving of the worker threads, verifying for *all*
+//! schedules what `src/util/pool.rs`'s unit tests check for one:
+//!
+//! * `try_map` returns results in input order regardless of which
+//!   worker picks up which job or which finishes first;
+//! * a panicking job is confined to `Err(message)` in its own slot,
+//!   every other job still completes, and the pool (its worker threads
+//!   survive the caught unwind) remains usable afterwards;
+//! * `Drop` joins all workers — no schedule deadlocks or leaks a
+//!   thread (loom fails the model if a thread outlives the iteration).
+#![cfg(loom)]
+
+use umbra::util::pool::Pool;
+
+/// Two workers racing over three ordered jobs: the result vector must
+/// come back in input order under every schedule.
+#[test]
+fn try_map_preserves_input_order_under_all_interleavings() {
+    loom::model(|| {
+        let pool = Pool::new(2);
+        let out = pool.try_map(vec![10i32, 20, 30], |x| x + 1);
+        assert_eq!(out, vec![Ok(11), Ok(21), Ok(31)]);
+    });
+}
+
+/// A panicking job must not poison its worker or the batch: the other
+/// slots complete with `Ok` in order, the panic is reported in place,
+/// and the same pool still serves a follow-up batch.
+#[test]
+fn try_map_isolates_a_panicking_job_under_all_interleavings() {
+    loom::model(|| {
+        let pool = Pool::new(2);
+        let out = pool.try_map(vec![0i32, 1, 2], |x| {
+            assert!(x != 1, "job 1 exploded");
+            x * 2
+        });
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], Ok(0));
+        assert!(out[1].as_ref().unwrap_err().contains("exploded"));
+        assert_eq!(out[2], Ok(4));
+        let again = pool.try_map(vec![5i32], |x| x);
+        assert_eq!(again, vec![Ok(5)]);
+    });
+}
+
+/// Dropping the pool with no submitted work joins the workers cleanly
+/// in every schedule (the channel-close handshake has no lost-wakeup).
+#[test]
+fn drop_joins_idle_workers_under_all_interleavings() {
+    loom::model(|| {
+        let pool = Pool::new(2);
+        drop(pool);
+    });
+}

@@ -1,0 +1,302 @@
+//! Mutation self-test for `umbra vet` (docs/ANALYSIS.md).
+//!
+//! Two halves of one property:
+//!
+//! * **Soundness of the corpus**: every committed `corpora/*.umt` and
+//!   every `umbra synth` pattern vets completely clean — the analyzer
+//!   has no false positives on the programs the repo actually ships.
+//! * **Sensitivity**: for every diagnostic class, one *targeted verb
+//!   mutation* of a clean corpus trace makes vet report exactly that
+//!   code and nothing else. Each mutation is the smallest realistic
+//!   corruption of the class it exercises (a retargeted read, a widened
+//!   window, a dropped sync, a write under `ReadMostly`), so the tests
+//!   double as worked examples of what each code means.
+//!
+//! Every mutation starts from the decoded bytes of a committed trace,
+//! so the expected codes are byte-deterministic — no randomness, no
+//! replay, no timing.
+
+use std::path::{Path, PathBuf};
+
+use umbra::analysis::{self, vet};
+use umbra::gpu::AccessKind;
+use umbra::mem::{AllocId, PageRange};
+use umbra::sim::{synth, SynthParams, SynthPattern};
+use umbra::trace::replay::{ReplayAccess, ReplayOp, ReplayProgram};
+use umbra::trace::UmtTrace;
+use umbra::um::{Advise, Loc};
+
+fn corpora_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").join("corpora")
+}
+
+/// Decode one committed corpus trace's replay program.
+fn corpus(stem: &str) -> ReplayProgram {
+    let path = corpora_dir().join(format!("{stem}.umt"));
+    let bytes = std::fs::read(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    UmtTrace::decode(&bytes)
+        .unwrap_or_else(|e| panic!("{stem}: {e}"))
+        .replay
+        .unwrap_or_else(|| panic!("{stem}: no replay section"))
+}
+
+/// The distinct diagnostic codes vet reports for a program.
+fn codes(prog: &ReplayProgram) -> Vec<&'static str> {
+    vet(prog).codes()
+}
+
+/// Assert a mutated program reports *exactly* one code.
+fn assert_exactly(prog: &ReplayProgram, code: &str) {
+    let report = vet(prog);
+    assert_eq!(report.codes(), vec![code], "diagnostics: {:#?}", report.diagnostics);
+}
+
+/// The single kernel access of a one-access launch, by op index.
+fn access_mut(prog: &mut ReplayProgram, op: usize) -> &mut ReplayAccess {
+    match &mut prog.ops[op] {
+        ReplayOp::Launch { phases } => &mut phases[0].accesses[0],
+        other => panic!("op#{op} is {other:?}, not a launch"),
+    }
+}
+
+// --- soundness: everything the repo ships vets clean ------------------
+
+#[test]
+fn every_committed_corpus_trace_vets_clean() {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(corpora_dir())
+        .expect("corpora/ exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "umt"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 8, "starter corpus has 8 traces");
+    for f in &files {
+        let prog = UmtTrace::decode(&std::fs::read(f).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", f.display()))
+            .replay
+            .unwrap_or_else(|| panic!("{}: no replay section", f.display()));
+        let report = vet(&prog);
+        assert!(report.is_clean(), "{}: {:#?}", f.display(), report.diagnostics);
+    }
+}
+
+#[test]
+fn every_synth_pattern_and_seed_vets_clean() {
+    for pattern in SynthPattern::ALL {
+        for seed in 1..=8 {
+            let prog = synth::generate(&SynthParams { pattern, seed, ..Default::default() });
+            let report = vet(&prog);
+            assert!(report.is_clean(), "{} seed {seed}: {:#?}", pattern.name(), report.diagnostics);
+        }
+    }
+}
+
+// --- sensitivity: one mutation, one code ------------------------------
+//
+// seq_stream layout: op0 malloc (32768 pages), op1 host_write,
+// ops 2..=257 launches, op258 sync, op259 host_read.
+// multi_stream layout: ops 0..=3 mallocs (8192 pages each), 4..=7
+// host_writes, 8..=263 launches (launch i: stream i%4, alloc i%4),
+// op264 sync, op265 host_read(alloc 0).
+
+#[test]
+fn retargeted_read_is_vet_alloc_unallocated() {
+    let mut p = corpus("seq_stream");
+    let ReplayOp::HostRead { alloc, .. } = &mut p.ops[259] else { panic!("op259 is the read") };
+    *alloc = AllocId(99);
+    assert_exactly(&p, analysis::ALLOC_UNALLOCATED);
+}
+
+#[test]
+fn widened_window_is_vet_alloc_oob() {
+    let mut p = corpus("seq_stream");
+    let ReplayOp::HostRead { range, .. } = &mut p.ops[259] else { panic!("op259 is the read") };
+    range.end += 1; // 32769 > 32768 pages
+    assert_exactly(&p, analysis::ALLOC_OOB);
+}
+
+#[test]
+fn managed_alloc_flipped_to_device_is_vet_alloc_kind() {
+    let mut p = corpus("seq_stream");
+    let ReplayOp::MallocManaged { name, size } = p.ops[0].clone() else {
+        panic!("op0 is the malloc")
+    };
+    // Host writes/reads of cudaMalloc memory panic in the executor —
+    // the class of corruption vet exists to catch *before* replay.
+    p.ops[0] = ReplayOp::MallocDevice { name, size };
+    assert_exactly(&p, analysis::ALLOC_KIND);
+}
+
+#[test]
+fn cleared_access_set_is_vet_alloc_empty_launch() {
+    let mut p = corpus("seq_stream");
+    let ReplayOp::Launch { phases } = &mut p.ops[2] else { panic!("op2 is a launch") };
+    phases.clear();
+    assert_exactly(&p, analysis::ALLOC_EMPTY_LAUNCH);
+}
+
+#[test]
+fn oversized_gpu_prefetch_is_vet_alloc_overcommit() {
+    // cyclic_oversub's 6 GiB allocation exceeds Intel-Pascal's usable
+    // device memory — prefetching all of it to the GPU cannot co-reside.
+    let mut p = corpus("cyclic_oversub");
+    p.ops.insert(2, ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu });
+    assert_exactly(&p, analysis::ALLOC_OVERCOMMIT);
+}
+
+#[test]
+fn hint_after_final_launch_is_vet_alloc_dead_verb() {
+    let mut p = corpus("seq_stream");
+    p.ops.push(ReplayOp::Advise { alloc: AllocId(0), advise: Advise::AccessedBy(Loc::Gpu) });
+    assert_exactly(&p, analysis::ALLOC_DEAD_VERB);
+}
+
+#[test]
+fn overlapping_cross_stream_writes_are_vet_race_ww() {
+    // Launches 0 and 1 run on streams 0 and 2; pointing both at the
+    // same alloc-0 window as writers leaves no ordering edge between
+    // them.
+    let mut p = corpus("multi_stream");
+    for op in [8, 9] {
+        *access_mut(&mut p, op) = ReplayAccess {
+            alloc: AllocId(0),
+            range: PageRange { start: 0, end: 64 },
+            kind: AccessKind::ReadWrite,
+            passes_bits: 1.0f64.to_bits(),
+        };
+    }
+    assert_exactly(&p, analysis::RACE_WW);
+}
+
+#[test]
+fn unordered_write_under_read_is_vet_race_rw() {
+    // Launch 0 (stream 0) already reads alloc 0 pages 0..64; making
+    // launch 1 (stream 2) *write* that window races the read.
+    let mut p = corpus("multi_stream");
+    *access_mut(&mut p, 9) = ReplayAccess {
+        alloc: AllocId(0),
+        range: PageRange { start: 0, end: 64 },
+        kind: AccessKind::ReadWrite,
+        passes_bits: 1.0f64.to_bits(),
+    };
+    assert_exactly(&p, analysis::RACE_RW);
+}
+
+#[test]
+fn dropping_every_sync_surfaces_races() {
+    // The ISSUE-style mutation: strip all DeviceSync barriers from the
+    // two-stream tenant trace. The host result-read and the wrapping
+    // walkers now overlap cross-stream work with no ordering edge.
+    // (This mutation legitimately triggers several race pairs, so it
+    // asserts the family rather than one exact code.)
+    let mut p = corpus("adv_tenant");
+    p.ops.retain(|op| !matches!(op, ReplayOp::DeviceSync));
+    let report = vet(&p);
+    assert!(
+        report.codes().iter().any(|c| c.starts_with("vet.race.")),
+        "sync-free two-stream trace must race: {:#?}",
+        report.diagnostics
+    );
+}
+
+#[test]
+fn write_under_active_readmostly_is_vet_lint_readmostly_write() {
+    // seq_stream's every-4th launch writes back; advising ReadMostly
+    // right after setup puts those writes under an active replication
+    // hint.
+    let mut p = corpus("seq_stream");
+    p.ops.insert(2, ReplayOp::Advise { alloc: AllocId(0), advise: Advise::ReadMostly });
+    assert_exactly(&p, analysis::LINT_READMOSTLY_WRITE);
+}
+
+#[test]
+fn set_unset_set_cycle_is_vet_lint_advise_churn() {
+    let mut p = corpus("seq_stream");
+    // Ends unset, so no write ever lands under an active ReadMostly.
+    let cycle = [
+        Advise::ReadMostly,
+        Advise::UnsetReadMostly,
+        Advise::ReadMostly,
+        Advise::UnsetReadMostly,
+    ];
+    for (off, advise) in cycle.into_iter().enumerate() {
+        p.ops.insert(2 + off, ReplayOp::Advise { alloc: AllocId(0), advise });
+    }
+    assert_exactly(&p, analysis::LINT_ADVISE_CHURN);
+}
+
+#[test]
+fn advise_after_prefetch_is_vet_lint_prefetch_order() {
+    // random's 2 GiB footprint fits Intel-Pascal, so the bulk prefetch
+    // itself is fine — only the ordering is wrong: the pages arrive
+    // before the residency hint exists.
+    let mut p = corpus("random");
+    p.ops.insert(2, ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu });
+    let advise = Advise::PreferredLocation(Loc::Gpu);
+    p.ops.insert(3, ReplayOp::Advise { alloc: AllocId(0), advise });
+    assert_exactly(&p, analysis::LINT_PREFETCH_ORDER);
+}
+
+#[test]
+fn declared_streams_without_launches_is_vet_lint_streams_unused() {
+    // Keep the 4-stream header but delete every launch: the rotation
+    // can never reach any stream.
+    let mut p = corpus("multi_stream");
+    p.ops.retain(|op| !matches!(op, ReplayOp::Launch { .. }));
+    assert_exactly(&p, analysis::LINT_STREAMS_UNUSED);
+}
+
+#[test]
+fn orphan_allocation_is_vet_lint_unused_alloc() {
+    // Appended last so no existing AllocId shifts.
+    let mut p = corpus("seq_stream");
+    p.ops.push(ReplayOp::MallocManaged { name: "orphan".into(), size: 64 * 1024 });
+    assert_exactly(&p, analysis::LINT_UNUSED_ALLOC);
+}
+
+// --- meta: the matrix above covers the whole registry -----------------
+
+#[test]
+fn mutation_matrix_covers_every_family_and_at_least_ten_codes() {
+    // The exact-code assertions above pin 12 distinct codes (everything
+    // in the registry except the race pair exercised by the sync-drop
+    // family test). Keep the registry and this file honest about it.
+    let exercised = [
+        analysis::ALLOC_UNALLOCATED,
+        analysis::ALLOC_OOB,
+        analysis::ALLOC_KIND,
+        analysis::ALLOC_EMPTY_LAUNCH,
+        analysis::ALLOC_OVERCOMMIT,
+        analysis::ALLOC_DEAD_VERB,
+        analysis::RACE_WW,
+        analysis::RACE_RW,
+        analysis::LINT_READMOSTLY_WRITE,
+        analysis::LINT_ADVISE_CHURN,
+        analysis::LINT_PREFETCH_ORDER,
+        analysis::LINT_STREAMS_UNUSED,
+        analysis::LINT_UNUSED_ALLOC,
+    ];
+    assert!(exercised.len() >= 10);
+    for fam in ["vet.alloc.", "vet.race.", "vet.lint."] {
+        assert!(exercised.iter().any(|c| c.starts_with(fam)), "{fam} family exercised");
+    }
+    for (code, _) in analysis::CODES {
+        assert!(exercised.contains(&code), "{code} has no mutation test");
+    }
+}
+
+// --- determinism ------------------------------------------------------
+
+#[test]
+fn vet_reports_are_byte_deterministic() {
+    for stem in ["seq_stream", "multi_stream", "adv_tenant"] {
+        let p = corpus(stem);
+        assert_eq!(vet(&p), vet(&p), "{stem}");
+    }
+    let mut p = corpus("multi_stream");
+    p.ops.retain(|op| !matches!(op, ReplayOp::DeviceSync));
+    let (a, b) = (vet(&p), vet(&p));
+    assert_eq!(a, b, "mutated programs report identically too");
+    assert_eq!(codes(&p), codes(&p));
+}

@@ -158,8 +158,10 @@ def setup(prog, allocs):
 
 
 def finish(prog, alloc0):
-    prog.host_read(alloc0, 0, prog.pages[alloc0])
+    # Sync before the host consumes results: host reads of pages the
+    # GPU may still be writing are cross-stream races (vet.race.rw).
     prog.device_sync()
+    prog.host_read(alloc0, 0, prog.pages[alloc0])
 
 
 def kind_for(i):
@@ -295,6 +297,12 @@ def adv_tenant():
         span = p.pages[a] - window + 1
         p.launch(a, pos[t], pos[t] + window, kind_for(i))
         pos[t] = (pos[t] + window) % span
+        # Periodic barrier: a tenant's walker wraps its allocation
+        # mid-run, so without syncs a second-pass window overlaps a
+        # first-pass window issued on the other stream (a real
+        # write/read race the vet race detector flags).
+        if i % 64 == 63:
+            p.device_sync()
     finish(p, ids[0])
     return p
 

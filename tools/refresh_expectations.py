@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Refresh corpora/expectations.json from a measured replay.json.
+
+Usage:
+    python3 tools/refresh_expectations.py path/to/replay.json
+
+The input is the document `umbra replay corpora --out DIR` writes to
+DIR/json/replay.json — locally, or downloaded from the CI
+`replay-regression` job's `replay-regression-metrics` artifact (see
+docs/REPLAY.md "Adding a corpus trace" and the README refresh note).
+
+The script never invents numbers: it copies the measured `traces` rows
+verbatim, merging by (trace, platform, predictor, evictor) key so a
+partial artifact (e.g. a single new corpus file replayed locally)
+updates only its own rows and leaves the rest pinned. The committed
+file's `_note` and `tolerance` are preserved; rows are re-sorted by
+key so refreshes diff minimally. Stdlib only — no pip.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+EXPECTATIONS = REPO / "corpora" / "expectations.json"
+
+
+def key(row):
+    return (
+        row.get("trace", ""),
+        row.get("platform", ""),
+        row.get("predictor", ""),
+        row.get("evictor", ""),
+    )
+
+
+def main(argv):
+    if len(argv) != 2 or argv[1] in ("-h", "--help"):
+        sys.exit(__doc__.strip())
+
+    measured_path = Path(argv[1])
+    measured = json.loads(measured_path.read_text())
+    rows = measured.get("traces")
+    if not isinstance(rows, list) or not rows:
+        sys.exit(f"{measured_path}: no measured 'traces' rows — refusing to "
+                 "erase the committed expectations with an empty document")
+    for row in rows:
+        for field in ("trace", "platform", "predictor", "kernel_ns"):
+            if field not in row:
+                sys.exit(f"{measured_path}: trace row missing '{field}' — "
+                         "not a replay.json expectation document")
+
+    committed = json.loads(EXPECTATIONS.read_text())
+    merged = {key(r): r for r in committed.get("traces", [])}
+    replaced = sum(1 for r in rows if key(r) in merged)
+    merged.update({key(r): r for r in rows})
+
+    committed["traces"] = [merged[k] for k in sorted(merged)]
+    EXPECTATIONS.write_text(json.dumps(committed, indent=2) + "\n")
+    print(f"{EXPECTATIONS.relative_to(REPO)}: {len(committed['traces'])} "
+          f"row(s) ({replaced} updated, {len(rows) - replaced} new) "
+          f"from {measured_path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
