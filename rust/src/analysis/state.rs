@@ -146,18 +146,39 @@ pub(super) fn check(prog: &ReplayProgram, out: &mut Vec<Diagnostic>) {
                         prefetch_footprint += a.bytes;
                         if !overcommit_reported && prefetch_footprint > usable {
                             overcommit_reported = true;
-                            out.push(Diagnostic {
-                                code: ALLOC_OVERCOMMIT,
-                                severity: Severity::Warning,
-                                op: Some(i),
-                                message: format!(
+                            // On a coherent (Grace-class) platform the
+                            // advice changes: the eviction churn also
+                            // throws away counter-placed pages, and
+                            // host-resident data is already serviced
+                            // fault-free over C2C (docs/PLATFORMS.md) —
+                            // so the fix is to drop the prefetch, not
+                            // shrink it.
+                            let message = if spec.um.coherent {
+                                format!(
+                                    "cumulative prefetch-to-GPU footprint {} exceeds usable \
+                                     device memory {} on coherent {} — eviction churn will \
+                                     discard counter-placed pages; leave the cold set \
+                                     host-resident and let the access counters migrate the \
+                                     hot subset",
+                                    fmt_bytes(prefetch_footprint),
+                                    fmt_bytes(usable),
+                                    prog.platform.name()
+                                )
+                            } else {
+                                format!(
                                     "cumulative prefetch-to-GPU footprint {} exceeds usable \
                                      device memory {} on {} — the prefetched set cannot \
                                      co-reside and will thrash eviction",
                                     fmt_bytes(prefetch_footprint),
                                     fmt_bytes(usable),
                                     prog.platform.name()
-                                ),
+                                )
+                            };
+                            out.push(Diagnostic {
+                                code: ALLOC_OVERCOMMIT,
+                                severity: Severity::Warning,
+                                op: Some(i),
+                                message,
                             });
                         }
                     }

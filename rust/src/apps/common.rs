@@ -259,7 +259,7 @@ impl AppCtx {
         let recorder = opts.record.then(|| ReplayProgram {
             app: String::new(),
             platform: PlatformId::parse(plat.name)
-                .expect("verb capture requires one of the three spec platforms"),
+                .expect("verb capture requires one of the four spec platforms"),
             variant,
             streams: opts.streams.max(1),
             predictor: plat.um.auto_predictor,

@@ -75,6 +75,12 @@ pub fn suite_json(
             ("wd_recoveries", Json::Int(m.wd_recoveries)),
             ("wd_retries", Json::Int(m.wd_retries)),
             ("wd_degraded_windows", Json::Int(m.wd_degraded_windows)),
+            // Coherent-platform counters (zero on fault-driven
+            // platforms). Additive — the compare gate ignores fields it
+            // does not know.
+            ("remote_access_bytes", Json::Int(m.remote_access_bytes)),
+            ("counter_migrations", Json::Int(m.counter_migrations)),
+            ("counter_threshold_crossings", Json::Int(m.counter_threshold_crossings)),
             // Distribution percentiles (docs/OBSERVABILITY.md): fault-
             // group service time, transfer size, prefetch
             // issue-to-consume lag. Additive — the compare gate
@@ -384,6 +390,9 @@ mod tests {
         assert!(c.get("eviction_dead_ratio").is_some());
         assert!(c.get("wd_trips").is_some(), "watchdog counters in the schema");
         assert!(c.get("wd_degraded_windows").is_some());
+        assert!(c.get("remote_access_bytes").is_some(), "coherent counters in the schema");
+        assert!(c.get("counter_migrations").is_some());
+        assert!(c.get("counter_threshold_crossings").is_some());
         assert!(c.get("fault_ns_p99").is_some(), "fault-latency percentiles in the schema");
         assert!(c.get("xfer_bytes_p50").is_some(), "transfer-size percentiles in the schema");
         assert!(c.get("lag_ns_p90").is_some(), "prefetch-lag percentiles in the schema");

@@ -809,6 +809,114 @@ pub fn fig_chaos(reps: usize, smoke: bool) -> Report {
 }
 
 // ---------------------------------------------------------------------
+// Coherent-platform study (umbra fig coherent)
+// ---------------------------------------------------------------------
+
+/// The coherent-platform study (`umbra fig coherent`,
+/// `docs/PLATFORMS.md`): the same UM configurations across three
+/// interconnect generations — PCIe 3.0 (Intel-Pascal), NVLink 2.0
+/// (P9-Volta) and a coherent C2C fabric (Grace-Coherent) — in both
+/// regimes. On the first two generations placement is fault-driven:
+/// advises and prefetch pay for themselves by avoiding fault-group
+/// stalls. On the third there are no faults to avoid — GPU accesses to
+/// host memory are serviced remotely at cache-line granularity and
+/// hardware access counters migrate hot page groups in the background —
+/// so each row also carries the coherent counters (remote-access
+/// traffic, counter migrations, threshold crossings; identically zero
+/// on the fault-driven platforms).
+pub fn fig_coherent(reps: usize) -> Report {
+    let platforms =
+        vec![PlatformId::IntelPascal, PlatformId::P9Volta, PlatformId::GraceCoherent];
+    let config = SuiteConfig {
+        platforms: platforms.clone(),
+        variants: Variant::AUTO_STUDY.to_vec(),
+        reps,
+        ..Default::default()
+    };
+    let suite = Suite::run(&config);
+
+    let mut text = String::new();
+    let mut csv = Csv::new(vec![
+        "platform",
+        "regime",
+        "app",
+        "variant",
+        "kernel_ms",
+        "vs_um",
+        "fault_groups",
+        "remote_access_bytes",
+        "counter_migrations",
+        "counter_threshold_crossings",
+    ]);
+    for regime in Regime::ALL {
+        for &platform in &platforms {
+            let mut table = TextTable::new(vec![
+                "App",
+                "UM (ms)",
+                "Advise/UM",
+                "Prefetch/UM",
+                "Auto/UM",
+                "faults",
+                "remote (GB)",
+                "ctr-migr",
+            ])
+            .title(format!(
+                "fig_coherent: {} — {}",
+                platform.name(),
+                regime.name()
+            ))
+            .left(0);
+            for app in AppId::ALL {
+                if !app.in_paper_matrix(platform, regime) {
+                    continue;
+                }
+                let Some(um) = suite.get4(app, platform, Variant::Um, regime) else {
+                    continue;
+                };
+                let um_ms = um.kernel_time.mean.as_ms();
+                let ratio = |v: Variant| {
+                    suite.get4(app, platform, v, regime).map_or("-".to_string(), |c| {
+                        format!("{:.2}x", c.kernel_time.mean.as_ms() / um_ms)
+                    })
+                };
+                let m = &um.last.metrics;
+                table.row(vec![
+                    app.name().to_string(),
+                    format!("{um_ms:.1}"),
+                    ratio(Variant::UmAdvise),
+                    ratio(Variant::UmPrefetch),
+                    ratio(Variant::UmAuto),
+                    m.gpu_fault_groups.to_string(),
+                    format!("{:.2}", m.remote_access_bytes as f64 / 1e9),
+                    m.counter_migrations.to_string(),
+                ]);
+                for v in Variant::AUTO_STUDY {
+                    let Some(c) = suite.get4(app, platform, v, regime) else {
+                        continue;
+                    };
+                    let cm = &c.last.metrics;
+                    csv.row(vec![
+                        platform.name().to_string(),
+                        regime.name().to_string(),
+                        app.name().to_string(),
+                        v.name().to_string(),
+                        format!("{:.3}", c.kernel_time.mean.as_ms()),
+                        format!("{:.4}", c.kernel_time.mean.as_ms() / um_ms),
+                        cm.gpu_fault_groups.to_string(),
+                        cm.remote_access_bytes.to_string(),
+                        cm.counter_migrations.to_string(),
+                        cm.counter_threshold_crossings.to_string(),
+                    ]);
+                }
+            }
+            text.push_str(&table.render());
+            text.push('\n');
+        }
+    }
+    Report::new("fig_coherent", text).with_csv("fig_coherent", csv)
+}
+
+// ---------------------------------------------------------------------
 // Generator sweep (synthetic workloads through the replay stack)
 // ---------------------------------------------------------------------
 
@@ -910,6 +1018,29 @@ mod tests {
         let r = fig5();
         assert_eq!(r.csvs.len(), 16); // 4 cases x 4 variants
         assert!(r.text.contains("total HtoD"));
+    }
+
+    #[test]
+    fn fig_coherent_renders_all_three_generations() {
+        let r = fig_coherent(1);
+        for name in ["Intel-Pascal", "P9-Volta", "Grace-Coherent"] {
+            assert!(r.text.contains(name), "{name} missing");
+        }
+        let csv = &r.csvs[0].1;
+        assert!(csv.n_rows() > 0);
+        let rendered = csv.to_string();
+        // The counter columns are live on the coherent platform only.
+        for line in rendered.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            let (plat, migrations) = (cols[0], cols[8]);
+            if plat != "Grace-Coherent" {
+                assert_eq!(migrations, "0", "fault-driven platform with counter migrations");
+            }
+        }
+        assert!(
+            rendered.lines().any(|l| l.starts_with("Grace-Coherent") && !l.contains(",0,0,0")),
+            "coherent counters never fired"
+        );
     }
 
     #[test]

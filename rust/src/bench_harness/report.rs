@@ -65,6 +65,7 @@ pub fn write_all(out: &Path, reps: usize) -> anyhow::Result<Vec<&'static str>> {
         figures::fig_auto(reps),
         figures::fig_predictor(reps),
         figures::fig_evict(reps),
+        figures::fig_coherent(reps),
         figures::fig_synth(reps),
         ablate::ablate_all(),
     ];

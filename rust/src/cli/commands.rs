@@ -33,7 +33,7 @@ USAGE:
   umbra suite [--reps N] [--out DIR] [--full-matrix] [--threads N] [--predictor PRED]
        [--evictor EV] [--streams N] [--with-auto] [--compare BASELINE.json]
        [--tolerance T]
-  umbra fig <3|4|5|6|7|8> [--reps N] [--out DIR]
+  umbra fig <3|4|5|6|7|8|coherent> [--reps N] [--out DIR]
   umbra table 1 [--out DIR]
   umbra auto [--reps N] [--out DIR] [--predictor PRED] [--evictor EV] [--streams N]
        [--compare] [--evict-study]
@@ -58,7 +58,7 @@ USAGE:
            fault-base-us | dup-factor | advised-discount
 
   APP  = bs|cublas|cg|graph500|conv0|conv1|conv2|fdtd3d
-  PLAT = intel-pascal|intel-volta|p9-volta
+  PLAT = intel-pascal|intel-volta|p9-volta|grace-coherent
   VAR  = explicit|um|advise|prefetch|both|auto
   REG  = in-memory|oversub
   PRED = heuristic|learned (um::auto predictive-prefetch engine; default learned)
@@ -265,6 +265,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "  remote: gpu->host {} B, cpu->dev {} B; invalidations {} pages",
         m.remote_bytes_gpu_to_host, m.remote_bytes_cpu_to_dev, m.invalidated_pages
     );
+    if cell.platform.is_coherent() {
+        println!(
+            "  coherent: {} B served remotely over C2C; {} counter migrations ({} threshold crossings)",
+            m.remote_access_bytes, m.counter_migrations, m.counter_threshold_crossings
+        );
+    }
     if cell.variant == Variant::UmAuto {
         println!(
             "  auto: {} decisions, {} pattern flips, {} B prefetched ({} B hit, {} B mispredicted), {} advises, {} B early-dropped",
@@ -481,7 +487,7 @@ fn cmd_fig(args: &Args) -> Result<()> {
     let which = args
         .positional
         .first()
-        .ok_or_else(|| anyhow!("fig: which figure? (3-8)"))?
+        .ok_or_else(|| anyhow!("fig: which figure? (3-8, or 'coherent')"))?
         .as_str();
     let reps = parse_reps(args, 5)?;
     let report = match which {
@@ -491,7 +497,10 @@ fn cmd_fig(args: &Args) -> Result<()> {
         "6" => figures::fig6(reps),
         "7" => figures::fig7(),
         "8" => figures::fig8(),
-        other => bail!("no figure '{other}' in the paper (3-8)"),
+        // The coherent-platform study is ours, not the paper's: the
+        // three UM tunings across three interconnect generations.
+        "coherent" => figures::fig_coherent(reps),
+        other => bail!("no figure '{other}' (3-8 from the paper, or 'coherent')"),
     };
     println!("{}", report.text);
     if let Some(out) = args.flag("out") {

@@ -193,7 +193,7 @@ mod tests {
     #[test]
     fn full_matrix_size() {
         let config = SuiteConfig { paper_matrix: false, ..Default::default() };
-        assert_eq!(config.cells().len(), 8 * 3 * 5 * 2);
+        assert_eq!(config.cells().len(), 8 * 4 * 5 * 2);
     }
 
     #[test]

@@ -59,6 +59,13 @@ impl PageFlags {
     pub const GPU_MAPPED: u8 = 1 << 2;
     /// Page was populated at least once (distinguishes cold first touch).
     pub const POPULATED: u8 = 1 << 3;
+    /// Page was migrated to the device by the coherent platform's
+    /// access-counter path (`docs/PLATFORMS.md`): the hardware counter
+    /// crossed its threshold and the driver moved the hot group in the
+    /// background. Device hits on such pages are the counter path's
+    /// payoff — remote traffic avoided — which the `um::auto` watchdog
+    /// ledger counts as benefit on the coherent platform.
+    pub const COUNTER_PLACED: u8 = 1 << 4;
 
     pub fn get(self, bit: u8) -> bool {
         self.0 & bit != 0
@@ -161,6 +168,9 @@ mod tests {
         f.set(PageFlags::DIRTY, false);
         assert!(!f.get(PageFlags::DIRTY));
         assert!(f.get(PageFlags::CPU_MAPPED)); // untouched
+        f.set(PageFlags::COUNTER_PLACED, true);
+        assert!(f.get(PageFlags::COUNTER_PLACED));
+        assert!(!f.get(PageFlags::GPU_MAPPED)); // distinct bits
     }
 
     #[test]

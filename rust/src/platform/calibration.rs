@@ -48,6 +48,25 @@ pub const HOST_BW_XEON: f64 = 15.0e9;
 /// Host memcpy bandwidth, Power9 (higher per-thread stream bw).
 pub const HOST_BW_P9: f64 = 18.0e9;
 
+/// H100-class GPU on a Grace-Hopper superchip: ~67 TFLOP/s FP32
+/// (H100 SXM whitepaper, non-tensor FP32).
+pub const GH200_FLOPS: f64 = 67.0e12;
+
+/// H100-class HBM3 bandwidth, ~4 TB/s (arxiv 2407.07850 measures
+/// 3.4-4.0 TB/s with STREAM-like kernels).
+pub const GH200_MEM_BW: f64 = 4.0e12;
+
+/// Fault-group service on the coherent C2C platform. Faults are rare
+/// there (line-grained coherent access needs none), but first-touch
+/// population and explicitly migrated pages still pay a driver
+/// round-trip; the low-latency C2C fabric makes it the shortest of the
+/// three generations.
+pub const FAULT_BASE_GRACE: Ns = Ns(15_000);
+
+/// Host memcpy bandwidth on Grace (LPDDR5X, ~500 GB/s aggregate;
+/// single-threaded init/verify loops see a fraction of that).
+pub const HOST_BW_GRACE: f64 = 40.0e9;
+
 /// Default problem-size fractions of *usable* GPU memory (§III-B: "80%
 /// and 150% to GPU memory, respectively").
 pub const IN_MEMORY_FRACTION: f64 = 0.80;
@@ -69,9 +88,13 @@ mod tests {
 
     #[test]
     fn fault_cost_ordering() {
-        // P9's driver round trip is faster, but the same order.
+        // P9's driver round trip is faster, but the same order; the
+        // C2C fabric shortens it again without changing the order of
+        // magnitude.
         assert!(FAULT_BASE_P9 < FAULT_BASE_INTEL);
         assert!(FAULT_BASE_P9 > Ns(10_000));
+        assert!(FAULT_BASE_GRACE < FAULT_BASE_P9);
+        assert!(FAULT_BASE_GRACE > Ns(5_000));
     }
 
     #[test]

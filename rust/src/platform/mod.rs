@@ -1,10 +1,19 @@
-//! The paper's three test platforms as parameter sets (§III-B).
+//! The paper's three test platforms as parameter sets (§III-B), plus a
+//! Grace-Hopper-class coherent fourth (arxiv 2407.07850; see
+//! `docs/PLATFORMS.md`).
 //!
 //! | | CPU | GPU | GPU mem | link |
 //! |---|---|---|---|---|
 //! | Intel-Pascal | i7-7820X, 32 GB | GTX 1050 Ti | 4 GB | PCIe 3.0 |
 //! | Intel-Volta | Xeon 6132, 192 GB | Tesla V100 | 16 GB | PCIe 3.0 |
 //! | P9-Volta | Power9, 256 GB | Tesla V100 | 16 GB | NVLink 2.0 |
+//! | Grace-Coherent | Grace-class | GH200 (H100-class) | 16 GB* | NVLink-C2C |
+//!
+//! *The coherent platform's device capacity is deliberately normalized
+//! to the V100-class 16 GiB so the three-generation comparison
+//! (`fig_coherent`) contrasts *interconnects* at identical footprints —
+//! not the 96 GB a real GH200 ships with. `docs/PLATFORMS.md` records
+//! what is and is not reproduced.
 //!
 //! Calibration provenance is documented per constant in [`calibration`].
 
@@ -62,16 +71,26 @@ pub enum PlatformId {
     IntelPascal,
     IntelVolta,
     P9Volta,
+    /// Grace-Hopper-class hardware-coherent system (NVLink-C2C): no
+    /// fault-driven migration — line-grained remote access plus
+    /// access-counter placement. See `docs/PLATFORMS.md`.
+    GraceCoherent,
 }
 
 impl PlatformId {
-    pub const ALL: [PlatformId; 3] = [PlatformId::IntelPascal, PlatformId::IntelVolta, PlatformId::P9Volta];
+    pub const ALL: [PlatformId; 4] = [
+        PlatformId::IntelPascal,
+        PlatformId::IntelVolta,
+        PlatformId::P9Volta,
+        PlatformId::GraceCoherent,
+    ];
 
     pub fn spec(self) -> PlatformSpec {
         match self {
             PlatformId::IntelPascal => intel_pascal(),
             PlatformId::IntelVolta => intel_volta(),
             PlatformId::P9Volta => p9_volta(),
+            PlatformId::GraceCoherent => grace_coherent(),
         }
     }
 
@@ -80,6 +99,7 @@ impl PlatformId {
             PlatformId::IntelPascal => "Intel-Pascal",
             PlatformId::IntelVolta => "Intel-Volta",
             PlatformId::P9Volta => "P9-Volta",
+            PlatformId::GraceCoherent => "Grace-Coherent",
         }
     }
 
@@ -88,6 +108,7 @@ impl PlatformId {
             "intel-pascal" | "intelpascal" | "pascal" => Some(PlatformId::IntelPascal),
             "intel-volta" | "intelvolta" | "volta" => Some(PlatformId::IntelVolta),
             "p9-volta" | "p9volta" | "p9" | "power9" => Some(PlatformId::P9Volta),
+            "grace-coherent" | "gracecoherent" | "grace" | "gh200" => Some(PlatformId::GraceCoherent),
             _ => None,
         }
     }
@@ -98,6 +119,7 @@ impl PlatformId {
             PlatformId::IntelPascal => 0,
             PlatformId::IntelVolta => 1,
             PlatformId::P9Volta => 2,
+            PlatformId::GraceCoherent => 3,
         }
     }
 
@@ -106,8 +128,22 @@ impl PlatformId {
             0 => Some(PlatformId::IntelPascal),
             1 => Some(PlatformId::IntelVolta),
             2 => Some(PlatformId::P9Volta),
+            3 => Some(PlatformId::GraceCoherent),
             _ => None,
         }
+    }
+
+    /// The paper's original §III-B testbeds (excludes the coherent
+    /// extension platform). Suite defaults and the paper-figure matrix
+    /// iterate `ALL`; code that must reproduce the paper exactly as
+    /// published iterates this.
+    pub const PAPER: [PlatformId; 3] =
+        [PlatformId::IntelPascal, PlatformId::IntelVolta, PlatformId::P9Volta];
+
+    /// Does this platform service GPU accesses to host memory through
+    /// hardware coherence (no fault groups, counter-driven placement)?
+    pub fn is_coherent(self) -> bool {
+        self.spec().um.coherent
     }
 }
 
@@ -183,6 +219,41 @@ pub fn p9_volta() -> PlatformSpec {
     }
 }
 
+/// Grace-Hopper-class coherent superchip (GH200-like) over NVLink-C2C.
+///
+/// Deliberate modeling choices (documented in `docs/PLATFORMS.md`):
+/// device capacity is normalized to the V100-class 16 GiB — not the
+/// real 96 GB — so `fig_coherent` compares interconnect generations at
+/// identical footprints and the paper's 80%/150% regimes stay inside
+/// `calibration::MAX_FOOTPRINT`. Compute/bandwidth are H100-class, so
+/// the "fast GPU starved by the data path" effect from the
+/// Pascal→Volta contrast carries forward another generation.
+pub fn grace_coherent() -> PlatformSpec {
+    PlatformSpec {
+        name: "Grace-Coherent",
+        gpu: GpuSpec {
+            name: "GH200 (H100-class)",
+            mem_capacity: 16 * GIB,
+            reserved: calibration::CTX_RESERVED_LARGE,
+            flops_f32: calibration::GH200_FLOPS,
+            mem_bw: calibration::GH200_MEM_BW,
+            sm_count: 132,
+        },
+        link: Link::c2c_grace(),
+        cpu_can_access_gpu: true,
+        gpu_can_access_host: true,
+        host_mem_bw: calibration::HOST_BW_GRACE,
+        um: UmPolicy {
+            fault_group_base: calibration::FAULT_BASE_GRACE,
+            remote_map_under_pressure: true,
+            coherent: true,
+            counter_group_pages: 16,
+            counter_threshold: 4,
+            ..UmPolicy::default()
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,12 +271,20 @@ mod tests {
         assert!(!intel_pascal().cpu_can_access_gpu);
         assert!(!intel_volta().cpu_can_access_gpu);
         assert!(p9_volta().cpu_can_access_gpu);
+        assert!(grace_coherent().cpu_can_access_gpu);
         for id in PlatformId::ALL {
             assert!(id.spec().gpu_can_access_host);
         }
         // remote-map-under-pressure tracks ATS coherence
         assert!(p9_volta().um.remote_map_under_pressure);
         assert!(!intel_pascal().um.remote_map_under_pressure);
+        // Hardware coherence is exclusive to the C2C generation: the
+        // paper's three testbeds all migrate on fault.
+        for id in PlatformId::PAPER {
+            assert!(!id.is_coherent(), "{} must stay fault-driven", id.name());
+        }
+        assert!(PlatformId::GraceCoherent.is_coherent());
+        assert!(grace_coherent().um.counter_threshold > 0, "counter migration on by default");
     }
 
     #[test]
@@ -213,6 +292,9 @@ mod tests {
         assert_eq!(intel_pascal().gpu.mem_capacity, 4 * GIB);
         assert_eq!(intel_volta().gpu.mem_capacity, 16 * GIB);
         assert_eq!(p9_volta().gpu.mem_capacity, 16 * GIB);
+        // Deliberately normalized (not the real 96 GB): identical
+        // footprints across interconnect generations; see module docs.
+        assert_eq!(grace_coherent().gpu.mem_capacity, 16 * GIB);
         for id in PlatformId::ALL {
             let g = id.spec().gpu;
             assert!(g.usable() > g.mem_capacity / 2);
@@ -233,6 +315,38 @@ mod tests {
         }
         assert_eq!(PlatformId::parse("p9"), Some(PlatformId::P9Volta));
         assert_eq!(PlatformId::parse("nope"), None);
+    }
+
+    #[test]
+    fn grace_link_dominates_both_prior_generations() {
+        let gc = grace_coherent();
+        let p9 = p9_volta();
+        assert!(gc.link.effective_bw(TransferMode::Bulk) > 4.0 * p9.link.effective_bw(TransferMode::Bulk));
+        // The qualitative flip: remote access on C2C beats *bulk DMA*
+        // on NVLink 2 — staying put becomes viable.
+        assert!(gc.link.remote_bw > p9.link.effective_bw(TransferMode::Bulk));
+    }
+
+    #[test]
+    fn paper_subset_is_all_minus_coherent() {
+        assert_eq!(PlatformId::PAPER.len() + 1, PlatformId::ALL.len());
+        for id in PlatformId::PAPER {
+            assert!(PlatformId::ALL.contains(&id));
+        }
+        assert!(!PlatformId::PAPER.contains(&PlatformId::GraceCoherent));
+    }
+
+    #[test]
+    fn wire_codes_stable() {
+        // Codes are a serialization contract (.umt captures in
+        // corpora/): appending GraceCoherent as 3 must not renumber.
+        assert_eq!(PlatformId::IntelPascal.code(), 0);
+        assert_eq!(PlatformId::IntelVolta.code(), 1);
+        assert_eq!(PlatformId::P9Volta.code(), 2);
+        assert_eq!(PlatformId::GraceCoherent.code(), 3);
+        for id in PlatformId::ALL {
+            assert_eq!(PlatformId::from_code(id.code()), Some(id));
+        }
     }
 
     #[test]

@@ -91,6 +91,11 @@ pub enum ReasonCode {
     ChaosEccRetire = 23,
     /// Chaos injected spurious fault groups (`aux` = extra groups).
     ChaosFaultNoise = 24,
+    /// Coherent platform: the engine re-tuned an allocation's
+    /// access-counter migration threshold from its observed pattern —
+    /// the no-fault regime's stand-in for bulk-prefetch escalation
+    /// (`aux` = the hinted threshold; `docs/PLATFORMS.md`).
+    CoherentThresholdHint = 25,
 }
 
 /// Number of reason codes (running-sum array width).
@@ -98,7 +103,7 @@ pub const N_REASONS: usize = ReasonCode::ALL.len();
 
 impl ReasonCode {
     /// Every reason, in wire-code order (`ALL[c]` has code `c`).
-    pub const ALL: [ReasonCode; 25] = [
+    pub const ALL: [ReasonCode; 26] = [
         ReasonCode::AdviseReadRepeats,
         ReasonCode::AdviseStreamingDup,
         ReasonCode::AdviseUnsetWrite,
@@ -124,6 +129,7 @@ impl ReasonCode {
         ReasonCode::ChaosFlakyPrefetch,
         ReasonCode::ChaosEccRetire,
         ReasonCode::ChaosFaultNoise,
+        ReasonCode::CoherentThresholdHint,
     ];
 
     /// The stable wire code (`.umt` reason byte).
@@ -164,6 +170,7 @@ impl ReasonCode {
             ReasonCode::ChaosFlakyPrefetch => "chaos.flaky_prefetch",
             ReasonCode::ChaosEccRetire => "chaos.ecc_retire",
             ReasonCode::ChaosFaultNoise => "chaos.fault_noise",
+            ReasonCode::CoherentThresholdHint => "coherent.threshold_hint",
         }
     }
 }

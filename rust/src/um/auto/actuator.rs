@@ -159,6 +159,13 @@ impl UmRuntime {
         let Some(mut eng) = self.auto.take() else { return };
         let cfg = eng.cfg;
         let now = out.done;
+        // Coherent (Grace-class) platforms have no fault stream to
+        // escalate and hardware counters already migrate hot data:
+        // bulk/predictive prefetch would race the hardware's own
+        // placement, so the engine degrades to threshold tuning (the
+        // block below) plus its usual advise withdrawal duties. See
+        // `docs/PLATFORMS.md` for the degradation map.
+        let coherent = self.policy.coherent;
 
         // Watchdog snapshot: actuation below is gated on the rung the
         // breaker held *entering* this access; the ledger tick at the
@@ -254,7 +261,10 @@ impl UmRuntime {
         // (learned mode) or the single classifier-rule range (heuristic
         // mode; also the learned mode's low-confidence fallback). The
         // heuristic arm is byte-identical to the original engine.
-        let (predictions, pred_reason): (Vec<PageRange>, ReasonCode) = if !cfg.predict || inert {
+        let (predictions, pred_reason): (Vec<PageRange>, ReasonCode) = if !cfg.predict
+            || inert
+            || coherent
+        {
             (Vec::new(), ReasonCode::PredictHeuristic)
         } else if force_heur {
             // Watchdog rung ≥ Heuristic: the classifier rule alone.
@@ -320,6 +330,10 @@ impl UmRuntime {
             && advise_ready
             && advise_safe
             && !block_advise
+            // Never auto-pin on a coherent platform: ReadMostly there
+            // means "serve remotely forever", which forfeits the
+            // counter migrations the hardware would otherwise earn.
+            && !coherent
         {
             set_read_mostly = true;
             shared.advised_read_mostly = true;
@@ -411,6 +425,58 @@ impl UmRuntime {
             // Ranked predictions share the DMA engine: issue in order.
             t_pred = ready;
         }
+        // ---- coherent degradation: access-counter threshold tuning --
+        // The no-fault regime's stand-in for stream escalation: the
+        // engine cannot prefetch past a fault probe that never fires,
+        // but it can tell the hardware *when* to migrate. Sequential-
+        // leaning patterns earn their locality — migrate sooner (half
+        // the platform threshold); random touch-everything patterns
+        // would migrate pages they never revisit — migrate later
+        // (double), but only under device-memory pressure (≥ 3/4
+        // occupied), where every useless migration evicts data somebody
+        // wanted. With head-room the platform default already amortizes
+        // fine and the extra remote traffic of a raised threshold would
+        // be pure loss. An inert engine withdraws its hint, reverting
+        // to plain platform behavior like every other Inert
+        // degradation. A base threshold of 0 (migration disabled by
+        // the platform or the user) is never overridden.
+        if coherent {
+            let base = self.policy.counter_threshold;
+            let pressured =
+                self.dev.used().saturating_mul(4) >= self.dev.capacity().saturating_mul(3);
+            let want: Option<u32> = if base == 0 || inert {
+                None
+            } else {
+                match pat {
+                    Pattern::Sequential | Pattern::Strided(_) | Pattern::StreamingOversub => {
+                        Some((base / 2).max(1))
+                    }
+                    Pattern::Random if pressured => Some(base.saturating_mul(2)),
+                    _ => None,
+                }
+            };
+            if want != self.counter_threshold_hints.get(&id).copied() {
+                match want {
+                    Some(hint) => {
+                        self.counter_threshold_hints.insert(id, hint);
+                        self.metrics.auto_decisions += 1;
+                        self.metrics.stream_mut(stream).auto_decisions += 1;
+                        self.trace.decision(Decision {
+                            at: now,
+                            stream,
+                            alloc: Some(id),
+                            rung,
+                            reason: ReasonCode::CoherentThresholdHint,
+                            bytes: 0,
+                            aux: u64::from(hint),
+                        });
+                    }
+                    None => {
+                        self.counter_threshold_hints.remove(&id);
+                    }
+                }
+            }
+        }
         // The learned eviction path is active only when eviction can
         // happen at all (managed footprint exceeds capacity). The gate
         // must cover the legacy early-drop suppression below too:
@@ -422,8 +488,9 @@ impl UmRuntime {
         // engine falls back to the legacy early-drop rule + raw LRU.
         let learned_eviction_active = self.policy.evictor == EvictorKind::Learned
             && !force_heur
+            && !self.policy.coherent
             && self.space.managed_bytes() > self.dev.capacity();
-        if streaming && !inert {
+        if streaming && !inert && !coherent {
             // Eviction hints. Early-drop streamed-past duplicates — the
             // original `[0, start)` rule, kept verbatim for the LRU
             // evictor (`--evictor lru` is pinned byte-identical to it
@@ -518,9 +585,16 @@ impl UmRuntime {
         }
 
         // ---- watchdog ledger tick -----------------------------------
-        // Benefit: predictively prefetched bytes this access consumed.
-        // Harm: prefetched bytes that aged out mispredicted, plus bytes
-        // whose prefetch failed outright since the last tick.
+        // Benefit: predictively prefetched bytes this access consumed;
+        // on a coherent platform, remote-traffic bytes the counter
+        // migrations (which the engine's threshold hints steer) avoided
+        // since the last tick. Harm: prefetched bytes that aged out
+        // mispredicted, plus bytes whose prefetch failed outright since
+        // the last tick — both ≈ 0 in the coherent regime, where the
+        // engine issues no prefetches, so a healthy coherent run can
+        // never trip the breaker.
+        wd_benefit += self.coherent_avoided_remote;
+        self.coherent_avoided_remote = 0;
         wd_harm += eng.watchdog.failed_delta(self.metrics.chaos_failed_prefetch_bytes);
         eng.watchdog.note_access(wd_benefit, wd_harm);
         // Drain breaker incidents unconditionally (the buffer must stay
@@ -685,7 +759,7 @@ impl UmRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::{intel_pascal, p9_volta};
+    use crate::platform::{grace_coherent, intel_pascal, p9_volta};
     use crate::um::auto::AutoConfig;
     use crate::util::units::MIB;
 
@@ -767,6 +841,100 @@ mod tests {
             "write backs the advise off"
         );
         assert!(r.metrics.auto_advises > advises_before);
+    }
+
+    #[test]
+    fn coherent_engine_tunes_threshold_instead_of_prefetching() {
+        // Sequential sweeps on Grace: the engine must issue no advises
+        // and no prefetches (there is no fault stream to beat), but its
+        // threshold hint — half the platform default — makes the
+        // hardware counters migrate after 2 touches instead of 4.
+        let (mut r, a) = prepped(&grace_coherent(), 4 * MIB); // 64 pages = 4 groups
+        assert_eq!(r.policy.counter_threshold, 4);
+        let mut t = Ns::ZERO;
+        for sweep in 0..2 {
+            for i in 0..4u32 {
+                let w = PageRange::new(i * 16, (i + 1) * 16);
+                t = r.gpu_access(a, w, false, t).done;
+            }
+            if sweep == 0 {
+                assert_eq!(r.metrics.counter_migrations, 0, "one touch per group so far");
+                assert_eq!(
+                    r.counter_threshold_hints.get(&a).copied(),
+                    Some(2),
+                    "sequential pattern halves the migration threshold"
+                );
+            }
+        }
+        assert_eq!(r.metrics.counter_migrations, 4, "hinted threshold 2: sweep 2 migrates");
+        assert_eq!(r.metrics.migrated_pages_h2d, 64);
+        assert_eq!(r.metrics.auto_prefetched_bytes, 0, "no prefetch in the no-fault regime");
+        assert_eq!(r.metrics.auto_advises, 0);
+        assert_eq!(r.metrics.gpu_fault_groups, 0);
+        assert_eq!(r.metrics.wd_trips, 0, "healthy coherent run never trips the breaker");
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn coherent_random_pattern_raises_threshold_only_under_pressure() {
+        // Repeated writes to one range classify Random (zero stride is
+        // no stream). With device head-room the engine leaves the
+        // platform threshold alone — a raised threshold would only add
+        // remote traffic while evicting nobody.
+        let (mut r, a) = prepped(&grace_coherent(), MIB); // 16 pages = 1 group
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for _ in 0..4 {
+            t = r.gpu_access(a, full, true, t).done;
+        }
+        assert_eq!(r.counter_threshold_hints.get(&a), None, "head-room: no hint");
+        assert_eq!(r.metrics.counter_migrations, 1, "platform default migrated on touch 4");
+
+        // Under pressure (a resident device allocation holds 7/8 of an
+        // 8 MiB device) the same pattern doubles the threshold: the
+        // hot group migrates on touch 8, not 4.
+        let mut plat = grace_coherent();
+        plat.gpu.mem_capacity = 8 * MIB;
+        plat.gpu.reserved = 0;
+        let (mut r, a) = prepped(&plat, MIB);
+        let _resident = r.malloc_device("resident", 7 * MIB);
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for i in 1..=8u32 {
+            t = r.gpu_access(a, full, true, t).done;
+            if i >= 2 {
+                assert_eq!(r.counter_threshold_hints.get(&a).copied(), Some(8));
+            }
+            if i < 8 {
+                assert_eq!(r.metrics.counter_migrations, 0, "touch {i} under raised threshold");
+            }
+        }
+        assert_eq!(r.metrics.counter_migrations, 1);
+        assert_eq!(r.metrics.counter_threshold_crossings, 1);
+        r.check_residency_invariant().unwrap();
+    }
+
+    #[test]
+    fn coherent_engine_never_auto_pins_read_mostly() {
+        // Repeated full reads classify ReadMostly, but auto-applying
+        // the advise on a coherent platform would pin the data remote
+        // forever — the engine must leave placement to the counters,
+        // which migrate at the platform default (no hint for this
+        // pattern).
+        let (mut r, a) = prepped(&grace_coherent(), 4 * MIB);
+        let full = r.space.get(a).full();
+        let mut t = Ns::ZERO;
+        for _ in 0..6 {
+            t = r.gpu_access(a, full, false, t).done;
+        }
+        assert_eq!(r.metrics.auto_advises, 0, "no auto ReadMostly on coherent");
+        let alloc = r.space.get(a);
+        assert_eq!(alloc.pages.count(full, |p| p.advise.read_mostly()), 0);
+        assert_eq!(r.counter_threshold_hints.get(&a), None, "read-mostly: default threshold");
+        assert_eq!(r.metrics.counter_migrations, 4, "counters migrated all 4 groups at base 4");
+        assert_eq!(r.metrics.counter_threshold_crossings, 4);
+        assert_eq!(r.metrics.wd_trips, 0);
+        assert_eq!(r.metrics.wd_degraded_windows, 0);
     }
 
     #[test]

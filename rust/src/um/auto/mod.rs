@@ -27,6 +27,7 @@
 //! | ahead-of-access prefetch | stable sequential/strided pattern | prefetch the predicted next range (sized by detected stride, clamped by free memory) on the access tail | §III-A3: background prefetch overlaps kernel execution |
 //! | eviction hints | streaming-oversubscribed pattern | early-drop streamed-past ReadMostly duplicates; on pattern flips, re-touch (protect) read-mostly hot allocations | §II-D: droppable-vs-writeback asymmetry; protect reused data from LRU churn |
 //! | learned eviction (`--evictor learned`) | confident dead-range forecast from the delta tables | ranked hints into `um/evict.rs`: pre-drop predicted-dead clean duplicates (extent scaled by confidence), evict hinted-dead chunks first, defer predicted-live chunks | §IV-B: what you evict matters as much as what you prefetch — see `docs/EVICTION.md` |
+//! | coherent degradation | `policy.coherent` platform (Grace-class) | no prefetch, no auto ReadMostly, no eviction hints — instead tune each allocation's access-counter migration threshold from its pattern (sequential-leaning: half; random under device-memory pressure: double); benefit ledger credits remote traffic the counter migrations avoided | arxiv 2407.07850: on coherent C2C systems placement is counter-driven, not fault-driven — the engine's only lever is *when* the hardware migrates (`docs/PLATFORMS.md`) |
 //!
 //! ## Predictive prefetch: learned vs. heuristic
 //!

@@ -168,6 +168,24 @@ pub struct UmMetrics {
     /// measured in windows).
     pub wd_degraded_windows: u64,
 
+    // --- coherent-platform counters (docs/PLATFORMS.md) ---
+    // Always zero on the fault-driven platforms: only the coherent
+    // servicing path in `um/migrate.rs` bumps them, and that path is
+    // unreachable unless `UmPolicy::coherent` (pinned by
+    // `rust/tests/platform_oracle.rs`).
+    /// Bytes the GPU pulled from host memory over the coherent fabric
+    /// at line granularity (the no-fault servicing mode). A subset of
+    /// `remote_bytes_gpu_to_host`, split out so the coherent column is
+    /// distinguishable from legacy zero-copy/ATS traffic in the CSV.
+    pub remote_access_bytes: Bytes,
+    /// Background migrations triggered by a hardware access-counter
+    /// group crossing its threshold (one per migrated run∩group
+    /// extent).
+    pub counter_migrations: u64,
+    /// Access-counter groups that crossed `counter_threshold` (each
+    /// group counted once per run — the edge, not the dwell).
+    pub counter_threshold_crossings: u64,
+
     // --- latency/size distributions (docs/OBSERVABILITY.md) ---
     // Fed unconditionally on the hot path (fixed-size, O(1) record),
     // never through the trace gate, so enabling/capping/disabling
@@ -265,7 +283,7 @@ impl UmMetrics {
     /// New columns append at the end — downstream tooling (and the
     /// positional assertions in this module's tests) index the earlier
     /// columns by position.
-    pub const AUTO_CSV_HEADER: [&'static str; 26] = [
+    pub const AUTO_CSV_HEADER: [&'static str; 29] = [
         "auto_decisions",
         "auto_pattern_flips",
         "auto_prefetched_bytes",
@@ -292,6 +310,9 @@ impl UmMetrics {
         "lag_ns_p50",
         "lag_ns_p90",
         "lag_ns_p99",
+        "remote_access_bytes",
+        "counter_migrations",
+        "counter_threshold_crossings",
     ];
 
     /// The auto-policy counters as CSV fields (order matches
@@ -324,6 +345,9 @@ impl UmMetrics {
             self.prefetch_lag.p50().to_string(),
             self.prefetch_lag.p90().to_string(),
             self.prefetch_lag.p99().to_string(),
+            self.remote_access_bytes.to_string(),
+            self.counter_migrations.to_string(),
+            self.counter_threshold_crossings.to_string(),
         ]
     }
 
@@ -438,6 +462,30 @@ mod tests {
         assert_eq!(row[idx("wd_recoveries")], "1");
         assert_eq!(row[idx("wd_retries")], "5");
         assert_eq!(row[idx("wd_degraded_windows")], "9");
+    }
+
+    #[test]
+    fn coherent_columns_append_at_the_end() {
+        let m = UmMetrics {
+            remote_access_bytes: 123_456,
+            counter_migrations: 7,
+            counter_threshold_crossings: 5,
+            ..Default::default()
+        };
+        let row = m.auto_csv_row();
+        let idx = |name: &str| {
+            UmMetrics::AUTO_CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap_or_else(|| panic!("{name} missing from AUTO_CSV_HEADER"))
+        };
+        assert_eq!(row[idx("remote_access_bytes")], "123456");
+        assert_eq!(row[idx("counter_migrations")], "7");
+        assert_eq!(row[idx("counter_threshold_crossings")], "5");
+        // Append-only contract: the coherent columns sit strictly after
+        // every pre-existing column.
+        assert_eq!(idx("remote_access_bytes"), 26);
+        assert_eq!(UmMetrics::AUTO_CSV_HEADER.len(), 29);
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! On-demand H2D migration, ATS remote mapping under pressure, and
-//! ReadMostly duplicate handling (paper §II-A/§II-B).
+//! On-demand H2D migration, ATS remote mapping under pressure,
+//! ReadMostly duplicate handling (paper §II-A/§II-B), and the coherent
+//! platform's access-counter servicing path (`docs/PLATFORMS.md`).
 
 use crate::mem::{AllocId, PageRange, Residency, TransferMode, PAGE_SIZE};
 use crate::mem::page::PageFlags;
 use crate::trace::TraceKind;
-use crate::util::units::Ns;
+use crate::util::units::{Bytes, Ns};
 
 use super::runtime::{AccessOutcome, Class, UmRuntime};
 
@@ -221,6 +222,114 @@ impl UmRuntime {
         AccessOutcome { done: now, remote_bytes: bytes, ..Default::default() }
     }
 
+    /// Coherent (Grace-Hopper-class) servicing of a host-resident run:
+    /// the access itself is always serviced remotely at cache-line
+    /// granularity over the C2C fabric — **no fault groups, no stall**
+    /// — while the per-group hardware access counters accumulate
+    /// touches. A group crossing `policy.counter_threshold` has its
+    /// touched host pages migrated to the device *in the background*:
+    /// the triggering access's `done` is not extended (it was already
+    /// served remotely); only later accesses see the pages device-
+    /// resident. `ReadMostly` and `PreferredLocation(Cpu)` pin the run
+    /// remote (never migrate), as does `counter_threshold == 0`.
+    pub(super) fn coherent_access_host(
+        &mut self,
+        id: AllocId,
+        run: PageRange,
+        class: Class,
+        write: bool,
+        now: Ns,
+    ) -> AccessOutcome {
+        debug_assert!(self.policy.coherent);
+        let bytes = run.bytes();
+        let dur = self.remote_time(bytes);
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::RemoteAccess,
+            now,
+            now + dur,
+            bytes,
+            Some(id),
+            "coherent",
+        );
+        self.metrics.remote_bytes_gpu_to_host += bytes;
+        self.metrics.remote_access_bytes += bytes;
+        let mut out = AccessOutcome { done: now, remote_bytes: bytes, ..Default::default() };
+
+        // "Pin remote, never migrate": duplication is pointless on a
+        // coherent fabric (every reader already sees the host copy at
+        // near-local bandwidth) and `PreferredLocation(Cpu)` is an
+        // explicit stay-put instruction. Threshold 0 disables the
+        // counter path wholesale (an engine hint never resurrects it).
+        if class.read_mostly || class.pref_host || self.policy.counter_threshold == 0 {
+            return out;
+        }
+        // The auto engine may have re-tuned this allocation's threshold
+        // from its observed pattern; fall back to the platform default.
+        let threshold = self
+            .counter_threshold_hints
+            .get(&id)
+            .copied()
+            .unwrap_or(self.policy.counter_threshold);
+
+        // Hardware access counters: one touch per overlapping group per
+        // serviced run (the counters see coalesced traffic, not per-
+        // line events). Crossing the threshold migrates the *touched*
+        // extent of the hot group — run ∩ group — so migrated bytes
+        // never exceed what the GPU actually accessed (pinned by
+        // `rust/tests/prop_invariants.rs`).
+        let gp = self.policy.counter_group_pages;
+        let first_group = run.start / gp;
+        let last_group = (run.end - 1) / gp;
+        for g in first_group..=last_group {
+            let touches = self.counter_touches.entry((id, g)).or_insert(0);
+            *touches = touches.saturating_add(1);
+            let hot = *touches >= threshold;
+            if *touches == threshold {
+                self.metrics.counter_threshold_crossings += 1;
+            }
+            if hot {
+                let seg = PageRange::new(run.start.max(g * gp), run.end.min((g + 1) * gp));
+                out.h2d_bytes += self.counter_migrate(id, seg, write, now);
+            }
+        }
+        out
+    }
+
+    /// Background migration of a hot counter group's touched extent.
+    /// Bulk-mode DMA (the driver batches counter-triggered moves like a
+    /// prefetch, not like a fault drain); the caller's access is *not*
+    /// gated on completion.
+    fn counter_migrate(&mut self, id: AllocId, seg: PageRange, write: bool, now: Ns) -> Bytes {
+        let bytes = seg.bytes();
+        let t_space = self.ensure_device_space(bytes, now);
+        let eff = self.eff_at(TransferMode::Bulk, t_space);
+        let occ = self.dma_h2d.transfer(t_space, bytes, eff);
+        self.metrics.transfer_size.record(bytes);
+        self.trace.record_on(
+            self.access_stream,
+            TraceKind::UmMemcpyHtoD,
+            occ.start,
+            occ.end,
+            bytes,
+            Some(id),
+            "counter-migrate",
+        );
+        self.metrics.h2d_time += occ.duration();
+        self.space.get_mut(id).pages.update(seg, |p| {
+            p.residency = Residency::Device;
+            p.flags.set(PageFlags::POPULATED, true);
+            p.flags.set(PageFlags::DIRTY, write);
+            p.flags.set(PageFlags::GPU_MAPPED, false);
+            p.flags.set(PageFlags::COUNTER_PLACED, true);
+        });
+        self.add_device_residency(id, seg, false, occ.end);
+        self.metrics.migrated_pages_h2d += seg.len() as u64;
+        self.metrics.h2d_bytes += bytes;
+        self.metrics.counter_migrations += 1;
+        bytes
+    }
+
     /// GPU write to ReadMostly-duplicated pages: all duplicates are
     /// invalidated to preserve consistency (paper §II-B) — the host copy
     /// is dropped and the device copy becomes the only (dirty) one.
@@ -406,6 +515,113 @@ mod tests {
         let (evictions_etc, remote_etc) = run_with(true);
         assert!(evictions_etc < evictions_plain, "throttle cuts churn: {evictions_etc} vs {evictions_plain}");
         assert!(remote_etc > remote_plain, "remainder served remotely");
+    }
+
+    fn grace_rt() -> UmRuntime {
+        UmRuntime::new(&crate::platform::grace_coherent())
+    }
+
+    #[test]
+    fn coherent_host_access_is_remote_with_no_faults() {
+        let mut r = grace_rt();
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let out = r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(r.metrics.gpu_fault_groups, 0, "coherent servicing raises no fault groups");
+        assert_eq!(out.fault_stall, Ns::ZERO);
+        assert_eq!(out.remote_bytes, 4 * MIB);
+        assert_eq!(r.metrics.remote_access_bytes, 4 * MIB);
+        assert_eq!(out.h2d_bytes, 0, "one touch is under the threshold: data stays put");
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Host), 64);
+    }
+
+    #[test]
+    fn counter_threshold_triggers_background_migration() {
+        let mut r = grace_rt();
+        assert_eq!(r.policy.counter_threshold, 4);
+        let id = r.malloc_managed("x", 4 * MIB); // 64 pages = 4 counter groups
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        let mut last = Ns::ZERO;
+        for i in 0..4u32 {
+            let out = r.gpu_access(id, full, false, last);
+            if i < 3 {
+                assert_eq!(r.metrics.counter_migrations, 0, "touch {i} is under threshold");
+                assert_eq!(out.done, last, "remote service never stalls the access");
+            }
+            last = out.done;
+        }
+        assert_eq!(r.metrics.counter_threshold_crossings, 4, "all 4 groups crossed");
+        assert_eq!(r.metrics.counter_migrations, 4);
+        assert_eq!(r.metrics.migrated_pages_h2d, 64);
+        assert_eq!(r.metrics.gpu_fault_groups, 0, "migration is counter-driven, not fault-driven");
+        let alloc = r.space.get(id);
+        assert_eq!(alloc.pages.count(full, |p| p.residency == Residency::Device), 64);
+        assert_eq!(alloc.pages.count(full, |p| p.flags.get(PageFlags::COUNTER_PLACED)), 64);
+        // Post-migration the access is a free device hit, and the
+        // traffic it no longer sends over the link accrues as the
+        // watchdog's coherent benefit signal.
+        let out = r.gpu_access(id, full, false, last);
+        assert_eq!(out.remote_bytes, 0);
+        assert_eq!(out.done, last);
+        assert_eq!(r.coherent_avoided_remote, 4 * MIB);
+    }
+
+    #[test]
+    fn read_mostly_pins_remote_on_coherent() {
+        let mut r = grace_rt();
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, crate::um::Advise::ReadMostly, Ns::ZERO);
+        let mut last = Ns::ZERO;
+        for _ in 0..10 {
+            let out = r.gpu_access(id, full, false, last);
+            last = out.done;
+            assert_eq!(out.h2d_bytes, 0);
+        }
+        assert_eq!(r.metrics.counter_migrations, 0, "ReadMostly = pin remote, never migrate");
+        assert_eq!(r.metrics.duplicated_pages, 0, "no duplication: the fabric is already coherent");
+        assert_eq!(r.metrics.remote_access_bytes, 40 * MIB);
+    }
+
+    #[test]
+    fn pref_gpu_still_migrates_eagerly_on_coherent() {
+        let mut r = grace_rt();
+        let id = r.malloc_managed("x", 4 * MIB);
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        r.mem_advise(id, full, crate::um::Advise::PreferredLocation(crate::um::Loc::Gpu), Ns::ZERO);
+        let out = r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(out.h2d_bytes, 4 * MIB, "explicit placement overrides the counter path");
+        assert_eq!(r.metrics.counter_migrations, 0);
+        assert!(r.metrics.gpu_fault_groups > 0, "explicit migration still pays the driver");
+    }
+
+    #[test]
+    fn coherent_counters_reset_with_run_state() {
+        let mut r = grace_rt();
+        let id = r.malloc_managed("x", MIB); // 16 pages = exactly 1 group
+        let full = r.space.get(id).full();
+        r.host_access(id, full, true, Ns::ZERO);
+        for _ in 0..3 {
+            r.gpu_access(id, full, false, Ns::ZERO);
+        }
+        assert!(!r.counter_touches.is_empty());
+        r.reset_run_state();
+        assert!(r.counter_touches.is_empty());
+        assert_eq!(r.coherent_avoided_remote, 0);
+        // The same sequence replays identically after reset: three
+        // touches stay remote, the fourth crosses and migrates.
+        r.host_access(id, full, true, Ns::ZERO);
+        for _ in 0..3 {
+            r.gpu_access(id, full, false, Ns::ZERO);
+        }
+        assert_eq!(r.metrics.counter_migrations, 0);
+        r.gpu_access(id, full, false, Ns::ZERO);
+        assert_eq!(r.metrics.counter_migrations, 1);
     }
 
     #[test]

@@ -208,6 +208,24 @@ pub struct UmPolicy {
     /// to the un-instrumented behaviour (pinned by
     /// `rust/tests/chaos_determinism.rs`).
     pub inject: InjectConfig,
+    /// Hardware-coherent system memory (Grace-Hopper-class, NVLink-C2C;
+    /// `docs/PLATFORMS.md`): GPU accesses to host-resident managed pages
+    /// are serviced remotely at cache-line granularity with **no fault
+    /// groups**, and placement is driven by the per-page-group access
+    /// counter below instead of the fault path. Default false — the
+    /// three migration-based platforms never set it, which keeps them
+    /// byte-identical (pinned by `rust/tests/platform_oracle.rs`).
+    pub coherent: bool,
+    /// Pages per hardware access-counter group on the coherent
+    /// platform (counter granularity; GH counters track ~2 MiB regions,
+    /// 16 × 64 KiB pages here). Ignored unless `coherent`.
+    pub counter_group_pages: u32,
+    /// Remote-access touches a counter group accumulates before the
+    /// driver migrates the group's touched host pages to the device in
+    /// the background. 0 disables counter migration entirely ("pin
+    /// remote, never migrate" — also what `ReadMostly` maps to on the
+    /// coherent platform). Ignored unless `coherent`.
+    pub counter_threshold: u32,
 }
 
 impl Default for UmPolicy {
@@ -231,6 +249,9 @@ impl Default for UmPolicy {
             auto_predictor: PredictorKind::Learned,
             evictor: EvictorKind::Lru,
             inject: InjectConfig::default(),
+            coherent: false,
+            counter_group_pages: 16,
+            counter_threshold: 0,
         }
     }
 }
@@ -275,6 +296,9 @@ impl UmPolicy {
         if self.prefetch_chunk < 64 * KIB {
             return Err("prefetch chunk below page size".into());
         }
+        if self.coherent && self.counter_group_pages == 0 {
+            return Err("counter_group_pages must be positive on a coherent platform".into());
+        }
         Ok(())
     }
 }
@@ -311,6 +335,21 @@ mod tests {
         assert_eq!(EvictorKind::default(), EvictorKind::Lru, "lru is the pre-knob behaviour");
         assert_eq!(UmPolicy::default().evictor, EvictorKind::Lru);
         assert_eq!(EvictorKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn coherent_knobs_default_inert() {
+        // The migration-based platforms never set these; the defaults
+        // must leave the runtime byte-identical to the pre-coherent
+        // behaviour (platform_oracle.rs pins the end-to-end version).
+        let p = UmPolicy::default();
+        assert!(!p.coherent);
+        assert_eq!(p.counter_threshold, 0, "counter migration disabled by default");
+        assert!(p.counter_group_pages > 0);
+        let mut bad = UmPolicy::default();
+        bad.coherent = true;
+        bad.counter_group_pages = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

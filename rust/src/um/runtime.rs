@@ -141,6 +141,29 @@ pub struct UmRuntime {
     /// emits one `chaos.link_degrade` decision per episode edge, not
     /// one per access inside it. Pure trace bookkeeping.
     chaos_link_degraded: bool,
+    /// Per-(allocation, counter-group) remote-access touch counters on
+    /// the coherent platform — the hardware access counters that replace
+    /// the fault stream as the placement signal (`docs/PLATFORMS.md`).
+    /// Key is (alloc, group index), a group spanning
+    /// `policy.counter_group_pages` pages; a coherent-serviced run bumps
+    /// each overlapping group once. Always empty unless
+    /// `policy.coherent`; cleared by [`UmRuntime::reset_run_state`].
+    pub(super) counter_touches: crate::util::fxhash::FxHashMap<(AllocId, u32), u32>,
+    /// Per-allocation access-counter threshold overrides issued by the
+    /// `um::auto` engine on the coherent platform — its degraded form
+    /// of stream escalation (there is no fault stream to escalate and
+    /// no bulk prefetch to issue; the engine tunes *when* the hardware
+    /// migrates instead). Empty unless `UM Auto` on a coherent
+    /// platform; an inert watchdog withdraws the entries. A base
+    /// `counter_threshold` of 0 (migration disabled) is never
+    /// overridden.
+    pub(super) counter_threshold_hints: crate::util::fxhash::FxHashMap<AllocId, u32>,
+    /// Remote traffic avoided by counter placement: bytes of device-run
+    /// hits on `COUNTER_PLACED` pages since the engine's last ledger
+    /// tick. Drained by `auto_post_access` into the watchdog's benefit
+    /// column — the coherent analogue of consumed-prefetch bytes. Pure
+    /// bookkeeping; never consulted by placement policy.
+    pub(super) coherent_avoided_remote: Bytes,
 }
 
 impl UmRuntime {
@@ -172,6 +195,9 @@ impl UmRuntime {
             inject: Injector::new(policy.inject),
             failed_prefetches: std::collections::VecDeque::new(),
             chaos_link_degraded: false,
+            counter_touches: crate::util::fxhash::FxHashMap::default(),
+            counter_threshold_hints: crate::util::fxhash::FxHashMap::default(),
+            coherent_avoided_remote: 0,
         }
     }
 
@@ -395,6 +421,18 @@ impl UmRuntime {
         match class.res {
             Residency::Device => {
                 self.touch_chunks(id, run, now);
+                if self.policy.coherent {
+                    // Device hits on counter-placed pages are the
+                    // counter path's payoff: this traffic would have
+                    // crossed the C2C link remotely had the group not
+                    // migrated. Feeds the watchdog's benefit ledger.
+                    let placed = self
+                        .space
+                        .get(id)
+                        .pages
+                        .count(run, |p| p.flags.get(PageFlags::COUNTER_PLACED));
+                    self.coherent_avoided_remote += placed as u64 * PAGE_SIZE;
+                }
                 if write {
                     self.mark_dirty(id, run);
                 }
@@ -411,7 +449,15 @@ impl UmRuntime {
             }
             Residency::Unmapped => self.populate_on_device(id, run, write, now),
             Residency::Host => {
-                if class.gpu_mapped || (class.pref_host && self.plat.gpu_can_access_host) {
+                if self.policy.coherent && !class.pref_gpu {
+                    // Hardware-coherent platform: host-resident pages
+                    // are serviced remotely at line granularity — no
+                    // fault groups — while the access counters decide
+                    // migration in the background (`um/migrate.rs`).
+                    // Only an explicit `PreferredLocation(Gpu)` advise
+                    // still forces an up-front migration.
+                    self.coherent_access_host(id, run, class, write, now)
+                } else if class.gpu_mapped || (class.pref_host && self.plat.gpu_can_access_host) {
                     // Established (or establishable) remote mapping:
                     // access host memory in place, no migration.
                     self.remote_access_host(id, run, now)
@@ -607,6 +653,9 @@ impl UmRuntime {
         self.inject = Injector::new(self.policy.inject);
         self.failed_prefetches.clear();
         self.chaos_link_degraded = false;
+        self.counter_touches.clear();
+        self.counter_threshold_hints.clear();
+        self.coherent_avoided_remote = 0;
         self.dev.reset();
         self.dma_h2d.reset();
         self.dma_d2h.reset();

@@ -134,6 +134,61 @@ fn guardrail_holds_with_learned_eviction_in_memory() {
 }
 
 #[test]
+fn auto_guardrail_holds_on_the_coherent_platform() {
+    // On Grace-Coherent the engine degrades to threshold hints only
+    // (no prefetch, no advises — docs/PLATFORMS.md); that residual
+    // actuation must never cost more than the usual bound over plain
+    // UM, in memory or oversubscribed.
+    let plat = PlatformId::GraceCoherent.spec();
+    for app in AppId::ALL {
+        assert_within(app, &plat, 64 * MIB, 1.10);
+    }
+    let mut plat = PlatformId::GraceCoherent.spec();
+    plat.gpu.mem_capacity = 128 * MIB;
+    plat.gpu.reserved = 0;
+    let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+    for app in AppId::ALL {
+        if !app.in_paper_matrix(PlatformId::GraceCoherent, Regime::Oversubscribed) {
+            continue;
+        }
+        assert_within(app, &plat, footprint, 1.10);
+    }
+}
+
+#[test]
+fn watchdog_never_trips_on_healthy_coherent_runs() {
+    // With no fault injection there is no harm signal, and the benefit
+    // ledger (remote bytes the counter migrations avoided) keeps the
+    // circuit breaker closed — a trip here would mean the coherent
+    // degradation starves the watchdog of benefit and it strangles a
+    // healthy engine.
+    for regime in Regime::ALL {
+        let mut plat = PlatformId::GraceCoherent.spec();
+        let footprint = match regime {
+            Regime::InMemory => 64 * MIB,
+            Regime::Oversubscribed => {
+                plat.gpu.mem_capacity = 128 * MIB;
+                plat.gpu.reserved = 0;
+                (plat.gpu.usable() as f64 * 1.5) as u64
+            }
+        };
+        for app in AppId::ALL {
+            if !app.in_paper_matrix(PlatformId::GraceCoherent, regime) {
+                continue;
+            }
+            let r = app.build(footprint).run(&plat, Variant::UmAuto, false);
+            assert_eq!(
+                r.metrics.wd_trips,
+                0,
+                "{} {} on Grace-Coherent: breaker tripped on a healthy run",
+                app.name(),
+                regime.name(),
+            );
+        }
+    }
+}
+
+#[test]
 fn learned_predictor_decision_quality_reported() {
     // The learned mode's accuracy/coverage counters feed the suite
     // JSON trajectory; make sure real apps populate them and that

@@ -3,7 +3,9 @@
 //!
 //! * **Determinism under injection** — the same `(scenario, seed)`
 //!   produces byte-identical runs (every `Ns` output and the full
-//!   `UmMetrics`) for all six variants on both headline platforms.
+//!   `UmMetrics`) for all six variants on both headline platforms and
+//!   the coherent Grace-class platform (including chaos aimed at the
+//!   C2C link the coherent regime leans on).
 //! * **Disabled oracle** — with `ChaosScenario::Off` the injection seed
 //!   is inert: runs are byte-identical across seeds, consume no chaos
 //!   budget, and a healthy run never trips the watchdog.
@@ -39,7 +41,9 @@ const ALL_SCENARIOS: [ChaosScenario; 6] = [
 
 #[test]
 fn same_seed_same_run_all_variants_both_platforms() {
-    for plat_id in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+    for plat_id in
+        [PlatformId::IntelPascal, PlatformId::P9Volta, PlatformId::GraceCoherent]
+    {
         for scenario in ALL_SCENARIOS {
             let plat = chaotic(plat_id, scenario);
             for variant in Variant::ALL_WITH_AUTO {
@@ -106,6 +110,41 @@ fn watchdog_never_trips_on_a_healthy_run() {
             assert_eq!(r.metrics.wd_degraded_windows, 0, "{label}: never degraded");
             assert_eq!(r.metrics.wd_retries, 0, "{label}: nothing to retry");
         }
+    }
+}
+
+#[test]
+fn coherent_link_chaos_replays_byte_identically() {
+    // LinkDegrade and Storm hit the C2C fabric that services *every*
+    // host-resident access on Grace-Coherent — the regime where link
+    // chaos has the widest blast radius. Same seed, same bytes; and
+    // the coherent accounting keeps flowing under degradation.
+    for scenario in [ChaosScenario::LinkDegrade, ChaosScenario::Storm] {
+        let plat = chaotic(PlatformId::GraceCoherent, scenario);
+        for variant in [Variant::Um, Variant::UmAuto] {
+            let a = AppId::Bs.build(32 * MIB).run(&plat, variant, false);
+            let b = AppId::Bs.build(32 * MIB).run(&plat, variant, false);
+            let label = format!("grace-coherent/{}/{}", variant.name(), scenario.name());
+            assert_eq!(a.kernel_time, b.kernel_time, "{label}: kernel time");
+            assert_eq!(a.kernel_times, b.kernel_times, "{label}: launches");
+            assert_eq!(a.metrics, b.metrics, "{label}: UmMetrics");
+            assert!(
+                a.metrics.remote_access_bytes > 0,
+                "{label}: remote servicing continues under link chaos"
+            );
+        }
+    }
+    // Oversubscribed under Storm: counter migrations, evictions and
+    // chaos interleave — still byte-identical.
+    let mut plat = chaotic(PlatformId::GraceCoherent, ChaosScenario::Storm);
+    plat.gpu.mem_capacity = 128 * MIB;
+    plat.gpu.reserved = 0;
+    let footprint = (plat.gpu.usable() as f64 * 1.5) as u64;
+    for variant in [Variant::Um, Variant::UmAuto] {
+        let a = AppId::Bs.build(footprint).run(&plat, variant, false);
+        let b = AppId::Bs.build(footprint).run(&plat, variant, false);
+        assert_eq!(a.kernel_time, b.kernel_time, "{}: kernel time", variant.name());
+        assert_eq!(a.metrics, b.metrics, "{}: UmMetrics", variant.name());
     }
 }
 

@@ -138,6 +138,7 @@ fn required_documents_exist_and_are_linked() {
     let root = repo_root();
     for doc in [
         "docs/ARCHITECTURE.md",
+        "docs/PLATFORMS.md",
         "docs/PREDICTOR.md",
         "docs/EVICTION.md",
         "docs/ROBUSTNESS.md",
@@ -150,14 +151,15 @@ fn required_documents_exist_and_are_linked() {
     let readme = fs::read_to_string(root.join("README.md")).unwrap();
     assert!(
         readme.contains("docs/ARCHITECTURE.md")
+            && readme.contains("docs/PLATFORMS.md")
             && readme.contains("docs/PREDICTOR.md")
             && readme.contains("docs/EVICTION.md")
             && readme.contains("docs/ROBUSTNESS.md")
             && readme.contains("docs/OBSERVABILITY.md")
             && readme.contains("docs/REPLAY.md")
             && readme.contains("docs/ANALYSIS.md"),
-        "README must link the architecture, predictor, eviction, robustness, observability, \
-         replay and analysis docs"
+        "README must link the architecture, platforms, predictor, eviction, robustness, \
+         observability, replay and analysis docs"
     );
     // The eviction doc's headline sections are link targets from the
     // README and ARCHITECTURE: pin their anchors.
@@ -214,6 +216,23 @@ fn required_documents_exist_and_are_linked() {
         assert!(
             anchors(&replay).iter().any(|a| a == anchor || a.starts_with(anchor)),
             "docs/REPLAY.md lost the '{anchor}' section"
+        );
+    }
+    // And the platforms doc: the regime taxonomy, the counter model,
+    // the engine-degradation map and the scope/fidelity sections are
+    // linked from the README, ARCHITECTURE and the platform/um rustdoc.
+    let platforms = fs::read_to_string(root.join("docs/PLATFORMS.md")).unwrap();
+    let required = [
+        "the-three-migration-regimes",
+        "the-access-counter-model",
+        "engine-degradation-on-the-coherent-platform",
+        "what-is-and-isnt-reproduced",
+        "the-differential-test-layer",
+    ];
+    for anchor in required {
+        assert!(
+            anchors(&platforms).iter().any(|a| a == anchor || a.starts_with(anchor)),
+            "docs/PLATFORMS.md lost the '{anchor}' section"
         );
     }
     // And the analysis doc: the lattice, happens-before, diagnostic

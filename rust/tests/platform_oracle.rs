@@ -1,0 +1,179 @@
+//! The cross-platform differential oracle.
+//!
+//! Two contracts pin the coherent Grace-class platform model
+//! (docs/PLATFORMS.md) against the original paper platforms:
+//!
+//! 1. **The paper platforms are frozen.** Every coherent-only knob
+//!    (`UmPolicy::coherent`, `counter_group_pages`,
+//!    `counter_threshold`) must be inert on the three fault-driven
+//!    specs — mutating them cannot move a single metric or nanosecond,
+//!    and no paper-platform run may report coherent traffic.
+//! 2. **The coherent platform honours its no-fault regime.** Plain UM
+//!    runs service host-resident GPU accesses remotely (zero fault
+//!    groups, non-zero remote bytes) and migrate data only through the
+//!    access-counter path, whose volume is monotone in the threshold
+//!    knob.
+
+use umbra::apps::{AppId, Regime, Variant};
+use umbra::platform::{PlatformId, PlatformSpec};
+use umbra::util::units::MIB;
+
+/// Small representative app set: a sequential streamer, an iterative
+/// solver, and the random-access graph search — the three access
+/// shapes the paper's matrix distinguishes.
+const APPS: [AppId; 3] = [AppId::Bs, AppId::Cg, AppId::Graph500];
+
+/// Shrink device memory so ~150% oversubscription is cheap to
+/// simulate (same trick as the oversubscription integration tests).
+fn oversubscribe(plat: &mut PlatformSpec) -> u64 {
+    plat.gpu.mem_capacity = 128 * MIB;
+    plat.gpu.reserved = 0;
+    (plat.gpu.usable() as f64 * 1.5) as u64
+}
+
+/// Footprint for `regime`, shrinking the spec in place when
+/// oversubscribing.
+fn footprint_for(plat: &mut PlatformSpec, regime: Regime) -> u64 {
+    match regime {
+        Regime::InMemory => 64 * MIB,
+        Regime::Oversubscribed => oversubscribe(plat),
+    }
+}
+
+#[test]
+fn coherent_knobs_are_inert_on_the_paper_platforms() {
+    // The differential guard: flipping the counter knobs to aggressive
+    // values must leave every paper-platform cell — all six variants,
+    // both regimes — byte-identical, because nothing outside
+    // `policy.coherent` may consult them.
+    for plat_id in PlatformId::PAPER {
+        for regime in Regime::ALL {
+            for app in APPS {
+                if !app.in_paper_matrix(plat_id, regime) {
+                    continue;
+                }
+                let mut base = plat_id.spec();
+                let footprint = footprint_for(&mut base, regime);
+                let mut tuned = base;
+                tuned.um.counter_group_pages = 4;
+                tuned.um.counter_threshold = 1;
+                for variant in Variant::ALL_WITH_AUTO {
+                    let a = app.build(footprint).run(&base, variant, false);
+                    let b = app.build(footprint).run(&tuned, variant, false);
+                    let label = format!(
+                        "{}/{}/{}/{}",
+                        plat_id.name(),
+                        regime.name(),
+                        app.name(),
+                        variant.name()
+                    );
+                    assert_eq!(a.metrics, b.metrics, "{label}: counter knobs moved metrics");
+                    assert_eq!(
+                        a.kernel_times, b.kernel_times,
+                        "{label}: counter knobs moved kernel timings"
+                    );
+                    assert_eq!(
+                        a.metrics.remote_access_bytes, 0,
+                        "{label}: remote C2C traffic on a fault-driven platform"
+                    );
+                    assert_eq!(a.metrics.counter_migrations, 0, "{label}: counter migration");
+                    assert_eq!(
+                        a.metrics.counter_threshold_crossings, 0,
+                        "{label}: threshold crossing"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn coherent_cells_are_deterministic_across_variants_and_regimes() {
+    // Same-seed byte-identity on the new platform, every variant, both
+    // regimes — the property the paper-platform suite has always had.
+    for regime in Regime::ALL {
+        let mut plat = PlatformId::GraceCoherent.spec();
+        let footprint = footprint_for(&mut plat, regime);
+        for variant in Variant::ALL_WITH_AUTO {
+            let a = AppId::Bs.build(footprint).run(&plat, variant, false);
+            let b = AppId::Bs.build(footprint).run(&plat, variant, false);
+            let label = format!("{}/{}", regime.name(), variant.name());
+            assert_eq!(a.metrics, b.metrics, "{label}: metrics drift");
+            assert_eq!(a.kernel_times, b.kernel_times, "{label}: timing drift");
+        }
+    }
+}
+
+#[test]
+fn coherent_um_runs_take_zero_fault_groups() {
+    // The defining property of the coherent regime: host-resident data
+    // is serviced remotely at line granularity, so plain UM (no advise
+    // can re-route it onto the fault path) never replays the far-fault
+    // machinery — in memory or oversubscribed, hand-tuned or with the
+    // auto engine in the loop.
+    for regime in Regime::ALL {
+        let mut plat = PlatformId::GraceCoherent.spec();
+        let footprint = footprint_for(&mut plat, regime);
+        for app in APPS {
+            for variant in [Variant::Um, Variant::UmAuto] {
+                let r = app.build(footprint).run(&plat, variant, false);
+                let label = format!("{}/{}/{}", regime.name(), app.name(), variant.name());
+                assert_eq!(r.metrics.gpu_fault_groups, 0, "{label}: fault groups");
+                assert!(
+                    r.metrics.remote_access_bytes > 0,
+                    "{label}: UM kernels must touch host-resident data remotely"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn counter_migrations_monotone_in_the_threshold_knob() {
+    // Raising the access-counter threshold can only delay or suppress
+    // migrations, never create new ones: a group that accumulates T
+    // touches has necessarily accumulated T' < T first. The migrated
+    // volume must therefore be non-increasing in the knob, with the
+    // sentinel 0 disabling the path outright.
+    let mut migrations = Vec::new();
+    for threshold in [1u32, 2, 4, 8, 16] {
+        let mut plat = PlatformId::GraceCoherent.spec();
+        plat.um.counter_threshold = threshold;
+        let r = AppId::Bs.build(64 * MIB).run(&plat, Variant::Um, false);
+        assert_eq!(r.metrics.gpu_fault_groups, 0, "t={threshold}: fault groups");
+        migrations.push((threshold, r.metrics.counter_migrations));
+    }
+    assert!(
+        migrations[0].1 > 0,
+        "threshold 1 must migrate something on a streaming app: {migrations:?}"
+    );
+    for w in migrations.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1,
+            "migrations must be non-increasing in the threshold: {migrations:?}"
+        );
+    }
+    let mut plat = PlatformId::GraceCoherent.spec();
+    plat.um.counter_threshold = 0;
+    let r = AppId::Bs.build(64 * MIB).run(&plat, Variant::Um, false);
+    assert_eq!(r.metrics.counter_migrations, 0, "threshold 0 disables counter migration");
+    assert_eq!(r.metrics.counter_threshold_crossings, 0, "no crossings when disabled");
+    assert!(r.metrics.remote_access_bytes > 0, "everything stays remote when disabled");
+}
+
+#[test]
+fn coherent_platform_is_a_spec_platform_but_not_a_paper_platform() {
+    // The matrix bookkeeping the differential layer leans on.
+    assert_eq!(PlatformId::ALL.len(), 4);
+    assert_eq!(PlatformId::PAPER.len(), 3);
+    assert!(!PlatformId::PAPER.contains(&PlatformId::GraceCoherent));
+    assert!(PlatformId::GraceCoherent.is_coherent());
+    for plat_id in PlatformId::PAPER {
+        assert!(!plat_id.is_coherent(), "{} is fault-driven", plat_id.name());
+        assert!(!plat_id.spec().um.coherent);
+    }
+    let grace = PlatformId::GraceCoherent.spec();
+    assert!(grace.um.coherent);
+    assert!(grace.um.counter_threshold > 0, "counter migration enabled out of the box");
+    assert!(grace.um.counter_group_pages > 0);
+}

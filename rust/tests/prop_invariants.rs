@@ -45,7 +45,15 @@ fn advise_of(code: u8) -> Advise {
 /// Build a runtime with a shrunken device so oversubscription paths
 /// fire often, plus 1-3 allocations of random sizes.
 fn random_runtime(g: &mut Gen) -> (UmRuntime, Vec<AllocId>) {
-    let plat_id = g.pick(&[PlatformId::IntelPascal, PlatformId::IntelVolta, PlatformId::P9Volta]);
+    // All four spec platforms: the generic invariants must hold in the
+    // coherent (counter-migration) regime exactly as in the
+    // fault-driven one.
+    let plat_id = g.pick(&[
+        PlatformId::IntelPascal,
+        PlatformId::IntelVolta,
+        PlatformId::P9Volta,
+        PlatformId::GraceCoherent,
+    ]);
     let mut plat = plat_id.spec();
     plat.gpu.mem_capacity = g.u64(32, 128) * MIB;
     plat.gpu.reserved = 0;
@@ -324,6 +332,192 @@ fn interval_table_matches_flat_reference_model() {
             it.segment_count() <= n as usize,
             "more segments than pages: {} > {n}",
             it.segment_count()
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Differential test: coherent access counters vs. a naive per-group
+// reference model (docs/PLATFORMS.md).
+// ---------------------------------------------------------------------
+
+/// Naive reference for the Grace-class access-counter machinery: flat
+/// per-page residency plus one touch counter per page group. Mirrors
+/// the documented contract — one touch per overlapping group per
+/// serviced host-resident run; a crossing the instant a counter equals
+/// the threshold; migration of run ∩ group while at-or-above it.
+struct CounterRef {
+    gp: u32,
+    threshold: u32,
+    on_device: Vec<bool>,
+    touches: Vec<u32>,
+    crossings: u64,
+    migrations: u64,
+    migrated_pages: u64,
+    remote_bytes: u64,
+    touched: Vec<bool>,
+}
+
+impl CounterRef {
+    fn new(n_pages: u32, gp: u32, threshold: u32) -> CounterRef {
+        let n_groups = n_pages.div_ceil(gp);
+        CounterRef {
+            gp,
+            threshold,
+            on_device: vec![false; n_pages as usize],
+            touches: vec![0; n_groups as usize],
+            crossings: 0,
+            migrations: 0,
+            migrated_pages: 0,
+            remote_bytes: 0,
+            touched: vec![false; n_pages as usize],
+        }
+    }
+
+    /// One GPU access over `range`: split into maximal host-resident
+    /// runs, service each remotely, bump counters, migrate hot extents.
+    fn gpu_access(&mut self, range: PageRange) {
+        for p in range.start..range.end {
+            self.touched[p as usize] = true;
+        }
+        let mut pos = range.start;
+        while pos < range.end {
+            if self.on_device[pos as usize] {
+                pos += 1;
+                continue;
+            }
+            let mut end = pos;
+            while end < range.end && !self.on_device[end as usize] {
+                end += 1;
+            }
+            self.remote_bytes += PageRange::new(pos, end).bytes();
+            for gi in pos / self.gp..=(end - 1) / self.gp {
+                let t = &mut self.touches[gi as usize];
+                *t += 1;
+                if *t == self.threshold {
+                    self.crossings += 1;
+                }
+                if *t >= self.threshold {
+                    let s = pos.max(gi * self.gp);
+                    let e = end.min((gi + 1) * self.gp);
+                    self.migrations += 1;
+                    self.migrated_pages += u64::from(e - s);
+                    for p in s..e {
+                        self.on_device[p as usize] = true;
+                    }
+                }
+            }
+            pos = end;
+        }
+    }
+
+    fn touched_bytes(&self) -> u64 {
+        self.touched.iter().filter(|&&t| t).count() as u64 * PAGE_SIZE
+    }
+}
+
+/// A small in-capacity Grace runtime (no eviction pressure — the
+/// reference model deliberately excludes it) with one host-initialized
+/// managed allocation and randomized counter knobs.
+fn grace_runtime(g: &mut Gen) -> (UmRuntime, AllocId, u32, u32) {
+    let mut plat = PlatformId::GraceCoherent.spec();
+    let gp = g.u64(1, 32) as u32;
+    let threshold = g.u64(1, 6) as u32;
+    plat.um.counter_group_pages = gp;
+    plat.um.counter_threshold = threshold;
+    let mut r = UmRuntime::new(&plat);
+    let id = r.malloc_managed("a", g.u64(1, 24) * MIB);
+    let full = r.space.get(id).full();
+    let _ = r.host_access(id, full, true, Ns::ZERO);
+    (r, id, gp, threshold)
+}
+
+#[test]
+fn coherent_counters_match_naive_reference() {
+    forall("coherent-counter-reference", 200, |g| {
+        let (mut r, id, gp, threshold) = grace_runtime(g);
+        let n = r.space.get(id).n_pages();
+        let mut reference = CounterRef::new(n, gp, threshold);
+        let mut now = Ns::ZERO;
+        for _ in 0..g.usize(3, 40) {
+            let range = random_range(g, &r, id);
+            let write = g.bool();
+            now = r.gpu_access(id, range, write, now).done.max(now);
+            reference.gpu_access(range);
+        }
+        let m = &r.metrics;
+        quick_assert!(m.gpu_fault_groups == 0, "coherent run took a fault group");
+        quick_assert!(
+            m.counter_threshold_crossings == reference.crossings,
+            "crossings diverged: runtime {} vs reference {}",
+            m.counter_threshold_crossings,
+            reference.crossings
+        );
+        quick_assert!(
+            m.counter_migrations == reference.migrations,
+            "migrations diverged: runtime {} vs reference {}",
+            m.counter_migrations,
+            reference.migrations
+        );
+        quick_assert!(
+            m.migrated_pages_h2d == reference.migrated_pages,
+            "migrated pages diverged: runtime {} vs reference {}",
+            m.migrated_pages_h2d,
+            reference.migrated_pages
+        );
+        quick_assert!(
+            m.remote_access_bytes == reference.remote_bytes,
+            "remote bytes diverged: runtime {} vs reference {}",
+            m.remote_access_bytes,
+            reference.remote_bytes
+        );
+        // Migrated volume never exceeds what the GPU actually touched
+        // (the counter path moves run ∩ group, never whole groups).
+        quick_assert!(
+            m.migrated_pages_h2d * PAGE_SIZE <= reference.touched_bytes(),
+            "migrated {} B beyond the touched extent {} B",
+            m.migrated_pages_h2d * PAGE_SIZE,
+            reference.touched_bytes()
+        );
+        // Byte conservation holds in the counter-migration regime too.
+        quick_assert!(
+            m.h2d_bytes == (m.migrated_pages_h2d + m.prefetched_pages_h2d) * PAGE_SIZE,
+            "h2d byte conservation broke"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn coherent_counter_state_resets_exactly() {
+    // `reset_run_state` must clear the access counters to the same
+    // zero state a fresh runtime has: replaying the identical access
+    // sequence after a reset reproduces the identical metrics —
+    // residual touches would migrate earlier and shift every counter.
+    forall("coherent-counter-reset", 60, |g| {
+        let (mut r, id, _, _) = grace_runtime(g);
+        let ranges: Vec<PageRange> =
+            (0..g.usize(3, 25)).map(|_| random_range(g, &r, id)).collect();
+        let run = |r: &mut UmRuntime| {
+            let full = r.space.get(id).full();
+            let mut now = r.host_access(id, full, true, Ns::ZERO).done;
+            for &range in &ranges {
+                now = r.gpu_access(id, range, false, now).done.max(now);
+            }
+            r.metrics
+        };
+        r.reset_run_state(); // discard the init from grace_runtime()
+        let first = run(&mut r);
+        r.reset_run_state();
+        let second = run(&mut r);
+        quick_assert!(
+            first == second,
+            "metrics diverged across reset_run_state: {first:?} vs {second:?}"
+        );
+        quick_assert!(
+            first.counter_migrations > 0 || first.counter_threshold_crossings == 0,
+            "a crossing without a migration is impossible"
         );
         Ok(())
     });

@@ -1,8 +1,10 @@
 //! The committed-corpus decision-quality regression suite.
 //!
 //! Every trace under `corpora/` is decoded (with the canonical
-//! round-trip verified), structurally validated, and replayed on both
-//! paper platforms in both predictor modes. Numeric expectations live
+//! round-trip verified), structurally validated, and replayed on all
+//! three spec platforms — both fault-driven paper machines plus the
+//! coherent Grace-class system — in both predictor modes. Numeric
+//! expectations live
 //! in `corpora/expectations.json` (refreshed from `umbra replay
 //! corpora --out`, see docs/REPLAY.md); the perturbation tests pin the
 //! suite's sensitivity — deliberately breaking a policy constant such
@@ -79,7 +81,9 @@ fn corpus_covers_the_regime_classes() {
 #[test]
 fn every_trace_replays_on_both_platforms_and_predictors() {
     for (stem, prog) in corpus() {
-        for platform in [PlatformId::IntelPascal, PlatformId::P9Volta] {
+        for platform in
+            [PlatformId::IntelPascal, PlatformId::P9Volta, PlatformId::GraceCoherent]
+        {
             for predictor in [PredictorKind::Heuristic, PredictorKind::Learned] {
                 let cfg = config(&prog, platform, predictor);
                 let r = replay(&prog, &cfg, &RunOpts::default());
@@ -99,11 +103,35 @@ fn every_trace_replays_on_both_platforms_and_predictors() {
 #[test]
 fn corpus_replay_is_deterministic() {
     for (stem, prog) in corpus() {
-        let cfg = config(&prog, PlatformId::IntelPascal, PredictorKind::Learned);
-        let a = replay(&prog, &cfg, &RunOpts::default());
-        let b = replay(&prog, &cfg, &RunOpts::default());
-        assert_eq!(a.metrics, b.metrics, "{stem}: metrics drift across replays");
-        assert_eq!(a.kernel_times, b.kernel_times, "{stem}: timings drift across replays");
+        for platform in [PlatformId::IntelPascal, PlatformId::GraceCoherent] {
+            let cfg = config(&prog, platform, PredictorKind::Learned);
+            let a = replay(&prog, &cfg, &RunOpts::default());
+            let b = replay(&prog, &cfg, &RunOpts::default());
+            let label = format!("{stem}/{}", platform.name());
+            assert_eq!(a.metrics, b.metrics, "{label}: metrics drift across replays");
+            assert_eq!(a.kernel_times, b.kernel_times, "{label}: timings drift across replays");
+        }
+    }
+}
+
+/// The coherent platform's no-fault contract holds for every corpus
+/// trace: whatever the workload shape, a Grace-Coherent replay services
+/// host-resident GPU accesses remotely (no fault groups from them) and
+/// any data that reaches the device got there by access-counter
+/// migration or explicit prefetch — never by a page-fault group.
+#[test]
+fn corpus_replays_faultlessly_on_the_coherent_platform() {
+    for (stem, prog) in corpus() {
+        let cfg = config(&prog, PlatformId::GraceCoherent, PredictorKind::Learned);
+        let r = replay(&prog, &cfg, &RunOpts::default());
+        assert_eq!(
+            r.metrics.gpu_fault_groups, 0,
+            "{stem}: fault groups on the coherent platform"
+        );
+        assert!(
+            r.metrics.remote_access_bytes > 0,
+            "{stem}: a replayed workload must touch host-resident data remotely"
+        );
     }
 }
 

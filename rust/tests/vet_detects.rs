@@ -21,10 +21,12 @@ use std::path::{Path, PathBuf};
 use umbra::analysis::{self, vet};
 use umbra::gpu::AccessKind;
 use umbra::mem::{AllocId, PageRange};
+use umbra::platform::PlatformId;
 use umbra::sim::{synth, SynthParams, SynthPattern};
 use umbra::trace::replay::{ReplayAccess, ReplayOp, ReplayProgram};
 use umbra::trace::UmtTrace;
 use umbra::um::{Advise, Loc};
+use umbra::util::units::GIB;
 
 fn corpora_dir() -> PathBuf {
     // CARGO_MANIFEST_DIR is <repo>/rust.
@@ -143,6 +145,42 @@ fn oversized_gpu_prefetch_is_vet_alloc_overcommit() {
     let mut p = corpus("cyclic_oversub");
     p.ops.insert(2, ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu });
     assert_exactly(&p, analysis::ALLOC_OVERCOMMIT);
+}
+
+#[test]
+fn coherent_platform_rewrites_the_overcommit_advice() {
+    // The overcommit verdict is platform-aware: on the fault-driven
+    // machines the advice is about eviction thrash, on the coherent
+    // Grace-class platform it tells the author to drop the prefetch and
+    // let the access counters place the hot subset (docs/PLATFORMS.md).
+    // Mutating the program's platform byte must flip the wording.
+    let overcommit_msg = |p: &ReplayProgram| {
+        vet(p)
+            .diagnostics
+            .into_iter()
+            .find(|d| d.code == analysis::ALLOC_OVERCOMMIT)
+            .expect("overcommit diagnostic present")
+            .message
+    };
+    let mut p = corpus("cyclic_oversub");
+    p.ops.insert(2, ReplayOp::PrefetchBackground { alloc: AllocId(0), dst: Loc::Gpu });
+    // Grace's device is larger than the paper GPUs', so grow the
+    // allocation until it overcommits both platforms alike.
+    let ReplayOp::MallocManaged { size, .. } = &mut p.ops[0] else { panic!("op0 is the malloc") };
+    *size = 24 * GIB;
+    assert_exactly(&p, analysis::ALLOC_OVERCOMMIT);
+    let fault_driven = overcommit_msg(&p);
+    p.platform = PlatformId::GraceCoherent;
+    assert_exactly(&p, analysis::ALLOC_OVERCOMMIT);
+    let coherent = overcommit_msg(&p);
+    assert!(
+        coherent.contains("access counters") && coherent.contains("coherent"),
+        "coherent advice names the counter path: {coherent}"
+    );
+    assert!(
+        fault_driven.contains("thrash eviction") && !fault_driven.contains("access counters"),
+        "fault-driven advice unchanged: {fault_driven}"
+    );
 }
 
 #[test]

@@ -1,20 +1,30 @@
 #!/usr/bin/env python3
-"""Refresh corpora/expectations.json from a measured replay.json.
+"""Refresh a committed expectation file from a measured CI artifact.
 
 Usage:
     python3 tools/refresh_expectations.py path/to/replay.json
+    python3 tools/refresh_expectations.py --suite path/to/suite.json
 
-The input is the document `umbra replay corpora --out DIR` writes to
-DIR/json/replay.json — locally, or downloaded from the CI
-`replay-regression` job's `replay-regression-metrics` artifact (see
-docs/REPLAY.md "Adding a corpus trace" and the README refresh note).
+Default mode refreshes corpora/expectations.json from the document
+`umbra replay corpora --out DIR` writes to DIR/json/replay.json —
+locally, or downloaded from the CI `replay-regression` job's
+`replay-regression-metrics` artifact (see docs/REPLAY.md "Adding a
+corpus trace" and the README refresh note).
 
-The script never invents numbers: it copies the measured `traces` rows
-verbatim, merging by (trace, platform, predictor, evictor) key so a
-partial artifact (e.g. a single new corpus file replayed locally)
-updates only its own rows and leaves the rest pinned. The committed
-file's `_note` and `tolerance` are preserved; rows are re-sorted by
-key so refreshes diff minimally. Stdlib only — no pip.
+`--suite` refreshes baselines/suite_baseline.json from the document
+`umbra suite --with-auto --out DIR` writes to DIR/json/suite.json —
+i.e. the CI `decision-quality` job's `suite-decision-quality`
+artifact. This replaces the hand-download-and-commit-over dance the
+bootstrap baseline's `_note` used to prescribe.
+
+The script never invents numbers: it copies the measured rows
+verbatim, merging by key — (trace, platform, predictor, evictor) for
+replay rows, (platform, regime, app, variant) for suite cells — so a
+partial artifact (e.g. a single new corpus file replayed locally, or
+a one-platform suite run) updates only its own rows and leaves the
+rest pinned. The committed file's `_note` is preserved (as is
+`tolerance` in replay mode); rows are re-sorted by key so refreshes
+diff minimally. Stdlib only — no pip.
 """
 
 import json
@@ -23,9 +33,10 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 EXPECTATIONS = REPO / "corpora" / "expectations.json"
+SUITE_BASELINE = REPO / "baselines" / "suite_baseline.json"
 
 
-def key(row):
+def replay_key(row):
     return (
         row.get("trace", ""),
         row.get("platform", ""),
@@ -34,11 +45,25 @@ def key(row):
     )
 
 
-def main(argv):
-    if len(argv) != 2 or argv[1] in ("-h", "--help"):
-        sys.exit(__doc__.strip())
+def suite_key(cell):
+    return (
+        cell.get("platform", ""),
+        cell.get("regime", ""),
+        cell.get("app", ""),
+        cell.get("variant", ""),
+    )
 
-    measured_path = Path(argv[1])
+
+def merge(committed, rows, list_field, key):
+    """Merge measured `rows` over `committed[list_field]`, in place."""
+    merged = {key(r): r for r in committed.get(list_field, [])}
+    replaced = sum(1 for r in rows if key(r) in merged)
+    merged.update({key(r): r for r in rows})
+    committed[list_field] = [merged[k] for k in sorted(merged)]
+    return replaced
+
+
+def refresh_replay(measured_path):
     measured = json.loads(measured_path.read_text())
     rows = measured.get("traces")
     if not isinstance(rows, list) or not rows:
@@ -51,15 +76,50 @@ def main(argv):
                          "not a replay.json expectation document")
 
     committed = json.loads(EXPECTATIONS.read_text())
-    merged = {key(r): r for r in committed.get("traces", [])}
-    replaced = sum(1 for r in rows if key(r) in merged)
-    merged.update({key(r): r for r in rows})
-
-    committed["traces"] = [merged[k] for k in sorted(merged)]
+    replaced = merge(committed, rows, "traces", replay_key)
     EXPECTATIONS.write_text(json.dumps(committed, indent=2) + "\n")
     print(f"{EXPECTATIONS.relative_to(REPO)}: {len(committed['traces'])} "
           f"row(s) ({replaced} updated, {len(rows) - replaced} new) "
           f"from {measured_path}")
+
+
+def refresh_suite(measured_path):
+    measured = json.loads(measured_path.read_text())
+    cells = measured.get("cells")
+    if not isinstance(cells, list) or not cells:
+        sys.exit(f"{measured_path}: no measured 'cells' — refusing to erase "
+                 "the committed baseline with an empty document")
+    for cell in cells:
+        for field in ("platform", "regime", "app", "variant", "kernel_ns"):
+            if field not in cell:
+                sys.exit(f"{measured_path}: cell missing '{field}' — not a "
+                         "suite.json decision-quality document")
+
+    committed = json.loads(SUITE_BASELINE.read_text())
+    # Run-shape header fields travel with the measurement: a baseline
+    # is only comparable against runs of the same shape.
+    for field in ("predictor", "evictor", "reps", "streams"):
+        if field in measured:
+            committed[field] = measured[field]
+    replaced = merge(committed, cells, "cells", suite_key)
+    SUITE_BASELINE.write_text(json.dumps(committed, indent=2) + "\n")
+    print(f"{SUITE_BASELINE.relative_to(REPO)}: {len(committed['cells'])} "
+          f"cell(s) ({replaced} updated, {len(cells) - replaced} new) "
+          f"from {measured_path}")
+
+
+def main(argv):
+    args = [a for a in argv[1:] if a not in ("-h", "--help")]
+    if len(args) != len(argv) - 1 or not args:
+        sys.exit(__doc__.strip())
+    if args[0] == "--suite":
+        if len(args) != 2:
+            sys.exit(__doc__.strip())
+        refresh_suite(Path(args[1]))
+    elif len(args) == 1:
+        refresh_replay(Path(args[0]))
+    else:
+        sys.exit(__doc__.strip())
 
 
 if __name__ == "__main__":
